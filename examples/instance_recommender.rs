@@ -1,0 +1,97 @@
+//! Instance recommender: the paper's motivating use case (Sec II / Fig 2).
+//!
+//! A CNN developer has a workload and an anchor instance. PROFET predicts
+//! the mini-batch latency on every available GPU instance; combined with
+//! on-demand pricing this yields a latency/cost Pareto recommendation —
+//! without ever running the workload anywhere but the anchor.
+//!
+//! Run: `cargo run --release --example instance_recommender [Model] [batch] [pixels]`
+
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::models::ModelId;
+use repro::predictor::{Profet, TrainOptions};
+use repro::sim::{self, Workload};
+
+fn main() -> repro::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .first()
+        .and_then(|s| ModelId::from_name(s))
+        .unwrap_or(ModelId::MobileNetV2);
+    let batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let pixels: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    let rt = repro::runtime::load_default()?;
+    println!("training PROFET across all six instances ...");
+    let corpus = Corpus::generate(&Instance::ALL);
+    let (train_idx, _) = corpus.split_random(0.2, 2);
+    let opts = TrainOptions {
+        anchors: vec![Instance::G4dn],
+        targets: Instance::ALL.to_vec(),
+        n_trees: 40,
+        dnn_epochs: 25,
+        ..Default::default()
+    };
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
+
+    let anchor = Instance::G4dn;
+    let w = Workload::new(model, batch, pixels);
+    let run = sim::run_workload(&w, anchor).expect("workload must run on the anchor");
+    println!(
+        "\nworkload {} profiled on {} ({:.1} ms/batch)\n",
+        w.key(),
+        anchor,
+        run.latency_ms
+    );
+    println!(
+        "{:6} {:>12} {:>12} {:>14} {:>10}",
+        "inst", "pred ms", "truth ms", "$ / 10k batches", "verdict"
+    );
+
+    let mut rows = Vec::new();
+    for target in Instance::ALL {
+        let pred_ms = if target == anchor {
+            run.latency_ms
+        } else {
+            profet
+                .predict_cross(&rt, anchor, target, &run.profile.aggregated(), run.latency_ms)?
+                .0
+        };
+        let truth = sim::run_workload(&w, target).map(|r| r.latency_ms);
+        let cost = pred_ms / 3.6e6 * target.spec().price_hr * 10_000.0;
+        rows.push((target, pred_ms, truth, cost));
+    }
+    let fastest = rows
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    let cheapest = rows
+        .iter()
+        .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+        .unwrap()
+        .0;
+    for (inst, pred, truth, cost) in &rows {
+        let verdict = match (inst == &fastest, inst == &cheapest) {
+            (true, true) => "fast+cheap",
+            (true, false) => "fastest",
+            (false, true) => "cheapest",
+            _ => "",
+        };
+        println!(
+            "{:6} {:>12.1} {:>12} {:>14.3} {:>10}",
+            inst.key(),
+            pred,
+            truth.map(|t| format!("{t:.1}")).unwrap_or_else(|| "OOM".into()),
+            cost,
+            verdict
+        );
+    }
+    println!(
+        "\nrecommendation: train on {} for speed, {} for cost.",
+        fastest.key(),
+        cheapest.key()
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! New-GPU onboarding: the Table VI / Sec V-E scenario.
+//!
+//! A cloud vendor releases a new GPU instance (AWS G5 / A10, or a
+//! different vendor's P100). The vendor — who controls the hardware before
+//! customers see it — runs the offline corpus on the new device, trains
+//! anchor→new-target models, and can then serve predictions for customer
+//! workloads profiled on any OLD instance.
+//!
+//! Run: `cargo run --release --example new_gpu_onboarding`
+
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::ml::metrics;
+use repro::predictor::{Profet, TrainOptions};
+
+fn main() -> repro::Result<()> {
+    let rt = repro::runtime::load_default()?;
+    println!("vendor-side onboarding of {:?} ...", Instance::NEW);
+    let corpus = Corpus::generate(&Instance::ALL);
+    let (train_idx, test_idx) = corpus.split_random(0.2, 3);
+
+    let opts = TrainOptions {
+        anchors: Instance::CORE.to_vec(),
+        targets: Instance::NEW.to_vec(),
+        n_trees: 40,
+        dnn_epochs: 25,
+        ..Default::default()
+    };
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
+    println!("trained {} anchor->new-GPU ensembles\n", profet.cross.len());
+
+    println!("{:16} {:>10} {:>10} {:>8}", "anchor -> new", "n", "MAPE %", "R2");
+    for t in Instance::NEW {
+        for a in Instance::CORE {
+            let mut truth = Vec::new();
+            let mut pred = Vec::new();
+            for &i in &test_idx {
+                let e = &corpus.entries[i];
+                let (Some(ar), Some(tr)) = (e.runs.get(&a), e.runs.get(&t)) else {
+                    continue;
+                };
+                let (p, _) = profet.predict_cross(&rt, a, t, &ar.profile, ar.latency_ms)?;
+                truth.push(tr.latency_ms);
+                pred.push(p);
+            }
+            println!(
+                "{:16} {:>10} {:>10.2} {:>8.3}",
+                format!("{} -> {}", a.key(), t.spec().gpu_model),
+                truth.len(),
+                metrics::mape(&truth, &pred),
+                metrics::r2(&truth, &pred)
+            );
+        }
+    }
+    println!("\nCustomers profiled on old instances can now be quoted for the new hardware");
+    println!("before migrating — no customer-side reruns required (paper Sec III-C3).");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Quickstart: the complete PROFET flow in one file.
+//!
+//! 1. Generate the offline experiment corpus (simulator substitute for the
+//!    paper's EC2 runs).
+//! 2. Train the PROFET system (feature clustering + median ensemble with
+//!    the HLO-compiled DNN + batch/pixel polynomials).
+//! 3. Profile a "new" workload on an anchor instance and predict its
+//!    training latency on a target instance, comparing with ground truth.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::models::ModelId;
+use repro::predictor::{Profet, TrainOptions};
+use repro::sim::{self, Workload};
+
+fn main() -> repro::Result<()> {
+    // L2/L1 build products: the AOT-compiled HLO artifacts.
+    let rt = repro::runtime::load_default()?;
+    println!("PJRT backend: {}", rt.platform());
+
+    // 1. offline corpus (every executable G x M x B x P case)
+    println!("generating corpus ...");
+    let corpus = Corpus::generate(&Instance::CORE);
+    println!(
+        "  {} workloads / {} observations / {} distinct ops",
+        corpus.entries.len(),
+        corpus.n_observations(),
+        corpus.vocabulary().len()
+    );
+
+    // 2. train (reduced hyper-parameters so the example runs in seconds)
+    let (train_idx, _) = corpus.split_random(0.2, 1);
+    let opts = TrainOptions {
+        anchors: vec![Instance::G4dn],
+        targets: Instance::CORE.to_vec(),
+        n_trees: 30,
+        dnn_epochs: 20,
+        ..Default::default()
+    };
+    println!("training PROFET (anchor g4dn -> all targets) ...");
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
+    println!(
+        "  {} cross-instance ensembles, {} live features",
+        profet.cross.len(),
+        profet.feature_space.n_features()
+    );
+
+    // 3. the client story (Fig 3): profile on the anchor, predict elsewhere
+    let workload = Workload::new(ModelId::ResNet50, 32, 128);
+    let anchor = Instance::G4dn;
+    let run = sim::run_workload(&workload, anchor).expect("executable");
+    println!(
+        "\nprofiled {} on {}: {:.1} ms/batch, {} distinct ops",
+        workload.key(),
+        anchor,
+        run.latency_ms,
+        run.profile.aggregated().len()
+    );
+    println!("predicted training latency elsewhere:");
+    for target in Instance::CORE {
+        if target == anchor {
+            continue;
+        }
+        let (pred, member) = profet.predict_cross(
+            &rt,
+            anchor,
+            target,
+            &run.profile.aggregated(),
+            run.latency_ms,
+        )?;
+        let truth = sim::run_workload(&workload, target).unwrap().latency_ms;
+        println!(
+            "  {:5} pred {:8.1} ms   truth {:8.1} ms   APE {:5.1}%   (median from {})",
+            target.key(),
+            pred,
+            truth,
+            100.0 * (pred - truth).abs() / truth,
+            member.name()
+        );
+    }
+
+    // bonus: phase-2 — what if the batch size changes?
+    let r16 = sim::run_workload(&Workload::new(ModelId::ResNet50, 16, 128), anchor).unwrap();
+    let r256 = sim::run_workload(&Workload::new(ModelId::ResNet50, 256, 128), anchor).unwrap();
+    let p64 = profet.predict_scenario(
+        &rt,
+        anchor,
+        Instance::P3,
+        &r16.profile.aggregated(),
+        r16.latency_ms,
+        &r256.profile.aggregated(),
+        r256.latency_ms,
+        64,
+    )?;
+    let t64 = sim::run_workload(&Workload::new(ModelId::ResNet50, 64, 128), Instance::P3)
+        .unwrap()
+        .latency_ms;
+    println!(
+        "\ntwo-phase scenario: ResNet50@128px b=64 on p3: pred {:.1} ms, truth {:.1} ms (APE {:.1}%)",
+        p64,
+        t64,
+        100.0 * (p64 - t64).abs() / t64
+    );
+    Ok(())
+}

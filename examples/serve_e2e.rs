@@ -1,0 +1,169 @@
+//! END-TO-END DRIVER: the full three-layer system on a real serving
+//! workload, proving all layers compose (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Pipeline exercised, Python nowhere on the path:
+//!   1. corpus generation (simulator substrate),
+//!   2. PROFET training — the DNN member trains by driving the AOT-compiled
+//!      JAX/Pallas train-step artifact through PJRT (L2/L1),
+//!   3. model persistence to a registry directory,
+//!   4. the TCP/JSON coordinator (L3): router + dynamic batcher over the
+//!      fixed-shape MLP forward artifact,
+//!   5. a closed-loop client fleet issuing profiled-workload prediction
+//!      requests; reports throughput, latency percentiles, batching stats,
+//!      and prediction accuracy against simulator ground truth.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+
+use repro::coordinator;
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::predictor::{Profet, TrainOptions};
+ 
+use repro::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+fn main() -> repro::Result<()> {
+    // ---- 1. corpus ------------------------------------------------------
+    let t0 = Instant::now();
+    let rt = repro::runtime::load_default()?;
+    let corpus = Corpus::generate(&Instance::CORE);
+    println!(
+        "[{:6.1?}] corpus: {} workloads / {} observations",
+        t0.elapsed(),
+        corpus.entries.len(),
+        corpus.n_observations()
+    );
+
+    // ---- 2. train (DNN member = HLO train-step loop over PJRT) ----------
+    let (train_idx, test_idx) = corpus.split_random(0.2, 4);
+    let opts = TrainOptions {
+        anchors: vec![Instance::G4dn],
+        targets: Instance::CORE.to_vec(),
+        n_trees: 40,
+        dnn_epochs: 25,
+        ..Default::default()
+    };
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
+    println!(
+        "[{:6.1?}] trained {} ensembles ({} features)",
+        t0.elapsed(),
+        profet.cross.len(),
+        profet.feature_space.n_features()
+    );
+
+    // ---- 3. persist -----------------------------------------------------
+    let model_dir = std::env::temp_dir().join("repro_serve_e2e_models");
+    std::fs::remove_dir_all(&model_dir).ok();
+    profet.save(&model_dir)?;
+    println!("[{:6.1?}] models saved to {}", t0.elapsed(), model_dir.display());
+
+    // ---- 4. serve -------------------------------------------------------
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        repro::runtime::default_artifact_dir(),
+        model_dir.clone(),
+    )?;
+    let addr = handle.addr;
+    println!("[{:6.1?}] coordinator listening on {addr}", t0.elapsed());
+
+    // ---- 5. client fleet -------------------------------------------------
+    // request payloads: held-out workloads profiled on the anchor
+    let mut payloads = Vec::new();
+    for &i in &test_idx {
+        let e = &corpus.entries[i];
+        let Some(a) = e.runs.get(&Instance::G4dn) else { continue };
+        for target in [Instance::P3, Instance::P2, Instance::G3s] {
+            let Some(t) = e.runs.get(&target) else { continue };
+            let mut profile = Json::obj();
+            for (k, v) in &a.profile {
+                profile.set(k, Json::Num(*v));
+            }
+            let mut req = Json::obj();
+            req.set("op", Json::Str("predict".into()));
+            req.set("anchor", Json::Str("g4dn".into()));
+            req.set("target", Json::Str(target.key().into()));
+            req.set("anchor_latency_ms", Json::Num(a.latency_ms));
+            req.set("profile", profile);
+            payloads.push((req.to_string(), t.latency_ms));
+        }
+    }
+    println!(
+        "[{:6.1?}] client fleet: {} requests across 16 connections",
+        t0.elapsed(),
+        payloads.len()
+    );
+
+    let clients = 16usize;
+    let t_serve = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let slice: Vec<(String, f64)> = payloads
+            .iter()
+            .skip(c)
+            .step_by(clients)
+            .cloned()
+            .collect();
+        joins.push(std::thread::spawn(move || -> (Vec<f64>, Vec<f64>) {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut rtts = Vec::new();
+            let mut apes = Vec::new();
+            for (line, truth) in slice {
+                let t = Instant::now();
+                writer.write_all(line.as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                rtts.push(t.elapsed().as_secs_f64() * 1e3);
+                let j = Json::parse(resp.trim()).unwrap();
+                assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+                let pred = j.req_f64("latency_ms").unwrap();
+                apes.push(100.0 * (pred - truth).abs() / truth);
+            }
+            (rtts, apes)
+        }));
+    }
+    let mut rtts = Vec::new();
+    let mut apes = Vec::new();
+    for j in joins {
+        let (r, a) = j.join().unwrap();
+        rtts.extend(r);
+        apes.extend(a);
+    }
+    let wall = t_serve.elapsed().as_secs_f64();
+    let thr = rtts.len() as f64 / wall;
+
+    println!("\n=== serve_e2e results ===");
+    println!("requests      : {}", rtts.len());
+    println!("wall time     : {wall:.2} s");
+    println!("throughput    : {thr:.0} req/s");
+    println!(
+        "latency ms    : p50={:.2}  p90={:.2}  p99={:.2}  max={:.2}",
+        repro::util::quantile(&rtts, 0.50),
+        repro::util::quantile(&rtts, 0.90),
+        repro::util::quantile(&rtts, 0.99),
+        repro::util::quantile(&rtts, 1.0)
+    );
+    println!(
+        "accuracy      : MAPE {:.2}%  (p90 APE {:.1}%)",
+        repro::util::mean(&apes),
+        repro::util::quantile(&apes, 0.90)
+    );
+    let served = handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = handle.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "service totals: {served} requests in {batches} artifact batches (avg {:.1} req/exec)",
+        served as f64 / batches.max(1) as f64
+    );
+    assert!(batches < served, "dynamic batching must coalesce requests");
+
+    assert!(repro::util::mean(&apes) < 25.0, "serving accuracy degraded");
+    handle.stop();
+    std::fs::remove_dir_all(&model_dir).ok();
+    println!("\nE2E driver complete: all three layers composed.");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT compile path: lower L2/L1 jax functions to HLO *text* artifacts.
+
+HLO text (NOT lowered.compiler_ir(...).serialize()) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts (fixed shapes recorded in artifacts/meta.json):
+  mlp_fwd.hlo.txt    (params[P], x[B,D])            -> (yhat[B],)
+  mlp_train.hlo.txt  (params,m,v [P], t[], x[Bt,D], y[Bt])
+                                                    -> (p',m',v',t',loss)
+  levenshtein.hlo.txt (a[K,L], b[K,L], la[K], lb[K]) -> (dist[K],)
+
+Run: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import levenshtein as lev_kernel
+from .kernels import ref
+
+# Fixed AOT shapes. D_FEAT must match rust/src (feature space padded to this
+# width); B_PRED is the serving batch, B_TRAIN the training minibatch.
+D_FEAT = 48
+B_PRED = 64
+B_TRAIN = 32
+LEV_K = 64
+LEV_L = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    p = ref.mlp_param_count(D_FEAT)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+
+    fwd = jax.jit(model.predict_batch).lower(s((p,), f32), s((B_PRED, D_FEAT), f32))
+    train = jax.jit(model.train_step_entry).lower(
+        s((p,), f32),
+        s((p,), f32),
+        s((p,), f32),
+        s((), f32),
+        s((B_TRAIN, D_FEAT), f32),
+        s((B_TRAIN,), f32),
+    )
+    lev = jax.jit(lambda a, b, la, lb: (lev_kernel.levenshtein(a, b, la, lb),)).lower(
+        s((LEV_K, LEV_L), i32),
+        s((LEV_K, LEV_L), i32),
+        s((LEV_K,), i32),
+        s((LEV_K,), i32),
+    )
+    return {"mlp_fwd": fwd, "mlp_train": train, "levenshtein": lev}, p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    lowered, p = lower_all()
+    for name, lw in lowered.items():
+        text = to_hlo_text(lw)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "d_feat": D_FEAT,
+        "b_pred": B_PRED,
+        "b_train": B_TRAIN,
+        "param_count": p,
+        "lev_k": LEV_K,
+        "lev_l": LEV_L,
+        "hidden": list(ref.HIDDEN),
+        "adam": {
+            "lr": model.ADAM_LR,
+            "b1": model.ADAM_B1,
+            "b2": model.ADAM_B2,
+            "eps": model.ADAM_EPS,
+        },
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: batched Levenshtein distance (feature-clustering hot-spot).
+
+PROFET clusters profiler operation names by Levenshtein distance (Sec III-B).
+Building the D x D distance matrix is O(D^2 * L^2) character ops; this kernel
+computes a batch of K padded name pairs per call with the Wagner-Fischer DP.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the GPU-idiomatic version
+is thread-per-pair with the DP row in registers/shared memory. Here the K
+pair dimension maps to vector lanes (whole tile resident in VMEM) and the DP
+row rolls in-place via a fori_loop over the characters of `b` with an inner
+scan along `a` — the only true data dependence. Per-pair length masking
+makes the padded lanes no-ops rather than divergent branches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lev_kernel(a_ref, b_ref, la_ref, lb_ref, o_ref, *, l: int):
+    a = a_ref[...]  # [K, L] int32
+    b = b_ref[...]
+    la = la_ref[...]  # [K]
+    lb = lb_ref[...]
+    k = a.shape[0]
+
+    cols = jnp.arange(l + 1, dtype=jnp.int32)
+    row0 = jnp.broadcast_to(cols, (k, l + 1)).astype(jnp.int32)
+
+    def outer(j, row):
+        bj = jax.lax.dynamic_slice_in_dim(b, j, 1, axis=1)  # [K,1]
+        sub_cost = jnp.where(a == bj, 0, 1).astype(jnp.int32)
+
+        def inner(carry, i):
+            ins = carry + 1
+            dele = jax.lax.dynamic_slice_in_dim(row, i + 1, 1, axis=1)[:, 0] + 1
+            sub = (
+                jax.lax.dynamic_slice_in_dim(row, i, 1, axis=1)[:, 0]
+                + jax.lax.dynamic_slice_in_dim(sub_cost, i, 1, axis=1)[:, 0]
+            )
+            val = jnp.minimum(jnp.minimum(ins, dele), sub)
+            return val, val
+
+        first = jnp.full((k,), j + 1, dtype=jnp.int32)
+        _, rest = jax.lax.scan(inner, first, jnp.arange(l))
+        new_row = jnp.concatenate([first[:, None], rest.T], axis=1)
+        active = (j < lb)[:, None]
+        return jnp.where(active, new_row, row)
+
+    row = jax.lax.fori_loop(0, l, outer, row0)
+    o_ref[...] = jnp.take_along_axis(row, la[:, None], axis=1)[:, 0]
+
+
+def levenshtein(a, b, la, lb):
+    """Batched Levenshtein: (i32[K,L], i32[K,L], i32[K], i32[K]) -> i32[K]."""
+    k, l = a.shape
+    return pl.pallas_call(
+        functools.partial(_lev_kernel, l=l),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        interpret=True,
+    )(a, b, la, lb)

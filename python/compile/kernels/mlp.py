@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused 5-layer MLP forward (PROFET's prediction hot-spot).
+
+The whole dense stack (128x64x32x16x1, ReLU between layers) runs as a single
+pallas_call so intermediate activations never round-trip to HBM. The batch
+dimension is tiled via BlockSpec (TILE_B rows per program); the flat
+parameter vector is broadcast to every program and unpacked in-register.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * VMEM budget per program = TILE_B*(D + 128 + 64 + 32 + 16 + 1) f32 for
+    activations + P f32 params. With TILE_B=32, D=48, P≈19k this is ~45 KB,
+    far under the ~16 MB VMEM ceiling — the kernel is launch/bandwidth
+    bound, so a single pass with all layers fused is the right structure.
+  * Matmul shapes (TILE_B x D) @ (D x 128) etc. target the MXU with the
+    contraction dim padded by the caller to a multiple of 8.
+  * interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; interpret-mode lowers to plain HLO so the same artifact
+    runs under the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_B = 32
+
+
+def _mlp_kernel(params_ref, x_ref, o_ref, *, d_in: int):
+    """One program: forward a (TILE_B, D) tile through the full stack."""
+    flat = params_ref[...]
+    h = x_ref[...]
+    off = 0
+    layers = ref.mlp_param_sizes(d_in)
+    for i, ((wi, wo), (bo,)) in enumerate(layers):
+        w = flat[off : off + wi * wo].reshape(wi, wo)
+        off += wi * wo
+        b = flat[off : off + bo]
+        off += bo
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if i != len(layers) - 1:
+            h = jnp.maximum(h, 0.0)
+    o_ref[...] = h[:, 0]
+
+
+def mlp_forward(flat_params, x):
+    """Fused MLP forward via Pallas: (f32[P], f32[B, D]) -> f32[B].
+
+    B must be a multiple of TILE_B (the AOT batch is 64).
+    """
+    b, d = x.shape
+    assert b % TILE_B == 0, f"batch {b} not a multiple of {TILE_B}"
+    p = flat_params.shape[0]
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, d_in=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),  # params: broadcast
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),  # x: batch tile
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(flat_params, x)

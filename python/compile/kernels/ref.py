@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite compares the Pallas kernels
+against (L1 correctness signal), and the definition the L2 model reuses so
+that the AOT-lowered HLO and the oracle share one parameter layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# MLP architecture from the paper (Sec III-C1): 128x64x32x16x1 dense stack
+# with ReLU activations, on top of a D-dimensional clustered feature vector.
+HIDDEN = (128, 64, 32, 16, 1)
+
+
+def mlp_param_sizes(d_in: int) -> list:
+    """[(W_shape, b_shape), ...] for the dense stack, input dim d_in."""
+    sizes = []
+    prev = d_in
+    for h in HIDDEN:
+        sizes.append(((prev, h), (h,)))
+        prev = h
+    return sizes
+
+
+def mlp_param_count(d_in: int) -> int:
+    return sum(w[0] * w[1] + b[0] for w, b in mlp_param_sizes(d_in))
+
+
+def unflatten_params(flat, d_in: int):
+    """Split a flat f32[P] vector into [(W, b), ...] per dense layer."""
+    params = []
+    off = 0
+    for (wi, wo), (bo,) in mlp_param_sizes(d_in):
+        w = flat[off : off + wi * wo].reshape(wi, wo)
+        off += wi * wo
+        b = flat[off : off + bo]
+        off += bo
+        params.append((w, b))
+    return params
+
+
+def mlp_forward_ref(flat_params, x):
+    """Reference fused-MLP forward: x f32[B, D] -> yhat f32[B].
+
+    ReLU between layers, linear output head. Matches kernels/mlp.py and the
+    L2 model bit-for-bit in exact arithmetic (same op order).
+    """
+    h = x
+    params = unflatten_params(flat_params, x.shape[-1])
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i != len(params) - 1:
+            h = jnp.maximum(h, 0.0)
+    return h[:, 0]
+
+
+def levenshtein_ref(a, b, la, lb):
+    """Reference batched Levenshtein distance.
+
+    a, b: int32[K, L] zero-padded codepoint arrays; la, lb: int32[K] true
+    lengths. Returns int32[K]. Vectorized Wagner-Fischer: roll the DP row
+    across the characters of `b`, masking steps beyond each pair's length.
+    """
+    k, l = a.shape
+    cols = jnp.arange(l + 1, dtype=jnp.int32)  # [L+1]
+
+    # row[i] = distance(a[:i], b[:j]) after processing j chars of b.
+    row0 = jnp.broadcast_to(cols, (k, l + 1)).astype(jnp.int32)
+
+    def step(j, row):
+        bj = jax.lax.dynamic_slice_in_dim(b, j, 1, axis=1)  # [K,1]
+        sub_cost = jnp.where(a == bj, 0, 1).astype(jnp.int32)  # [K,L]
+
+        def inner(carry, i):
+            new_prev = carry  # new_row[i] per pair
+            ins = new_prev + 1
+            dele = jax.lax.dynamic_slice_in_dim(row, i + 1, 1, axis=1)[:, 0] + 1
+            sub = (
+                jax.lax.dynamic_slice_in_dim(row, i, 1, axis=1)[:, 0]
+                + jax.lax.dynamic_slice_in_dim(sub_cost, i, 1, axis=1)[:, 0]
+            )
+            val = jnp.minimum(jnp.minimum(ins, dele), sub)
+            return val, val
+
+        first = jnp.full((k,), j + 1, dtype=jnp.int32)  # new_row[0] = j+1
+        _, rest = jax.lax.scan(inner, first, jnp.arange(l))
+        new_row = jnp.concatenate([first[:, None], rest.T], axis=1)
+        # only advance pairs whose b actually has a j-th character
+        active = (j < lb)[:, None]
+        return jnp.where(active, new_row, row)
+
+    row = jax.lax.fori_loop(0, l, step, row0)
+    # answer sits at column la for each pair
+    return jnp.take_along_axis(row, la[:, None], axis=1)[:, 0]
+
+
+def levenshtein_py(s1: str, s2: str) -> int:
+    """Plain-python oracle-of-the-oracle used in tests."""
+    m, n = len(s1), len(s2)
+    row = list(range(m + 1))
+    for j in range(n):
+        new = [j + 1] + [0] * m
+        for i in range(m):
+            new[i + 1] = min(new[i] + 1, row[i + 1] + 1, row[i] + (s1[i] != s2[j]))
+        row = new
+    return row[m]
+
+
+def encode_names(names, l: int):
+    """Encode python strings to (int32[K, L], int32[K]) padded arrays."""
+    import numpy as np
+
+    k = len(names)
+    arr = np.zeros((k, l), dtype=np.int32)
+    lens = np.zeros((k,), dtype=np.int32)
+    for i, s in enumerate(names):
+        s = s[:l]
+        arr[i, : len(s)] = [ord(c) for c in s]
+        lens[i] = len(s)
+    return arr, lens

@@ -1,0 +1,71 @@
+"""L2: the PROFET DNN ensemble member as a JAX compute graph.
+
+The paper's DNN regressor (Sec III-C1): dense 128x64x32x16x1 with ReLU,
+Adam (lr 1e-3), loss = MAPE + RMSE. Forward calls the L1 Pallas kernel so
+the fused MLP lowers into the same HLO artifact; backward is jax.grad over
+the plain-jnp twin of the same graph (identical op order).
+
+All parameters travel as a single flat f32[P] vector so the rust driver can
+hold them as one Literal and thread them through train steps without
+reconstructing a pytree. Adam moments are two more flat vectors and the step
+count a scalar; the train step is a pure function
+    (params, m, v, t, x, y) -> (params', m', v', t+1, loss)
+executed in a loop from rust/src/dnn/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp as mlp_kernel
+from .kernels import ref
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+# Ground-truth latencies span ~3 orders of magnitude; the loss mixes a
+# scale-free term (MAPE) with an absolute one (RMSE) as in the paper.
+MAPE_EPS = 1e-3
+
+
+def forward(flat_params, x):
+    """Prediction path: the fused Pallas MLP."""
+    return mlp_kernel.mlp_forward(flat_params, x)
+
+
+def forward_ref(flat_params, x):
+    """Same graph built from plain jnp ops (used for bwd and as oracle)."""
+    return ref.mlp_forward_ref(flat_params, x)
+
+
+def loss_fn(flat_params, x, y):
+    """Combined MAPE + RMSE objective (paper Sec III-C1)."""
+    yhat = forward_ref(flat_params, x)
+    err = yhat - y
+    mape = jnp.mean(jnp.abs(err) / jnp.maximum(jnp.abs(y), MAPE_EPS))
+    rmse = jnp.sqrt(jnp.mean(err * err) + 1e-12)
+    return mape + rmse
+
+
+def train_step(params, m, v, t, x, y):
+    """One Adam step over a minibatch; everything flat f32 / scalar f32."""
+    loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+    t1 = t + 1.0
+    m1 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v1 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m1 / (1.0 - ADAM_B1**t1)
+    vhat = v1 / (1.0 - ADAM_B2**t1)
+    params1 = params - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params1, m1, v1, t1, loss
+
+
+def predict_batch(params, x):
+    """AOT entry point for serving: (f32[P], f32[B,D]) -> (f32[B],)."""
+    return (forward(params, x),)
+
+
+def train_step_entry(params, m, v, t, x, y):
+    """AOT entry point for training."""
+    return train_step(params, m, v, t, x, y)

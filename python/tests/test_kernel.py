@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp/python oracles.
+
+hypothesis sweeps shapes/values; assert_allclose against ref.py is the core
+correctness signal for everything the rust runtime later executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import levenshtein as lev_kernel
+from compile.kernels import mlp as mlp_kernel
+from compile.kernels import ref
+
+
+def _rand_params(rng, d):
+    return rng.standard_normal(ref.mlp_param_count(d)).astype(np.float32) * 0.1
+
+
+# ---------------------------------------------------------------- MLP kernel
+
+
+class TestMlpKernel:
+    @pytest.mark.parametrize("d", [8, 16, 48, 64])
+    @pytest.mark.parametrize("b", [32, 64, 128])
+    def test_matches_ref(self, b, d):
+        rng = np.random.default_rng(b * 1000 + d)
+        params = _rand_params(rng, d)
+        x = rng.standard_normal((b, d)).astype(np.float32)
+        got = np.asarray(mlp_kernel.mlp_forward(params, x))
+        want = np.asarray(ref.mlp_forward_ref(params, x))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged_batch(self):
+        rng = np.random.default_rng(0)
+        params = _rand_params(rng, 8)
+        x = rng.standard_normal((33, 8)).astype(np.float32)
+        with pytest.raises(AssertionError):
+            mlp_kernel.mlp_forward(params, x)
+
+    def test_zero_params_zero_output(self):
+        d = 16
+        params = np.zeros(ref.mlp_param_count(d), dtype=np.float32)
+        x = np.ones((32, d), dtype=np.float32)
+        got = np.asarray(mlp_kernel.mlp_forward(params, x))
+        assert_allclose(got, np.zeros(32, dtype=np.float32), atol=0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        d=st.sampled_from([4, 8, 24, 48]),
+        tiles=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.sampled_from([1e-3, 0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_sweep(self, d, tiles, seed, scale):
+        rng = np.random.default_rng(seed)
+        b = tiles * mlp_kernel.TILE_B
+        params = _rand_params(rng, d)
+        x = (rng.standard_normal((b, d)) * scale).astype(np.float32)
+        got = np.asarray(mlp_kernel.mlp_forward(params, x))
+        want = np.asarray(ref.mlp_forward_ref(params, x))
+        assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+    def test_param_count_formula(self):
+        # D=48: 48*128+128 + 128*64+64 + 64*32+32 + 32*16+16 + 16*1+1
+        assert ref.mlp_param_count(48) == 48 * 128 + 128 + 128 * 64 + 64 + 64 * 32 + 32 + 32 * 16 + 16 + 16 + 1
+
+
+# -------------------------------------------------------- Levenshtein kernel
+
+OP_NAMES = [
+    "Conv2D",
+    "Conv2DBackpropFilter",
+    "Conv2DBackpropInput",
+    "Relu",
+    "Relu6",
+    "ReluGrad",
+    "Relu6Grad",
+    "MaxPool",
+    "AvgPool",
+    "MaxPoolGrad",
+    "AvgPoolGrad",
+    "MatMul",
+    "Softmax",
+    "ArgMax",
+    "FusedBatchNormV3",
+    "FusedBatchNormGradV3",
+    "BiasAdd",
+    "BiasAddGrad",
+    "AssignSubVariableOp",
+    "AssignAddVariableOp",
+    "DepthwiseConv2dNative",
+    "RsqrtGrad",
+]
+
+
+def _pad_pairs(pairs, l=16):
+    a, la = ref.encode_names([p[0] for p in pairs], l)
+    b, lb = ref.encode_names([p[1] for p in pairs], l)
+    return a, b, la, lb
+
+
+class TestLevenshteinKernel:
+    def test_known_distances(self):
+        # Paper's worked examples: d(ReLU, ReLU6)=1, d(ReLU, Conv2D)=6,
+        # d(MaxPoolGrad, AvgPoolGrad)=3 (case-sensitive over profiler names).
+        pairs = [("ReLU", "ReLU6"), ("ReLU", "Conv2D"), ("MaxPoolGrad", "AvgPoolGrad"), ("", "abc")]
+        pairs += [("", ""), ("same", "same")]
+        while len(pairs) < 8:
+            pairs.append(("x", "y"))
+        a, b, la, lb = _pad_pairs(pairs)
+        got = np.asarray(lev_kernel.levenshtein(a, b, la, lb))
+        want = [ref.levenshtein_py(p, q) for p, q in pairs]
+        assert got.tolist() == want
+
+    def test_matches_ref_kernel(self):
+        rng = np.random.default_rng(7)
+        names = [OP_NAMES[i % len(OP_NAMES)] for i in range(32)]
+        other = [OP_NAMES[(i * 7 + 3) % len(OP_NAMES)] for i in range(32)]
+        a, la = ref.encode_names(names, 24)
+        b, lb = ref.encode_names(other, 24)
+        got = np.asarray(lev_kernel.levenshtein(a, b, la, lb))
+        want = np.asarray(ref.levenshtein_ref(a, b, la, lb))
+        assert got.tolist() == want.tolist()
+        py = [ref.levenshtein_py(p, q) for p, q in zip(names, other)]
+        assert got.tolist() == py
+
+    def test_symmetry(self):
+        pairs = [(OP_NAMES[i], OP_NAMES[j]) for i in range(4) for j in range(4)]
+        a, b, la, lb = _pad_pairs(pairs, 24)
+        fwd = np.asarray(lev_kernel.levenshtein(a, b, la, lb))
+        rev = np.asarray(lev_kernel.levenshtein(b, a, lb, la))
+        assert fwd.tolist() == rev.tolist()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        data=st.lists(
+            st.tuples(
+                st.text(alphabet="abcXY26", min_size=0, max_size=10),
+                st.text(alphabet="abcXY26", min_size=0, max_size=10),
+            ),
+            min_size=1,
+            max_size=12,
+        )
+    )
+    def test_hypothesis_random_strings(self, data):
+        a, b, la, lb = _pad_pairs(data, 12)
+        got = np.asarray(lev_kernel.levenshtein(a, b, la, lb))
+        want = [ref.levenshtein_py(p, q) for p, q in data]
+        assert got.tolist() == want
+
+    def test_triangle_inequality_property(self):
+        # d(x,z) <= d(x,y) + d(y,z) over the op-name vocabulary.
+        import itertools
+
+        tri = list(itertools.islice(itertools.permutations(OP_NAMES[:8], 3), 40))
+        xy = [(x, y) for x, y, _ in tri]
+        yz = [(y, z) for _, y, z in tri]
+        xz = [(x, z) for x, _, z in tri]
+        d = {}
+        for key, pairs in (("xy", xy), ("yz", yz), ("xz", xz)):
+            a, b, la, lb = _pad_pairs(pairs, 24)
+            d[key] = np.asarray(lev_kernel.levenshtein(a, b, la, lb))
+        assert (d["xz"] <= d["xy"] + d["yz"]).all()

@@ -1,0 +1,104 @@
+"""L2 correctness: model graph, loss, Adam train step, AOT shapes."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _init(rng, d):
+    # He-style init matching rust/src/dnn (uniform +-sqrt(6/fan_in)).
+    flat = np.zeros(ref.mlp_param_count(d), dtype=np.float32)
+    off = 0
+    for (wi, wo), (bo,) in ref.mlp_param_sizes(d):
+        lim = np.sqrt(6.0 / wi)
+        flat[off : off + wi * wo] = rng.uniform(-lim, lim, wi * wo)
+        off += wi * wo + bo  # biases stay zero
+    return flat
+
+
+class TestModel:
+    def test_forward_matches_pallas(self):
+        rng = np.random.default_rng(1)
+        d = aot.D_FEAT
+        params = _init(rng, d)
+        x = rng.standard_normal((aot.B_PRED, d)).astype(np.float32)
+        got = np.asarray(model.predict_batch(params, x)[0])
+        want = np.asarray(model.forward_ref(params, x))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_loss_positive_and_finite(self):
+        rng = np.random.default_rng(2)
+        d = aot.D_FEAT
+        params = _init(rng, d)
+        x = rng.standard_normal((aot.B_TRAIN, d)).astype(np.float32)
+        y = np.abs(rng.standard_normal(aot.B_TRAIN)).astype(np.float32) + 0.1
+        loss = float(model.loss_fn(params, x, y))
+        assert np.isfinite(loss) and loss > 0
+
+    def test_train_step_reduces_loss(self):
+        rng = np.random.default_rng(3)
+        d = aot.D_FEAT
+        p = _init(rng, d)
+        m = np.zeros_like(p)
+        v = np.zeros_like(p)
+        t = np.float32(0.0)
+        x = rng.standard_normal((aot.B_TRAIN, d)).astype(np.float32)
+        # learnable target: linear function of features
+        w = rng.standard_normal(d).astype(np.float32)
+        y = np.abs(x @ w) + 1.0
+        losses = []
+        for _ in range(60):
+            p, m, v, t, loss = model.train_step(p, m, v, t, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9
+        assert float(t) == 60.0
+
+    def test_train_step_shapes_stable(self):
+        rng = np.random.default_rng(4)
+        d = aot.D_FEAT
+        p = _init(rng, d)
+        m = np.zeros_like(p)
+        v = np.zeros_like(p)
+        x = rng.standard_normal((aot.B_TRAIN, d)).astype(np.float32)
+        y = np.ones(aot.B_TRAIN, dtype=np.float32)
+        p1, m1, v1, t1, loss = model.train_step(p, m, v, np.float32(0), x, y)
+        assert p1.shape == p.shape and m1.shape == m.shape and v1.shape == v.shape
+        assert np.asarray(loss).shape == ()
+
+    def test_adam_constants_in_meta(self):
+        meta_lowered, pcount = aot.lower_all()
+        assert set(meta_lowered) == {"mlp_fwd", "mlp_train", "levenshtein"}
+        assert pcount == ref.mlp_param_count(aot.D_FEAT)
+
+
+class TestAot:
+    @pytest.fixture(scope="class")
+    def lowered(self):
+        return aot.lower_all()[0]
+
+    def test_hlo_text_parses_entry(self, lowered):
+        for name, lw in lowered.items():
+            text = aot.to_hlo_text(lw)
+            assert "ENTRY" in text and "ROOT" in text, name
+            # 64-bit-id proto issue is avoided by text interchange; text must
+            # not be empty or suspiciously small.
+            assert len(text) > 500, name
+
+    def test_fwd_hlo_shapes(self, lowered):
+        text = aot.to_hlo_text(lowered["mlp_fwd"])
+        p = ref.mlp_param_count(aot.D_FEAT)
+        assert f"f32[{p}]" in text
+        assert f"f32[{aot.B_PRED},{aot.D_FEAT}]" in text
+
+    def test_train_hlo_has_tuple_out(self, lowered):
+        text = aot.to_hlo_text(lowered["mlp_train"])
+        p = ref.mlp_param_count(aot.D_FEAT)
+        # output tuple: params', m', v', t', loss
+        assert text.count(f"f32[{p}]") >= 3
+
+    def test_lev_hlo_shapes(self, lowered):
+        text = aot.to_hlo_text(lowered["levenshtein"])
+        assert f"s32[{aot.LEV_K},{aot.LEV_L}]" in text

@@ -1,0 +1,145 @@
+//! `cargo bench --bench hot_paths` — micro-benchmarks of every hot path,
+//! with a hand-rolled harness (offline environment: no criterion).
+//!
+//! Per layer (DESIGN.md §Perf):
+//!   L3: simulator throughput, feature vectorization, clustering, forest
+//!       prediction, JSON protocol parse, end-to-end serve round trip;
+//!   L2/L1 (through PJRT): MLP forward (batched + per-row amortized),
+//!       Adam train step, batched Levenshtein artifact vs native rust.
+
+use repro::data::Corpus;
+use repro::features::FeatureSpace;
+use repro::gpu::Instance;
+use repro::ml::RandomForest;
+use repro::models::{build, ModelId};
+use repro::runtime::MlpState;
+use repro::sim::{self, Workload};
+use repro::util::Rng64;
+use std::time::Instant;
+
+/// Run `f` repeatedly for ~`budget_ms`, report ns/iter and iters/s.
+fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "  {name:44} {:>12.2} us/iter {:>14.0} iters/s",
+        per * 1e6,
+        1.0 / per
+    );
+    per
+}
+
+fn main() {
+    println!("== hot_paths bench (hand-rolled harness) ==");
+    let rt = repro::runtime::load_default().expect("make artifacts first");
+    let meta = rt.meta.clone();
+
+    // ---------------- L3: simulator substrate ----------------
+    println!("[L3] simulator:");
+    let g_r50 = build(ModelId::ResNet50, 32, 128).unwrap();
+    bench("sim::execute ResNet50 b32 p128 (586 ops)", 400, || {
+        std::hint::black_box(sim::execute(&g_r50, Instance::P3.spec()));
+    });
+    bench("graph build ResNet50 b32 p128", 400, || {
+        std::hint::black_box(build(ModelId::ResNet50, 32, 128).unwrap());
+    });
+    bench("run_workload VGG16 b16 p64 (build+sim)", 400, || {
+        std::hint::black_box(sim::run_workload(&Workload::new(ModelId::Vgg16, 16, 64), Instance::G4dn));
+    });
+
+    // ---------------- L3: feature pipeline ----------------
+    println!("[L3] features:");
+    let vocab_owned: Vec<String> = Corpus::generate(&[Instance::G4dn]).vocabulary();
+    let vocab: Vec<&str> = vocab_owned.iter().map(|s| s.as_str()).collect();
+    bench("hierarchical clustering (full vocabulary)", 400, || {
+        std::hint::black_box(repro::features::average_linkage_clusters(&vocab, 6.0));
+    });
+    let fs = FeatureSpace::fit(&vocab, true, meta.d_feat).unwrap();
+    let profile = sim::run_workload(&Workload::new(ModelId::InceptionV3, 16, 224), Instance::G4dn)
+        .unwrap()
+        .profile
+        .aggregated();
+    bench("FeatureSpace::vectorize (seen ops)", 300, || {
+        std::hint::black_box(fs.vectorize(&profile));
+    });
+    bench("levenshtein rust (op-name pair)", 200, || {
+        std::hint::black_box(repro::features::levenshtein(
+            "DepthwiseConv2dNativeBackpropFilter",
+            "Conv2DBackpropFilter",
+        ));
+    });
+
+    // ---------------- L3: classical ML ----------------
+    println!("[L3] classical ML:");
+    let mut rng = Rng64::new(5);
+    let xs: Vec<Vec<f64>> = (0..800)
+        .map(|_| (0..meta.d_feat).map(|_| rng.range(0.0, 100.0)).collect())
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|r| r.iter().sum::<f64>() / 7.0).collect();
+    let forest = RandomForest::fit(&xs, &ys, 100, 3).unwrap();
+    bench("RandomForest::predict_one (100 trees)", 300, || {
+        std::hint::black_box(forest.predict_one(&xs[0]));
+    });
+    bench("RandomForest::fit 800x48 (100 trees)", 1500, || {
+        std::hint::black_box(RandomForest::fit(&xs, &ys, 100, 3).unwrap());
+    });
+
+    // ---------------- L1/L2 through PJRT ----------------
+    println!("[L1/L2] HLO artifacts via PJRT:");
+    let state = MlpState::init(meta.d_feat, 7);
+    let x_pred: Vec<f32> = (0..meta.b_pred * meta.d_feat)
+        .map(|i| (i % 97) as f32 / 97.0)
+        .collect();
+    let per = bench("mlp_forward artifact (b_pred=64 rows)", 600, || {
+        std::hint::black_box(rt.mlp_forward(&state.params, &x_pred).unwrap());
+    });
+    println!(
+        "  {:44} {:>12.2} us/row (amortized)",
+        "  -> per-prediction cost",
+        per * 1e6 / meta.b_pred as f64
+    );
+    let mut tstate = MlpState::init(meta.d_feat, 8);
+    let x_tr: Vec<f32> = (0..meta.b_train * meta.d_feat)
+        .map(|i| (i % 89) as f32 / 89.0)
+        .collect();
+    let y_tr: Vec<f32> = (0..meta.b_train).map(|i| 1.0 + i as f32).collect();
+    bench("mlp train_step artifact (Adam, b=32)", 600, || {
+        std::hint::black_box(rt.train_step(&mut tstate, &x_tr, &y_tr).unwrap());
+    });
+    let pairs: Vec<(&str, &str)> = (0..meta.lev_k)
+        .map(|i| {
+            if i % 2 == 0 {
+                ("MaxPoolGrad", "AvgPoolGrad")
+            } else {
+                ("FusedBatchNormV3", "FusedBatchNormGradV3")
+            }
+        })
+        .collect();
+    let per_lev = bench("levenshtein artifact (64 pairs)", 600, || {
+        std::hint::black_box(rt.levenshtein_strs(&pairs).unwrap());
+    });
+    println!(
+        "  {:44} {:>12.2} us/pair (amortized)",
+        "  -> per-pair cost",
+        per_lev * 1e6 / meta.lev_k as f64
+    );
+
+    // ---------------- protocol ----------------
+    println!("[L3] coordinator protocol:");
+    let line = r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":42.5,"profile":{"Conv2D":286.0,"Relu":26.0,"MaxPool":14.0,"FusedBatchNormV3":33.0}}"#;
+    bench("Request::parse (predict line)", 200, || {
+        std::hint::black_box(repro::coordinator::Request::parse(line).unwrap());
+    });
+
+    println!("== hot_paths done ==");
+}

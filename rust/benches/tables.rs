@@ -1,0 +1,29 @@
+//! `cargo bench --bench tables` — regenerates EVERY table and figure of
+//! the paper's evaluation section (the DESIGN.md experiment index) and
+//! prints the same rows/series the paper reports, with CHECK lines for
+//! each paper-shape assertion.
+//!
+//! Set REPRO_FAST=1 for a quick (reduced trees/epochs) pass.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut ctx = repro::evalx::Ctx::build().expect("run `make artifacts` first");
+    println!(
+        "corpus: {} workloads / {} observations (train {}, test {})\n",
+        ctx.corpus.entries.len(),
+        ctx.corpus.n_observations(),
+        ctx.train_idx.len(),
+        ctx.test_idx.len()
+    );
+    let report = repro::evalx::run("all", &mut ctx).expect("eval failed");
+    println!("{report}");
+    let fails = report.matches("[FAIL]").count();
+    let passes = report.matches("[PASS]").count();
+    println!(
+        "=== tables bench: {passes} checks passed, {fails} failed, {:.1}s ===",
+        t0.elapsed().as_secs_f64()
+    );
+    if fails > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Comparator baselines (paper Sec V-D): Paleo, MLPredict, Habitat —
+//! reimplemented on the same simulator corpus so the accuracy comparison
+//! is apples-to-apples.
+//!
+//! Each baseline reproduces its characteristic failure mode:
+//! * **Paleo** — pure analytic FLOPs/bandwidth model; no framework/launch
+//!   overhead, one global efficiency → "theoretical modeling cannot
+//!   represent the real operation characteristics" (Table III).
+//! * **MLPredict** — per-layer linear features trained on *small* batches;
+//!   error grows with batch size (Table IV).
+//! * **Habitat** — per-op wave scaling of a *detailed* anchor profile;
+//!   accurate but needs op-level profiling and supports no batch-size
+//!   change (Table V).
+
+pub mod habitat;
+pub mod mlpredict;
+pub mod paleo;

@@ -1,0 +1,63 @@
+//! Paleo (Qi et al., ICLR 2017): analytic white-box performance model.
+//!
+//! Per layer: t = flops / (peak_flops · PPP) + bytes / mem_bw, summed over
+//! the training step. PPP ("platform percent of peak") is a single global
+//! constant — Paleo has no notion of per-op-class efficiency, kernel
+//! launch overhead, framework dispatch cost, or utilization ramps, which
+//! is exactly why its predictions drift on a real framework (Table III).
+
+use crate::gpu::GpuSpec;
+use crate::models::Graph;
+
+/// Paleo's single platform-percent-of-peak constant (the paper's fitted
+/// values cluster around 0.5-0.6 for cuDNN-era GPUs).
+pub const PPP: f64 = 0.55;
+
+/// Predicted training-step latency (ms) for a graph on a device.
+pub fn predict(graph: &Graph, gpu: &GpuSpec) -> f64 {
+    let mut total_us = 0.0;
+    for op in &graph.ops {
+        let compute_us = op.flops / (gpu.tflops_fp32 * 1e12 * PPP) * 1e6;
+        let mem_us = op.bytes / (gpu.mem_bw_gbs * 1e9) * 1e6;
+        // Paleo sums compute and IO (no overlap modeling for single-GPU)
+        total_us += compute_us + mem_us;
+    }
+    total_us / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Instance;
+    use crate::models::{build, ModelId};
+    use crate::sim;
+
+    #[test]
+    fn underestimates_overhead_dominated_models() {
+        // LeNet5 is framework-overhead dominated: Paleo (no overhead term)
+        // must underestimate the simulator's ground truth badly.
+        let g = build(ModelId::LeNet5, 16, 32).unwrap();
+        let truth = sim::execute(&g, Instance::P3.spec()).batch_latency_ms;
+        let paleo = predict(&g, Instance::P3.spec());
+        assert!(paleo < truth * 0.5, "paleo {paleo} vs truth {truth}");
+    }
+
+    #[test]
+    fn closer_on_compute_dominated_models() {
+        // VGG16 at 224px is GEMM-dominated; the analytic model lands within
+        // a factor ~2 of ground truth.
+        let g = build(ModelId::Vgg16, 64, 224).unwrap();
+        let truth = sim::execute(&g, Instance::P3.spec()).batch_latency_ms;
+        let paleo = predict(&g, Instance::P3.spec());
+        let ratio = paleo / truth;
+        assert!((0.3..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn scales_with_device_flops() {
+        let g = build(ModelId::Vgg16, 64, 224).unwrap();
+        let p2 = predict(&g, Instance::P2.spec());
+        let p3 = predict(&g, Instance::P3.spec());
+        assert!(p3 < p2, "faster device predicts faster");
+    }
+}

@@ -1,0 +1,237 @@
+//! Inference engine + request batcher.
+//!
+//! One worker thread owns the PJRT runtime and the trained PROFET models
+//! (the xla handles are not `Send`, so they never leave this thread).
+//! Connection threads submit [`Job`]s through an mpsc channel; the worker
+//! drains the queue, groups phase-1 predictions by (anchor, target), and
+//! runs each group as ONE batched MLP artifact execution — the dynamic
+//! batching that keeps the fixed-shape `b_pred` HLO fed.
+
+use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::gpu::Instance;
+use crate::predictor::Profet;
+use crate::runtime::Runtime;
+use crate::util::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Work item submitted to the engine thread.
+pub enum Job {
+    Predict(PredictRequest, Sender<Response>),
+    BatchSize {
+        instance: Instance,
+        batch: usize,
+        t_min: f64,
+        t_max: f64,
+        reply: Sender<Response>,
+    },
+    PixelSize {
+        instance: Instance,
+        pixels: usize,
+        t_min: f64,
+        t_max: f64,
+        reply: Sender<Response>,
+    },
+    Shutdown,
+}
+
+/// Serving statistics (exposed for tests/monitoring).
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of group sizes — requests served per artifact execution.
+    pub batched_requests: AtomicU64,
+}
+
+/// Handle to the engine thread.
+pub struct Batcher {
+    tx: Sender<Job>,
+    pub stats: Arc<BatcherStats>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Batching window: how long the worker waits to coalesce more requests
+/// after the first one arrives.
+const BATCH_WINDOW: Duration = Duration::from_millis(2);
+
+impl Batcher {
+    /// Spawn the engine thread: loads artifacts + the model directory
+    /// inside the thread (nothing non-Send crosses).
+    pub fn spawn(artifact_dir: PathBuf, model_dir: PathBuf) -> Result<Batcher> {
+        let (tx, rx) = channel::<Job>();
+        let stats = Arc::new(BatcherStats::default());
+        let stats2 = stats.clone();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("profet-engine".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&artifact_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("runtime: {e:#}")));
+                        return;
+                    }
+                };
+                let profet = match Profet::load(&model_dir) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("models: {e:#}")));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(()));
+                engine_loop(rt, profet, rx, &stats2);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Batcher {
+            tx,
+            stats,
+            join: Some(join),
+        })
+    }
+
+    pub fn submit(&self, job: Job) {
+        let _ = self.tx.send(job);
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherStats) {
+    loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let mut predicts: BTreeMap<(Instance, Instance), Vec<(PredictRequest, Sender<Response>)>> =
+            BTreeMap::new();
+        let mut immediate = Vec::new();
+        let mut shutdown = false;
+        let absorb = |job: Job,
+                          predicts: &mut BTreeMap<
+            (Instance, Instance),
+            Vec<(PredictRequest, Sender<Response>)>,
+        >,
+                          immediate: &mut Vec<Job>,
+                          shutdown: &mut bool| {
+            match job {
+                Job::Predict(req, reply) => {
+                    predicts.entry((req.anchor, req.target)).or_default().push((req, reply));
+                }
+                Job::Shutdown => *shutdown = true,
+                other => immediate.push(other),
+            }
+        };
+        absorb(first, &mut predicts, &mut immediate, &mut shutdown);
+        // coalesce within the window
+        let deadline = std::time::Instant::now() + BATCH_WINDOW;
+        while let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now()) {
+            match rx.recv_timeout(remaining) {
+                Ok(j) => absorb(j, &mut predicts, &mut immediate, &mut shutdown),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        // immediate (non-batched) jobs
+        for job in immediate {
+            match job {
+                Job::BatchSize {
+                    instance,
+                    batch,
+                    t_min,
+                    t_max,
+                    reply,
+                } => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp = match profet.predict_batch_size(instance, batch, t_min, t_max) {
+                        Ok(v) => Response::ok_obj(|o| {
+                            o.set("latency_ms", Json::Num(v));
+                        }),
+                        Err(e) => Response::Err(format!("{e:#}")),
+                    };
+                    let _ = reply.send(resp);
+                }
+                Job::PixelSize {
+                    instance,
+                    pixels,
+                    t_min,
+                    t_max,
+                    reply,
+                } => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp = match profet.predict_pixel_size(instance, pixels, t_min, t_max) {
+                        Ok(v) => Response::ok_obj(|o| {
+                            o.set("latency_ms", Json::Num(v));
+                        }),
+                        Err(e) => Response::Err(format!("{e:#}")),
+                    };
+                    let _ = reply.send(resp);
+                }
+                _ => {}
+            }
+        }
+
+        // batched phase-1 predictions: one artifact execution per group
+        for ((anchor, target), group) in predicts {
+            stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
+            let Some(model) = profet.cross.get(&(anchor, target)) else {
+                for (_, reply) in group {
+                    let _ = reply.send(Response::Err(format!(
+                        "no model for {anchor}->{target}"
+                    )));
+                }
+                continue;
+            };
+            let feats: Vec<Vec<f64>> = group
+                .iter()
+                .map(|(r, _)| profet.feature_space.vectorize(&r.profile))
+                .collect();
+            let lats: Vec<f64> = group.iter().map(|(r, _)| r.anchor_latency_ms).collect();
+            match model.predict_batch(&rt, &feats, &lats) {
+                Ok(preds) => {
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .batched_requests
+                        .fetch_add(group.len() as u64, Ordering::Relaxed);
+                    for ((_, reply), (v, member)) in group.into_iter().zip(preds) {
+                        let _ = reply.send(Response::ok_obj(|o| {
+                            o.set("latency_ms", Json::Num(v));
+                            o.set("member", Json::Str(member.name().into()));
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (_, reply) in group {
+                        let _ = reply.send(Response::Err(msg.clone()));
+                    }
+                }
+            }
+        }
+
+        if shutdown {
+            return;
+        }
+    }
+}

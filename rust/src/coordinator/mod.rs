@@ -1,0 +1,26 @@
+//! L3 coordinator: the PROFET prediction *service* (paper Sec IV).
+//!
+//! The paper ships PROFET as a serverless endpoint (S3 + API Gateway +
+//! Lambda). Here the same serving semantics run as a self-contained TCP
+//! service speaking newline-delimited JSON:
+//!
+//! * [`server`] — accept loop, one lightweight thread per connection;
+//! * [`router`] — request parsing/validation and dispatch;
+//! * [`batcher`] — the inference engine: a single worker thread owns the
+//!   PJRT [`crate::runtime::Runtime`] (whose handles are not `Send`) plus
+//!   the model registry, and coalesces concurrent predict requests for the
+//!   same (anchor, target) pair into one fixed-shape MLP artifact
+//!   execution (the `b_pred`-row batch the HLO was lowered with).
+//!
+//! Python never appears anywhere on this path: requests go JSON → feature
+//! vector → HLO executable → JSON.
+
+mod batcher;
+mod protocol;
+mod router;
+mod server;
+
+pub use batcher::{Batcher, BatcherStats};
+pub use protocol::{PredictRequest, Request, Response};
+pub use router::route;
+pub use server::{serve, ServerHandle};

@@ -1,0 +1,161 @@
+//! Wire protocol: newline-delimited JSON requests/responses.
+//!
+//! Request shapes (the `op` field dispatches):
+//! ```json
+//! {"op":"health"}
+//! {"op":"stats"}
+//! {"op":"instances"}
+//! {"op":"predict","anchor":"g4dn","target":"p3",
+//!  "anchor_latency_ms":123.4,"profile":{"Conv2D":286.0,"Relu":26.0}}
+//! {"op":"predict_batch_size","instance":"p3","batch":64,
+//!  "t_min":100.0,"t_max":900.0}
+//! {"op":"predict_pixel_size","instance":"p3","pixels":128,
+//!  "t_min":100.0,"t_max":900.0}
+//! ```
+
+use crate::gpu::Instance;
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// A phase-1 (cross-instance) prediction request.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub anchor: Instance,
+    pub target: Instance,
+    pub anchor_latency_ms: f64,
+    /// Aggregated (op name → ms) profile — the black-box feature payload.
+    pub profile: BTreeMap<String, f64>,
+}
+
+/// Parsed request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Health,
+    /// Serving counters (requests, artifact batches).
+    Stats,
+    Instances,
+    Predict(PredictRequest),
+    PredictBatchSize {
+        instance: Instance,
+        batch: usize,
+        t_min: f64,
+        t_max: f64,
+    },
+    PredictPixelSize {
+        instance: Instance,
+        pixels: usize,
+        t_min: f64,
+        t_max: f64,
+    },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        let op = j.req_str("op")?;
+        let inst = |key: &str| -> Result<Instance> {
+            Instance::from_key(j.req_str(key)?)
+                .ok_or_else(|| anyhow!("unknown instance in `{key}`"))
+        };
+        Ok(match op {
+            "health" => Request::Health,
+            "stats" => Request::Stats,
+            "instances" => Request::Instances,
+            "predict" => {
+                let mut profile = BTreeMap::new();
+                match j.get("profile") {
+                    Some(Json::Obj(m)) => {
+                        for (k, v) in m {
+                            profile.insert(
+                                k.clone(),
+                                v.as_f64().ok_or_else(|| anyhow!("profile value"))?,
+                            );
+                        }
+                    }
+                    _ => anyhow::bail!("missing profile object"),
+                }
+                Request::Predict(PredictRequest {
+                    anchor: inst("anchor")?,
+                    target: inst("target")?,
+                    anchor_latency_ms: j.req_f64("anchor_latency_ms")?,
+                    profile,
+                })
+            }
+            "predict_batch_size" => Request::PredictBatchSize {
+                instance: inst("instance")?,
+                batch: j.req_usize("batch")?,
+                t_min: j.req_f64("t_min")?,
+                t_max: j.req_f64("t_max")?,
+            },
+            "predict_pixel_size" => Request::PredictPixelSize {
+                instance: inst("instance")?,
+                pixels: j.req_usize("pixels")?,
+                t_min: j.req_f64("t_min")?,
+                t_max: j.req_f64("t_max")?,
+            },
+            other => anyhow::bail!("unknown op `{other}`"),
+        })
+    }
+}
+
+/// Service response.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok(Json),
+    Err(String),
+}
+
+impl Response {
+    pub fn ok_obj(f: impl FnOnce(&mut Json)) -> Response {
+        let mut o = Json::obj();
+        o.set("ok", Json::Bool(true));
+        f(&mut o);
+        Response::Ok(o)
+    }
+
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ok(j) => j.to_string(),
+            Response::Err(msg) => {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(false));
+                o.set("error", Json::Str(msg.clone()));
+                o.to_string()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_predict() {
+        let line = r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":42.5,"profile":{"Conv2D":286,"Relu":26}}"#;
+        let Request::Predict(p) = Request::parse(line).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert_eq!(p.anchor, Instance::G4dn);
+        assert_eq!(p.target, Instance::P3);
+        assert_eq!(p.profile["Conv2D"], 286.0);
+    }
+
+    #[test]
+    fn parse_rejects_bad_ops() {
+        assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"op":"predict","anchor":"zzz","target":"p3","anchor_latency_ms":1,"profile":{}}"#).is_err());
+    }
+
+    #[test]
+    fn response_lines() {
+        let r = Response::ok_obj(|o| {
+            o.set("latency_ms", crate::util::Json::Num(12.5));
+        });
+        assert!(r.to_line().contains("\"ok\":true"));
+        let e = Response::Err("boom".into());
+        assert!(e.to_line().contains("\"ok\":false"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Request router: parses a protocol line, answers cheap queries inline,
+//! and forwards prediction work to the [`Batcher`] engine.
+
+use crate::coordinator::batcher::{Batcher, Job};
+use std::sync::atomic::Ordering;
+use crate::coordinator::protocol::{Request, Response};
+use crate::gpu::Instance;
+use crate::util::Json;
+use std::sync::mpsc::channel;
+
+/// Handle one request line; blocking (waits for the engine when needed).
+pub fn route(batcher: &Batcher, line: &str) -> Response {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return Response::Err(format!("bad request: {e:#}")),
+    };
+    match req {
+        Request::Health => Response::ok_obj(|o| {
+            o.set("status", Json::Str("healthy".into()));
+        }),
+        Request::Stats => {
+            let s = &batcher.stats;
+            let requests = s.requests.load(Ordering::Relaxed);
+            let batches = s.batches.load(Ordering::Relaxed);
+            let batched = s.batched_requests.load(Ordering::Relaxed);
+            Response::ok_obj(|o| {
+                o.set("requests", Json::Num(requests as f64));
+                o.set("artifact_batches", Json::Num(batches as f64));
+                o.set(
+                    "avg_batch_fill",
+                    Json::Num(if batches > 0 {
+                        batched as f64 / batches as f64
+                    } else {
+                        0.0
+                    }),
+                );
+            })
+        }
+        Request::Instances => Response::ok_obj(|o| {
+            o.set(
+                "instances",
+                Json::Arr(
+                    Instance::ALL
+                        .iter()
+                        .map(|i| {
+                            let mut e = Json::obj();
+                            e.set("key", Json::Str(i.key().into()));
+                            e.set("gpu", Json::Str(i.spec().gpu_model.into()));
+                            e.set("price_hr", Json::Num(i.spec().price_hr));
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        }),
+        Request::Predict(p) => {
+            let (tx, rx) = channel();
+            batcher.submit(Job::Predict(p, tx));
+            rx.recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into()))
+        }
+        Request::PredictBatchSize {
+            instance,
+            batch,
+            t_min,
+            t_max,
+        } => {
+            let (tx, rx) = channel();
+            batcher.submit(Job::BatchSize {
+                instance,
+                batch,
+                t_min,
+                t_max,
+                reply: tx,
+            });
+            rx.recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into()))
+        }
+        Request::PredictPixelSize {
+            instance,
+            pixels,
+            t_min,
+            t_max,
+        } => {
+            let (tx, rx) = channel();
+            batcher.submit(Job::PixelSize {
+                instance,
+                pixels,
+                t_min,
+                t_max,
+                reply: tx,
+            });
+            rx.recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into()))
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! TCP server: accept loop + one thread per connection, newline-delimited
+//! JSON in/out. Connections share the [`Batcher`] engine handle.
+
+use crate::coordinator::batcher::{Batcher, BatcherStats};
+use crate::coordinator::router::route;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Running server handle: local address + shutdown flag.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    /// Engine statistics (requests served, artifact batches executed).
+    pub stats: Arc<BatcherStats>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and wait for the accept loop to exit.
+    pub fn stop(mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the service: binds `addr` (use port 0 for ephemeral), spawns the
+/// engine and the accept loop, returns immediately.
+pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    let batcher = Arc::new(Batcher::spawn(artifact_dir, model_dir)?);
+    let stats = batcher.stats.clone();
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let shutdown2 = shutdown.clone();
+
+    let join = std::thread::Builder::new()
+        .name("profet-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if shutdown2.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let b = batcher.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &b);
+                });
+            }
+        })?;
+
+    Ok(ServerHandle {
+        addr: local,
+        stats,
+        shutdown,
+        join: Some(join),
+    })
+}
+
+fn handle_conn(stream: TcpStream, batcher: &Batcher) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = route(batcher, &line);
+        writer.write_all(resp.to_line().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,267 @@
+//! Dataset container: the offline experiment corpus (Sec III / Fig 6 upper
+//! half) — every executable workload run on every instance, with the
+//! anchor-side profile and the target-side clean latency.
+
+use crate::gpu::Instance;
+use crate::sim::{self, Workload};
+use crate::util::{Json, Rng64};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One workload executed on one instance.
+#[derive(Debug, Clone)]
+pub struct RunData {
+    /// Aggregated (op name → ms) profile, profiling enabled.
+    pub profile: BTreeMap<String, f64>,
+    /// Clean batch latency (profiling off), ms — the ground truth y.
+    pub latency_ms: f64,
+}
+
+/// One workload with its per-instance observations.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub workload: Workload,
+    pub runs: BTreeMap<Instance, RunData>,
+}
+
+/// The full corpus.
+#[derive(Debug, Clone, Default)]
+pub struct Corpus {
+    pub entries: Vec<Entry>,
+}
+
+impl Corpus {
+    /// Generate by running the simulator over every executable workload on
+    /// `instances` (deterministic).
+    ///
+    /// §Perf: builds each workload's op graph ONCE and executes it per
+    /// instance (the enumerate + run_workload path rebuilt the graph per
+    /// instance — ~40% of corpus-generation time on the big graphs).
+    pub fn generate(instances: &[Instance]) -> Corpus {
+        let mut entries = Vec::new();
+        for model in crate::models::ModelId::ALL {
+            for batch in sim::workload::BATCHES {
+                for pixels in sim::workload::PIXELS {
+                    let w = sim::Workload::new(model, batch, pixels);
+                    let Ok(graph) = w.graph() else { continue };
+                    let mut runs = BTreeMap::new();
+                    for &inst in instances {
+                        if !sim::fits_in_memory(&graph, inst.spec()) {
+                            continue;
+                        }
+                        let r = sim::execute(&graph, inst.spec());
+                        runs.insert(
+                            inst,
+                            RunData {
+                                profile: r.profile.aggregated(),
+                                latency_ms: r.batch_latency_ms,
+                            },
+                        );
+                    }
+                    if !runs.is_empty() {
+                        entries.push(Entry { workload: w, runs });
+                    }
+                }
+            }
+        }
+        Corpus { entries }
+    }
+
+    /// Total (workload, instance) observation count.
+    pub fn n_observations(&self) -> usize {
+        self.entries.iter().map(|e| e.runs.len()).sum()
+    }
+
+    /// Distinct op names across all profiles (the feature vocabulary).
+    pub fn vocabulary(&self) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for e in &self.entries {
+            for run in e.runs.values() {
+                for op in run.profile.keys() {
+                    set.insert(op.clone());
+                }
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Vocabulary excluding the given models' entries (leave-out studies).
+    pub fn vocabulary_excluding(&self, exclude: &[crate::models::ModelId]) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for e in &self.entries {
+            if exclude.contains(&e.workload.model) {
+                continue;
+            }
+            for run in e.runs.values() {
+                for op in run.profile.keys() {
+                    set.insert(op.clone());
+                }
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Random train/test split over entries (by workload, so a workload's
+    /// observations never straddle the split). Returns index vectors.
+    pub fn split_random(&self, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..self.entries.len()).collect();
+        let mut rng = Rng64::new(seed);
+        rng.shuffle(&mut idx);
+        let n_test = ((self.entries.len() as f64) * test_frac).round() as usize;
+        let test = idx[..n_test].to_vec();
+        let train = idx[n_test..].to_vec();
+        (train, test)
+    }
+
+    /// Leave-one-model-out split: test = all entries of `model`.
+    pub fn split_by_model(&self, model: crate::models::ModelId) -> (Vec<usize>, Vec<usize>) {
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.workload.model == model {
+                test.push(i);
+            } else {
+                train.push(i);
+            }
+        }
+        (train, test)
+    }
+
+    /// JSON persistence.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("model", Json::Str(e.workload.model.name().to_string()));
+                o.set("batch", Json::Num(e.workload.batch as f64));
+                o.set("pixels", Json::Num(e.workload.pixels as f64));
+                let mut runs = Json::obj();
+                for (inst, run) in &e.runs {
+                    let mut r = Json::obj();
+                    r.set("latency_ms", Json::Num(run.latency_ms));
+                    let mut prof = Json::obj();
+                    for (k, v) in &run.profile {
+                        prof.set(k, Json::Num(*v));
+                    }
+                    r.set("profile", prof);
+                    runs.set(inst.key(), r);
+                }
+                o.set("runs", runs);
+                o
+            })
+            .collect();
+        std::fs::write(path.as_ref(), Json::Arr(entries).to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = Json::parse(&text)?;
+        let arr = j.as_arr().ok_or_else(|| anyhow!("corpus not an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let model = crate::models::ModelId::from_name(e.req_str("model")?)
+                .ok_or_else(|| anyhow!("unknown model"))?;
+            let workload = Workload::new(model, e.req_usize("batch")?, e.req_usize("pixels")?);
+            let mut runs = BTreeMap::new();
+            if let Some(Json::Obj(rmap)) = e.get("runs") {
+                for (k, r) in rmap {
+                    let inst = Instance::from_key(k).ok_or_else(|| anyhow!("instance {k}"))?;
+                    let mut profile = BTreeMap::new();
+                    if let Some(Json::Obj(pmap)) = r.get("profile") {
+                        for (op, v) in pmap {
+                            profile.insert(op.clone(), v.as_f64().unwrap_or(0.0));
+                        }
+                    }
+                    runs.insert(
+                        inst,
+                        RunData {
+                            profile,
+                            latency_ms: r.req_f64("latency_ms")?,
+                        },
+                    );
+                }
+            }
+            entries.push(Entry { workload, runs });
+        }
+        Ok(Corpus { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+
+    fn tiny_corpus() -> Corpus {
+        // only classic models at small sizes to keep tests fast
+        let mut entries = Vec::new();
+        for model in [ModelId::LeNet5, ModelId::MnistCnn] {
+            for batch in [16usize, 32] {
+                let w = Workload::new(model, batch, 32);
+                let mut runs = BTreeMap::new();
+                for inst in [Instance::G3s, Instance::P3] {
+                    let run = sim::run_workload(&w, inst).unwrap();
+                    runs.insert(
+                        inst,
+                        RunData {
+                            profile: run.profile.aggregated(),
+                            latency_ms: run.latency_ms,
+                        },
+                    );
+                }
+                entries.push(Entry { workload: w, runs });
+            }
+        }
+        Corpus { entries }
+    }
+
+    #[test]
+    fn vocabulary_nonempty_and_sorted() {
+        let c = tiny_corpus();
+        let v = c.vocabulary();
+        assert!(v.len() > 10);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(v, sorted);
+        assert!(v.contains(&"Conv2D".to_string()));
+    }
+
+    #[test]
+    fn split_random_partitions() {
+        let c = tiny_corpus();
+        let (train, test) = c.split_random(0.25, 1);
+        assert_eq!(train.len() + test.len(), c.entries.len());
+        assert_eq!(test.len(), 1);
+        // deterministic
+        let (t2, s2) = c.split_random(0.25, 1);
+        assert_eq!(train, t2);
+        assert_eq!(test, s2);
+    }
+
+    #[test]
+    fn split_by_model_isolates() {
+        let c = tiny_corpus();
+        let (train, test) = c.split_by_model(ModelId::LeNet5);
+        assert!(test.iter().all(|&i| c.entries[i].workload.model == ModelId::LeNet5));
+        assert!(train.iter().all(|&i| c.entries[i].workload.model != ModelId::LeNet5));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = tiny_corpus();
+        let path = std::env::temp_dir().join("repro_corpus_test.json");
+        c.save(&path).unwrap();
+        let c2 = Corpus::load(&path).unwrap();
+        assert_eq!(c.entries.len(), c2.entries.len());
+        assert_eq!(c.n_observations(), c2.n_observations());
+        let a = &c.entries[0].runs[&Instance::G3s];
+        let b = &c2.entries[0].runs[&Instance::G3s];
+        assert!((a.latency_ms - b.latency_ms).abs() < 1e-9);
+        assert_eq!(a.profile.len(), b.profile.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

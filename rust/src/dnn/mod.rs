@@ -1,0 +1,203 @@
+//! DNN ensemble member: the rust-side trainer/driver for the AOT-compiled
+//! JAX train step (paper Sec III-C1: 128·64·32·16·1 dense, ReLU, Adam
+//! lr 1e-3, MAPE+RMSE loss).
+//!
+//! Feature preprocessing lives here (log1p on per-op milliseconds, targets
+//! scaled to seconds) so the HLO artifacts stay plain: the same transform
+//! is applied at train and predict time and round-trips through JSON
+//! persistence.
+
+use crate::runtime::{MlpState, Runtime};
+use crate::util::{Json, Rng64};
+use anyhow::{anyhow, Result};
+
+/// Target scale: train in seconds (keeps the RMSE term O(1)).
+const Y_SCALE: f64 = 1000.0;
+
+/// Trained DNN regressor (flat params + the preprocessing contract).
+#[derive(Debug, Clone)]
+pub struct DnnRegressor {
+    pub params: Vec<f32>,
+    pub d_feat: usize,
+    /// Training-loss trace (one entry per epoch) for diagnostics.
+    pub loss_trace: Vec<f64>,
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 60,
+            seed: 0xD99,
+        }
+    }
+}
+
+fn preprocess_x(row: &[f64]) -> Vec<f32> {
+    row.iter().map(|v| (v.max(0.0)).ln_1p() as f32).collect()
+}
+
+impl DnnRegressor {
+    /// Train on rows `x` (feature vectors of width `runtime.meta.d_feat`)
+    /// against latencies `y` (ms), driving the HLO train-step artifact.
+    pub fn fit(rt: &Runtime, x: &[Vec<f64>], y: &[f64], cfg: TrainConfig) -> Result<DnnRegressor> {
+        let meta = &rt.meta;
+        anyhow::ensure!(!x.is_empty() && x.len() == y.len(), "bad shapes");
+        anyhow::ensure!(
+            x.iter().all(|r| r.len() == meta.d_feat),
+            "feature width != artifact d_feat {}",
+            meta.d_feat
+        );
+        let xs: Vec<Vec<f32>> = x.iter().map(|r| preprocess_x(r)).collect();
+        let ys: Vec<f32> = y.iter().map(|v| (v / Y_SCALE) as f32).collect();
+
+        let mut state = MlpState::init(meta.d_feat, cfg.seed);
+        let mut rng = Rng64::new(cfg.seed ^ 0xABCD);
+        let n = xs.len();
+        let b = meta.b_train;
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut xbuf = vec![0f32; b * meta.d_feat];
+        let mut ybuf = vec![0f32; b];
+        let mut loss_trace = Vec::with_capacity(cfg.epochs);
+
+        for _epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0;
+            let mut steps = 0usize;
+            for chunk in order.chunks(b) {
+                // pad short tails by repeating earlier rows (keeps the
+                // fixed artifact shape; slight oversampling is harmless)
+                for (slot, &src) in chunk.iter().chain(order.iter()).take(b).enumerate() {
+                    xbuf[slot * meta.d_feat..(slot + 1) * meta.d_feat]
+                        .copy_from_slice(&xs[src]);
+                    ybuf[slot] = ys[src];
+                }
+                let loss = rt.train_step(&mut state, &xbuf, &ybuf)?;
+                anyhow::ensure!(loss.is_finite(), "diverged (loss={loss})");
+                epoch_loss += loss as f64;
+                steps += 1;
+            }
+            loss_trace.push(epoch_loss / steps.max(1) as f64);
+        }
+
+        Ok(DnnRegressor {
+            params: state.params,
+            d_feat: meta.d_feat,
+            loss_trace,
+        })
+    }
+
+    /// Predict latencies (ms) for feature rows, chunked through the fixed
+    /// `b_pred` forward artifact.
+    pub fn predict(&self, rt: &Runtime, x: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let meta = &rt.meta;
+        anyhow::ensure!(self.d_feat == meta.d_feat, "artifact mismatch");
+        let b = meta.b_pred;
+        let mut out = Vec::with_capacity(x.len());
+        let mut buf = vec![0f32; b * meta.d_feat];
+        for chunk in x.chunks(b) {
+            for (slot, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() == meta.d_feat, "row width");
+                let p = preprocess_x(row);
+                buf[slot * meta.d_feat..(slot + 1) * meta.d_feat].copy_from_slice(&p);
+            }
+            // zero any tail slots
+            for slot in chunk.len()..b {
+                buf[slot * meta.d_feat..(slot + 1) * meta.d_feat].fill(0.0);
+            }
+            let yhat = rt.mlp_forward(&self.params, &buf)?;
+            out.extend(
+                yhat[..chunk.len()]
+                    .iter()
+                    .map(|v| (*v as f64) * Y_SCALE),
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn predict_one(&self, rt: &Runtime, x: &[f64]) -> Result<f64> {
+        Ok(self.predict(rt, std::slice::from_ref(&x.to_vec()))?[0])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "params",
+            Json::from_f64s(&self.params.iter().map(|p| *p as f64).collect::<Vec<_>>()),
+        );
+        o.set("d_feat", Json::Num(self.d_feat as f64));
+        o.set("loss_trace", Json::from_f64s(&self.loss_trace));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<DnnRegressor> {
+        Ok(DnnRegressor {
+            params: j
+                .get("params")
+                .ok_or_else(|| anyhow!("params"))?
+                .to_f64s()?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+            d_feat: j.req_usize("d_feat")?,
+            loss_trace: j
+                .get("loss_trace")
+                .map(|t| t.to_f64s())
+                .transpose()?
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime;
+
+    /// End-to-end: the HLO-driven trainer learns a synthetic latency-like
+    /// function. (Integration-grade test; needs `make artifacts`.)
+    #[test]
+    fn fit_and_predict_synthetic() {
+        let rt = runtime::load_default().expect("make artifacts first");
+        let d = rt.meta.d_feat;
+        let mut rng = Rng64::new(77);
+        // synthetic "profiles": positive ms values; target = weighted sum
+        let w: Vec<f64> = (0..d).map(|_| rng.range(0.5, 2.0)).collect();
+        let make = |rng: &mut Rng64| -> (Vec<f64>, f64) {
+            let x: Vec<f64> = (0..d).map(|_| rng.range(0.0, 50.0)).collect();
+            let y: f64 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + 20.0;
+            (x, y)
+        };
+        let (xs, ys): (Vec<_>, Vec<_>) = (0..256).map(|_| make(&mut rng)).unzip();
+        let model = DnnRegressor::fit(
+            &rt,
+            &xs,
+            &ys,
+            TrainConfig {
+                epochs: 40,
+                seed: 1,
+            },
+        )
+        .unwrap();
+        // loss decreased
+        assert!(model.loss_trace.last().unwrap() < &(model.loss_trace[0] * 0.7));
+        // holdout MAPE sane (< 40% on this easy function)
+        let (xt, yt): (Vec<_>, Vec<_>) = (0..64).map(|_| make(&mut rng)).unzip();
+        let pred = model.predict(&rt, &xt).unwrap();
+        let mape = crate::ml::metrics::mape(&yt, &pred);
+        assert!(mape < 40.0, "holdout mape {mape}");
+        // persistence preserves predictions
+        let j = Json::parse(&model.to_json().to_string()).unwrap();
+        let model2 = DnnRegressor::from_json(&j).unwrap();
+        let pred2 = model2.predict(&rt, &xt).unwrap();
+        for (a, b) in pred.iter().zip(&pred2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Shared evaluation context: the corpus, the main trained PROFET system,
+//! and the train/test split reused across experiments.
+
+use crate::data::Corpus;
+use crate::gpu::Instance;
+use crate::predictor::{Profet, TrainOptions};
+use crate::runtime::{self, Runtime};
+use anyhow::Result;
+
+/// Evaluation split seed (fixed for reproducibility of the whole paper
+/// reproduction; see EXPERIMENTS.md).
+pub const SPLIT_SEED: u64 = 20220707;
+
+/// Holds everything the experiments reuse. Heavy pieces (the main PROFET
+/// training) are built lazily on first use.
+pub struct Ctx {
+    pub rt: Runtime,
+    /// Corpus over all six instances (core experiments filter to CORE).
+    pub corpus: Corpus,
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+    pub(crate) profet: Option<Profet>,
+    /// Reduced training effort (tests / quick runs): fewer trees + epochs.
+    pub fast: bool,
+}
+
+impl Ctx {
+    /// Build the context: generate the corpus and the 80/20 split.
+    pub fn build() -> Result<Ctx> {
+        let rt = runtime::load_default()?;
+        let corpus = Corpus::generate(&Instance::ALL);
+        let (train_idx, test_idx) = corpus.split_random(0.2, SPLIT_SEED);
+        let fast = std::env::var("REPRO_FAST").is_ok();
+        Ok(Ctx {
+            rt,
+            corpus,
+            train_idx,
+            test_idx,
+            profet: None,
+            fast,
+        })
+    }
+
+    /// Training options honouring fast mode.
+    pub fn train_opts(&self) -> TrainOptions {
+        let mut o = TrainOptions::default();
+        if self.fast {
+            o.n_trees = 25;
+            o.dnn_epochs = 15;
+        }
+        o
+    }
+
+    /// The main PROFET system: anchors/targets = the four core instances,
+    /// clustering on, order-2 polynomials, trained on the 80% split.
+    pub fn profet(&mut self) -> Result<&Profet> {
+        if self.profet.is_none() {
+            let opts = self.train_opts();
+            let p = Profet::train(&self.rt, &self.corpus, &self.train_idx, &opts)?;
+            self.profet = Some(p);
+        }
+        Ok(self.profet.as_ref().unwrap())
+    }
+}

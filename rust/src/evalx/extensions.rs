@@ -1,0 +1,239 @@
+//! Sec VII (Discussion) extensions, implemented rather than deferred:
+//! multi-GPU latency prediction via static multipliers, SDK-version
+//! sensitivity, and non-CNN (transformer) prediction.
+
+use super::{check, Ctx};
+use crate::gpu::Instance;
+use crate::ml::metrics;
+use crate::models::ModelId;
+use crate::predictor::{Profet, TrainOptions};
+use crate::sim::{self, multigpu, SdkVersion, Workload};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Multi-GPU: PROFET 1-GPU prediction x Hafeez static multiplier vs the
+/// simulated multi-GPU ground truth.
+pub fn ext_multigpu(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from(
+        "== Extension (Sec VII): multi-GPU prediction via static multiplier ==\n",
+    );
+    // calibration models measure the per-(instance, N) multiplier;
+    // evaluation models are disjoint.
+    let calibration: Vec<(ModelId, usize, usize)> = vec![
+        (ModelId::ResNet18, 128, 64),
+        (ModelId::Vgg11, 128, 64),
+        (ModelId::MobileNetV2, 128, 64),
+        (ModelId::Cifar10Cnn, 128, 64),
+    ];
+    let eval_models = [ModelId::ResNet50, ModelId::Vgg16, ModelId::InceptionV3];
+    let anchor = Instance::G4dn;
+
+    let mut all_apes = Vec::new();
+    for target in [Instance::P3, Instance::G3s] {
+        for n in [2usize, 4] {
+            let Some(mult) = multigpu::static_multiplier(target, n, &calibration) else {
+                continue;
+            };
+            let mut apes = Vec::new();
+            for m in eval_models {
+                for p in [64usize, 128] {
+                    let global_batch = 128usize;
+                    let Some(truth) = multigpu::multi_gpu_latency(m, global_batch, p, target, n)
+                    else {
+                        continue;
+                    };
+                    // PROFET predicts the 1-GPU latency from an anchor profile
+                    let w1 = Workload::new(m, global_batch, p);
+                    let Some(run_a) = sim::run_workload(&w1, anchor) else {
+                        continue;
+                    };
+                    let (p1, _) = profet.predict_cross(
+                        &ctx.rt,
+                        anchor,
+                        target,
+                        &run_a.profile.aggregated(),
+                        run_a.latency_ms,
+                    )?;
+                    let pred = p1 * mult;
+                    apes.push(100.0 * (pred - truth).abs() / truth);
+                }
+            }
+            let mape = crate::util::mean(&apes);
+            all_apes.push(mape);
+            let _ = writeln!(
+                out,
+                "  {:5} x{n} GPUs  multiplier={mult:5.3}  MAPE={mape:6.2}%  (n={})",
+                target.key(),
+                apes.len()
+            );
+        }
+    }
+    // the static multiplier is deliberately coarse (one scalar per
+    // (instance, N)); Hafeez et al. report it works because scaling ratios
+    // are "more static" than cross-instance behaviour — under 40% MAPE
+    // without ever running the eval models on multiple GPUs.
+    out.push_str(&check(
+        "static-multiplier multi-GPU prediction lands under 40% MAPE",
+        all_apes.iter().all(|&m| m < 40.0),
+    ));
+    Ok(out)
+}
+
+/// SDK-version sensitivity: models trained on TF2.3 degrade on TF2.7
+/// measurements; recalibrating on the new stack recovers accuracy.
+pub fn ext_sdk(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet23 = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Extension (Sec VII): SDK version sensitivity ==\n");
+    let anchor = Instance::G4dn;
+    let target = Instance::P3;
+
+    // evaluate the TF2.3-trained model against both stacks
+    let mut mape_same = Vec::new(); // TF2.3 profile -> TF2.3 truth
+    let mut mape_skew = Vec::new(); // TF2.7 profile -> TF2.7 truth, TF2.3 model
+    let test_idx = ctx.test_idx.clone();
+    for &i in &test_idx {
+        let e = &ctx.corpus.entries[i];
+        let w = e.workload;
+        let (Some(a23), Some(t23)) = (e.runs.get(&anchor), e.runs.get(&target)) else {
+            continue;
+        };
+        let (p, _) = profet23.predict_cross(&ctx.rt, anchor, target, &a23.profile, a23.latency_ms)?;
+        mape_same.push(100.0 * (p - t23.latency_ms).abs() / t23.latency_ms);
+
+        let (Some(a27), Some(t27)) = (
+            sim::workload::run_workload_sdk(&w, anchor, SdkVersion::Tf27),
+            sim::workload::run_workload_sdk(&w, target, SdkVersion::Tf27),
+        ) else {
+            continue;
+        };
+        let (p, _) = profet23.predict_cross(
+            &ctx.rt,
+            anchor,
+            target,
+            &a27.profile.aggregated(),
+            a27.latency_ms,
+        )?;
+        mape_skew.push(100.0 * (p - t27.latency_ms).abs() / t27.latency_ms);
+    }
+    let same = crate::util::mean(&mape_same);
+    let skew = crate::util::mean(&mape_skew);
+    let _ = writeln!(out, "  TF2.3 model on TF2.3 measurements: MAPE={same:6.2}%");
+    let _ = writeln!(out, "  TF2.3 model on TF2.7 measurements: MAPE={skew:6.2}%");
+
+    // recalibrate: retrain (single anchor-target pair, fast) on a TF2.7
+    // corpus and re-evaluate.
+    let mut corpus27 = crate::data::Corpus::default();
+    for e in &ctx.corpus.entries {
+        let w = e.workload;
+        let mut runs = std::collections::BTreeMap::new();
+        for inst in [anchor, target] {
+            if let Some(r) = sim::workload::run_workload_sdk(&w, inst, SdkVersion::Tf27) {
+                runs.insert(
+                    inst,
+                    crate::data::RunData {
+                        profile: r.profile.aggregated(),
+                        latency_ms: r.latency_ms,
+                    },
+                );
+            }
+        }
+        if !runs.is_empty() {
+            corpus27.entries.push(crate::data::Entry { workload: w, runs });
+        }
+    }
+    let (train27, test27) = corpus27.split_random(0.2, super::SPLIT_SEED);
+    let opts = TrainOptions {
+        anchors: vec![anchor],
+        targets: vec![target],
+        n_trees: if ctx.fast { 25 } else { 60 },
+        dnn_epochs: if ctx.fast { 12 } else { 30 },
+        ..Default::default()
+    };
+    let profet27 = Profet::train(&ctx.rt, &corpus27, &train27, &opts)?;
+    let mut truth = Vec::new();
+    let mut pred = Vec::new();
+    for &i in &test27 {
+        let e = &corpus27.entries[i];
+        let (Some(a), Some(t)) = (e.runs.get(&anchor), e.runs.get(&target)) else {
+            continue;
+        };
+        let (p, _) = profet27.predict_cross(&ctx.rt, anchor, target, &a.profile, a.latency_ms)?;
+        truth.push(t.latency_ms);
+        pred.push(p);
+    }
+    let recal = metrics::mape(&truth, &pred);
+    let _ = writeln!(out, "  recalibrated on TF2.7:             MAPE={recal:6.2}%");
+    out.push_str(&check(
+        "SDK skew degrades accuracy (the Sec VII caveat)",
+        skew > same * 1.15,
+    ));
+    out.push_str(&check(
+        "recalibration on the new SDK recovers accuracy",
+        recal < skew * 0.8,
+    ));
+    Ok(out)
+}
+
+/// Non-CNN (transformer) prediction with the CNN-trained system.
+pub fn ext_transformer(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Extension (Sec VII): transformer workloads, CNN-trained model ==\n");
+    let anchor = Instance::G4dn;
+
+    let mut apes = Vec::new();
+    for model in ModelId::EXTENDED {
+        for seq in [64usize, 128, 256] {
+            for batch in [16usize, 32] {
+                let w = Workload::new(model, batch, seq);
+                let Some(run_a) = sim::run_workload(&w, anchor) else {
+                    continue;
+                };
+                for target in [Instance::P3, Instance::P2] {
+                    let Some(run_t) = sim::run_workload(&w, target) else {
+                        continue;
+                    };
+                    let (p, _) = profet.predict_cross(
+                        &ctx.rt,
+                        anchor,
+                        target,
+                        &run_a.profile.aggregated(),
+                        run_a.latency_ms,
+                    )?;
+                    apes.push(100.0 * (p - run_t.latency_ms).abs() / run_t.latency_ms);
+                }
+            }
+        }
+    }
+    let tf_mape = crate::util::mean(&apes);
+
+    // reference: the CNN test-set MAPE of the same system
+    let test_idx = ctx.test_idx.clone();
+    let preds = super::figures::collect_member_preds(
+        ctx,
+        profet,
+        &[anchor],
+        &[Instance::P3, Instance::P2],
+        &test_idx,
+    )?;
+    let cnn_mape = metrics::mape(&preds.truth, &preds.median);
+
+    let _ = writeln!(out, "  CNN test workloads:        MAPE={cnn_mape:6.2}%");
+    let _ = writeln!(
+        out,
+        "  transformer workloads:     MAPE={tf_mape:6.2}%  (n={})",
+        apes.len()
+    );
+    out.push_str(&check(
+        "CNN-trained PROFET degrades on non-CNN models (the Sec VII caveat)",
+        tf_mape > cnn_mape * 1.5,
+    ));
+    out.push_str(&check(
+        "but clustering keeps it better than chance (< 100% MAPE)",
+        tf_mape < 100.0,
+    ));
+    Ok(out)
+}

@@ -1,0 +1,536 @@
+//! Figure reproductions (Fig 2, 9, 10, 11, 12, 13).
+
+use super::{check, Ctx};
+use crate::data::Corpus;
+use crate::gpu::Instance;
+use crate::ml::metrics;
+use crate::models::ModelId;
+use crate::predictor::{BatchPixelModel, Member, Profet};
+use crate::sim::{self, Workload};
+use crate::util::quantile;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+fn run_latency(m: ModelId, b: usize, p: usize, g: Instance) -> f64 {
+    sim::run_workload(&Workload::new(m, b, p), g)
+        .map(|r| r.latency_ms)
+        .unwrap_or(f64::NAN)
+}
+
+/// Fig 2a: LeNet5 / AlexNet latency + relative cost across instances.
+pub fn fig2a() -> String {
+    let mut out = String::from("== Fig 2a: latency & cost across instances (32px, b=16) ==\n");
+    let mut best: BTreeMap<ModelId, (Instance, f64)> = BTreeMap::new();
+    for model in [ModelId::LeNet5, ModelId::AlexNet] {
+        let lats: Vec<(Instance, f64)> = Instance::CORE
+            .iter()
+            .map(|&g| (g, run_latency(model, 16, 32, g)))
+            .collect();
+        let lmin = lats.iter().map(|x| x.1).fold(f64::INFINITY, f64::min);
+        let costs: Vec<f64> = lats.iter().map(|(g, l)| l * g.spec().price_hr).collect();
+        let cmin = costs.iter().copied().fold(f64::INFINITY, f64::min);
+        let _ = writeln!(out, "  {model}:");
+        for ((g, l), c) in lats.iter().zip(&costs) {
+            let _ = writeln!(
+                out,
+                "    {:5} latency={:8.2} ms  norm={:5.2}  rel-cost={:5.2}",
+                g.key(),
+                l,
+                l / lmin,
+                c / cmin
+            );
+        }
+        let fastest = lats
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        best.insert(model, *fastest);
+    }
+    out.push_str(&check("g4dn fastest for LeNet5", best[&ModelId::LeNet5].0 == Instance::G4dn));
+    out.push_str(&check("p3 fastest for AlexNet", best[&ModelId::AlexNet].0 == Instance::P3));
+    let alex: Vec<f64> = Instance::CORE
+        .iter()
+        .map(|&g| run_latency(ModelId::AlexNet, 16, 32, g))
+        .collect();
+    let spread = alex.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+        / alex.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    out.push_str(&check(
+        "AlexNet best/worst spread larger than LeNet5's",
+        {
+            let le: Vec<f64> = Instance::CORE
+                .iter()
+                .map(|&g| run_latency(ModelId::LeNet5, 16, 32, g))
+                .collect();
+            let le_spread = le.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+                / le.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+            spread > le_spread
+        },
+    ));
+    out
+}
+
+/// Fig 2b: ResNet50 at 32² vs 128² pixels.
+pub fn fig2b() -> String {
+    let mut out = String::from("== Fig 2b: ResNet50 latency & cost, 32px vs 128px (b=16) ==\n");
+    let mut winners = Vec::new();
+    for px in [32usize, 128] {
+        let _ = writeln!(out, "  {px}x{px}:");
+        let lats: Vec<(Instance, f64)> = Instance::CORE
+            .iter()
+            .map(|&g| (g, run_latency(ModelId::ResNet50, 16, px, g)))
+            .collect();
+        for (g, l) in &lats {
+            let _ = writeln!(
+                out,
+                "    {:5} latency={:8.2} ms  cost-unit={:8.2}",
+                g.key(),
+                l,
+                l * g.spec().price_hr
+            );
+        }
+        winners.push(
+            lats.iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0,
+        );
+    }
+    out.push_str(&check(
+        "p3 shortest latency at both pixel sizes",
+        winners.iter().all(|&w| w == Instance::P3),
+    ));
+    let gap32 = run_latency(ModelId::ResNet50, 16, 32, Instance::G4dn)
+        / run_latency(ModelId::ResNet50, 16, 32, Instance::P3);
+    let gap128 = run_latency(ModelId::ResNet50, 16, 128, Instance::G4dn)
+        / run_latency(ModelId::ResNet50, 16, 128, Instance::P3);
+    out.push_str(&check(
+        "p3/g4dn gap grows with image size",
+        gap128 > gap32,
+    ));
+    let cost_g4 = run_latency(ModelId::ResNet50, 16, 128, Instance::G4dn)
+        * Instance::G4dn.spec().price_hr;
+    let cost_p3 =
+        run_latency(ModelId::ResNet50, 16, 128, Instance::P3) * Instance::P3.spec().price_hr;
+    out.push_str(&check("g4dn more cost-efficient than p3", cost_g4 < cost_p3));
+    out
+}
+
+/// Fig 2c: batch-latency ratio quantiles per instance.
+pub fn fig2c() -> String {
+    let mut out =
+        String::from("== Fig 2c: latency ratio vs batch size (ratio to b=16; quantiles) ==\n");
+    let mut medians_at_256: BTreeMap<Instance, f64> = BTreeMap::new();
+    for g in Instance::CORE {
+        let _ = writeln!(out, "  {}:", g.key());
+        for b in [32usize, 64, 128, 256] {
+            let mut ratios = Vec::new();
+            for m in ModelId::ALL {
+                for p in crate::sim::workload::PIXELS {
+                    let w16 = sim::run_workload(&Workload::new(m, 16, p), g);
+                    let wb = sim::run_workload(&Workload::new(m, b, p), g);
+                    if let (Some(a), Some(c)) = (w16, wb) {
+                        ratios.push(c.latency_ms / a.latency_ms);
+                    }
+                }
+            }
+            let _ = writeln!(
+                out,
+                "    b={b:3}  min={:5.2} q25={:5.2} med={:5.2} q75={:5.2} max={:6.2}  (n={})",
+                quantile(&ratios, 0.0),
+                quantile(&ratios, 0.25),
+                quantile(&ratios, 0.5),
+                quantile(&ratios, 0.75),
+                quantile(&ratios, 1.0),
+                ratios.len()
+            );
+            if b == 256 {
+                medians_at_256.insert(g, quantile(&ratios, 0.5));
+            }
+        }
+    }
+    out.push_str(&check(
+        "relationship non-linear: median ratio at b=256 well below 16x everywhere",
+        medians_at_256.values().all(|&r| r < 14.0),
+    ));
+    out.push_str(&check(
+        "p3 shows the lowest latency increase with batch size",
+        medians_at_256[&Instance::P3]
+            <= *medians_at_256
+                .iter()
+                .filter(|(g, _)| **g != Instance::P3)
+                .map(|(_, v)| v)
+                .min_by(|a, b| a.partial_cmp(b).unwrap())
+                .unwrap(),
+    ));
+    out
+}
+
+/// Per-(anchor,target) test-set predictions for every ensemble member.
+pub(crate) struct MemberPreds {
+    pub truth: Vec<f64>,
+    pub linear: Vec<f64>,
+    pub forest: Vec<f64>,
+    pub dnn: Vec<f64>,
+    pub median: Vec<f64>,
+    pub picks: BTreeMap<&'static str, usize>,
+}
+
+pub(crate) fn collect_member_preds(
+    ctx: &Ctx,
+    profet: &Profet,
+    anchors: &[Instance],
+    targets: &[Instance],
+    test_idx: &[usize],
+) -> Result<MemberPreds> {
+    let mut out = MemberPreds {
+        truth: vec![],
+        linear: vec![],
+        forest: vec![],
+        dnn: vec![],
+        median: vec![],
+        picks: BTreeMap::new(),
+    };
+    for &a in anchors {
+        for &t in targets {
+            if a == t {
+                continue;
+            }
+            let Some(model) = profet.cross.get(&(a, t)) else {
+                continue;
+            };
+            // batch the DNN forward for the whole test slice
+            let mut feats = Vec::new();
+            let mut anchor_lat = Vec::new();
+            let mut truth = Vec::new();
+            for &i in test_idx {
+                let e = &ctx.corpus.entries[i];
+                let (Some(ar), Some(tr)) = (e.runs.get(&a), e.runs.get(&t)) else {
+                    continue;
+                };
+                feats.push(profet.feature_space.vectorize(&ar.profile));
+                anchor_lat.push(ar.latency_ms);
+                truth.push(tr.latency_ms);
+            }
+            if feats.is_empty() {
+                continue;
+            }
+            let dnn = model.dnn.predict(&ctx.rt, &feats)?;
+            for (k, x) in feats.iter().enumerate() {
+                let l = model.linear.predict_one(&[anchor_lat[k]]);
+                let f = model.forest.predict_one(x);
+                let d = dnn[k];
+                let mut v = [(l, Member::Linear), (f, Member::Forest), (d, Member::Dnn)];
+                v.sort_by(|p, q| p.0.partial_cmp(&q.0).unwrap());
+                out.truth.push(truth[k]);
+                out.linear.push(l);
+                out.forest.push(f);
+                out.dnn.push(d);
+                out.median.push(v[1].0);
+                *out.picks.entry(v[1].1.name()).or_insert(0) += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Fig 9: true vs predicted scatter per anchor instance.
+pub fn fig9(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Fig 9: true vs predicted latency per anchor (test split) ==\n");
+    let test_idx = ctx.test_idx.clone();
+    for a in Instance::CORE {
+        let preds = collect_member_preds(ctx, profet, &[a], &Instance::CORE, &test_idx)?;
+        let s = metrics::scores(&preds.truth, &preds.median);
+        let _ = writeln!(
+            out,
+            "  anchor {:5}  n={:4}  MAPE={:7.3}%  RMSE={:8.2}  R2={:.4}",
+            a.key(),
+            preds.truth.len(),
+            s.mape,
+            s.rmse,
+            s.r2
+        );
+        // a few scatter samples (true, pred)
+        let step = (preds.truth.len() / 5).max(1);
+        for k in (0..preds.truth.len()).step_by(step).take(5) {
+            let _ = writeln!(
+                out,
+                "      sample true={:9.2} ms  pred={:9.2} ms",
+                preds.truth[k], preds.median[k]
+            );
+        }
+        out.push_str(&check(
+            &format!("anchor {} R2 > 0.9 (paper: points hug y=x)", a.key()),
+            s.r2 > 0.9,
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig 10: median ensemble vs the single models.
+pub fn fig10(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let test_idx = ctx.test_idx.clone();
+    let preds = collect_member_preds(
+        ctx,
+        profet,
+        &Instance::CORE,
+        &Instance::CORE,
+        &test_idx,
+    )?;
+    let mut out = String::from("== Fig 10: prediction accuracy by model (all anchor-target pairs) ==\n");
+    let rows = [
+        ("Linear", &preds.linear),
+        ("RandomForest", &preds.forest),
+        ("DNN", &preds.dnn),
+        ("PROFET", &preds.median),
+    ];
+    let mut mapes = BTreeMap::new();
+    for (name, p) in rows {
+        let s = metrics::scores(&preds.truth, p);
+        mapes.insert(name, s.mape);
+        let _ = writeln!(
+            out,
+            "  {name:13} MAPE={:8.4}%  RMSE={:9.3}  R2={:7.4}",
+            s.mape, s.rmse, s.r2
+        );
+    }
+    let total: usize = preds.picks.values().sum();
+    for (name, n) in &preds.picks {
+        let _ = writeln!(
+            out,
+            "  median pick rate: {name:13} {:5.1}%",
+            100.0 * *n as f64 / total as f64
+        );
+    }
+    let best_single = mapes["Linear"].min(mapes["RandomForest"]).min(mapes["DNN"]);
+    out.push_str(&check(
+        "PROFET (median) beats or matches every single model on MAPE",
+        mapes["PROFET"] <= best_single * 1.02,
+    ));
+    out.push_str(&check(
+        "every member is picked a non-trivial fraction of the time",
+        preds.picks.len() == 3 && preds.picks.values().all(|&n| n as f64 / total as f64 > 0.05),
+    ));
+    Ok(out)
+}
+
+/// Group lookup: (instance, model, pixels) -> batch -> corpus entry index.
+fn batch_groups(
+    corpus: &Corpus,
+    instance: Instance,
+) -> BTreeMap<(String, usize), BTreeMap<usize, usize>> {
+    let mut groups: BTreeMap<(String, usize), BTreeMap<usize, usize>> = BTreeMap::new();
+    for (i, e) in corpus.entries.iter().enumerate() {
+        if e.runs.contains_key(&instance) {
+            groups
+                .entry((e.workload.model.name().into(), e.workload.pixels))
+                .or_default()
+                .insert(e.workload.batch, i);
+        }
+    }
+    groups
+}
+
+/// Fig 11: batch-size predictor accuracy with True vs Predict min/max.
+pub fn fig11(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Fig 11: batch-size prediction MAPE (True vs Predict min/max) ==\n");
+    let mut true_mape: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut pred_mape: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+
+    for target in Instance::CORE {
+        let groups = batch_groups(&ctx.corpus, target);
+        for ((_, _), batches) in groups.iter() {
+            let (Some(&i16), Some(&i256)) = (batches.get(&16), batches.get(&256)) else {
+                continue;
+            };
+            let t16 = ctx.corpus.entries[i16].runs[&target].latency_ms;
+            let t256 = ctx.corpus.entries[i256].runs[&target].latency_ms;
+            for b in [32usize, 64, 128] {
+                let Some(&ib) = batches.get(&b) else { continue };
+                let truth = ctx.corpus.entries[ib].runs[&target].latency_ms;
+                // True mode
+                let p = profet.predict_batch_size(target, b, t16, t256)?;
+                true_mape
+                    .entry(b)
+                    .or_default()
+                    .push(100.0 * (p - truth).abs() / truth);
+                // Predict mode: min/max latencies via cross-instance model
+                // from one anchor (rotate anchors for coverage)
+                for anchor in Instance::CORE {
+                    if anchor == target {
+                        continue;
+                    }
+                    let (Some(a16), Some(a256)) = (
+                        ctx.corpus.entries[i16].runs.get(&anchor),
+                        ctx.corpus.entries[i256].runs.get(&anchor),
+                    ) else {
+                        continue;
+                    };
+                    let (pmin, _) = profet.predict_cross(
+                        &ctx.rt,
+                        anchor,
+                        target,
+                        &a16.profile,
+                        a16.latency_ms,
+                    )?;
+                    let (pmax, _) = profet.predict_cross(
+                        &ctx.rt,
+                        anchor,
+                        target,
+                        &a256.profile,
+                        a256.latency_ms,
+                    )?;
+                    let p = profet.predict_batch_size(target, b, pmin, pmax)?;
+                    pred_mape
+                        .entry(b)
+                        .or_default()
+                        .push(100.0 * (p - truth).abs() / truth);
+                    break; // one anchor per (group, target): keeps runtime sane
+                }
+            }
+        }
+    }
+
+    let mut t_all = Vec::new();
+    let mut p_all = Vec::new();
+    for b in [32usize, 64, 128] {
+        let t = crate::util::mean(true_mape.get(&b).unwrap_or(&vec![]));
+        let p = crate::util::mean(pred_mape.get(&b).unwrap_or(&vec![]));
+        let _ = writeln!(out, "  b={b:3}  True-minmax MAPE={t:6.2}%   Predict-minmax MAPE={p:6.2}%");
+        t_all.push(t);
+        p_all.push(p);
+    }
+    let t_avg = crate::util::mean(&t_all);
+    let p_avg = crate::util::mean(&p_all);
+    let _ = writeln!(out, "  avg   True={t_avg:6.2}%  Predict={p_avg:6.2}%");
+    out.push_str(&check("True-minmax more accurate than Predict-minmax", t_avg < p_avg));
+    out.push_str(&check("True-minmax MAPE in single digits", t_avg < 10.0));
+    Ok(out)
+}
+
+/// Fig 12: polynomial order ablation for the batch/pixel model.
+pub fn fig12(ctx: &mut Ctx) -> Result<String> {
+    let mut out = String::from("== Fig 12: order-1 vs order-2 batch polynomial per instance ==\n");
+    let mut order_mape: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let train_idx = ctx.train_idx.clone();
+    for order in [1usize, 2] {
+        let _ = writeln!(out, "  order-{order}:");
+        for g in Instance::CORE {
+            let m = BatchPixelModel::fit(&ctx.corpus, &train_idx, g, order)?;
+            // evaluate on every group's interior batches with true min/max
+            let groups = batch_groups(&ctx.corpus, g);
+            let mut truth = Vec::new();
+            let mut pred = Vec::new();
+            for (_, batches) in groups {
+                let (Some(&i16), Some(&i256)) = (batches.get(&16), batches.get(&256)) else {
+                    continue;
+                };
+                let t16 = ctx.corpus.entries[i16].runs[&g].latency_ms;
+                let t256 = ctx.corpus.entries[i256].runs[&g].latency_ms;
+                for b in [32usize, 64, 128] {
+                    if let Some(&ib) = batches.get(&b) {
+                        truth.push(ctx.corpus.entries[ib].runs[&g].latency_ms);
+                        pred.push(m.predict_batch(b, t16, t256));
+                    }
+                }
+            }
+            let s = metrics::scores(&truth, &pred);
+            order_mape.entry(order).or_default().push(s.mape);
+            let _ = writeln!(
+                out,
+                "    {:5} MAPE={:6.2}%  RMSE={:8.2}  R2={:.4}",
+                g.key(),
+                s.mape,
+                s.rmse,
+                s.r2
+            );
+        }
+    }
+    let m1 = crate::util::mean(&order_mape[&1]);
+    let m2 = crate::util::mean(&order_mape[&2]);
+    let _ = writeln!(out, "  avg MAPE: order-1 {m1:.2}%  order-2 {m2:.2}%");
+    out.push_str(&check("order-2 outperforms order-1", m2 < m1));
+    Ok(out)
+}
+
+/// Fig 13: feature-clustering ablation, leave-one-model-out.
+pub fn fig13(ctx: &mut Ctx) -> Result<String> {
+    let mut out = String::from(
+        "== Fig 13: MAPE with clustering off/on (leave-one-model-out, anchor g4dn) ==\n",
+    );
+    let unique_models = [ModelId::MobileNetV2, ModelId::InceptionV3, ModelId::InceptionResNetV2];
+    let common_models = [ModelId::ResNet34, ModelId::ResNet50, ModelId::Vgg16, ModelId::Vgg19];
+    let mut improvements: BTreeMap<ModelId, f64> = BTreeMap::new();
+
+    for (label, group) in [("(a) unique-op models", &unique_models[..]), ("(b) common-op models", &common_models[..])] {
+        let _ = writeln!(out, "  {label}:");
+        for &model in group {
+            let (train_idx, test_idx) = ctx.corpus.split_by_model(model);
+            let mut mapes = BTreeMap::new();
+            for clustering in [false, true] {
+                let mut opts = ctx.train_opts();
+                opts.anchors = vec![Instance::G4dn];
+                opts.targets = vec![Instance::G3s, Instance::P2, Instance::P3];
+                opts.clustering = clustering;
+                if !ctx.fast {
+                    opts.dnn_epochs = 40; // 2x(models) x leave-one-out: trim
+                }
+                let profet = Profet::train(&ctx.rt, &ctx.corpus, &train_idx, &opts)?;
+                let preds = collect_member_preds(
+                    ctx,
+                    &profet,
+                    &[Instance::G4dn],
+                    &[Instance::G3s, Instance::P2, Instance::P3],
+                    &test_idx,
+                )?;
+                mapes.insert(clustering, metrics::mape(&preds.truth, &preds.median));
+            }
+            let off = mapes[&false];
+            let on = mapes[&true];
+            let improvement = 100.0 * (off - on) / off;
+            improvements.insert(model, improvement);
+            let _ = writeln!(
+                out,
+                "    {:18} clustering-off MAPE={off:7.2}%  on={on:7.2}%  improvement={improvement:+6.1}%",
+                model.name()
+            );
+        }
+    }
+    let uniq_avg = crate::util::mean(
+        &unique_models.iter().map(|m| improvements[m]).collect::<Vec<_>>(),
+    );
+    let common_avg = crate::util::mean(
+        &common_models.iter().map(|m| improvements[m]).collect::<Vec<_>>(),
+    );
+    let _ = writeln!(
+        out,
+        "  avg improvement: unique-op models {uniq_avg:+.1}%, common-op models {common_avg:+.1}%"
+    );
+    out.push_str(&check(
+        "clustering improves unique-op models",
+        uniq_avg > 0.0,
+    ));
+    // Paper floor claim (Sec V-C): "MAPE improves the most with
+    // InceptionV3 which is 29.9% ... at least 8.3%" — on our corpus the
+    // star unique-op model is MobileNetV2 (its Relu6/DepthwiseConv2d ops
+    // vanish entirely from a leave-out vocabulary).
+    out.push_str(&check(
+        "the headline unique-op model gains >= 8.3% from clustering",
+        unique_models.iter().map(|m| improvements[m]).fold(f64::NEG_INFINITY, f64::max) >= 8.3,
+    ));
+    // Note: unlike the paper, our common-op models also benefit broadly —
+    // clustering's dimensionality reduction conditions the RF/DNN members
+    // on this smaller corpus (documented in EXPERIMENTS.md).
+    out.push_str(&check(
+        "clustering does not hurt common-op models badly",
+        common_avg > -10.0,
+    ));
+    Ok(out)
+}
+

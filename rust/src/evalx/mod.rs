@@ -1,0 +1,67 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! evaluation section (the DESIGN.md experiment index).
+//!
+//! Each `fig_*` / `table_*` function returns a plain-text report with the
+//! same rows/series the paper presents; [`run`] dispatches by experiment
+//! id ("fig9", "table4", ..., or "all"). Shape assertions (who wins, where
+//! the crossovers are) are emitted as CHECK lines so `cargo bench` output
+//! documents whether the reproduction holds.
+
+mod ablations;
+mod context;
+mod extensions;
+mod figures;
+mod tables;
+
+pub use context::{Ctx, SPLIT_SEED};
+
+use anyhow::Result;
+
+/// All experiment ids in paper order, then the ablations of the paper's
+/// stated-but-unshown empirical choices, then the Sec VII (Discussion)
+/// extensions.
+pub const ALL_EXPERIMENTS: [&str; 20] = [
+    "table1", "fig2a", "fig2b", "fig2c", "fig9", "fig10", "fig11", "fig12", "fig13", "table2",
+    "table3", "table4", "table5", "table6", "abl_cut", "abl_linkage", "abl_ensemble",
+    "ext_multigpu", "ext_sdk", "ext_transformer",
+];
+
+/// Run one experiment (or "all") and return the textual report.
+pub fn run(exp: &str, ctx: &mut Ctx) -> Result<String> {
+    Ok(match exp {
+        "table1" => tables::table1(),
+        "fig2a" => figures::fig2a(),
+        "fig2b" => figures::fig2b(),
+        "fig2c" => figures::fig2c(),
+        "fig9" => figures::fig9(ctx)?,
+        "fig10" => figures::fig10(ctx)?,
+        "fig11" => figures::fig11(ctx)?,
+        "fig12" => figures::fig12(ctx)?,
+        "fig13" => figures::fig13(ctx)?,
+        "table2" => tables::table2(ctx)?,
+        "table3" => tables::table3(ctx)?,
+        "table4" => tables::table4(ctx)?,
+        "table5" => tables::table5(ctx)?,
+        "table6" => tables::table6(ctx)?,
+        "abl_cut" => ablations::abl_cut_height(ctx)?,
+        "abl_linkage" => ablations::abl_linkage(ctx)?,
+        "abl_ensemble" => ablations::abl_ensemble(ctx)?,
+        "ext_multigpu" => extensions::ext_multigpu(ctx)?,
+        "ext_sdk" => extensions::ext_sdk(ctx)?,
+        "ext_transformer" => extensions::ext_transformer(ctx)?,
+        "all" => {
+            let mut out = String::new();
+            for e in ALL_EXPERIMENTS {
+                out.push_str(&run(e, ctx)?);
+                out.push('\n');
+            }
+            out
+        }
+        other => anyhow::bail!("unknown experiment `{other}` (use one of {ALL_EXPERIMENTS:?} or `all`)"),
+    })
+}
+
+/// Format a CHECK line: a paper-shape assertion evaluated on our numbers.
+pub(crate) fn check(label: &str, ok: bool) -> String {
+    format!("  CHECK [{}] {label}\n", if ok { "PASS" } else { "FAIL" })
+}

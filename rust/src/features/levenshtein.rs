@@ -1,0 +1,106 @@
+//! Levenshtein (edit) distance over operation names (paper Sec III-B1).
+//!
+//! A CPU implementation lives here for the training pipeline and tests;
+//! the serving path can also use the Pallas/HLO batched kernel through
+//! [`crate::runtime::Runtime::levenshtein_strs`] (both are verified to
+//! agree in the integration tests).
+
+/// Classic two-row Wagner-Fischer, O(|a|·|b|) time, O(|b|) space.
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut prev = row[0]; // row[i-1][0]
+        row[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev + usize::from(ca != cb);
+            prev = row[j + 1];
+            row[j + 1] = sub.min(prev + 1).min(row[j] + 1);
+        }
+    }
+    row[b.len()]
+}
+
+/// Symmetric D x D distance matrix over `names` (paper: "Calculating the
+/// Levenshtein distance among all pairs of D features results in a D x D
+/// distance matrix").
+pub fn distance_matrix(names: &[&str]) -> Vec<Vec<f64>> {
+    let d = names.len();
+    let mut m = vec![vec![0.0; d]; d];
+    for i in 0..d {
+        for j in (i + 1)..d {
+            let dist = levenshtein(names[i], names[j]) as f64;
+            m[i][j] = dist;
+            m[j][i] = dist;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_examples() {
+        // Sec III-B1: d(ReLU, ReLU6) = 1; d(ReLU, Conv2D) = 6.
+        assert_eq!(levenshtein("ReLU", "ReLU6"), 1);
+        assert_eq!(levenshtein("ReLU", "Conv2D"), 6);
+        // Sec III-B2: d(MaxPoolGrad, AvgPoolGrad) = 3.
+        assert_eq!(levenshtein("MaxPoolGrad", "AvgPoolGrad"), 3);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+    }
+
+    #[test]
+    fn symmetry_and_triangle_property() {
+        // hand-rolled property test over pseudo-random op-like strings
+        let mut rng = crate::util::Rng64::new(99);
+        let alphabet: Vec<char> = "abcdXY26GradPool".chars().collect();
+        let mut rand_name = |rng: &mut crate::util::Rng64| {
+            let n = rng.below(12);
+            (0..n).map(|_| alphabet[rng.below(alphabet.len())]).collect::<String>()
+        };
+        for _ in 0..200 {
+            let x = rand_name(&mut rng);
+            let y = rand_name(&mut rng);
+            let z = rand_name(&mut rng);
+            let dxy = levenshtein(&x, &y);
+            let dyx = levenshtein(&y, &x);
+            assert_eq!(dxy, dyx, "symmetry {x} {y}");
+            let dyz = levenshtein(&y, &z);
+            let dxz = levenshtein(&x, &z);
+            assert!(dxz <= dxy + dyz, "triangle {x} {y} {z}");
+            // identity of indiscernibles
+            assert_eq!(levenshtein(&x, &x), 0);
+            // length lower bound
+            assert!(dxy >= x.chars().count().abs_diff(y.chars().count()));
+        }
+    }
+
+    #[test]
+    fn matrix_symmetric_zero_diagonal() {
+        let names = ["Relu", "Relu6", "Conv2D", "MatMul"];
+        let m = distance_matrix(&names);
+        for i in 0..4 {
+            assert_eq!(m[i][i], 0.0);
+            for j in 0..4 {
+                assert_eq!(m[i][j], m[j][i]);
+            }
+        }
+        assert_eq!(m[0][1], 1.0);
+    }
+}

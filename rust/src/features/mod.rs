@@ -1,0 +1,18 @@
+//! Feature engineering: operation-name clustering (paper Sec III-B) and
+//! profile → fixed-width feature-vector alignment.
+//!
+//! Pipeline (Fig 5): Levenshtein distance matrix over the op-name
+//! vocabulary → agglomerative clustering with *average* linkage → cut the
+//! dendrogram at height [`CUT_HEIGHT`] (= 6, the paper's empirically best
+//! value) → aggregate each cluster's profiled times by *sum*.
+
+mod cluster;
+mod levenshtein;
+mod space;
+
+pub use cluster::{average_linkage_clusters, linkage_clusters, Dendrogram, Linkage};
+pub use levenshtein::{distance_matrix, levenshtein};
+pub use space::FeatureSpace;
+
+/// The paper's dendrogram cut height (Sec III-B3).
+pub const CUT_HEIGHT: f64 = 6.0;

@@ -1,0 +1,249 @@
+//! FeatureSpace: maps a raw (op name → ms) profile into the fixed-width
+//! clustered feature vector the predictors consume.
+//!
+//! Built once from the training corpus's op vocabulary. At prediction
+//! time, ops unseen during training are attached to their nearest cluster
+//! when within the cut distance (the generalization benefit of Sec III-B —
+//! e.g. a never-seen `Relu6` lands in the `Relu` cluster); with clustering
+//! disabled, unseen ops are *dropped*, which is exactly the accuracy loss
+//! Fig 13a measures.
+
+use super::levenshtein::levenshtein;
+use super::{average_linkage_clusters, CUT_HEIGHT};
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// A fitted feature space.
+#[derive(Debug, Clone)]
+pub struct FeatureSpace {
+    /// Cluster member lists (sorted); feature i = sum of members' times.
+    clusters: Vec<Vec<String>>,
+    /// op name → cluster index.
+    index: BTreeMap<String, usize>,
+    /// Whether name clustering is enabled (ablation switch for Fig 13).
+    clustering: bool,
+    /// Padded output width (the MLP artifact's D).
+    width: usize,
+}
+
+impl FeatureSpace {
+    /// Fit from the training vocabulary. `width` pads/validates the vector
+    /// length (use `ArtifactMeta::d_feat` to match the DNN artifact).
+    pub fn fit(vocabulary: &[&str], clustering: bool, width: usize) -> Result<FeatureSpace> {
+        let mut names: Vec<&str> = vocabulary.to_vec();
+        names.sort();
+        names.dedup();
+        let clusters = if clustering {
+            average_linkage_clusters(&names, CUT_HEIGHT)
+        } else {
+            names.iter().map(|n| vec![n.to_string()]).collect()
+        };
+        Self::from_clusters(clusters, clustering, width)
+    }
+
+    /// Build from an explicit cluster partition (ablation sweeps over cut
+    /// heights / linkage methods reuse this).
+    pub fn from_clusters(
+        clusters: Vec<Vec<String>>,
+        clustering: bool,
+        width: usize,
+    ) -> Result<FeatureSpace> {
+        anyhow::ensure!(
+            clusters.len() <= width,
+            "feature width {} < {} clusters — regenerate artifacts with a larger D_FEAT",
+            width,
+            clusters.len()
+        );
+        let mut index = BTreeMap::new();
+        for (ci, members) in clusters.iter().enumerate() {
+            for m in members {
+                index.insert(m.clone(), ci);
+            }
+        }
+        Ok(FeatureSpace {
+            clusters,
+            index,
+            clustering,
+            width,
+        })
+    }
+
+    /// Number of live (non-padding) features.
+    pub fn n_features(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Padded width.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn clustering_enabled(&self) -> bool {
+        self.clustering
+    }
+
+    /// Cluster label (joined member names) for feature index `i`.
+    pub fn feature_name(&self, i: usize) -> String {
+        self.clusters
+            .get(i)
+            .map(|c| c.join("+"))
+            .unwrap_or_else(|| format!("pad{i}"))
+    }
+
+    /// Map an op name to its feature slot. Unseen names go to the nearest
+    /// cluster by minimum Levenshtein distance when clustering is on and
+    /// the distance is within the attachment threshold; otherwise None
+    /// (dropped — the accuracy loss Fig 13a measures).
+    ///
+    /// The attachment threshold is *relative* for long names:
+    /// `max(CUT_HEIGHT, 0.45 · |op|)`. Short unseen ops behave exactly as
+    /// the paper's worked example (ReLU6 → ReLU at distance 1 < 6), while
+    /// long framework-generated names like
+    /// `DepthwiseConv2dNativeBackpropFilter` (distance 14 from
+    /// `Conv2DBackpropFilter`, but ~45% of the name length) still attach to
+    /// their obvious family instead of losing their — often dominant —
+    /// profiled time.
+    pub fn slot_of(&self, op: &str) -> Option<usize> {
+        if let Some(&i) = self.index.get(op) {
+            return Some(i);
+        }
+        if !self.clustering {
+            return None;
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (ci, members) in self.clusters.iter().enumerate() {
+            // nearest-member distance: a family is as close as its closest
+            // relative (single linkage for attachment).
+            let d = members
+                .iter()
+                .map(|m| levenshtein(op, m) as f64)
+                .fold(f64::INFINITY, f64::min);
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((ci, d));
+            }
+        }
+        let threshold = CUT_HEIGHT.max(0.5 * op.chars().count() as f64);
+        match best {
+            Some((ci, d)) if d < threshold => Some(ci),
+            _ => None,
+        }
+    }
+
+    /// Vectorize an aggregated profile into the padded feature vector
+    /// (cluster members summed — the paper's sum aggregation).
+    pub fn vectorize(&self, profile: &BTreeMap<String, f64>) -> Vec<f64> {
+        let mut v = vec![0.0; self.width];
+        for (op, ms) in profile {
+            if let Some(slot) = self.slot_of(op) {
+                v[slot] += *ms;
+            }
+        }
+        v
+    }
+
+    /// JSON persistence (model registry).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "clusters",
+            Json::Arr(
+                self.clusters
+                    .iter()
+                    .map(|c| Json::Arr(c.iter().map(|s| Json::Str(s.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        o.set("clustering", Json::Bool(self.clustering));
+        o.set("width", Json::Num(self.width as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<FeatureSpace> {
+        let clusters: Vec<Vec<String>> = j
+            .req_arr("clusters")?
+            .iter()
+            .map(|c| {
+                c.as_arr()
+                    .ok_or_else(|| anyhow!("cluster not an array"))
+                    .map(|ms| ms.iter().filter_map(|m| m.as_str().map(String::from)).collect())
+            })
+            .collect::<Result<_>>()?;
+        let mut index = BTreeMap::new();
+        for (ci, members) in clusters.iter().enumerate() {
+            for m in members {
+                index.insert(m.clone(), ci);
+            }
+        }
+        Ok(FeatureSpace {
+            index,
+            clustering: j.get("clustering").and_then(Json::as_bool).unwrap_or(true),
+            width: j.req_usize("width")?,
+            clusters,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn vectorize_sums_cluster_members() {
+        let fs = FeatureSpace::fit(&["Relu", "Relu6", "Conv2D"], true, 8).unwrap();
+        let v = fs.vectorize(&profile(&[("Relu", 10.0), ("Relu6", 5.0), ("Conv2D", 100.0)]));
+        assert_eq!(v.len(), 8);
+        let nonzero: Vec<f64> = v.iter().copied().filter(|x| *x > 0.0).collect();
+        assert_eq!(nonzero.len(), 2);
+        assert!(nonzero.contains(&15.0), "Relu+Relu6 summed");
+        assert!(nonzero.contains(&100.0));
+    }
+
+    #[test]
+    fn unseen_op_maps_to_near_cluster_when_clustering() {
+        // train WITHOUT Relu6 in the vocabulary
+        let fs = FeatureSpace::fit(&["Relu", "Conv2D", "MaxPool"], true, 8).unwrap();
+        let slot = fs.slot_of("Relu6").expect("Relu6 should land near Relu");
+        assert_eq!(slot, fs.slot_of("Relu").unwrap());
+        // a genuinely alien name is dropped
+        assert!(fs.slot_of("CompletelyDifferentOperationName").is_none());
+    }
+
+    #[test]
+    fn unseen_op_dropped_without_clustering() {
+        let fs = FeatureSpace::fit(&["Relu", "Conv2D"], false, 8).unwrap();
+        assert!(fs.slot_of("Relu6").is_none());
+        let v = fs.vectorize(&profile(&[("Relu6", 5.0)]));
+        assert!(v.iter().all(|x| *x == 0.0), "unseen time lost");
+    }
+
+    #[test]
+    fn width_too_small_rejected() {
+        assert!(FeatureSpace::fit(&["a", "bbbbbbbbbbbb", "cccccc!!!", "Conv2D"], false, 2).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let fs = FeatureSpace::fit(crate::ops::VOCABULARY, true, 48).unwrap();
+        let j = fs.to_json();
+        let fs2 = FeatureSpace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(fs.n_features(), fs2.n_features());
+        let p = profile(&[("Conv2D", 50.0), ("Relu", 2.0)]);
+        assert_eq!(fs.vectorize(&p), fs2.vectorize(&p));
+    }
+
+    #[test]
+    fn full_vocabulary_fits_artifact_width() {
+        // The D_FEAT=48 the artifacts were lowered with must accommodate
+        // the clustered vocabulary.
+        let fs = FeatureSpace::fit(crate::ops::VOCABULARY, true, 48).unwrap();
+        assert!(fs.n_features() <= 48, "{} clusters", fs.n_features());
+        // and without clustering (raw ops) it must also fit
+        let raw = FeatureSpace::fit(crate::ops::VOCABULARY, false, 48).unwrap();
+        assert!(raw.n_features() <= 48, "{} raw ops", raw.n_features());
+    }
+}

@@ -1,0 +1,268 @@
+//! GPU cloud instance specifications (paper Table I + the new-GPU study).
+//!
+//! These are the *inputs to the simulator substrate*, not features of the
+//! PROFET predictor — PROFET is deliberately hardware-spec-free (Sec III-C3).
+//! Specs follow the paper's Table I where given and public datasheets for
+//! the fields the paper omits (memory bandwidth, VRAM, tensor cores).
+
+use std::fmt;
+
+/// Cloud instance families used in the paper.
+///
+/// `G3s..P3` are the four training/anchor instances; `G5` (A10) and `Ac1`
+/// (P100, IBM) appear only as *new* target devices in Table VI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Instance {
+    /// AWS g3s.xlarge — NVIDIA Tesla M60 (Maxwell).
+    G3s,
+    /// AWS g4dn.xlarge — NVIDIA T4 (Turing, tensor cores).
+    G4dn,
+    /// AWS p2.xlarge — NVIDIA K80 (Kepler).
+    P2,
+    /// AWS p3.2xlarge — NVIDIA V100 (Volta, tensor cores).
+    P3,
+    /// AWS g5.xlarge — NVIDIA A10G (Ampere, tensor cores). Table VI only.
+    G5,
+    /// IBM AC1 — NVIDIA P100 (Pascal). Table VI only.
+    Ac1,
+}
+
+impl Instance {
+    /// The paper's four anchor/training instances (Sec III).
+    pub const CORE: [Instance; 4] = [Instance::G3s, Instance::G4dn, Instance::P2, Instance::P3];
+
+    /// The Table VI "new GPU" targets.
+    pub const NEW: [Instance; 2] = [Instance::G5, Instance::Ac1];
+
+    /// All six instances.
+    pub const ALL: [Instance; 6] = [
+        Instance::G3s,
+        Instance::G4dn,
+        Instance::P2,
+        Instance::P3,
+        Instance::G5,
+        Instance::Ac1,
+    ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Instance::G3s => "g3s",
+            Instance::G4dn => "g4dn",
+            Instance::P2 => "p2",
+            Instance::P3 => "p3",
+            Instance::G5 => "g5",
+            Instance::Ac1 => "ac1",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<Instance> {
+        Instance::ALL.into_iter().find(|i| i.key() == key)
+    }
+
+    pub fn spec(self) -> &'static GpuSpec {
+        spec_of(self)
+    }
+}
+
+impl fmt::Display for Instance {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+/// Hardware description of one GPU cloud instance.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub instance: Instance,
+    /// e.g. "M60".
+    pub gpu_model: &'static str,
+    /// CUDA core count (Table I).
+    pub cores: u32,
+    /// Boost clock, MHz (Table I).
+    pub clock_mhz: u32,
+    /// Peak FP32 throughput, TFLOPS (Table I).
+    pub tflops_fp32: f64,
+    /// Device memory, GiB (per visible GPU).
+    pub vram_gib: f64,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Host<->device (PCIe) bandwidth, GB/s.
+    pub pcie_gbs: f64,
+    /// Has tensor cores usable by cuDNN fp32/TF32-style paths.
+    pub tensor_cores: bool,
+    /// On-demand price, $/hr (Table I; G5/AC1 from public pricing).
+    pub price_hr: f64,
+    /// Per-kernel launch + driver overhead, microseconds. Older
+    /// architectures and older host CPUs pay more (this is the term that
+    /// makes tiny models fastest on g4dn rather than p3 — Fig 2a).
+    pub launch_overhead_us: f64,
+    /// Host-side framework overhead per op, microseconds (python/TF
+    /// dispatch on the instance's vCPU).
+    pub framework_overhead_us: f64,
+    /// Saturation constant: number of concurrently resident work elements
+    /// needed to reach ~50% utilization. Scales with core count, so wide
+    /// devices (V100) need large batches to saturate — the Fig 2c effect.
+    pub saturation_elems: f64,
+    /// Hardware release year (Table I).
+    pub released: u32,
+}
+
+static G3S: GpuSpec = GpuSpec {
+    instance: Instance::G3s,
+    gpu_model: "M60",
+    cores: 2048,
+    clock_mhz: 1178,
+    tflops_fp32: 4.825,
+    vram_gib: 8.0,
+    mem_bw_gbs: 160.0,
+    pcie_gbs: 10.0,
+    tensor_cores: false,
+    price_hr: 0.75,
+    launch_overhead_us: 8.0,
+    framework_overhead_us: 55.0,
+    saturation_elems: 2048.0 * 192.0,
+    released: 2017,
+};
+
+static G4DN: GpuSpec = GpuSpec {
+    instance: Instance::G4dn,
+    gpu_model: "T4",
+    cores: 2560,
+    clock_mhz: 1590,
+    tflops_fp32: 8.141,
+    vram_gib: 16.0,
+    mem_bw_gbs: 320.0,
+    pcie_gbs: 12.0,
+    tensor_cores: true,
+    price_hr: 0.526,
+    launch_overhead_us: 5.0,
+    framework_overhead_us: 38.0,
+    saturation_elems: 2560.0 * 192.0,
+    released: 2019,
+};
+
+static P2: GpuSpec = GpuSpec {
+    instance: Instance::P2,
+    gpu_model: "K80",
+    cores: 2496,
+    clock_mhz: 875,
+    tflops_fp32: 4.113,
+    vram_gib: 12.0,
+    mem_bw_gbs: 240.0,
+    pcie_gbs: 8.0,
+    tensor_cores: false,
+    price_hr: 0.9,
+    launch_overhead_us: 12.0,
+    framework_overhead_us: 85.0,
+    saturation_elems: 2496.0 * 160.0,
+    released: 2016,
+};
+
+static P3: GpuSpec = GpuSpec {
+    instance: Instance::P3,
+    gpu_model: "V100",
+    cores: 5120,
+    clock_mhz: 1380,
+    tflops_fp32: 14.13,
+    vram_gib: 16.0,
+    mem_bw_gbs: 900.0,
+    pcie_gbs: 12.0,
+    tensor_cores: true,
+    price_hr: 3.06,
+    launch_overhead_us: 5.0,
+    framework_overhead_us: 40.0,
+    saturation_elems: 5120.0 * 256.0,
+    released: 2017,
+};
+
+static G5: GpuSpec = GpuSpec {
+    instance: Instance::G5,
+    gpu_model: "A10",
+    cores: 9216,
+    clock_mhz: 1695,
+    tflops_fp32: 31.2,
+    vram_gib: 24.0,
+    mem_bw_gbs: 600.0,
+    pcie_gbs: 16.0,
+    tensor_cores: true,
+    price_hr: 1.006,
+    launch_overhead_us: 4.0,
+    framework_overhead_us: 33.0,
+    saturation_elems: 9216.0 * 256.0,
+    released: 2021,
+};
+
+static AC1: GpuSpec = GpuSpec {
+    instance: Instance::Ac1,
+    gpu_model: "P100",
+    cores: 3584,
+    clock_mhz: 1303,
+    tflops_fp32: 9.3,
+    vram_gib: 16.0,
+    mem_bw_gbs: 732.0,
+    pcie_gbs: 10.0,
+    tensor_cores: false,
+    price_hr: 2.0,
+    launch_overhead_us: 7.0,
+    framework_overhead_us: 50.0,
+    saturation_elems: 3584.0 * 192.0,
+    released: 2016,
+};
+
+/// Static spec lookup.
+pub fn spec_of(instance: Instance) -> &'static GpuSpec {
+    match instance {
+        Instance::G3s => &G3S,
+        Instance::G4dn => &G4DN,
+        Instance::P2 => &P2,
+        Instance::P3 => &P3,
+        Instance::G5 => &G5,
+        Instance::Ac1 => &AC1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        // Exactly the paper's Table I numbers.
+        assert_eq!(Instance::G3s.spec().tflops_fp32, 4.825);
+        assert_eq!(Instance::G4dn.spec().tflops_fp32, 8.141);
+        assert_eq!(Instance::P2.spec().tflops_fp32, 4.113);
+        assert_eq!(Instance::P3.spec().tflops_fp32, 14.13);
+        assert_eq!(Instance::P3.spec().cores, 5120);
+        assert_eq!(Instance::P2.spec().price_hr, 0.9);
+    }
+
+    #[test]
+    fn keys_roundtrip() {
+        for i in Instance::ALL {
+            assert_eq!(Instance::from_key(i.key()), Some(i));
+        }
+        assert_eq!(Instance::from_key("nope"), None);
+    }
+
+    #[test]
+    fn spec_sanity() {
+        for i in Instance::ALL {
+            let s = i.spec();
+            assert!(s.tflops_fp32 > 1.0 && s.tflops_fp32 < 50.0);
+            assert!(s.mem_bw_gbs > 100.0);
+            assert!(s.vram_gib >= 8.0);
+            assert!(s.price_hr > 0.0);
+            assert!(s.saturation_elems > 0.0);
+        }
+    }
+
+    #[test]
+    fn tensor_core_devices() {
+        assert!(!Instance::G3s.spec().tensor_cores);
+        assert!(Instance::G4dn.spec().tensor_cores);
+        assert!(!Instance::P2.spec().tensor_cores);
+        assert!(Instance::P3.spec().tensor_cores);
+        assert!(Instance::G5.spec().tensor_cores);
+        assert!(!Instance::Ac1.spec().tensor_cores);
+    }
+}

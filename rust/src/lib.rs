@@ -1,0 +1,35 @@
+//! # repro — PROFET reproduction
+//!
+//! Production-quality reproduction of *PROFET: Profiling-based CNN Training
+//! Latency Prophet for GPU Cloud Instances* (Lee et al., cs.DC 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the full PROFET system: GPU training simulator
+//!   substrate, TF-profiler emulation, operation-name clustering, classical
+//!   ML (OLS / random forest), the median ensemble, batch/pixel polynomial
+//!   models, baselines (Paleo, MLPredict, Habitat), the evaluation harness
+//!   for every table/figure in the paper, and a tokio prediction service.
+//! * **L2/L1 (python/, build time only)** — the DNN ensemble member
+//!   (128·64·32·16·1 MLP) and the batched Levenshtein kernel, written in
+//!   JAX/Pallas and AOT-lowered to HLO text artifacts executed here via the
+//!   PJRT CPU client ([`runtime`]). Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod dnn;
+pub mod evalx;
+pub mod features;
+pub mod gpu;
+pub mod ml;
+pub mod models;
+pub mod ops;
+pub mod predictor;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use anyhow::Result;

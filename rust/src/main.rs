@@ -1,0 +1,258 @@
+//! `repro` — the PROFET reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   dataset   generate the offline experiment corpus (simulator runs)
+//!   train     fit the full PROFET system and save the model directory
+//!   predict   one-shot prediction for a (model, batch, pixels) workload
+//!   simulate  run the GPU simulator for one workload
+//!   eval      regenerate the paper's tables/figures (DESIGN.md index)
+//!   serve     start the TCP/JSON prediction service
+
+use anyhow::{anyhow, Context, Result};
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::models::ModelId;
+use repro::predictor::Profet;
+use repro::sim::{self, Workload};
+use repro::{evalx, runtime};
+use std::collections::BTreeMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut it = rest.iter();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{k}`"))?;
+            let val = it.next().cloned().unwrap_or_else(|| "true".into());
+            flags.insert(key.to_string(), val);
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}")),
+            None => Ok(default),
+        }
+    }
+
+    fn instance(&self, key: &str, default: Instance) -> Result<Instance> {
+        match self.get(key) {
+            Some(v) => Instance::from_key(v).ok_or_else(|| anyhow!("unknown instance `{v}`")),
+            None => Ok(default),
+        }
+    }
+}
+
+const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve> [--flags]
+  repro dataset  [--out data/corpus.json] [--instances core|all]
+  repro train    [--corpus data/corpus.json] [--out models] [--fast true]
+  repro predict  --model VGG16 --batch 32 --pixels 128 \\
+                 [--anchor g4dn] [--target p3] [--models models]
+  repro simulate --model VGG16 --batch 32 --pixels 128 [--instance p3]
+  repro eval     [--exp all|fig9|table4|...] [--out results.txt]
+  repro serve    [--addr 127.0.0.1:7878] [--models models]";
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "dataset" => cmd_dataset(&args),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "simulate" => cmd_simulate(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            println!("{USAGE}");
+            Err(anyhow!("unknown command `{other}`"))
+        }
+    }
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "data/corpus.json");
+    let instances: &[Instance] = match args.get_or("instances", "all").as_str() {
+        "core" => &Instance::CORE,
+        _ => &Instance::ALL,
+    };
+    eprintln!("generating corpus over {instances:?} ...");
+    let corpus = Corpus::generate(instances);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    corpus.save(&out)?;
+    println!(
+        "wrote {out}: {} workloads, {} observations, {} distinct ops",
+        corpus.entries.len(),
+        corpus.n_observations(),
+        corpus.vocabulary().len()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = runtime::load_default()?;
+    let corpus_path = args.get_or("corpus", "data/corpus.json");
+    let corpus = if std::path::Path::new(&corpus_path).exists() {
+        Corpus::load(&corpus_path)?
+    } else {
+        eprintln!("{corpus_path} not found — generating in-memory corpus");
+        Corpus::generate(&Instance::ALL)
+    };
+    let (train_idx, _) = corpus.split_random(0.2, evalx::SPLIT_SEED);
+    let mut opts = repro::predictor::TrainOptions {
+        anchors: Instance::CORE.to_vec(),
+        targets: Instance::ALL.to_vec(),
+        ..Default::default()
+    };
+    if args.get("fast").is_some() {
+        opts.n_trees = 25;
+        opts.dnn_epochs = 15;
+    }
+    eprintln!(
+        "training PROFET: {} anchors x {} targets ...",
+        opts.anchors.len(),
+        opts.targets.len()
+    );
+    let t0 = std::time::Instant::now();
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
+    let out = args.get_or("out", "models");
+    profet.save(&out)?;
+    println!(
+        "trained {} cross-instance ensembles + {} batch/pixel models in {:.1}s -> {out}/",
+        profet.cross.len(),
+        profet.scale.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let rt = runtime::load_default()?;
+    let model = ModelId::from_name(&args.get_or("model", "VGG16"))
+        .ok_or_else(|| anyhow!("unknown model (try VGG16, ResNet50, ...)"))?;
+    let batch = args.usize_or("batch", 32)?;
+    let pixels = args.usize_or("pixels", 128)?;
+    let anchor = args.instance("anchor", Instance::G4dn)?;
+    let target = args.instance("target", Instance::P3)?;
+    let model_dir = args.get_or("models", "models");
+    let profet = Profet::load(&model_dir)
+        .with_context(|| format!("loading {model_dir}/ — run `repro train` first"))?;
+
+    // simulate the client-side anchor profiling run
+    let w = Workload::new(model, batch, pixels);
+    let run = sim::run_workload(&w, anchor)
+        .ok_or_else(|| anyhow!("workload not executable on {anchor}"))?;
+    let (pred, member) = profet.predict_cross(
+        &rt,
+        anchor,
+        target,
+        &run.profile.aggregated(),
+        run.latency_ms,
+    )?;
+    println!("workload       : {} b={batch} px={pixels}", model.name());
+    println!("anchor         : {anchor} ({:.2} ms measured)", run.latency_ms);
+    println!("prediction     : {pred:.2} ms on {target} (median member: {})", member.name());
+    if let Some(truth) = sim::run_workload(&w, target) {
+        let err = 100.0 * (pred - truth.latency_ms).abs() / truth.latency_ms;
+        println!("simulator truth: {:.2} ms  (APE {err:.1}%)", truth.latency_ms);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = ModelId::from_name(&args.get_or("model", "VGG16"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let batch = args.usize_or("batch", 32)?;
+    let pixels = args.usize_or("pixels", 128)?;
+    let w = Workload::new(model, batch, pixels);
+    let instances: Vec<Instance> = match args.get("instance") {
+        Some(v) => vec![Instance::from_key(v).ok_or_else(|| anyhow!("unknown instance"))?],
+        None => Instance::ALL.to_vec(),
+    };
+    println!("{} b={batch} px={pixels}:", model.name());
+    for g in instances {
+        match sim::run_workload(&w, g) {
+            Some(r) => {
+                let agg = r.profile.aggregated();
+                let top: Vec<String> = {
+                    let mut v: Vec<(&String, &f64)> = agg.iter().collect();
+                    v.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+                    v.iter()
+                        .take(3)
+                        .map(|(k, t)| format!("{k}={t:.1}ms"))
+                        .collect()
+                };
+                println!(
+                    "  {:5} {:9.2} ms  (profiled {:.2} ms; {} ops; top: {})",
+                    g.key(),
+                    r.latency_ms,
+                    r.profile.batch_latency_profiled_ms,
+                    agg.len(),
+                    top.join(", ")
+                );
+            }
+            None => println!("  {:5} not executable (OOM or model constraint)", g.key()),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let mut ctx = evalx::Ctx::build()?;
+    let t0 = std::time::Instant::now();
+    let report = evalx::run(&exp, &mut ctx)?;
+    println!("{report}");
+    eprintln!("eval `{exp}` finished in {:.1}s", t0.elapsed().as_secs_f64());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &report)?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let model_dir = args.get_or("models", "models");
+    let handle = repro::coordinator::serve(
+        &addr,
+        runtime::default_artifact_dir(),
+        model_dir.into(),
+    )?;
+    println!("PROFET service listening on {}", handle.addr);
+    println!("protocol: newline-delimited JSON; try:");
+    println!(r#"  {{"op":"health"}}"#);
+    println!(r#"  {{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":120.0,"profile":{{"Conv2D":40.0}}}}"#);
+    // park forever
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

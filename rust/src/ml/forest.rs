@@ -1,0 +1,384 @@
+//! CART regression trees + bootstrap-aggregated random forest, from
+//! scratch (the paper uses sklearn's RandomForestRegressor with default
+//! hyper-parameters: 100 trees, unlimited depth, min_samples_split=2,
+//! bootstrap sampling, all features considered per split).
+
+use crate::util::{Json, Rng64};
+use anyhow::{anyhow, Result};
+
+/// Flat-array binary regression tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        /// child indices into `nodes`
+        left: usize,
+        right: usize,
+    },
+}
+
+/// Tree-growing hyper-parameters (sklearn defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features tried per split as a fraction of D (1.0 = all, sklearn's
+    /// regression default).
+    pub max_features_frac: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_depth: 32,
+            min_samples_split: 2,
+            max_features_frac: 1.0,
+        }
+    }
+}
+
+impl DecisionTree {
+    /// Fit on the rows of `x` indexed by `idx`.
+    fn fit_indices(
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &mut [usize],
+        params: &TreeParams,
+        rng: &mut Rng64,
+    ) -> DecisionTree {
+        let mut nodes = Vec::new();
+        Self::grow(x, y, idx, params, rng, &mut nodes, 0);
+        DecisionTree { nodes }
+    }
+
+    /// Grow a subtree over `idx`; returns its node index.
+    fn grow(
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &mut [usize],
+        params: &TreeParams,
+        rng: &mut Rng64,
+        nodes: &mut Vec<Node>,
+        depth: usize,
+    ) -> usize {
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        let sse: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
+        if depth >= params.max_depth || idx.len() < params.min_samples_split || sse < 1e-12 {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        }
+
+        let d = x[0].len();
+        let n_try = ((d as f64 * params.max_features_frac).ceil() as usize).clamp(1, d);
+        // sample features without replacement (Fisher-Yates prefix)
+        let mut feats: Vec<usize> = (0..d).collect();
+        for i in 0..n_try {
+            let j = i + rng.below(d - i);
+            feats.swap(i, j);
+        }
+
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+        let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+        for &f in feats.iter().take(n_try) {
+            vals.clear();
+            vals.extend(idx.iter().map(|&i| (x[i][f], y[i])));
+            // §Perf: sort_unstable + total_cmp measured ~15% faster than
+            // the stable partial_cmp sort on the split hot loop.
+            vals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+            // prefix sums for O(n) best-split scan
+            let total_sum: f64 = vals.iter().map(|v| v.1).sum();
+            let total_sq: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+            let mut lsum = 0.0;
+            let mut lsq = 0.0;
+            for k in 0..vals.len() - 1 {
+                lsum += vals[k].1;
+                lsq += vals[k].1 * vals[k].1;
+                if vals[k].0 == vals[k + 1].0 {
+                    continue; // can't split between equal values
+                }
+                let nl = (k + 1) as f64;
+                let nr = (vals.len() - k - 1) as f64;
+                let rsum = total_sum - lsum;
+                let rsq = total_sq - lsq;
+                // total child SSE
+                let score = (lsq - lsum * lsum / nl) + (rsq - rsum * rsum / nr);
+                if best.map_or(true, |(_, _, bs)| score < bs) {
+                    best = Some((f, 0.5 * (vals[k].0 + vals[k + 1].0), score));
+                }
+            }
+        }
+
+        let Some((feature, threshold, score)) = best else {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        };
+        if score >= sse {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        }
+
+        // partition idx in place
+        let mid = {
+            let mut lo = 0;
+            let mut hi = idx.len();
+            while lo < hi {
+                if x[idx[lo]][feature] <= threshold {
+                    lo += 1;
+                } else {
+                    hi -= 1;
+                    idx.swap(lo, hi);
+                }
+            }
+            lo
+        };
+        if mid == 0 || mid == idx.len() {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        }
+        let slot = nodes.len();
+        nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+        let (li, ri) = idx.split_at_mut(mid);
+        let left = Self::grow(x, y, li, params, rng, nodes, depth + 1);
+        let right = Self::grow(x, y, ri, params, rng, nodes, depth + 1);
+        nodes[slot] = Node::Split {
+            feature,
+            threshold,
+            left,
+            right,
+        };
+        slot
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| match n {
+                    Node::Leaf { value } => Json::from_f64s(&[*value]),
+                    Node::Split {
+                        feature,
+                        threshold,
+                        left,
+                        right,
+                    } => Json::from_f64s(&[
+                        *feature as f64,
+                        *threshold,
+                        *left as f64,
+                        *right as f64,
+                    ]),
+                })
+                .collect(),
+        )
+    }
+
+    fn from_json(j: &Json) -> Result<DecisionTree> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("tree not array"))?;
+        let nodes = arr
+            .iter()
+            .map(|n| {
+                let v = n.to_f64s()?;
+                Ok(match v.len() {
+                    1 => Node::Leaf { value: v[0] },
+                    4 => Node::Split {
+                        feature: v[0] as usize,
+                        threshold: v[1],
+                        left: v[2] as usize,
+                        right: v[3] as usize,
+                    },
+                    _ => anyhow::bail!("bad node arity"),
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(DecisionTree { nodes })
+    }
+}
+
+/// Bagged forest of CART trees.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    pub trees: Vec<DecisionTree>,
+}
+
+impl RandomForest {
+    /// Fit `n_trees` trees on bootstrap samples. Deterministic via `seed`
+    /// (each tree's RNG depends only on `seed` and its index, so the
+    /// thread-parallel fit below produces bit-identical forests to a
+    /// sequential one).
+    pub fn fit(x: &[Vec<f64>], y: &[f64], n_trees: usize, seed: u64) -> Result<RandomForest> {
+        anyhow::ensure!(!x.is_empty() && x.len() == y.len(), "bad shapes");
+        let params = TreeParams::default();
+        let n = x.len();
+        let fit_one = |t: usize| -> DecisionTree {
+            let mut rng = Rng64::new(
+                (seed.wrapping_add(1)).wrapping_mul(0x9e3779b97f4a7c15)
+                    ^ (t as u64 + 1).wrapping_mul(0xd1342543de82ef95),
+            );
+            let mut idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+            DecisionTree::fit_indices(x, y, &mut idx, &params, &mut rng)
+        };
+        // §Perf: tree growing dominated training (1.4 s per 100-tree
+        // forest); trees are independent, so fan out across cores via
+        // scoped threads with a striped work split.
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n_trees)
+            .max(1);
+        let trees: Vec<DecisionTree> = if workers <= 1 || n_trees < 8 {
+            (0..n_trees).map(fit_one).collect()
+        } else {
+            let mut slots: Vec<Option<DecisionTree>> = (0..n_trees).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let fit_one = &fit_one;
+                    handles.push(scope.spawn(move || {
+                        (w..n_trees)
+                            .step_by(workers)
+                            .map(|t| (t, fit_one(t)))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    for (t, tree) in h.join().expect("forest worker panicked") {
+                        slots[t] = Some(tree);
+                    }
+                }
+            });
+            slots.into_iter().map(|t| t.unwrap()).collect()
+        };
+        Ok(RandomForest { trees })
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn predict(&self, x: &[Vec<f64>]) -> Vec<f64> {
+        x.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<RandomForest> {
+        Ok(RandomForest {
+            trees: j
+                .req_arr("trees")?
+                .iter()
+                .map(DecisionTree::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics;
+
+    fn step_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // piecewise target trees should nail: y = 10 if x0>0.5 else 2, +x1
+        let mut rng = Rng64::new(seed);
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.next_f64(), rng.next_f64()])
+            .collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| if r[0] > 0.5 { 10.0 } else { 2.0 } + r[1])
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn tree_learns_step_function() {
+        let (x, y) = step_data(400, 1);
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        let tree = DecisionTree::fit_indices(&x, &y, &mut idx, &TreeParams::default(), &mut Rng64::new(2));
+        let pred: Vec<f64> = x.iter().map(|r| tree.predict_one(r)).collect();
+        assert!(metrics::r2(&y, &pred) > 0.99);
+    }
+
+    #[test]
+    fn forest_generalizes_better_than_guess() {
+        let (x, y) = step_data(500, 3);
+        let forest = RandomForest::fit(&x, &y, 30, 7).unwrap();
+        let (xt, yt) = step_data(200, 4);
+        let pred = forest.predict(&xt);
+        assert!(metrics::r2(&yt, &pred) > 0.95, "r2 {}", metrics::r2(&yt, &pred));
+    }
+
+    #[test]
+    fn forest_deterministic_for_seed() {
+        let (x, y) = step_data(200, 5);
+        let a = RandomForest::fit(&x, &y, 10, 42).unwrap();
+        let b = RandomForest::fit(&x, &y, 10, 42).unwrap();
+        let p = vec![0.3, 0.7];
+        assert_eq!(a.predict_one(&p), b.predict_one(&p));
+        let c = RandomForest::fit(&x, &y, 10, 43).unwrap();
+        assert_ne!(a.predict_one(&p), c.predict_one(&p));
+    }
+
+    #[test]
+    fn constant_target_constant_prediction() {
+        let x: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let y = vec![5.0; 50];
+        let f = RandomForest::fit(&x, &y, 5, 1).unwrap();
+        assert!((f.predict_one(&[25.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (x, y) = step_data(150, 9);
+        let f = RandomForest::fit(&x, &y, 8, 2).unwrap();
+        let j = Json::parse(&f.to_json().to_string()).unwrap();
+        let f2 = RandomForest::from_json(&j).unwrap();
+        for r in x.iter().take(20) {
+            assert!((f.predict_one(r) - f2.predict_one(r)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monotone_extrapolation_is_clamped() {
+        // trees clamp outside the training range — a known RF property the
+        // median ensemble exploits (linear handles extrapolation instead)
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0]).collect();
+        let f = RandomForest::fit(&x, &y, 20, 3).unwrap();
+        let far = f.predict_one(&[10.0]);
+        assert!(far <= 3.0 + 1e-9, "clamped at max leaf: {far}");
+    }
+}

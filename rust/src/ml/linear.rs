@@ -1,0 +1,170 @@
+//! Ordinary least squares linear regression via ridge-stabilized normal
+//! equations (Gaussian elimination with partial pivoting).
+
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+
+/// y ≈ w·x + b. The paper's Linear cross-instance model uses a single
+/// feature (anchor batch latency): y = αx + β (Sec V-A).
+#[derive(Debug, Clone, Default)]
+pub struct LinearRegression {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+/// Solve A x = b in place; A is n x n row-major. Ridge-jittered upstream.
+pub(crate) fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // partial pivot
+        let piv = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for k in (col + 1)..n {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+impl LinearRegression {
+    /// Fit on rows `x` (each length d) against targets `y`.
+    pub fn fit(x: &[Vec<f64>], y: &[f64]) -> Result<LinearRegression> {
+        anyhow::ensure!(!x.is_empty() && x.len() == y.len(), "bad shapes");
+        let d = x[0].len();
+        let da = d + 1; // + bias column
+        // normal equations: (X^T X + λI) w = X^T y
+        let mut xtx = vec![vec![0.0; da]; da];
+        let mut xty = vec![0.0; da];
+        for (row, &t) in x.iter().zip(y) {
+            anyhow::ensure!(row.len() == d, "ragged row");
+            for i in 0..da {
+                let xi = if i < d { row[i] } else { 1.0 };
+                xty[i] += xi * t;
+                for j in i..da {
+                    let xj = if j < d { row[j] } else { 1.0 };
+                    xtx[i][j] += xi * xj;
+                }
+            }
+        }
+        for i in 0..da {
+            for j in 0..i {
+                xtx[i][j] = xtx[j][i];
+            }
+            xtx[i][i] += 1e-8 * (1.0 + xtx[i][i].abs()); // ridge jitter
+        }
+        let w = solve(xtx, xty).ok_or_else(|| anyhow!("singular system"))?;
+        Ok(LinearRegression {
+            bias: w[d],
+            weights: w[..d].to_vec(),
+        })
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.bias
+            + self
+                .weights
+                .iter()
+                .zip(x)
+                .map(|(w, v)| w * v)
+                .sum::<f64>()
+    }
+
+    pub fn predict(&self, x: &[Vec<f64>]) -> Vec<f64> {
+        x.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("weights", Json::from_f64s(&self.weights));
+        o.set("bias", Json::Num(self.bias));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<LinearRegression> {
+        Ok(LinearRegression {
+            weights: j
+                .get("weights")
+                .ok_or_else(|| anyhow!("weights"))?
+                .to_f64s()?,
+            bias: j.req_f64("bias")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_line() {
+        // y = 3x + 2
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] + 2.0).collect();
+        let m = LinearRegression::fit(&x, &y).unwrap();
+        assert!((m.weights[0] - 3.0).abs() < 1e-6);
+        assert!((m.bias - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn recovers_multivariate_plane() {
+        let mut rng = crate::util::Rng64::new(5);
+        let x: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..4).map(|_| rng.range(-2.0, 2.0)).collect())
+            .collect();
+        let w = [1.5, -2.0, 0.5, 4.0];
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| r.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + 7.0)
+            .collect();
+        let m = LinearRegression::fit(&x, &y).unwrap();
+        for (got, want) in m.weights.iter().zip(&w) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+        assert!((m.bias - 7.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        let mut rng = crate::util::Rng64::new(6);
+        let x: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.range(0.0, 10.0)]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 2.0 * r[0] + 1.0 + rng.normal() * 0.1).collect();
+        let m = LinearRegression::fit(&x, &y).unwrap();
+        assert!((m.weights[0] - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = LinearRegression {
+            weights: vec![1.0, -2.5],
+            bias: 0.25,
+        };
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let m2 = LinearRegression::from_json(&j).unwrap();
+        assert_eq!(m.weights, m2.weights);
+        assert_eq!(m.bias, m2.bias);
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(LinearRegression::fit(&[], &[]).is_err());
+        assert!(LinearRegression::fit(&[vec![1.0]], &[1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Regression metrics (paper Sec V): MAPE, RMSE, R².
+
+/// Mean Absolute Percentage Error, in percent (paper reports e.g. 11.4159).
+pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| ((p - t) / t.max(1e-9)).abs())
+        .sum();
+    100.0 * s / truth.len() as f64
+}
+
+/// Root Mean Squared Error.
+pub fn rmse(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = truth.iter().zip(pred).map(|(t, p)| (p - t) * (p - t)).sum();
+    (s / truth.len() as f64).sqrt()
+}
+
+/// Coefficient of determination. Can be negative for terrible models
+/// (Table II's joint DNN scores -0.0765).
+pub fn r2(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.len() < 2 {
+        return 0.0;
+    }
+    let mean = truth.iter().sum::<f64>() / truth.len() as f64;
+    let ss_res: f64 = truth.iter().zip(pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean) * (t - mean)).sum();
+    if ss_tot == 0.0 {
+        return 0.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// All three at once.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scores {
+    pub mape: f64,
+    pub rmse: f64,
+    pub r2: f64,
+}
+
+pub fn scores(truth: &[f64], pred: &[f64]) -> Scores {
+    Scores {
+        mape: mape(truth, pred),
+        rmse: rmse(truth, pred),
+        r2: r2(truth, pred),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let t = [1.0, 2.0, 3.0];
+        assert_eq!(mape(&t, &t), 0.0);
+        assert_eq!(rmse(&t, &t), 0.0);
+        assert_eq!(r2(&t, &t), 1.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let t = [100.0, 200.0];
+        let p = [110.0, 180.0];
+        assert!((mape(&t, &p) - 10.0).abs() < 1e-9); // (10% + 10%) / 2
+        assert!((rmse(&t, &p) - (250.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_negative_for_bad_model() {
+        let t = [1.0, 2.0, 3.0, 4.0];
+        let p = [4.0, 3.0, 2.0, 1.0];
+        assert!(r2(&t, &p) < 0.0);
+    }
+
+    #[test]
+    fn constant_truth_r2_zero() {
+        assert_eq!(r2(&[2.0, 2.0], &[1.0, 3.0]), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Classical ML, from scratch (the offline environment has no sklearn
+//! equivalent): OLS linear regression, CART random forest, polynomial
+//! regression, min-max scaling, and the regression metrics the paper
+//! reports (MAPE / RMSE / R²).
+
+mod forest;
+mod linear;
+pub mod metrics;
+mod polynomial;
+mod scaler;
+
+pub use forest::{DecisionTree, RandomForest};
+pub use linear::LinearRegression;
+pub use polynomial::PolyRegression;
+pub use scaler::MinMaxScaler;

@@ -1,0 +1,122 @@
+//! Polynomial regression (paper Sec III-C2): T_N(b) = α₂b² + α₁b + α₀.
+//!
+//! The order is a parameter so the Fig 12 ablation (order-1 vs order-2)
+//! uses the same code path.
+
+use super::linear::solve;
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+
+/// Least-squares polynomial of a given order on scalar inputs.
+#[derive(Debug, Clone)]
+pub struct PolyRegression {
+    /// Coefficients low→high: c[0] + c[1] x + c[2] x² + ...
+    pub coeffs: Vec<f64>,
+}
+
+impl PolyRegression {
+    pub fn fit(x: &[f64], y: &[f64], order: usize) -> Result<PolyRegression> {
+        anyhow::ensure!(x.len() == y.len() && x.len() > order, "need > order points");
+        let n = order + 1;
+        // Vandermonde normal equations
+        let mut a = vec![vec![0.0; n]; n];
+        let mut b = vec![0.0; n];
+        for (&xi, &yi) in x.iter().zip(y) {
+            let mut pow = vec![1.0; 2 * n - 1];
+            for k in 1..2 * n - 1 {
+                pow[k] = pow[k - 1] * xi;
+            }
+            for i in 0..n {
+                b[i] += pow[i] * yi;
+                for j in 0..n {
+                    a[i][j] += pow[i + j];
+                }
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += 1e-10;
+        }
+        let coeffs = solve(a, b).ok_or_else(|| anyhow!("singular Vandermonde"))?;
+        Ok(PolyRegression { coeffs })
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        let mut acc = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+
+    pub fn order(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("coeffs", Json::from_f64s(&self.coeffs));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<PolyRegression> {
+        Ok(PolyRegression {
+            coeffs: j.get("coeffs").ok_or_else(|| anyhow!("coeffs"))?.to_f64s()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_quadratic() {
+        let x: Vec<f64> = (0..30).map(|i| i as f64 / 10.0).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 2.0 * v * v - 3.0 * v + 1.0).collect();
+        let p = PolyRegression::fit(&x, &y, 2).unwrap();
+        assert!((p.coeffs[2] - 2.0).abs() < 1e-6);
+        assert!((p.coeffs[1] + 3.0).abs() < 1e-6);
+        assert!((p.coeffs[0] - 1.0).abs() < 1e-6);
+        assert!((p.predict(5.0) - (2.0 * 25.0 - 15.0 + 1.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn order1_is_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let p = PolyRegression::fit(&x, &y, 1).unwrap();
+        assert_eq!(p.order(), 1);
+        assert!((p.predict(10.0) - 21.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn order2_fits_curvature_better_than_order1() {
+        // convex latency-vs-batch shape
+        let x: Vec<f64> = vec![0.0, 0.066, 0.2, 0.46, 1.0];
+        let y: Vec<f64> = x.iter().map(|&v| 0.1 + 0.3 * v + 0.6 * v * v).collect();
+        let p1 = PolyRegression::fit(&x, &y, 1).unwrap();
+        let p2 = PolyRegression::fit(&x, &y, 2).unwrap();
+        let err = |p: &PolyRegression| -> f64 {
+            x.iter()
+                .zip(&y)
+                .map(|(&xi, &yi)| (p.predict(xi) - yi).abs())
+                .sum()
+        };
+        assert!(err(&p2) < err(&p1) / 5.0);
+    }
+
+    #[test]
+    fn too_few_points_error() {
+        assert!(PolyRegression::fit(&[1.0, 2.0], &[1.0, 2.0], 2).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = PolyRegression {
+            coeffs: vec![1.0, -0.5, 2.25],
+        };
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        let p2 = PolyRegression::from_json(&j).unwrap();
+        assert_eq!(p.coeffs, p2.coeffs);
+    }
+}

@@ -1,0 +1,74 @@
+//! Min-max scaler (paper Sec III-C2 / Eq. 1).
+
+use crate::util::Json;
+use anyhow::Result;
+
+/// Maps [lo, hi] ↔ [0, 1]. Degenerate ranges map to 0 on transform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinMaxScaler {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl MinMaxScaler {
+    pub fn fit(values: &[f64]) -> MinMaxScaler {
+        let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        MinMaxScaler { lo, hi }
+    }
+
+    pub fn from_bounds(lo: f64, hi: f64) -> MinMaxScaler {
+        MinMaxScaler { lo, hi }
+    }
+
+    /// T_N = (T_O - min) / (max - min).
+    pub fn transform(&self, v: f64) -> f64 {
+        if self.hi <= self.lo {
+            0.0
+        } else {
+            (v - self.lo) / (self.hi - self.lo)
+        }
+    }
+
+    /// Eq. 1: T_O = T_N · (max - min) + min.
+    pub fn inverse(&self, n: f64) -> f64 {
+        n * (self.hi - self.lo) + self.lo
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("lo", Json::Num(self.lo));
+        o.set("hi", Json::Num(self.hi));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<MinMaxScaler> {
+        Ok(MinMaxScaler {
+            lo: j.req_f64("lo")?,
+            hi: j.req_f64("hi")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = MinMaxScaler::fit(&[10.0, 20.0, 30.0]);
+        assert_eq!(s.transform(10.0), 0.0);
+        assert_eq!(s.transform(30.0), 1.0);
+        assert_eq!(s.transform(20.0), 0.5);
+        for v in [12.0, 17.5, 29.0, 35.0] {
+            assert!((s.inverse(s.transform(v)) - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_range() {
+        let s = MinMaxScaler::fit(&[5.0, 5.0]);
+        assert_eq!(s.transform(5.0), 0.0);
+        assert_eq!(s.inverse(0.0), 5.0);
+    }
+}

@@ -1,0 +1,732 @@
+//! Tape-style graph builder: layer calls emit forward, backward, and
+//! optimizer ops with exact shapes and roofline accounting.
+//!
+//! The builder tracks the activation shape (H, W, C) through the network,
+//! mirrors TF/Keras layer naming (`conv2d_3`, `dense_1`, ...) for the
+//! profiler's operation-details field, and auto-generates the backward op
+//! for every forward op so a finished tape is a complete *training step*.
+
+use crate::models::{Graph, ModelId};
+use crate::ops::{Op, OpClass};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Padding mode for convolutions/pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pad {
+    /// TF 'SAME': out = ceil(in / stride).
+    Same,
+    /// TF 'VALID': out = (in - k)/stride + 1; fails if in < k.
+    Valid,
+}
+
+/// Architecture cannot accept the requested input size (paper's "model
+/// constraint" workload exclusions).
+#[derive(Debug, Clone)]
+pub struct BuildError {
+    pub model: &'static str,
+    pub reason: String,
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.model, self.reason)
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// Saved activation-shape checkpoint for branching (Inception) and
+/// residual (ResNet) topologies.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeCkpt {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+/// The tape.
+pub struct Tape {
+    model: ModelId,
+    batch: usize,
+    pixels: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    fwd: Vec<Op>,
+    bwd: Vec<Op>,
+    opt: Vec<Op>,
+    weight_tensors: Vec<f64>,
+    act_elems: f64,
+    counters: HashMap<&'static str, usize>,
+    emitted_first_conv: bool,
+    /// Elementwise activation emitted by `act()`: Relu or Relu6.
+    relu6: bool,
+}
+
+impl Tape {
+    pub fn new(model: ModelId, batch: usize, pixels: usize) -> Self {
+        let mut t = Self {
+            model,
+            batch,
+            pixels,
+            h: pixels,
+            w: pixels,
+            c: 3,
+            fwd: Vec::new(),
+            bwd: Vec::new(),
+            opt: Vec::new(),
+            weight_tensors: Vec::new(),
+            act_elems: 0.0,
+            counters: HashMap::new(),
+            emitted_first_conv: false,
+            relu6: false,
+        };
+        // Input pipeline: uint8 decode -> float cast on device.
+        let elems = t.elems();
+        t.push_fwd(Op::new(
+            "Cast",
+            t.layer_name("cast"),
+            OpClass::Elementwise,
+            elems,
+            5.0 * elems,
+            t.shape_vec(),
+        ));
+        t
+    }
+
+    /// Use Relu6 for subsequent `act()` calls (MobileNetV2).
+    pub fn use_relu6(&mut self, yes: bool) {
+        self.relu6 = yes;
+    }
+
+    fn err(&self, reason: impl Into<String>) -> BuildError {
+        BuildError {
+            model: self.model.name(),
+            reason: reason.into(),
+        }
+    }
+
+    fn layer_name(&self, base: &'static str) -> String {
+        // Note: counter is advanced by `bump`, this only formats.
+        format!("{base}_{}", self.counters.get(base).copied().unwrap_or(0))
+    }
+
+    fn bump(&mut self, base: &'static str) -> String {
+        let ctr = self.counters.entry(base).or_insert(0);
+        let name = format!("{base}_{ctr}");
+        *ctr += 1;
+        name
+    }
+
+    fn elems(&self) -> f64 {
+        (self.batch * self.h * self.w * self.c) as f64
+    }
+
+    fn shape_vec(&self) -> Vec<usize> {
+        vec![self.batch, self.h, self.w, self.c]
+    }
+
+    /// Current spatial/channel shape (for branch bookkeeping).
+    pub fn ckpt(&self) -> ShapeCkpt {
+        ShapeCkpt {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+        }
+    }
+
+    /// Restore a shape checkpoint (start of a parallel branch).
+    pub fn restore(&mut self, s: ShapeCkpt) {
+        self.h = s.h;
+        self.w = s.w;
+        self.c = s.c;
+    }
+
+    pub fn channels(&self) -> usize {
+        self.c
+    }
+
+    pub fn hw(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    fn push_fwd(&mut self, op: Op) {
+        self.act_elems += op.out_elems;
+        self.fwd.push(op);
+    }
+
+    fn out_dim(&self, n: usize, k: usize, s: usize, pad: Pad) -> Result<usize, BuildError> {
+        match pad {
+            Pad::Same => Ok(n.div_ceil(s)),
+            Pad::Valid => {
+                if n < k {
+                    Err(self.err(format!("spatial {n} < kernel {k} (valid padding)")))
+                } else {
+                    Ok((n - k) / s + 1)
+                }
+            }
+        }
+    }
+
+    /// 2D convolution (+ bias) with auto backward.
+    pub fn conv(
+        &mut self,
+        k: usize,
+        cout: usize,
+        stride: usize,
+        pad: Pad,
+    ) -> Result<&mut Self, BuildError> {
+        let cin = self.c;
+        let oh = self.out_dim(self.h, k, stride, pad)?;
+        let ow = self.out_dim(self.w, k, stride, pad)?;
+        let layer = self.bump("conv2d");
+        let in_elems = self.elems();
+        let out_elems = (self.batch * oh * ow * cout) as f64;
+        let w_elems = (k * k * cin * cout) as f64;
+        let flops = 2.0 * out_elems * (k * k * cin) as f64;
+        let bytes = 4.0 * (in_elems + w_elems + out_elems);
+
+        self.push_fwd(Op::new(
+            "Conv2D",
+            layer.clone(),
+            OpClass::MatrixCompute,
+            flops,
+            bytes,
+            vec![self.batch, oh, ow, cout],
+        ));
+        // dL/dW — always computed.
+        self.bwd.push(Op::new(
+            "Conv2DBackpropFilter",
+            layer.clone(),
+            OpClass::MatrixCompute,
+            flops,
+            bytes,
+            vec![k, k, cin, cout],
+        ));
+        // dL/dX — skipped for the very first conv (input needs no grad).
+        if self.emitted_first_conv {
+            self.bwd.push(Op::new(
+                "Conv2DBackpropInput",
+                layer.clone(),
+                OpClass::MatrixCompute,
+                flops,
+                bytes,
+                vec![self.batch, self.h, self.w, cin],
+            ));
+        }
+        self.emitted_first_conv = true;
+        self.h = oh;
+        self.w = ow;
+        self.c = cout;
+        self.bias(layer, out_elems, cout);
+        self.weight_tensors.push(w_elems);
+        Ok(self)
+    }
+
+    /// Depthwise 3x3-style convolution (MobileNet).
+    pub fn depthwise(&mut self, k: usize, stride: usize, pad: Pad) -> Result<&mut Self, BuildError> {
+        let c = self.c;
+        let oh = self.out_dim(self.h, k, stride, pad)?;
+        let ow = self.out_dim(self.w, k, stride, pad)?;
+        let layer = self.bump("depthwise_conv2d");
+        let in_elems = self.elems();
+        let out_elems = (self.batch * oh * ow * c) as f64;
+        let w_elems = (k * k * c) as f64;
+        let flops = 2.0 * out_elems * (k * k) as f64;
+        let bytes = 4.0 * (in_elems + w_elems + out_elems);
+        self.push_fwd(Op::new(
+            "DepthwiseConv2dNative",
+            layer.clone(),
+            OpClass::Depthwise,
+            flops,
+            bytes,
+            vec![self.batch, oh, ow, c],
+        ));
+        self.bwd.push(Op::new(
+            "DepthwiseConv2dNativeBackpropFilter",
+            layer.clone(),
+            OpClass::Depthwise,
+            flops,
+            bytes,
+            vec![k, k, c, 1],
+        ));
+        self.bwd.push(Op::new(
+            "DepthwiseConv2dNativeBackpropInput",
+            layer,
+            OpClass::Depthwise,
+            flops,
+            bytes,
+            vec![self.batch, self.h, self.w, c],
+        ));
+        self.h = oh;
+        self.w = ow;
+        self.weight_tensors.push(w_elems);
+        Ok(self)
+    }
+
+    fn bias(&mut self, layer: String, out_elems: f64, cout: usize) {
+        self.push_fwd(Op::new(
+            "BiasAdd",
+            layer.clone(),
+            OpClass::Elementwise,
+            out_elems,
+            2.0 * 4.0 * out_elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            "BiasAddGrad",
+            layer,
+            OpClass::Reduction,
+            out_elems,
+            4.0 * out_elems,
+            vec![cout],
+        ));
+        self.weight_tensors.push(cout as f64);
+    }
+
+    /// Fused batch normalization (+ backward + rsqrt grad).
+    pub fn bn(&mut self) -> &mut Self {
+        let layer = self.bump("batch_normalization");
+        let elems = self.elems();
+        self.push_fwd(Op::new(
+            "FusedBatchNormV3",
+            layer.clone(),
+            OpClass::Normalization,
+            10.0 * elems,
+            3.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            "FusedBatchNormGradV3",
+            layer.clone(),
+            OpClass::Normalization,
+            15.0 * elems,
+            4.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            "RsqrtGrad",
+            layer,
+            OpClass::Elementwise,
+            4.0 * self.c as f64,
+            4.0 * 2.0 * self.c as f64,
+            vec![self.c],
+        ));
+        // gamma/beta
+        self.weight_tensors.push(self.c as f64);
+        self.weight_tensors.push(self.c as f64);
+        self
+    }
+
+    /// ReLU (or ReLU6 when `use_relu6` was set).
+    pub fn act(&mut self) -> &mut Self {
+        let (fname, bname) = if self.relu6 {
+            ("Relu6", "Relu6Grad")
+        } else {
+            ("Relu", "ReluGrad")
+        };
+        let layer = self.bump("activation");
+        let elems = self.elems();
+        self.push_fwd(Op::new(
+            fname,
+            layer.clone(),
+            OpClass::Elementwise,
+            elems,
+            2.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            bname,
+            layer,
+            OpClass::Elementwise,
+            elems,
+            3.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self
+    }
+
+    fn pool(
+        &mut self,
+        fname: &'static str,
+        bname: &'static str,
+        k: usize,
+        stride: usize,
+        pad: Pad,
+    ) -> Result<&mut Self, BuildError> {
+        let oh = self.out_dim(self.h, k, stride, pad)?;
+        let ow = self.out_dim(self.w, k, stride, pad)?;
+        let layer = self.bump(if fname == "MaxPool" {
+            "max_pooling2d"
+        } else {
+            "average_pooling2d"
+        });
+        let in_elems = self.elems();
+        let out_elems = (self.batch * oh * ow * self.c) as f64;
+        self.push_fwd(Op::new(
+            fname,
+            layer.clone(),
+            OpClass::Pooling,
+            out_elems * (k * k) as f64,
+            4.0 * (in_elems + out_elems),
+            vec![self.batch, oh, ow, self.c],
+        ));
+        self.bwd.push(Op::new(
+            bname,
+            layer,
+            OpClass::Pooling,
+            in_elems,
+            4.0 * (in_elems + 2.0 * out_elems),
+            vec![self.batch, self.h, self.w, self.c],
+        ));
+        self.h = oh;
+        self.w = ow;
+        Ok(self)
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize, pad: Pad) -> Result<&mut Self, BuildError> {
+        self.pool("MaxPool", "MaxPoolGrad", k, stride, pad)
+    }
+
+    pub fn avgpool(&mut self, k: usize, stride: usize, pad: Pad) -> Result<&mut Self, BuildError> {
+        self.pool("AvgPool", "AvgPoolGrad", k, stride, pad)
+    }
+
+    /// Global average pooling → [B, 1, 1, C] (Mean fwd, Tile bwd).
+    pub fn gap(&mut self) -> &mut Self {
+        let layer = self.bump("global_average_pooling2d");
+        let in_elems = self.elems();
+        self.push_fwd(Op::new(
+            "Mean",
+            layer.clone(),
+            OpClass::Reduction,
+            in_elems,
+            4.0 * (in_elems + (self.batch * self.c) as f64),
+            vec![self.batch, 1, 1, self.c],
+        ));
+        self.bwd.push(Op::new(
+            "Tile",
+            layer,
+            OpClass::DataMovement,
+            0.0,
+            4.0 * in_elems,
+            self.shape_vec(),
+        ));
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    /// Dense (fully connected) layer on the flattened activation.
+    pub fn dense(&mut self, n: usize) -> &mut Self {
+        let fan_in = self.h * self.w * self.c;
+        if self.h != 1 || self.w != 1 {
+            // implicit flatten
+            let layer = self.bump("flatten");
+            self.push_fwd(Op::new(
+                "Reshape",
+                layer,
+                OpClass::DataMovement,
+                0.0,
+                0.0,
+                vec![self.batch, fan_in],
+            ));
+            self.h = 1;
+            self.w = 1;
+        }
+        let layer = self.bump("dense");
+        let out_elems = (self.batch * n) as f64;
+        let w_elems = (fan_in * n) as f64;
+        let flops = 2.0 * self.batch as f64 * w_elems;
+        let bytes = 4.0 * ((self.batch * fan_in) as f64 + w_elems + out_elems);
+        self.push_fwd(Op::new(
+            "MatMul",
+            layer.clone(),
+            OpClass::MatrixCompute,
+            flops,
+            bytes,
+            vec![self.batch, n],
+        ));
+        // dW = X^T G and dX = G W^T — two more MatMuls.
+        self.bwd.push(Op::new(
+            "MatMul",
+            layer.clone(),
+            OpClass::MatrixCompute,
+            flops,
+            bytes,
+            vec![fan_in, n],
+        ));
+        self.bwd.push(Op::new(
+            "MatMul",
+            layer.clone(),
+            OpClass::MatrixCompute,
+            flops,
+            bytes,
+            vec![self.batch, fan_in],
+        ));
+        self.c = n;
+        self.bias(layer, out_elems, n);
+        self.weight_tensors.push(w_elems);
+        self
+    }
+
+    /// Residual add with the tensor saved at `ckpt` (shapes must match).
+    pub fn add_residual(&mut self) -> &mut Self {
+        let layer = self.bump("add");
+        let elems = self.elems();
+        self.push_fwd(Op::new(
+            "AddV2",
+            layer.clone(),
+            OpClass::Elementwise,
+            elems,
+            3.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            "AddN",
+            layer,
+            OpClass::Elementwise,
+            elems,
+            3.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self
+    }
+
+    /// Channel concat of branch outputs with channel counts `parts`
+    /// (current spatial dims). Sets C = sum(parts).
+    pub fn concat(&mut self, parts: &[usize]) -> &mut Self {
+        let layer = self.bump("concatenate");
+        let c: usize = parts.iter().sum();
+        self.c = c;
+        let elems = self.elems();
+        self.push_fwd(Op::new(
+            "ConcatV2",
+            layer.clone(),
+            OpClass::DataMovement,
+            0.0,
+            2.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        // backward: one slice per branch
+        for (i, p) in parts.iter().enumerate() {
+            let part_elems = (self.batch * self.h * self.w * p) as f64;
+            self.bwd.push(Op::new(
+                "Slice",
+                format!("{layer}_grad{i}"),
+                OpClass::DataMovement,
+                0.0,
+                2.0 * 4.0 * part_elems,
+                vec![self.batch, self.h, self.w, *p],
+            ));
+        }
+        self
+    }
+
+    /// Spatial zero-padding (Inception stems / explicit pads).
+    pub fn pad2d(&mut self, p: usize) -> &mut Self {
+        let layer = self.bump("zero_padding2d");
+        self.h += 2 * p;
+        self.w += 2 * p;
+        let elems = self.elems();
+        self.push_fwd(Op::new(
+            "Pad",
+            layer.clone(),
+            OpClass::DataMovement,
+            0.0,
+            2.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self.bwd.push(Op::new(
+            "Slice",
+            layer,
+            OpClass::DataMovement,
+            0.0,
+            2.0 * 4.0 * elems,
+            self.shape_vec(),
+        ));
+        self
+    }
+
+    /// Classifier head: dense(classes) + softmax + cross-entropy loss (+
+    /// metric argmax), then finishes the tape with optimizer updates.
+    pub fn classifier(mut self, classes: usize) -> Graph {
+        self.dense(classes);
+        let layer = self.bump("predictions");
+        let logits = (self.batch * classes) as f64;
+        self.push_fwd(Op::new(
+            "Softmax",
+            layer.clone(),
+            OpClass::Reduction,
+            5.0 * logits,
+            2.0 * 4.0 * logits,
+            vec![self.batch, classes],
+        ));
+        self.push_fwd(Op::new(
+            "ArgMax",
+            layer.clone(),
+            OpClass::Reduction,
+            logits,
+            4.0 * logits,
+            vec![self.batch],
+        ));
+        self.bwd.push(Op::new(
+            "SoftmaxCrossEntropyWithLogits",
+            layer.clone(),
+            OpClass::Reduction,
+            8.0 * logits,
+            3.0 * 4.0 * logits,
+            vec![self.batch, classes],
+        ));
+        self.bwd.push(Op::new(
+            "Sub",
+            layer,
+            OpClass::Elementwise,
+            logits,
+            3.0 * 4.0 * logits,
+            vec![self.batch, classes],
+        ));
+        self.finish()
+    }
+
+    /// Emit optimizer update ops (one Mul + AssignSub/AssignAdd pair per
+    /// weight tensor, as TF's resource-variable SGD/momentum does) and
+    /// produce the final graph.
+    pub fn finish(mut self) -> Graph {
+        let mut opt_ops = Vec::new();
+        for (i, &w) in self.weight_tensors.iter().enumerate() {
+            let layer = format!("training/update_{i}");
+            opt_ops.push(Op::new(
+                "Mul",
+                layer.clone(),
+                OpClass::Optimizer,
+                w,
+                3.0 * 4.0 * w,
+                vec![w as usize],
+            ));
+            opt_ops.push(Op::new(
+                "AssignSubVariableOp",
+                layer.clone(),
+                OpClass::Optimizer,
+                w,
+                3.0 * 4.0 * w,
+                vec![w as usize],
+            ));
+            opt_ops.push(Op::new(
+                "AssignAddVariableOp",
+                layer,
+                OpClass::Optimizer,
+                w,
+                3.0 * 4.0 * w,
+                vec![w as usize],
+            ));
+        }
+        // One global gradient-norm reduction (gradient clipping / metrics).
+        let total_w: f64 = self.weight_tensors.iter().sum();
+        opt_ops.push(Op::new(
+            "Sum",
+            "training/grad_norm".to_string(),
+            OpClass::Reduction,
+            2.0 * total_w,
+            4.0 * total_w,
+            vec![1],
+        ));
+        self.opt = opt_ops;
+
+        let mut ops = self.fwd;
+        // backward runs in reverse layer order
+        let mut bwd = self.bwd;
+        bwd.reverse();
+        ops.extend(bwd);
+        ops.extend(self.opt);
+
+        Graph {
+            model: self.model,
+            batch: self.batch,
+            pixels: self.pixels,
+            ops,
+            weight_elems: self.weight_tensors.iter().sum(),
+            act_elems: self.act_elems,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut t = Tape::new(ModelId::MnistCnn, 8, 32);
+        t.conv(3, 16, 1, Pad::Same).unwrap();
+        t.act();
+        t.maxpool(2, 2, Pad::Valid).unwrap();
+        t.classifier(10)
+    }
+
+    #[test]
+    fn conv_shapes_same_vs_valid() {
+        let mut t = Tape::new(ModelId::MnistCnn, 1, 32);
+        t.conv(3, 8, 1, Pad::Same).unwrap();
+        assert_eq!(t.hw(), (32, 32));
+        t.conv(3, 8, 2, Pad::Same).unwrap();
+        assert_eq!(t.hw(), (16, 16));
+        t.conv(5, 8, 1, Pad::Valid).unwrap();
+        assert_eq!(t.hw(), (12, 12));
+    }
+
+    #[test]
+    fn valid_underflow_is_error() {
+        let mut t = Tape::new(ModelId::LeNet5, 1, 4);
+        assert!(t.conv(5, 8, 1, Pad::Valid).is_err());
+    }
+
+    #[test]
+    fn first_conv_has_no_input_grad() {
+        let g = tiny_graph();
+        assert!(!g.ops.iter().any(|o| o.name == "Conv2DBackpropInput"));
+        assert!(g.ops.iter().any(|o| o.name == "Conv2DBackpropFilter"));
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut t = Tape::new(ModelId::MnistCnn, 2, 8);
+        t.conv(3, 4, 1, Pad::Same).unwrap();
+        let conv = t.fwd.iter().find(|o| o.name == "Conv2D").unwrap();
+        // 2 * B*OH*OW*Cout * K*K*Cin = 2 * 2*8*8*4 * 9*3
+        assert_eq!(conv.flops, 2.0 * (2 * 8 * 8 * 4) as f64 * 27.0);
+    }
+
+    #[test]
+    fn layer_names_increment() {
+        let mut t = Tape::new(ModelId::MnistCnn, 1, 16);
+        t.conv(3, 4, 1, Pad::Same).unwrap();
+        t.conv(3, 4, 1, Pad::Same).unwrap();
+        let names: Vec<&str> = t
+            .fwd
+            .iter()
+            .filter(|o| o.name == "Conv2D")
+            .map(|o| o.layer.as_str())
+            .collect();
+        assert_eq!(names, vec!["conv2d_0", "conv2d_1"]);
+    }
+
+    #[test]
+    fn graph_memory_positive_and_scales() {
+        let small = tiny_graph();
+        let mut t = Tape::new(ModelId::MnistCnn, 128, 32);
+        t.conv(3, 16, 1, Pad::Same).unwrap();
+        t.act();
+        t.maxpool(2, 2, Pad::Valid).unwrap();
+        let big = t.classifier(10);
+        assert!(big.memory_bytes() > small.memory_bytes());
+    }
+
+    #[test]
+    fn classifier_emits_loss_and_optimizer() {
+        let g = tiny_graph();
+        for name in ["Softmax", "SoftmaxCrossEntropyWithLogits", "AssignSubVariableOp", "Sum"] {
+            assert!(g.ops.iter().any(|o| o.name == name), "{name}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Classic small/medium CNNs: LeNet5, AlexNet, and the Keras-style
+//! MNIST/CIFAR10 example networks the paper includes in its corpus.
+
+use super::builder::{BuildError, Pad, Tape};
+use super::{Graph, ModelId};
+
+/// LeNet-5 (LeCun et al. 1998): two valid 5x5 convs with pooling, then
+/// 120/84/10 dense stack. ~60k parameters at 32px.
+pub fn lenet5(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::LeNet5, batch, pixels);
+    t.conv(5, 6, 1, Pad::Valid)?.act();
+    t.maxpool(2, 2, Pad::Valid)?;
+    t.conv(5, 16, 1, Pad::Valid)?.act();
+    t.maxpool(2, 2, Pad::Valid)?;
+    t.dense(120).act();
+    t.dense(84).act();
+    Ok(t.classifier(10))
+}
+
+/// AlexNet (Krizhevsky et al. 2012), single-tower variant.
+pub fn alexnet(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::AlexNet, batch, pixels);
+    t.conv(11, 96, 4, Pad::Same)?.act();
+    t.maxpool(3, 2, Pad::Same)?;
+    t.conv(5, 256, 1, Pad::Same)?.act();
+    t.maxpool(3, 2, Pad::Same)?;
+    t.conv(3, 384, 1, Pad::Same)?.act();
+    t.conv(3, 384, 1, Pad::Same)?.act();
+    t.conv(3, 256, 1, Pad::Same)?.act();
+    t.maxpool(3, 2, Pad::Same)?;
+    t.dense(4096).act();
+    t.dense(4096).act();
+    Ok(t.classifier(1000))
+}
+
+/// The Keras "MNIST CNN" example: two convs, one pool, dense 128.
+pub fn mnist_cnn(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::MnistCnn, batch, pixels);
+    t.conv(3, 32, 1, Pad::Valid)?.act();
+    t.conv(3, 64, 1, Pad::Valid)?.act();
+    t.maxpool(2, 2, Pad::Valid)?;
+    t.dense(128).act();
+    Ok(t.classifier(10))
+}
+
+/// The Keras "CIFAR10 CNN" example: conv32x2 + pool + conv64x2 + pool +
+/// dense 512.
+pub fn cifar10_cnn(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::Cifar10Cnn, batch, pixels);
+    t.conv(3, 32, 1, Pad::Same)?.act();
+    t.conv(3, 32, 1, Pad::Valid)?.act();
+    t.maxpool(2, 2, Pad::Valid)?;
+    t.conv(3, 64, 1, Pad::Same)?.act();
+    t.conv(3, 64, 1, Pad::Valid)?.act();
+    t.maxpool(2, 2, Pad::Valid)?;
+    t.dense(512).act();
+    Ok(t.classifier(10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_params_at_32px() {
+        // Classic LeNet-5 has ~61k params at 32px input.
+        let g = lenet5(16, 32).unwrap().weight_elems;
+        assert!((5.0e4..8.0e4).contains(&g), "{g}");
+    }
+
+    #[test]
+    fn lenet_rejects_sub_kernel_inputs() {
+        assert!(lenet5(16, 8).is_err());
+    }
+
+    #[test]
+    fn alexnet_dense_dominates_params() {
+        let g = alexnet(16, 224).unwrap();
+        // dense 9216->4096 alone is 37.7M
+        assert!(g.weight_elems > 4.0e7);
+    }
+
+    #[test]
+    fn mnist_cifar_build_all_pixel_sizes() {
+        for p in [32, 64, 128, 224, 256] {
+            assert!(mnist_cnn(16, p).is_ok(), "mnist @{p}");
+            assert!(cifar10_cnn(16, p).is_ok(), "cifar @{p}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! MobileNetV2 (Sandler et al. 2018): inverted residuals, ReLU6, depthwise
+//! separable convolutions — the corpus's main source of *unique* operation
+//! names (Relu6, Relu6Grad, DepthwiseConv2dNative*) for Fig 13a.
+
+use super::builder::{BuildError, Pad, Tape};
+use super::{Graph, ModelId};
+
+/// (expansion t, output channels c, repeats n, first stride s) — the
+/// paper's Table 2.
+const BLOCKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+fn inverted_residual(t: &mut Tape, expand: usize, cout: usize, stride: usize) -> Result<(), BuildError> {
+    let cin = t.channels();
+    let hidden = cin * expand;
+    let use_res = stride == 1 && cin == cout;
+    if expand != 1 {
+        t.conv(1, hidden, 1, Pad::Same)?;
+        t.bn().act();
+    }
+    t.depthwise(3, stride, Pad::Same)?;
+    t.bn().act();
+    // linear bottleneck: no activation after projection
+    t.conv(1, cout, 1, Pad::Same)?;
+    t.bn();
+    if use_res {
+        t.add_residual();
+    }
+    Ok(())
+}
+
+pub fn mobilenet_v2(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::MobileNetV2, batch, pixels);
+    t.use_relu6(true);
+    t.conv(3, 32, 2, Pad::Same)?;
+    t.bn().act();
+    for (expand, cout, reps, stride) in BLOCKS {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            inverted_residual(&mut t, expand, cout, s)?;
+        }
+    }
+    t.conv(1, 1280, 1, Pad::Same)?;
+    t.bn().act();
+    t.gap();
+    Ok(t.classifier(1000))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu6_not_relu() {
+        let g = mobilenet_v2(8, 96).unwrap();
+        assert!(g.ops.iter().any(|o| o.name == "Relu6"));
+        assert!(g.ops.iter().any(|o| o.name == "Relu6Grad"));
+        assert!(!g.ops.iter().any(|o| o.name == "Relu"));
+    }
+
+    #[test]
+    fn depthwise_backprops_present() {
+        let g = mobilenet_v2(8, 96).unwrap();
+        for n in [
+            "DepthwiseConv2dNative",
+            "DepthwiseConv2dNativeBackpropFilter",
+            "DepthwiseConv2dNativeBackpropInput",
+        ] {
+            assert!(g.ops.iter().any(|o| o.name == n), "{n}");
+        }
+    }
+
+    #[test]
+    fn lightweight_vs_vgg() {
+        let mb = mobilenet_v2(16, 224).unwrap().total_flops();
+        let vg = super::super::vgg::vgg(ModelId::Vgg16, 16, 224).unwrap().total_flops();
+        assert!(mb < vg / 10.0, "mobilenet {mb:.2e} vs vgg {vg:.2e}");
+    }
+}

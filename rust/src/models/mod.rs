@@ -1,0 +1,285 @@
+//! CNN model zoo: the paper's 15 architectures as op graphs.
+//!
+//! Each architecture is expressed with the [`builder::Tape`] DSL, which
+//! expands layers into forward + backward + optimizer [`crate::ops::Op`]s
+//! with exact shapes, FLOPs, and byte counts. Graphs are what the
+//! simulator executes and the profiler emulator records.
+
+pub mod builder;
+mod classic;
+mod inception;
+mod mobilenet;
+mod resnet;
+mod transformer;
+mod vgg;
+
+pub use builder::{BuildError, Pad, Tape};
+
+use crate::ops::Op;
+use std::fmt;
+
+/// The paper's model set M (Sec III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelId {
+    AlexNet,
+    LeNet5,
+    InceptionV3,
+    InceptionResNetV2,
+    MobileNetV2,
+    MnistCnn,
+    Cifar10Cnn,
+    ResNetSmall,
+    ResNet18,
+    ResNet34,
+    ResNet50,
+    Vgg11,
+    Vgg13,
+    Vgg16,
+    Vgg19,
+    /// Sec VII extension (non-CNN): 4-layer encoder, d=256. `pixels` is
+    /// reused as the sequence length. NOT part of the paper corpus
+    /// ([`ModelId::ALL`]).
+    TransformerSmall,
+    /// Sec VII extension: BERT-base (12 layers, d=768).
+    BertBase,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 15] = [
+        ModelId::AlexNet,
+        ModelId::LeNet5,
+        ModelId::InceptionV3,
+        ModelId::InceptionResNetV2,
+        ModelId::MobileNetV2,
+        ModelId::MnistCnn,
+        ModelId::Cifar10Cnn,
+        ModelId::ResNetSmall,
+        ModelId::ResNet18,
+        ModelId::ResNet34,
+        ModelId::ResNet50,
+        ModelId::Vgg11,
+        ModelId::Vgg13,
+        ModelId::Vgg16,
+        ModelId::Vgg19,
+    ];
+
+    /// Sec VII extension models (excluded from the paper corpus).
+    pub const EXTENDED: [ModelId; 2] = [ModelId::TransformerSmall, ModelId::BertBase];
+
+    /// Models whose op vocabulary contains operations rarely used by the
+    /// rest of the corpus (Fig 13a: Relu6/DepthwiseConv2d in MobileNetV2,
+    /// AvgPool/ConcatV2/Pad mixes in the Inception family, the large-LRN-
+    /// era AlexNet). Used by the clustering ablation.
+    pub fn has_unique_ops(self) -> bool {
+        matches!(
+            self,
+            ModelId::MobileNetV2 | ModelId::InceptionV3 | ModelId::InceptionResNetV2
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelId::AlexNet => "AlexNet",
+            ModelId::LeNet5 => "LeNet5",
+            ModelId::InceptionV3 => "InceptionV3",
+            ModelId::InceptionResNetV2 => "InceptionResNetV2",
+            ModelId::MobileNetV2 => "MobileNetV2",
+            ModelId::MnistCnn => "MNIST_CNN",
+            ModelId::Cifar10Cnn => "CIFAR10_CNN",
+            ModelId::ResNetSmall => "ResNetSmall",
+            ModelId::ResNet18 => "ResNet18",
+            ModelId::ResNet34 => "ResNet34",
+            ModelId::ResNet50 => "ResNet50",
+            ModelId::Vgg11 => "VGG11",
+            ModelId::Vgg13 => "VGG13",
+            ModelId::Vgg16 => "VGG16",
+            ModelId::Vgg19 => "VGG19",
+            ModelId::TransformerSmall => "TransformerSmall",
+            ModelId::BertBase => "BertBase",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ModelId> {
+        ModelId::ALL
+            .into_iter()
+            .chain(ModelId::EXTENDED)
+            .find(|m| m.name() == name)
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A fully expanded training-step op graph for (model, batch, pixels).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub model: ModelId,
+    pub batch: usize,
+    /// Input image side length (images are pixels x pixels x 3).
+    pub pixels: usize,
+    /// Forward + backward + optimizer ops, in emission order.
+    pub ops: Vec<Op>,
+    /// Trainable parameter elements.
+    pub weight_elems: f64,
+    /// Stored forward activations (elements) — retained for backprop.
+    pub act_elems: f64,
+}
+
+impl Graph {
+    /// Approximate device-memory footprint in bytes for the training step:
+    /// weights + grads + 2 Adam moments, stored activations (x2 for
+    /// workspace), and the input batch.
+    pub fn memory_bytes(&self) -> f64 {
+        let weights = self.weight_elems * 4.0 * 4.0;
+        let acts = self.act_elems * 4.0 * 2.0;
+        let input = (self.batch * self.pixels * self.pixels * 3) as f64 * 4.0;
+        let framework = 1.2e9; // CUDA context + cuDNN workspace floor
+        weights + acts + input + framework
+    }
+
+    /// Total FLOPs of the training step.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    /// Total bytes moved.
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+}
+
+/// Build the training-step graph for a model at (batch, pixels).
+///
+/// Returns `Err(BuildError)` when the architecture cannot accept the input
+/// size (e.g. InceptionV3's valid-padded stem collapses below 1x1 on 32px
+/// inputs) — these are the paper's "model constraint" exclusions.
+pub fn build(model: ModelId, batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    match model {
+        ModelId::AlexNet => classic::alexnet(batch, pixels),
+        ModelId::LeNet5 => classic::lenet5(batch, pixels),
+        ModelId::MnistCnn => classic::mnist_cnn(batch, pixels),
+        ModelId::Cifar10Cnn => classic::cifar10_cnn(batch, pixels),
+        ModelId::InceptionV3 => inception::inception_v3(batch, pixels),
+        ModelId::InceptionResNetV2 => inception::inception_resnet_v2(batch, pixels),
+        ModelId::MobileNetV2 => mobilenet::mobilenet_v2(batch, pixels),
+        ModelId::ResNetSmall => resnet::resnet_small(batch, pixels),
+        ModelId::ResNet18 => resnet::resnet18(batch, pixels),
+        ModelId::ResNet34 => resnet::resnet34(batch, pixels),
+        ModelId::ResNet50 => resnet::resnet50(batch, pixels),
+        ModelId::Vgg11 => vgg::vgg(ModelId::Vgg11, batch, pixels),
+        ModelId::Vgg13 => vgg::vgg(ModelId::Vgg13, batch, pixels),
+        ModelId::Vgg16 => vgg::vgg(ModelId::Vgg16, batch, pixels),
+        ModelId::Vgg19 => vgg::vgg(ModelId::Vgg19, batch, pixels),
+        ModelId::TransformerSmall => Ok(transformer::transformer_small(batch, pixels)),
+        ModelId::BertBase => Ok(transformer::bert_base(batch, pixels)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    #[test]
+    fn all_models_build_at_224() {
+        for m in ModelId::ALL {
+            let g = build(m, 16, 224).unwrap_or_else(|e| panic!("{m}: {e}"));
+            assert!(!g.ops.is_empty(), "{m}");
+            assert!(g.weight_elems > 1e3, "{m} weights {}", g.weight_elems);
+            assert!(g.total_flops() > 1e6, "{m}");
+        }
+    }
+
+    #[test]
+    fn vocabulary_closed(){
+        for m in ModelId::ALL {
+            if let Ok(g) = build(m, 16, 128) {
+                for op in &g.ops {
+                    assert!(ops::in_vocabulary(op.name), "{m}: {} not in vocabulary", op.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inception_rejects_tiny_inputs() {
+        assert!(build(ModelId::InceptionV3, 16, 32).is_err());
+        assert!(build(ModelId::InceptionResNetV2, 16, 32).is_err());
+        assert!(build(ModelId::InceptionV3, 16, 224).is_ok());
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let g16 = build(ModelId::Vgg16, 16, 128).unwrap();
+        let g64 = build(ModelId::Vgg16, 64, 128).unwrap();
+        let r = g64.total_flops() / g16.total_flops();
+        assert!(r > 3.5 && r < 4.2, "flops ratio {r}");
+        // weights do not scale with batch
+        assert_eq!(g16.weight_elems, g64.weight_elems);
+    }
+
+    #[test]
+    fn flops_scale_with_pixels() {
+        let a = build(ModelId::ResNet50, 16, 64).unwrap();
+        let b = build(ModelId::ResNet50, 16, 128).unwrap();
+        let r = b.total_flops() / a.total_flops();
+        assert!(r > 3.0 && r < 5.0, "pixel flops ratio {r}");
+    }
+
+    #[test]
+    fn known_parameter_counts_ballpark() {
+        // Published param counts (within modeling tolerance):
+        // VGG16 ~138M @224, ResNet50 ~25.6M, MobileNetV2 ~3.5M, AlexNet ~61M.
+        let vgg = build(ModelId::Vgg16, 1, 224).unwrap().weight_elems;
+        assert!((1.1e8..1.6e8).contains(&vgg), "vgg16 params {vgg:.3e}");
+        let r50 = build(ModelId::ResNet50, 1, 224).unwrap().weight_elems;
+        assert!((2.0e7..3.2e7).contains(&r50), "resnet50 params {r50:.3e}");
+        let mb = build(ModelId::MobileNetV2, 1, 224).unwrap().weight_elems;
+        assert!((2.0e6..6.0e6).contains(&mb), "mobilenetv2 params {mb:.3e}");
+        let alex = build(ModelId::AlexNet, 1, 224).unwrap().weight_elems;
+        assert!((4.5e7..8.0e7).contains(&alex), "alexnet params {alex:.3e}");
+        let lenet = build(ModelId::LeNet5, 1, 32).unwrap().weight_elems;
+        assert!((4.0e4..1.0e5).contains(&lenet), "lenet params {lenet:.3e}");
+    }
+
+    #[test]
+    fn resnet50_flops_ballpark() {
+        // Published: ~4 GFLOPs fwd inference @224 → training step with
+        // backward ≈ 3x fwd ≈ 12 GFLOPs per image.
+        let g = build(ModelId::ResNet50, 1, 224).unwrap();
+        let gf = g.total_flops() / 1e9;
+        assert!((7.0..25.0).contains(&gf), "resnet50 train GFLOPs {gf}");
+    }
+
+    #[test]
+    fn unique_op_models_emit_unique_ops() {
+        let g = build(ModelId::MobileNetV2, 16, 128).unwrap();
+        assert!(g.ops.iter().any(|o| o.name == "Relu6"));
+        assert!(g.ops.iter().any(|o| o.name == "DepthwiseConv2dNative"));
+        let g = build(ModelId::InceptionV3, 16, 224).unwrap();
+        assert!(g.ops.iter().any(|o| o.name == "ConcatV2"));
+        assert!(g.ops.iter().any(|o| o.name == "AvgPool"));
+        // VGG uses neither
+        let g = build(ModelId::Vgg16, 16, 128).unwrap();
+        assert!(!g.ops.iter().any(|o| o.name == "Relu6"));
+    }
+
+    #[test]
+    fn backward_ops_present_for_training() {
+        for m in [ModelId::Vgg11, ModelId::ResNet18, ModelId::MobileNetV2] {
+            let g = build(m, 16, 128).unwrap();
+            assert!(g.ops.iter().any(|o| o.name.contains("Backprop") || o.name.ends_with("Grad")), "{m}");
+            assert!(g.ops.iter().any(|o| o.name == "AssignSubVariableOp"), "{m}");
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for m in ModelId::ALL {
+            assert_eq!(ModelId::from_name(m.name()), Some(m));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! ResNet family (He et al. 2016): basic-block 18/34, bottleneck 50, and
+//! the CIFAR-style "ResNetSmall" the paper's corpus includes.
+
+use super::builder::{BuildError, Pad, Tape};
+use super::{Graph, ModelId};
+
+/// conv-BN-ReLU helper.
+fn cbr(t: &mut Tape, k: usize, c: usize, s: usize) -> Result<(), BuildError> {
+    t.conv(k, c, s, Pad::Same)?;
+    t.bn().act();
+    Ok(())
+}
+
+/// Basic residual block: 3x3 conv x2 (+1x1 projection when shape changes).
+fn basic_block(t: &mut Tape, c: usize, stride: usize) -> Result<(), BuildError> {
+    let needs_proj = stride != 1 || t.channels() != c;
+    if needs_proj {
+        // projection shortcut runs as a parallel branch
+        let ckpt = t.ckpt();
+        t.conv(1, c, stride, Pad::Same)?;
+        t.bn();
+        t.restore(ckpt);
+    }
+    cbr(t, 3, c, stride)?;
+    t.conv(3, c, 1, Pad::Same)?;
+    t.bn();
+    t.add_residual().act();
+    Ok(())
+}
+
+/// Bottleneck residual block: 1x1 reduce, 3x3, 1x1 expand (x4).
+fn bottleneck(t: &mut Tape, c: usize, stride: usize) -> Result<(), BuildError> {
+    let cout = 4 * c;
+    let needs_proj = stride != 1 || t.channels() != cout;
+    if needs_proj {
+        let ckpt = t.ckpt();
+        t.conv(1, cout, stride, Pad::Same)?;
+        t.bn();
+        t.restore(ckpt);
+    }
+    cbr(t, 1, c, 1)?;
+    cbr(t, 3, c, stride)?;
+    t.conv(1, cout, 1, Pad::Same)?;
+    t.bn();
+    t.add_residual().act();
+    Ok(())
+}
+
+fn imagenet_resnet(
+    model: ModelId,
+    batch: usize,
+    pixels: usize,
+    blocks: [usize; 4],
+    use_bottleneck: bool,
+) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(model, batch, pixels);
+    cbr(&mut t, 7, 64, 2)?;
+    t.maxpool(3, 2, Pad::Same)?;
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&n, &c)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            if use_bottleneck {
+                bottleneck(&mut t, c, stride)?;
+            } else {
+                basic_block(&mut t, c, stride)?;
+            }
+        }
+    }
+    t.gap();
+    Ok(t.classifier(1000))
+}
+
+pub fn resnet18(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    imagenet_resnet(ModelId::ResNet18, batch, pixels, [2, 2, 2, 2], false)
+}
+
+pub fn resnet34(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    imagenet_resnet(ModelId::ResNet34, batch, pixels, [3, 4, 6, 3], false)
+}
+
+pub fn resnet50(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    imagenet_resnet(ModelId::ResNet50, batch, pixels, [3, 4, 6, 3], true)
+}
+
+/// CIFAR-style small ResNet (3 stages of one basic block, widths 16/32/64).
+pub fn resnet_small(batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(ModelId::ResNetSmall, batch, pixels);
+    cbr(&mut t, 3, 16, 1)?;
+    for (stage, c) in [16usize, 32, 64].into_iter().enumerate() {
+        let stride = if stage == 0 { 1 } else { 2 };
+        basic_block(&mut t, c, stride)?;
+        basic_block(&mut t, c, 1)?;
+    }
+    t.gap();
+    Ok(t.classifier(10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_vs_34_vs_50_ordering() {
+        let f18 = resnet18(16, 224).unwrap().total_flops();
+        let f34 = resnet34(16, 224).unwrap().total_flops();
+        let f50 = resnet50(16, 224).unwrap().total_flops();
+        assert!(f18 < f34, "{f18} !< {f34}");
+        assert!(f34 < f50 * 1.3, "34 and 50 comparable");
+    }
+
+    #[test]
+    fn resnet_small_is_small() {
+        let g = resnet_small(16, 32).unwrap();
+        assert!(g.weight_elems < 1.0e6, "{}", g.weight_elems);
+    }
+
+    #[test]
+    fn residual_adds_emitted() {
+        let g = resnet18(4, 64).unwrap();
+        let adds = g.ops.iter().filter(|o| o.name == "AddV2").count();
+        assert_eq!(adds, 8, "8 basic blocks in resnet18");
+    }
+
+    #[test]
+    fn bn_everywhere() {
+        let g = resnet50(4, 64).unwrap();
+        assert!(g.ops.iter().filter(|o| o.name == "FusedBatchNormV3").count() > 40);
+    }
+}

@@ -1,0 +1,211 @@
+//! Transformer encoders (the Sec VII "non-CNN models" extension).
+//!
+//! The paper's Discussion notes PROFET's CNN-trained models "might not
+//! show as good result" on Transformer/BERT workloads; these graphs let
+//! the `ext_transformer` experiment measure exactly that. The `pixels`
+//! workload field is reused as the *sequence length*.
+//!
+//! Built directly as op lists (attention has no conv-style spatial tape):
+//! forward + backward + optimizer, TF op names (BatchMatMulV2, Erf, ...).
+
+use super::{Graph, ModelId};
+use crate::ops::{Op, OpClass};
+
+struct Cfg {
+    layers: usize,
+    d_model: usize,
+    heads: usize,
+    d_ff: usize,
+    vocab: usize,
+}
+
+fn emit(ops: &mut Vec<Op>, acts: &mut f64, name: &'static str, layer: String, class: OpClass, flops: f64, bytes: f64, out: Vec<usize>) {
+    let op = Op::new(name, layer, class, flops, bytes, out);
+    *acts += op.out_elems;
+    ops.push(op);
+}
+
+fn transformer(model: ModelId, cfg: &Cfg, batch: usize, seq: usize) -> Graph {
+    let b = batch as f64;
+    let s = seq as f64;
+    let d = cfg.d_model as f64;
+    let h = cfg.heads as f64;
+    let ff = cfg.d_ff as f64;
+    let tokens = b * s;
+
+    let mut ops = Vec::new();
+    let mut acts = 0.0;
+    let mut weights: Vec<f64> = Vec::new();
+
+    // embedding lookup (fwd GatherV2, bwd UnsortedSegmentSum)
+    let emb_w = cfg.vocab as f64 * d;
+    weights.push(emb_w);
+    emit(&mut ops, &mut acts, "GatherV2", "embedding".into(), OpClass::DataMovement, 0.0, 4.0 * (tokens * d), vec![batch, seq, cfg.d_model]);
+
+    let mut bwd: Vec<Op> = Vec::new();
+    bwd.push(Op::new("UnsortedSegmentSum", "embedding_grad".to_string(), OpClass::Reduction, tokens * d, 8.0 * tokens * d, vec![cfg.vocab, cfg.d_model]));
+
+    for l in 0..cfg.layers {
+        let lname = |part: &str| format!("layer_{l}/{part}");
+        // QKV + output projections: 4 dense matmuls (fwd) + 8 (bwd)
+        for part in ["q", "k", "v", "attn_out"] {
+            let flops = 2.0 * tokens * d * d;
+            let bytes = 4.0 * (tokens * d * 2.0 + d * d);
+            emit(&mut ops, &mut acts, "MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![batch, seq, cfg.d_model]);
+            emit(&mut ops, &mut acts, "BiasAdd", lname(part), OpClass::Elementwise, tokens * d, 8.0 * tokens * d, vec![batch, seq, cfg.d_model]);
+            bwd.push(Op::new("MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![cfg.d_model, cfg.d_model]));
+            bwd.push(Op::new("MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![batch, seq, cfg.d_model]));
+            bwd.push(Op::new("BiasAddGrad", lname(part), OpClass::Reduction, tokens * d, 4.0 * tokens * d, vec![cfg.d_model]));
+            weights.push(d * d);
+            weights.push(d);
+        }
+        // attention scores + context: two batched matmuls, softmax between
+        let attn_flops = 2.0 * b * s * s * d;
+        let attn_bytes = 4.0 * (2.0 * tokens * d + b * h * s * s);
+        emit(&mut ops, &mut acts, "BatchMatMulV2", lname("scores"), OpClass::MatrixCompute, attn_flops, attn_bytes, vec![batch, cfg.heads, seq, seq]);
+        emit(&mut ops, &mut acts, "Softmax", lname("probs"), OpClass::Reduction, 5.0 * b * h * s * s, 8.0 * b * h * s * s, vec![batch, cfg.heads, seq, seq]);
+        emit(&mut ops, &mut acts, "BatchMatMulV2", lname("context"), OpClass::MatrixCompute, attn_flops, attn_bytes, vec![batch, seq, cfg.d_model]);
+        for _ in 0..2 {
+            bwd.push(Op::new("BatchMatMulV2", lname("attn_grad"), OpClass::MatrixCompute, 2.0 * attn_flops, attn_bytes, vec![batch, cfg.heads, seq, seq]));
+        }
+        bwd.push(Op::new("Softmax", lname("probs_grad"), OpClass::Reduction, 8.0 * b * h * s * s, 8.0 * b * h * s * s, vec![batch, cfg.heads, seq, seq]));
+
+        // FFN: d -> 4d (GeLU) -> d
+        for (part, fin, fout) in [("ffn_up", d, ff), ("ffn_down", ff, d)] {
+            let flops = 2.0 * tokens * fin * fout;
+            let bytes = 4.0 * (tokens * (fin + fout) + fin * fout);
+            emit(&mut ops, &mut acts, "MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![batch, seq, fout as usize]);
+            emit(&mut ops, &mut acts, "BiasAdd", lname(part), OpClass::Elementwise, tokens * fout, 8.0 * tokens * fout, vec![batch, seq, fout as usize]);
+            bwd.push(Op::new("MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![fin as usize, fout as usize]));
+            bwd.push(Op::new("MatMul", lname(part), OpClass::MatrixCompute, flops, bytes, vec![batch, seq, fin as usize]));
+            bwd.push(Op::new("BiasAddGrad", lname(part), OpClass::Reduction, tokens * fout, 4.0 * tokens * fout, vec![fout as usize]));
+            weights.push(fin * fout);
+            weights.push(fout);
+        }
+        emit(&mut ops, &mut acts, "Erf", lname("gelu"), OpClass::Elementwise, 8.0 * tokens * ff, 8.0 * tokens * ff, vec![batch, seq, cfg.d_ff]);
+        bwd.push(Op::new("Erf", lname("gelu_grad"), OpClass::Elementwise, 10.0 * tokens * ff, 8.0 * tokens * ff, vec![batch, seq, cfg.d_ff]));
+
+        // two layer-norms + two residuals
+        for part in ["ln_attn", "ln_ffn"] {
+            emit(&mut ops, &mut acts, "Mean", lname(part), OpClass::Reduction, tokens * d, 4.0 * tokens * d, vec![batch, seq, 1]);
+            emit(&mut ops, &mut acts, "SquaredDifference", lname(part), OpClass::Elementwise, 2.0 * tokens * d, 8.0 * tokens * d, vec![batch, seq, cfg.d_model]);
+            emit(&mut ops, &mut acts, "Rsqrt", lname(part), OpClass::Elementwise, tokens, 8.0 * tokens, vec![batch, seq, 1]);
+            emit(&mut ops, &mut acts, "Mul", lname(part), OpClass::Elementwise, 2.0 * tokens * d, 12.0 * tokens * d, vec![batch, seq, cfg.d_model]);
+            emit(&mut ops, &mut acts, "AddV2", lname(part), OpClass::Elementwise, tokens * d, 12.0 * tokens * d, vec![batch, seq, cfg.d_model]);
+            bwd.push(Op::new("RsqrtGrad", lname(part), OpClass::Elementwise, 4.0 * tokens, 8.0 * tokens, vec![batch, seq, 1]));
+            bwd.push(Op::new("Mul", lname(part), OpClass::Elementwise, 4.0 * tokens * d, 12.0 * tokens * d, vec![batch, seq, cfg.d_model]));
+            bwd.push(Op::new("Sum", lname(part), OpClass::Reduction, 2.0 * tokens * d, 4.0 * tokens * d, vec![cfg.d_model]));
+            weights.push(d); // gamma
+            weights.push(d); // beta
+        }
+        for part in ["res_attn", "res_ffn"] {
+            emit(&mut ops, &mut acts, "AddV2", lname(part), OpClass::Elementwise, tokens * d, 12.0 * tokens * d, vec![batch, seq, cfg.d_model]);
+            bwd.push(Op::new("AddN", lname(part), OpClass::Elementwise, tokens * d, 12.0 * tokens * d, vec![batch, seq, cfg.d_model]));
+        }
+    }
+
+    // pooled classifier head (Tanh pooler as in BERT) + softmax loss
+    let classes = 2usize;
+    emit(&mut ops, &mut acts, "MatMul", "pooler".into(), OpClass::MatrixCompute, 2.0 * b * d * d, 4.0 * (b * d * 2.0 + d * d), vec![batch, cfg.d_model]);
+    emit(&mut ops, &mut acts, "Tanh", "pooler".into(), OpClass::Elementwise, 4.0 * b * d, 8.0 * b * d, vec![batch, cfg.d_model]);
+    emit(&mut ops, &mut acts, "MatMul", "classifier".into(), OpClass::MatrixCompute, 2.0 * b * d * classes as f64, 4.0 * (b * d + d * classes as f64), vec![batch, classes]);
+    emit(&mut ops, &mut acts, "Softmax", "classifier".into(), OpClass::Reduction, 5.0 * b * classes as f64, 8.0 * b * classes as f64, vec![batch, classes]);
+    bwd.push(Op::new("SoftmaxCrossEntropyWithLogits", "classifier".to_string(), OpClass::Reduction, 8.0 * b * classes as f64, 12.0 * b * classes as f64, vec![batch, classes]));
+    bwd.push(Op::new("MatMul", "pooler_grad".to_string(), OpClass::MatrixCompute, 4.0 * b * d * d, 4.0 * (b * d * 2.0 + d * d), vec![batch, cfg.d_model]));
+    weights.push(d * d + d);
+    weights.push(d * classes as f64 + classes as f64);
+
+    // optimizer (same per-tensor update ops as the CNN tape)
+    let mut opt = Vec::new();
+    for (i, &w) in weights.iter().enumerate() {
+        let layer = format!("training/update_{i}");
+        for name in ["Mul", "AssignSubVariableOp", "AssignAddVariableOp"] {
+            opt.push(Op::new(name, layer.clone(), OpClass::Optimizer, w, 12.0 * w, vec![w as usize]));
+        }
+    }
+
+    bwd.reverse();
+    ops.extend(bwd);
+    ops.extend(opt);
+    Graph {
+        model,
+        batch,
+        pixels: seq,
+        ops,
+        weight_elems: weights.iter().sum(),
+        act_elems: acts,
+    }
+}
+
+/// Small 4-layer encoder (d=256, h=4).
+pub fn transformer_small(batch: usize, seq: usize) -> Graph {
+    transformer(
+        ModelId::TransformerSmall,
+        &Cfg {
+            layers: 4,
+            d_model: 256,
+            heads: 4,
+            d_ff: 1024,
+            vocab: 30_522,
+        },
+        batch,
+        seq,
+    )
+}
+
+/// BERT-base: 12 layers, d=768, h=12.
+pub fn bert_base(batch: usize, seq: usize) -> Graph {
+    transformer(
+        ModelId::BertBase,
+        &Cfg {
+            layers: 12,
+            d_model: 768,
+            heads: 12,
+            d_ff: 3072,
+            vocab: 30_522,
+        },
+        batch,
+        seq,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    #[test]
+    fn bert_base_param_count_ballpark() {
+        // published ~110M parameters
+        let g = bert_base(8, 128);
+        assert!((0.8e8..1.4e8).contains(&g.weight_elems), "{:.3e}", g.weight_elems);
+    }
+
+    #[test]
+    fn vocabulary_closed() {
+        for g in [transformer_small(8, 128), bert_base(4, 64)] {
+            for op in &g.ops {
+                assert!(ops::in_vocabulary(op.name), "{} not in vocabulary", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_quadratic_in_sequence() {
+        let f128 = transformer_small(8, 128).total_flops();
+        let f512 = transformer_small(8, 512).total_flops();
+        let r = f512 / f128;
+        // linear terms give 4x; attention pushes beyond
+        assert!(r > 4.5, "seq scaling {r}");
+    }
+
+    #[test]
+    fn transformer_ops_unseen_in_cnn_corpus() {
+        let g = transformer_small(8, 128);
+        assert!(g.ops.iter().any(|o| o.name == "BatchMatMulV2"));
+        assert!(g.ops.iter().any(|o| o.name == "Erf"));
+        // and the CNN zoo never emits them
+        let cnn = crate::models::build(crate::models::ModelId::ResNet50, 8, 64).unwrap();
+        assert!(!cnn.ops.iter().any(|o| o.name == "BatchMatMulV2" || o.name == "Erf"));
+    }
+}

@@ -1,0 +1,57 @@
+//! VGG family (Simonyan & Zisserman 2015), configurations A/B/D/E.
+
+use super::builder::{BuildError, Pad, Tape};
+use super::{Graph, ModelId};
+
+/// Conv layers per stage (all 3x3), stages separated by 2x2 maxpool.
+fn stages(model: ModelId) -> [usize; 5] {
+    match model {
+        ModelId::Vgg11 => [1, 1, 2, 2, 2],
+        ModelId::Vgg13 => [2, 2, 2, 2, 2],
+        ModelId::Vgg16 => [2, 2, 3, 3, 3],
+        ModelId::Vgg19 => [2, 2, 4, 4, 4],
+        _ => unreachable!("not a VGG model"),
+    }
+}
+
+const WIDTHS: [usize; 5] = [64, 128, 256, 512, 512];
+
+pub fn vgg(model: ModelId, batch: usize, pixels: usize) -> Result<Graph, BuildError> {
+    let mut t = Tape::new(model, batch, pixels);
+    for (reps, width) in stages(model).into_iter().zip(WIDTHS) {
+        for _ in 0..reps {
+            t.conv(3, width, 1, Pad::Same)?.act();
+        }
+        t.maxpool(2, 2, Pad::Same)?;
+    }
+    t.dense(4096).act();
+    t.dense(4096).act();
+    Ok(t.classifier(1000))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_has_13_convs() {
+        let g = vgg(ModelId::Vgg16, 1, 224).unwrap();
+        let convs = g.ops.iter().filter(|o| o.name == "Conv2D").count();
+        assert_eq!(convs, 13);
+    }
+
+    #[test]
+    fn deeper_vgg_more_flops() {
+        let f11 = vgg(ModelId::Vgg11, 16, 128).unwrap().total_flops();
+        let f13 = vgg(ModelId::Vgg13, 16, 128).unwrap().total_flops();
+        let f16 = vgg(ModelId::Vgg16, 16, 128).unwrap().total_flops();
+        let f19 = vgg(ModelId::Vgg19, 16, 128).unwrap().total_flops();
+        assert!(f11 < f13 && f13 < f16 && f16 < f19);
+    }
+
+    #[test]
+    fn vgg_works_at_32px() {
+        // 32 / 2^5 = 1 — dense head sits on 1x1x512.
+        assert!(vgg(ModelId::Vgg16, 16, 32).is_ok());
+    }
+}

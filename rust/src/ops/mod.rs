@@ -1,0 +1,187 @@
+//! CNN operations with TF-Profiler-style names and roofline accounting.
+//!
+//! Each [`Op`] carries the exact operation name TensorFlow's profiler
+//! reports (the *feature identity* PROFET's name-clustering operates on),
+//! plus the FLOPs / bytes / output-element counts the simulator's cost
+//! model consumes. Backward ops are first-class — PROFET profiles whole
+//! training steps, so Conv2DBackpropFilter etc. dominate real profiles.
+
+use std::fmt;
+
+/// Broad cost-model class of an op (efficiency bands differ per class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Dense conv/matmul compute — can use tensor cores.
+    MatrixCompute,
+    /// Depthwise conv — bandwidth-bound on GPUs.
+    Depthwise,
+    /// Elementwise map (ReLU, Add, Mul, casts).
+    Elementwise,
+    /// Window reductions (pooling).
+    Pooling,
+    /// Normalization (fused batch norm).
+    Normalization,
+    /// Full/axis reductions (Mean, Sum, Softmax, ArgMax).
+    Reduction,
+    /// Layout/data movement (ConcatV2, Slice, Pad, Tile, Transpose).
+    DataMovement,
+    /// Optimizer variable updates.
+    Optimizer,
+}
+
+/// One profiled operation instance (one layer-level kernel invocation).
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// TF-profiler operation name, e.g. "Conv2DBackpropFilter". This is
+    /// the string PROFET's Levenshtein clustering sees.
+    pub name: &'static str,
+    /// Layer instance name, e.g. "conv2d_3" (operation-details field; the
+    /// part PROFET deliberately does NOT use as a model feature).
+    pub layer: String,
+    pub class: OpClass,
+    /// Floating-point operations for one mini-batch execution.
+    pub flops: f64,
+    /// Bytes moved to/from device memory (inputs + outputs + weights).
+    pub bytes: f64,
+    /// Output tensor element count (parallelism proxy for utilization).
+    pub out_elems: f64,
+    /// Output tensor shape as reported by the profiler (for records).
+    pub out_shape: Vec<usize>,
+}
+
+impl Op {
+    pub fn new(
+        name: &'static str,
+        layer: impl Into<String>,
+        class: OpClass,
+        flops: f64,
+        bytes: f64,
+        out_shape: Vec<usize>,
+    ) -> Self {
+        let out_elems = out_shape.iter().product::<usize>() as f64;
+        Self {
+            name,
+            layer: layer.into(),
+            class,
+            flops,
+            bytes,
+            out_elems,
+            out_shape,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}({}) flops={:.3e} bytes={:.3e}",
+            self.name, self.layer, self.flops, self.bytes
+        )
+    }
+}
+
+/// The op-name vocabulary the simulator can emit. Kept here so tests can
+/// assert the clustering corpus stays inside the expected universe.
+pub const VOCABULARY: &[&str] = &[
+    "Conv2D",
+    "Conv2DBackpropFilter",
+    "Conv2DBackpropInput",
+    "DepthwiseConv2dNative",
+    "DepthwiseConv2dNativeBackpropFilter",
+    "DepthwiseConv2dNativeBackpropInput",
+    "MatMul",
+    "BiasAdd",
+    "BiasAddGrad",
+    "Relu",
+    "ReluGrad",
+    "Relu6",
+    "Relu6Grad",
+    "MaxPool",
+    "MaxPoolGrad",
+    "AvgPool",
+    "AvgPoolGrad",
+    "Mean",
+    "Tile",
+    "FusedBatchNormV3",
+    "FusedBatchNormGradV3",
+    "RsqrtGrad",
+    "AddV2",
+    "AddN",
+    "ConcatV2",
+    "Slice",
+    "Pad",
+    "Softmax",
+    "SoftmaxCrossEntropyWithLogits",
+    "ArgMax",
+    "Mul",
+    "Sub",
+    "Sum",
+    "Cast",
+    "Transpose",
+    "Reshape",
+    "AssignSubVariableOp",
+    "AssignAddVariableOp",
+    // transformer extension (Sec VII "non-CNN models"): attention + GeLU +
+    // layer-norm + embedding vocabulary
+    "BatchMatMulV2",
+    "Erf",
+    "SquaredDifference",
+    "Rsqrt",
+    "GatherV2",
+    "UnsortedSegmentSum",
+    "Tanh",
+];
+
+/// True if `name` is in the simulator's op vocabulary.
+pub fn in_vocabulary(name: &str) -> bool {
+    VOCABULARY.contains(&name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_unique_and_nonempty() {
+        let mut v = VOCABULARY.to_vec();
+        v.sort();
+        v.dedup();
+        assert_eq!(v.len(), VOCABULARY.len(), "duplicate vocabulary entries");
+        assert!(VOCABULARY.len() >= 30);
+    }
+
+    #[test]
+    fn op_elems_from_shape() {
+        let op = Op::new("Conv2D", "conv2d_0", OpClass::MatrixCompute, 1e9, 1e6, vec![16, 32, 32, 64]);
+        assert_eq!(op.out_elems, (16 * 32 * 32 * 64) as f64);
+    }
+
+    #[test]
+    fn paper_cluster_examples_in_vocabulary() {
+        // Sec III-B3 lists representative clusters; all members must be
+        // emittable by our simulator.
+        for name in [
+            "FusedBatchNormV3",
+            "FusedBatchNormGradV3",
+            "AssignSubVariableOp",
+            "AssignAddVariableOp",
+            "Softmax",
+            "ArgMax",
+            "MaxPoolGrad",
+            "AvgPoolGrad",
+            "DepthwiseConv2dNativeBackpropInput",
+            "DepthwiseConv2dNativeBackpropFilter",
+            "BiasAddGrad",
+            "BiasAdd",
+            "MatMul",
+            "MaxPool",
+            "AvgPool",
+            "Relu6Grad",
+            "RsqrtGrad",
+            "ReluGrad",
+        ] {
+            assert!(in_vocabulary(name), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Batch / input-pixel-size latency model (paper Sec III-C2, Fig 7):
+//! per-instance min-max-scaled order-2 polynomial + Eq. 1 denormalization.
+
+use crate::data::Corpus;
+use crate::gpu::Instance;
+use crate::ml::{MinMaxScaler, PolyRegression};
+use crate::sim::workload::{BATCHES, PIXELS};
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Normalize a batch size to [0,1] over the paper's [16, 256] range.
+pub fn norm_batch(b: usize) -> f64 {
+    (b as f64 - BATCHES[0] as f64) / (BATCHES[4] as f64 - BATCHES[0] as f64)
+}
+
+/// Normalize a pixel size to [0,1] over the paper's [32, 256] range.
+pub fn norm_pixels(p: usize) -> f64 {
+    (p as f64 - PIXELS[0] as f64) / (PIXELS[4] as f64 - PIXELS[0] as f64)
+}
+
+/// Per-instance polynomial scalers for batch and pixel interpolation.
+pub struct BatchPixelModel {
+    pub instance: Instance,
+    pub batch_poly: PolyRegression,
+    pub pixel_poly: PolyRegression,
+    pub order: usize,
+}
+
+impl BatchPixelModel {
+    /// Fit from the corpus restricted to `idx` entries on `instance`.
+    ///
+    /// Training input (Fig 7): for each (model, pixels) group with
+    /// observations at min AND max batch, normalize every observed latency
+    /// by that group's min/max-batch latencies and regress T_N over the
+    /// normalized batch size (pixels analogous).
+    pub fn fit(corpus: &Corpus, idx: &[usize], instance: Instance, order: usize) -> Result<BatchPixelModel> {
+        let mut bx = Vec::new();
+        let mut by = Vec::new();
+        let mut px = Vec::new();
+        let mut py = Vec::new();
+
+        // group latency lookup: (model, pixels) -> batch -> latency
+        let mut by_batch: BTreeMap<(String, usize), BTreeMap<usize, f64>> = BTreeMap::new();
+        let mut by_pixel: BTreeMap<(String, usize), BTreeMap<usize, f64>> = BTreeMap::new();
+        for &i in idx {
+            let e = &corpus.entries[i];
+            let Some(run) = e.runs.get(&instance) else {
+                continue;
+            };
+            by_batch
+                .entry((e.workload.model.name().into(), e.workload.pixels))
+                .or_default()
+                .insert(e.workload.batch, run.latency_ms);
+            by_pixel
+                .entry((e.workload.model.name().into(), e.workload.batch))
+                .or_default()
+                .insert(e.workload.pixels, run.latency_ms);
+        }
+
+        let bmin = BATCHES[0];
+        let bmax = BATCHES[4];
+        for latencies in by_batch.values() {
+            let (Some(&tmin), Some(&tmax)) = (latencies.get(&bmin), latencies.get(&bmax)) else {
+                continue;
+            };
+            let sc = MinMaxScaler::from_bounds(tmin, tmax);
+            for (&b, &t) in latencies {
+                bx.push(norm_batch(b));
+                by.push(sc.transform(t));
+            }
+        }
+        let pmin = PIXELS[0];
+        let pmax = PIXELS[4];
+        for latencies in by_pixel.values() {
+            let (Some(&tmin), Some(&tmax)) = (latencies.get(&pmin), latencies.get(&pmax)) else {
+                continue;
+            };
+            let sc = MinMaxScaler::from_bounds(tmin, tmax);
+            for (&p, &t) in latencies {
+                px.push(norm_pixels(p));
+                py.push(sc.transform(t));
+            }
+        }
+
+        anyhow::ensure!(bx.len() > order && px.len() > order, "too few groups on {instance}");
+        Ok(BatchPixelModel {
+            instance,
+            batch_poly: PolyRegression::fit(&bx, &by, order)?,
+            pixel_poly: PolyRegression::fit(&px, &py, order)?,
+            order,
+        })
+    }
+
+    /// Predict latency at batch `b` given the min/max-batch latencies
+    /// (true-measured or cross-instance-predicted) — Eq. 1.
+    pub fn predict_batch(&self, b: usize, t_min: f64, t_max: f64) -> f64 {
+        let tn = self.batch_poly.predict(norm_batch(b));
+        MinMaxScaler::from_bounds(t_min, t_max).inverse(tn)
+    }
+
+    /// Predict latency at pixel size `p` given min/max-pixel latencies.
+    pub fn predict_pixels(&self, p: usize, t_min: f64, t_max: f64) -> f64 {
+        let tn = self.pixel_poly.predict(norm_pixels(p));
+        MinMaxScaler::from_bounds(t_min, t_max).inverse(tn)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("instance", Json::Str(self.instance.key().into()));
+        o.set("batch_poly", self.batch_poly.to_json());
+        o.set("pixel_poly", self.pixel_poly.to_json());
+        o.set("order", Json::Num(self.order as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<BatchPixelModel> {
+        Ok(BatchPixelModel {
+            instance: Instance::from_key(j.req_str("instance")?)
+                .ok_or_else(|| anyhow!("bad instance"))?,
+            batch_poly: PolyRegression::from_json(
+                j.get("batch_poly").ok_or_else(|| anyhow!("batch_poly"))?,
+            )?,
+            pixel_poly: PolyRegression::from_json(
+                j.get("pixel_poly").ok_or_else(|| anyhow!("pixel_poly"))?,
+            )?,
+            order: j.req_usize("order")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm_batch(16), 0.0);
+        assert_eq!(norm_batch(256), 1.0);
+        assert!((norm_batch(136) - 0.5).abs() < 1e-12);
+        assert_eq!(norm_pixels(32), 0.0);
+        assert_eq!(norm_pixels(256), 1.0);
+    }
+
+    #[test]
+    fn endpoints_recover_bounds_exactly_in_theory() {
+        // a model fitted on perfectly normalized data maps 0->t_min, 1->t_max
+        let bx = [0.0, 0.25, 0.5, 0.75, 1.0];
+        let by = [0.0, 0.2, 0.45, 0.7, 1.0];
+        let poly = PolyRegression::fit(&bx, &by, 2).unwrap();
+        let m = BatchPixelModel {
+            instance: Instance::P3,
+            batch_poly: poly.clone(),
+            pixel_poly: poly,
+            order: 2,
+        };
+        let p16 = m.predict_batch(16, 100.0, 900.0);
+        let p256 = m.predict_batch(256, 100.0, 900.0);
+        assert!((p16 - 100.0).abs() < 30.0, "{p16}");
+        assert!((p256 - 900.0).abs() < 30.0, "{p256}");
+        // interior strictly between
+        let p64 = m.predict_batch(64, 100.0, 900.0);
+        assert!(p64 > 100.0 && p64 < 900.0);
+    }
+}

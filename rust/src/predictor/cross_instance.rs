@@ -1,0 +1,205 @@
+//! Cross-instance latency model f_{g_a → g_t} (paper Sec III-C1, Fig 6):
+//! a median ensemble of {linear (on anchor batch latency), random forest,
+//! DNN (HLO-driven)} trained on D_{g_a → g_t}.
+
+use crate::data::Corpus;
+use crate::dnn::{DnnRegressor, TrainConfig};
+use crate::features::FeatureSpace;
+use crate::gpu::Instance;
+use crate::ml::{LinearRegression, RandomForest};
+use crate::runtime::Runtime;
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+
+/// Which ensemble member supplied the median (Fig 10's pick-rate stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Member {
+    Linear,
+    Forest,
+    Dnn,
+}
+
+impl Member {
+    pub fn name(self) -> &'static str {
+        match self {
+            Member::Linear => "Linear",
+            Member::Forest => "RandomForest",
+            Member::Dnn => "DNN",
+        }
+    }
+}
+
+/// The per-(anchor, target) ensemble.
+pub struct CrossInstanceModel {
+    pub anchor: Instance,
+    pub target: Instance,
+    pub linear: LinearRegression,
+    pub forest: RandomForest,
+    pub dnn: DnnRegressor,
+}
+
+/// Hyper-parameters for ensemble training.
+#[derive(Debug, Clone, Copy)]
+pub struct EnsembleConfig {
+    pub n_trees: usize,
+    pub dnn_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for EnsembleConfig {
+    fn default() -> Self {
+        Self {
+            n_trees: 100,
+            dnn_epochs: 60,
+            seed: 0x9e37,
+        }
+    }
+}
+
+impl CrossInstanceModel {
+    /// Assemble the training matrix D_{g_a → g_t} from corpus entries
+    /// (indices) that have observations on both instances.
+    pub fn training_rows(
+        fs: &FeatureSpace,
+        corpus: &Corpus,
+        idx: &[usize],
+        anchor: Instance,
+        target: Instance,
+    ) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+        let mut x = Vec::new();
+        let mut anchor_lat = Vec::new();
+        let mut y = Vec::new();
+        for &i in idx {
+            let e = &corpus.entries[i];
+            let (Some(a), Some(t)) = (e.runs.get(&anchor), e.runs.get(&target)) else {
+                continue;
+            };
+            x.push(fs.vectorize(&a.profile));
+            anchor_lat.push(a.latency_ms);
+            y.push(t.latency_ms);
+        }
+        (x, anchor_lat, y)
+    }
+
+    /// Fit all three members.
+    pub fn fit(
+        rt: &Runtime,
+        fs: &FeatureSpace,
+        corpus: &Corpus,
+        train_idx: &[usize],
+        anchor: Instance,
+        target: Instance,
+        cfg: EnsembleConfig,
+    ) -> Result<CrossInstanceModel> {
+        let (x, anchor_lat, y) = Self::training_rows(fs, corpus, train_idx, anchor, target);
+        anyhow::ensure!(
+            x.len() >= 20,
+            "too few paired observations ({}) for {anchor}->{target}",
+            x.len()
+        );
+        let lin_x: Vec<Vec<f64>> = anchor_lat.iter().map(|v| vec![*v]).collect();
+        let linear = LinearRegression::fit(&lin_x, &y)?;
+        let forest = RandomForest::fit(&x, &y, cfg.n_trees, cfg.seed)?;
+        let dnn = DnnRegressor::fit(
+            rt,
+            &x,
+            &y,
+            TrainConfig {
+                epochs: cfg.dnn_epochs,
+                seed: cfg.seed,
+            },
+        )?;
+        Ok(CrossInstanceModel {
+            anchor,
+            target,
+            linear,
+            forest,
+            dnn,
+        })
+    }
+
+    /// Median-ensemble prediction for one workload.
+    pub fn predict(
+        &self,
+        rt: &Runtime,
+        features: &[f64],
+        anchor_latency_ms: f64,
+    ) -> Result<(f64, Member)> {
+        let l = self.linear.predict_one(&[anchor_latency_ms]);
+        let f = self.forest.predict_one(features);
+        let d = self.dnn.predict_one(rt, features)?;
+        Ok(median3(l, f, d))
+    }
+
+    /// Batched median-ensemble prediction (one DNN artifact call per
+    /// `b_pred` rows — the serving hot path).
+    pub fn predict_batch(
+        &self,
+        rt: &Runtime,
+        features: &[Vec<f64>],
+        anchor_latency_ms: &[f64],
+    ) -> Result<Vec<(f64, Member)>> {
+        anyhow::ensure!(features.len() == anchor_latency_ms.len(), "len mismatch");
+        let d = self.dnn.predict(rt, features)?;
+        Ok(features
+            .iter()
+            .zip(anchor_latency_ms)
+            .zip(d)
+            .map(|((x, &al), dv)| {
+                let l = self.linear.predict_one(&[al]);
+                let f = self.forest.predict_one(x);
+                median3(l, f, dv)
+            })
+            .collect())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("anchor", Json::Str(self.anchor.key().into()));
+        o.set("target", Json::Str(self.target.key().into()));
+        o.set("linear", self.linear.to_json());
+        o.set("forest", self.forest.to_json());
+        o.set("dnn", self.dnn.to_json());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<CrossInstanceModel> {
+        let inst = |k: &str| -> Result<Instance> {
+            Instance::from_key(j.req_str(k)?).ok_or_else(|| anyhow!("bad instance"))
+        };
+        Ok(CrossInstanceModel {
+            anchor: inst("anchor")?,
+            target: inst("target")?,
+            linear: LinearRegression::from_json(j.get("linear").ok_or_else(|| anyhow!("linear"))?)?,
+            forest: RandomForest::from_json(j.get("forest").ok_or_else(|| anyhow!("forest"))?)?,
+            dnn: DnnRegressor::from_json(j.get("dnn").ok_or_else(|| anyhow!("dnn"))?)?,
+        })
+    }
+}
+
+/// Median of three values, tagged with its source.
+fn median3(l: f64, f: f64, d: f64) -> (f64, Member) {
+    let mut v = [(l, Member::Linear), (f, Member::Forest), (d, Member::Dnn)];
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    v[1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median3_picks_middle() {
+        assert_eq!(median3(1.0, 2.0, 3.0), (2.0, Member::Forest));
+        assert_eq!(median3(5.0, 2.0, 3.0), (3.0, Member::Dnn));
+        assert_eq!(median3(5.0, 2.0, 4.0), (4.0, Member::Dnn));
+        assert_eq!(median3(2.0, 9.0, 1.0), (2.0, Member::Linear));
+    }
+
+    #[test]
+    fn median3_robust_to_one_outlier() {
+        // the ensemble's whole point: one wild member can't hurt
+        let (v, _) = median3(1e9, 10.0, 12.0);
+        assert!(v <= 12.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The PROFET predictor (paper Sec III-C): cross-instance median-ensemble
+//! models, batch/pixel-size polynomial models, and the end-to-end facade.
+
+mod batch_pixel;
+mod cross_instance;
+mod profet;
+
+pub use batch_pixel::BatchPixelModel;
+pub use cross_instance::{CrossInstanceModel, Member};
+pub use profet::{Profet, TrainOptions};

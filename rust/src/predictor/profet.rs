@@ -1,0 +1,238 @@
+//! The end-to-end PROFET facade (Fig 3): holds the fitted feature space,
+//! every cross-instance ensemble, and the per-instance batch/pixel models;
+//! persists to / loads from a model directory.
+
+use super::batch_pixel::BatchPixelModel;
+use super::cross_instance::{CrossInstanceModel, EnsembleConfig, Member};
+use crate::data::Corpus;
+use crate::features::FeatureSpace;
+use crate::gpu::Instance;
+use crate::runtime::Runtime;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Training options for the full system.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Anchor instances to train models *from*.
+    pub anchors: Vec<Instance>,
+    /// Target instances to train models *to*.
+    pub targets: Vec<Instance>,
+    /// Operation-name clustering on/off (Fig 13 ablation).
+    pub clustering: bool,
+    /// Polynomial order for the batch/pixel phase (Fig 12 ablation).
+    pub poly_order: usize,
+    /// Ensemble member hyper-parameters.
+    pub n_trees: usize,
+    pub dnn_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            anchors: Instance::CORE.to_vec(),
+            targets: Instance::CORE.to_vec(),
+            clustering: true,
+            poly_order: 2,
+            n_trees: 100,
+            dnn_epochs: 120,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// The trained system.
+pub struct Profet {
+    pub feature_space: FeatureSpace,
+    pub cross: BTreeMap<(Instance, Instance), CrossInstanceModel>,
+    pub scale: BTreeMap<Instance, BatchPixelModel>,
+}
+
+impl Profet {
+    /// Train everything from corpus entries `train_idx`.
+    pub fn train(
+        rt: &Runtime,
+        corpus: &Corpus,
+        train_idx: &[usize],
+        opts: &TrainOptions,
+    ) -> Result<Profet> {
+        // feature space from the *training* vocabulary only
+        let keep: std::collections::BTreeSet<usize> = train_idx.iter().copied().collect();
+        let mut vocab_set = std::collections::BTreeSet::new();
+        for (i, e) in corpus.entries.iter().enumerate() {
+            if !keep.contains(&i) {
+                continue;
+            }
+            for run in e.runs.values() {
+                for op in run.profile.keys() {
+                    vocab_set.insert(op.as_str());
+                }
+            }
+        }
+        let vocab: Vec<&str> = vocab_set.into_iter().collect();
+        let feature_space = FeatureSpace::fit(&vocab, opts.clustering, rt.meta.d_feat)?;
+
+        let mut cross = BTreeMap::new();
+        for &a in &opts.anchors {
+            for &t in &opts.targets {
+                if a == t {
+                    continue;
+                }
+                let m = CrossInstanceModel::fit(
+                    rt,
+                    &feature_space,
+                    corpus,
+                    train_idx,
+                    a,
+                    t,
+                    EnsembleConfig {
+                        n_trees: opts.n_trees,
+                        dnn_epochs: opts.dnn_epochs,
+                        seed: opts.seed ^ crate::util::seed_of(&[a.key(), t.key()]),
+                    },
+                )
+                .with_context(|| format!("cross model {a}->{t}"))?;
+                cross.insert((a, t), m);
+            }
+        }
+
+        let mut scale = BTreeMap::new();
+        for &g in opts.anchors.iter().chain(&opts.targets) {
+            if scale.contains_key(&g) {
+                continue;
+            }
+            if let Ok(m) = BatchPixelModel::fit(corpus, train_idx, g, opts.poly_order) {
+                scale.insert(g, m);
+            }
+        }
+
+        Ok(Profet {
+            feature_space,
+            cross,
+            scale,
+        })
+    }
+
+    /// Phase-1 prediction: latency of the profiled workload on `target`.
+    pub fn predict_cross(
+        &self,
+        rt: &Runtime,
+        anchor: Instance,
+        target: Instance,
+        profile: &BTreeMap<String, f64>,
+        anchor_latency_ms: f64,
+    ) -> Result<(f64, Member)> {
+        let model = self
+            .cross
+            .get(&(anchor, target))
+            .ok_or_else(|| anyhow!("no model for {anchor}->{target}"))?;
+        let x = self.feature_space.vectorize(profile);
+        model.predict(rt, &x, anchor_latency_ms)
+    }
+
+    /// Phase-2 prediction: latency at batch `b` on `instance`, given
+    /// min/max-batch latencies (measured or phase-1-predicted) — Fig 11.
+    pub fn predict_batch_size(
+        &self,
+        instance: Instance,
+        b: usize,
+        t_min: f64,
+        t_max: f64,
+    ) -> Result<f64> {
+        let m = self
+            .scale
+            .get(&instance)
+            .ok_or_else(|| anyhow!("no batch/pixel model for {instance}"))?;
+        Ok(m.predict_batch(b, t_min, t_max))
+    }
+
+    /// Phase-2 prediction for input pixel size.
+    pub fn predict_pixel_size(
+        &self,
+        instance: Instance,
+        p: usize,
+        t_min: f64,
+        t_max: f64,
+    ) -> Result<f64> {
+        let m = self
+            .scale
+            .get(&instance)
+            .ok_or_else(|| anyhow!("no batch/pixel model for {instance}"))?;
+        Ok(m.predict_pixels(p, t_min, t_max))
+    }
+
+    /// Full two-phase scenario (Fig 11 "Predict"): profiles of the min- and
+    /// max-batch workloads on the anchor → latency at batch `b` on target.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_scenario(
+        &self,
+        rt: &Runtime,
+        anchor: Instance,
+        target: Instance,
+        profile_min: &BTreeMap<String, f64>,
+        anchor_lat_min: f64,
+        profile_max: &BTreeMap<String, f64>,
+        anchor_lat_max: f64,
+        b: usize,
+    ) -> Result<f64> {
+        let (t_min, _) = self.predict_cross(rt, anchor, target, profile_min, anchor_lat_min)?;
+        let (t_max, _) = self.predict_cross(rt, anchor, target, profile_max, anchor_lat_max)?;
+        self.predict_batch_size(target, b, t_min, t_max)
+    }
+
+    /// Save to a directory (one JSON per component).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join("feature_space.json"),
+            self.feature_space.to_json().to_string(),
+        )?;
+        for ((a, t), m) in &self.cross {
+            std::fs::write(
+                dir.join(format!("cross_{}_{}.json", a.key(), t.key())),
+                m.to_json().to_string(),
+            )?;
+        }
+        for (g, m) in &self.scale {
+            std::fs::write(
+                dir.join(format!("scale_{}.json", g.key())),
+                m.to_json().to_string(),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Load a previously saved model directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Profet> {
+        let dir = dir.as_ref();
+        let fs_json = Json::parse(&std::fs::read_to_string(dir.join("feature_space.json"))?)?;
+        let feature_space = FeatureSpace::from_json(&fs_json)?;
+        let mut cross = BTreeMap::new();
+        let mut scale = BTreeMap::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if name.starts_with("cross_") && name.ends_with(".json") {
+                let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+                let m = CrossInstanceModel::from_json(&j)
+                    .with_context(|| format!("loading {name}"))?;
+                cross.insert((m.anchor, m.target), m);
+            } else if name.starts_with("scale_") && name.ends_with(".json") {
+                let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+                let m = BatchPixelModel::from_json(&j)?;
+                scale.insert(m.instance, m);
+            }
+        }
+        Ok(Profet {
+            feature_space,
+            cross,
+            scale,
+        })
+    }
+}

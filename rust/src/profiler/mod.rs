@@ -1,0 +1,85 @@
+//! TF-Profiler emulation: per-op records and the (operation → aggregated
+//! time) view PROFET consumes.
+//!
+//! Fig 4 of the paper: the profiler reports `Operation`, `Operation
+//! details` (layer name, output tensor, memory) and per-layer latencies;
+//! PROFET deliberately uses only the *aggregated* (Operation, Time) pairs
+//! so the internal architecture is never revealed. [`Profile::aggregated`]
+//! is exactly that view.
+
+use std::collections::BTreeMap;
+
+/// One profiler line (Fig 4): the full detail view. Everything except
+/// `op_name` and the time is "operation details" PROFET refuses to use.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub op_name: String,
+    pub layer_name: String,
+    pub output_shape: Vec<usize>,
+    pub mem_kb: f64,
+    pub time_ms: f64,
+}
+
+/// Profiling output for one workload execution on one instance.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    /// Detailed per-layer records (profiler's full table).
+    pub records: Vec<OpRecord>,
+    /// Mini-batch latency measured *with profiling enabled*, ms.
+    pub batch_latency_profiled_ms: f64,
+}
+
+impl Profile {
+    /// The abstracted (operation name → total ms) feature view — the only
+    /// thing a PROFET client uploads (black-box contract).
+    pub fn aggregated(&self) -> BTreeMap<String, f64> {
+        let mut agg: BTreeMap<String, f64> = BTreeMap::new();
+        for r in &self.records {
+            *agg.entry(r.op_name.clone()).or_insert(0.0) += r.time_ms;
+        }
+        agg
+    }
+
+    /// Number of distinct operation names.
+    pub fn distinct_ops(&self) -> usize {
+        self.aggregated().len()
+    }
+
+    /// Sum of all per-op times (ms) — close to, but below, the profiled
+    /// batch latency (which also contains host gaps).
+    pub fn total_op_time_ms(&self) -> f64 {
+        self.records.iter().map(|r| r.time_ms).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: &str, layer: &str, ms: f64) -> OpRecord {
+        OpRecord {
+            op_name: op.into(),
+            layer_name: layer.into(),
+            output_shape: vec![1],
+            mem_kb: 1.0,
+            time_ms: ms,
+        }
+    }
+
+    #[test]
+    fn aggregation_sums_by_op_name() {
+        let p = Profile {
+            records: vec![
+                rec("Conv2D", "conv2d_0", 50.0),
+                rec("Conv2D", "conv2d_1", 45.0),
+                rec("Relu", "activation_0", 11.0),
+            ],
+            batch_latency_profiled_ms: 120.0,
+        };
+        let agg = p.aggregated();
+        assert_eq!(agg["Conv2D"], 95.0);
+        assert_eq!(agg["Relu"], 11.0);
+        assert_eq!(p.distinct_ops(), 2);
+        assert!((p.total_op_time_ms() - 106.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,120 @@
+//! Artifact metadata (`artifacts/meta.json`) and the MLP parameter layout.
+//!
+//! The layout here must stay byte-identical to
+//! `python/compile/kernels/ref.py::mlp_param_sizes` — the flat vector the
+//! rust trainer holds is consumed directly by the HLO train step.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The paper's dense stack: 128x64x32x16x1 (Sec III-C1).
+pub const HIDDEN: [usize; 5] = [128, 64, 32, 16, 1];
+
+/// `[( (fan_in, fan_out), bias_len ), ...]` for the dense stack.
+pub fn mlp_param_sizes(d_in: usize) -> Vec<((usize, usize), usize)> {
+    let mut sizes = Vec::with_capacity(HIDDEN.len());
+    let mut prev = d_in;
+    for &h in HIDDEN.iter() {
+        sizes.push(((prev, h), h));
+        prev = h;
+    }
+    sizes
+}
+
+/// Total flat parameter count for input dim `d_in`.
+pub fn mlp_param_count(d_in: usize) -> usize {
+    mlp_param_sizes(d_in)
+        .iter()
+        .map(|((i, o), b)| i * o + b)
+        .sum()
+}
+
+/// Adam hyper-parameters recorded by the AOT step.
+#[derive(Debug, Clone)]
+pub struct AdamMeta {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+}
+
+/// Shapes the artifacts were lowered with (python/compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Clustered-feature vector width the MLP consumes (padded).
+    pub d_feat: usize,
+    /// Serving batch of `mlp_fwd.hlo.txt`.
+    pub b_pred: usize,
+    /// Training minibatch of `mlp_train.hlo.txt`.
+    pub b_train: usize,
+    /// Flat parameter count (must equal `mlp_param_count(d_feat)`).
+    pub param_count: usize,
+    /// Levenshtein artifact: pairs per call.
+    pub lev_k: usize,
+    /// Levenshtein artifact: padded name width.
+    pub lev_l: usize,
+    pub hidden: Vec<usize>,
+    pub adam: AdamMeta,
+}
+
+impl ArtifactMeta {
+    /// Parse `meta.json`, validating the parameter-count invariant.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let adam = j
+            .get("adam")
+            .ok_or_else(|| anyhow::anyhow!("missing adam block"))?;
+        let meta = Self {
+            d_feat: j.req_usize("d_feat")?,
+            b_pred: j.req_usize("b_pred")?,
+            b_train: j.req_usize("b_train")?,
+            param_count: j.req_usize("param_count")?,
+            lev_k: j.req_usize("lev_k")?,
+            lev_l: j.req_usize("lev_l")?,
+            hidden: j
+                .req_arr("hidden")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            adam: AdamMeta {
+                lr: adam.req_f64("lr")?,
+                b1: adam.req_f64("b1")?,
+                b2: adam.req_f64("b2")?,
+                eps: adam.req_f64("eps")?,
+            },
+        };
+        anyhow::ensure!(
+            meta.param_count == mlp_param_count(meta.d_feat),
+            "meta.json param_count {} != layout {}",
+            meta.param_count,
+            mlp_param_count(meta.d_feat)
+        );
+        anyhow::ensure!(meta.hidden == HIDDEN.to_vec(), "hidden layout mismatch");
+        Ok(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_python() {
+        // D=48 reference value (same formula asserted in python tests).
+        let want = 48 * 128 + 128 + 128 * 64 + 64 + 64 * 32 + 32 + 32 * 16 + 16 + 16 + 1;
+        assert_eq!(mlp_param_count(48), want);
+    }
+
+    #[test]
+    fn sizes_chain() {
+        let sizes = mlp_param_sizes(10);
+        assert_eq!(sizes[0].0, (10, 128));
+        assert_eq!(sizes[4].0, (16, 1));
+        for w in sizes.windows(2) {
+            assert_eq!(w[0].0 .1, w[1].0 .0, "fan-out chains to fan-in");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only bridge between the rust coordinator and the JAX/Pallas
+//! build products. Artifacts are HLO *text* (`artifacts/*.hlo.txt`) because
+//! jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! python/compile/aot.py and DESIGN.md §3).
+//!
+//! One [`Runtime`] owns the PJRT CPU client plus one compiled executable
+//! per artifact; [`MlpState`] threads the flat parameter/optimizer vectors
+//! through train steps without any pytree reconstruction.
+
+mod artifact;
+
+pub use artifact::{ArtifactMeta, mlp_param_count, mlp_param_sizes};
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Names of the three artifacts produced by `make artifacts`.
+pub const ART_MLP_FWD: &str = "mlp_fwd";
+pub const ART_MLP_TRAIN: &str = "mlp_train";
+pub const ART_LEVENSHTEIN: &str = "levenshtein";
+
+/// Flat DNN training state (mirrors python/compile/model.py::train_step).
+#[derive(Debug, Clone)]
+pub struct MlpState {
+    /// Flat parameter vector, length `meta.param_count`.
+    pub params: Vec<f32>,
+    /// Adam first-moment vector.
+    pub m: Vec<f32>,
+    /// Adam second-moment vector.
+    pub v: Vec<f32>,
+    /// Step counter (f32 scalar in the artifact signature).
+    pub t: f32,
+}
+
+impl MlpState {
+    /// He-uniform init of the dense stack (biases zero), deterministic.
+    pub fn init(d_feat: usize, seed: u64) -> Self {
+        let mut rng = crate::util::Rng64::new(seed);
+        let mut params = vec![0f32; mlp_param_count(d_feat)];
+        let mut off = 0;
+        for ((wi, wo), bo) in mlp_param_sizes(d_feat) {
+            let lim = (6.0 / wi as f64).sqrt();
+            for p in params[off..off + wi * wo].iter_mut() {
+                *p = rng.range(-lim, lim) as f32;
+            }
+            off += wi * wo + bo; // biases stay zero
+        }
+        let n = params.len();
+        Self {
+            params,
+            m: vec![0f32; n],
+            v: vec![0f32; n],
+            t: 0.0,
+        }
+    }
+}
+
+/// PJRT CPU runtime holding the compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    fwd: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    lev: xla::PjRtLoadedExecutable,
+    /// Shapes/dims the artifacts were lowered with.
+    pub meta: ArtifactMeta,
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from a directory (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta = ArtifactMeta::load(dir.join("meta.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))
+        };
+        Ok(Self {
+            fwd: compile(ART_MLP_FWD)?,
+            train: compile(ART_MLP_TRAIN)?,
+            lev: compile(ART_LEVENSHTEIN)?,
+            client,
+            meta,
+        })
+    }
+
+    /// Backend platform name (always "cpu"/"Host" here).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 && dims[0] as usize == data.len() {
+            Ok(lit)
+        } else {
+            lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+        }
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 && dims[0] as usize == data.len() {
+            Ok(lit)
+        } else {
+            lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+        }
+    }
+
+    fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// Batched MLP inference: `x` is row-major `[b_pred, d_feat]`.
+    /// Returns `yhat[b_pred]`.
+    pub fn mlp_forward(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        anyhow::ensure!(params.len() == m.param_count, "param len");
+        anyhow::ensure!(x.len() == m.b_pred * m.d_feat, "x len");
+        let args = [
+            Self::lit_f32(params, &[m.param_count as i64])?,
+            Self::lit_f32(x, &[m.b_pred as i64, m.d_feat as i64])?,
+        ];
+        let out = Self::run(&self.fwd, &args)?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("fwd out: {e:?}"))
+    }
+
+    /// One Adam train step over a `[b_train, d_feat]` minibatch.
+    /// Mutates `state` in place and returns the step loss.
+    pub fn train_step(&self, state: &mut MlpState, x: &[f32], y: &[f32]) -> Result<f32> {
+        let m = &self.meta;
+        anyhow::ensure!(x.len() == m.b_train * m.d_feat, "x len");
+        anyhow::ensure!(y.len() == m.b_train, "y len");
+        let p = m.param_count as i64;
+        let args = [
+            Self::lit_f32(&state.params, &[p])?,
+            Self::lit_f32(&state.m, &[p])?,
+            Self::lit_f32(&state.v, &[p])?,
+            Self::lit_f32(&[state.t], &[])?,
+            Self::lit_f32(x, &[m.b_train as i64, m.d_feat as i64])?,
+            Self::lit_f32(y, &[m.b_train as i64])?,
+        ];
+        let out = Self::run(&self.train, &args)?;
+        anyhow::ensure!(out.len() == 5, "train step arity {}", out.len());
+        state.params = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.m = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.v = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.t = out[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let loss = out[4].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(loss)
+    }
+
+    /// Batched Levenshtein over `lev_k` padded name pairs of width `lev_l`.
+    pub fn levenshtein(
+        &self,
+        a: &[i32],
+        b: &[i32],
+        la: &[i32],
+        lb: &[i32],
+    ) -> Result<Vec<i32>> {
+        let m = &self.meta;
+        let (k, l) = (m.lev_k, m.lev_l);
+        anyhow::ensure!(a.len() == k * l && b.len() == k * l, "pair matrix len");
+        anyhow::ensure!(la.len() == k && lb.len() == k, "length vec len");
+        let args = [
+            Self::lit_i32(a, &[k as i64, l as i64])?,
+            Self::lit_i32(b, &[k as i64, l as i64])?,
+            Self::lit_i32(la, &[k as i64])?,
+            Self::lit_i32(lb, &[k as i64])?,
+        ];
+        let out = Self::run(&self.lev, &args)?;
+        out[0].to_vec::<i32>().map_err(|e| anyhow!("lev out: {e:?}"))
+    }
+
+    /// Levenshtein over arbitrary-many string pairs, chunked into the fixed
+    /// artifact batch. Strings longer than `lev_l` are truncated (profiler
+    /// op names are all shorter in practice).
+    pub fn levenshtein_strs(&self, pairs: &[(&str, &str)]) -> Result<Vec<i32>> {
+        let (k, l) = (self.meta.lev_k, self.meta.lev_l);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(k) {
+            let mut a = vec![0i32; k * l];
+            let mut b = vec![0i32; k * l];
+            let mut la = vec![0i32; k];
+            let mut lb = vec![0i32; k];
+            for (i, (s1, s2)) in chunk.iter().enumerate() {
+                for (j, c) in s1.chars().take(l).enumerate() {
+                    a[i * l + j] = c as i32;
+                }
+                for (j, c) in s2.chars().take(l).enumerate() {
+                    b[i * l + j] = c as i32;
+                }
+                la[i] = s1.chars().count().min(l) as i32;
+                lb[i] = s2.chars().count().min(l) as i32;
+            }
+            let d = self.levenshtein(&a, &b, &la, &lb)?;
+            out.extend_from_slice(&d[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory: `$REPRO_ARTIFACTS` or `artifacts/`
+/// relative to the crate root (works from tests/benches/examples).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("artifacts")
+}
+
+/// Load the runtime from the default artifact location with a helpful error.
+pub fn load_default() -> Result<Runtime> {
+    let dir = default_artifact_dir();
+    Runtime::load(&dir).with_context(|| {
+        format!(
+            "loading artifacts from {} — run `make artifacts` first",
+            dir.display()
+        )
+    })
+}

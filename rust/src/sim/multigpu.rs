@@ -1,0 +1,145 @@
+//! Multi-GPU data-parallel training simulation + the static-multiplier
+//! predictor (paper Sec VII, citing Hafeez et al.: "as more GPUs are added
+//! for CNN training, the performance gain ratio becomes more static,
+//! regardless of GPU instance type").
+//!
+//! Data-parallel step: per-GPU compute on batch/N + ring all-reduce of the
+//! gradients over the node interconnect + a per-step synchronization tax.
+
+use crate::gpu::{GpuSpec, Instance};
+use crate::models::ModelId;
+use crate::sim::{self, Workload};
+
+/// Intra-node GPU interconnect bandwidth, GB/s (NVLink on p3, PCIe peer
+/// transfers elsewhere).
+fn interconnect_gbs(gpu: &GpuSpec) -> f64 {
+    match gpu.instance {
+        Instance::P3 => 150.0, // NVLink
+        Instance::G5 => 64.0,  // PCIe gen4
+        _ => gpu.pcie_gbs,     // PCIe peer-to-peer
+    }
+}
+
+/// Simulated data-parallel step latency (ms) for `n_gpus` on one node.
+/// The *global* batch is split evenly; returns None when the per-GPU
+/// shard is not executable (model constraint / too-small shard / OOM).
+pub fn multi_gpu_latency(
+    model: ModelId,
+    global_batch: usize,
+    pixels: usize,
+    instance: Instance,
+    n_gpus: usize,
+) -> Option<f64> {
+    assert!(n_gpus >= 1);
+    if global_batch % n_gpus != 0 {
+        return None;
+    }
+    let shard = global_batch / n_gpus;
+    if shard == 0 {
+        return None;
+    }
+    let w = Workload::new(model, shard, pixels);
+    let graph = w.graph().ok()?;
+    let gpu = instance.spec();
+    if !sim::fits_in_memory(&graph, gpu) {
+        return None;
+    }
+    let compute_ms = sim::execute(&graph, gpu).batch_latency_ms;
+    if n_gpus == 1 {
+        return Some(compute_ms);
+    }
+    // ring all-reduce: each GPU sends/receives 2(N-1)/N of the gradient set
+    let grad_bytes = graph.weight_elems * 4.0;
+    let allreduce_ms =
+        2.0 * (n_gpus as f64 - 1.0) / n_gpus as f64 * grad_bytes / (interconnect_gbs(gpu) * 1e9)
+            * 1e3;
+    // per-step NCCL launch/sync tax grows with the ring size
+    let sync_ms = 0.3 * (n_gpus as f64).log2().max(1.0);
+    Some(compute_ms + allreduce_ms + sync_ms)
+}
+
+/// Hafeez-style static multiplier: the mean latency ratio
+/// `t(N gpus, global batch B) / t(1 gpu, B)` measured over a calibration
+/// model set, per (instance, N). PROFET predicts the 1-GPU latency; the
+/// multiplier extends it to N GPUs.
+pub fn static_multiplier(
+    instance: Instance,
+    n_gpus: usize,
+    calibration: &[(ModelId, usize, usize)],
+) -> Option<f64> {
+    let mut ratios = Vec::new();
+    for &(m, b, p) in calibration {
+        let t1 = multi_gpu_latency(m, b, p, instance, 1)?;
+        if let Some(tn) = multi_gpu_latency(m, b, p, instance, n_gpus) {
+            ratios.push(tn / t1);
+        }
+    }
+    if ratios.is_empty() {
+        None
+    } else {
+        Some(crate::util::mean(&ratios))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_gpu_matches_plain_execute() {
+        let t1 = multi_gpu_latency(ModelId::ResNet18, 64, 64, Instance::P3, 1).unwrap();
+        let w = Workload::new(ModelId::ResNet18, 64, 64);
+        let plain = sim::run_workload(&w, Instance::P3).unwrap().latency_ms;
+        assert!((t1 - plain).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_is_sublinear_speedup() {
+        // 4 GPUs never reach 4x and never get slower than 1 GPU for big jobs
+        let t1 = multi_gpu_latency(ModelId::Vgg16, 128, 64, Instance::P3, 1).unwrap();
+        let t4 = multi_gpu_latency(ModelId::Vgg16, 128, 64, Instance::P3, 4).unwrap();
+        let speedup = t1 / t4;
+        assert!(speedup > 1.5 && speedup < 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn vgg16_oom_shard_rejected() {
+        // VGG16 b128@128px keeps ~14 GB of activations: no fit on 16 GB.
+        assert!(multi_gpu_latency(ModelId::Vgg16, 128, 128, Instance::P3, 1).is_none());
+        // splitting across 4 GPUs shrinks the shard and it fits again
+        assert!(multi_gpu_latency(ModelId::Vgg16, 128, 128, Instance::P3, 4).is_some());
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_on_allreduce_heavy_models() {
+        // AlexNet: 60M params (244 MB gradients) but little compute — the
+        // all-reduce dominates, so the interconnect decides the scaling.
+        let p3 = {
+            let t1 = multi_gpu_latency(ModelId::AlexNet, 128, 32, Instance::P3, 1).unwrap();
+            let t4 = multi_gpu_latency(ModelId::AlexNet, 128, 32, Instance::P3, 4).unwrap();
+            t1 / t4
+        };
+        let g3s = {
+            let t1 = multi_gpu_latency(ModelId::AlexNet, 128, 32, Instance::G3s, 1).unwrap();
+            let t4 = multi_gpu_latency(ModelId::AlexNet, 128, 32, Instance::G3s, 4).unwrap();
+            t1 / t4
+        };
+        assert!(p3 > g3s, "NVLink scaling {p3} vs PCIe {g3s}");
+    }
+
+    #[test]
+    fn indivisible_batch_rejected() {
+        assert!(multi_gpu_latency(ModelId::ResNet18, 100, 64, Instance::P3, 3).is_none());
+    }
+
+    #[test]
+    fn static_multiplier_near_measured_ratio() {
+        let cal = [
+            (ModelId::ResNet18, 128usize, 64usize),
+            (ModelId::ResNet34, 128, 64),
+            (ModelId::Vgg11, 128, 64),
+        ];
+        let m = static_multiplier(Instance::P3, 2, &cal).unwrap();
+        assert!(m > 0.4 && m < 1.1, "2-gpu multiplier {m}");
+    }
+}

@@ -1,0 +1,183 @@
+//! End-to-end pipeline integration: corpus → feature space → ensemble
+//! training (including the HLO-driven DNN) → two-phase prediction →
+//! persistence round-trip. Uses a reduced configuration (REPRO-fast-like)
+//! to stay test-sized while exercising every layer.
+
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::ml::metrics;
+use repro::predictor::{Profet, TrainOptions};
+use repro::runtime;
+
+fn fast_opts() -> TrainOptions {
+    TrainOptions {
+        anchors: vec![Instance::G4dn],
+        targets: vec![Instance::P3, Instance::P2],
+        clustering: true,
+        poly_order: 2,
+        n_trees: 20,
+        dnn_epochs: 12,
+        seed: 42,
+    }
+}
+
+#[test]
+fn full_pipeline_cross_instance_accuracy() {
+    let rt = runtime::load_default().expect("make artifacts first");
+    let corpus = Corpus::generate(&Instance::CORE);
+    assert!(corpus.entries.len() > 200, "corpus too small: {}", corpus.entries.len());
+    let (train_idx, test_idx) = corpus.split_random(0.2, 7);
+
+    let profet = Profet::train(&rt, &corpus, &train_idx, &fast_opts()).unwrap();
+    assert_eq!(profet.cross.len(), 2, "g4dn->p3 and g4dn->p2");
+    assert!(profet.feature_space.n_features() > 5);
+
+    // evaluate on the held-out split
+    let mut truth = Vec::new();
+    let mut pred = Vec::new();
+    for &i in &test_idx {
+        let e = &corpus.entries[i];
+        let (Some(a), Some(t)) = (e.runs.get(&Instance::G4dn), e.runs.get(&Instance::P3)) else {
+            continue;
+        };
+        let (p, _) = profet
+            .predict_cross(&rt, Instance::G4dn, Instance::P3, &a.profile, a.latency_ms)
+            .unwrap();
+        truth.push(t.latency_ms);
+        pred.push(p);
+    }
+    assert!(truth.len() > 30);
+    let mape = metrics::mape(&truth, &pred);
+    let r2 = metrics::r2(&truth, &pred);
+    assert!(mape < 30.0, "cross-instance MAPE {mape}");
+    assert!(r2 > 0.8, "cross-instance R2 {r2}");
+}
+
+#[test]
+fn two_phase_scenario_prediction() {
+    let rt = runtime::load_default().unwrap();
+    let corpus = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+    let (train_idx, _) = corpus.split_random(0.1, 3);
+    let mut opts = fast_opts();
+    opts.targets = vec![Instance::P3]; // corpus only covers g4dn + p3
+    // two-phase composition amplifies phase-1 error through Eq. 1
+    // denormalization — give the ensemble a little more capacity than the
+    // other fast tests.
+    opts.n_trees = 40;
+    opts.dnn_epochs = 25;
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts).unwrap();
+
+    // find (model, pixels) groups with b=16, 64, 256 on both instances
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, usize), BTreeMap<usize, usize>> = BTreeMap::new();
+    for (i, e) in corpus.entries.iter().enumerate() {
+        if e.runs.contains_key(&Instance::G4dn) && e.runs.contains_key(&Instance::P3) {
+            groups
+                .entry((e.workload.model.name().into(), e.workload.pixels))
+                .or_default()
+                .insert(e.workload.batch, i);
+        }
+    }
+    let mut tested = 0;
+    let mut apes = Vec::new();
+    for batches in groups.values() {
+        let (Some(&i16), Some(&i64_), Some(&i256)) =
+            (batches.get(&16), batches.get(&64), batches.get(&256))
+        else {
+            continue;
+        };
+        let a16 = &corpus.entries[i16].runs[&Instance::G4dn];
+        let a256 = &corpus.entries[i256].runs[&Instance::G4dn];
+        let truth = corpus.entries[i64_].runs[&Instance::P3].latency_ms;
+        let pred = profet
+            .predict_scenario(
+                &rt,
+                Instance::G4dn,
+                Instance::P3,
+                &a16.profile,
+                a16.latency_ms,
+                &a256.profile,
+                a256.latency_ms,
+                64,
+            )
+            .unwrap();
+        // tiny workloads (<20 ms) carry high relative noise; Fig 11
+        // aggregates across the whole corpus where they wash out.
+        if truth > 20.0 {
+            apes.push(100.0 * (pred - truth).abs() / truth);
+        }
+        tested += 1;
+    }
+    assert!(tested >= 10, "not enough scenario groups");
+    let mape = repro::util::mean(&apes);
+    assert!(mape < 40.0, "two-phase scenario MAPE {mape} over {} groups", apes.len());
+}
+
+#[test]
+fn persistence_roundtrip_preserves_predictions() {
+    let rt = runtime::load_default().unwrap();
+    let corpus = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+    let (train_idx, test_idx) = corpus.split_random(0.2, 5);
+    let mut opts = fast_opts();
+    opts.targets = vec![Instance::P3];
+    opts.dnn_epochs = 6;
+    let profet = Profet::train(&rt, &corpus, &train_idx, &opts).unwrap();
+
+    let dir = std::env::temp_dir().join("repro_profet_roundtrip");
+    std::fs::remove_dir_all(&dir).ok();
+    profet.save(&dir).unwrap();
+    let loaded = Profet::load(&dir).unwrap();
+
+    for &i in test_idx.iter().take(10) {
+        let e = &corpus.entries[i];
+        let Some(a) = e.runs.get(&Instance::G4dn) else { continue };
+        let (p1, m1) = profet
+            .predict_cross(&rt, Instance::G4dn, Instance::P3, &a.profile, a.latency_ms)
+            .unwrap();
+        let (p2, m2) = loaded
+            .predict_cross(&rt, Instance::G4dn, Instance::P3, &a.profile, a.latency_ms)
+            .unwrap();
+        assert!((p1 - p2).abs() < 1e-6, "{p1} vs {p2}");
+        assert_eq!(m1.name(), m2.name());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn clustering_recovers_unseen_op_latency() {
+    // The Fig 13 mechanism, end to end: train WITHOUT MobileNetV2 (the
+    // only source of Relu6/DepthwiseConv2dNative), then predict it.
+    let rt = runtime::load_default().unwrap();
+    let corpus = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+    let (train_idx, test_idx) = corpus.split_by_model(repro::models::ModelId::MobileNetV2);
+
+    let mut mapes = std::collections::BTreeMap::new();
+    for clustering in [false, true] {
+        let mut opts = fast_opts();
+        opts.targets = vec![Instance::P3];
+        opts.clustering = clustering;
+        let profet = Profet::train(&rt, &corpus, &train_idx, &opts).unwrap();
+        let mut truth = Vec::new();
+        let mut pred = Vec::new();
+        for &i in &test_idx {
+            let e = &corpus.entries[i];
+            let (Some(a), Some(t)) = (e.runs.get(&Instance::G4dn), e.runs.get(&Instance::P3))
+            else {
+                continue;
+            };
+            let (p, _) = profet
+                .predict_cross(&rt, Instance::G4dn, Instance::P3, &a.profile, a.latency_ms)
+                .unwrap();
+            truth.push(t.latency_ms);
+            pred.push(p);
+        }
+        mapes.insert(clustering, metrics::mape(&truth, &pred));
+    }
+    // clustering must help the unique-op model (paper: +8.3% to +29.9%)
+    assert!(
+        mapes[&true] < mapes[&false],
+        "clustering off {:.2}% vs on {:.2}%",
+        mapes[&false],
+        mapes[&true]
+    );
+}

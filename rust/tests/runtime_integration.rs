@@ -1,0 +1,117 @@
+//! Integration: the rust runtime executes the AOT HLO artifacts and the
+//! numerics match the python oracles' contracts.
+//!
+//! Requires `make artifacts` (skipped with a clear panic otherwise).
+
+use repro::runtime::{self, MlpState};
+
+fn rt() -> repro::runtime::Runtime {
+    runtime::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn loads_and_reports_platform() {
+    let rt = rt();
+    let plat = rt.platform().to_lowercase();
+    assert!(plat.contains("cpu") || plat.contains("host"), "{plat}");
+    assert_eq!(rt.meta.param_count, runtime::mlp_param_count(rt.meta.d_feat));
+}
+
+#[test]
+fn mlp_forward_zero_params_zero_output() {
+    let rt = rt();
+    let m = &rt.meta;
+    let params = vec![0f32; m.param_count];
+    let x = vec![1f32; m.b_pred * m.d_feat];
+    let y = rt.mlp_forward(&params, &x).unwrap();
+    assert_eq!(y.len(), m.b_pred);
+    assert!(y.iter().all(|v| *v == 0.0));
+}
+
+#[test]
+fn mlp_forward_deterministic_and_batch_consistent() {
+    let rt = rt();
+    let m = rt.meta.clone();
+    let state = MlpState::init(m.d_feat, 42);
+    let mut x = vec![0f32; m.b_pred * m.d_feat];
+    let mut rng = repro::util::Rng64::new(7);
+    for v in x.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let y1 = rt.mlp_forward(&state.params, &x).unwrap();
+    let y2 = rt.mlp_forward(&state.params, &x).unwrap();
+    assert_eq!(y1, y2, "deterministic");
+    // permuting rows permutes outputs (no cross-batch leakage)
+    let d = m.d_feat;
+    let mut xp = x.clone();
+    xp.copy_within(0..d, (m.b_pred - 1) * d);
+    xp.copy_within((m.b_pred - 1) * d..m.b_pred * d, 0);
+    // swap rows 0 and last via rebuild
+    let mut xs = x.clone();
+    for j in 0..d {
+        xs.swap(j, (m.b_pred - 1) * d + j);
+    }
+    let ys = rt.mlp_forward(&state.params, &xs).unwrap();
+    assert!((ys[0] - y1[m.b_pred - 1]).abs() < 1e-5);
+    assert!((ys[m.b_pred - 1] - y1[0]).abs() < 1e-5);
+    for i in 1..m.b_pred - 1 {
+        assert!((ys[i] - y1[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_learnable_target() {
+    let rt = rt();
+    let m = rt.meta.clone();
+    let mut state = MlpState::init(m.d_feat, 1);
+    let mut rng = repro::util::Rng64::new(11);
+    let x: Vec<f32> = (0..m.b_train * m.d_feat)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let w: Vec<f32> = (0..m.d_feat).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..m.b_train)
+        .map(|i| {
+            let row = &x[i * m.d_feat..(i + 1) * m.d_feat];
+            row.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>().abs() + 1.0
+        })
+        .collect();
+    let first = rt.train_step(&mut state, &x, &y).unwrap();
+    let mut last = first;
+    for _ in 0..80 {
+        last = rt.train_step(&mut state, &x, &y).unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < first * 0.9, "loss {first} -> {last}");
+    assert_eq!(state.t, 81.0);
+}
+
+#[test]
+fn levenshtein_matches_known_distances() {
+    let rt = rt();
+    // Paper's worked examples (Sec III-B1).
+    let pairs = [
+        ("ReLU", "ReLU6"),
+        ("ReLU", "Conv2D"),
+        ("MaxPoolGrad", "AvgPoolGrad"),
+        ("MatMul", "MaxPool"),
+        ("", ""),
+        ("FusedBatchNormV3", "FusedBatchNormGradV3"),
+    ];
+    let got = rt.levenshtein_strs(&pairs).unwrap();
+    assert_eq!(got, vec![1, 6, 3, 4, 0, 4]);
+}
+
+#[test]
+fn levenshtein_chunks_many_pairs() {
+    let rt = rt();
+    let k = rt.meta.lev_k;
+    // more pairs than one artifact batch → exercises chunking
+    let names: Vec<String> = (0..(k + 10)).map(|i| format!("Op{i}")).collect();
+    let pairs: Vec<(&str, &str)> = names.iter().map(|n| (n.as_str(), "Op0")).collect();
+    let got = rt.levenshtein_strs(&pairs).unwrap();
+    assert_eq!(got.len(), k + 10);
+    assert_eq!(got[0], 0);
+    // d("Op7", "Op0") = 1; d("Op17", "Op0") in {1,2}
+    assert_eq!(got[7], 1);
+    assert!(got[17] >= 1 && got[17] <= 2);
+}

@@ -1,0 +1,144 @@
+//! Coordinator integration: boot the full TCP service on an ephemeral
+//! port, train + save a model directory, then drive it like a client —
+//! including concurrent requests that exercise the dynamic batcher.
+
+use repro::coordinator;
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::predictor::{Profet, TrainOptions};
+use repro::runtime;
+use repro::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::OnceLock;
+
+/// Train once per test binary, save to a shared temp dir.
+fn model_dir() -> &'static std::path::PathBuf {
+    static DIR: OnceLock<std::path::PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let rt = runtime::load_default().expect("make artifacts first");
+        let corpus = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+        let (train_idx, _) = corpus.split_random(0.1, 11);
+        let opts = TrainOptions {
+            anchors: vec![Instance::G4dn],
+            targets: vec![Instance::P3],
+            clustering: true,
+            poly_order: 2,
+            n_trees: 15,
+            dnn_epochs: 8,
+            seed: 99,
+        };
+        let profet = Profet::train(&rt, &corpus, &train_idx, &opts).unwrap();
+        let dir = std::env::temp_dir().join("repro_server_models");
+        std::fs::remove_dir_all(&dir).ok();
+        profet.save(&dir).unwrap();
+        dir
+    })
+}
+
+fn send(addr: std::net::SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap()
+}
+
+fn sample_profile_line() -> String {
+    // real-ish aggregated profile: measured on the simulator
+    let w = repro::sim::Workload::new(repro::models::ModelId::ResNet18, 32, 64);
+    let run = repro::sim::run_workload(&w, Instance::G4dn).unwrap();
+    let mut profile = Json::obj();
+    for (k, v) in run.profile.aggregated() {
+        profile.set(&k, Json::Num(v));
+    }
+    let mut req = Json::obj();
+    req.set("op", Json::Str("predict".into()));
+    req.set("anchor", Json::Str("g4dn".into()));
+    req.set("target", Json::Str("p3".into()));
+    req.set("anchor_latency_ms", Json::Num(run.latency_ms));
+    req.set("profile", profile);
+    req.to_string()
+}
+
+#[test]
+fn serves_health_instances_predict_and_errors() {
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        model_dir().clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // health
+    let h = send(addr, r#"{"op":"health"}"#);
+    assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
+
+    // instances
+    let i = send(addr, r#"{"op":"instances"}"#);
+    assert_eq!(i.req_arr("instances").unwrap().len(), 6);
+
+    // predict (end to end through feature space + ensemble + HLO forward)
+    let p = send(addr, &sample_profile_line());
+    assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true), "{p:?}");
+    let lat = p.req_f64("latency_ms").unwrap();
+    assert!(lat > 1.0 && lat < 10_000.0, "latency {lat}");
+    assert!(p.req_str("member").is_ok());
+
+    // phase-2 batch interpolation
+    let b = send(
+        addr,
+        r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.0}"#,
+    );
+    let v = b.req_f64("latency_ms").unwrap();
+    assert!(v > 50.0 && v < 1000.0, "{v}");
+
+    // serving stats reflect the traffic so far
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert!(st.req_f64("requests").unwrap() >= 2.0);
+    assert!(st.req_f64("artifact_batches").unwrap() >= 1.0);
+
+    // errors: bad op, unknown pair
+    let e = send(addr, r#"{"op":"nope"}"#);
+    assert_eq!(e.get("ok").and_then(Json::as_bool), Some(false));
+    let e2 = send(
+        addr,
+        r#"{"op":"predict","anchor":"p2","target":"g3s","anchor_latency_ms":1,"profile":{"Conv2D":1}}"#,
+    );
+    assert_eq!(e2.get("ok").and_then(Json::as_bool), Some(false));
+
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        model_dir().clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+
+    let n = 24;
+    let mut joins = Vec::new();
+    for _ in 0..n {
+        let line = line.clone();
+        joins.push(std::thread::spawn(move || send(addr, &line)));
+    }
+    let mut latencies = Vec::new();
+    for j in joins {
+        let resp = j.join().unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        latencies.push(resp.req_f64("latency_ms").unwrap());
+    }
+    // identical request → identical prediction, through any batch grouping
+    for l in &latencies {
+        assert!((l - latencies[0]).abs() < 1e-6);
+    }
+    handle.stop();
+}
