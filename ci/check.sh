@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 + hygiene gate for the rust crate. Mirrors .github/workflows/ci.yml
+# so the same command runs locally and in CI:
+#
+#   ./ci/check.sh            # build + test + fmt + clippy
+#   ./ci/check.sh --bench    # additionally run the hot_paths bench and
+#                            # refresh BENCH_hot_paths.json
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+# advisory until the pre-existing tree is formatted/lint-clean (the seed
+# predates rustfmt/clippy enforcement); set CI_STRICT=1 to make them gate
+echo "== cargo fmt --check =="
+cargo fmt --check || [[ "${CI_STRICT:-}" != "1" ]]
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings || [[ "${CI_STRICT:-}" != "1" ]]
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== cargo bench --bench hot_paths =="
+    cargo bench --bench hot_paths
+fi
+
+echo "ci/check.sh: all gates passed"

@@ -8,7 +8,7 @@
 //! Table IV error blow-up at batch 128+.
 
 use crate::gpu::Instance;
-use crate::ml::LinearRegression;
+use crate::ml::{FeatureMatrix, LinearRegression};
 use crate::models::Graph;
 use crate::ops::{Op, OpClass};
 use crate::sim::{self, Workload};
@@ -82,7 +82,8 @@ impl MlPredict {
         let mut class_models = BTreeMap::new();
         for (k, (xs, ys)) in &by_class {
             if xs.len() >= 8 {
-                if let Ok(m) = LinearRegression::fit(xs, ys) {
+                let fit = FeatureMatrix::from_rows(xs).and_then(|m| LinearRegression::fit(&m, ys));
+                if let Ok(m) = fit {
                     class_models.insert(*k, m);
                 }
             }

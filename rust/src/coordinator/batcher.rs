@@ -203,11 +203,21 @@ fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherSt
                 }
                 continue;
             };
-            let feats: Vec<Vec<f64>> = group
+            let rows: Vec<Vec<f64>> = group
                 .iter()
                 .map(|(r, _)| profet.feature_space.vectorize(&r.profile))
                 .collect();
             let lats: Vec<f64> = group.iter().map(|(r, _)| r.anchor_latency_ms).collect();
+            let feats = match crate::ml::FeatureMatrix::from_rows(&rows) {
+                Ok(m) => m,
+                Err(e) => {
+                    let msg = format!("feature matrix: {e:#}");
+                    for (_, reply) in group {
+                        let _ = reply.send(Response::Err(msg.clone()));
+                    }
+                    continue;
+                }
+            };
             match model.predict_batch(&rt, &feats, &lats) {
                 Ok(preds) => {
                     stats.batches.fetch_add(1, Ordering::Relaxed);

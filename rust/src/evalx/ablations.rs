@@ -23,7 +23,7 @@ use std::fmt::Write as _;
 /// sensitive to the feature definition; DNN retraining per sweep point
 /// would dominate runtime without changing the ordering).
 fn rf_mape_for_space(ctx: &Ctx, fs: &FeatureSpace) -> Result<f64> {
-    use crate::ml::RandomForest;
+    use crate::ml::{FeatureMatrix, RandomForest};
     let anchor = Instance::G4dn;
     let mut mapes = Vec::new();
     for target in [Instance::G3s, Instance::P2, Instance::P3] {
@@ -37,17 +37,19 @@ fn rf_mape_for_space(ctx: &Ctx, fs: &FeatureSpace) -> Result<f64> {
             x.push(fs.vectorize(&a.profile));
             y.push(t.latency_ms);
         }
-        let rf = RandomForest::fit(&x, &y, if ctx.fast { 25 } else { 60 }, 77)?;
+        let n_trees = if ctx.fast { 25 } else { 60 };
+        let rf = RandomForest::fit(&FeatureMatrix::from_rows(&x)?, &y, n_trees, 77)?;
         let mut truth = Vec::new();
-        let mut pred = Vec::new();
+        let mut rows = Vec::new();
         for &i in &ctx.test_idx {
             let e = &ctx.corpus.entries[i];
             let (Some(a), Some(t)) = (e.runs.get(&anchor), e.runs.get(&target)) else {
                 continue;
             };
             truth.push(t.latency_ms);
-            pred.push(rf.predict_one(&fs.vectorize(&a.profile)));
+            rows.push(fs.vectorize(&a.profile));
         }
+        let pred = rf.predict_batch(&FeatureMatrix::from_rows(&rows)?);
         mapes.push(metrics::mape(&truth, &pred));
     }
     Ok(crate::util::mean(&mapes))

@@ -3,7 +3,7 @@
 use super::{check, Ctx};
 use crate::data::Corpus;
 use crate::gpu::Instance;
-use crate::ml::metrics;
+use crate::ml::{metrics, FeatureMatrix};
 use crate::models::ModelId;
 use crate::predictor::{BatchPixelModel, Member, Profet};
 use crate::sim::{self, Workload};
@@ -215,10 +215,13 @@ pub(crate) fn collect_member_preds(
             if feats.is_empty() {
                 continue;
             }
-            let dnn = model.dnn.predict(&ctx.rt, &feats)?;
-            for (k, x) in feats.iter().enumerate() {
+            // batch the DNN artifact and the cache-hot forest pass together
+            let fm = FeatureMatrix::from_rows(&feats)?;
+            let dnn = model.dnn.predict(&ctx.rt, &fm)?;
+            let forest = model.forest.predict_batch(&fm);
+            for k in 0..fm.n_rows() {
                 let l = model.linear.predict_one(&[anchor_lat[k]]);
-                let f = model.forest.predict_one(x);
+                let f = forest[k];
                 let d = dnn[k];
                 let mut v = [(l, Member::Linear), (f, Member::Forest), (d, Member::Dnn)];
                 v.sort_by(|p, q| p.0.partial_cmp(&q.0).unwrap());

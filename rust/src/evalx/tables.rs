@@ -5,7 +5,7 @@ use super::{check, Ctx};
 use crate::baselines::{habitat, mlpredict::MlPredict, paleo};
 use crate::dnn::{DnnRegressor, TrainConfig};
 use crate::gpu::Instance;
-use crate::ml::{metrics, RandomForest};
+use crate::ml::{metrics, FeatureMatrix, RandomForest};
 use crate::models::ModelId;
 use crate::predictor::Profet;
 use crate::sim::{self, workload::BATCHES, workload::PIXELS, Workload};
@@ -142,6 +142,7 @@ pub fn table2(ctx: &mut Ctx) -> Result<String> {
             }
         }
     }
+    let jx = FeatureMatrix::from_rows(&jx)?;
     let joint_rf = RandomForest::fit(&jx, &jy, if ctx.fast { 25 } else { 100 }, 0x101971)?;
     let joint_dnn = DnnRegressor::fit(
         &ctx.rt,
@@ -183,6 +184,7 @@ pub fn table2(ctx: &mut Ctx) -> Result<String> {
         let dnn_max = cm.dnn.predict_one(&ctx.rt, &x_max)?;
         p_sep_dnn.push(profet.predict_batch_size(s.target, s.b, dnn_min, dnn_max)?);
     }
+    let joint_rows = FeatureMatrix::from_rows(&joint_rows)?;
     let p_joint_dnn = joint_dnn.predict(&ctx.rt, &joint_rows)?;
 
     let rows = [

@@ -4,6 +4,15 @@
 //! The paper's worked example: {MaxPoolGrad, AvgPoolGrad} merge at height
 //! 3; adding ArgMax would cost average(10, 8) = 9, so with cut height 6
 //! ArgMax stays outside that cluster.
+//!
+//! §Perf: inter-cluster distances live in an O(n²) pair-statistic matrix
+//! updated per merge with the Lance-Williams recurrences (average linkage
+//! keeps the *sum* of base distances so the division happens once on
+//! read). The seed re-derived every linkage from cluster member lists on
+//! every merge — an O(n³)–O(n⁴) loop over the full vocabulary. Because
+//! Levenshtein base distances are small integers, the maintained sums are
+//! exact in f64 and the merge sequence is bit-identical to the brute-force
+//! member-list evaluation (enforced by the tests below).
 
 use super::levenshtein::distance_matrix;
 
@@ -50,55 +59,57 @@ impl Dendrogram {
         Self::build_with(names, Linkage::Average)
     }
 
-    /// Build with an explicit linkage heuristic.
+    /// Build with an explicit linkage heuristic. Cluster ids follow the
+    /// evolving-list convention: leaves are 0..n, merge m creates id n+m.
     pub fn build_with(names: &[&str], linkage: Linkage) -> Dendrogram {
         let base = distance_matrix(names);
         let n = names.len();
-        // active clusters as member index lists
-        let mut clusters: Vec<Option<Vec<usize>>> = (0..n).map(|i| Some(vec![i])).collect();
+        let total = if n == 0 { 0 } else { 2 * n - 1 };
+        // pair statistic per cluster-id pair: sum of base distances for
+        // Average (divided by |A|·|B| on read), min/max for Single/Complete
+        let mut stat = vec![0.0f64; total * total];
+        for (i, row) in base.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                stat[i * total + j] = v;
+            }
+        }
+        let mut size = vec![1usize; total];
+        let mut active: Vec<usize> = (0..n).collect();
         let mut merges = Vec::new();
 
-        let avg_dist = |a: &[usize], b: &[usize], base: &Vec<Vec<f64>>| -> f64 {
-            let mut s = 0.0;
-            let mut mn = f64::INFINITY;
-            let mut mx = f64::NEG_INFINITY;
-            for &i in a {
-                for &j in b {
-                    s += base[i][j];
-                    mn = mn.min(base[i][j]);
-                    mx = mx.max(base[i][j]);
-                }
-            }
-            match linkage {
-                Linkage::Average => s / (a.len() * b.len()) as f64,
-                Linkage::Single => mn,
-                Linkage::Complete => mx,
-            }
-        };
-
-        loop {
-            // find closest active pair
+        while active.len() >= 2 {
+            // closest active pair; ids ascend, strict < keeps the first
             let mut best: Option<(usize, usize, f64)> = None;
-            let active: Vec<usize> = (0..clusters.len()).filter(|&i| clusters[i].is_some()).collect();
-            if active.len() < 2 {
-                break;
-            }
             for (ai, &i) in active.iter().enumerate() {
                 for &j in active.iter().skip(ai + 1) {
-                    let d = avg_dist(
-                        clusters[i].as_ref().unwrap(),
-                        clusters[j].as_ref().unwrap(),
-                        &base,
-                    );
+                    let s = stat[i * total + j];
+                    let d = match linkage {
+                        Linkage::Average => s / (size[i] * size[j]) as f64,
+                        Linkage::Single | Linkage::Complete => s,
+                    };
                     if best.map_or(true, |(_, _, bd)| d < bd) {
                         best = Some((i, j, d));
                     }
                 }
             }
             let (i, j, d) = best.unwrap();
-            let mut merged = clusters[i].take().unwrap();
-            merged.extend(clusters[j].take().unwrap());
-            clusters.push(Some(merged));
+            // Lance-Williams update against every other active cluster
+            let k = n + merges.len();
+            for &m in &active {
+                if m == i || m == j {
+                    continue;
+                }
+                let v = match linkage {
+                    Linkage::Average => stat[i * total + m] + stat[j * total + m],
+                    Linkage::Single => stat[i * total + m].min(stat[j * total + m]),
+                    Linkage::Complete => stat[i * total + m].max(stat[j * total + m]),
+                };
+                stat[k * total + m] = v;
+                stat[m * total + k] = v;
+            }
+            size[k] = size[i] + size[j];
+            active.retain(|&c| c != i && c != j);
+            active.push(k); // k is the largest id: the list stays ascending
             merges.push(Merge {
                 a: i,
                 b: j,
@@ -273,5 +284,98 @@ mod tests {
         // deterministic output ordering
         let again = average_linkage_clusters(crate::ops::VOCABULARY, 6.0);
         assert_eq!(clusters, again);
+    }
+
+    // ---- Lance-Williams vs brute-force member-list evaluation ----
+
+    /// Verbatim port of the seed's O(n³)-per-build member-list builder,
+    /// kept as the golden reference for the Lance-Williams fast path.
+    fn ref_build(names: &[&str], linkage: Linkage) -> Vec<Merge> {
+        let base = distance_matrix(names);
+        let n = names.len();
+        let mut clusters: Vec<Option<Vec<usize>>> = (0..n).map(|i| Some(vec![i])).collect();
+        let mut merges = Vec::new();
+        let dist = |a: &[usize], b: &[usize], base: &[Vec<f64>]| -> f64 {
+            let mut s = 0.0;
+            let mut mn = f64::INFINITY;
+            let mut mx = f64::NEG_INFINITY;
+            for &i in a {
+                for &j in b {
+                    s += base[i][j];
+                    mn = mn.min(base[i][j]);
+                    mx = mx.max(base[i][j]);
+                }
+            }
+            match linkage {
+                Linkage::Average => s / (a.len() * b.len()) as f64,
+                Linkage::Single => mn,
+                Linkage::Complete => mx,
+            }
+        };
+        loop {
+            let mut best: Option<(usize, usize, f64)> = None;
+            let active: Vec<usize> =
+                (0..clusters.len()).filter(|&i| clusters[i].is_some()).collect();
+            if active.len() < 2 {
+                break;
+            }
+            for (ai, &i) in active.iter().enumerate() {
+                for &j in active.iter().skip(ai + 1) {
+                    let d = dist(
+                        clusters[i].as_ref().unwrap(),
+                        clusters[j].as_ref().unwrap(),
+                        &base,
+                    );
+                    if best.map_or(true, |(_, _, bd)| d < bd) {
+                        best = Some((i, j, d));
+                    }
+                }
+            }
+            let (i, j, d) = best.unwrap();
+            let mut merged = clusters[i].take().unwrap();
+            merged.extend(clusters[j].take().unwrap());
+            clusters.push(Some(merged));
+            merges.push(Merge {
+                a: i,
+                b: j,
+                height: d,
+            });
+        }
+        merges
+    }
+
+    #[test]
+    fn lance_williams_matches_brute_force_all_linkages() {
+        // 30-name vocabulary slice, all three linkages: identical merge
+        // sequences (ids and bitwise heights) and identical cuts
+        let names: Vec<&str> = crate::ops::VOCABULARY.iter().take(30).copied().collect();
+        for linkage in [Linkage::Average, Linkage::Single, Linkage::Complete] {
+            let fast = Dendrogram::build_with(&names, linkage);
+            let slow = ref_build(&names, linkage);
+            assert_eq!(fast.merges.len(), slow.merges.len(), "{linkage:?}");
+            for (m, r) in fast.merges.iter().zip(&slow) {
+                assert_eq!((m.a, m.b), (r.a, r.b), "{linkage:?} pair order");
+                assert_eq!(m.height, r.height, "{linkage:?} height");
+            }
+            // cut equality across a height sweep
+            let slow_dendro = Dendrogram {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                merges: slow,
+            };
+            for cut in [0.0, 3.0, 6.0, 9.0, 1e9] {
+                assert_eq!(fast.cut(cut), slow_dendro.cut(cut), "{linkage:?} cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_and_complete_bracket_average() {
+        // single-linkage merges never later than complete on any pair set
+        let names: Vec<&str> = crate::ops::VOCABULARY.iter().take(20).copied().collect();
+        let single = Dendrogram::build_with(&names, Linkage::Single);
+        let complete = Dendrogram::build_with(&names, Linkage::Complete);
+        let max_single = single.merges.iter().map(|m| m.height).fold(0.0, f64::max);
+        let max_complete = complete.merges.iter().map(|m| m.height).fold(0.0, f64::max);
+        assert!(max_single <= max_complete);
     }
 }

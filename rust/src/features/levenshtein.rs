@@ -4,18 +4,40 @@
 //! the serving path can also use the Pallas/HLO batched kernel through
 //! [`crate::runtime::Runtime::levenshtein_strs`] (both are verified to
 //! agree in the integration tests).
+//!
+//! §Perf: op names are almost always ASCII, so the hot path runs directly
+//! over byte slices (no per-call `Vec<char>` materialization), and
+//! [`distance_matrix`] reuses one DP row allocation across all D² pairs
+//! (the seed allocated two vectors per pair).
 
 /// Classic two-row Wagner-Fischer, O(|a|·|b|) time, O(|b|) space.
 pub fn levenshtein(a: &str, b: &str) -> usize {
-    let a: Vec<char> = a.chars().collect();
-    let b: Vec<char> = b.chars().collect();
+    let mut row = Vec::new();
+    levenshtein_with(a, b, &mut row)
+}
+
+/// Wagner-Fischer with a caller-owned, reusable DP row buffer.
+fn levenshtein_with(a: &str, b: &str, row: &mut Vec<usize>) -> usize {
+    if a.is_ascii() && b.is_ascii() {
+        lev_core(a.as_bytes(), b.as_bytes(), row)
+    } else {
+        let ac: Vec<char> = a.chars().collect();
+        let bc: Vec<char> = b.chars().collect();
+        lev_core(&ac, &bc, row)
+    }
+}
+
+/// Element-generic DP core shared by the ASCII byte fast path and the
+/// Unicode char fallback.
+fn lev_core<T: PartialEq>(a: &[T], b: &[T], row: &mut Vec<usize>) -> usize {
     if a.is_empty() {
         return b.len();
     }
     if b.is_empty() {
         return a.len();
     }
-    let mut row: Vec<usize> = (0..=b.len()).collect();
+    row.clear();
+    row.extend(0..=b.len());
     for (i, ca) in a.iter().enumerate() {
         let mut prev = row[0]; // row[i-1][0]
         row[0] = i + 1;
@@ -30,13 +52,14 @@ pub fn levenshtein(a: &str, b: &str) -> usize {
 
 /// Symmetric D x D distance matrix over `names` (paper: "Calculating the
 /// Levenshtein distance among all pairs of D features results in a D x D
-/// distance matrix").
+/// distance matrix"). One DP row buffer serves every pair.
 pub fn distance_matrix(names: &[&str]) -> Vec<Vec<f64>> {
     let d = names.len();
     let mut m = vec![vec![0.0; d]; d];
+    let mut row = Vec::new();
     for i in 0..d {
         for j in (i + 1)..d {
-            let dist = levenshtein(names[i], names[j]) as f64;
+            let dist = levenshtein_with(names[i], names[j], &mut row) as f64;
             m[i][j] = dist;
             m[j][i] = dist;
         }
@@ -63,6 +86,36 @@ mod tests {
         assert_eq!(levenshtein("", "abc"), 3);
         assert_eq!(levenshtein("abc", ""), 3);
         assert_eq!(levenshtein("same", "same"), 0);
+    }
+
+    #[test]
+    fn unicode_falls_back_to_char_path() {
+        // non-ASCII names count scalar values, not bytes
+        assert_eq!(levenshtein("naïve", "naive"), 1);
+        assert_eq!(levenshtein("λReLU", "ReLU"), 1);
+        assert_eq!(levenshtein("é", ""), 1);
+        // mixed ASCII/Unicode pair also takes the char path
+        assert_eq!(levenshtein("Conv2D", "Cönv2D"), 1);
+    }
+
+    #[test]
+    fn ascii_fast_path_matches_char_reference() {
+        // the byte fast path must agree with a char-by-char reference
+        let mut rng = crate::util::Rng64::new(123);
+        let alphabet: Vec<char> = "abcdXY26GradPool".chars().collect();
+        let mut rand_name = |rng: &mut crate::util::Rng64| {
+            let n = rng.below(14);
+            (0..n).map(|_| alphabet[rng.below(alphabet.len())]).collect::<String>()
+        };
+        let mut row = Vec::new();
+        for _ in 0..300 {
+            let x = rand_name(&mut rng);
+            let y = rand_name(&mut rng);
+            let xc: Vec<char> = x.chars().collect();
+            let yc: Vec<char> = y.chars().collect();
+            let via_chars = lev_core(&xc, &yc, &mut row);
+            assert_eq!(levenshtein(&x, &y), via_chars, "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Ordinary least squares linear regression via ridge-stabilized normal
 //! equations (Gaussian elimination with partial pivoting).
+//!
+//! §Perf: X^T X accumulates as column-pair dot products over the columnar
+//! [`FeatureMatrix`] — each inner loop is two contiguous slice scans
+//! instead of one strided read per row allocation.
 
+use crate::ml::FeatureMatrix;
 use crate::util::Json;
 use anyhow::{anyhow, Result};
 
@@ -45,25 +50,26 @@ pub(crate) fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
 }
 
 impl LinearRegression {
-    /// Fit on rows `x` (each length d) against targets `y`.
-    pub fn fit(x: &[Vec<f64>], y: &[f64]) -> Result<LinearRegression> {
-        anyhow::ensure!(!x.is_empty() && x.len() == y.len(), "bad shapes");
-        let d = x[0].len();
+    /// Fit on the columnar matrix `x` against targets `y`.
+    pub fn fit(x: &FeatureMatrix, y: &[f64]) -> Result<LinearRegression> {
+        anyhow::ensure!(!x.is_empty() && x.n_rows() == y.len(), "bad shapes");
+        let n = x.n_rows();
+        let d = x.n_cols();
         let da = d + 1; // + bias column
-        // normal equations: (X^T X + λI) w = X^T y
+        // normal equations: (X^T X + λI) w = X^T y, built column-by-column
         let mut xtx = vec![vec![0.0; da]; da];
         let mut xty = vec![0.0; da];
-        for (row, &t) in x.iter().zip(y) {
-            anyhow::ensure!(row.len() == d, "ragged row");
-            for i in 0..da {
-                let xi = if i < d { row[i] } else { 1.0 };
-                xty[i] += xi * t;
-                for j in i..da {
-                    let xj = if j < d { row[j] } else { 1.0 };
-                    xtx[i][j] += xi * xj;
-                }
+        for i in 0..d {
+            let ci = x.col(i);
+            xty[i] = ci.iter().zip(y).map(|(a, b)| a * b).sum();
+            for j in i..d {
+                let cj = x.col(j);
+                xtx[i][j] = ci.iter().zip(cj).map(|(a, b)| a * b).sum();
             }
+            xtx[i][d] = ci.iter().sum(); // dot with the implicit 1s column
         }
+        xty[d] = y.iter().sum();
+        xtx[d][d] = n as f64;
         for i in 0..da {
             for j in 0..i {
                 xtx[i][j] = xtx[j][i];
@@ -87,8 +93,15 @@ impl LinearRegression {
                 .sum::<f64>()
     }
 
-    pub fn predict(&self, x: &[Vec<f64>]) -> Vec<f64> {
-        x.iter().map(|r| self.predict_one(r)).collect()
+    /// Columnar batched prediction: one axpy pass per weight column.
+    pub fn predict(&self, x: &FeatureMatrix) -> Vec<f64> {
+        let mut out = vec![self.bias; x.n_rows()];
+        for (j, w) in self.weights.iter().enumerate() {
+            for (o, v) in out.iter_mut().zip(x.col(j)) {
+                *o += w * v;
+            }
+        }
+        out
     }
 
     pub fn to_json(&self) -> Json {
@@ -113,12 +126,16 @@ impl LinearRegression {
 mod tests {
     use super::*;
 
+    fn matrix(rows: &[Vec<f64>]) -> FeatureMatrix {
+        FeatureMatrix::from_rows(rows).unwrap()
+    }
+
     #[test]
     fn recovers_exact_line() {
         // y = 3x + 2
-        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
-        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] + 2.0).collect();
-        let m = LinearRegression::fit(&x, &y).unwrap();
+        let rows: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = rows.iter().map(|r| 3.0 * r[0] + 2.0).collect();
+        let m = LinearRegression::fit(&matrix(&rows), &y).unwrap();
         assert!((m.weights[0] - 3.0).abs() < 1e-6);
         assert!((m.bias - 2.0).abs() < 1e-5);
     }
@@ -126,15 +143,15 @@ mod tests {
     #[test]
     fn recovers_multivariate_plane() {
         let mut rng = crate::util::Rng64::new(5);
-        let x: Vec<Vec<f64>> = (0..200)
+        let rows: Vec<Vec<f64>> = (0..200)
             .map(|_| (0..4).map(|_| rng.range(-2.0, 2.0)).collect())
             .collect();
         let w = [1.5, -2.0, 0.5, 4.0];
-        let y: Vec<f64> = x
+        let y: Vec<f64> = rows
             .iter()
             .map(|r| r.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + 7.0)
             .collect();
-        let m = LinearRegression::fit(&x, &y).unwrap();
+        let m = LinearRegression::fit(&matrix(&rows), &y).unwrap();
         for (got, want) in m.weights.iter().zip(&w) {
             assert!((got - want).abs() < 1e-5, "{got} vs {want}");
         }
@@ -144,10 +161,27 @@ mod tests {
     #[test]
     fn noisy_fit_reasonable() {
         let mut rng = crate::util::Rng64::new(6);
-        let x: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.range(0.0, 10.0)]).collect();
-        let y: Vec<f64> = x.iter().map(|r| 2.0 * r[0] + 1.0 + rng.normal() * 0.1).collect();
-        let m = LinearRegression::fit(&x, &y).unwrap();
+        let rows: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.range(0.0, 10.0)]).collect();
+        let y: Vec<f64> = rows.iter().map(|r| 2.0 * r[0] + 1.0 + rng.normal() * 0.1).collect();
+        let m = LinearRegression::fit(&matrix(&rows), &y).unwrap();
         assert!((m.weights[0] - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn batched_predict_matches_per_row() {
+        let mut rng = crate::util::Rng64::new(8);
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..3).map(|_| rng.range(-5.0, 5.0)).collect())
+            .collect();
+        let m = LinearRegression {
+            weights: vec![0.5, -1.5, 2.0],
+            bias: 0.75,
+        };
+        let x = matrix(&rows);
+        let batch = m.predict(&x);
+        for (i, r) in rows.iter().enumerate() {
+            assert!((batch[i] - m.predict_one(r)).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -164,7 +198,8 @@ mod tests {
 
     #[test]
     fn shape_errors() {
-        assert!(LinearRegression::fit(&[], &[]).is_err());
-        assert!(LinearRegression::fit(&[vec![1.0]], &[1.0, 2.0]).is_err());
+        assert!(LinearRegression::fit(&FeatureMatrix::from_rows(&[]).unwrap(), &[]).is_err());
+        let one = matrix(&[vec![1.0]]);
+        assert!(LinearRegression::fit(&one, &[1.0, 2.0]).is_err());
     }
 }

@@ -1,0 +1,119 @@
+//! Columnar design matrix: contiguous column-major f64 storage shared by
+//! every classical-ML fit/predict path (forest, linear, scaler, DNN
+//! preprocessing) and the serving batcher.
+//!
+//! The previous substrate passed `&[Vec<f64>]` row lists everywhere; every
+//! per-feature scan (CART split search, normal-equation accumulation,
+//! min-max fitting) then strided across one heap allocation per row. Here
+//! each feature column is one contiguous slice, so the hot loops are
+//! sequential reads the prefetcher can follow.
+
+use anyhow::Result;
+
+/// Dense column-major matrix: `data[j * n_rows + i]` holds row `i`,
+/// column `j`. Invariant: `data.len() == n_rows * n_cols`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMatrix {
+    data: Vec<f64>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl FeatureMatrix {
+    /// Build from row slices (the shape produced by
+    /// `FeatureSpace::vectorize`). Rejects ragged input.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<FeatureMatrix> {
+        let n_rows = rows.len();
+        let n_cols = rows.first().map_or(0, |r| r.len());
+        let mut data = vec![0.0; n_rows * n_cols];
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                row.len() == n_cols,
+                "ragged row {i}: {} cols, expected {n_cols}",
+                row.len()
+            );
+            for (j, &v) in row.iter().enumerate() {
+                data[j * n_rows + i] = v;
+            }
+        }
+        Ok(FeatureMatrix {
+            data,
+            n_rows,
+            n_cols,
+        })
+    }
+
+    /// Single-column matrix over `values` (e.g. the linear member's
+    /// anchor-latency regressor).
+    pub fn from_col(values: &[f64]) -> FeatureMatrix {
+        FeatureMatrix {
+            data: values.to_vec(),
+            n_rows: values.len(),
+            n_cols: 1,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// Column `j` as one contiguous slice — the whole point of the layout.
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    /// Single cell (row-major callers; strided access).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n_rows + i]
+    }
+
+    /// Copy row `i` into a caller-owned vector (for row-oriented consumers
+    /// like `predict_one`).
+    pub fn row_vec(&self, i: usize) -> Vec<f64> {
+        (0..self.n_cols).map(|j| self.get(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_rows_columnar() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let m = FeatureMatrix::from_rows(&rows).unwrap();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.n_cols(), 3);
+        assert_eq!(m.col(0), &[1.0, 4.0]);
+        assert_eq!(m.col(2), &[3.0, 6.0]);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.row_vec(0), rows[0]);
+        assert_eq!(m.row_vec(1), rows[1]);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0]];
+        assert!(FeatureMatrix::from_rows(&rows).is_err());
+    }
+
+    #[test]
+    fn empty_and_single_col() {
+        let m = FeatureMatrix::from_rows(&[]).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.n_cols(), 0);
+        let c = FeatureMatrix::from_col(&[7.0, 8.0]);
+        assert_eq!(c.n_rows(), 2);
+        assert_eq!(c.n_cols(), 1);
+        assert_eq!(c.col(0), &[7.0, 8.0]);
+    }
+
+}

@@ -2,14 +2,20 @@
 //! equivalent): OLS linear regression, CART random forest, polynomial
 //! regression, min-max scaling, and the regression metrics the paper
 //! reports (MAPE / RMSE / R²).
+//!
+//! All fit/predict paths run over the columnar [`FeatureMatrix`]
+//! (contiguous column-major storage) so per-feature scans are sequential
+//! memory reads.
 
 mod forest;
 mod linear;
+mod matrix;
 pub mod metrics;
 mod polynomial;
 mod scaler;
 
-pub use forest::{DecisionTree, RandomForest};
+pub use forest::{DecisionTree, RandomForest, TreeParams};
 pub use linear::LinearRegression;
+pub use matrix::FeatureMatrix;
 pub use polynomial::PolyRegression;
 pub use scaler::MinMaxScaler;

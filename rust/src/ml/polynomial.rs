@@ -4,6 +4,7 @@
 //! uses the same code path.
 
 use super::linear::solve;
+use crate::ml::FeatureMatrix;
 use crate::util::Json;
 use anyhow::{anyhow, Result};
 
@@ -38,6 +39,12 @@ impl PolyRegression {
         }
         let coeffs = solve(a, b).ok_or_else(|| anyhow!("singular Vandermonde"))?;
         Ok(PolyRegression { coeffs })
+    }
+
+    /// Fit on one column of a columnar matrix (the batch/pixel models'
+    /// scalar regressor lives in a wider design matrix during sweeps).
+    pub fn fit_col(x: &FeatureMatrix, col: usize, y: &[f64], order: usize) -> Result<PolyRegression> {
+        Self::fit(x.col(col), y, order)
     }
 
     pub fn predict(&self, x: f64) -> f64 {
@@ -108,6 +115,17 @@ mod tests {
     #[test]
     fn too_few_points_error() {
         assert!(PolyRegression::fit(&[1.0, 2.0], &[1.0, 2.0], 2).is_err());
+    }
+
+    #[test]
+    fn fit_col_matches_fit() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&v| 0.5 * v * v - v + 2.0).collect();
+        let rows: Vec<Vec<f64>> = xs.iter().map(|&v| vec![99.0, v]).collect();
+        let m = FeatureMatrix::from_rows(&rows).unwrap();
+        let a = PolyRegression::fit(&xs, &ys, 2).unwrap();
+        let b = PolyRegression::fit_col(&m, 1, &ys, 2).unwrap();
+        assert_eq!(a.coeffs, b.coeffs);
     }
 
     #[test]

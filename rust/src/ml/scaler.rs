@@ -1,5 +1,6 @@
 //! Min-max scaler (paper Sec III-C2 / Eq. 1).
 
+use crate::ml::FeatureMatrix;
 use crate::util::Json;
 use anyhow::Result;
 
@@ -19,6 +20,12 @@ impl MinMaxScaler {
 
     pub fn from_bounds(lo: f64, hi: f64) -> MinMaxScaler {
         MinMaxScaler { lo, hi }
+    }
+
+    /// One scaler per column of a columnar matrix — each fit is a single
+    /// contiguous slice scan.
+    pub fn fit_columns(x: &FeatureMatrix) -> Vec<MinMaxScaler> {
+        (0..x.n_cols()).map(|j| MinMaxScaler::fit(x.col(j))).collect()
     }
 
     /// T_N = (T_O - min) / (max - min).
@@ -70,5 +77,14 @@ mod tests {
         let s = MinMaxScaler::fit(&[5.0, 5.0]);
         assert_eq!(s.transform(5.0), 0.0);
         assert_eq!(s.inverse(0.0), 5.0);
+    }
+
+    #[test]
+    fn per_column_fit() {
+        let m = FeatureMatrix::from_rows(&[vec![1.0, 100.0], vec![3.0, 50.0]]).unwrap();
+        let scalers = MinMaxScaler::fit_columns(&m);
+        assert_eq!(scalers.len(), 2);
+        assert_eq!((scalers[0].lo, scalers[0].hi), (1.0, 3.0));
+        assert_eq!((scalers[1].lo, scalers[1].hi), (50.0, 100.0));
     }
 }

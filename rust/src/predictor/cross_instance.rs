@@ -6,7 +6,7 @@ use crate::data::Corpus;
 use crate::dnn::{DnnRegressor, TrainConfig};
 use crate::features::FeatureSpace;
 use crate::gpu::Instance;
-use crate::ml::{LinearRegression, RandomForest};
+use crate::ml::{FeatureMatrix, LinearRegression, RandomForest};
 use crate::runtime::Runtime;
 use crate::util::Json;
 use anyhow::{anyhow, Result};
@@ -57,16 +57,16 @@ impl Default for EnsembleConfig {
 }
 
 impl CrossInstanceModel {
-    /// Assemble the training matrix D_{g_a → g_t} from corpus entries
-    /// (indices) that have observations on both instances.
+    /// Assemble the columnar training matrix D_{g_a → g_t} from corpus
+    /// entries (indices) that have observations on both instances.
     pub fn training_rows(
         fs: &FeatureSpace,
         corpus: &Corpus,
         idx: &[usize],
         anchor: Instance,
         target: Instance,
-    ) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
-        let mut x = Vec::new();
+    ) -> Result<(FeatureMatrix, Vec<f64>, Vec<f64>)> {
+        let mut rows = Vec::new();
         let mut anchor_lat = Vec::new();
         let mut y = Vec::new();
         for &i in idx {
@@ -74,11 +74,11 @@ impl CrossInstanceModel {
             let (Some(a), Some(t)) = (e.runs.get(&anchor), e.runs.get(&target)) else {
                 continue;
             };
-            x.push(fs.vectorize(&a.profile));
+            rows.push(fs.vectorize(&a.profile));
             anchor_lat.push(a.latency_ms);
             y.push(t.latency_ms);
         }
-        (x, anchor_lat, y)
+        Ok((FeatureMatrix::from_rows(&rows)?, anchor_lat, y))
     }
 
     /// Fit all three members.
@@ -91,14 +91,13 @@ impl CrossInstanceModel {
         target: Instance,
         cfg: EnsembleConfig,
     ) -> Result<CrossInstanceModel> {
-        let (x, anchor_lat, y) = Self::training_rows(fs, corpus, train_idx, anchor, target);
+        let (x, anchor_lat, y) = Self::training_rows(fs, corpus, train_idx, anchor, target)?;
         anyhow::ensure!(
-            x.len() >= 20,
+            x.n_rows() >= 20,
             "too few paired observations ({}) for {anchor}->{target}",
-            x.len()
+            x.n_rows()
         );
-        let lin_x: Vec<Vec<f64>> = anchor_lat.iter().map(|v| vec![*v]).collect();
-        let linear = LinearRegression::fit(&lin_x, &y)?;
+        let linear = LinearRegression::fit(&FeatureMatrix::from_col(&anchor_lat), &y)?;
         let forest = RandomForest::fit(&x, &y, cfg.n_trees, cfg.seed)?;
         let dnn = DnnRegressor::fit(
             rt,
@@ -132,23 +131,23 @@ impl CrossInstanceModel {
     }
 
     /// Batched median-ensemble prediction (one DNN artifact call per
-    /// `b_pred` rows — the serving hot path).
+    /// `b_pred` rows, one cache-hot forest pass — the serving hot path).
     pub fn predict_batch(
         &self,
         rt: &Runtime,
-        features: &[Vec<f64>],
+        features: &FeatureMatrix,
         anchor_latency_ms: &[f64],
     ) -> Result<Vec<(f64, Member)>> {
-        anyhow::ensure!(features.len() == anchor_latency_ms.len(), "len mismatch");
+        anyhow::ensure!(features.n_rows() == anchor_latency_ms.len(), "len mismatch");
         let d = self.dnn.predict(rt, features)?;
-        Ok(features
+        let f = self.forest.predict_batch(features);
+        Ok(anchor_latency_ms
             .iter()
-            .zip(anchor_latency_ms)
+            .zip(f)
             .zip(d)
-            .map(|((x, &al), dv)| {
+            .map(|((&al, fv), dv)| {
                 let l = self.linear.predict_one(&[al]);
-                let f = self.forest.predict_one(x);
-                median3(l, f, dv)
+                median3(l, fv, dv)
             })
             .collect())
     }

@@ -11,6 +11,12 @@
 //! through train steps without any pytree reconstruction.
 
 mod artifact;
+mod xla_shim;
+
+/// PJRT bindings alias: the in-tree shim by default (the offline build has
+/// no xla-rs native bindings — `Runtime::load` then fails with a clear
+/// message). Point this at the real crate to execute artifacts.
+use self::xla_shim as xla;
 
 pub use artifact::{ArtifactMeta, mlp_param_count, mlp_param_sizes};
 
