@@ -2,14 +2,18 @@
 # Tier-1 + hygiene gate for the rust crate. Mirrors .github/workflows/ci.yml
 # so the same command runs locally and in CI:
 #
-#   ./ci/check.sh            # build + test + fmt + clippy
+#   ./ci/check.sh            # build (lib + examples) + test + fmt + clippy
 #   ./ci/check.sh --bench    # additionally run the hot_paths bench and
-#                            # refresh BENCH_hot_paths.json
+#                            # refresh BENCH_hot_paths.json (BENCH_SMOKE=1
+#                            # for the short-iteration CI variant)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo build --release --examples =="
+cargo build --release --examples
 
 echo "== cargo test -q =="
 cargo test -q

@@ -1,17 +1,33 @@
-//! Instance recommender: the paper's motivating use case (Sec II / Fig 2).
+//! Instance recommender: the paper's motivating use case (Sec II / Fig 2),
+//! served by the `advisor` subsystem end to end.
 //!
-//! A CNN developer has a workload and an anchor instance. PROFET predicts
-//! the mini-batch latency on every available GPU instance; combined with
-//! on-demand pricing this yields a latency/cost Pareto recommendation —
-//! without ever running the workload anywhere but the anchor.
+//! A CNN developer profiles a workload ONCE on an anchor instance (at the
+//! min/max batch and pixel endpoints). The advisor sweeps every (target
+//! instance × batch × pixel × GPU count × pricing) candidate through
+//! phase-1 cross-instance prediction + the batch/pixel interpolators,
+//! computes the cost-latency Pareto frontier, and answers constrained
+//! planning queries — without ever running the workload anywhere but the
+//! anchor.
 //!
 //! Run: `cargo run --release --example instance_recommender [Model] [batch] [pixels]`
 
+use repro::advisor::{self, CacheStats, EndpointProfiles, Objective, PredictionCache, SweepRequest, TrainingJob};
 use repro::data::Corpus;
 use repro::gpu::Instance;
 use repro::models::ModelId;
 use repro::predictor::{Profet, TrainOptions};
-use repro::sim::{self, Workload};
+use repro::sim::{self, ScalingTable, Workload, BATCHES, PIXELS};
+
+fn endpoint_profiles(anchor: Instance, lo: Workload, hi: Workload) -> Option<EndpointProfiles> {
+    let run_lo = sim::run_workload(&lo, anchor)?;
+    let run_hi = sim::run_workload(&hi, anchor)?;
+    Some(EndpointProfiles {
+        profile_min: run_lo.profile.aggregated(),
+        lat_min: run_lo.latency_ms,
+        profile_max: run_hi.profile.aggregated(),
+        lat_max: run_hi.latency_ms,
+    })
+}
 
 fn main() -> repro::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -21,6 +37,21 @@ fn main() -> repro::Result<()> {
         .unwrap_or(ModelId::MobileNetV2);
     let batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
     let pixels: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    // stay inside the interpolation models' fitted grid — beyond it the
+    // batch/pixel polynomials would extrapolate, exactly what the serving
+    // layer rejects
+    anyhow::ensure!(
+        (BATCHES[0]..=BATCHES[4]).contains(&batch),
+        "batch {batch} outside the modeled range [{}, {}]",
+        BATCHES[0],
+        BATCHES[4]
+    );
+    anyhow::ensure!(
+        (PIXELS[0]..=PIXELS[4]).contains(&pixels),
+        "pixels {pixels} outside the modeled range [{}, {}]",
+        PIXELS[0],
+        PIXELS[4]
+    );
 
     let rt = repro::runtime::load_default()?;
     println!("training PROFET across all six instances ...");
@@ -35,63 +66,128 @@ fn main() -> repro::Result<()> {
     };
     let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
 
+    // ---- profile the workload on the anchor, endpoints only ------------
     let anchor = Instance::G4dn;
-    let w = Workload::new(model, batch, pixels);
-    let run = sim::run_workload(&w, anchor).expect("workload must run on the anchor");
-    println!(
-        "\nworkload {} profiled on {} ({:.1} ms/batch)\n",
-        w.key(),
+    let Some(batch_ep) = endpoint_profiles(
         anchor,
-        run.latency_ms
-    );
+        Workload::new(model, BATCHES[0], pixels),
+        Workload::new(model, BATCHES[4], pixels),
+    ) else {
+        anyhow::bail!(
+            "{} at {}px cannot run at the b={}/b={} batch endpoints on {} \
+             (model constraint or OOM) — try a smaller pixel size",
+            model.name(),
+            pixels,
+            BATCHES[0],
+            BATCHES[4],
+            anchor
+        );
+    };
     println!(
-        "{:6} {:>12} {:>12} {:>14} {:>10}",
-        "inst", "pred ms", "truth ms", "$ / 10k batches", "verdict"
+        "\n{} profiled on {} at the batch endpoints (b{}: {:.1} ms, b{}: {:.1} ms)",
+        model.name(),
+        anchor,
+        BATCHES[0],
+        batch_ep.lat_min,
+        BATCHES[4],
+        batch_ep.lat_max,
     );
 
-    let mut rows = Vec::new();
-    for target in Instance::ALL {
-        let pred_ms = if target == anchor {
-            run.latency_ms
-        } else {
-            profet
-                .predict_cross(&rt, anchor, target, &run.profile.aggregated(), run.latency_ms)?
-                .0
-        };
-        let truth = sim::run_workload(&w, target).map(|r| r.latency_ms);
-        let cost = pred_ms / 3.6e6 * target.spec().price_hr * 10_000.0;
-        rows.push((target, pred_ms, truth, cost));
-    }
-    let fastest = rows
+    // ---- sweep the full candidate grid ---------------------------------
+    // (pixel endpoints are omitted: this sweep stays at the asked pixel
+    // size — pass them plus `pixel_sizes` to sweep the resolution axis)
+    let query = SweepRequest {
+        anchor,
+        pixels,
+        batch: batch_ep,
+        pixel: None,
+        targets: Vec::new(),            // anchor + every modeled target
+        batches: vec![batch],           // compare instances at the asked batch
+        pixel_sizes: Vec::new(),        // at the asked pixel size
+        gpu_counts: vec![1, 2, 4],
+        include_spot: true,
+    };
+    let cache = PredictionCache::new(16, 4096);
+    let cache_stats = CacheStats::default();
+    let scaling = ScalingTable::new();
+    let cands = advisor::sweep(&rt, &profet, &cache, &cache_stats, &scaling, &query)?;
+    assert!(!cands.is_empty(), "sweep produced no candidates");
+
+    let points: Vec<(f64, f64)> = cands.iter().map(|c| c.objectives()).collect();
+    let frontier: std::collections::BTreeSet<usize> =
+        advisor::pareto_frontier(&points).into_iter().collect();
+
+    let order = advisor::rank_candidates(&cands);
+    println!(
+        "\n{:6} {:>5} {:>10} {:>12} {:>12} {:>9} {:>14} {:>9}",
+        "inst", "gpus", "pricing", "step ms", "imgs/s", "$/hr", "$/1M imgs", "frontier"
+    );
+    // show the cheapest 16 rows, plus every frontier point regardless
+    let shown: Vec<usize> = order
         .iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap()
-        .0;
-    let cheapest = rows
-        .iter()
-        .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
-        .unwrap()
-        .0;
-    for (inst, pred, truth, cost) in &rows {
-        let verdict = match (inst == &fastest, inst == &cheapest) {
-            (true, true) => "fast+cheap",
-            (true, false) => "fastest",
-            (false, true) => "cheapest",
-            _ => "",
-        };
+        .enumerate()
+        .filter(|&(rank, i)| rank < 16 || frontier.contains(i))
+        .map(|(_, &i)| i)
+        .collect();
+    for &i in &shown {
+        let c = &cands[i];
         println!(
-            "{:6} {:>12.1} {:>12} {:>14.3} {:>10}",
-            inst.key(),
-            pred,
-            truth.map(|t| format!("{t:.1}")).unwrap_or_else(|| "OOM".into()),
-            cost,
-            verdict
+            "{:6} {:>5} {:>10} {:>12.1} {:>12.0} {:>9.3} {:>14.3} {:>9}",
+            c.target.key(),
+            c.n_gpus,
+            c.pricing.key(),
+            c.latency_ms,
+            c.imgs_per_s,
+            c.price_hr,
+            c.cost_per_img_usd * 1e6,
+            if frontier.contains(&i) { "*" } else { "" }
         );
     }
+    if shown.len() < cands.len() {
+        println!("  ... (+{} dominated candidates not shown)", cands.len() - shown.len());
+    }
     println!(
-        "\nrecommendation: train on {} for speed, {} for cost.",
-        fastest.key(),
-        cheapest.key()
+        "\n{} candidates, {} on the Pareto frontier; phase-1 cache: {} hits / {} misses",
+        cands.len(),
+        frontier.len(),
+        cache_stats.hits.load(std::sync::atomic::Ordering::Relaxed),
+        cache_stats.misses.load(std::sync::atomic::Ordering::Relaxed),
     );
+
+    // ---- constrained planning ------------------------------------------
+    let job = TrainingJob {
+        dataset_images: 1_281_167.0, // ImageNet-1k
+        epochs: 90.0,
+    };
+    for (label, objective) in [
+        (
+            "cheapest finishing within 72 h",
+            Objective::CheapestUnderDeadline { deadline_hours: 72.0 },
+        ),
+        (
+            "fastest within a $200 budget",
+            Objective::FastestUnderBudget { budget_usd: 200.0 },
+        ),
+        (
+            "most epochs within 24 h",
+            Objective::MaxEpochsUnderDeadline { deadline_hours: 24.0 },
+        ),
+    ] {
+        match advisor::plan(&cands, &job, &objective) {
+            Some(p) => {
+                let c = &cands[p.index];
+                println!(
+                    "plan [{label}]: {} x{} ({}) — {:.1} h, ${:.2}, {:.0} epochs",
+                    c.target.key(),
+                    c.n_gpus,
+                    c.pricing.key(),
+                    p.hours,
+                    p.cost_usd,
+                    p.epochs
+                );
+            }
+            None => println!("plan [{label}]: infeasible on every candidate"),
+        }
+    }
     Ok(())
 }

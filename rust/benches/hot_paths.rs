@@ -21,6 +21,13 @@ use repro::sim::{self, Workload};
 use repro::util::{Json, Rng64};
 use std::time::Instant;
 
+/// `BENCH_SMOKE=1` (the CI bench-smoke job) caps every measurement budget
+/// so the whole suite finishes in seconds — the JSON artifact is then a
+/// liveness/trajectory record, not a precision measurement.
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
 /// Run `f` repeatedly for ~`budget_ms`, report ns/iter and iters/s, and
 /// record the result for the JSON dump.
 fn bench<F: FnMut()>(
@@ -33,6 +40,7 @@ fn bench<F: FnMut()>(
     for _ in 0..3 {
         f();
     }
+    let budget_ms = if smoke() { budget_ms.min(30) } else { budget_ms };
     let budget = std::time::Duration::from_millis(budget_ms);
     let start = Instant::now();
     let mut iters = 0u64;
@@ -175,6 +183,73 @@ fn main() {
     bench(&mut results, "Request::parse (predict line)", 200, || {
         std::hint::black_box(repro::coordinator::Request::parse(line).unwrap());
     });
+
+    // ---------------- advisor ----------------
+    println!("[L3] advisor:");
+    {
+        let mut rng = Rng64::new(17);
+        let pts: Vec<(f64, f64)> = (0..4096)
+            .map(|_| (rng.range(0.1, 10.0), rng.range(0.01, 1.0)))
+            .collect();
+        bench(&mut results, "advisor::pareto_frontier (4096 pts)", 300, || {
+            std::hint::black_box(repro::advisor::pareto_frontier(&pts));
+        });
+    }
+    if let Some(rt) = &rt {
+        use repro::advisor::{CacheStats, EndpointProfiles, PredictionCache, SweepRequest};
+        use repro::predictor::{Profet, TrainOptions};
+        use repro::sim::ScalingTable;
+        // tiny advisor-serving stack: 1 anchor -> 1 target, small ensemble
+        let corpus2 = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+        let (train_idx, _) = corpus2.split_random(0.2, 7);
+        let opts = TrainOptions {
+            anchors: vec![Instance::G4dn],
+            targets: vec![Instance::P3],
+            n_trees: 10,
+            dnn_epochs: 5,
+            ..Default::default()
+        };
+        let profet = Profet::train(rt, &corpus2, &train_idx, &opts).unwrap();
+        let endpoint = |batch: usize| {
+            let w = Workload::new(ModelId::ResNet18, batch, 64);
+            let run = sim::run_workload(&w, Instance::G4dn).unwrap();
+            (run.profile.aggregated(), run.latency_ms)
+        };
+        let (p_min, l_min) = endpoint(16);
+        let (p_max, l_max) = endpoint(256);
+        let query = SweepRequest {
+            anchor: Instance::G4dn,
+            pixels: 64,
+            batch: EndpointProfiles {
+                profile_min: p_min,
+                lat_min: l_min,
+                profile_max: p_max,
+                lat_max: l_max,
+            },
+            pixel: None,
+            targets: Vec::new(),
+            batches: Vec::new(),
+            pixel_sizes: Vec::new(),
+            gpu_counts: vec![1, 2],
+            include_spot: true,
+        };
+        let scaling = ScalingTable::new();
+        let stats = CacheStats::default();
+        // cold: fresh cache every iteration (phase-1 executes each time)
+        bench(&mut results, "advisor_sweep cold (2 targets, full grid)", 600, || {
+            let cache = PredictionCache::new(16, 4096);
+            std::hint::black_box(
+                repro::advisor::sweep(rt, &profet, &cache, &stats, &scaling, &query).unwrap(),
+            );
+        });
+        // warm: shared cache, phase-1 short-circuits to lookups
+        let cache = PredictionCache::new(16, 4096);
+        bench(&mut results, "advisor_sweep warm (cache hits)", 400, || {
+            std::hint::black_box(
+                repro::advisor::sweep(rt, &profet, &cache, &stats, &scaling, &query).unwrap(),
+            );
+        });
+    }
 
     // ---------------- machine-readable dump ----------------
     let mut o = Json::obj();

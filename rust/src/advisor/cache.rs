@@ -1,0 +1,385 @@
+//! Sharded, capacity-bounded memoization cache for phase-1 predictions.
+//!
+//! Keyed by (anchor, target, quantized anchor latency, quantized profile
+//! fingerprint). The value is the exact `(latency, member)` pair the
+//! ensemble produced, stored verbatim — a cache hit returns a prediction
+//! bitwise-equal to the cold one it memoizes. Quantization (2^20 buckets
+//! per millisecond) only widens the *key*: two requests whose profile
+//! values agree to within ~1 ppm of a millisecond share an entry; anything
+//! coarser gets its own.
+//!
+//! The shard array bounds lock hold times and keeps contention negligible
+//! when multiple threads consult the cache concurrently; each shard is
+//! independently capacity-bounded with FIFO eviction, so the cache as a
+//! whole never holds more than `n_shards * per_shard_cap` entries.
+
+use crate::gpu::Instance;
+use crate::predictor::Member;
+use crate::util::fnv1a;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Key-quantization scale: buckets per millisecond.
+const Q: f64 = (1u64 << 20) as f64;
+
+/// Quantized key encoding of a millisecond value. The low 64 bits hold
+/// either the rounded bucket or — for values whose scaled form leaves
+/// the exactly-representable integer range (absurd-scale or non-finite
+/// inputs the protocol layer rejects, but library callers may pass) —
+/// the raw f64 bit pattern. Bit 64 tags which encoding was used, so the
+/// two branches occupy disjoint ranges and two distinct values can never
+/// alias to one bucket.
+fn quantize(v: f64) -> u128 {
+    let q = v * Q;
+    if q.abs() < 9.0e15 {
+        (q.round() as i64) as u64 as u128
+    } else {
+        (1u128 << 64) | v.to_bits() as u128
+    }
+}
+
+/// Canonical quantized profile byte stream + its FNV-1a fingerprint.
+/// Build once per profile and share across the per-target keys of a
+/// sweep (the stream is `Arc`-shared, never copied per key).
+#[derive(Debug, Clone)]
+pub struct ProfileFingerprint {
+    bytes: std::sync::Arc<Vec<u8>>,
+    fingerprint: u64,
+}
+
+impl ProfileFingerprint {
+    pub fn of(profile: &BTreeMap<String, f64>) -> ProfileFingerprint {
+        // BTreeMap iteration is sorted and each record is length-prefixed
+        // (name length, name bytes, 16-byte quantized value), so the byte
+        // stream parses unambiguously — it is *injective* over profiles:
+        // no choice of op names (which are client-controlled and may
+        // contain any bytes) can make two distinct profiles collide.
+        let mut bytes = Vec::with_capacity(profile.len() * 32);
+        for (op, ms) in profile {
+            bytes.extend_from_slice(&(op.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(op.as_bytes());
+            bytes.extend_from_slice(&quantize(*ms).to_le_bytes());
+        }
+        let fingerprint = fnv1a(&bytes);
+        ProfileFingerprint {
+            bytes: std::sync::Arc::new(bytes),
+            fingerprint,
+        }
+    }
+}
+
+/// Cache key: instance pair + quantized anchor latency + the canonical
+/// quantized profile byte stream. The full byte stream participates in
+/// equality AND in the derived `Hash` (so the map's keyed SipHash sees
+/// the client-controlled bytes — crafted FNV collisions cannot force
+/// HashMap bucket pile-ups): a fingerprint collision between two
+/// different profiles degrades to a cache miss, never the wrong
+/// workload's prediction. `route` is only the shard selector, folding in
+/// every key component so per-target keys of one sweep spread across
+/// shards.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CacheKey {
+    pub anchor: Instance,
+    pub target: Instance,
+    lat_q: u128,
+    fingerprint: u64,
+    bytes: std::sync::Arc<Vec<u8>>,
+    route: u64,
+}
+
+impl CacheKey {
+    pub fn of(
+        anchor: Instance,
+        target: Instance,
+        anchor_latency_ms: f64,
+        profile: &BTreeMap<String, f64>,
+    ) -> CacheKey {
+        CacheKey::keyed(anchor, target, anchor_latency_ms, &ProfileFingerprint::of(profile))
+    }
+
+    /// Key from a precomputed profile fingerprint — the byte stream is
+    /// shared, only the (anchor, target, latency) header is hashed here.
+    pub fn keyed(
+        anchor: Instance,
+        target: Instance,
+        anchor_latency_ms: f64,
+        pf: &ProfileFingerprint,
+    ) -> CacheKey {
+        let lat_q = quantize(anchor_latency_ms);
+        let mut header = Vec::with_capacity(32);
+        header.extend_from_slice(anchor.key().as_bytes());
+        header.push(0x1f);
+        header.extend_from_slice(target.key().as_bytes());
+        header.push(0x1f);
+        header.extend_from_slice(&lat_q.to_le_bytes());
+        CacheKey {
+            anchor,
+            target,
+            lat_q,
+            fingerprint: pf.fingerprint,
+            bytes: pf.bytes.clone(),
+            route: fnv1a(&header) ^ pf.fingerprint,
+        }
+    }
+}
+
+/// Hit/miss counters. Embedded in the coordinator's `BatcherStats` so the
+/// `stats` op surfaces them; the advisor sweep shares the same counters.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+struct Shard {
+    map: HashMap<CacheKey, (f64, Member)>,
+    /// Insertion order for FIFO eviction (keys are pushed exactly once:
+    /// on first insert; value updates do not reorder).
+    fifo: VecDeque<CacheKey>,
+}
+
+/// The sharded cache. All methods take `&self`; interior mutability is one
+/// mutex per shard.
+pub struct PredictionCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+}
+
+impl PredictionCache {
+    /// `capacity` is the total entry bound, split evenly across shards
+    /// (rounded up to at least one entry per shard).
+    pub fn new(n_shards: usize, capacity: usize) -> PredictionCache {
+        let n_shards = n_shards.max(1);
+        let per_shard_cap = ((capacity + n_shards - 1) / n_shards).max(1);
+        PredictionCache {
+            shards: (0..n_shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        fifo: VecDeque::new(),
+                    })
+                })
+                .collect(),
+            per_shard_cap,
+        }
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> &Mutex<Shard> {
+        &self.shards[(key.route % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a prediction, counting the outcome in `stats`.
+    pub fn get(&self, key: &CacheKey, stats: &CacheStats) -> Option<(f64, Member)> {
+        let got = self.shard_of(key).lock().unwrap().map.get(key).copied();
+        match got {
+            Some(_) => stats.hits.fetch_add(1, Ordering::Relaxed),
+            None => stats.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Insert (or refresh) a prediction, evicting oldest-first past the
+    /// shard capacity.
+    pub fn insert(&self, key: CacheKey, value: (f64, Member)) {
+        let mut shard = self.shard_of(&key).lock().unwrap();
+        if shard.map.insert(key.clone(), value).is_none() {
+            shard.fifo.push_back(key);
+            while shard.map.len() > self.per_shard_cap {
+                match shard.fifo.pop_front() {
+                    Some(old) => {
+                        shard.map.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Total entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hard entry bound (`n_shards * per_shard_cap`).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn identical_inputs_share_a_key() {
+        let p = profile(&[("Conv2D", 286.0), ("Relu", 26.0)]);
+        let a = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        let b = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p.clone());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn key_separates_pairs_latency_and_profiles() {
+        let p = profile(&[("Conv2D", 286.0)]);
+        let base = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P2, 42.5, &p));
+        assert_ne!(base, CacheKey::of(Instance::P3, Instance::G4dn, 42.5, &p));
+        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.6, &p));
+        let p2 = profile(&[("Conv2D", 287.0)]);
+        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p2));
+        let p3 = profile(&[("Conv2D", 286.0), ("Relu", 1.0)]);
+        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p3));
+    }
+
+    #[test]
+    fn quantization_granularity() {
+        let p = profile(&[("Conv2D", 286.0)]);
+        // below a quantization bucket (2^-20 ms): same key
+        let near = profile(&[("Conv2D", 286.0 + 1e-8)]);
+        assert_eq!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p),
+            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &near)
+        );
+        // a few buckets away: distinct key
+        let far = profile(&[("Conv2D", 286.0 + 1e-5)]);
+        assert_ne!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p),
+            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &far)
+        );
+    }
+
+    #[test]
+    fn byte_stream_is_injective_over_adversarial_op_names() {
+        // without length prefixes, {"A": 0, "B": 7} and one entry whose
+        // *name* embeds A's separator + value bytes + "B" would serialize
+        // to identical streams and share a cache key
+        let p1 = profile(&[("A", 0.0), ("B", 7.0)]);
+        let mut tricky = String::from("A\u{1f}");
+        tricky.extend(std::iter::repeat('\0').take(16));
+        tricky.push('B');
+        let p2: BTreeMap<String, f64> = [(tricky, 7.0)].into_iter().collect();
+        assert_ne!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p1),
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p2)
+        );
+    }
+
+    #[test]
+    fn absurd_scale_values_do_not_alias() {
+        // quantize() falls back to bit patterns instead of saturating
+        let a = profile(&[("Conv2D", 1e300)]);
+        let b = profile(&[("Conv2D", 2e300)]);
+        assert_ne!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &a),
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &b)
+        );
+        let p = profile(&[("Conv2D", 1.0)]);
+        assert_ne!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 1e14, &p),
+            CacheKey::of(Instance::G4dn, Instance::P3, 2e14, &p)
+        );
+        // the tag bit keeps the fallback branch disjoint from the
+        // quantized branch even for large-negative values, whose raw bit
+        // patterns (as integers) land inside the quantized range
+        let neg_huge = -1.7e308f64;
+        let in_band = (neg_huge.to_bits() as i64) as f64 / (1u64 << 20) as f64;
+        assert_ne!(
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", neg_huge)])),
+            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", in_band)]))
+        );
+    }
+
+    #[test]
+    fn keyed_shares_profile_bytes_across_targets() {
+        let p = profile(&[("Conv2D", 286.0), ("Relu", 26.0)]);
+        let pf = ProfileFingerprint::of(&p);
+        let k_p3 = CacheKey::keyed(Instance::G4dn, Instance::P3, 42.5, &pf);
+        let k_p2 = CacheKey::keyed(Instance::G4dn, Instance::P2, 42.5, &pf);
+        // same key as the from-scratch constructor
+        assert_eq!(k_p3, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p));
+        // distinct keys, distinct shard routes, shared byte allocation
+        assert_ne!(k_p3, k_p2);
+        assert_ne!(k_p3.route, k_p2.route);
+        assert!(std::sync::Arc::ptr_eq(&k_p3.bytes, &k_p2.bytes));
+    }
+
+    #[test]
+    fn get_insert_and_counters() {
+        let cache = PredictionCache::new(4, 64);
+        let stats = CacheStats::default();
+        let p = profile(&[("Conv2D", 286.0)]);
+        let key = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        assert!(cache.get(&key, &stats).is_none());
+        cache.insert(key.clone(), (123.456, Member::Forest));
+        let (v, m) = cache.get(&key, &stats).unwrap();
+        assert_eq!(v.to_bits(), 123.456f64.to_bits());
+        assert_eq!(m, Member::Forest);
+        assert_eq!(stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn capacity_bound_with_fifo_eviction() {
+        let cache = PredictionCache::new(2, 8);
+        let stats = CacheStats::default();
+        let keys: Vec<CacheKey> = (0..200)
+            .map(|i| {
+                let p = profile(&[("Conv2D", i as f64)]);
+                CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p)
+            })
+            .collect();
+        for (i, k) in keys.iter().enumerate() {
+            cache.insert(k.clone(), (i as f64, Member::Linear));
+        }
+        assert!(cache.len() <= cache.capacity(), "{}", cache.len());
+        // newest keys survive, oldest were evicted from their shard
+        assert!(cache.get(keys.last().unwrap(), &stats).is_some());
+        assert!(cache.get(&keys[0], &stats).is_none());
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate_fifo_entries() {
+        let cache = PredictionCache::new(1, 4);
+        let p = profile(&[("Conv2D", 1.0)]);
+        let key = CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p);
+        for _ in 0..100 {
+            cache.insert(key.clone(), (1.0, Member::Dnn));
+        }
+        assert_eq!(cache.len(), 1);
+        let shard = cache.shard_of(&key).lock().unwrap();
+        assert_eq!(shard.fifo.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_access_smoke() {
+        use std::sync::Arc;
+        let cache = Arc::new(PredictionCache::new(8, 1024));
+        let stats = Arc::new(CacheStats::default());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let cache = cache.clone();
+            let stats = stats.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let p = profile(&[("Conv2D", (i % 64) as f64)]);
+                    let key = CacheKey::of(Instance::G4dn, Instance::P3, t as f64, &p);
+                    cache.insert(key.clone(), (i as f64, Member::Forest));
+                    assert!(cache.get(&key, &stats).is_some());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(cache.len() <= cache.capacity());
+    }
+}

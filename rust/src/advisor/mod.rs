@@ -1,0 +1,25 @@
+//! Cost-aware instance advisor (paper Sec II / Fig 2): turns PROFET
+//! *predictions* into *recommendations* — which instance, batch size,
+//! pixel size, GPU count, and purchase option to train on.
+//!
+//! * [`sweep`] — evaluate a profiled workload across the whole candidate
+//!   grid by composing phase-1 cross-instance prediction with the
+//!   batch/pixel interpolation models (batched, cache-first);
+//! * [`pareto`] — the cost-latency Pareto frontier over swept candidates;
+//! * [`plan`] — constrained queries: cheapest under deadline, fastest
+//!   under budget, epochs-to-deadline;
+//! * [`cache`] — sharded, capacity-bounded memoization of phase-1
+//!   predictions (hits are bitwise-equal to cold predictions).
+//!
+//! Served through the coordinator's `recommend` and `plan` ops; usable
+//! in-process via [`sweep::sweep`] (see `examples/instance_recommender.rs`).
+
+pub mod cache;
+pub mod pareto;
+pub mod plan;
+pub mod sweep;
+
+pub use cache::{CacheKey, CacheStats, PredictionCache, ProfileFingerprint};
+pub use pareto::{dominates, pareto_frontier, pareto_frontier_naive};
+pub use plan::{cost_usd, hours, plan, Objective, PlanChoice, TrainingJob};
+pub use sweep::{rank_candidates, sweep, Candidate, EndpointProfiles, SweepRequest};

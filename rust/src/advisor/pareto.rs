@@ -1,0 +1,128 @@
+//! Cost–latency Pareto frontier (both coordinates minimized).
+//!
+//! A point `a` dominates `b` iff `a <= b` in both coordinates and `a < b`
+//! in at least one. The frontier is the set of non-dominated points;
+//! exact duplicates of a frontier point are all kept (neither strictly
+//! dominates the other), which matters for advisor candidates that differ
+//! only in a latency-neutral attribute.
+
+use crate::util::cmp_f64;
+
+/// `a` dominates `b` (minimization, weak-inequality form).
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Indices (ascending) of the non-dominated points — `O(n log n)` sweep:
+/// sort by (x, y), then a point survives iff its y is strictly below every
+/// strictly-smaller-x point's y, and it has the minimal y within its own
+/// x-group (duplicates of that minimal (x, y) all survive).
+pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        cmp_f64(points[a].0, points[b].0).then(cmp_f64(points[a].1, points[b].1))
+    });
+    let mut out = Vec::new();
+    let mut best_y = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        let x = points[idx[i]].0;
+        let mut j = i;
+        while j < idx.len() && points[idx[j]].0 == x {
+            j += 1;
+        }
+        let group_min_y = points[idx[i]].1; // group is y-sorted
+        if group_min_y < best_y {
+            for &k in &idx[i..j] {
+                if points[k].1 == group_min_y {
+                    out.push(k);
+                } else {
+                    break;
+                }
+            }
+            best_y = group_min_y;
+        }
+        i = j;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// `O(n^2)` brute-force reference — the correctness oracle the sweep (and
+/// the server integration test) are checked against.
+pub fn pareto_frontier_naive(points: &[(f64, f64)]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            points
+                .iter()
+                .enumerate()
+                .all(|(j, &q)| j == i || !dominates(q, points[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(!dominates((1.0, 2.0), (1.0, 2.0))); // equal: no strict edge
+        assert!(!dominates((1.0, 3.0), (2.0, 2.0))); // incomparable
+    }
+
+    #[test]
+    fn tiny_cases() {
+        assert!(pareto_frontier(&[]).is_empty());
+        assert_eq!(pareto_frontier(&[(3.0, 4.0)]), vec![0]);
+        // a dominated point drops out
+        assert_eq!(pareto_frontier(&[(1.0, 1.0), (2.0, 2.0)]), vec![0]);
+        // incomparable points all stay
+        assert_eq!(
+            pareto_frontier(&[(1.0, 3.0), (2.0, 2.0), (3.0, 1.0)]),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn duplicates_and_ties() {
+        // exact duplicates of a frontier point all survive
+        let pts = [(1.0, 1.0), (1.0, 1.0), (2.0, 0.5), (1.0, 2.0)];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1, 2]);
+        assert_eq!(pareto_frontier_naive(&pts), vec![0, 1, 2]);
+        // same x, larger y is dominated; same y, larger x is dominated
+        let pts = [(1.0, 1.0), (1.0, 1.5), (1.5, 1.0)];
+        assert_eq!(pareto_frontier(&pts), vec![0]);
+    }
+
+    #[test]
+    fn all_identical() {
+        let pts = [(2.0, 2.0); 5];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sweep_matches_brute_force_random() {
+        let mut rng = Rng64::new(0xADV1);
+        for case in 0..50 {
+            let n = 1 + (case % 40);
+            // quantized coordinates force plenty of ties
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    (
+                        (rng.range(0.0, 8.0)).floor(),
+                        (rng.range(0.0, 8.0)).floor(),
+                    )
+                })
+                .collect();
+            assert_eq!(
+                pareto_frontier(&pts),
+                pareto_frontier_naive(&pts),
+                "case {case}: {pts:?}"
+            );
+        }
+    }
+}

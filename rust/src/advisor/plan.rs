@@ -1,0 +1,240 @@
+//! Constrained deployment planning over swept candidates: "cheapest under
+//! deadline D", "fastest under budget B", and epochs-to-deadline.
+//!
+//! All selections are deterministic: score ties fall through to the
+//! candidate's total-order [`Candidate::tie_key`].
+
+use super::sweep::Candidate;
+use crate::util::cmp_f64;
+
+/// The training job being planned: a dataset swept `epochs` times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainingJob {
+    pub dataset_images: f64,
+    pub epochs: f64,
+}
+
+/// What the planner optimizes, and under which constraint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize cost among candidates finishing within the deadline.
+    CheapestUnderDeadline { deadline_hours: f64 },
+    /// Minimize wall time among candidates within the budget.
+    FastestUnderBudget { budget_usd: f64 },
+    /// Maximize whole epochs completed by the deadline (the job's `epochs`
+    /// field is ignored; ties go to the cheaper candidate).
+    MaxEpochsUnderDeadline { deadline_hours: f64 },
+}
+
+/// The planner's pick: candidate index plus its realized schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanChoice {
+    pub index: usize,
+    pub hours: f64,
+    pub cost_usd: f64,
+    pub epochs: f64,
+}
+
+/// Wall-clock hours for the full job on one candidate.
+pub fn hours(c: &Candidate, job: &TrainingJob) -> f64 {
+    job.epochs * job.dataset_images / c.imgs_per_s / 3600.0
+}
+
+/// Total cost (USD) for the full job on one candidate.
+pub fn cost_usd(c: &Candidate, job: &TrainingJob) -> f64 {
+    hours(c, job) * c.price_hr
+}
+
+/// Pick the best candidate for `objective`; `None` when no candidate
+/// satisfies the constraint (or `cands` is empty).
+pub fn plan(cands: &[Candidate], job: &TrainingJob, objective: &Objective) -> Option<PlanChoice> {
+    match *objective {
+        Objective::CheapestUnderDeadline { deadline_hours } => cands
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, c, hours(c, job), cost_usd(c, job)))
+            .filter(|&(_, _, h, _)| h <= deadline_hours)
+            .min_by(|a, b| {
+                cmp_f64(a.3, b.3)
+                    .then(cmp_f64(a.2, b.2))
+                    .then(a.1.tie_key().cmp(&b.1.tie_key()))
+            })
+            .map(|(i, _, h, cost)| PlanChoice {
+                index: i,
+                hours: h,
+                cost_usd: cost,
+                epochs: job.epochs,
+            }),
+        Objective::FastestUnderBudget { budget_usd } => cands
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, c, hours(c, job), cost_usd(c, job)))
+            .filter(|&(_, _, _, cost)| cost <= budget_usd)
+            .min_by(|a, b| {
+                cmp_f64(a.2, b.2)
+                    .then(cmp_f64(a.3, b.3))
+                    .then(a.1.tie_key().cmp(&b.1.tie_key()))
+            })
+            .map(|(i, _, h, cost)| PlanChoice {
+                index: i,
+                hours: h,
+                cost_usd: cost,
+                epochs: job.epochs,
+            }),
+        Objective::MaxEpochsUnderDeadline { deadline_hours } => cands
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let epochs =
+                    (deadline_hours * 3600.0 * c.imgs_per_s / job.dataset_images).floor();
+                (epochs >= 1.0).then_some((i, c, epochs))
+            })
+            .max_by(|a, b| {
+                cmp_f64(a.2, b.2)
+                    // more epochs wins; then cheaper per image; tie_key is
+                    // inverted because max_by keeps the *greatest* element
+                    .then(cmp_f64(b.1.cost_per_img_usd, a.1.cost_per_img_usd))
+                    .then(b.1.tie_key().cmp(&a.1.tie_key()))
+            })
+            .map(|(i, c, epochs)| {
+                let one_epoch = TrainingJob {
+                    dataset_images: job.dataset_images,
+                    epochs,
+                };
+                PlanChoice {
+                    index: i,
+                    hours: hours(c, &one_epoch),
+                    cost_usd: cost_usd(c, &one_epoch),
+                    epochs,
+                }
+            }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Instance;
+    use crate::sim::cost_model::Pricing;
+
+    /// `latency_ms` for batch 64, priced at `price_hr`.
+    fn cand(target: Instance, latency_ms: f64, price_hr: f64) -> Candidate {
+        let imgs_per_s = 64.0 * 1e3 / latency_ms;
+        Candidate {
+            target,
+            batch: 64,
+            pixels: 64,
+            n_gpus: 1,
+            pricing: Pricing::OnDemand,
+            latency_ms,
+            imgs_per_s,
+            price_hr,
+            cost_per_img_usd: price_hr / 3600.0 / imgs_per_s,
+        }
+    }
+
+    // Throughputs: fast = 640 img/s at $3.60/hr, slow = 64 img/s at $0.36/hr.
+    fn fixture() -> Vec<Candidate> {
+        vec![
+            cand(Instance::P3, 100.0, 3.6),
+            cand(Instance::G3s, 1000.0, 0.36),
+        ]
+    }
+
+    // job: 230400 images x 1 epoch -> fast: 0.1 h / $0.36; slow: 1 h / $0.36.
+    fn job() -> TrainingJob {
+        TrainingJob {
+            dataset_images: 230_400.0,
+            epochs: 1.0,
+        }
+    }
+
+    #[test]
+    fn schedule_arithmetic() {
+        let c = fixture();
+        assert!((hours(&c[0], &job()) - 0.1).abs() < 1e-12);
+        assert!((hours(&c[1], &job()) - 1.0).abs() < 1e-12);
+        assert!((cost_usd(&c[0], &job()) - 0.36).abs() < 1e-12);
+        assert!((cost_usd(&c[1], &job()) - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cheapest_under_deadline() {
+        let c = fixture();
+        // generous deadline: both feasible, equal cost -> lower hours wins
+        let p = plan(
+            &c,
+            &job(),
+            &Objective::CheapestUnderDeadline { deadline_hours: 2.0 },
+        )
+        .unwrap();
+        assert_eq!(p.index, 0);
+        // tight deadline: only the fast candidate fits
+        let p = plan(
+            &c,
+            &job(),
+            &Objective::CheapestUnderDeadline { deadline_hours: 0.5 },
+        )
+        .unwrap();
+        assert_eq!(p.index, 0);
+        assert!((p.hours - 0.1).abs() < 1e-12);
+        // impossible deadline
+        assert!(plan(
+            &c,
+            &job(),
+            &Objective::CheapestUnderDeadline { deadline_hours: 0.01 },
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn cheapest_prefers_lower_cost_when_costs_differ() {
+        let mut c = fixture();
+        c[1].price_hr = 0.18; // slow candidate now half the job cost
+        c[1].cost_per_img_usd /= 2.0;
+        let p = plan(
+            &c,
+            &job(),
+            &Objective::CheapestUnderDeadline { deadline_hours: 2.0 },
+        )
+        .unwrap();
+        assert_eq!(p.index, 1);
+        assert!((p.cost_usd - 0.18).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fastest_under_budget() {
+        let c = fixture();
+        // both within budget -> fastest
+        let p = plan(&c, &job(), &Objective::FastestUnderBudget { budget_usd: 1.0 }).unwrap();
+        assert_eq!(p.index, 0);
+        // budget below both -> infeasible
+        assert!(plan(&c, &job(), &Objective::FastestUnderBudget { budget_usd: 0.1 }).is_none());
+    }
+
+    #[test]
+    fn max_epochs_under_deadline() {
+        let c = fixture();
+        // 1 hour: fast does 10 epochs, slow does 1 -> fast wins with 10
+        let p = plan(
+            &c,
+            &job(),
+            &Objective::MaxEpochsUnderDeadline { deadline_hours: 1.0 },
+        )
+        .unwrap();
+        assert_eq!((p.index, p.epochs as u64), (0, 10));
+        assert!((p.hours - 1.0).abs() < 1e-12);
+        // too short for even one epoch anywhere
+        assert!(plan(
+            &c,
+            &job(),
+            &Objective::MaxEpochsUnderDeadline { deadline_hours: 0.05 },
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn empty_candidates() {
+        assert!(plan(&[], &job(), &Objective::FastestUnderBudget { budget_usd: 1e9 }).is_none());
+    }
+}

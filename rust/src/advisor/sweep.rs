@@ -1,0 +1,557 @@
+//! Sweep engine: evaluate a profiled workload across every (target
+//! instance × batch size × pixel size × GPU count × purchase option)
+//! candidate.
+//!
+//! Composition per target (paper Fig 11 "Predict", extended to a grid):
+//!
+//! 1. **Phase-1 (cross-instance)** — the anchor's min/max-batch profiles
+//!    (and optionally min/max-pixel profiles) map to endpoint latencies on
+//!    the target through the median ensemble. All endpoints for a target
+//!    ride in ONE batched forest/MLP execution
+//!    ([`CrossInstanceModel::predict_batch`]), consulted cache-first, so a
+//!    full sweep is a handful of batched executions — not hundreds of
+//!    scalar calls.
+//! 2. **Phase-2 (interpolation)** — the target's batch polynomial
+//!    denormalizes each candidate batch between the endpoint latencies
+//!    (Eq. 1); candidate pixel sizes scale multiplicatively through the
+//!    pixel polynomial relative to the profiled size.
+//! 3. **Scenarios** — multi-GPU counts apply the Hafeez-style static
+//!    multiplier ([`ScalingTable`]); each (candidate, GPU count) is priced
+//!    on-demand and optionally spot ([`price_per_hour`]).
+//!
+//! [`CrossInstanceModel::predict_batch`]: crate::predictor::CrossInstanceModel::predict_batch
+
+use super::cache::{CacheKey, CacheStats, PredictionCache, ProfileFingerprint};
+use crate::gpu::Instance;
+use crate::ml::FeatureMatrix;
+use crate::predictor::{BatchPixelModel, Profet};
+use crate::runtime::Runtime;
+use crate::sim::cost_model::{price_per_hour, Pricing};
+use crate::sim::multigpu::ScalingTable;
+use crate::sim::workload::BATCHES;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Anchor-side profiles at the two endpoints of one scaling axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EndpointProfiles {
+    pub profile_min: BTreeMap<String, f64>,
+    pub lat_min: f64,
+    pub profile_max: BTreeMap<String, f64>,
+    pub lat_max: f64,
+}
+
+/// One advisor query: what was profiled, and which candidate grid to sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRequest {
+    pub anchor: Instance,
+    /// Pixel size the batch-endpoint workloads were profiled at.
+    pub pixels: usize,
+    /// Anchor profiles at the min/max batch size (b=16 / b=256).
+    pub batch: EndpointProfiles,
+    /// Anchor profiles at the min/max pixel size (p=32 / p=256); required
+    /// before `pixel_sizes` beyond the profiled size produce candidates.
+    pub pixel: Option<EndpointProfiles>,
+    /// Empty → the anchor plus every target with a trained model.
+    pub targets: Vec<Instance>,
+    /// Empty → the paper grid `[16, 32, 64, 128, 256]`.
+    pub batches: Vec<usize>,
+    /// Empty → just the profiled pixel size.
+    pub pixel_sizes: Vec<usize>,
+    /// Empty → single-GPU only.
+    pub gpu_counts: Vec<usize>,
+    pub include_spot: bool,
+}
+
+/// One scored deployment option.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub target: Instance,
+    /// Global batch size (split across `n_gpus` when > 1).
+    pub batch: usize,
+    pub pixels: usize,
+    pub n_gpus: usize,
+    pub pricing: Pricing,
+    /// Predicted per-step latency for the global batch, ms.
+    pub latency_ms: f64,
+    pub imgs_per_s: f64,
+    pub price_hr: f64,
+    pub cost_per_img_usd: f64,
+}
+
+impl Candidate {
+    /// The Pareto objective pair — (seconds per image, $ per image), both
+    /// minimized. Throughput-normalized so candidates at different batch
+    /// sizes compare fairly.
+    pub fn objectives(&self) -> (f64, f64) {
+        (1.0 / self.imgs_per_s, self.cost_per_img_usd)
+    }
+
+    /// Deterministic total-order tiebreak for equal-score candidates.
+    pub fn tie_key(&self) -> (&'static str, usize, usize, usize, &'static str) {
+        (
+            self.target.key(),
+            self.batch,
+            self.pixels,
+            self.n_gpus,
+            self.pricing.key(),
+        )
+    }
+}
+
+/// Deterministic presentation ranking shared by the serving layer and
+/// in-process callers: cost-efficiency first, then speed, then the
+/// stable tie key. Returns candidate indices in rank order.
+pub fn rank_candidates(cands: &[Candidate]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (ca, cb) = (&cands[a], &cands[b]);
+        crate::util::cmp_f64(ca.cost_per_img_usd, cb.cost_per_img_usd)
+            .then(crate::util::cmp_f64(ca.objectives().0, cb.objectives().0))
+            .then(ca.tie_key().cmp(&cb.tie_key()))
+    });
+    order
+}
+
+/// Endpoint latencies on one target, after phase-1.
+struct TargetEndpoints {
+    batch: (f64, f64),
+    pixel: Option<(f64, f64)>,
+}
+
+/// Candidate grid shared by every target of one sweep.
+struct Grid {
+    batches: Vec<usize>,
+    pixel_sizes: Vec<usize>,
+    gpu_counts: Vec<usize>,
+    include_spot: bool,
+    profiled_pixels: usize,
+}
+
+/// Run the full sweep. Candidates come back unranked (the serving layer
+/// sorts); targets without a trained cross/scale model are skipped.
+pub fn sweep(
+    rt: &Runtime,
+    profet: &Profet,
+    cache: &PredictionCache,
+    cache_stats: &CacheStats,
+    scaling: &ScalingTable,
+    req: &SweepRequest,
+) -> Result<Vec<Candidate>> {
+    anyhow::ensure!(
+        req.batch.lat_min > 0.0 && req.batch.lat_max > 0.0,
+        "anchor endpoint latencies must be positive"
+    );
+    if let Some(px) = &req.pixel {
+        anyhow::ensure!(
+            px.lat_min > 0.0 && px.lat_max > 0.0,
+            "anchor pixel-endpoint latencies must be positive"
+        );
+    }
+    // duplicate axis entries would mint duplicate candidates (and phantom
+    // frontier points downstream) — every axis is deduplicated, sorted
+    let sorted_dedup = |mut v: Vec<usize>| {
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let mut targets: Vec<Instance> = if req.targets.is_empty() {
+        let mut ts = vec![req.anchor];
+        ts.extend(
+            profet
+                .cross
+                .keys()
+                .filter(|(a, _)| *a == req.anchor)
+                .map(|(_, t)| *t),
+        );
+        ts
+    } else {
+        req.targets.clone()
+    };
+    targets.sort_unstable();
+    targets.dedup();
+    let grid = Grid {
+        batches: sorted_dedup(if req.batches.is_empty() {
+            BATCHES.to_vec()
+        } else {
+            req.batches.clone()
+        }),
+        pixel_sizes: sorted_dedup(if req.pixel_sizes.is_empty() {
+            vec![req.pixels]
+        } else {
+            req.pixel_sizes.clone()
+        }),
+        gpu_counts: sorted_dedup(if req.gpu_counts.is_empty() {
+            vec![1]
+        } else {
+            req.gpu_counts.clone()
+        }),
+        include_spot: req.include_spot,
+        profiled_pixels: req.pixels,
+    };
+
+    // the pixel endpoints only matter when the grid actually asks for a
+    // pixel size other than the profiled one — don't burn phase-1
+    // executions on them otherwise
+    let need_pixel = grid
+        .pixel_sizes
+        .iter()
+        .any(|&p| p != grid.profiled_pixels);
+
+    // canonicalize + fingerprint each endpoint profile ONCE; every
+    // per-target cache key shares the byte stream
+    let mut points: Vec<EndpointPoint> = vec![
+        EndpointPoint::of(&req.batch.profile_min, req.batch.lat_min),
+        EndpointPoint::of(&req.batch.profile_max, req.batch.lat_max),
+    ];
+    if need_pixel {
+        if let Some(px) = &req.pixel {
+            points.push(EndpointPoint::of(&px.profile_min, px.lat_min));
+            points.push(EndpointPoint::of(&px.profile_max, px.lat_max));
+        }
+    }
+
+    let mut out = Vec::new();
+    for &target in &targets {
+        let Some(scale) = profet.scale.get(&target) else {
+            continue;
+        };
+        let Some(ep) = predict_endpoints(rt, profet, cache, cache_stats, req, target, &points)?
+        else {
+            continue; // no cross model for this (anchor, target)
+        };
+        expand_candidates(target, scale, &ep, scaling, &grid, &mut out);
+    }
+    Ok(out)
+}
+
+/// One anchor-side endpoint observation with its precomputed fingerprint.
+struct EndpointPoint<'a> {
+    profile: &'a BTreeMap<String, f64>,
+    lat: f64,
+    pf: ProfileFingerprint,
+}
+
+impl<'a> EndpointPoint<'a> {
+    fn of(profile: &'a BTreeMap<String, f64>, lat: f64) -> EndpointPoint<'a> {
+        EndpointPoint {
+            profile,
+            lat,
+            pf: ProfileFingerprint::of(profile),
+        }
+    }
+}
+
+/// Phase-1: endpoint latencies on `target`. Identity for the anchor
+/// itself; one cache-first batched ensemble execution otherwise.
+/// `points` is [batch_min, batch_max] or [batch_min, batch_max,
+/// pixel_min, pixel_max].
+fn predict_endpoints(
+    rt: &Runtime,
+    profet: &Profet,
+    cache: &PredictionCache,
+    cache_stats: &CacheStats,
+    req: &SweepRequest,
+    target: Instance,
+    points: &[EndpointPoint<'_>],
+) -> Result<Option<TargetEndpoints>> {
+    if target == req.anchor {
+        return Ok(Some(TargetEndpoints {
+            batch: (req.batch.lat_min, req.batch.lat_max),
+            pixel: req.pixel.as_ref().map(|p| (p.lat_min, p.lat_max)),
+        }));
+    }
+    let Some(model) = profet.cross.get(&(req.anchor, target)) else {
+        return Ok(None);
+    };
+    let mut vals: Vec<Option<f64>> = vec![None; points.len()];
+    let mut miss_idx: Vec<usize> = Vec::new();
+    let mut miss_keys: Vec<CacheKey> = Vec::new();
+    for (i, point) in points.iter().enumerate() {
+        let key = CacheKey::keyed(req.anchor, target, point.lat, &point.pf);
+        match cache.get(&key, cache_stats) {
+            Some((v, _)) => vals[i] = Some(v),
+            None => {
+                miss_idx.push(i);
+                miss_keys.push(key);
+            }
+        }
+    }
+    if !miss_idx.is_empty() {
+        let rows: Vec<Vec<f64>> = miss_idx
+            .iter()
+            .map(|&i| profet.feature_space.vectorize(points[i].profile))
+            .collect();
+        let lats: Vec<f64> = miss_idx.iter().map(|&i| points[i].lat).collect();
+        let preds = model.predict_batch(rt, &FeatureMatrix::from_rows(&rows)?, &lats)?;
+        for ((&i, key), pred) in miss_idx.iter().zip(miss_keys).zip(preds) {
+            cache.insert(key, pred);
+            vals[i] = Some(pred.0);
+        }
+    }
+    Ok(Some(TargetEndpoints {
+        batch: (vals[0].unwrap(), vals[1].unwrap()),
+        pixel: if points.len() == 4 {
+            Some((vals[2].unwrap(), vals[3].unwrap()))
+        } else {
+            None
+        },
+    }))
+}
+
+/// Phase-2 + scenarios: expand one target's endpoint latencies over the
+/// candidate grid. Non-finite / non-positive interpolations and
+/// infeasible GPU counts are skipped, never emitted.
+fn expand_candidates(
+    target: Instance,
+    scale: &BatchPixelModel,
+    ep: &TargetEndpoints,
+    scaling: &ScalingTable,
+    grid: &Grid,
+    out: &mut Vec<Candidate>,
+) {
+    let (t_bmin, t_bmax) = ep.batch;
+    if !(t_bmin.is_finite() && t_bmax.is_finite() && t_bmin > 0.0 && t_bmax > 0.0) {
+        return;
+    }
+    // pixel scaling curve, multiplicative relative to the profiled size
+    let pixel_ratio = |p: usize| -> Option<f64> {
+        if p == grid.profiled_pixels {
+            return Some(1.0);
+        }
+        let (t_pmin, t_pmax) = ep.pixel?;
+        let base = scale.predict_pixels(grid.profiled_pixels, t_pmin, t_pmax);
+        let at = scale.predict_pixels(p, t_pmin, t_pmax);
+        (base.is_finite() && at.is_finite() && base > 0.0 && at > 0.0).then(|| at / base)
+    };
+    for &b in &grid.batches {
+        let lat_b = scale.predict_batch(b, t_bmin, t_bmax);
+        if !(lat_b.is_finite() && lat_b > 0.0) {
+            continue;
+        }
+        for &p in &grid.pixel_sizes {
+            let Some(ratio) = pixel_ratio(p) else {
+                continue;
+            };
+            let lat_1gpu = lat_b * ratio;
+            for &n in &grid.gpu_counts {
+                // mirror the simulator's executability rule
+                // (multi_gpu_latency): the global batch must split evenly
+                // into non-empty per-GPU shards
+                if n == 0 || b % n != 0 || b / n == 0 {
+                    continue;
+                }
+                let Some(mult) = scaling.multiplier(target, n) else {
+                    continue;
+                };
+                let latency_ms = lat_1gpu * mult;
+                if !(latency_ms.is_finite() && latency_ms > 0.0) {
+                    continue;
+                }
+                let imgs_per_s = b as f64 * 1e3 / latency_ms;
+                for pricing in Pricing::ALL {
+                    if pricing == Pricing::Spot && !grid.include_spot {
+                        continue;
+                    }
+                    let price_hr = price_per_hour(target, pricing, n);
+                    out.push(Candidate {
+                        target,
+                        batch: b,
+                        pixels: p,
+                        n_gpus: n,
+                        pricing,
+                        latency_ms,
+                        imgs_per_s,
+                        price_hr,
+                        cost_per_img_usd: price_hr / 3600.0 / imgs_per_s,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::PolyRegression;
+
+    /// Linear T_N curve: batch/pixel interpolation behaves like the ideal
+    /// normalized ramp, so endpoint predictions are easy to reason about.
+    fn linear_scale_model(instance: Instance) -> BatchPixelModel {
+        let xs = [0.0, 0.25, 0.5, 0.75, 1.0];
+        let poly = PolyRegression::fit(&xs, &xs, 2).unwrap();
+        BatchPixelModel {
+            instance,
+            batch_poly: poly.clone(),
+            pixel_poly: poly,
+            order: 2,
+        }
+    }
+
+    fn grid(batches: &[usize], pixel_sizes: &[usize], gpus: &[usize], spot: bool) -> Grid {
+        Grid {
+            batches: batches.to_vec(),
+            pixel_sizes: pixel_sizes.to_vec(),
+            gpu_counts: gpus.to_vec(),
+            include_spot: spot,
+            profiled_pixels: 64,
+        }
+    }
+
+    #[test]
+    fn expand_covers_the_grid() {
+        let scale = linear_scale_model(Instance::P3);
+        let ep = TargetEndpoints {
+            batch: (100.0, 900.0),
+            pixel: None,
+        };
+        let mut out = Vec::new();
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &ScalingTable::new(),
+            &grid(&[16, 64, 256], &[64], &[1], true),
+            &mut out,
+        );
+        // 3 batches x 1 pixel x 1 gpu x 2 pricing options
+        assert_eq!(out.len(), 6);
+        // endpoints recover the endpoint latencies through the linear poly
+        let b16 = out.iter().find(|c| c.batch == 16 && c.pricing == Pricing::OnDemand).unwrap();
+        let b256 = out.iter().find(|c| c.batch == 256 && c.pricing == Pricing::OnDemand).unwrap();
+        assert!((b16.latency_ms - 100.0).abs() < 1e-6, "{}", b16.latency_ms);
+        assert!((b256.latency_ms - 900.0).abs() < 1e-6, "{}", b256.latency_ms);
+        // spot rides the same latency at a lower price
+        let b16_spot = out.iter().find(|c| c.batch == 16 && c.pricing == Pricing::Spot).unwrap();
+        assert_eq!(b16_spot.latency_ms, b16.latency_ms);
+        assert!(b16_spot.price_hr < b16.price_hr);
+        // throughput/cost identities
+        assert!((b16.imgs_per_s - 16.0 * 1e3 / 100.0).abs() < 1e-9);
+        assert!(
+            (b16.cost_per_img_usd - b16.price_hr / 3600.0 / b16.imgs_per_s).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn pixel_sizes_need_pixel_endpoints() {
+        let scale = linear_scale_model(Instance::P3);
+        let ep = TargetEndpoints {
+            batch: (100.0, 900.0),
+            pixel: None,
+        };
+        let mut out = Vec::new();
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &ScalingTable::new(),
+            &grid(&[64], &[64, 128], &[1], false),
+            &mut out,
+        );
+        // p=128 has no pixel endpoints -> only the profiled size survives
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].pixels, 64);
+
+        // with endpoints, the 128px candidate appears and is slower
+        let ep = TargetEndpoints {
+            batch: (100.0, 900.0),
+            pixel: Some((50.0, 1000.0)),
+        };
+        let mut out = Vec::new();
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &ScalingTable::new(),
+            &grid(&[64], &[64, 128], &[1], false),
+            &mut out,
+        );
+        assert_eq!(out.len(), 2);
+        let p64 = out.iter().find(|c| c.pixels == 64).unwrap();
+        let p128 = out.iter().find(|c| c.pixels == 128).unwrap();
+        assert!(p128.latency_ms > p64.latency_ms);
+    }
+
+    #[test]
+    fn multi_gpu_scenarios_scale_latency_and_price() {
+        let scale = linear_scale_model(Instance::P3);
+        let ep = TargetEndpoints {
+            batch: (100.0, 900.0),
+            pixel: None,
+        };
+        let scaling = ScalingTable::new();
+        let mut out = Vec::new();
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &scaling,
+            &grid(&[128], &[64], &[1, 2], false),
+            &mut out,
+        );
+        assert_eq!(out.len(), 2);
+        let g1 = out.iter().find(|c| c.n_gpus == 1).unwrap();
+        let g2 = out.iter().find(|c| c.n_gpus == 2).unwrap();
+        // the 2-GPU step latency is exactly the 1-GPU latency times the
+        // calibrated static multiplier, at double the hourly price
+        let mult = scaling.multiplier(Instance::P3, 2).unwrap();
+        assert!((g2.latency_ms - g1.latency_ms * mult).abs() < 1e-9 * g1.latency_ms);
+        assert_eq!(g2.price_hr, 2.0 * g1.price_hr);
+    }
+
+    #[test]
+    fn indivisible_or_empty_shards_are_skipped() {
+        let scale = linear_scale_model(Instance::P3);
+        let ep = TargetEndpoints {
+            batch: (100.0, 900.0),
+            pixel: None,
+        };
+        let mut out = Vec::new();
+        // b=16 on 3 GPUs (16 % 3 != 0) and on 64 GPUs (shard would be 0):
+        // both rejected, exactly like sim::multigpu::multi_gpu_latency
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &ScalingTable::new(),
+            &grid(&[16], &[64], &[1, 3, 64], false),
+            &mut out,
+        );
+        assert!(out.iter().all(|c| c.n_gpus == 1), "{out:?}");
+        // b=128 on 4 GPUs is executable and present
+        let mut out = Vec::new();
+        expand_candidates(
+            Instance::P3,
+            &scale,
+            &ep,
+            &ScalingTable::new(),
+            &grid(&[128], &[64], &[4], false),
+            &mut out,
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].n_gpus, 4);
+    }
+
+    #[test]
+    fn degenerate_endpoints_emit_nothing() {
+        let scale = linear_scale_model(Instance::P3);
+        let mut out = Vec::new();
+        for bad in [
+            (f64::NAN, 900.0),
+            (100.0, f64::INFINITY),
+            (-5.0, 900.0),
+            (0.0, 900.0),
+        ] {
+            expand_candidates(
+                Instance::P3,
+                &scale,
+                &TargetEndpoints { batch: bad, pixel: None },
+                &ScalingTable::new(),
+                &grid(&[64], &[64], &[1], false),
+                &mut out,
+            );
+        }
+        assert!(out.is_empty());
+    }
+}

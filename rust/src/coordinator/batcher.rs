@@ -6,11 +6,23 @@
 //! drains the queue, groups phase-1 predictions by (anchor, target), and
 //! runs each group as ONE batched MLP artifact execution — the dynamic
 //! batching that keeps the fixed-shape `b_pred` HLO fed.
+//!
+//! The engine also owns the advisor state: the sharded phase-1
+//! [`PredictionCache`] (consulted before every ensemble execution —
+//! repeat traffic short-circuits to a stored, bitwise-identical
+//! prediction; within one batch, duplicate requests collapse to one row)
+//! and the memoized multi-GPU [`ScalingTable`] behind the `recommend` /
+//! `plan` ops.
 
+use crate::advisor::{
+    self, CacheKey, CacheStats, Candidate, Objective, PlanChoice, PredictionCache, SweepRequest,
+    TrainingJob,
+};
 use crate::coordinator::protocol::{PredictRequest, Response};
 use crate::gpu::Instance;
 use crate::predictor::Profet;
 use crate::runtime::Runtime;
+use crate::sim::multigpu::ScalingTable;
 use crate::util::Json;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -37,6 +49,17 @@ pub enum Job {
         t_max: f64,
         reply: Sender<Response>,
     },
+    Recommend {
+        query: SweepRequest,
+        top_k: usize,
+        reply: Sender<Response>,
+    },
+    Plan {
+        query: SweepRequest,
+        job: TrainingJob,
+        objective: Objective,
+        reply: Sender<Response>,
+    },
     Shutdown,
 }
 
@@ -45,8 +68,11 @@ pub enum Job {
 pub struct BatcherStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
-    /// Sum of group sizes — requests served per artifact execution.
+    /// Sum of group sizes — *unique* predictions computed per artifact
+    /// execution (cache hits and in-batch duplicates don't count).
     pub batched_requests: AtomicU64,
+    /// Phase-1 prediction-cache hit/miss counters (predict + advisor).
+    pub cache: CacheStats,
 }
 
 /// Handle to the engine thread.
@@ -59,6 +85,13 @@ pub struct Batcher {
 /// Batching window: how long the worker waits to coalesce more requests
 /// after the first one arrives.
 const BATCH_WINDOW: Duration = Duration::from_millis(2);
+
+/// Phase-1 prediction cache shape: shards bound lock scope, the total
+/// capacity bounds memory. Each entry carries the canonical quantized
+/// profile bytes (collision-proof equality), ~1-2 KB for a realistic
+/// aggregated profile, so 32k entries cap the cache around tens of MB.
+const CACHE_SHARDS: usize = 16;
+const CACHE_CAPACITY: usize = 32_768;
 
 impl Batcher {
     /// Spawn the engine thread: loads artifacts + the model directory
@@ -114,6 +147,8 @@ impl Drop for Batcher {
 }
 
 fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherStats) {
+    let cache = PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY);
+    let scaling = ScalingTable::new();
     loop {
         // block for the first job
         let first = match rx.recv() {
@@ -153,7 +188,7 @@ fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherSt
             }
         }
 
-        // immediate (non-batched) jobs
+        // immediate (non-phase-1-batched) jobs
         for job in immediate {
             match job {
                 Job::BatchSize {
@@ -188,11 +223,53 @@ fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherSt
                     };
                     let _ = reply.send(resp);
                 }
+                Job::Recommend {
+                    query,
+                    top_k,
+                    reply,
+                } => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp =
+                        match advisor::sweep(&rt, &profet, &cache, &stats.cache, &scaling, &query) {
+                            Ok(cands) if cands.is_empty() => Response::err_kind(
+                                "no_candidates",
+                                "no feasible (target, batch, pixels, gpus) candidate",
+                            ),
+                            Ok(cands) => recommend_response(&cands, top_k),
+                            Err(e) => Response::Err(format!("{e:#}")),
+                        };
+                    let _ = reply.send(resp);
+                }
+                Job::Plan {
+                    query,
+                    job,
+                    objective,
+                    reply,
+                } => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let resp =
+                        match advisor::sweep(&rt, &profet, &cache, &stats.cache, &scaling, &query) {
+                            Ok(cands) if cands.is_empty() => Response::err_kind(
+                                "no_candidates",
+                                "no feasible (target, batch, pixels, gpus) candidate",
+                            ),
+                            Ok(cands) => match advisor::plan(&cands, &job, &objective) {
+                                Some(choice) => plan_response(&cands, &choice),
+                                None => Response::err_kind(
+                                    "infeasible",
+                                    "no candidate satisfies the constraint",
+                                ),
+                            },
+                            Err(e) => Response::Err(format!("{e:#}")),
+                        };
+                    let _ = reply.send(resp);
+                }
                 _ => {}
             }
         }
 
-        // batched phase-1 predictions: one artifact execution per group
+        // batched phase-1 predictions: cache-first, then one artifact
+        // execution per (anchor, target) group over the *unique* misses
         for ((anchor, target), group) in predicts {
             stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
             let Some(model) = profet.cross.get(&(anchor, target)) else {
@@ -203,40 +280,61 @@ fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherSt
                 }
                 continue;
             };
-            let rows: Vec<Vec<f64>> = group
-                .iter()
-                .map(|(r, _)| profet.feature_space.vectorize(&r.profile))
-                .collect();
-            let lats: Vec<f64> = group.iter().map(|(r, _)| r.anchor_latency_ms).collect();
-            let feats = match crate::ml::FeatureMatrix::from_rows(&rows) {
-                Ok(m) => m,
-                Err(e) => {
-                    let msg = format!("feature matrix: {e:#}");
-                    for (_, reply) in group {
-                        let _ = reply.send(Response::Err(msg.clone()));
-                    }
+            let mut results: Vec<Option<(f64, crate::predictor::Member)>> =
+                vec![None; group.len()];
+            // unique missing keys, in first-seen order; waiters per key
+            let mut miss_keys: Vec<CacheKey> = Vec::new();
+            let mut miss_rows: Vec<Vec<f64>> = Vec::new();
+            let mut miss_lats: Vec<f64> = Vec::new();
+            let mut waiters: BTreeMap<CacheKey, Vec<usize>> = BTreeMap::new();
+            for (i, (req, _)) in group.iter().enumerate() {
+                let key = CacheKey::of(anchor, target, req.anchor_latency_ms, &req.profile);
+                if let Some(v) = cache.get(&key, &stats.cache) {
+                    results[i] = Some(v);
                     continue;
                 }
-            };
-            match model.predict_batch(&rt, &feats, &lats) {
-                Ok(preds) => {
-                    stats.batches.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .batched_requests
-                        .fetch_add(group.len() as u64, Ordering::Relaxed);
-                    for ((_, reply), (v, member)) in group.into_iter().zip(preds) {
-                        let _ = reply.send(Response::ok_obj(|o| {
-                            o.set("latency_ms", Json::Num(v));
-                            o.set("member", Json::Str(member.name().into()));
-                        }));
+                if !waiters.contains_key(&key) {
+                    miss_keys.push(key.clone());
+                    miss_rows.push(profet.feature_space.vectorize(&req.profile));
+                    miss_lats.push(req.anchor_latency_ms);
+                }
+                waiters.entry(key).or_default().push(i);
+            }
+            if !miss_rows.is_empty() {
+                let executed = crate::ml::FeatureMatrix::from_rows(&miss_rows)
+                    .and_then(|feats| model.predict_batch(&rt, &feats, &miss_lats));
+                match executed {
+                    Ok(preds) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        stats
+                            .batched_requests
+                            .fetch_add(miss_keys.len() as u64, Ordering::Relaxed);
+                        for (key, pred) in miss_keys.into_iter().zip(preds) {
+                            for &i in &waiters[&key] {
+                                results[i] = Some(pred);
+                            }
+                            cache.insert(key, pred);
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for (i, (_, reply)) in group.into_iter().enumerate() {
+                            let resp = match results[i] {
+                                Some((v, member)) => ok_prediction(v, member),
+                                None => Response::Err(msg.clone()),
+                            };
+                            let _ = reply.send(resp);
+                        }
+                        continue;
                     }
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for (_, reply) in group {
-                        let _ = reply.send(Response::Err(msg.clone()));
-                    }
-                }
+            }
+            for (i, (_, reply)) in group.into_iter().enumerate() {
+                let resp = match results[i] {
+                    Some((v, member)) => ok_prediction(v, member),
+                    None => Response::Err("prediction missing from batch".into()),
+                };
+                let _ = reply.send(resp);
             }
         }
 
@@ -244,4 +342,65 @@ fn engine_loop(rt: Runtime, profet: Profet, rx: Receiver<Job>, stats: &BatcherSt
             return;
         }
     }
+}
+
+fn ok_prediction(latency_ms: f64, member: crate::predictor::Member) -> Response {
+    Response::ok_obj(|o| {
+        o.set("latency_ms", Json::Num(latency_ms));
+        o.set("member", Json::Str(member.name().into()));
+    })
+}
+
+fn candidate_json(c: &Candidate, on_frontier: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("target", Json::Str(c.target.key().into()));
+    o.set("batch", Json::Num(c.batch as f64));
+    o.set("pixels", Json::Num(c.pixels as f64));
+    o.set("n_gpus", Json::Num(c.n_gpus as f64));
+    o.set("pricing", Json::Str(c.pricing.key().into()));
+    o.set("latency_ms", Json::Num(c.latency_ms));
+    o.set("imgs_per_s", Json::Num(c.imgs_per_s));
+    o.set("price_hr", Json::Num(c.price_hr));
+    o.set("cost_per_img_usd", Json::Num(c.cost_per_img_usd));
+    o.set("on_frontier", Json::Bool(on_frontier));
+    o
+}
+
+/// Rank candidates (cost-efficiency first, then speed, then a stable tie
+/// key), tag Pareto-frontier membership — computed over the FULL candidate
+/// set, before any `top_k` truncation — and serialize.
+fn recommend_response(cands: &[Candidate], top_k: usize) -> Response {
+    let points: Vec<(f64, f64)> = cands.iter().map(Candidate::objectives).collect();
+    let frontier: std::collections::BTreeSet<usize> =
+        advisor::pareto_frontier(&points).into_iter().collect();
+    let order = advisor::rank_candidates(cands);
+    let take = if top_k == 0 { order.len() } else { top_k.min(order.len()) };
+    Response::ok_obj(|o| {
+        o.set(
+            "candidates",
+            Json::Arr(
+                order[..take]
+                    .iter()
+                    .map(|&i| candidate_json(&cands[i], frontier.contains(&i)))
+                    .collect(),
+            ),
+        );
+        o.set("n_candidates", Json::Num(cands.len() as f64));
+        o.set("frontier_size", Json::Num(frontier.len() as f64));
+    })
+}
+
+fn plan_response(cands: &[Candidate], choice: &PlanChoice) -> Response {
+    // one membership bit only — a direct dominance scan, not a full frontier
+    let pt = cands[choice.index].objectives();
+    let on_frontier = cands
+        .iter()
+        .all(|q| !advisor::dominates(q.objectives(), pt));
+    Response::ok_obj(|o| {
+        o.set("choice", candidate_json(&cands[choice.index], on_frontier));
+        o.set("hours", Json::Num(choice.hours));
+        o.set("cost_usd", Json::Num(choice.cost_usd));
+        o.set("epochs", Json::Num(choice.epochs));
+        o.set("n_considered", Json::Num(cands.len() as f64));
+    })
 }

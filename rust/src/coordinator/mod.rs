@@ -10,7 +10,9 @@
 //!   PJRT [`crate::runtime::Runtime`] (whose handles are not `Send`) plus
 //!   the model registry, and coalesces concurrent predict requests for the
 //!   same (anchor, target) pair into one fixed-shape MLP artifact
-//!   execution (the `b_pred`-row batch the HLO was lowered with).
+//!   execution (the `b_pred`-row batch the HLO was lowered with). It also
+//!   owns the advisor state — the sharded phase-1 prediction cache and the
+//!   multi-GPU scaling table — behind the `recommend`/`plan` ops.
 //!
 //! Python never appears anywhere on this path: requests go JSON → feature
 //! vector → HLO executable → JSON.
@@ -21,6 +23,6 @@ mod router;
 mod server;
 
 pub use batcher::{Batcher, BatcherStats};
-pub use protocol::{PredictRequest, Request, Response};
+pub use protocol::{ParseError, PredictRequest, Request, Response};
 pub use router::route;
-pub use server::{serve, ServerHandle};
+pub use server::{serve, ServerHandle, MAX_LINE_BYTES};

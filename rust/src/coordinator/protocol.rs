@@ -1,25 +1,45 @@
 //! Wire protocol: newline-delimited JSON requests/responses.
 //!
-//! Request shapes (the `op` field dispatches):
+//! | op | request fields | reply fields |
+//! |----|----------------|--------------|
+//! | `health` | — | `status` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `cache_hits`, `cache_misses` |
+//! | `instances` | — | `instances[]` (key, gpu, price_hr) |
+//! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
+//! | `predict_batch_size` | `instance`, `batch`, `t_min`, `t_max` | `latency_ms` |
+//! | `predict_pixel_size` | `instance`, `pixels`, `t_min`, `t_max` | `latency_ms` |
+//! | `recommend` | `anchor`, `pixels`, `profile_bmin`/`anchor_lat_bmin`, `profile_bmax`/`anchor_lat_bmax`, optional `profile_pmin`/`anchor_lat_pmin`/`profile_pmax`/`anchor_lat_pmax`, optional `targets[]`, `batches[]`, `pixel_sizes[]`, `gpu_counts[]`, `include_spot`, `top_k` | `candidates[]` (each with `on_frontier`), `n_candidates`, `frontier_size` |
+//! | `plan` | `recommend` fields + `objective` (`cheapest`\|`fastest`\|`max_epochs`), `dataset_images`, `epochs`, `deadline_hours`\|`budget_usd` | `choice`, `hours`, `cost_usd`, `epochs`, `n_considered` |
+//!
+//! Example request lines:
 //! ```json
-//! {"op":"health"}
-//! {"op":"stats"}
-//! {"op":"instances"}
 //! {"op":"predict","anchor":"g4dn","target":"p3",
 //!  "anchor_latency_ms":123.4,"profile":{"Conv2D":286.0,"Relu":26.0}}
-//! {"op":"predict_batch_size","instance":"p3","batch":64,
-//!  "t_min":100.0,"t_max":900.0}
-//! {"op":"predict_pixel_size","instance":"p3","pixels":128,
-//!  "t_min":100.0,"t_max":900.0}
+//! {"op":"recommend","anchor":"g4dn","pixels":64,
+//!  "profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,
+//!  "profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,
+//!  "gpu_counts":[1,2],"include_spot":true,"top_k":8}
+//! {"op":"plan","anchor":"g4dn","pixels":64,
+//!  "profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,
+//!  "profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,
+//!  "objective":"cheapest","deadline_hours":4.0,
+//!  "dataset_images":50000,"epochs":10}
 //! ```
+//!
+//! Errors are structured, never silent: every rejected line gets
+//! `{"ok":false,"kind":...,"error":...}` — `kind` is `unknown_op` for an
+//! unrecognized `op` value and `bad_request` for malformed payloads.
 
+use crate::advisor::{EndpointProfiles, Objective, SweepRequest, TrainingJob};
 use crate::gpu::Instance;
+use crate::sim::workload::{BATCHES, PIXELS};
 use crate::util::Json;
-use anyhow::{anyhow, Result};
+use anyhow::anyhow;
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// A phase-1 (cross-instance) prediction request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PredictRequest {
     pub anchor: Instance,
     pub target: Instance,
@@ -29,10 +49,10 @@ pub struct PredictRequest {
 }
 
 /// Parsed request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Health,
-    /// Serving counters (requests, artifact batches).
+    /// Serving counters (requests, artifact batches, cache hits/misses).
     Stats,
     Instances,
     Predict(PredictRequest),
@@ -48,62 +68,457 @@ pub enum Request {
         t_min: f64,
         t_max: f64,
     },
+    /// Advisor sweep + Pareto ranking. `top_k == 0` returns everything.
+    Recommend { query: SweepRequest, top_k: usize },
+    /// Advisor sweep + constrained planning.
+    Plan {
+        query: SweepRequest,
+        job: TrainingJob,
+        objective: Objective,
+    },
 }
 
-impl Request {
-    pub fn parse(line: &str) -> Result<Request> {
-        let j = Json::parse(line)?;
-        let op = j.req_str("op")?;
-        let inst = |key: &str| -> Result<Instance> {
-            Instance::from_key(j.req_str(key)?)
-                .ok_or_else(|| anyhow!("unknown instance in `{key}`"))
-        };
-        Ok(match op {
-            "health" => Request::Health,
-            "stats" => Request::Stats,
-            "instances" => Request::Instances,
-            "predict" => {
-                let mut profile = BTreeMap::new();
-                match j.get("profile") {
-                    Some(Json::Obj(m)) => {
-                        for (k, v) in m {
-                            profile.insert(
-                                k.clone(),
-                                v.as_f64().ok_or_else(|| anyhow!("profile value"))?,
-                            );
-                        }
-                    }
-                    _ => anyhow::bail!("missing profile object"),
-                }
-                Request::Predict(PredictRequest {
-                    anchor: inst("anchor")?,
-                    target: inst("target")?,
-                    anchor_latency_ms: j.req_f64("anchor_latency_ms")?,
-                    profile,
-                })
-            }
-            "predict_batch_size" => Request::PredictBatchSize {
-                instance: inst("instance")?,
-                batch: j.req_usize("batch")?,
-                t_min: j.req_f64("t_min")?,
-                t_max: j.req_f64("t_max")?,
-            },
-            "predict_pixel_size" => Request::PredictPixelSize {
-                instance: inst("instance")?,
-                pixels: j.req_usize("pixels")?,
-                t_min: j.req_f64("t_min")?,
-                t_max: j.req_f64("t_max")?,
-            },
-            other => anyhow::bail!("unknown op `{other}`"),
-        })
+/// Why a request line was rejected. `UnknownOp` is split out so the
+/// service can answer with a distinct structured error instead of a
+/// generic parse failure (or worse, a silent drop).
+#[derive(Debug)]
+pub enum ParseError {
+    UnknownOp(String),
+    Malformed(anyhow::Error),
+}
+
+impl ParseError {
+    /// Stable error-kind tag for the wire (`{"ok":false,"kind":...}`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ParseError::UnknownOp(_) => "unknown_op",
+            ParseError::Malformed(_) => "bad_request",
+        }
     }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::UnknownOp(op) => write!(f, "unknown op `{op}`"),
+            ParseError::Malformed(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, ParseError> {
+        let j = Json::parse(line).map_err(ParseError::Malformed)?;
+        let op = j.req_str("op").map_err(ParseError::Malformed)?;
+        match parse_fields(op, &j) {
+            Ok(Some(req)) => Ok(req),
+            Ok(None) => Err(ParseError::UnknownOp(op.to_string())),
+            Err(e) => Err(ParseError::Malformed(e)),
+        }
+    }
+
+    /// Serialize back to the wire object (`parse` ∘ `to_json` is identity —
+    /// covered by the round-trip tests).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Request::Health => {
+                o.set("op", Json::Str("health".into()));
+            }
+            Request::Stats => {
+                o.set("op", Json::Str("stats".into()));
+            }
+            Request::Instances => {
+                o.set("op", Json::Str("instances".into()));
+            }
+            Request::Predict(p) => {
+                o.set("op", Json::Str("predict".into()));
+                o.set("anchor", Json::Str(p.anchor.key().into()));
+                o.set("target", Json::Str(p.target.key().into()));
+                o.set("anchor_latency_ms", Json::Num(p.anchor_latency_ms));
+                o.set("profile", profile_json(&p.profile));
+            }
+            Request::PredictBatchSize {
+                instance,
+                batch,
+                t_min,
+                t_max,
+            } => {
+                o.set("op", Json::Str("predict_batch_size".into()));
+                o.set("instance", Json::Str(instance.key().into()));
+                o.set("batch", Json::Num(*batch as f64));
+                o.set("t_min", Json::Num(*t_min));
+                o.set("t_max", Json::Num(*t_max));
+            }
+            Request::PredictPixelSize {
+                instance,
+                pixels,
+                t_min,
+                t_max,
+            } => {
+                o.set("op", Json::Str("predict_pixel_size".into()));
+                o.set("instance", Json::Str(instance.key().into()));
+                o.set("pixels", Json::Num(*pixels as f64));
+                o.set("t_min", Json::Num(*t_min));
+                o.set("t_max", Json::Num(*t_max));
+            }
+            Request::Recommend { query, top_k } => {
+                o.set("op", Json::Str("recommend".into()));
+                query_json(query, &mut o);
+                o.set("top_k", Json::Num(*top_k as f64));
+            }
+            Request::Plan {
+                query,
+                job,
+                objective,
+            } => {
+                o.set("op", Json::Str("plan".into()));
+                query_json(query, &mut o);
+                o.set("dataset_images", Json::Num(job.dataset_images));
+                o.set("epochs", Json::Num(job.epochs));
+                match *objective {
+                    Objective::CheapestUnderDeadline { deadline_hours } => {
+                        o.set("objective", Json::Str("cheapest".into()));
+                        o.set("deadline_hours", Json::Num(deadline_hours));
+                    }
+                    Objective::FastestUnderBudget { budget_usd } => {
+                        o.set("objective", Json::Str("fastest".into()));
+                        o.set("budget_usd", Json::Num(budget_usd));
+                    }
+                    Objective::MaxEpochsUnderDeadline { deadline_hours } => {
+                        o.set("objective", Json::Str("max_epochs".into()));
+                        o.set("deadline_hours", Json::Num(deadline_hours));
+                    }
+                }
+            }
+        }
+        o
+    }
+}
+
+/// Field parsing: the single known-op list. `Ok(None)` means the op is
+/// not recognized (surfaced as `unknown_op`); field errors are plain
+/// `bad_request` errors.
+fn parse_fields(op: &str, j: &Json) -> anyhow::Result<Option<Request>> {
+    Ok(Some(match op {
+        "health" => Request::Health,
+        "stats" => Request::Stats,
+        "instances" => Request::Instances,
+        "predict" => parse_predict(j)?,
+        "predict_batch_size" => Request::PredictBatchSize {
+            instance: req_instance(j, "instance")?,
+            batch: as_usize_strict(req_field(j, "batch")?, "`batch`")?,
+            t_min: req_positive(j, "t_min")?,
+            t_max: req_positive(j, "t_max")?,
+        },
+        "predict_pixel_size" => Request::PredictPixelSize {
+            instance: req_instance(j, "instance")?,
+            pixels: as_usize_strict(req_field(j, "pixels")?, "`pixels`")?,
+            t_min: req_positive(j, "t_min")?,
+            t_max: req_positive(j, "t_max")?,
+        },
+        "recommend" => Request::Recommend {
+            query: parse_query(j)?,
+            top_k: match j.get("top_k") {
+                None => 0,
+                Some(v) => as_usize_strict(v, "`top_k`")?,
+            },
+        },
+        "plan" => parse_plan(j)?,
+        _ => return Ok(None),
+    }))
+}
+
+fn req_field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("missing `{key}`"))
+}
+
+fn req_instance(j: &Json, key: &str) -> anyhow::Result<Instance> {
+    Instance::from_key(j.req_str(key)?).ok_or_else(|| anyhow!("unknown instance in `{key}`"))
+}
+
+fn parse_profile(j: &Json, key: &str) -> anyhow::Result<BTreeMap<String, f64>> {
+    match j.get(key) {
+        Some(Json::Obj(m)) => {
+            let mut profile = BTreeMap::new();
+            for (k, v) in m {
+                let ms = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("non-number profile value in `{key}`"))?;
+                // non-finite values would alias in the prediction-cache
+                // key quantization (and are meaningless as op times)
+                anyhow::ensure!(ms.is_finite(), "non-finite profile value in `{key}`");
+                profile.insert(k.clone(), ms);
+            }
+            Ok(profile)
+        }
+        _ => Err(anyhow!("missing profile object `{key}`")),
+    }
+}
+
+fn profile_json(profile: &BTreeMap<String, f64>) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in profile {
+        o.set(k, Json::Num(*v));
+    }
+    o
+}
+
+fn parse_predict(j: &Json) -> anyhow::Result<Request> {
+    Ok(Request::Predict(PredictRequest {
+        anchor: req_instance(j, "anchor")?,
+        target: req_instance(j, "target")?,
+        anchor_latency_ms: req_positive(j, "anchor_latency_ms")?,
+        profile: parse_profile(j, "profile")?,
+    }))
+}
+
+/// Grid-axis sanity caps: the sweep expands `batches × pixel_sizes ×
+/// gpu_counts × pricing` candidates per target, so one request must not
+/// be able to ask for an astronomically large grid (the line-length cap
+/// in `server.rs` bounds bytes; these bound the *amplification*).
+const MAX_AXIS_ENTRIES: usize = 64;
+const MAX_GPU_ENTRIES: usize = 16;
+const MAX_GPUS: usize = 64;
+const MAX_TARGET_ENTRIES: usize = 32;
+/// Per-axis caps bound entries, not their cross product — this bounds the
+/// number of candidates one sweep may expand to (the paper-grid default is
+/// 6 targets × 5 batches × 1 pixel × 1 gpu × 2 pricing = 60).
+const MAX_GRID_CANDIDATES: usize = 4096;
+
+/// Strict non-negative-integer read: rejects fractional and negative
+/// values instead of silently truncating/saturating them.
+fn as_usize_strict(v: &Json, what: &str) -> anyhow::Result<usize> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| anyhow!("non-number {what}"))?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64,
+        "{what} must be a non-negative integer"
+    );
+    Ok(n as usize)
+}
+
+fn parse_usize_list(
+    j: &Json,
+    key: &str,
+    max_entries: usize,
+    min_value: usize,
+    max_value: usize,
+) -> anyhow::Result<Vec<usize>> {
+    match j.get(key) {
+        None => Ok(Vec::new()),
+        Some(Json::Arr(a)) => {
+            anyhow::ensure!(
+                a.len() <= max_entries,
+                "`{key}` has {} entries (max {max_entries})",
+                a.len()
+            );
+            a.iter()
+                .map(|v| {
+                    let n = as_usize_strict(v, &format!("entry in `{key}`"))?;
+                    anyhow::ensure!(
+                        (min_value..=max_value).contains(&n),
+                        "entry {n} in `{key}` outside [{min_value}, {max_value}]"
+                    );
+                    Ok(n)
+                })
+                .collect()
+        }
+        Some(_) => Err(anyhow!("`{key}` must be an array of numbers")),
+    }
+}
+
+fn parse_endpoints(
+    j: &Json,
+    profile_min_key: &str,
+    lat_min_key: &str,
+    profile_max_key: &str,
+    lat_max_key: &str,
+) -> anyhow::Result<EndpointProfiles> {
+    Ok(EndpointProfiles {
+        profile_min: parse_profile(j, profile_min_key)?,
+        lat_min: req_positive(j, lat_min_key)?,
+        profile_max: parse_profile(j, profile_max_key)?,
+        lat_max: req_positive(j, lat_max_key)?,
+    })
+}
+
+fn parse_query(j: &Json) -> anyhow::Result<SweepRequest> {
+    let targets = match j.get("targets") {
+        None => Vec::new(),
+        Some(Json::Arr(a)) => {
+            anyhow::ensure!(
+                a.len() <= MAX_TARGET_ENTRIES,
+                "`targets` has {} entries (max {MAX_TARGET_ENTRIES})",
+                a.len()
+            );
+            a.iter()
+                .map(|v| {
+                    v.as_str()
+                        .and_then(Instance::from_key)
+                        .ok_or_else(|| anyhow!("unknown instance in `targets`"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        }
+        Some(_) => anyhow::bail!("`targets` must be an array of instance keys"),
+    };
+    // any one pixel-endpoint field present requires the full quartet —
+    // a partial set is a bad request, not a silently dropped axis
+    let pixel_keys = [
+        "profile_pmin",
+        "anchor_lat_pmin",
+        "profile_pmax",
+        "anchor_lat_pmax",
+    ];
+    let pixel = if pixel_keys.iter().any(|k| j.get(k).is_some()) {
+        Some(parse_endpoints(
+            j,
+            "profile_pmin",
+            "anchor_lat_pmin",
+            "profile_pmax",
+            "anchor_lat_pmax",
+        )?)
+    } else {
+        None
+    };
+    // batch/pixel values must stay inside the interpolation models'
+    // fitted range (the paper grid) — anything outside would be served
+    // as confident polynomial extrapolation
+    let (bmin, bmax) = (BATCHES[0], BATCHES[4]);
+    let (pmin, pmax) = (PIXELS[0], PIXELS[4]);
+    let pixels = as_usize_strict(req_field(j, "pixels")?, "`pixels`")?;
+    anyhow::ensure!(
+        (pmin..=pmax).contains(&pixels),
+        "`pixels` outside the modeled range [{pmin}, {pmax}]"
+    );
+    let pixel_sizes = parse_usize_list(j, "pixel_sizes", MAX_AXIS_ENTRIES, pmin, pmax)?;
+    // a pixel size beyond the profiled one is only answerable with the
+    // pixel-endpoint quartet — reject up front rather than silently
+    // dropping the axis during the sweep
+    if pixel.is_none() {
+        anyhow::ensure!(
+            pixel_sizes.iter().all(|&p| p == pixels),
+            "`pixel_sizes` beyond the profiled `pixels` require the pixel-endpoint \
+             fields (profile_pmin/anchor_lat_pmin/profile_pmax/anchor_lat_pmax)"
+        );
+    }
+    let batches = parse_usize_list(j, "batches", MAX_AXIS_ENTRIES, bmin, bmax)?;
+    let gpu_counts = parse_usize_list(j, "gpu_counts", MAX_GPU_ENTRIES, 1, MAX_GPUS)?;
+    // bound the cross product (empty axes take their sweep defaults)
+    let eff = |n: usize, default: usize| if n == 0 { default } else { n };
+    let grid = eff(targets.len(), Instance::ALL.len())
+        * eff(batches.len(), 5)
+        * eff(pixel_sizes.len(), 1)
+        * eff(gpu_counts.len(), 1)
+        * 2;
+    anyhow::ensure!(
+        grid <= MAX_GRID_CANDIDATES,
+        "candidate grid of {grid} exceeds {MAX_GRID_CANDIDATES} — shrink an axis"
+    );
+    Ok(SweepRequest {
+        anchor: req_instance(j, "anchor")?,
+        pixels,
+        batch: parse_endpoints(
+            j,
+            "profile_bmin",
+            "anchor_lat_bmin",
+            "profile_bmax",
+            "anchor_lat_bmax",
+        )?,
+        pixel,
+        targets,
+        batches,
+        pixel_sizes,
+        gpu_counts,
+        include_spot: match j.get("include_spot") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("`include_spot` must be a boolean"))?,
+        },
+    })
+}
+
+/// Required positive finite number (infinities from overflowing JSON
+/// literals like `1e400` would otherwise flow into the planner and come
+/// back out as unparseable `inf` tokens on the wire).
+fn req_positive(j: &Json, key: &str) -> anyhow::Result<f64> {
+    let v = j.req_f64(key)?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "`{key}` must be positive and finite");
+    Ok(v)
+}
+
+fn parse_plan(j: &Json) -> anyhow::Result<Request> {
+    let query = parse_query(j)?;
+    let job = TrainingJob {
+        dataset_images: req_positive(j, "dataset_images")?,
+        epochs: match j.get("epochs") {
+            None => 1.0,
+            Some(_) => req_positive(j, "epochs")?,
+        },
+    };
+    let objective = match j.req_str("objective")? {
+        "cheapest" => Objective::CheapestUnderDeadline {
+            deadline_hours: req_positive(j, "deadline_hours")?,
+        },
+        "fastest" => Objective::FastestUnderBudget {
+            budget_usd: req_positive(j, "budget_usd")?,
+        },
+        "max_epochs" => Objective::MaxEpochsUnderDeadline {
+            deadline_hours: req_positive(j, "deadline_hours")?,
+        },
+        other => anyhow::bail!("unknown objective `{other}` (expected cheapest|fastest|max_epochs)"),
+    };
+    Ok(Request::Plan {
+        query,
+        job,
+        objective,
+    })
+}
+
+fn query_json(q: &SweepRequest, o: &mut Json) {
+    o.set("anchor", Json::Str(q.anchor.key().into()));
+    o.set("pixels", Json::Num(q.pixels as f64));
+    o.set("profile_bmin", profile_json(&q.batch.profile_min));
+    o.set("anchor_lat_bmin", Json::Num(q.batch.lat_min));
+    o.set("profile_bmax", profile_json(&q.batch.profile_max));
+    o.set("anchor_lat_bmax", Json::Num(q.batch.lat_max));
+    if let Some(px) = &q.pixel {
+        o.set("profile_pmin", profile_json(&px.profile_min));
+        o.set("anchor_lat_pmin", Json::Num(px.lat_min));
+        o.set("profile_pmax", profile_json(&px.profile_max));
+        o.set("anchor_lat_pmax", Json::Num(px.lat_max));
+    }
+    if !q.targets.is_empty() {
+        o.set(
+            "targets",
+            Json::Arr(q.targets.iter().map(|t| Json::Str(t.key().into())).collect()),
+        );
+    }
+    let usize_arr = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+    if !q.batches.is_empty() {
+        o.set("batches", usize_arr(&q.batches));
+    }
+    if !q.pixel_sizes.is_empty() {
+        o.set("pixel_sizes", usize_arr(&q.pixel_sizes));
+    }
+    if !q.gpu_counts.is_empty() {
+        o.set("gpu_counts", usize_arr(&q.gpu_counts));
+    }
+    o.set("include_spot", Json::Bool(q.include_spot));
 }
 
 /// Service response.
 #[derive(Debug, Clone)]
 pub enum Response {
     Ok(Json),
+    /// Generic error (engine/model failures).
     Err(String),
+    /// Structured error with a stable machine-readable kind tag.
+    ErrKind { kind: &'static str, msg: String },
 }
 
 impl Response {
@@ -112,6 +527,13 @@ impl Response {
         o.set("ok", Json::Bool(true));
         f(&mut o);
         Response::Ok(o)
+    }
+
+    pub fn err_kind(kind: &'static str, msg: impl Into<String>) -> Response {
+        Response::ErrKind {
+            kind,
+            msg: msg.into(),
+        }
     }
 
     pub fn to_line(&self) -> String {
@@ -123,6 +545,13 @@ impl Response {
                 o.set("error", Json::Str(msg.clone()));
                 o.to_string()
             }
+            Response::ErrKind { kind, msg } => {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(false));
+                o.set("kind", Json::Str((*kind).into()));
+                o.set("error", Json::Str(msg.clone()));
+                o.to_string()
+            }
         }
     }
 }
@@ -130,6 +559,41 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn profile(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn sample_query(pixel: bool) -> SweepRequest {
+        SweepRequest {
+            anchor: Instance::G4dn,
+            pixels: 64,
+            batch: EndpointProfiles {
+                profile_min: profile(&[("Conv2D", 80.5), ("Relu", 7.25)]),
+                lat_min: 95.125,
+                profile_max: profile(&[("Conv2D", 900.0), ("Relu", 80.0)]),
+                lat_max: 1020.75,
+            },
+            pixel: pixel.then(|| EndpointProfiles {
+                profile_min: profile(&[("Conv2D", 40.0)]),
+                lat_min: 50.0,
+                profile_max: profile(&[("Conv2D", 1200.0)]),
+                lat_max: 1500.0,
+            }),
+            targets: vec![Instance::P3, Instance::G4dn],
+            batches: vec![16, 64, 256],
+            // non-profiled pixel sizes are only valid with pixel endpoints
+            pixel_sizes: if pixel { vec![64, 128] } else { vec![64] },
+            gpu_counts: vec![1, 2, 4],
+            include_spot: true,
+        }
+    }
+
+    fn roundtrip(req: &Request) {
+        let line = req.to_json().to_string();
+        let back = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(&back, req, "{line}");
+    }
 
     #[test]
     fn parse_predict() {
@@ -143,10 +607,145 @@ mod tests {
     }
 
     #[test]
-    fn parse_rejects_bad_ops() {
-        assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
-        assert!(Request::parse("not json").is_err());
-        assert!(Request::parse(r#"{"op":"predict","anchor":"zzz","target":"p3","anchor_latency_ms":1,"profile":{}}"#).is_err());
+    fn roundtrip_every_variant() {
+        roundtrip(&Request::Health);
+        roundtrip(&Request::Stats);
+        roundtrip(&Request::Instances);
+        roundtrip(&Request::Predict(PredictRequest {
+            anchor: Instance::G4dn,
+            target: Instance::P3,
+            anchor_latency_ms: 42.625,
+            profile: profile(&[("Conv2D", 286.0), ("Relu", 26.5)]),
+        }));
+        roundtrip(&Request::PredictBatchSize {
+            instance: Instance::P3,
+            batch: 64,
+            t_min: 100.0,
+            t_max: 900.5,
+        });
+        roundtrip(&Request::PredictPixelSize {
+            instance: Instance::Ac1,
+            pixels: 128,
+            t_min: 10.25,
+            t_max: 90.75,
+        });
+        // recommend: minimal (no optional axes) and maximal
+        roundtrip(&Request::Recommend {
+            query: SweepRequest {
+                pixel: None,
+                targets: vec![],
+                batches: vec![],
+                pixel_sizes: vec![],
+                gpu_counts: vec![],
+                include_spot: false,
+                ..sample_query(false)
+            },
+            top_k: 0,
+        });
+        roundtrip(&Request::Recommend {
+            query: sample_query(true),
+            top_k: 8,
+        });
+        // plan: one per objective
+        for objective in [
+            Objective::CheapestUnderDeadline { deadline_hours: 4.5 },
+            Objective::FastestUnderBudget { budget_usd: 12.25 },
+            Objective::MaxEpochsUnderDeadline { deadline_hours: 2.0 },
+        ] {
+            roundtrip(&Request::Plan {
+                query: sample_query(false),
+                job: TrainingJob {
+                    dataset_images: 50_000.0,
+                    epochs: 10.0,
+                },
+                objective,
+            });
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_a_distinct_structured_error() {
+        let err = Request::parse(r#"{"op":"nope"}"#).unwrap_err();
+        assert!(matches!(&err, ParseError::UnknownOp(op) if op == "nope"));
+        assert_eq!(err.kind(), "unknown_op");
+        // malformed inputs report the other kind
+        let err = Request::parse("not json").unwrap_err();
+        assert!(matches!(err, ParseError::Malformed(_)));
+        assert_eq!(err.kind(), "bad_request");
+    }
+
+    #[test]
+    fn malformed_inputs_per_op() {
+        for line in [
+            // structural
+            "not json",
+            "{}",
+            r#"{"op":42}"#,
+            // predict
+            r#"{"op":"predict","anchor":"zzz","target":"p3","anchor_latency_ms":1,"profile":{}}"#,
+            r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1}"#,
+            r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"Conv2D":"x"}}"#,
+            r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":-1,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"Conv2D":1e400}}"#,
+            // batch/pixel interpolation
+            r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0}"#,
+            r#"{"op":"predict_batch_size","instance":"p3","batch":-1,"t_min":100.0,"t_max":900.0}"#,
+            r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":1e400,"t_max":900.0}"#,
+            r#"{"op":"predict_pixel_size","instance":"p9","pixels":64,"t_min":1,"t_max":2}"#,
+            r#"{"op":"predict_pixel_size","instance":"p3","pixels":64.5,"t_min":1,"t_max":2}"#,
+            // recommend: missing endpoints, bad endpoint sign, bad lists
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64}"#,
+            // partial pixel-endpoint quartet is rejected, not dropped
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"anchor_lat_pmax":7}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":-5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"targets":["warp9"]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"batches":"all"}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"gpu_counts":[1,"two"]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"batches":[16.9]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"gpu_counts":[-2]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"top_k":-1}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"gpu_counts":[0]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"gpu_counts":[65]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"include_spot":"true"}"#,
+            // values outside the interpolation models' fitted range
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"batches":[4096]}"#,
+            r#"{"op":"recommend","anchor":"g4dn","pixels":16,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10}"#,
+            // pixel sizes beyond the profiled size need the pixel quartet
+            r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"pixel_sizes":[64,128]}"#,
+            // plan: missing job, unknown objective, missing constraint,
+            // non-finite constraint
+            r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"objective":"cheapest","deadline_hours":1}"#,
+            r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"objective":"cheapest","deadline_hours":1e400}"#,
+            r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"epochs":1e400,"objective":"fastest","budget_usd":5}"#,
+            r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"objective":"soonest","deadline_hours":1}"#,
+            r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"objective":"fastest"}"#,
+        ] {
+            let err = Request::parse(line).unwrap_err();
+            assert!(
+                matches!(err, ParseError::Malformed(_)),
+                "expected Malformed for {line}, got {err:?}"
+            );
+        }
+        // grid axes are length-capped (sweep-amplification guard)
+        let big = vec!["16"; MAX_AXIS_ENTRIES + 1].join(",");
+        let line = format!(
+            r#"{{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":1}},"anchor_lat_bmin":5,"profile_bmax":{{"Conv2D":2}},"anchor_lat_bmax":10,"batches":[{big}]}}"#
+        );
+        assert!(matches!(
+            Request::parse(&line).unwrap_err(),
+            ParseError::Malformed(_)
+        ));
+        // ... and so is the cross product of individually-legal axes
+        // (64 in-range batches x 16 gpu counts x default 6 targets x 2)
+        let batches = (16..16 + MAX_AXIS_ENTRIES).map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+        let gpus = (1..=MAX_GPU_ENTRIES).map(|g| g.to_string()).collect::<Vec<_>>().join(",");
+        let line = format!(
+            r#"{{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":1}},"anchor_lat_bmin":5,"profile_bmax":{{"Conv2D":2}},"anchor_lat_bmax":10,"batches":[{batches}],"gpu_counts":[{gpus}]}}"#
+        );
+        assert!(matches!(
+            Request::parse(&line).unwrap_err(),
+            ParseError::Malformed(_)
+        ));
     }
 
     #[test]
@@ -157,5 +756,9 @@ mod tests {
         assert!(r.to_line().contains("\"ok\":true"));
         let e = Response::Err("boom".into());
         assert!(e.to_line().contains("\"ok\":false"));
+        let k = Response::err_kind("unknown_op", "unknown op `nope`");
+        let line = k.to_line();
+        assert!(line.contains("\"ok\":false"));
+        assert!(line.contains("\"kind\":\"unknown_op\""));
     }
 }

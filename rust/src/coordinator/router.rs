@@ -1,18 +1,18 @@
 //! Request router: parses a protocol line, answers cheap queries inline,
-//! and forwards prediction work to the [`Batcher`] engine.
+//! and forwards prediction/advisor work to the [`Batcher`] engine.
 
 use crate::coordinator::batcher::{Batcher, Job};
-use std::sync::atomic::Ordering;
 use crate::coordinator::protocol::{Request, Response};
 use crate::gpu::Instance;
 use crate::util::Json;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 
 /// Handle one request line; blocking (waits for the engine when needed).
 pub fn route(batcher: &Batcher, line: &str) -> Response {
     let req = match Request::parse(line) {
         Ok(r) => r,
-        Err(e) => return Response::Err(format!("bad request: {e:#}")),
+        Err(e) => return Response::err_kind(e.kind(), format!("bad request: {e}")),
     };
     match req {
         Request::Health => Response::ok_obj(|o| {
@@ -23,6 +23,8 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
+            let cache_hits = s.cache.hits.load(Ordering::Relaxed);
+            let cache_misses = s.cache.misses.load(Ordering::Relaxed);
             Response::ok_obj(|o| {
                 o.set("requests", Json::Num(requests as f64));
                 o.set("artifact_batches", Json::Num(batches as f64));
@@ -34,6 +36,8 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
                         0.0
                     }),
                 );
+                o.set("cache_hits", Json::Num(cache_hits as f64));
+                o.set("cache_misses", Json::Num(cache_misses as f64));
             })
         }
         Request::Instances => Response::ok_obj(|o| {
@@ -88,6 +92,31 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
                 pixels,
                 t_min,
                 t_max,
+                reply: tx,
+            });
+            rx.recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into()))
+        }
+        Request::Recommend { query, top_k } => {
+            let (tx, rx) = channel();
+            batcher.submit(Job::Recommend {
+                query,
+                top_k,
+                reply: tx,
+            });
+            rx.recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into()))
+        }
+        Request::Plan {
+            query,
+            job,
+            objective,
+        } => {
+            let (tx, rx) = channel();
+            batcher.submit(Job::Plan {
+                query,
+                job,
+                objective,
                 reply: tx,
             });
             rx.recv()

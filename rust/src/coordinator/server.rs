@@ -1,13 +1,25 @@
 //! TCP server: accept loop + one thread per connection, newline-delimited
 //! JSON in/out. Connections share the [`Batcher`] engine handle.
+//!
+//! Request lines are length-bounded ([`MAX_LINE_BYTES`]): a client that
+//! streams an endless unterminated line cannot buffer arbitrary bytes in
+//! the server — the oversized line is discarded as it arrives, answered
+//! with a structured `line_too_long` error, and the connection keeps
+//! serving subsequent well-formed lines.
 
 use crate::coordinator::batcher::{Batcher, BatcherStats};
+use crate::coordinator::protocol::Response;
 use crate::coordinator::router::route;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
+
+/// Upper bound on one request line (advisor requests carry four profile
+/// objects comfortably under 64 KiB; 1 MiB leaves an order of magnitude
+/// of headroom).
+pub const MAX_LINE_BYTES: usize = 1024 * 1024;
 
 /// Running server handle: local address + shutdown flag.
 pub struct ServerHandle {
@@ -78,16 +90,225 @@ pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<Se
 fn handle_conn(stream: TcpStream, batcher: &Batcher) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = route(batcher, &line);
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        let resp = match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => Response::err_kind(
+                "line_too_long",
+                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+            ),
+            LineRead::Line => match std::str::from_utf8(&buf) {
+                Ok(line) if line.trim().is_empty() => continue,
+                Ok(line) => route(batcher, line),
+                // lossy replacement would silently mangle profile keys;
+                // reject like any other malformed payload
+                Err(_) => {
+                    Response::err_kind("bad_request", "request line is not valid UTF-8")
+                }
+            },
+        };
         writer.write_all(resp.to_line().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
-    Ok(())
 }
+
+enum LineRead {
+    /// A complete line (newline stripped) is in the buffer.
+    Line,
+    /// The line exceeded `max`; its bytes were discarded up to and
+    /// including the terminating newline (or EOF).
+    TooLong,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+}
+
+/// `read_line` with a hard cap: never holds more than `max` line bytes
+/// (plus the reader's fixed internal buffer) regardless of what the peer
+/// sends. Oversized lines are drained, not buffered.
+fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let (consume, found_newline, overflow) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line // final unterminated line
+                });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if buf.len() + pos > max {
+                        (pos + 1, true, true)
+                    } else {
+                        buf.extend_from_slice(&available[..pos]);
+                        (pos + 1, true, false)
+                    }
+                }
+                None => {
+                    if buf.len() + available.len() > max {
+                        (available.len(), false, true)
+                    } else {
+                        buf.extend_from_slice(available);
+                        (available.len(), false, false)
+                    }
+                }
+            }
+        };
+        reader.consume(consume);
+        if overflow {
+            if !found_newline {
+                drain_until_newline(reader)?;
+            }
+            return Ok(LineRead::TooLong);
+        }
+        if found_newline {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
+/// Discard bytes up to and including the next newline (or EOF).
+fn drain_until_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
+    loop {
+        let (consume, done) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(());
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => (pos + 1, true),
+                None => (available.len(), false),
+            }
+        };
+        reader.consume(consume);
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{drain_until_newline, read_line_bounded, LineRead};
+    use std::io::BufReader;
+
+    fn reader(bytes: &[u8]) -> BufReader<std::io::Cursor<Vec<u8>>> {
+        // tiny internal buffer so lines span many fill_buf() rounds
+        BufReader::with_capacity(8, std::io::Cursor::new(bytes.to_vec()))
+    }
+
+    #[test]
+    fn reads_lines_and_strips_terminators() {
+        let mut r = reader(b"alpha\nbeta\r\n\ngamma");
+        let mut buf = Vec::new();
+        for expect in [&b"alpha"[..], b"beta", b"", b"gamma"] {
+            buf.clear();
+            assert!(matches!(
+                read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+                LineRead::Line
+            ));
+            assert_eq!(buf, expect);
+        }
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Eof
+        ));
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_and_stream_recovers() {
+        let mut input = vec![b'x'; 1000];
+        input.push(b'\n');
+        input.extend_from_slice(b"ok\n");
+        let mut r = reader(&input);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::TooLong
+        ));
+        // the bounded reader never buffered more than the cap
+        assert!(buf.len() <= 100, "{}", buf.len());
+        // and the next line parses normally
+        buf.clear();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf, b"ok");
+    }
+
+    #[test]
+    fn oversized_line_at_exact_boundary() {
+        // a line of exactly `max` bytes is allowed
+        let mut input = vec![b'y'; 100];
+        input.push(b'\n');
+        let mut r = reader(&input);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf.len(), 100);
+        // one byte more is not
+        let mut input = vec![b'y'; 101];
+        input.push(b'\n');
+        let mut r = reader(&input);
+        buf.clear();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::TooLong
+        ));
+    }
+
+    #[test]
+    fn unterminated_oversized_line_hits_eof() {
+        let input = vec![b'z'; 500];
+        let mut r = reader(&input);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::TooLong
+        ));
+        buf.clear(); // the connection loop clears between lines
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
+            LineRead::Eof
+        ));
+    }
+
+    #[test]
+    fn final_unterminated_line_is_returned() {
+        let mut r = reader(b"tail-no-newline");
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf, b"tail-no-newline");
+    }
+
+    #[test]
+    fn drain_stops_at_newline() {
+        let mut r = reader(b"aaaaaaaaaaaaaaaaaaaa\nnext");
+        drain_until_newline(&mut r).unwrap();
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf, b"next");
+    }
+}
+

@@ -16,6 +16,7 @@
 //!
 //! See `DESIGN.md` for the system inventory and per-experiment index.
 
+pub mod advisor;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

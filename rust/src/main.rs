@@ -251,6 +251,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("protocol: newline-delimited JSON; try:");
     println!(r#"  {{"op":"health"}}"#);
     println!(r#"  {{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":120.0,"profile":{{"Conv2D":40.0}}}}"#);
+    println!(r#"  {{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":8.0}},"anchor_lat_bmin":20.0,"profile_bmax":{{"Conv2D":90.0}},"anchor_lat_bmax":200.0,"include_spot":true}}"#);
+    println!("(full op table in rust/src/coordinator/protocol.rs)");
     // park forever
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

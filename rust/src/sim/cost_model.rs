@@ -12,8 +12,47 @@
 //! dense conv/GEMM run at 45-65% of peak FLOPs, depthwise conv is
 //! bandwidth-bound, elementwise ops are pure-bandwidth.
 
-use crate::gpu::GpuSpec;
+use crate::gpu::{GpuSpec, Instance};
 use crate::ops::{Op, OpClass};
+
+/// Purchase option for cloud price scenarios (the advisor's
+/// spot-vs-on-demand axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Pricing {
+    OnDemand,
+    Spot,
+}
+
+impl Pricing {
+    pub const ALL: [Pricing; 2] = [Pricing::OnDemand, Pricing::Spot];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Pricing::OnDemand => "on_demand",
+            Pricing::Spot => "spot",
+        }
+    }
+
+    pub fn from_key(key: &str) -> Option<Pricing> {
+        Pricing::ALL.into_iter().find(|p| p.key() == key)
+    }
+}
+
+/// Fraction of the on-demand price paid for spot capacity — the historical
+/// 60-70% discount band for GPU instance families, folded to one constant
+/// (spot markets move; the advisor models the scenario, not the tape).
+pub const SPOT_PRICE_FRACTION: f64 = 0.34;
+
+/// $/hour for `n_gpus` GPUs of an instance family under a purchase option.
+/// Multi-GPU nodes price linearly in GPU count, matching the AWS ladder
+/// (e.g. p3.8xlarge = 4 x p3.2xlarge within a percent).
+pub fn price_per_hour(instance: Instance, pricing: Pricing, n_gpus: usize) -> f64 {
+    let base = instance.spec().price_hr * n_gpus as f64;
+    match pricing {
+        Pricing::OnDemand => base,
+        Pricing::Spot => base * SPOT_PRICE_FRACTION,
+    }
+}
 
 /// Fraction of peak FP32 FLOPs a fully-utilized kernel of this class
 /// achieves (cuDNN/cuBLAS measured ballparks).
@@ -112,6 +151,24 @@ mod tests {
             flops / 10.0,
             vec![elems],
         )
+    }
+
+    #[test]
+    fn pricing_keys_roundtrip() {
+        for p in Pricing::ALL {
+            assert_eq!(Pricing::from_key(p.key()), Some(p));
+        }
+        assert_eq!(Pricing::from_key("reserved"), None);
+    }
+
+    #[test]
+    fn price_per_hour_scales() {
+        let od1 = price_per_hour(Instance::P3, Pricing::OnDemand, 1);
+        assert_eq!(od1, Instance::P3.spec().price_hr);
+        assert_eq!(price_per_hour(Instance::P3, Pricing::OnDemand, 4), 4.0 * od1);
+        let spot = price_per_hour(Instance::P3, Pricing::Spot, 1);
+        assert!(spot < od1 && spot > 0.0);
+        assert_eq!(spot, od1 * SPOT_PRICE_FRACTION);
     }
 
     #[test]

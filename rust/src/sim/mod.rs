@@ -11,7 +11,9 @@ pub mod cost_model;
 pub mod multigpu;
 pub mod workload;
 
-pub use workload::{enumerate_workloads, run_workload, Workload, WorkloadRun};
+pub use cost_model::{price_per_hour, Pricing, SPOT_PRICE_FRACTION};
+pub use multigpu::ScalingTable;
+pub use workload::{enumerate_workloads, run_workload, Workload, WorkloadRun, BATCHES, PIXELS};
 
 /// Deep-learning SDK generation (paper Sec VII "modeling train latency on
 /// different deep learning frameworks"). Newer stacks dispatch ops with

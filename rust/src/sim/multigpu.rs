@@ -81,6 +81,42 @@ pub fn static_multiplier(
     }
 }
 
+/// Default calibration workload set for [`static_multiplier`]: mid-size
+/// classics that fit every instance at b=128/p=64.
+pub const CALIBRATION: [(ModelId, usize, usize); 3] = [
+    (ModelId::ResNet18, 128, 64),
+    (ModelId::ResNet34, 128, 64),
+    (ModelId::Vgg11, 128, 64),
+];
+
+/// Memoizing per-(instance, N) static-multiplier table. Computing one
+/// entry simulates the whole calibration set, so long-lived holders (the
+/// serving engine, the advisor) reuse entries across sweeps. Thread-safe.
+#[derive(Debug, Default)]
+pub struct ScalingTable {
+    memo: std::sync::Mutex<std::collections::BTreeMap<(Instance, usize), Option<f64>>>,
+}
+
+impl ScalingTable {
+    pub fn new() -> ScalingTable {
+        ScalingTable::default()
+    }
+
+    /// `t(N gpus, global batch B) / t(1 gpu, B)` for the calibration set;
+    /// exactly 1.0 for N=1, `None` when no calibration workload runs.
+    pub fn multiplier(&self, instance: Instance, n_gpus: usize) -> Option<f64> {
+        if n_gpus == 1 {
+            return Some(1.0);
+        }
+        *self
+            .memo
+            .lock()
+            .unwrap()
+            .entry((instance, n_gpus))
+            .or_insert_with(|| static_multiplier(instance, n_gpus, &CALIBRATION))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +177,16 @@ mod tests {
         ];
         let m = static_multiplier(Instance::P3, 2, &cal).unwrap();
         assert!(m > 0.4 && m < 1.1, "2-gpu multiplier {m}");
+    }
+
+    #[test]
+    fn scaling_table_matches_direct_and_memoizes() {
+        let table = ScalingTable::new();
+        assert_eq!(table.multiplier(Instance::P3, 1), Some(1.0));
+        let via_table = table.multiplier(Instance::P3, 2);
+        assert_eq!(via_table, static_multiplier(Instance::P3, 2, &CALIBRATION));
+        // second lookup returns the memoized value
+        assert_eq!(table.multiplier(Instance::P3, 2), via_table);
+        assert_eq!(table.memo.lock().unwrap().len(), 1);
     }
 }

@@ -28,6 +28,13 @@ pub fn seed_of(parts: &[&str]) -> u64 {
     fnv1a(joined.as_bytes())
 }
 
+/// NaN-tolerant ordering for f64 scores (NaN compares `Equal`; callers
+/// filter non-finite values upstream). One shared definition so ranking,
+/// frontier, and planner tie semantics can never drift apart.
+pub fn cmp_f64(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)
+}
+
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

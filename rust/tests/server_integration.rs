@@ -110,15 +110,222 @@ fn serves_health_instances_predict_and_errors() {
     assert!(st.req_f64("requests").unwrap() >= 2.0);
     assert!(st.req_f64("artifact_batches").unwrap() >= 1.0);
 
-    // errors: bad op, unknown pair
+    // errors: bad op (structured, with a kind tag), unknown pair
     let e = send(addr, r#"{"op":"nope"}"#);
     assert_eq!(e.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(e.req_str("kind").unwrap(), "unknown_op");
     let e2 = send(
         addr,
         r#"{"op":"predict","anchor":"p2","target":"g3s","anchor_latency_ms":1,"profile":{"Conv2D":1}}"#,
     );
     assert_eq!(e2.get("ok").and_then(Json::as_bool), Some(false));
 
+    handle.stop();
+}
+
+/// Build a `recommend`/`plan` payload body: ResNet18@p64 profiled on the
+/// g4dn anchor at the batch endpoints (b=16 / b=256).
+fn advisor_body() -> Json {
+    use repro::models::ModelId;
+    use repro::sim::Workload;
+    let mut body = Json::obj();
+    body.set("anchor", Json::Str("g4dn".into()));
+    body.set("pixels", Json::Num(64.0));
+    for (batch, profile_key, lat_key) in [
+        (16usize, "profile_bmin", "anchor_lat_bmin"),
+        (256, "profile_bmax", "anchor_lat_bmax"),
+    ] {
+        let w = Workload::new(ModelId::ResNet18, batch, 64);
+        let run = repro::sim::run_workload(&w, Instance::G4dn).unwrap();
+        let mut profile = Json::obj();
+        for (k, v) in run.profile.aggregated() {
+            profile.set(&k, Json::Num(v));
+        }
+        body.set(profile_key, profile);
+        body.set(lat_key, Json::Num(run.latency_ms));
+    }
+    body.set("gpu_counts", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]));
+    body.set("include_spot", Json::Bool(true));
+    body
+}
+
+#[test]
+fn recommend_ranking_is_pareto_consistent() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let mut req = advisor_body();
+    req.set("op", Json::Str("recommend".into()));
+    let resp = send(handle.addr, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    let cands = resp.req_arr("candidates").unwrap();
+    assert!(!cands.is_empty());
+    assert_eq!(resp.req_f64("n_candidates").unwrap() as usize, cands.len());
+    // both the anchor itself and the modeled target must appear
+    for key in ["g4dn", "p3"] {
+        assert!(
+            cands.iter().any(|c| c.req_str("target").unwrap() == key),
+            "missing {key} in candidates"
+        );
+    }
+
+    // ranking: non-decreasing cost-efficiency
+    let costs: Vec<f64> = cands
+        .iter()
+        .map(|c| c.req_f64("cost_per_img_usd").unwrap())
+        .collect();
+    for w in costs.windows(2) {
+        assert!(w[0] <= w[1], "ranking not sorted by cost: {costs:?}");
+    }
+
+    // Pareto frontier flags must match a brute-force reference over the
+    // advertised objective pair (seconds/image, $/image)
+    let points: Vec<(f64, f64)> = cands
+        .iter()
+        .map(|c| {
+            (
+                1.0 / c.req_f64("imgs_per_s").unwrap(),
+                c.req_f64("cost_per_img_usd").unwrap(),
+            )
+        })
+        .collect();
+    let reference: std::collections::BTreeSet<usize> =
+        repro::advisor::pareto_frontier_naive(&points).into_iter().collect();
+    for (i, c) in cands.iter().enumerate() {
+        assert_eq!(
+            c.get("on_frontier").and_then(Json::as_bool),
+            Some(reference.contains(&i)),
+            "frontier flag mismatch at rank {i}: {c:?}"
+        );
+    }
+    assert_eq!(resp.req_f64("frontier_size").unwrap() as usize, reference.len());
+
+    // sanity: every candidate latency is positive and finite
+    for c in cands {
+        let lat = c.req_f64("latency_ms").unwrap();
+        assert!(lat > 0.0 && lat.is_finite(), "{lat}");
+    }
+    handle.stop();
+}
+
+#[test]
+fn plan_answers_constrained_queries() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+
+    let mut req = advisor_body();
+    req.set("op", Json::Str("plan".into()));
+    req.set("objective", Json::Str("cheapest".into()));
+    req.set("deadline_hours", Json::Num(10_000.0));
+    req.set("dataset_images", Json::Num(50_000.0));
+    req.set("epochs", Json::Num(5.0));
+    let resp = send(handle.addr, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let choice = resp.get("choice").expect("choice");
+    assert!(choice.req_f64("latency_ms").unwrap() > 0.0);
+    let hours = resp.req_f64("hours").unwrap();
+    let cost = resp.req_f64("cost_usd").unwrap();
+    assert!(hours > 0.0 && hours <= 10_000.0);
+    assert!(cost > 0.0);
+    // the generous-deadline cheapest choice is the globally cheapest
+    // candidate: its job cost must match hours * price_hr
+    let price_hr = choice.req_f64("price_hr").unwrap();
+    assert!((cost - hours * price_hr).abs() < 1e-9 * cost.max(1.0));
+
+    // an impossible deadline is a structured infeasibility, not a crash
+    let mut req = advisor_body();
+    req.set("op", Json::Str("plan".into()));
+    req.set("objective", Json::Str("cheapest".into()));
+    req.set("deadline_hours", Json::Num(1e-9));
+    req.set("dataset_images", Json::Num(50_000.0));
+    req.set("epochs", Json::Num(5.0));
+    let resp = send(handle.addr, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.req_str("kind").unwrap(), "infeasible");
+    handle.stop();
+}
+
+#[test]
+fn repeated_predict_hits_cache_bitwise_identical() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+
+    let first = send(addr, &line);
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true), "{first:?}");
+    let hits_before = handle
+        .stats
+        .cache
+        .hits
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let second = send(addr, &line);
+
+    // bitwise-identical prediction (and the same ensemble member)
+    assert_eq!(
+        first.req_f64("latency_ms").unwrap().to_bits(),
+        second.req_f64("latency_ms").unwrap().to_bits()
+    );
+    assert_eq!(
+        first.req_str("member").unwrap(),
+        second.req_str("member").unwrap()
+    );
+
+    // the repeat was served from the cache, and the stats op surfaces it
+    let hits_after = handle
+        .stats
+        .cache
+        .hits
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(hits_after > hits_before, "{hits_before} -> {hits_after}");
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert!(st.req_f64("cache_hits").unwrap() >= 1.0);
+    assert!(st.req_f64("cache_misses").unwrap() >= 1.0);
+    handle.stop();
+}
+
+#[test]
+fn oversized_request_line_gets_structured_error() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr).unwrap();
+    // an oversized garbage line, then a valid request on the same conn
+    let big = vec![b'x'; coordinator::MAX_LINE_BYTES + 128];
+    stream.write_all(&big).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.write_all(br#"{"op":"health"}"#).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let e = Json::parse(resp.trim()).unwrap();
+    assert_eq!(e.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(e.req_str("kind").unwrap(), "line_too_long");
+    // the connection survives and serves the next line
+    resp.clear();
+    reader.read_line(&mut resp).unwrap();
+    let h = Json::parse(resp.trim()).unwrap();
+    assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
     handle.stop();
 }
 
