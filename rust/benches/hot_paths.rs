@@ -249,6 +249,80 @@ fn main() {
                 repro::advisor::sweep(rt, &profet, &cache, &stats, &scaling, &query).unwrap(),
             );
         });
+
+        // ---------------- engine pool (serving lanes) ----------------
+        // predict round-trip latency through the replica pool, idle and
+        // with the advisor lane saturated by back-to-back sweeps — the
+        // two numbers should be within noise of each other (a sweep on
+        // its own lane must not tax predict traffic)
+        println!("[L3] engine pool:");
+        {
+            use repro::coordinator::{EnginePool, Job, PoolOptions, PredictRequest};
+            use std::sync::atomic::{AtomicBool, Ordering};
+            use std::sync::mpsc::channel;
+            use std::sync::Arc;
+            let model_dir = std::env::temp_dir().join("repro_bench_pool_models");
+            std::fs::remove_dir_all(&model_dir).ok();
+            profet.save(&model_dir).unwrap();
+            let pool = Arc::new(
+                EnginePool::spawn(
+                    repro::runtime::default_artifact_dir(),
+                    model_dir.clone(),
+                    &PoolOptions {
+                        predict_lanes: 2,
+                        ..PoolOptions::default()
+                    },
+                )
+                .unwrap(),
+            );
+            let (p64, l64) = endpoint(64);
+            let predict = PredictRequest {
+                anchor: Instance::G4dn,
+                target: Instance::P3,
+                anchor_latency_ms: l64,
+                profile: p64,
+            };
+            let rtt = |pool: &EnginePool| {
+                let (tx, rx) = channel();
+                pool.submit(Job::Predict(predict.clone(), tx)).unwrap();
+                rx.recv().unwrap()
+            };
+            bench(&mut results, "engine_pool predict rtt (advisor idle)", 400, || {
+                std::hint::black_box(rtt(&pool));
+            });
+            // feeder: saturate the advisor lane for the whole measurement
+            let stop = Arc::new(AtomicBool::new(false));
+            let feeder = {
+                let stop = stop.clone();
+                let pool = pool.clone();
+                let query = query.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let (tx, rx) = channel();
+                        let job = Job::Recommend {
+                            query: query.clone(),
+                            top_k: 0,
+                            reply: tx,
+                        };
+                        if pool.submit(job).is_ok() {
+                            let _ = rx.recv();
+                        }
+                    }
+                })
+            };
+            bench(
+                &mut results,
+                "engine_pool predict rtt (advisor sweeping)",
+                400,
+                || {
+                    std::hint::black_box(rtt(&pool));
+                },
+            );
+            stop.store(true, Ordering::Relaxed);
+            feeder.join().unwrap();
+            drop(pool);
+            std::fs::remove_dir_all(&model_dir).ok();
+        }
     }
 
     // ---------------- machine-readable dump ----------------

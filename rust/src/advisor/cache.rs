@@ -124,8 +124,9 @@ impl CacheKey {
     }
 }
 
-/// Hit/miss counters. Embedded in the coordinator's `BatcherStats` so the
-/// `stats` op surfaces them; the advisor sweep shares the same counters.
+/// Hit/miss counters. Embedded in the coordinator's `EngineStats` (shared
+/// across every engine replica of the pool) so the `stats` op surfaces
+/// them; the advisor sweep shares the same counters.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub hits: AtomicU64,

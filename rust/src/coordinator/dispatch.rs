@@ -1,0 +1,622 @@
+//! Engine replica pool + lane dispatcher.
+//!
+//! The seed served every op through ONE `profet-engine` thread, so a
+//! single `recommend` sweep (hundreds of grid points) stalled every
+//! concurrent `predict` behind it — classic head-of-line blocking. The
+//! pool replaces that thread with N+1 engine replicas, each owning its
+//! own non-`Send` PJRT [`Runtime`] (nothing non-`Send` ever crosses a
+//! thread boundary; the trained [`Profet`] registry is plain data and is
+//! loaded once, shared read-only across lanes behind an `Arc`):
+//!
+//! * **predict lanes** (N, default = available parallelism) run the
+//!   dynamic-batching loop ([`crate::coordinator::lane::predict_lane`]).
+//!   Phase-1 `predict` jobs are routed by (anchor, target) *affinity* —
+//!   the same instance pair always lands on the same lane, so concurrent
+//!   identical-pair requests still coalesce into one batched artifact
+//!   execution. Cheap interpolation ops round-robin across lanes.
+//! * **the advisor lane** (1, always present) runs `recommend`/`plan`
+//!   sweeps. A sweep can therefore never block predict traffic: the worst
+//!   case is sweeps queueing behind each other on their own lane.
+//!
+//! Replicas share the sharded phase-1 [`PredictionCache`], the
+//! [`CacheStats`] counters, and the memoized multi-GPU [`ScalingTable`]
+//! behind one `Arc` each — repeat traffic hits the cache regardless of
+//! which replica answered the first request, and hit/miss counters stay
+//! coherent across the pool.
+//!
+//! Every lane queue is *bounded* (`sync_channel`). When a queue is full,
+//! [`EnginePool::submit`] fails fast with [`SubmitError::Overloaded`]
+//! instead of buffering unboundedly; the router turns that into a
+//! structured `{"ok":false,"kind":"overloaded"}` reply so clients can
+//! back off. Dropping the pool sends a shutdown job to every lane and
+//! joins it — in-flight jobs are flushed, never leaked.
+
+use crate::advisor::{CacheStats, Objective, PredictionCache, SweepRequest, TrainingJob};
+use crate::coordinator::lane::{self, LaneCtx};
+use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::gpu::Instance;
+use crate::predictor::Profet;
+use crate::runtime::Runtime;
+use crate::sim::multigpu::ScalingTable;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Work item submitted to an engine lane.
+pub enum Job {
+    Predict(PredictRequest, Sender<Response>),
+    BatchSize {
+        instance: Instance,
+        batch: usize,
+        t_min: f64,
+        t_max: f64,
+        reply: Sender<Response>,
+    },
+    PixelSize {
+        instance: Instance,
+        pixels: usize,
+        t_min: f64,
+        t_max: f64,
+        reply: Sender<Response>,
+    },
+    Recommend {
+        query: SweepRequest,
+        top_k: usize,
+        reply: Sender<Response>,
+    },
+    Plan {
+        query: SweepRequest,
+        job: TrainingJob,
+        objective: Objective,
+        reply: Sender<Response>,
+    },
+    Shutdown,
+}
+
+/// Serving statistics, shared by every replica (exposed for
+/// tests/monitoring through the `stats` op).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of group sizes — *unique* predictions computed per artifact
+    /// execution (cache hits and in-batch duplicates don't count).
+    pub batched_requests: AtomicU64,
+    /// Jobs/connections rejected with the structured `overloaded` error
+    /// (full lane queue or exhausted connection budget).
+    pub overloaded: AtomicU64,
+    /// Phase-1 prediction-cache hit/miss counters (predict + advisor),
+    /// shared across all replicas.
+    pub cache: CacheStats,
+}
+
+/// Pool sizing/backpressure knobs.
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Number of predict lanes; `0` means `available_parallelism()`.
+    /// The advisor lane is always one additional replica.
+    pub predict_lanes: usize,
+    /// Bound on each predict lane's job queue.
+    pub predict_queue_cap: usize,
+    /// Bound on the advisor lane's job queue (sweeps are long-running, so
+    /// a deep queue would only hide latency — keep it shallow).
+    pub advisor_queue_cap: usize,
+}
+
+impl Default for PoolOptions {
+    fn default() -> PoolOptions {
+        PoolOptions {
+            predict_lanes: 0,
+            predict_queue_cap: 512,
+            advisor_queue_cap: 8,
+        }
+    }
+}
+
+impl PoolOptions {
+    /// Resolved predict-lane count (the `0 => auto` rule applied).
+    pub fn resolved_predict_lanes(&self) -> usize {
+        if self.predict_lanes > 0 {
+            self.predict_lanes
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+        }
+    }
+}
+
+/// Why a submit was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The target lane's queue is full — shed load, don't buffer.
+    Overloaded,
+    /// The target lane is gone (engine shut down).
+    Gone,
+}
+
+struct Lane {
+    tx: SyncSender<Job>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn one worker thread with a bounded job queue.
+fn spawn_worker<F>(name: &str, cap: usize, body: F) -> Result<Lane>
+where
+    F: FnOnce(Receiver<Job>) + Send + 'static,
+{
+    let (tx, rx) = sync_channel::<Job>(cap.max(1));
+    let join = std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || body(rx))?;
+    Ok(Lane {
+        tx,
+        join: Some(join),
+    })
+}
+
+/// Phase-1 prediction cache shape: shards bound lock scope, the total
+/// capacity bounds memory. Each entry carries the canonical quantized
+/// profile bytes (collision-proof equality), ~1-2 KB for a realistic
+/// aggregated profile, so 32k entries cap the cache around tens of MB.
+const CACHE_SHARDS: usize = 16;
+const CACHE_CAPACITY: usize = 32_768;
+
+/// Handle to the engine replica pool.
+pub struct EnginePool {
+    predict: Vec<Lane>,
+    advisor: Lane,
+    /// Round-robin cursor for non-affine immediate jobs.
+    rr: AtomicUsize,
+    pub stats: Arc<EngineStats>,
+}
+
+impl EnginePool {
+    /// Spawn the replicas. The trained model registry ([`Profet`]) is
+    /// plain owned data (forest lanes, flat DNN params, polynomial
+    /// coefficients), so it loads ONCE and is shared read-only across
+    /// every lane behind an `Arc` — only the non-`Send` PJRT [`Runtime`]
+    /// is loaded inside each lane's own thread (in parallel). Fails if
+    /// the registry or any replica's runtime fails to load.
+    pub fn spawn(
+        artifact_dir: PathBuf,
+        model_dir: PathBuf,
+        opts: &PoolOptions,
+    ) -> Result<EnginePool> {
+        let profet = Arc::new(
+            Profet::load(&model_dir)
+                .with_context(|| format!("models: {}", model_dir.display()))?,
+        );
+        let stats = Arc::new(EngineStats::default());
+        let ctx = LaneCtx {
+            cache: Arc::new(PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY)),
+            scaling: Arc::new(ScalingTable::new()),
+            stats: stats.clone(),
+        };
+        let n = opts.resolved_predict_lanes().max(1);
+        let mut predict = Vec::with_capacity(n);
+        let mut readies = Vec::with_capacity(n + 1);
+        for i in 0..n {
+            let (lane, ready) = spawn_engine_lane(
+                format!("profet-predict-{i}"),
+                opts.predict_queue_cap,
+                artifact_dir.clone(),
+                profet.clone(),
+                ctx.clone(),
+                false,
+            )?;
+            predict.push(lane);
+            readies.push(ready);
+        }
+        let (advisor, ready) = spawn_engine_lane(
+            "profet-advisor".into(),
+            opts.advisor_queue_cap,
+            artifact_dir,
+            profet,
+            ctx,
+            true,
+        )?;
+        readies.push(ready);
+        let pool = EnginePool {
+            predict,
+            advisor,
+            rr: AtomicUsize::new(0),
+            stats,
+        };
+        // wait for every replica to come up; on failure the pool drop
+        // below shuts down and joins the lanes that did start
+        for ready in readies {
+            ready
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine replica died during load"))?
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+        Ok(pool)
+    }
+
+    /// Number of predict lanes (the advisor lane is one more replica).
+    pub fn predict_lanes(&self) -> usize {
+        self.predict.len()
+    }
+
+    /// Deterministic (anchor, target) → predict-lane affinity, so
+    /// same-pair requests coalesce in one lane's batching window.
+    fn lane_of(&self, anchor: Instance, target: Instance) -> usize {
+        (crate::util::seed_of(&[anchor.key(), target.key()]) % self.predict.len() as u64) as usize
+    }
+
+    /// Route a job to its lane. Fails fast (never blocks, never buffers
+    /// past the lane bound) — `Overloaded` is the backpressure signal.
+    pub fn submit(&self, job: Job) -> std::result::Result<(), SubmitError> {
+        let lane = match &job {
+            Job::Predict(req, _) => &self.predict[self.lane_of(req.anchor, req.target)],
+            Job::Recommend { .. } | Job::Plan { .. } => &self.advisor,
+            // shutdown is meaningful only from the pool's own Drop (which
+            // bypasses submit and signals every lane directly); routing an
+            // external one would silently kill a single predict lane
+            Job::Shutdown => return Ok(()),
+            _ => {
+                let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.predict.len();
+                &self.predict[i]
+            }
+        };
+        match lane.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Gone),
+        }
+    }
+
+    fn lanes_mut(&mut self) -> impl Iterator<Item = &mut Lane> {
+        self.predict.iter_mut().chain(std::iter::once(&mut self.advisor))
+    }
+
+    /// Test-only pool over caller-provided lane bodies (no PJRT runtime
+    /// needed): exercises dispatch/affinity/backpressure in isolation.
+    #[cfg(test)]
+    pub(crate) fn mock<FP, FA>(
+        n_predict: usize,
+        predict_cap: usize,
+        advisor_cap: usize,
+        predict_body: FP,
+        advisor_body: FA,
+    ) -> EnginePool
+    where
+        FP: Fn(usize, Receiver<Job>) + Send + Sync + Clone + 'static,
+        FA: FnOnce(Receiver<Job>) + Send + 'static,
+    {
+        let predict = (0..n_predict.max(1))
+            .map(|i| {
+                let body = predict_body.clone();
+                spawn_worker(&format!("mock-predict-{i}"), predict_cap, move |rx| {
+                    body(i, rx)
+                })
+                .unwrap()
+            })
+            .collect();
+        let advisor = spawn_worker("mock-advisor", advisor_cap, advisor_body).unwrap();
+        EnginePool {
+            predict,
+            advisor,
+            rr: AtomicUsize::new(0),
+            stats: Arc::new(EngineStats::default()),
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // `send` (not `try_send`): a full queue is being drained by its
+        // lane, so the shutdown job queues behind in-flight work and
+        // every accepted job is flushed before the lane exits.
+        for lane in self.predict.iter().chain(std::iter::once(&self.advisor)) {
+            let _ = lane.tx.send(Job::Shutdown);
+        }
+        for lane in self.lanes_mut() {
+            if let Some(j) = lane.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Spawn one real engine replica; the non-`Send` PJRT runtime loads
+/// inside the thread, readiness reported through the returned channel.
+#[allow(clippy::type_complexity)]
+fn spawn_engine_lane(
+    name: String,
+    cap: usize,
+    artifact_dir: PathBuf,
+    profet: Arc<Profet>,
+    ctx: LaneCtx,
+    advisor: bool,
+) -> Result<(Lane, Receiver<std::result::Result<(), String>>)> {
+    let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+    let lane = spawn_worker(&name, cap, move |rx| {
+        let rt = match Runtime::load(&artifact_dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("runtime: {e:#}")));
+                return;
+            }
+        };
+        let _ = ready_tx.send(Ok(()));
+        if advisor {
+            lane::advisor_lane(&rt, &profet, rx, &ctx);
+        } else {
+            lane::predict_lane(&rt, &profet, rx, &ctx);
+        }
+    })?;
+    Ok((lane, ready_rx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    fn predict_req(anchor: Instance, target: Instance) -> PredictRequest {
+        PredictRequest {
+            anchor,
+            target,
+            anchor_latency_ms: 10.0,
+            profile: BTreeMap::from([("Conv2D".to_string(), 1.0)]),
+        }
+    }
+
+    /// Lane body that answers every job instantly, echoing its lane index.
+    fn echo_lane(idx: usize, rx: Receiver<Job>) {
+        for job in rx {
+            match job {
+                Job::Shutdown => return,
+                Job::Predict(_, reply) => {
+                    let _ = reply.send(Response::ok_obj(|o| {
+                        o.set("lane", crate::util::Json::Num(idx as f64));
+                    }));
+                }
+                Job::BatchSize { reply, .. } | Job::PixelSize { reply, .. } => {
+                    let _ = reply.send(Response::ok_obj(|_| {}));
+                }
+                Job::Recommend { reply, .. } | Job::Plan { reply, .. } => {
+                    let _ = reply.send(Response::ok_obj(|_| {}));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn predict_affinity_is_sticky_per_instance_pair() {
+        let pool = EnginePool::mock(4, 64, 4, echo_lane, |rx| echo_lane(99, rx));
+        let pairs = [
+            (Instance::G4dn, Instance::P3),
+            (Instance::G4dn, Instance::P2),
+            (Instance::P3, Instance::G4dn),
+        ];
+        for (anchor, target) in pairs {
+            let mut lanes = Vec::new();
+            for _ in 0..8 {
+                let (tx, rx) = channel();
+                pool.submit(Job::Predict(predict_req(anchor, target), tx)).unwrap();
+                let resp = rx.recv().unwrap();
+                let Response::Ok(o) = resp else { panic!("err") };
+                lanes.push(o.req_f64("lane").unwrap() as usize);
+            }
+            // every request for one pair hit the same lane...
+            assert!(lanes.iter().all(|&l| l == lanes[0]), "{lanes:?}");
+            // ...and it was a predict lane, never the advisor
+            assert!(lanes[0] < 4, "{lanes:?}");
+        }
+    }
+
+    #[test]
+    fn advisor_jobs_go_to_the_advisor_lane() {
+        let hits: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+        let h1 = hits.clone();
+        let h2 = hits.clone();
+        let pool = EnginePool::mock(
+            2,
+            64,
+            4,
+            move |idx, rx| {
+                for job in rx {
+                    match job {
+                        Job::Shutdown => return,
+                        _ => {
+                            h1.lock().unwrap().push("predict");
+                            let _ = idx;
+                            reply_ok(job);
+                        }
+                    }
+                }
+            },
+            move |rx| {
+                for job in rx {
+                    match job {
+                        Job::Shutdown => return,
+                        _ => {
+                            h2.lock().unwrap().push("advisor");
+                            reply_ok(job);
+                        }
+                    }
+                }
+            },
+        );
+        let (tx, rx) = channel();
+        pool.submit(Job::Recommend {
+            query: sample_query(),
+            top_k: 0,
+            reply: tx,
+        })
+        .unwrap();
+        rx.recv().unwrap();
+        let (tx, rx) = channel();
+        pool.submit(Job::BatchSize {
+            instance: Instance::P3,
+            batch: 64,
+            t_min: 1.0,
+            t_max: 2.0,
+            reply: tx,
+        })
+        .unwrap();
+        rx.recv().unwrap();
+        assert_eq!(*hits.lock().unwrap(), vec!["advisor", "predict"]);
+    }
+
+    fn reply_ok(job: Job) {
+        match job {
+            Job::Predict(_, reply)
+            | Job::BatchSize { reply, .. }
+            | Job::PixelSize { reply, .. }
+            | Job::Recommend { reply, .. }
+            | Job::Plan { reply, .. } => {
+                let _ = reply.send(Response::ok_obj(|_| {}));
+            }
+            Job::Shutdown => {}
+        }
+    }
+
+    fn sample_query() -> SweepRequest {
+        use crate::advisor::EndpointProfiles;
+        SweepRequest {
+            anchor: Instance::G4dn,
+            pixels: 64,
+            batch: EndpointProfiles {
+                profile_min: BTreeMap::from([("Conv2D".to_string(), 1.0)]),
+                lat_min: 5.0,
+                profile_max: BTreeMap::from([("Conv2D".to_string(), 2.0)]),
+                lat_max: 10.0,
+            },
+            pixel: None,
+            targets: Vec::new(),
+            batches: Vec::new(),
+            pixel_sizes: Vec::new(),
+            gpu_counts: Vec::new(),
+            include_spot: false,
+        }
+    }
+
+    #[test]
+    fn sweep_on_the_advisor_lane_never_blocks_predicts() {
+        // advisor lane stalls on a gate; predicts must still flow
+        let (gate_tx, gate_rx) = channel::<()>();
+        let gate = Arc::new(Mutex::new(Some(gate_rx)));
+        let pool = EnginePool::mock(2, 64, 4, echo_lane, move |rx| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    other => {
+                        // simulate a long sweep: wait for the test's gate
+                        if let Some(g) = gate.lock().unwrap().take() {
+                            let _ = g.recv();
+                        }
+                        reply_ok(other);
+                    }
+                }
+            }
+        });
+        let (sweep_tx, sweep_rx) = channel();
+        pool.submit(Job::Recommend {
+            query: sample_query(),
+            top_k: 0,
+            reply: sweep_tx,
+        })
+        .unwrap();
+        // while the "sweep" is stalled, a predict answers promptly
+        let (tx, rx) = channel();
+        pool.submit(Job::Predict(predict_req(Instance::G4dn, Instance::P3), tx))
+            .unwrap();
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("predict blocked behind an in-flight sweep");
+        assert!(matches!(resp, Response::Ok(_)));
+        // the sweep is still in flight the whole time
+        assert!(matches!(
+            sweep_rx.try_recv(),
+            Err(std::sync::mpsc::TryRecvError::Empty)
+        ));
+        gate_tx.send(()).unwrap();
+        assert!(matches!(
+            sweep_rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Ok(_)
+        ));
+    }
+
+    #[test]
+    fn full_lane_queue_is_overloaded_not_buffered() {
+        // advisor lane blocks until gated; queue cap 2
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (busy_tx, busy_rx) = channel::<()>();
+        let gate = Arc::new(Mutex::new(Some((busy_tx, gate_rx))));
+        let pool = EnginePool::mock(1, 64, 2, echo_lane, move |rx| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    other => {
+                        if let Some((busy, g)) = gate.lock().unwrap().take() {
+                            let _ = busy.send(()); // first job picked up
+                            let _ = g.recv(); // stall
+                        }
+                        reply_ok(other);
+                    }
+                }
+            }
+        });
+        let submit_sweep = |pool: &EnginePool| {
+            let (tx, rx) = channel();
+            let r = pool.submit(Job::Recommend {
+                query: sample_query(),
+                top_k: 0,
+                reply: tx,
+            });
+            (r, rx)
+        };
+        // job 1: consumed by the lane, which then stalls
+        let (r1, _rx1) = submit_sweep(&pool);
+        r1.unwrap();
+        busy_rx.recv().unwrap();
+        // jobs 2..=3 fill the bounded queue
+        let (r2, _rx2) = submit_sweep(&pool);
+        r2.unwrap();
+        let (r3, _rx3) = submit_sweep(&pool);
+        r3.unwrap();
+        // job 4 is shed, not buffered
+        let (r4, _rx4) = submit_sweep(&pool);
+        assert_eq!(r4, Err(SubmitError::Overloaded));
+        assert_eq!(pool.stats.overloaded.load(Ordering::Relaxed), 1);
+        // predict lanes are unaffected by the advisor backlog
+        let (tx, rx) = channel();
+        pool.submit(Job::Predict(predict_req(Instance::G4dn, Instance::P3), tx))
+            .unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        gate_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn drop_flushes_queued_jobs_before_joining() {
+        // every accepted job must be answered even when the pool is
+        // dropped immediately after submission
+        let pool = EnginePool::mock(2, 64, 4, echo_lane, |rx| echo_lane(99, rx));
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            let (tx, rx) = channel();
+            let target = if i % 2 == 0 { Instance::P3 } else { Instance::P2 };
+            pool.submit(Job::Predict(predict_req(Instance::G4dn, target), tx))
+                .unwrap();
+            rxs.push(rx);
+        }
+        drop(pool); // sends Shutdown behind the queued jobs and joins
+        for rx in rxs {
+            assert!(
+                matches!(rx.recv(), Ok(Response::Ok(_))),
+                "a queued job was dropped during shutdown"
+            );
+        }
+    }
+}

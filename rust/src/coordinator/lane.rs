@@ -1,0 +1,398 @@
+//! Engine lane loops: the per-replica work loops behind
+//! [`crate::coordinator::EnginePool`].
+//!
+//! * [`predict_lane`] — the dynamic-batching loop. Greedily drains the
+//!   queue first (`try_recv`), answers cheap interpolation jobs
+//!   immediately, and only arms the [`BATCH_WINDOW`] coalescing wait
+//!   while a phase-1 predict group is actually pending — an empty queue
+//!   or an immediate-only burst never pays the window as a latency tax
+//!   (the seed slept out the full 2 ms on *every* wakeup).
+//! * [`advisor_lane`] — plain FIFO over long-running `recommend`/`plan`
+//!   sweeps, so they serialize behind each other instead of behind (or in
+//!   front of) predict traffic.
+//!
+//! Both loops flush every job they have accepted before exiting on
+//! shutdown/disconnect — replies are never dropped on the floor.
+
+use crate::advisor::{self, CacheKey, Candidate, PlanChoice, PredictionCache};
+use crate::coordinator::dispatch::{EngineStats, Job};
+use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::gpu::Instance;
+use crate::predictor::Profet;
+use crate::runtime::Runtime;
+use crate::sim::multigpu::ScalingTable;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Batching window: how long a predict lane waits to coalesce more
+/// requests after a phase-1 predict group opens.
+pub(crate) const BATCH_WINDOW: Duration = Duration::from_millis(2);
+
+/// State shared by every replica of one pool.
+#[derive(Clone)]
+pub(crate) struct LaneCtx {
+    pub cache: Arc<PredictionCache>,
+    pub scaling: Arc<ScalingTable>,
+    pub stats: Arc<EngineStats>,
+}
+
+type PredictGroups = BTreeMap<(Instance, Instance), Vec<(PredictRequest, Sender<Response>)>>;
+
+fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shutdown: &mut bool) {
+    match job {
+        Job::Predict(req, reply) => {
+            predicts
+                .entry((req.anchor, req.target))
+                .or_default()
+                .push((req, reply));
+        }
+        Job::Shutdown => *shutdown = true,
+        other => immediate.push(other),
+    }
+}
+
+/// Dynamic-batching predict loop (phase-1 `predict` + the cheap
+/// interpolation ops routed round-robin by the dispatcher).
+pub(crate) fn predict_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx: &LaneCtx) {
+    loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let mut predicts: PredictGroups = BTreeMap::new();
+        let mut immediate = Vec::new();
+        let mut shutdown = false;
+        absorb(first, &mut predicts, &mut immediate, &mut shutdown);
+        // greedy drain: take everything already queued without sleeping
+        loop {
+            match rx.try_recv() {
+                Ok(j) => absorb(j, &mut predicts, &mut immediate, &mut shutdown),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        // answer cheap jobs before any coalescing wait
+        for job in immediate.drain(..) {
+            run_immediate(job, rt, profet, ctx);
+        }
+        // the window is only armed while a predict group is pending
+        if !predicts.is_empty() && !shutdown {
+            let deadline = std::time::Instant::now() + BATCH_WINDOW;
+            while let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
+            {
+                match rx.recv_timeout(remaining) {
+                    Ok(j) => {
+                        absorb(j, &mut predicts, &mut immediate, &mut shutdown);
+                        // shutdown is always the queue's last job — don't
+                        // wait out the rest of the window behind it
+                        if shutdown {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+            // cheap jobs that arrived during the window
+            for job in immediate.drain(..) {
+                run_immediate(job, rt, profet, ctx);
+            }
+        }
+        run_predict_groups(predicts, rt, profet, ctx);
+        if shutdown {
+            return;
+        }
+    }
+}
+
+/// FIFO advisor loop: one long-running sweep at a time. Handles every job
+/// kind defensively (the dispatcher only routes `recommend`/`plan` here).
+pub(crate) fn advisor_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx: &LaneCtx) {
+    for job in rx {
+        match job {
+            Job::Shutdown => return,
+            Job::Predict(req, reply) => {
+                let mut group: PredictGroups = BTreeMap::new();
+                group
+                    .entry((req.anchor, req.target))
+                    .or_default()
+                    .push((req, reply));
+                run_predict_groups(group, rt, profet, ctx);
+            }
+            other => run_immediate(other, rt, profet, ctx),
+        }
+    }
+}
+
+/// One non-phase-1-batched job (interpolation or advisor sweep).
+fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
+    let stats = &ctx.stats;
+    match job {
+        Job::BatchSize {
+            instance,
+            batch,
+            t_min,
+            t_max,
+            reply,
+        } => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            let resp = match profet.predict_batch_size(instance, batch, t_min, t_max) {
+                Ok(v) => Response::ok_obj(|o| {
+                    o.set("latency_ms", Json::Num(v));
+                }),
+                Err(e) => Response::Err(format!("{e:#}")),
+            };
+            let _ = reply.send(resp);
+        }
+        Job::PixelSize {
+            instance,
+            pixels,
+            t_min,
+            t_max,
+            reply,
+        } => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            let resp = match profet.predict_pixel_size(instance, pixels, t_min, t_max) {
+                Ok(v) => Response::ok_obj(|o| {
+                    o.set("latency_ms", Json::Num(v));
+                }),
+                Err(e) => Response::Err(format!("{e:#}")),
+            };
+            let _ = reply.send(resp);
+        }
+        Job::Recommend {
+            query,
+            top_k,
+            reply,
+        } => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            let resp = match advisor::sweep(rt, profet, &ctx.cache, &stats.cache, &ctx.scaling, &query)
+            {
+                Ok(cands) if cands.is_empty() => Response::err_kind(
+                    "no_candidates",
+                    "no feasible (target, batch, pixels, gpus) candidate",
+                ),
+                Ok(cands) => recommend_response(&cands, top_k),
+                Err(e) => Response::Err(format!("{e:#}")),
+            };
+            let _ = reply.send(resp);
+        }
+        Job::Plan {
+            query,
+            job,
+            objective,
+            reply,
+        } => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            let resp = match advisor::sweep(rt, profet, &ctx.cache, &stats.cache, &ctx.scaling, &query)
+            {
+                Ok(cands) if cands.is_empty() => Response::err_kind(
+                    "no_candidates",
+                    "no feasible (target, batch, pixels, gpus) candidate",
+                ),
+                Ok(cands) => match advisor::plan(&cands, &job, &objective) {
+                    Some(choice) => plan_response(&cands, &choice),
+                    None => Response::err_kind(
+                        "infeasible",
+                        "no candidate satisfies the constraint",
+                    ),
+                },
+                Err(e) => Response::Err(format!("{e:#}")),
+            };
+            let _ = reply.send(resp);
+        }
+        Job::Predict(..) | Job::Shutdown => {}
+    }
+}
+
+/// Batched phase-1 predictions: cache-first, then one artifact execution
+/// per (anchor, target) group over the *unique* misses.
+fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
+    let stats = &ctx.stats;
+    let cache = &ctx.cache;
+    for ((anchor, target), group) in predicts {
+        stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
+        let Some(model) = profet.cross.get(&(anchor, target)) else {
+            for (_, reply) in group {
+                let _ = reply.send(Response::Err(format!("no model for {anchor}->{target}")));
+            }
+            continue;
+        };
+        let mut results: Vec<Option<(f64, crate::predictor::Member)>> = vec![None; group.len()];
+        // unique missing keys, in first-seen order; waiters per key
+        let mut miss_keys: Vec<CacheKey> = Vec::new();
+        let mut miss_rows: Vec<Vec<f64>> = Vec::new();
+        let mut miss_lats: Vec<f64> = Vec::new();
+        let mut waiters: BTreeMap<CacheKey, Vec<usize>> = BTreeMap::new();
+        for (i, (req, _)) in group.iter().enumerate() {
+            let key = CacheKey::of(anchor, target, req.anchor_latency_ms, &req.profile);
+            if let Some(v) = cache.get(&key, &stats.cache) {
+                results[i] = Some(v);
+                continue;
+            }
+            if !waiters.contains_key(&key) {
+                miss_keys.push(key.clone());
+                miss_rows.push(profet.feature_space.vectorize(&req.profile));
+                miss_lats.push(req.anchor_latency_ms);
+            }
+            waiters.entry(key).or_default().push(i);
+        }
+        if !miss_rows.is_empty() {
+            let executed = crate::ml::FeatureMatrix::from_rows(&miss_rows)
+                .and_then(|feats| model.predict_batch(rt, &feats, &miss_lats));
+            match executed {
+                Ok(preds) => {
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .batched_requests
+                        .fetch_add(miss_keys.len() as u64, Ordering::Relaxed);
+                    for (key, pred) in miss_keys.into_iter().zip(preds) {
+                        for &i in &waiters[&key] {
+                            results[i] = Some(pred);
+                        }
+                        cache.insert(key, pred);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (i, (_, reply)) in group.into_iter().enumerate() {
+                        let resp = match results[i] {
+                            Some((v, member)) => ok_prediction(v, member),
+                            None => Response::Err(msg.clone()),
+                        };
+                        let _ = reply.send(resp);
+                    }
+                    continue;
+                }
+            }
+        }
+        for (i, (_, reply)) in group.into_iter().enumerate() {
+            let resp = match results[i] {
+                Some((v, member)) => ok_prediction(v, member),
+                None => Response::Err("prediction missing from batch".into()),
+            };
+            let _ = reply.send(resp);
+        }
+    }
+}
+
+fn ok_prediction(latency_ms: f64, member: crate::predictor::Member) -> Response {
+    Response::ok_obj(|o| {
+        o.set("latency_ms", Json::Num(latency_ms));
+        o.set("member", Json::Str(member.name().into()));
+    })
+}
+
+fn candidate_json(c: &Candidate, on_frontier: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("target", Json::Str(c.target.key().into()));
+    o.set("batch", Json::Num(c.batch as f64));
+    o.set("pixels", Json::Num(c.pixels as f64));
+    o.set("n_gpus", Json::Num(c.n_gpus as f64));
+    o.set("pricing", Json::Str(c.pricing.key().into()));
+    o.set("latency_ms", Json::Num(c.latency_ms));
+    o.set("imgs_per_s", Json::Num(c.imgs_per_s));
+    o.set("price_hr", Json::Num(c.price_hr));
+    o.set("cost_per_img_usd", Json::Num(c.cost_per_img_usd));
+    o.set("on_frontier", Json::Bool(on_frontier));
+    o
+}
+
+/// Rank candidates (cost-efficiency first, then speed, then a stable tie
+/// key), tag Pareto-frontier membership — computed over the FULL candidate
+/// set, before any `top_k` truncation — and serialize. `top_k == 0` is the
+/// documented "return everything" sentinel (see the protocol op table).
+fn recommend_response(cands: &[Candidate], top_k: usize) -> Response {
+    let points: Vec<(f64, f64)> = cands.iter().map(Candidate::objectives).collect();
+    let frontier: std::collections::BTreeSet<usize> =
+        advisor::pareto_frontier(&points).into_iter().collect();
+    let order = advisor::rank_candidates(cands);
+    let take = if top_k == 0 { order.len() } else { top_k.min(order.len()) };
+    Response::ok_obj(|o| {
+        o.set(
+            "candidates",
+            Json::Arr(
+                order[..take]
+                    .iter()
+                    .map(|&i| candidate_json(&cands[i], frontier.contains(&i)))
+                    .collect(),
+            ),
+        );
+        o.set("n_candidates", Json::Num(cands.len() as f64));
+        o.set("frontier_size", Json::Num(frontier.len() as f64));
+    })
+}
+
+fn plan_response(cands: &[Candidate], choice: &PlanChoice) -> Response {
+    // one membership bit only — a direct dominance scan, not a full frontier
+    let pt = cands[choice.index].objectives();
+    let on_frontier = cands
+        .iter()
+        .all(|q| !advisor::dominates(q.objectives(), pt));
+    Response::ok_obj(|o| {
+        o.set("choice", candidate_json(&cands[choice.index], on_frontier));
+        o.set("hours", Json::Num(choice.hours));
+        o.set("cost_usd", Json::Num(choice.cost_usd));
+        o.set("epochs", Json::Num(choice.epochs));
+        o.set("n_considered", Json::Num(cands.len() as f64));
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost_model::Pricing;
+
+    fn cand(batch: usize, latency_ms: f64, price_hr: f64) -> Candidate {
+        let imgs_per_s = batch as f64 * 1e3 / latency_ms;
+        Candidate {
+            target: Instance::P3,
+            batch,
+            pixels: 64,
+            n_gpus: 1,
+            pricing: Pricing::OnDemand,
+            latency_ms,
+            imgs_per_s,
+            price_hr,
+            cost_per_img_usd: price_hr / 3600.0 / imgs_per_s,
+        }
+    }
+
+    /// `top_k == 0` means "return everything" (documented sentinel);
+    /// nonzero truncates after ranking but frontier/count fields still
+    /// describe the full candidate set.
+    #[test]
+    fn recommend_top_k_zero_returns_all_candidates() {
+        let cands = vec![
+            cand(16, 100.0, 3.0),
+            cand(64, 250.0, 3.0),
+            cand(256, 700.0, 3.0),
+        ];
+        let all = recommend_response(&cands, 0);
+        let Response::Ok(o) = all else { panic!("err response") };
+        assert_eq!(o.req_arr("candidates").unwrap().len(), 3);
+        assert_eq!(o.req_f64("n_candidates").unwrap() as usize, 3);
+
+        let top2 = recommend_response(&cands, 2);
+        let Response::Ok(o) = top2 else { panic!("err response") };
+        assert_eq!(o.req_arr("candidates").unwrap().len(), 2);
+        // truncation must not shrink the full-set metadata
+        assert_eq!(o.req_f64("n_candidates").unwrap() as usize, 3);
+
+        // top_k beyond the candidate count clamps instead of panicking
+        let top9 = recommend_response(&cands, 9);
+        let Response::Ok(o) = top9 else { panic!("err response") };
+        assert_eq!(o.req_arr("candidates").unwrap().len(), 3);
+    }
+}

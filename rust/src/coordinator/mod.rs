@@ -4,25 +4,33 @@
 //! Lambda). Here the same serving semantics run as a self-contained TCP
 //! service speaking newline-delimited JSON:
 //!
-//! * [`server`] — accept loop, one lightweight thread per connection;
-//! * [`router`] — request parsing/validation and dispatch;
-//! * [`batcher`] — the inference engine: a single worker thread owns the
-//!   PJRT [`crate::runtime::Runtime`] (whose handles are not `Send`) plus
-//!   the model registry, and coalesces concurrent predict requests for the
-//!   same (anchor, target) pair into one fixed-shape MLP artifact
-//!   execution (the `b_pred`-row batch the HLO was lowered with). It also
-//!   owns the advisor state — the sharded phase-1 prediction cache and the
-//!   multi-GPU scaling table — behind the `recommend`/`plan` ops.
+//! * [`server`] — accept loop, one lightweight thread per connection,
+//!   bounded by a connection budget; `stop()` gracefully drains in-flight
+//!   connections (joins their handlers after flushing responses);
+//! * [`router`] — request parsing/validation and dispatch; full lane
+//!   queues answer with a structured `overloaded` error (backpressure);
+//! * [`dispatch`] — the engine replica pool: N predict lanes + one
+//!   advisor lane, each replica owning its own non-`Send` PJRT
+//!   [`crate::runtime::Runtime`] + model registry. Phase-1 `predict`
+//!   jobs route by (anchor, target) affinity so dynamic batching still
+//!   coalesces; `recommend`/`plan` sweeps run on the advisor lane so a
+//!   sweep can never head-of-line-block predict traffic;
+//! * [`lane`] — the per-replica work loops: the dynamic batcher (one
+//!   fixed-shape MLP artifact execution per coalesced (anchor, target)
+//!   group — the `b_pred`-row batch the HLO was lowered with) and the
+//!   FIFO advisor loop. The sharded phase-1 prediction cache and the
+//!   multi-GPU scaling table are shared (`Arc`) across all replicas.
 //!
 //! Python never appears anywhere on this path: requests go JSON → feature
 //! vector → HLO executable → JSON.
 
-mod batcher;
+mod dispatch;
+mod lane;
 mod protocol;
 mod router;
 mod server;
 
-pub use batcher::{Batcher, BatcherStats};
+pub use dispatch::{EnginePool, EngineStats, Job, PoolOptions, SubmitError};
 pub use protocol::{ParseError, PredictRequest, Request, Response};
 pub use router::route;
-pub use server::{serve, ServerHandle, MAX_LINE_BYTES};
+pub use server::{serve, serve_with, ServeOptions, ServerHandle, MAX_LINE_BYTES};

@@ -3,7 +3,7 @@
 //! | op | request fields | reply fields |
 //! |----|----------------|--------------|
 //! | `health` | — | `status` |
-//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `cache_hits`, `cache_misses` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses` |
 //! | `instances` | — | `instances[]` (key, gpu, price_hr) |
 //! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
 //! | `predict_batch_size` | `instance`, `batch`, `t_min`, `t_max` | `latency_ms` |
@@ -26,9 +26,17 @@
 //!  "dataset_images":50000,"epochs":10}
 //! ```
 //!
+//! `recommend.top_k` is optional; `0` (also the default when the field is
+//! absent) is the documented "return every ranked candidate" sentinel —
+//! nonzero values truncate after ranking, while `n_candidates` /
+//! `frontier_size` / `on_frontier` always describe the full candidate set.
+//!
 //! Errors are structured, never silent: every rejected line gets
 //! `{"ok":false,"kind":...,"error":...}` — `kind` is `unknown_op` for an
 //! unrecognized `op` value and `bad_request` for malformed payloads.
+//! Under load shedding the service answers `kind:"overloaded"` (full
+//! engine-lane queue, or a connection past the server's budget) — the
+//! request was NOT executed and should be retried with backoff.
 
 use crate::advisor::{EndpointProfiles, Objective, SweepRequest, TrainingJob};
 use crate::gpu::Instance;
@@ -68,7 +76,9 @@ pub enum Request {
         t_min: f64,
         t_max: f64,
     },
-    /// Advisor sweep + Pareto ranking. `top_k == 0` returns everything.
+    /// Advisor sweep + Pareto ranking. `top_k == 0` (the default) is the
+    /// documented "return everything" sentinel; nonzero truncates the
+    /// ranked list (full-set metadata fields are unaffected).
     Recommend { query: SweepRequest, top_k: usize },
     /// Advisor sweep + constrained planning.
     Plan {

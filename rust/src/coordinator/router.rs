@@ -1,15 +1,32 @@
 //! Request router: parses a protocol line, answers cheap queries inline,
-//! and forwards prediction/advisor work to the [`Batcher`] engine.
+//! and forwards prediction/advisor work to the [`EnginePool`].
 
-use crate::coordinator::batcher::{Batcher, Job};
+use crate::coordinator::dispatch::{EnginePool, Job, SubmitError};
 use crate::coordinator::protocol::{Request, Response};
 use crate::gpu::Instance;
 use crate::util::Json;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
+
+/// Submit one engine job and wait for its reply. A full lane queue is
+/// surfaced as the structured `overloaded` error — load is shed at the
+/// dispatcher, never buffered unboundedly.
+fn ask(pool: &EnginePool, make: impl FnOnce(Sender<Response>) -> Job) -> Response {
+    let (tx, rx) = channel();
+    match pool.submit(make(tx)) {
+        Ok(()) => rx
+            .recv()
+            .unwrap_or_else(|_| Response::Err("engine gone".into())),
+        Err(SubmitError::Overloaded) => Response::err_kind(
+            "overloaded",
+            "engine queue is full — shed load and retry",
+        ),
+        Err(SubmitError::Gone) => Response::Err("engine gone".into()),
+    }
+}
 
 /// Handle one request line; blocking (waits for the engine when needed).
-pub fn route(batcher: &Batcher, line: &str) -> Response {
+pub fn route(pool: &EnginePool, line: &str) -> Response {
     let req = match Request::parse(line) {
         Ok(r) => r,
         Err(e) => return Response::err_kind(e.kind(), format!("bad request: {e}")),
@@ -19,12 +36,14 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
             o.set("status", Json::Str("healthy".into()));
         }),
         Request::Stats => {
-            let s = &batcher.stats;
+            let s = &pool.stats;
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
+            let overloaded = s.overloaded.load(Ordering::Relaxed);
             let cache_hits = s.cache.hits.load(Ordering::Relaxed);
             let cache_misses = s.cache.misses.load(Ordering::Relaxed);
+            let lanes = pool.predict_lanes();
             Response::ok_obj(|o| {
                 o.set("requests", Json::Num(requests as f64));
                 o.set("artifact_batches", Json::Num(batches as f64));
@@ -36,6 +55,8 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
                         0.0
                     }),
                 );
+                o.set("overloaded", Json::Num(overloaded as f64));
+                o.set("predict_lanes", Json::Num(lanes as f64));
                 o.set("cache_hits", Json::Num(cache_hits as f64));
                 o.set("cache_misses", Json::Num(cache_misses as f64));
             })
@@ -57,70 +78,45 @@ pub fn route(batcher: &Batcher, line: &str) -> Response {
                 ),
             );
         }),
-        Request::Predict(p) => {
-            let (tx, rx) = channel();
-            batcher.submit(Job::Predict(p, tx));
-            rx.recv()
-                .unwrap_or_else(|_| Response::Err("engine gone".into()))
-        }
+        Request::Predict(p) => ask(pool, |tx| Job::Predict(p, tx)),
         Request::PredictBatchSize {
             instance,
             batch,
             t_min,
             t_max,
-        } => {
-            let (tx, rx) = channel();
-            batcher.submit(Job::BatchSize {
-                instance,
-                batch,
-                t_min,
-                t_max,
-                reply: tx,
-            });
-            rx.recv()
-                .unwrap_or_else(|_| Response::Err("engine gone".into()))
-        }
+        } => ask(pool, |tx| Job::BatchSize {
+            instance,
+            batch,
+            t_min,
+            t_max,
+            reply: tx,
+        }),
         Request::PredictPixelSize {
             instance,
             pixels,
             t_min,
             t_max,
-        } => {
-            let (tx, rx) = channel();
-            batcher.submit(Job::PixelSize {
-                instance,
-                pixels,
-                t_min,
-                t_max,
-                reply: tx,
-            });
-            rx.recv()
-                .unwrap_or_else(|_| Response::Err("engine gone".into()))
-        }
-        Request::Recommend { query, top_k } => {
-            let (tx, rx) = channel();
-            batcher.submit(Job::Recommend {
-                query,
-                top_k,
-                reply: tx,
-            });
-            rx.recv()
-                .unwrap_or_else(|_| Response::Err("engine gone".into()))
-        }
+        } => ask(pool, |tx| Job::PixelSize {
+            instance,
+            pixels,
+            t_min,
+            t_max,
+            reply: tx,
+        }),
+        Request::Recommend { query, top_k } => ask(pool, |tx| Job::Recommend {
+            query,
+            top_k,
+            reply: tx,
+        }),
         Request::Plan {
             query,
             job,
             objective,
-        } => {
-            let (tx, rx) = channel();
-            batcher.submit(Job::Plan {
-                query,
-                job,
-                objective,
-                reply: tx,
-            });
-            rx.recv()
-                .unwrap_or_else(|_| Response::Err("engine gone".into()))
-        }
+        } => ask(pool, |tx| Job::Plan {
+            query,
+            job,
+            objective,
+            reply: tx,
+        }),
     }
 }

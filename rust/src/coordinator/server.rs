@@ -1,43 +1,140 @@
 //! TCP server: accept loop + one thread per connection, newline-delimited
-//! JSON in/out. Connections share the [`Batcher`] engine handle.
+//! JSON in/out. Connections share the [`EnginePool`] replica handle.
 //!
 //! Request lines are length-bounded ([`MAX_LINE_BYTES`]): a client that
 //! streams an endless unterminated line cannot buffer arbitrary bytes in
 //! the server — the oversized line is discarded as it arrives, answered
 //! with a structured `line_too_long` error, and the connection keeps
 //! serving subsequent well-formed lines.
+//!
+//! The accept loop enforces a **connection budget**
+//! ([`ServeOptions::max_connections`]): past it, a connection is answered
+//! with one structured `overloaded` error line and closed instead of
+//! spawning an unbounded handler thread per socket.
+//!
+//! [`ServerHandle::stop`] is a **graceful drain**: it stops accepting,
+//! half-closes (read side) every live connection so idle handlers wake
+//! with EOF, and then *joins* every in-flight handler thread — a handler
+//! mid-request finishes it and flushes the response before exiting, so
+//! accepted requests never lose their replies (the seed leaked handler
+//! threads on shutdown).
 
-use crate::coordinator::batcher::{Batcher, BatcherStats};
+use crate::coordinator::dispatch::{EnginePool, EngineStats, PoolOptions};
 use crate::coordinator::protocol::Response;
 use crate::coordinator::router::route;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Upper bound on one request line (advisor requests carry four profile
 /// objects comfortably under 64 KiB; 1 MiB leaves an order of magnitude
 /// of headroom).
 pub const MAX_LINE_BYTES: usize = 1024 * 1024;
 
-/// Running server handle: local address + shutdown flag.
+/// Per-connection write timeout: a peer that stops *reading* its replies
+/// (full TCP send buffer) unblocks the handler with an error after this
+/// long instead of wedging it forever — which also guarantees the
+/// graceful drain's handler joins always terminate. A handler waiting on
+/// a long engine job is unaffected: the clock only runs inside `write`.
+const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Server configuration: engine-pool shape + connection budget.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub pool: PoolOptions,
+    /// Maximum simultaneously served connections; connection number
+    /// `max_connections + 1` gets a structured `overloaded` line and is
+    /// closed immediately.
+    pub max_connections: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            pool: PoolOptions::default(),
+            max_connections: 256,
+        }
+    }
+}
+
+/// Live-connection registry: stream clones (for the drain's read-side
+/// half-close) and handler join handles, keyed by connection id.
+#[derive(Default)]
+struct ConnTable {
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    joins: Mutex<HashMap<u64, std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl ConnTable {
+    fn active(&self) -> usize {
+        self.streams.lock().unwrap().len()
+    }
+
+    /// Called by a handler as its last action: a finished connection
+    /// detaches its own join handle (dropping a JoinHandle detaches), so
+    /// the tables never grow beyond the live-connection count.
+    fn deregister(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+        self.joins.lock().unwrap().remove(&id);
+    }
+}
+
+/// Running server handle: local address + shutdown/drain control.
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    /// Engine statistics (requests served, artifact batches executed).
-    pub stats: Arc<BatcherStats>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    /// Engine statistics (requests served, artifact batches executed,
+    /// cache hits/misses, overload rejections) — shared across replicas.
+    pub stats: Arc<EngineStats>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<ConnTable>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Signal shutdown and wait for the accept loop to exit.
+    /// Graceful drain: stop accepting, wake idle handlers with EOF, and
+    /// join every in-flight connection handler. A handler that is waiting
+    /// on the engine finishes its request and flushes the response before
+    /// exiting — accepted requests never lose their reply.
     pub fn stop(mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::SeqCst);
-        // poke the accept loop
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the accept loop awake so it observes the flag
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        // half-close the read side of every live connection: handlers
+        // blocked in `read` wake with EOF; a handler mid-request still
+        // writes its response (the write side stays open)
+        let streams: Vec<TcpStream> = {
+            let mut map = self.conns.streams.lock().unwrap();
+            map.drain().map(|(_, s)| s).collect()
+        };
+        for s in &streams {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        // the socket dups served their purpose (the half-close above);
+        // drop them now so the handler-side close is the last reference.
+        // Handler joins below always terminate: a handler is either
+        // waiting on the engine (every accepted job completes and
+        // replies), reading (woken by the half-close), or writing
+        // (bounded by WRITE_TIMEOUT) — so an in-flight request flushes
+        // its response no matter how long its engine job runs, and a
+        // peer that stopped reading cannot wedge the drain.
+        drop(streams);
+        let joins: Vec<std::thread::JoinHandle<()>> = {
+            let mut map = self.conns.joins.lock().unwrap();
+            map.drain().map(|(_, j)| j).collect()
+        };
+        for j in joins {
             let _ = j.join();
         }
     }
@@ -45,37 +142,96 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        if self.join.is_some() || self.conns.active() > 0 {
+            self.drain();
         }
     }
 }
 
-/// Start the service: binds `addr` (use port 0 for ephemeral), spawns the
-/// engine and the accept loop, returns immediately.
+/// Start the service with default options: binds `addr` (use port 0 for
+/// ephemeral), spawns the engine pool and the accept loop, returns
+/// immediately.
 pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<ServerHandle> {
+    serve_with(addr, artifact_dir, model_dir, &ServeOptions::default())
+}
+
+/// [`serve`] with explicit pool sizing and connection budget.
+pub fn serve_with(
+    addr: &str,
+    artifact_dir: PathBuf,
+    model_dir: PathBuf,
+    opts: &ServeOptions,
+) -> Result<ServerHandle> {
+    let pool = EnginePool::spawn(artifact_dir, model_dir, &opts.pool)?;
+    serve_pool(addr, pool, opts.max_connections)
+}
+
+/// Accept loop over a pre-built pool (also the test seam: unit tests
+/// drive it with a mock pool, no PJRT runtime required).
+pub(crate) fn serve_pool(
+    addr: &str,
+    pool: EnginePool,
+    max_connections: usize,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    let batcher = Arc::new(Batcher::spawn(artifact_dir, model_dir)?);
-    let stats = batcher.stats.clone();
-    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let pool = Arc::new(pool);
+    let stats = pool.stats.clone();
+    let stats2 = stats.clone();
+    let shutdown = Arc::new(AtomicBool::new(false));
     let shutdown2 = shutdown.clone();
+    let conns = Arc::new(ConnTable::default());
+    let conns2 = conns.clone();
+    let max_connections = max_connections.max(1);
 
     let join = std::thread::Builder::new()
         .name("profet-accept".into())
         .spawn(move || {
             for stream in listener.incoming() {
-                if shutdown2.load(std::sync::atomic::Ordering::SeqCst) {
+                if shutdown2.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                let b = batcher.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &b);
-                });
+                if conns2.active() >= max_connections {
+                    stats2.overloaded.fetch_add(1, Ordering::Relaxed);
+                    reject_overloaded(stream, max_connections);
+                    continue;
+                }
+                let id = conns2.next_id.fetch_add(1, Ordering::Relaxed);
+                // register the stream clone BEFORE spawning, so the
+                // budget check and the drain both see this connection
+                match stream.try_clone() {
+                    Ok(clone) => {
+                        conns2.streams.lock().unwrap().insert(id, clone);
+                    }
+                    Err(_) => continue,
+                }
+                let pool = pool.clone();
+                let conns3 = conns2.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("profet-conn-{id}"))
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &pool);
+                        conns3.deregister(id);
+                    });
+                match spawned {
+                    Ok(handle) => {
+                        // the handler may already have finished (instant
+                        // EOF) and deregistered `id` BEFORE this insert —
+                        // re-check the stream table and detach the handle
+                        // if so, or the joins map would leak one finished
+                        // entry per short-lived connection until drain.
+                        // (Locks taken sequentially, never nested, so
+                        // there is no order inversion with deregister.)
+                        conns2.joins.lock().unwrap().insert(id, handle);
+                        if !conns2.streams.lock().unwrap().contains_key(&id) {
+                            conns2.joins.lock().unwrap().remove(&id);
+                        }
+                    }
+                    Err(_) => {
+                        conns2.streams.lock().unwrap().remove(&id);
+                    }
+                }
             }
         })?;
 
@@ -83,12 +239,31 @@ pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<Se
         addr: local,
         stats,
         shutdown,
+        conns,
         join: Some(join),
     })
 }
 
-fn handle_conn(stream: TcpStream, batcher: &Batcher) -> Result<()> {
+/// Answer a budget-rejected connection with one structured error line.
+/// Written from the accept thread, so the bound is much tighter than
+/// WRITE_TIMEOUT — one short line fits any send buffer without blocking,
+/// and a pathological peer must not stall the accept loop.
+fn reject_overloaded(mut stream: TcpStream, max_connections: usize) {
+    stream
+        .set_write_timeout(Some(std::time::Duration::from_secs(1)))
+        .ok();
+    let resp = Response::err_kind(
+        "overloaded",
+        format!("connection budget of {max_connections} exhausted — retry later"),
+    );
+    let _ = stream.write_all(resp.to_line().as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
+}
+
+fn handle_conn(stream: TcpStream, pool: &EnginePool) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
@@ -102,7 +277,7 @@ fn handle_conn(stream: TcpStream, batcher: &Batcher) -> Result<()> {
             ),
             LineRead::Line => match std::str::from_utf8(&buf) {
                 Ok(line) if line.trim().is_empty() => continue,
-                Ok(line) => route(batcher, line),
+                Ok(line) => route(pool, line),
                 // lossy replacement would silently mangle profile keys;
                 // reject like any other malformed payload
                 Err(_) => {
@@ -201,8 +376,13 @@ fn drain_until_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::{drain_until_newline, read_line_bounded, LineRead};
-    use std::io::BufReader;
+    use super::{drain_until_newline, read_line_bounded, serve_pool, LineRead};
+    use crate::coordinator::dispatch::{EnginePool, Job};
+    use crate::util::Json;
+    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::net::TcpStream;
+    use std::sync::mpsc::Receiver;
+    use std::time::Duration;
 
     fn reader(bytes: &[u8]) -> BufReader<std::io::Cursor<Vec<u8>>> {
         // tiny internal buffer so lines span many fill_buf() rounds
@@ -310,5 +490,153 @@ mod tests {
         ));
         assert_eq!(buf, b"next");
     }
-}
 
+    // ---- pool-backed server behavior (mock lanes, no PJRT needed) ----
+
+    /// Mock lane: answers every job `ok`, optionally after a delay.
+    fn slow_echo(delay: Duration) -> impl Fn(usize, Receiver<Job>) + Send + Sync + Clone + 'static {
+        move |_idx, rx| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    Job::Predict(_, reply) => {
+                        std::thread::sleep(delay);
+                        let _ = reply.send(crate::coordinator::protocol::Response::ok_obj(
+                            |o| {
+                                o.set("latency_ms", Json::Num(1.0));
+                            },
+                        ));
+                    }
+                    other => {
+                        std::thread::sleep(delay);
+                        // reply ok to whatever carries a reply channel
+                        match other {
+                            Job::BatchSize { reply, .. }
+                            | Job::PixelSize { reply, .. }
+                            | Job::Recommend { reply, .. }
+                            | Job::Plan { reply, .. } => {
+                                let _ = reply.send(
+                                    crate::coordinator::protocol::Response::ok_obj(|_| {}),
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn predict_line() -> &'static str {
+        r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":10.0,"profile":{"Conv2D":1.0}}"#
+    }
+
+    #[test]
+    fn stop_drains_in_flight_requests_without_dropping_responses() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // mock engine that signals job pickup, then works "slowly"
+        let picked = std::sync::Arc::new(AtomicUsize::new(0));
+        let picked2 = picked.clone();
+        let body = move |_idx: usize, rx: Receiver<Job>| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    Job::Predict(_, reply) => {
+                        picked2.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(300));
+                        let _ = reply.send(crate::coordinator::protocol::Response::ok_obj(
+                            |o| {
+                                o.set("latency_ms", Json::Num(1.0));
+                            },
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        };
+        let pool = EnginePool::mock(1, 16, 4, body.clone(), move |rx| body(0, rx));
+        let handle = serve_pool("127.0.0.1:0", pool, 8).unwrap();
+        let addr = handle.addr;
+
+        // a client with a request in flight on a slow engine
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(predict_line().as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            resp
+        });
+        // wait until the engine has provably picked the request up, then
+        // drain mid-flight (a fixed sleep would race conn scheduling)
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while picked.load(Ordering::SeqCst) == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "request never reached the mock engine"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        handle.stop();
+        // stop() returned only after the handler flushed the response
+        let resp = client.join().unwrap();
+        let j = Json::parse(resp.trim()).expect("drained connection lost its response");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+    }
+
+    #[test]
+    fn connection_budget_rejects_with_structured_overloaded() {
+        let body = slow_echo(Duration::ZERO);
+        let pool = EnginePool::mock(1, 16, 4, body.clone(), move |rx| body(0, rx));
+        let handle = serve_pool("127.0.0.1:0", pool, 1).unwrap();
+        let addr = handle.addr;
+
+        // connection 1 occupies the whole budget (held open, proven live)
+        let s1 = TcpStream::connect(addr).unwrap();
+        let mut w1 = s1.try_clone().unwrap();
+        w1.write_all(predict_line().as_bytes()).unwrap();
+        w1.write_all(b"\n").unwrap();
+        let mut r1 = BufReader::new(s1);
+        let mut resp = String::new();
+        r1.read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+
+        // connection 2 is rejected with one structured line, then EOF
+        let s2 = TcpStream::connect(addr).unwrap();
+        let mut r2 = BufReader::new(s2);
+        let mut line = String::new();
+        r2.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        assert_eq!(j.req_str("kind").unwrap(), "overloaded");
+        line.clear();
+        assert_eq!(r2.read_line(&mut line).unwrap(), 0, "rejected conn not closed");
+        assert!(
+            handle.stats.overloaded.load(std::sync::atomic::Ordering::Relaxed) >= 1
+        );
+
+        // closing connection 1 frees the budget for a new connection
+        drop(r1);
+        drop(w1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let served = loop {
+            let s3 = TcpStream::connect(addr).unwrap();
+            let mut w3 = s3.try_clone().unwrap();
+            w3.write_all(predict_line().as_bytes()).unwrap();
+            w3.write_all(b"\n").unwrap();
+            let mut r3 = BufReader::new(s3);
+            let mut resp = String::new();
+            r3.read_line(&mut resp).unwrap();
+            if resp.contains("\"ok\":true") {
+                break true;
+            }
+            if std::time::Instant::now() > deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert!(served, "budget slot was never released");
+        handle.stop();
+    }
+}

@@ -73,7 +73,8 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve> [-
                  [--anchor g4dn] [--target p3] [--models models]
   repro simulate --model VGG16 --batch 32 --pixels 128 [--instance p3]
   repro eval     [--exp all|fig9|table4|...] [--out results.txt]
-  repro serve    [--addr 127.0.0.1:7878] [--models models]";
+  repro serve    [--addr 127.0.0.1:7878] [--models models] [--pool N]
+                 [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]";
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -242,12 +243,30 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let model_dir = args.get_or("models", "models");
-    let handle = repro::coordinator::serve(
+    let defaults = repro::coordinator::ServeOptions::default();
+    let opts = repro::coordinator::ServeOptions {
+        pool: repro::coordinator::PoolOptions {
+            // 0 = auto (available parallelism)
+            predict_lanes: args.usize_or("pool", defaults.pool.predict_lanes)?,
+            predict_queue_cap: args.usize_or("queue-cap", defaults.pool.predict_queue_cap)?,
+            advisor_queue_cap: args
+                .usize_or("advisor-queue-cap", defaults.pool.advisor_queue_cap)?,
+        },
+        max_connections: args.usize_or("max-conns", defaults.max_connections)?,
+    };
+    let handle = repro::coordinator::serve_with(
         &addr,
         runtime::default_artifact_dir(),
         model_dir.into(),
+        &opts,
     )?;
-    println!("PROFET service listening on {}", handle.addr);
+    println!(
+        "PROFET service listening on {} ({} predict lanes + 1 advisor lane, \
+         {} max connections)",
+        handle.addr,
+        opts.pool.resolved_predict_lanes(),
+        opts.max_connections
+    );
     println!("protocol: newline-delimited JSON; try:");
     println!(r#"  {{"op":"health"}}"#);
     println!(r#"  {{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":120.0,"profile":{{"Conv2D":40.0}}}}"#);

@@ -62,6 +62,14 @@ pub fn multi_gpu_latency(
 /// `t(N gpus, global batch B) / t(1 gpu, B)` measured over a calibration
 /// model set, per (instance, N). PROFET predicts the 1-GPU latency; the
 /// multiplier extends it to N GPUs.
+///
+/// A calibration model contributes a ratio only when BOTH its 1-GPU and
+/// its N-GPU run are executable on `instance`; a model that fails either
+/// side (e.g. its single-GPU shard OOMs on a small-memory instance) is
+/// *skipped*, exactly like the N-GPU branch — it must not veto the whole
+/// (instance, N) pair. The result is `None` only when no calibration
+/// model produced a ratio: at least one model must run at both ends for
+/// the multiplier to exist.
 pub fn static_multiplier(
     instance: Instance,
     n_gpus: usize,
@@ -69,7 +77,9 @@ pub fn static_multiplier(
 ) -> Option<f64> {
     let mut ratios = Vec::new();
     for &(m, b, p) in calibration {
-        let t1 = multi_gpu_latency(m, b, p, instance, 1)?;
+        let Some(t1) = multi_gpu_latency(m, b, p, instance, 1) else {
+            continue;
+        };
         if let Some(tn) = multi_gpu_latency(m, b, p, instance, n_gpus) {
             ratios.push(tn / t1);
         }
@@ -177,6 +187,25 @@ mod tests {
         ];
         let m = static_multiplier(Instance::P3, 2, &cal).unwrap();
         assert!(m > 0.4 && m < 1.1, "2-gpu multiplier {m}");
+    }
+
+    #[test]
+    fn unexecutable_calibration_model_is_skipped_not_fatal() {
+        // VGG16 b128@128px OOMs at 1 GPU on p3 (see vgg16_oom_shard_rejected)
+        // — it must be skipped, not abort the whole multiplier via `?`
+        let with_oom = [
+            (ModelId::Vgg16, 128usize, 128usize), // 1-GPU side not executable
+            (ModelId::ResNet18, 128, 64),
+        ];
+        let only_good = [(ModelId::ResNet18, 128usize, 64usize)];
+        let m_mixed = static_multiplier(Instance::P3, 4, &with_oom)
+            .expect("one failing calibration model vetoed the whole pair");
+        let m_good = static_multiplier(Instance::P3, 4, &only_good).unwrap();
+        // the failing model contributed nothing: the mean is over the
+        // surviving models only
+        assert_eq!(m_mixed.to_bits(), m_good.to_bits());
+        // when NO calibration model runs at both ends, there is no ratio
+        assert!(static_multiplier(Instance::P3, 4, &[(ModelId::Vgg16, 128, 128)]).is_none());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Coordinator integration: boot the full TCP service on an ephemeral
 //! port, train + save a model directory, then drive it like a client —
-//! including concurrent requests that exercise the dynamic batcher.
+//! including concurrent requests that exercise the dynamic batcher, a
+//! `recommend` sweep racing a `predict` stream (head-of-line isolation
+//! across engine lanes), queue backpressure, and graceful drain.
 
 use repro::coordinator;
 use repro::data::Corpus;
@@ -358,4 +360,293 @@ fn concurrent_clients_are_batched() {
         assert!((l - latencies[0]).abs() < 1e-6);
     }
     handle.stop();
+}
+
+/// A large `recommend` grid request body: the full batch grid plus every
+/// GPU count that divides a paper batch size (so the multi-GPU scaling
+/// calibration actually runs), optionally cache-busted so repeat sweeps
+/// redo their phase-1 ensemble executions instead of hitting the cache.
+fn big_sweep_line(bust: usize) -> String {
+    let mut req = advisor_body();
+    req.set("op", Json::Str("recommend".into()));
+    req.set(
+        "batches",
+        Json::Arr(vec![16.0, 32.0, 64.0, 128.0, 256.0].into_iter().map(Json::Num).collect()),
+    );
+    req.set(
+        "gpu_counts",
+        Json::Arr(
+            vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+                .into_iter()
+                .map(Json::Num)
+                .collect(),
+        ),
+    );
+    if bust > 0 {
+        // nudge the endpoint latencies by whole quantization buckets:
+        // distinct cache keys, still positive and physically plausible
+        for key in ["anchor_lat_bmin", "anchor_lat_bmax"] {
+            let v = req.req_f64(key).unwrap();
+            req.set(key, Json::Num(v * (1.0 + bust as f64 * 1e-3)));
+        }
+    }
+    req.to_string()
+}
+
+/// THE head-of-line regression test: a stream of `predict`s must complete
+/// while `recommend` sweeps are still in flight on the advisor lane —
+/// predicts never queue behind a sweep (the seed's single engine thread
+/// serialized them).
+#[test]
+fn predicts_are_not_blocked_by_inflight_recommend_sweeps() {
+    let Some(models) = model_dir() else { return };
+    let opts = coordinator::ServeOptions {
+        pool: coordinator::PoolOptions {
+            predict_lanes: 2,
+            ..coordinator::PoolOptions::default()
+        },
+        ..coordinator::ServeOptions::default()
+    };
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &opts,
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // warm the predict path so the measured stream is steady-state
+    let line = sample_profile_line();
+    let warm = send(addr, &line);
+    assert_eq!(warm.get("ok").and_then(Json::as_bool), Some(true), "{warm:?}");
+
+    // advisor thread: back-to-back sweeps keep the advisor lane busy for
+    // the whole predict stream. Sweep #0 pays the multi-GPU calibration
+    // (dozens of simulator runs — by far the slowest request in flight);
+    // each later sweep is cache-busted so it re-executes its phase-1
+    // ensembles.
+    let n_sweeps = 6;
+    let sweeps = std::thread::spawn(move || {
+        let mut oks = 0;
+        let mut durations = Vec::new();
+        for i in 0..n_sweeps {
+            let t = std::time::Instant::now();
+            let resp = send(addr, &big_sweep_line(i));
+            durations.push(t.elapsed());
+            if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                oks += 1;
+            }
+        }
+        (oks, durations, std::time::Instant::now())
+    });
+
+    // three parallel predict clients start while sweep #0 is in flight;
+    // identical payloads coalesce in the affinity lane's batch window
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    let mut clients = Vec::new();
+    for _ in 0..3 {
+        let line = line.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut max_rtt = std::time::Duration::ZERO;
+            for _ in 0..4 {
+                let t = std::time::Instant::now();
+                let resp = send(addr, &line);
+                max_rtt = max_rtt.max(t.elapsed());
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "{resp:?}"
+                );
+            }
+            (max_rtt, std::time::Instant::now())
+        }));
+    }
+    let results: Vec<(std::time::Duration, std::time::Instant)> =
+        clients.into_iter().map(|j| j.join().unwrap()).collect();
+    let max_rtt = results.iter().map(|r| r.0).max().unwrap();
+    let predicts_done = results.iter().map(|r| r.1).max().unwrap();
+
+    let (sweep_oks, sweep_durations, sweeps_done) = sweeps.join().unwrap();
+    assert_eq!(sweep_oks, n_sweeps);
+    // THE head-of-line assertion: the worst predict round-trip must be
+    // far below the cold sweep's duration. Under a serialized engine the
+    // predicts (issued 2 ms into sweep #0) would queue behind it and the
+    // worst RTT would be ≈ that sweep's whole duration — here it must be
+    // under half of it. (Both sides scale together under CI load: slower
+    // simulators make the cold sweep proportionally longer.)
+    let cold = sweep_durations[0];
+    assert!(
+        max_rtt * 2 < cold,
+        "predict RTT {max_rtt:?} is not clearly below the in-flight cold \
+         sweep ({cold:?}) — predicts are queueing behind the advisor lane"
+    );
+    // secondary overlap check: the predict stream finished while the
+    // sweep backlog was still draining
+    assert!(
+        predicts_done < sweeps_done,
+        "predict stream did not overlap the sweeps \
+         (predicts finished {:?} after the sweeps)",
+        predicts_done.duration_since(sweeps_done)
+    );
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("predict_lanes").unwrap() as usize, 2);
+    handle.stop();
+}
+
+/// Cross-replica cache coherence: a phase-1 prediction computed on a
+/// *predict lane* must be visible to the *advisor lane*'s sweep (and
+/// counted exactly once in the shared hit/miss counters), because the
+/// sharded cache is one `Arc` across all replicas.
+#[test]
+fn prediction_cache_is_shared_across_replicas() {
+    let Some(models) = model_dir() else { return };
+    let opts = coordinator::ServeOptions {
+        pool: coordinator::PoolOptions {
+            predict_lanes: 2,
+            ..coordinator::PoolOptions::default()
+        },
+        ..coordinator::ServeOptions::default()
+    };
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &opts,
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // the sweep's two batch endpoints, first issued as plain predicts
+    // (served by a predict-lane replica, populating the shared cache)
+    let body = advisor_body();
+    for (profile_key, lat_key) in [
+        ("profile_bmin", "anchor_lat_bmin"),
+        ("profile_bmax", "anchor_lat_bmax"),
+    ] {
+        let mut req = Json::obj();
+        req.set("op", Json::Str("predict".into()));
+        req.set("anchor", Json::Str("g4dn".into()));
+        req.set("target", Json::Str("p3".into()));
+        req.set("anchor_latency_ms", Json::Num(body.req_f64(lat_key).unwrap()));
+        req.set("profile", body.get(profile_key).unwrap().clone());
+        let resp = send(addr, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    }
+    let hits_before = handle.stats.cache.hits.load(std::sync::atomic::Ordering::Relaxed);
+    let misses_before = handle.stats.cache.misses.load(std::sync::atomic::Ordering::Relaxed);
+
+    // the recommend sweep (advisor-lane replica) looks up exactly those
+    // two endpoint keys for target p3 — both must hit the shared cache
+    let mut req = advisor_body();
+    req.set("op", Json::Str("recommend".into()));
+    req.set("targets", Json::Arr(vec![Json::Str("p3".into())]));
+    let resp = send(addr, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    let hits_after = handle.stats.cache.hits.load(std::sync::atomic::Ordering::Relaxed);
+    let misses_after = handle.stats.cache.misses.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        hits_after >= hits_before + 2,
+        "sweep did not hit the predict-lane cache entries: {hits_before} -> {hits_after}"
+    );
+    assert_eq!(
+        misses_after, misses_before,
+        "sweep re-computed endpoints that another replica already cached"
+    );
+    handle.stop();
+}
+
+/// Backpressure: with a 1-deep advisor queue, a burst of concurrent
+/// sweeps must shed load with the structured `overloaded` error instead
+/// of buffering unboundedly — and the shed count is surfaced via `stats`.
+#[test]
+fn advisor_queue_overflow_is_structured_overloaded() {
+    let Some(models) = model_dir() else { return };
+    let opts = coordinator::ServeOptions {
+        pool: coordinator::PoolOptions {
+            predict_lanes: 1,
+            advisor_queue_cap: 1,
+            ..coordinator::PoolOptions::default()
+        },
+        ..coordinator::ServeOptions::default()
+    };
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &opts,
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let burst = 8;
+    let mut joins = Vec::new();
+    for _ in 0..burst {
+        joins.push(std::thread::spawn(move || send(addr, &big_sweep_line(0))));
+    }
+    let mut oks = 0;
+    let mut overloaded = 0;
+    for j in joins {
+        let resp = j.join().unwrap();
+        match resp.get("ok").and_then(Json::as_bool) {
+            Some(true) => oks += 1,
+            _ => {
+                assert_eq!(resp.req_str("kind").unwrap(), "overloaded", "{resp:?}");
+                overloaded += 1;
+            }
+        }
+    }
+    // at least one sweep ran and at least one was shed (8 concurrent
+    // sweeps vs 1 running + 1 queued can't all be accepted)
+    assert!(oks >= 1, "no sweep served");
+    assert!(overloaded >= 1, "no sweep shed: oks={oks}");
+    assert_eq!(oks + overloaded, burst);
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert!(st.req_f64("overloaded").unwrap() >= overloaded as f64);
+    // predict traffic rode through the whole overload episode
+    let p = send(addr, &sample_profile_line());
+    assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true), "{p:?}");
+    handle.stop();
+}
+
+/// Graceful drain: `stop()` returns only after in-flight connections got
+/// their responses — a request already accepted by the engine is never
+/// answered with a dropped connection.
+#[test]
+fn stop_drains_inflight_sweep_response() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(big_sweep_line(0).as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    });
+    // wait until the sweep has provably reached the advisor lane (the
+    // requests counter ticks when the lane STARTS a job), then drain
+    // mid-flight — a fixed sleep would race connection scheduling
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while handle.stats.requests.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "sweep never reached the engine"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    handle.stop();
+    // stop() already returned — the response must nevertheless be whole
+    let resp = client.join().unwrap();
+    let j = Json::parse(resp.trim()).expect("in-flight response lost during drain");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
 }
