@@ -25,6 +25,12 @@ cargo test -q --no-run
 echo "== server stress test (single-shot, bounded) =="
 ../ci/stress_check.sh   # (cwd is rust/ after the cd above)
 
+# counting-allocator gate, single-shot in its own test binary (a
+# #[global_allocator] is per-binary): zero wire-layer allocations on a
+# warm predict round trip, or this fails loudly
+echo "== wire allocation gate (counting allocator) =="
+cargo test -q --test wire_alloc
+
 echo "== cargo test -q (stress test excluded — it just ran single-shot) =="
 cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps
 

@@ -177,12 +177,57 @@ fn main() {
         );
     }
 
-    // ---------------- protocol ----------------
-    println!("[L3] coordinator protocol:");
+    // ---------------- protocol / wire path ----------------
+    println!("[L3] coordinator wire path:");
     let line = r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":42.5,"profile":{"Conv2D":286.0,"Relu":26.0,"MaxPool":14.0,"FusedBatchNormV3":33.0}}"#;
-    bench(&mut results, "Request::parse (predict line)", 200, || {
+    bench(&mut results, "Request::parse (predict line, fresh scratch)", 200, || {
         std::hint::black_box(repro::coordinator::Request::parse(line).unwrap());
     });
+    {
+        use repro::coordinator::{parse_line, ParsedLine, Response, WireScratch};
+        use repro::predictor::Member;
+        // the serving configuration: per-connection scratch, reused
+        let mut scratch = WireScratch::default();
+        bench(&mut results, "wire parse_line (reused scratch, zero-alloc)", 200, || {
+            let parsed = parse_line(line, &mut scratch).unwrap();
+            std::hint::black_box(matches!(parsed, ParsedLine::Predict(_)));
+        });
+        // what the wire layer replaced: full DOM materialization
+        bench(&mut results, "DOM Json::parse (same line, old wire path)", 200, || {
+            std::hint::black_box(Json::parse(line).unwrap());
+        });
+        let mut out = Vec::new();
+        let predict = Response::Prediction {
+            latency_ms: 123.456,
+            member: Member::Forest,
+        };
+        bench(&mut results, "wire encode predict response (reused buf)", 200, || {
+            predict.encode_line(&mut out);
+            std::hint::black_box(out.len());
+        });
+        let stats = Response::Stats {
+            requests: 123_456,
+            artifact_batches: 789,
+            avg_batch_fill: 2.5,
+            overloaded: 3,
+            predict_lanes: 8,
+            cache_hits: 100_000,
+            cache_misses: 23_456,
+        };
+        bench(&mut results, "wire encode stats response (reused buf)", 200, || {
+            stats.encode_line(&mut out);
+            std::hint::black_box(out.len());
+        });
+        // float formatter in isolation (shortest-round-trip Grisu2)
+        let mut fbuf = Vec::new();
+        let mut x = 0.1f64;
+        bench(&mut results, "write_f64 (grisu2 shortest round-trip)", 200, || {
+            fbuf.clear();
+            repro::util::json_stream::write_f64(&mut fbuf, x);
+            x += 1.0 / 3.0;
+            std::hint::black_box(fbuf.len());
+        });
+    }
 
     // ---------------- advisor ----------------
     println!("[L3] advisor:");
@@ -290,6 +335,25 @@ fn main() {
             bench(&mut results, "engine_pool predict rtt (advisor idle)", 400, || {
                 std::hint::black_box(rtt(&pool));
             });
+            // the full serving wire path: decode + cache fast path +
+            // encode, with per-connection scratch reuse — after the
+            // first miss every round trip is a zero-allocation cache hit
+            {
+                let wire_line = repro::coordinator::Request::Predict(predict.clone())
+                    .to_json()
+                    .to_string();
+                let mut cs = repro::coordinator::ConnScratch::default();
+                repro::coordinator::respond(&pool, &wire_line, &mut cs); // seed the cache
+                bench(
+                    &mut results,
+                    "route predict full wire rtt (warm cache, zero-alloc)",
+                    300,
+                    || {
+                        repro::coordinator::respond(&pool, &wire_line, &mut cs);
+                        std::hint::black_box(cs.out.len());
+                    },
+                );
+            }
             // feeder: saturate the advisor lane for the whole measurement
             let stop = Arc::new(AtomicBool::new(false));
             let feeder = {

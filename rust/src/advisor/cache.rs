@@ -124,6 +124,69 @@ impl CacheKey {
     }
 }
 
+/// Allocation-free [`CacheKey`] construction for the wire hot path.
+///
+/// The canonical profile byte stream normally lives in a fresh
+/// `Arc<Vec<u8>>` per key; this scratch *reuses* one across calls
+/// (`Arc::get_mut` succeeds as long as the previously returned key has
+/// been dropped — the router's peek-then-drop flow guarantees it), so a
+/// warm `key()` call performs zero heap allocations. If a caller does
+/// retain a key (e.g. inserts it into the cache), the next call detects
+/// the shared `Arc` and self-heals with one fresh allocation.
+///
+/// Keys built here are `==` (and hash-identical) to [`CacheKey::of`] over
+/// the materialized profile, provided `pairs` is sorted by key with
+/// duplicate keys removed (the wire layer's `sort_dedup_pairs` order —
+/// the same order a `BTreeMap` iterates).
+#[derive(Default)]
+pub struct CacheKeyScratch {
+    bytes: Option<std::sync::Arc<Vec<u8>>>,
+    header: Vec<u8>,
+}
+
+impl CacheKeyScratch {
+    pub fn key<'a>(
+        &mut self,
+        anchor: Instance,
+        target: Instance,
+        anchor_latency_ms: f64,
+        pairs: impl Iterator<Item = (&'a str, f64)>,
+    ) -> CacheKey {
+        let mut arc = self
+            .bytes
+            .take()
+            .unwrap_or_else(|| std::sync::Arc::new(Vec::new()));
+        if std::sync::Arc::get_mut(&mut arc).is_none() {
+            arc = std::sync::Arc::new(Vec::new());
+        }
+        let buf = std::sync::Arc::get_mut(&mut arc).unwrap();
+        buf.clear();
+        for (op, ms) in pairs {
+            buf.extend_from_slice(&(op.len() as u64).to_le_bytes());
+            buf.extend_from_slice(op.as_bytes());
+            buf.extend_from_slice(&quantize(ms).to_le_bytes());
+        }
+        let fingerprint = fnv1a(buf);
+        let lat_q = quantize(anchor_latency_ms);
+        self.header.clear();
+        self.header.extend_from_slice(anchor.key().as_bytes());
+        self.header.push(0x1f);
+        self.header.extend_from_slice(target.key().as_bytes());
+        self.header.push(0x1f);
+        self.header.extend_from_slice(&lat_q.to_le_bytes());
+        let key = CacheKey {
+            anchor,
+            target,
+            lat_q,
+            fingerprint,
+            bytes: arc.clone(),
+            route: fnv1a(&self.header) ^ fingerprint,
+        };
+        self.bytes = Some(arc);
+        key
+    }
+}
+
 /// Hit/miss counters. Embedded in the coordinator's `EngineStats` (shared
 /// across every engine replica of the pool) so the `stats` op surfaces
 /// them; the advisor sweep shares the same counters.
@@ -168,6 +231,13 @@ impl PredictionCache {
 
     fn shard_of(&self, key: &CacheKey) -> &Mutex<Shard> {
         &self.shards[(key.route % self.shards.len() as u64) as usize]
+    }
+
+    /// Counter-free lookup for the router's wire-layer fast path: a miss
+    /// there is not a real miss (the engine lane re-checks and counts),
+    /// so only the lane's `get` touches the hit/miss statistics for it.
+    pub fn peek(&self, key: &CacheKey) -> Option<(f64, Member)> {
+        self.shard_of(key).lock().unwrap().map.get(key).copied()
     }
 
     /// Look up a prediction, counting the outcome in `stats`.
@@ -382,5 +452,54 @@ mod tests {
             j.join().unwrap();
         }
         assert!(cache.len() <= cache.capacity());
+    }
+
+    #[test]
+    fn scratch_built_keys_match_the_owned_constructor() {
+        let p = profile(&[("Conv2D", 286.0), ("Relu", 26.5), ("A\u{1f}b", 1.0)]);
+        let owned = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        let mut scratch = CacheKeyScratch::default();
+        // BTreeMap iteration is already sorted/deduped — the contract the
+        // wire layer upholds via sort_dedup_pairs
+        let built = scratch.key(
+            Instance::G4dn,
+            Instance::P3,
+            42.5,
+            p.iter().map(|(k, v)| (k.as_str(), *v)),
+        );
+        assert_eq!(built, owned);
+        assert_eq!(built.route, owned.route);
+        // peek finds entries inserted under the owned key
+        let cache = PredictionCache::new(4, 64);
+        cache.insert(owned, (9.5, Member::Dnn));
+        assert_eq!(scratch_peek(&cache, &built), Some((9.5, Member::Dnn)));
+        drop(built);
+        // the scratch reuses its byte allocation once the key is dropped
+        let before = std::sync::Arc::as_ptr(scratch.bytes.as_ref().unwrap());
+        let again = scratch.key(
+            Instance::G4dn,
+            Instance::P3,
+            42.5,
+            p.iter().map(|(k, v)| (k.as_str(), *v)),
+        );
+        assert_eq!(std::sync::Arc::as_ptr(scratch.bytes.as_ref().unwrap()), before);
+        // ...and self-heals (fresh allocation) when a previous key is
+        // retained by the cache, instead of mutating shared bytes
+        cache.insert(again, (9.5, Member::Dnn));
+        let healed = scratch.key(
+            Instance::G4dn,
+            Instance::P2,
+            1.0,
+            p.iter().map(|(k, v)| (k.as_str(), *v)),
+        );
+        assert_ne!(
+            std::sync::Arc::as_ptr(scratch.bytes.as_ref().unwrap()),
+            before
+        );
+        assert_eq!(healed.target, Instance::P2);
+    }
+
+    fn scratch_peek(cache: &PredictionCache, key: &CacheKey) -> Option<(f64, Member)> {
+        cache.peek(key)
     }
 }

@@ -19,7 +19,7 @@ pub mod pareto;
 pub mod plan;
 pub mod sweep;
 
-pub use cache::{CacheKey, CacheStats, PredictionCache, ProfileFingerprint};
+pub use cache::{CacheKey, CacheKeyScratch, CacheStats, PredictionCache, ProfileFingerprint};
 pub use pareto::{dominates, pareto_frontier, pareto_frontier_naive};
 pub use plan::{cost_usd, hours, plan, Objective, PlanChoice, TrainingJob};
 pub use sweep::{rank_candidates, sweep, Candidate, EndpointProfiles, SweepRequest};

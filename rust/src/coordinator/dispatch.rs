@@ -171,6 +171,10 @@ pub struct EnginePool {
     /// Round-robin cursor for non-affine immediate jobs.
     rr: AtomicUsize,
     pub stats: Arc<EngineStats>,
+    /// The shared phase-1 prediction cache (the same `Arc` every lane
+    /// holds) — the router peeks it to answer warm `predict`s without an
+    /// engine round trip.
+    cache: Arc<PredictionCache>,
 }
 
 impl EnginePool {
@@ -190,8 +194,9 @@ impl EnginePool {
                 .with_context(|| format!("models: {}", model_dir.display()))?,
         );
         let stats = Arc::new(EngineStats::default());
+        let cache = Arc::new(PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY));
         let ctx = LaneCtx {
-            cache: Arc::new(PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY)),
+            cache: cache.clone(),
             scaling: Arc::new(ScalingTable::new()),
             stats: stats.clone(),
         };
@@ -224,6 +229,7 @@ impl EnginePool {
             advisor,
             rr: AtomicUsize::new(0),
             stats,
+            cache,
         };
         // wait for every replica to come up; on failure the pool drop
         // below shuts down and joins the lanes that did start
@@ -239,6 +245,11 @@ impl EnginePool {
     /// Number of predict lanes (the advisor lane is one more replica).
     pub fn predict_lanes(&self) -> usize {
         self.predict.len()
+    }
+
+    /// The shared phase-1 prediction cache (router fast-path peeks).
+    pub fn cache(&self) -> &Arc<PredictionCache> {
+        &self.cache
     }
 
     /// Deterministic (anchor, target) → predict-lane affinity, so
@@ -305,6 +316,7 @@ impl EnginePool {
             advisor,
             rr: AtomicUsize::new(0),
             stats: Arc::new(EngineStats::default()),
+            cache: Arc::new(PredictionCache::new(4, 1024)),
         }
     }
 }
@@ -371,21 +383,22 @@ mod tests {
         }
     }
 
-    /// Lane body that answers every job instantly, echoing its lane index.
+    /// Lane body that answers every job instantly, echoing its lane index
+    /// through the `latency_ms` field of a typed reply.
     fn echo_lane(idx: usize, rx: Receiver<Job>) {
         for job in rx {
             match job {
                 Job::Shutdown => return,
                 Job::Predict(_, reply) => {
-                    let _ = reply.send(Response::ok_obj(|o| {
-                        o.set("lane", crate::util::Json::Num(idx as f64));
-                    }));
+                    let _ = reply.send(Response::Latency {
+                        latency_ms: idx as f64,
+                    });
                 }
                 Job::BatchSize { reply, .. } | Job::PixelSize { reply, .. } => {
-                    let _ = reply.send(Response::ok_obj(|_| {}));
+                    let _ = reply.send(Response::Health);
                 }
                 Job::Recommend { reply, .. } | Job::Plan { reply, .. } => {
-                    let _ = reply.send(Response::ok_obj(|_| {}));
+                    let _ = reply.send(Response::Health);
                 }
             }
         }
@@ -405,8 +418,8 @@ mod tests {
                 let (tx, rx) = channel();
                 pool.submit(Job::Predict(predict_req(anchor, target), tx)).unwrap();
                 let resp = rx.recv().unwrap();
-                let Response::Ok(o) = resp else { panic!("err") };
-                lanes.push(o.req_f64("lane").unwrap() as usize);
+                let Response::Latency { latency_ms } = resp else { panic!("err") };
+                lanes.push(latency_ms as usize);
             }
             // every request for one pair hit the same lane...
             assert!(lanes.iter().all(|&l| l == lanes[0]), "{lanes:?}");
@@ -476,7 +489,7 @@ mod tests {
             | Job::PixelSize { reply, .. }
             | Job::Recommend { reply, .. }
             | Job::Plan { reply, .. } => {
-                let _ = reply.send(Response::ok_obj(|_| {}));
+                let _ = reply.send(Response::Health);
             }
             Job::Shutdown => {}
         }
@@ -535,7 +548,7 @@ mod tests {
         let resp = rx
             .recv_timeout(Duration::from_secs(5))
             .expect("predict blocked behind an in-flight sweep");
-        assert!(matches!(resp, Response::Ok(_)));
+        assert!(matches!(resp, Response::Latency { .. }));
         // the sweep is still in flight the whole time
         assert!(matches!(
             sweep_rx.try_recv(),
@@ -544,7 +557,7 @@ mod tests {
         gate_tx.send(()).unwrap();
         assert!(matches!(
             sweep_rx.recv_timeout(Duration::from_secs(5)).unwrap(),
-            Response::Ok(_)
+            Response::Health
         ));
     }
 
@@ -614,7 +627,7 @@ mod tests {
         drop(pool); // sends Shutdown behind the queued jobs and joins
         for rx in rxs {
             assert!(
-                matches!(rx.recv(), Ok(Response::Ok(_))),
+                matches!(rx.recv(), Ok(Response::Latency { .. })),
                 "a queued job was dropped during shutdown"
             );
         }

@@ -21,7 +21,6 @@ use crate::gpu::Instance;
 use crate::predictor::Profet;
 use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
-use crate::util::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -148,9 +147,7 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
             let resp = match profet.predict_batch_size(instance, batch, t_min, t_max) {
-                Ok(v) => Response::ok_obj(|o| {
-                    o.set("latency_ms", Json::Num(v));
-                }),
+                Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
             let _ = reply.send(resp);
@@ -164,9 +161,7 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
             let resp = match profet.predict_pixel_size(instance, pixels, t_min, t_max) {
-                Ok(v) => Response::ok_obj(|o| {
-                    o.set("latency_ms", Json::Num(v));
-                }),
+                Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
             let _ = reply.send(resp);
@@ -288,50 +283,29 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, profet: &Profet, ct
 }
 
 fn ok_prediction(latency_ms: f64, member: crate::predictor::Member) -> Response {
-    Response::ok_obj(|o| {
-        o.set("latency_ms", Json::Num(latency_ms));
-        o.set("member", Json::Str(member.name().into()));
-    })
-}
-
-fn candidate_json(c: &Candidate, on_frontier: bool) -> Json {
-    let mut o = Json::obj();
-    o.set("target", Json::Str(c.target.key().into()));
-    o.set("batch", Json::Num(c.batch as f64));
-    o.set("pixels", Json::Num(c.pixels as f64));
-    o.set("n_gpus", Json::Num(c.n_gpus as f64));
-    o.set("pricing", Json::Str(c.pricing.key().into()));
-    o.set("latency_ms", Json::Num(c.latency_ms));
-    o.set("imgs_per_s", Json::Num(c.imgs_per_s));
-    o.set("price_hr", Json::Num(c.price_hr));
-    o.set("cost_per_img_usd", Json::Num(c.cost_per_img_usd));
-    o.set("on_frontier", Json::Bool(on_frontier));
-    o
+    Response::Prediction { latency_ms, member }
 }
 
 /// Rank candidates (cost-efficiency first, then speed, then a stable tie
 /// key), tag Pareto-frontier membership — computed over the FULL candidate
-/// set, before any `top_k` truncation — and serialize. `top_k == 0` is the
-/// documented "return everything" sentinel (see the protocol op table).
+/// set, before any `top_k` truncation — and build the typed reply (the
+/// connection handler encodes it straight to its output buffer).
+/// `top_k == 0` is the documented "return everything" sentinel (see the
+/// protocol op table).
 fn recommend_response(cands: &[Candidate], top_k: usize) -> Response {
     let points: Vec<(f64, f64)> = cands.iter().map(Candidate::objectives).collect();
     let frontier: std::collections::BTreeSet<usize> =
         advisor::pareto_frontier(&points).into_iter().collect();
     let order = advisor::rank_candidates(cands);
     let take = if top_k == 0 { order.len() } else { top_k.min(order.len()) };
-    Response::ok_obj(|o| {
-        o.set(
-            "candidates",
-            Json::Arr(
-                order[..take]
-                    .iter()
-                    .map(|&i| candidate_json(&cands[i], frontier.contains(&i)))
-                    .collect(),
-            ),
-        );
-        o.set("n_candidates", Json::Num(cands.len() as f64));
-        o.set("frontier_size", Json::Num(frontier.len() as f64));
-    })
+    Response::Recommend {
+        candidates: order[..take]
+            .iter()
+            .map(|&i| (cands[i], frontier.contains(&i)))
+            .collect(),
+        n_candidates: cands.len(),
+        frontier_size: frontier.len(),
+    }
 }
 
 fn plan_response(cands: &[Candidate], choice: &PlanChoice) -> Response {
@@ -340,13 +314,13 @@ fn plan_response(cands: &[Candidate], choice: &PlanChoice) -> Response {
     let on_frontier = cands
         .iter()
         .all(|q| !advisor::dominates(q.objectives(), pt));
-    Response::ok_obj(|o| {
-        o.set("choice", candidate_json(&cands[choice.index], on_frontier));
-        o.set("hours", Json::Num(choice.hours));
-        o.set("cost_usd", Json::Num(choice.cost_usd));
-        o.set("epochs", Json::Num(choice.epochs));
-        o.set("n_considered", Json::Num(cands.len() as f64));
-    })
+    Response::Plan {
+        choice: (cands[choice.index], on_frontier),
+        hours: choice.hours,
+        cost_usd: choice.cost_usd,
+        epochs: choice.epochs,
+        n_considered: cands.len(),
+    }
 }
 
 #[cfg(test)]
@@ -380,19 +354,25 @@ mod tests {
             cand(256, 700.0, 3.0),
         ];
         let all = recommend_response(&cands, 0);
-        let Response::Ok(o) = all else { panic!("err response") };
-        assert_eq!(o.req_arr("candidates").unwrap().len(), 3);
-        assert_eq!(o.req_f64("n_candidates").unwrap() as usize, 3);
+        let Response::Recommend { candidates, n_candidates, .. } = all else {
+            panic!("err response")
+        };
+        assert_eq!(candidates.len(), 3);
+        assert_eq!(n_candidates, 3);
 
         let top2 = recommend_response(&cands, 2);
-        let Response::Ok(o) = top2 else { panic!("err response") };
-        assert_eq!(o.req_arr("candidates").unwrap().len(), 2);
+        let Response::Recommend { candidates, n_candidates, .. } = top2 else {
+            panic!("err response")
+        };
+        assert_eq!(candidates.len(), 2);
         // truncation must not shrink the full-set metadata
-        assert_eq!(o.req_f64("n_candidates").unwrap() as usize, 3);
+        assert_eq!(n_candidates, 3);
 
         // top_k beyond the candidate count clamps instead of panicking
         let top9 = recommend_response(&cands, 9);
-        let Response::Ok(o) = top9 else { panic!("err response") };
-        assert_eq!(o.req_arr("candidates").unwrap().len(), 3);
+        let Response::Recommend { candidates, .. } = top9 else {
+            panic!("err response")
+        };
+        assert_eq!(candidates.len(), 3);
     }
 }

@@ -7,7 +7,11 @@
 //! * [`server`] — accept loop, one lightweight thread per connection,
 //!   bounded by a connection budget; `stop()` gracefully drains in-flight
 //!   connections (joins their handlers after flushing responses);
-//! * [`router`] — request parsing/validation and dispatch; full lane
+//! * [`router`] — request parsing/validation and dispatch over the
+//!   zero-allocation streaming wire layer (borrowed decode, typed
+//!   responses encoded straight into per-connection buffers; warm
+//!   `predict`s answered from the shared prediction cache without an
+//!   engine round trip — see `protocol.rs` §Wire path); full lane
 //!   queues answer with a structured `overloaded` error (backpressure);
 //! * [`dispatch`] — the engine replica pool: N predict lanes + one
 //!   advisor lane, each replica owning its own non-`Send` PJRT
@@ -31,6 +35,9 @@ mod router;
 mod server;
 
 pub use dispatch::{EnginePool, EngineStats, Job, PoolOptions, SubmitError};
-pub use protocol::{ParseError, PredictRequest, Request, Response};
-pub use router::route;
+pub use protocol::{
+    parse_line, ParseError, ParsedLine, PredictRequest, PredictView, Request, Response,
+    WireScratch,
+};
+pub use router::{respond, route, ConnScratch};
 pub use server::{serve, serve_with, ServeOptions, ServerHandle, MAX_LINE_BYTES};

@@ -37,10 +37,33 @@
 //! Under load shedding the service answers `kind:"overloaded"` (full
 //! engine-lane queue, or a connection past the server's budget) — the
 //! request was NOT executed and should be retried with backoff.
+//!
+//! # Wire path (DOM-free hot loop)
+//!
+//! Serving traffic never touches the DOM [`Json`] tree. Requests are
+//! decoded straight off the line by [`parse_line`] over the streaming
+//! scanner in [`crate::util::json_stream`]: field names and profile keys
+//! are borrowed `&str` slices of the line (escaped ones cow'd into a
+//! reusable per-connection scratch), so a warm parse allocates nothing.
+//! `predict` additionally stays *borrowed* ([`PredictView`]) so the
+//! router can answer cache hits without materializing the profile map at
+//! all. Responses are typed [`Response`] variants encoded directly into
+//! a reusable output buffer by [`Response::encode_line`] — no
+//! intermediate `Json` values or `String`s, floats rendered by the
+//! shared shortest-round-trip formatter.
+//!
+//! The DOM `Json` remains authoritative on cold paths only: model
+//! persistence, `artifacts/meta.json`, client-side helpers
+//! ([`Request::to_json`]), and as the reference decoder
+//! ([`Request::parse_dom`]) that the differential fuzz tests lock the
+//! streaming decoder against — both accept the same grammar and produce
+//! the same errors, byte offsets included.
 
-use crate::advisor::{EndpointProfiles, Objective, SweepRequest, TrainingJob};
+use crate::advisor::{Candidate, EndpointProfiles, Objective, SweepRequest, TrainingJob};
 use crate::gpu::Instance;
+use crate::predictor::Member;
 use crate::sim::workload::{BATCHES, PIXELS};
+use crate::util::json_stream::{JsonWriter, LineScratch, RawElem, RawVal};
 use crate::util::Json;
 use anyhow::anyhow;
 use std::collections::BTreeMap;
@@ -119,7 +142,22 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Request {
+    /// Parse one request line via the streaming (DOM-free) decoder. A
+    /// fresh scratch per call — servers hold a per-connection
+    /// [`WireScratch`] and use [`parse_line`] directly instead.
     pub fn parse(line: &str) -> Result<Request, ParseError> {
+        let mut scratch = WireScratch::default();
+        match parse_line(line, &mut scratch)? {
+            ParsedLine::Req(req) => Ok(req),
+            ParsedLine::Predict(view) => Ok(Request::Predict(view.materialize())),
+        }
+    }
+
+    /// Reference decoder over the DOM [`Json`] tree. Kept for the
+    /// differential wire tests (`tests/wire_differential.rs`), which
+    /// assert `parse` and `parse_dom` agree — same requests, same error
+    /// kinds and messages — on every example line and mutations thereof.
+    pub fn parse_dom(line: &str) -> Result<Request, ParseError> {
         let j = Json::parse(line).map_err(ParseError::Malformed)?;
         let op = j.req_str("op").map_err(ParseError::Malformed)?;
         match parse_fields(op, &j) {
@@ -207,6 +245,420 @@ impl Request {
         o
     }
 }
+
+// ---------------------------------------------------------------------------
+// Streaming (DOM-free) request decoding — the wire hot path
+// ---------------------------------------------------------------------------
+
+/// Reusable per-connection decode state (index vectors + unescape
+/// buffer). Warm parses allocate nothing.
+#[derive(Default)]
+pub struct WireScratch {
+    line: LineScratch,
+}
+
+/// Result of [`parse_line`]: every op except phase-1 `predict` is
+/// materialized into an owned [`Request`]; `predict` stays borrowed so
+/// the cache fast path can skip materialization entirely.
+pub enum ParsedLine<'s> {
+    Req(Request),
+    Predict(PredictView<'s>),
+}
+
+/// A fully validated `predict` request borrowing the scanned line: the
+/// profile is a sorted, deduplicated span list over the scratch — no
+/// `BTreeMap`, no key `String`s. [`Self::materialize`] builds the owned
+/// [`PredictRequest`] for the engine handoff (cache misses only).
+pub struct PredictView<'s> {
+    pub anchor: Instance,
+    pub target: Instance,
+    pub anchor_latency_ms: f64,
+    scratch: &'s LineScratch,
+    line: &'s str,
+    start: u32,
+    len: u32,
+}
+
+impl<'s> PredictView<'s> {
+    /// Sorted, deduplicated `(op, ms)` pairs — the exact order a
+    /// `BTreeMap<String, f64>` iterates, so cache keys built from this
+    /// iterator equal keys built from the materialized profile.
+    pub fn pairs(&self) -> impl Iterator<Item = (&'s str, f64)> + '_ {
+        self.scratch
+            .pairs(self.start, self.len)
+            .iter()
+            .map(move |p| (self.scratch.str_of(self.line, p.key), p.val))
+    }
+
+    pub fn materialize(&self) -> PredictRequest {
+        PredictRequest {
+            anchor: self.anchor,
+            target: self.target,
+            anchor_latency_ms: self.anchor_latency_ms,
+            profile: self.pairs().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+}
+
+/// Decode one request line with the streaming scanner. Grammar, field
+/// validation order, and error text all mirror [`Request::parse_dom`]
+/// (the differential fuzz test enforces it).
+pub fn parse_line<'s>(
+    line: &'s str,
+    scratch: &'s mut WireScratch,
+) -> Result<ParsedLine<'s>, ParseError> {
+    let ls = &mut scratch.line;
+    ls.scan(line).map_err(ParseError::Malformed)?;
+    let op = match ls.field(line, "op") {
+        Some(RawVal::Str(sp)) => ls.str_of(line, sp),
+        _ => {
+            return Err(ParseError::Malformed(anyhow!(
+                "missing/invalid string field `op`"
+            )))
+        }
+    };
+    let op = match op {
+        "health" => Op::Health,
+        "stats" => Op::Stats,
+        "instances" => Op::Instances,
+        "predict" => Op::Predict,
+        "predict_batch_size" => Op::BatchSize,
+        "predict_pixel_size" => Op::PixelSize,
+        "recommend" => Op::Recommend,
+        "plan" => Op::Plan,
+        other => return Err(ParseError::UnknownOp(other.to_string())),
+    };
+    wire_request(op, line, ls).map_err(ParseError::Malformed)
+}
+
+#[derive(Clone, Copy)]
+enum Op {
+    Health,
+    Stats,
+    Instances,
+    Predict,
+    BatchSize,
+    PixelSize,
+    Recommend,
+    Plan,
+}
+
+fn wire_request<'s>(
+    op: Op,
+    line: &'s str,
+    ls: &'s mut LineScratch,
+) -> anyhow::Result<ParsedLine<'s>> {
+    Ok(ParsedLine::Req(match op {
+        Op::Health => Request::Health,
+        Op::Stats => Request::Stats,
+        Op::Instances => Request::Instances,
+        Op::Predict => {
+            let anchor = sraw_req_instance(ls, line, "anchor")?;
+            let target = sraw_req_instance(ls, line, "target")?;
+            let anchor_latency_ms = sraw_req_positive(ls, line, "anchor_latency_ms")?;
+            let (start, len) = sraw_profile_range(ls, line, "profile")?;
+            let ls: &'s LineScratch = ls;
+            return Ok(ParsedLine::Predict(PredictView {
+                anchor,
+                target,
+                anchor_latency_ms,
+                scratch: ls,
+                line,
+                start,
+                len,
+            }));
+        }
+        Op::BatchSize => Request::PredictBatchSize {
+            instance: sraw_req_instance(ls, line, "instance")?,
+            batch: match ls.field(line, "batch") {
+                None => anyhow::bail!("missing `batch`"),
+                Some(v) => sraw_as_usize_strict(&v, "`batch`")?,
+            },
+            t_min: sraw_req_positive(ls, line, "t_min")?,
+            t_max: sraw_req_positive(ls, line, "t_max")?,
+        },
+        Op::PixelSize => Request::PredictPixelSize {
+            instance: sraw_req_instance(ls, line, "instance")?,
+            pixels: match ls.field(line, "pixels") {
+                None => anyhow::bail!("missing `pixels`"),
+                Some(v) => sraw_as_usize_strict(&v, "`pixels`")?,
+            },
+            t_min: sraw_req_positive(ls, line, "t_min")?,
+            t_max: sraw_req_positive(ls, line, "t_max")?,
+        },
+        Op::Recommend => Request::Recommend {
+            query: sraw_query(ls, line)?,
+            top_k: match ls.field(line, "top_k") {
+                None => 0,
+                Some(v) => sraw_as_usize_strict(&v, "`top_k`")?,
+            },
+        },
+        Op::Plan => sraw_plan(ls, line)?,
+    }))
+}
+
+fn sraw_req_str<'a>(ls: &'a LineScratch, line: &'a str, key: &str) -> anyhow::Result<&'a str> {
+    match ls.field(line, key) {
+        Some(RawVal::Str(sp)) => Ok(ls.str_of(line, sp)),
+        _ => Err(anyhow!("missing/invalid string field `{key}`")),
+    }
+}
+
+fn sraw_req_f64(ls: &LineScratch, line: &str, key: &str) -> anyhow::Result<f64> {
+    match ls.field(line, key) {
+        Some(RawVal::Num(n)) => Ok(n),
+        _ => Err(anyhow!("missing/invalid number field `{key}`")),
+    }
+}
+
+/// Mirror of [`req_positive`] for the streaming decoder.
+fn sraw_req_positive(ls: &LineScratch, line: &str, key: &str) -> anyhow::Result<f64> {
+    let v = sraw_req_f64(ls, line, key)?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "`{key}` must be positive and finite");
+    Ok(v)
+}
+
+fn sraw_req_instance(ls: &LineScratch, line: &str, key: &str) -> anyhow::Result<Instance> {
+    Instance::from_key(sraw_req_str(ls, line, key)?)
+        .ok_or_else(|| anyhow!("unknown instance in `{key}`"))
+}
+
+/// Mirror of [`as_usize_strict`] over a scanned value.
+fn sraw_usize_strict(n: Option<f64>, what: &str) -> anyhow::Result<usize> {
+    let n = n.ok_or_else(|| anyhow!("non-number {what}"))?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64,
+        "{what} must be a non-negative integer"
+    );
+    Ok(n as usize)
+}
+
+fn sraw_as_usize_strict(v: &RawVal, what: &str) -> anyhow::Result<usize> {
+    sraw_usize_strict(
+        match v {
+            RawVal::Num(n) => Some(*n),
+            _ => None,
+        },
+        what,
+    )
+}
+
+/// Sort + dedupe + validate a profile object field in place; returns the
+/// compacted `(start, len)` pair range. Validation iterates in sorted
+/// order — the same order the DOM's `BTreeMap` walk reports errors in.
+fn sraw_profile_range(
+    ls: &mut LineScratch,
+    line: &str,
+    key: &str,
+) -> anyhow::Result<(u32, u32)> {
+    let (start, len) = match ls.field(line, key) {
+        Some(RawVal::Obj { start, len }) => (start, len),
+        _ => return Err(anyhow!("missing profile object `{key}`")),
+    };
+    let len = ls.sort_dedup_pairs(line, start, len);
+    for p in ls.pairs(start, len) {
+        anyhow::ensure!(!p.bad, "non-number profile value in `{key}`");
+        anyhow::ensure!(p.val.is_finite(), "non-finite profile value in `{key}`");
+    }
+    Ok((start, len))
+}
+
+fn sraw_profile_map(
+    ls: &mut LineScratch,
+    line: &str,
+    key: &str,
+) -> anyhow::Result<BTreeMap<String, f64>> {
+    let (start, len) = sraw_profile_range(ls, line, key)?;
+    Ok(ls
+        .pairs(start, len)
+        .iter()
+        .map(|p| (ls.str_of(line, p.key).to_string(), p.val))
+        .collect())
+}
+
+fn sraw_usize_list(
+    ls: &LineScratch,
+    line: &str,
+    key: &str,
+    max_entries: usize,
+    min_value: usize,
+    max_value: usize,
+) -> anyhow::Result<Vec<usize>> {
+    match ls.field(line, key) {
+        None => Ok(Vec::new()),
+        Some(RawVal::Arr { start, len }) => {
+            anyhow::ensure!(
+                len as usize <= max_entries,
+                "`{key}` has {len} entries (max {max_entries})"
+            );
+            ls.elems(start, len)
+                .iter()
+                .map(|e| {
+                    let n = sraw_usize_strict(
+                        match e {
+                            RawElem::Num(n) => Some(*n),
+                            _ => None,
+                        },
+                        &format!("entry in `{key}`"),
+                    )?;
+                    anyhow::ensure!(
+                        (min_value..=max_value).contains(&n),
+                        "entry {n} in `{key}` outside [{min_value}, {max_value}]"
+                    );
+                    Ok(n)
+                })
+                .collect()
+        }
+        Some(_) => Err(anyhow!("`{key}` must be an array of numbers")),
+    }
+}
+
+fn sraw_targets(ls: &LineScratch, line: &str) -> anyhow::Result<Vec<Instance>> {
+    match ls.field(line, "targets") {
+        None => Ok(Vec::new()),
+        Some(RawVal::Arr { start, len }) => {
+            anyhow::ensure!(
+                len as usize <= MAX_TARGET_ENTRIES,
+                "`targets` has {len} entries (max {MAX_TARGET_ENTRIES})"
+            );
+            ls.elems(start, len)
+                .iter()
+                .map(|e| {
+                    match e {
+                        RawElem::Str(sp) => Instance::from_key(ls.str_of(line, *sp)),
+                        _ => None,
+                    }
+                    .ok_or_else(|| anyhow!("unknown instance in `targets`"))
+                })
+                .collect()
+        }
+        Some(_) => anyhow::bail!("`targets` must be an array of instance keys"),
+    }
+}
+
+fn sraw_endpoints(
+    ls: &mut LineScratch,
+    line: &str,
+    profile_min_key: &str,
+    lat_min_key: &str,
+    profile_max_key: &str,
+    lat_max_key: &str,
+) -> anyhow::Result<EndpointProfiles> {
+    Ok(EndpointProfiles {
+        profile_min: sraw_profile_map(ls, line, profile_min_key)?,
+        lat_min: sraw_req_positive(ls, line, lat_min_key)?,
+        profile_max: sraw_profile_map(ls, line, profile_max_key)?,
+        lat_max: sraw_req_positive(ls, line, lat_max_key)?,
+    })
+}
+
+/// Streaming mirror of [`parse_query`] — same field order, same checks,
+/// same messages.
+fn sraw_query(ls: &mut LineScratch, line: &str) -> anyhow::Result<SweepRequest> {
+    let targets = sraw_targets(ls, line)?;
+    let pixel_keys = [
+        "profile_pmin",
+        "anchor_lat_pmin",
+        "profile_pmax",
+        "anchor_lat_pmax",
+    ];
+    let pixel = if pixel_keys.iter().any(|k| ls.field(line, k).is_some()) {
+        Some(sraw_endpoints(
+            ls,
+            line,
+            "profile_pmin",
+            "anchor_lat_pmin",
+            "profile_pmax",
+            "anchor_lat_pmax",
+        )?)
+    } else {
+        None
+    };
+    let (bmin, bmax) = (BATCHES[0], BATCHES[4]);
+    let (pmin, pmax) = (PIXELS[0], PIXELS[4]);
+    let pixels = match ls.field(line, "pixels") {
+        None => anyhow::bail!("missing `pixels`"),
+        Some(v) => sraw_as_usize_strict(&v, "`pixels`")?,
+    };
+    anyhow::ensure!(
+        (pmin..=pmax).contains(&pixels),
+        "`pixels` outside the modeled range [{pmin}, {pmax}]"
+    );
+    let pixel_sizes = sraw_usize_list(ls, line, "pixel_sizes", MAX_AXIS_ENTRIES, pmin, pmax)?;
+    if pixel.is_none() {
+        anyhow::ensure!(
+            pixel_sizes.iter().all(|&p| p == pixels),
+            "`pixel_sizes` beyond the profiled `pixels` require the pixel-endpoint \
+             fields (profile_pmin/anchor_lat_pmin/profile_pmax/anchor_lat_pmax)"
+        );
+    }
+    let batches = sraw_usize_list(ls, line, "batches", MAX_AXIS_ENTRIES, bmin, bmax)?;
+    let gpu_counts = sraw_usize_list(ls, line, "gpu_counts", MAX_GPU_ENTRIES, 1, MAX_GPUS)?;
+    let eff = |n: usize, default: usize| if n == 0 { default } else { n };
+    let grid = eff(targets.len(), Instance::ALL.len())
+        * eff(batches.len(), 5)
+        * eff(pixel_sizes.len(), 1)
+        * eff(gpu_counts.len(), 1)
+        * 2;
+    anyhow::ensure!(
+        grid <= MAX_GRID_CANDIDATES,
+        "candidate grid of {grid} exceeds {MAX_GRID_CANDIDATES} — shrink an axis"
+    );
+    Ok(SweepRequest {
+        anchor: sraw_req_instance(ls, line, "anchor")?,
+        pixels,
+        batch: sraw_endpoints(
+            ls,
+            line,
+            "profile_bmin",
+            "anchor_lat_bmin",
+            "profile_bmax",
+            "anchor_lat_bmax",
+        )?,
+        pixel,
+        targets,
+        batches,
+        pixel_sizes,
+        gpu_counts,
+        include_spot: match ls.field(line, "include_spot") {
+            None => false,
+            Some(RawVal::Bool(b)) => b,
+            Some(_) => anyhow::bail!("`include_spot` must be a boolean"),
+        },
+    })
+}
+
+fn sraw_plan(ls: &mut LineScratch, line: &str) -> anyhow::Result<Request> {
+    let query = sraw_query(ls, line)?;
+    let job = TrainingJob {
+        dataset_images: sraw_req_positive(ls, line, "dataset_images")?,
+        epochs: match ls.field(line, "epochs") {
+            None => 1.0,
+            Some(_) => sraw_req_positive(ls, line, "epochs")?,
+        },
+    };
+    let objective = match sraw_req_str(ls, line, "objective")? {
+        "cheapest" => Objective::CheapestUnderDeadline {
+            deadline_hours: sraw_req_positive(ls, line, "deadline_hours")?,
+        },
+        "fastest" => Objective::FastestUnderBudget {
+            budget_usd: sraw_req_positive(ls, line, "budget_usd")?,
+        },
+        "max_epochs" => Objective::MaxEpochsUnderDeadline {
+            deadline_hours: sraw_req_positive(ls, line, "deadline_hours")?,
+        },
+        other => anyhow::bail!("unknown objective `{other}` (expected cheapest|fastest|max_epochs)"),
+    };
+    Ok(Request::Plan {
+        query,
+        job,
+        objective,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// DOM reference decoding (cold paths + differential tests)
+// ---------------------------------------------------------------------------
 
 /// Field parsing: the single known-op list. `Ok(None)` means the op is
 /// not recognized (surfaced as `unknown_op`); field errors are plain
@@ -521,10 +973,45 @@ fn query_json(q: &SweepRequest, o: &mut Json) {
     o.set("include_spot", Json::Bool(q.include_spot));
 }
 
-/// Service response.
+/// Service response — typed variants, encoded straight to the output
+/// buffer (no DOM). Keys are emitted in sorted order, matching what the
+/// old `BTreeMap`-backed serializer produced byte for byte.
 #[derive(Debug, Clone)]
 pub enum Response {
-    Ok(Json),
+    /// `health` reply.
+    Health,
+    /// `stats` counters snapshot.
+    Stats {
+        requests: u64,
+        artifact_batches: u64,
+        avg_batch_fill: f64,
+        overloaded: u64,
+        predict_lanes: usize,
+        cache_hits: u64,
+        cache_misses: u64,
+    },
+    /// `instances` catalogue (payload derived from [`Instance::ALL`] at
+    /// encode time — nothing to allocate or carry).
+    Instances,
+    /// Phase-1 `predict` reply.
+    Prediction { latency_ms: f64, member: Member },
+    /// Interpolation (`predict_batch_size`/`predict_pixel_size`) reply.
+    Latency { latency_ms: f64 },
+    /// `recommend` reply: ranked (candidate, on_frontier) rows plus
+    /// full-set metadata.
+    Recommend {
+        candidates: Vec<(Candidate, bool)>,
+        n_candidates: usize,
+        frontier_size: usize,
+    },
+    /// `plan` reply.
+    Plan {
+        choice: (Candidate, bool),
+        hours: f64,
+        cost_usd: f64,
+        epochs: f64,
+        n_considered: usize,
+    },
     /// Generic error (engine/model failures).
     Err(String),
     /// Structured error with a stable machine-readable kind tag.
@@ -532,13 +1019,6 @@ pub enum Response {
 }
 
 impl Response {
-    pub fn ok_obj(f: impl FnOnce(&mut Json)) -> Response {
-        let mut o = Json::obj();
-        o.set("ok", Json::Bool(true));
-        f(&mut o);
-        Response::Ok(o)
-    }
-
     pub fn err_kind(kind: &'static str, msg: impl Into<String>) -> Response {
         Response::ErrKind {
             kind,
@@ -546,24 +1026,144 @@ impl Response {
         }
     }
 
-    pub fn to_line(&self) -> String {
+    /// Encode as one newline-terminated wire line into a reusable buffer
+    /// (cleared first; capacity persists — a warm encode performs zero
+    /// heap allocations). The buffer is handed straight to the socket
+    /// write.
+    pub fn encode_line(&self, out: &mut Vec<u8>) {
+        out.clear();
+        self.encode(out);
+        out.push(b'\n');
+    }
+
+    /// Append the JSON body (no newline).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let mut w = JsonWriter::new(out);
         match self {
-            Response::Ok(j) => j.to_string(),
+            Response::Health => {
+                w.begin_obj();
+                w.key("ok").bool_(true);
+                w.key("status").str_("healthy");
+                w.end_obj();
+            }
+            Response::Stats {
+                requests,
+                artifact_batches,
+                avg_batch_fill,
+                overloaded,
+                predict_lanes,
+                cache_hits,
+                cache_misses,
+            } => {
+                w.begin_obj();
+                w.key("artifact_batches").num(*artifact_batches as f64);
+                w.key("avg_batch_fill").num(*avg_batch_fill);
+                w.key("cache_hits").num(*cache_hits as f64);
+                w.key("cache_misses").num(*cache_misses as f64);
+                w.key("ok").bool_(true);
+                w.key("overloaded").num(*overloaded as f64);
+                w.key("predict_lanes").num(*predict_lanes as f64);
+                w.key("requests").num(*requests as f64);
+                w.end_obj();
+            }
+            Response::Instances => {
+                w.begin_obj();
+                w.key("instances").begin_arr();
+                for i in Instance::ALL.iter().copied() {
+                    w.begin_obj();
+                    w.key("gpu").str_(i.spec().gpu_model);
+                    w.key("key").str_(i.key());
+                    w.key("price_hr").num(i.spec().price_hr);
+                    w.end_obj();
+                }
+                w.end_arr();
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::Prediction { latency_ms, member } => {
+                w.begin_obj();
+                w.key("latency_ms").num(*latency_ms);
+                w.key("member").str_(member.name());
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::Latency { latency_ms } => {
+                w.begin_obj();
+                w.key("latency_ms").num(*latency_ms);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::Recommend {
+                candidates,
+                n_candidates,
+                frontier_size,
+            } => {
+                w.begin_obj();
+                w.key("candidates").begin_arr();
+                for (c, on_frontier) in candidates {
+                    encode_candidate(&mut w, c, *on_frontier);
+                }
+                w.end_arr();
+                w.key("frontier_size").num(*frontier_size as f64);
+                w.key("n_candidates").num(*n_candidates as f64);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::Plan {
+                choice,
+                hours,
+                cost_usd,
+                epochs,
+                n_considered,
+            } => {
+                w.begin_obj();
+                w.key("choice");
+                encode_candidate(&mut w, &choice.0, choice.1);
+                w.key("cost_usd").num(*cost_usd);
+                w.key("epochs").num(*epochs);
+                w.key("hours").num(*hours);
+                w.key("n_considered").num(*n_considered as f64);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
             Response::Err(msg) => {
-                let mut o = Json::obj();
-                o.set("ok", Json::Bool(false));
-                o.set("error", Json::Str(msg.clone()));
-                o.to_string()
+                w.begin_obj();
+                w.key("error").str_(msg);
+                w.key("ok").bool_(false);
+                w.end_obj();
             }
             Response::ErrKind { kind, msg } => {
-                let mut o = Json::obj();
-                o.set("ok", Json::Bool(false));
-                o.set("kind", Json::Str((*kind).into()));
-                o.set("error", Json::Str(msg.clone()));
-                o.to_string()
+                w.begin_obj();
+                w.key("error").str_(msg);
+                w.key("kind").str_(kind);
+                w.key("ok").bool_(false);
+                w.end_obj();
             }
         }
     }
+
+    /// One line as an owned `String` (cold paths/tests; the serving loop
+    /// uses [`Self::encode_line`] into a reused buffer instead).
+    pub fn to_line(&self) -> String {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        String::from_utf8(out).expect("encoder emits UTF-8")
+    }
+}
+
+fn encode_candidate(w: &mut JsonWriter, c: &Candidate, on_frontier: bool) {
+    w.begin_obj();
+    w.key("batch").num(c.batch as f64);
+    w.key("cost_per_img_usd").num(c.cost_per_img_usd);
+    w.key("imgs_per_s").num(c.imgs_per_s);
+    w.key("latency_ms").num(c.latency_ms);
+    w.key("n_gpus").num(c.n_gpus as f64);
+    w.key("on_frontier").bool_(on_frontier);
+    w.key("pixels").num(c.pixels as f64);
+    w.key("price_hr").num(c.price_hr);
+    w.key("pricing").str_(c.pricing.key());
+    w.key("target").str_(c.target.key());
+    w.end_obj();
 }
 
 #[cfg(test)]
@@ -603,6 +1203,9 @@ mod tests {
         let line = req.to_json().to_string();
         let back = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
         assert_eq!(&back, req, "{line}");
+        // the DOM reference decoder agrees
+        let dom = Request::parse_dom(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(&dom, req, "{line}");
     }
 
     #[test]
@@ -735,6 +1338,9 @@ mod tests {
                 matches!(err, ParseError::Malformed(_)),
                 "expected Malformed for {line}, got {err:?}"
             );
+            // the streaming decoder reports the DOM decoder's exact error
+            let dom = Request::parse_dom(line).unwrap_err();
+            assert_eq!(err.to_string(), dom.to_string(), "{line}");
         }
         // grid axes are length-capped (sweep-amplification guard)
         let big = vec!["16"; MAX_AXIS_ENTRIES + 1].join(",");
@@ -760,9 +1366,7 @@ mod tests {
 
     #[test]
     fn response_lines() {
-        let r = Response::ok_obj(|o| {
-            o.set("latency_ms", crate::util::Json::Num(12.5));
-        });
+        let r = Response::Latency { latency_ms: 12.5 };
         assert!(r.to_line().contains("\"ok\":true"));
         let e = Response::Err("boom".into());
         assert!(e.to_line().contains("\"ok\":false"));
@@ -770,5 +1374,230 @@ mod tests {
         let line = k.to_line();
         assert!(line.contains("\"ok\":false"));
         assert!(line.contains("\"kind\":\"unknown_op\""));
+        // encode_line clears, appends a newline, and matches to_line
+        let mut buf = vec![1, 2, 3];
+        k.encode_line(&mut buf);
+        assert_eq!(buf, format!("{}\n", k.to_line()).into_bytes());
+    }
+
+    fn sample_candidate(i: usize) -> Candidate {
+        Candidate {
+            target: if i % 2 == 0 { Instance::P3 } else { Instance::G4dn },
+            batch: 16 << (i % 3),
+            pixels: 64,
+            n_gpus: 1 + i % 4,
+            pricing: if i % 2 == 0 {
+                crate::sim::cost_model::Pricing::OnDemand
+            } else {
+                crate::sim::cost_model::Pricing::Spot
+            },
+            latency_ms: 100.5 + i as f64 * 3.25,
+            imgs_per_s: 160.0 / (1.0 + i as f64),
+            price_hr: 3.06 + i as f64 * 0.125,
+            cost_per_img_usd: 5.3e-6 * (1.0 + i as f64),
+        }
+    }
+
+    fn dom_candidate(c: &Candidate, on_frontier: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("target", Json::Str(c.target.key().into()));
+        o.set("batch", Json::Num(c.batch as f64));
+        o.set("pixels", Json::Num(c.pixels as f64));
+        o.set("n_gpus", Json::Num(c.n_gpus as f64));
+        o.set("pricing", Json::Str(c.pricing.key().into()));
+        o.set("latency_ms", Json::Num(c.latency_ms));
+        o.set("imgs_per_s", Json::Num(c.imgs_per_s));
+        o.set("price_hr", Json::Num(c.price_hr));
+        o.set("cost_per_img_usd", Json::Num(c.cost_per_img_usd));
+        o.set("on_frontier", Json::Bool(on_frontier));
+        o
+    }
+
+    /// The acceptance bar for the encoder swap: for every protocol
+    /// variant, the streaming encoder's bytes parse (via the DOM parser)
+    /// to exactly the `Json` value the old DOM-built path produced — and
+    /// since both sides share one float formatter and sorted key order,
+    /// the bytes themselves match too.
+    #[test]
+    fn streaming_responses_equal_the_old_dom_built_values() {
+        use crate::predictor::Member;
+        let cands = vec![(sample_candidate(0), true), (sample_candidate(1), false)];
+        let cases: Vec<(Response, Json)> = vec![
+            (Response::Health, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("status", Json::Str("healthy".into()));
+                o
+            }),
+            (
+                Response::Stats {
+                    requests: 17,
+                    artifact_batches: 3,
+                    avg_batch_fill: 2.5,
+                    overloaded: 1,
+                    predict_lanes: 4,
+                    cache_hits: 9,
+                    cache_misses: 8,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("requests", Json::Num(17.0));
+                    o.set("artifact_batches", Json::Num(3.0));
+                    o.set("avg_batch_fill", Json::Num(2.5));
+                    o.set("overloaded", Json::Num(1.0));
+                    o.set("predict_lanes", Json::Num(4.0));
+                    o.set("cache_hits", Json::Num(9.0));
+                    o.set("cache_misses", Json::Num(8.0));
+                    o
+                },
+            ),
+            (Response::Instances, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set(
+                    "instances",
+                    Json::Arr(
+                        Instance::ALL
+                            .iter()
+                            .map(|i| {
+                                let mut e = Json::obj();
+                                e.set("key", Json::Str(i.key().into()));
+                                e.set("gpu", Json::Str(i.spec().gpu_model.into()));
+                                e.set("price_hr", Json::Num(i.spec().price_hr));
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            }),
+            (
+                Response::Prediction {
+                    latency_ms: 123.456,
+                    member: Member::Forest,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("latency_ms", Json::Num(123.456));
+                    o.set("member", Json::Str("RandomForest".into()));
+                    o
+                },
+            ),
+            (Response::Latency { latency_ms: 42.125 }, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("latency_ms", Json::Num(42.125));
+                o
+            }),
+            (
+                Response::Recommend {
+                    candidates: cands.clone(),
+                    n_candidates: 60,
+                    frontier_size: 7,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set(
+                        "candidates",
+                        Json::Arr(cands.iter().map(|(c, f)| dom_candidate(c, *f)).collect()),
+                    );
+                    o.set("n_candidates", Json::Num(60.0));
+                    o.set("frontier_size", Json::Num(7.0));
+                    o
+                },
+            ),
+            (
+                Response::Plan {
+                    choice: (sample_candidate(2), true),
+                    hours: 3.75,
+                    cost_usd: 11.5,
+                    epochs: 10.0,
+                    n_considered: 60,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("choice", dom_candidate(&sample_candidate(2), true));
+                    o.set("hours", Json::Num(3.75));
+                    o.set("cost_usd", Json::Num(11.5));
+                    o.set("epochs", Json::Num(10.0));
+                    o.set("n_considered", Json::Num(60.0));
+                    o
+                },
+            ),
+            (Response::Err("boom \"quoted\"\n".into()), {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(false));
+                o.set("error", Json::Str("boom \"quoted\"\n".into()));
+                o
+            }),
+            (
+                Response::err_kind("overloaded", "engine queue is full — shed load and retry"),
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(false));
+                    o.set("kind", Json::Str("overloaded".into()));
+                    o.set(
+                        "error",
+                        Json::Str("engine queue is full — shed load and retry".into()),
+                    );
+                    o
+                },
+            ),
+        ];
+        for (resp, expected) in cases {
+            let line = resp.to_line();
+            let parsed = Json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(parsed, expected, "{line}");
+            assert_eq!(line, expected.to_string(), "byte-level divergence");
+        }
+    }
+
+    /// Every wire example in this module decodes identically through the
+    /// streaming and DOM parsers (the heavy mutation fuzz lives in
+    /// `tests/wire_differential.rs`).
+    #[test]
+    fn streaming_and_dom_decoders_agree_on_examples() {
+        let mut lines: Vec<String> = vec![
+            r#"{"op":"health"}"#.into(),
+            r#"{"op":"stats"}"#.into(),
+            r#"{"op":"instances"}"#.into(),
+            r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":42.5,"profile":{"Conv2D":286,"Relu":26}}"#.into(),
+            // escaped field + profile keys, duplicate keys, odd spacing
+            "{\"\\u006fp\":\"predict\",\"anchor\":\"g4dn\",\"target\":\"p3\",\"anchor_latency_ms\":1.5,\"profile\":{\"a\\tb\":1,\"a\\tb\":2,\"B\":3}}".into(),
+            " { \"op\" : \"health\" } ".into(),
+            r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.5}"#.into(),
+            r#"{"op":"predict_pixel_size","instance":"ac1","pixels":128,"t_min":10.25,"t_max":90.75}"#.into(),
+        ];
+        // roundtrip corpus: every variant's canonical serialization
+        lines.push(
+            Request::Recommend {
+                query: sample_query(true),
+                top_k: 8,
+            }
+            .to_json()
+            .to_string(),
+        );
+        lines.push(
+            Request::Plan {
+                query: sample_query(false),
+                job: TrainingJob {
+                    dataset_images: 50_000.0,
+                    epochs: 10.0,
+                },
+                objective: Objective::CheapestUnderDeadline { deadline_hours: 4.5 },
+            }
+            .to_json()
+            .to_string(),
+        );
+        for line in &lines {
+            match (Request::parse(line), Request::parse_dom(line)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{line}"),
+                (a, b) => panic!("decoder divergence on {line}: {a:?} vs {b:?}"),
+            }
+        }
     }
 }

@@ -1,12 +1,31 @@
-//! Request router: parses a protocol line, answers cheap queries inline,
-//! and forwards prediction/advisor work to the [`EnginePool`].
+//! Request router: parses a protocol line straight off the wire (no DOM),
+//! answers cheap queries inline, serves warm phase-1 `predict`s from the
+//! shared prediction cache without ever materializing the request, and
+//! forwards the rest to the [`EnginePool`].
+//!
+//! The hot loop is allocation-free: [`respond`] decodes through the
+//! per-connection [`ConnScratch`] (borrowed field names/profile keys,
+//! reusable index vectors), builds the cache key in a reusable byte
+//! buffer, and encodes the typed [`Response`] directly into the reused
+//! output buffer. A steady-state cache-hit `predict` round trip touches
+//! the heap zero times (enforced by `tests/wire_alloc.rs`).
 
 use crate::coordinator::dispatch::{EnginePool, Job, SubmitError};
-use crate::coordinator::protocol::{Request, Response};
-use crate::gpu::Instance;
-use crate::util::Json;
+use crate::coordinator::protocol::{parse_line, ParsedLine, Request, Response, WireScratch};
+use crate::advisor::CacheKeyScratch;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Sender};
+
+/// Per-connection reusable buffers: decode scratch, cache-key scratch,
+/// and the encoded-response output buffer. All capacities persist across
+/// lines, so warm traffic allocates nothing in the wire layer.
+#[derive(Default)]
+pub struct ConnScratch {
+    wire: WireScratch,
+    keys: CacheKeyScratch,
+    /// The encoded, newline-terminated response line after [`respond`].
+    pub out: Vec<u8>,
+}
 
 /// Submit one engine job and wait for its reply. A full lane queue is
 /// surfaced as the structured `overloaded` error — load is shed at the
@@ -25,59 +44,75 @@ fn ask(pool: &EnginePool, make: impl FnOnce(Sender<Response>) -> Job) -> Respons
     }
 }
 
-/// Handle one request line; blocking (waits for the engine when needed).
+/// Handle one request line end to end: decode, serve, and encode the
+/// newline-terminated reply into `scratch.out` (blocking while the
+/// engine works, same as the old `route`).
+pub fn respond(pool: &EnginePool, line: &str, scratch: &mut ConnScratch) {
+    let ConnScratch { wire, keys, out } = scratch;
+    let resp = route_scratch(pool, line, wire, keys);
+    resp.encode_line(out);
+}
+
+/// Handle one request line; blocking. Compatibility entry point over
+/// fresh scratch buffers — servers use [`respond`] with per-connection
+/// scratch instead.
 pub fn route(pool: &EnginePool, line: &str) -> Response {
-    let req = match Request::parse(line) {
-        Ok(r) => r,
-        Err(e) => return Response::err_kind(e.kind(), format!("bad request: {e}")),
-    };
+    let mut wire = WireScratch::default();
+    let mut keys = CacheKeyScratch::default();
+    route_scratch(pool, line, &mut wire, &mut keys)
+}
+
+fn route_scratch(
+    pool: &EnginePool,
+    line: &str,
+    wire: &mut WireScratch,
+    keys: &mut CacheKeyScratch,
+) -> Response {
+    match parse_line(line, wire) {
+        Err(e) => Response::err_kind(e.kind(), format!("bad request: {e}")),
+        Ok(ParsedLine::Predict(view)) => {
+            // cache fast path: key the borrowed profile spans directly —
+            // a warm hit never materializes the request or touches a lane
+            let key = keys.key(view.anchor, view.target, view.anchor_latency_ms, view.pairs());
+            if let Some((latency_ms, member)) = pool.cache().peek(&key) {
+                let stats = &pool.stats;
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.cache.hits.fetch_add(1, Ordering::Relaxed);
+                return Response::Prediction { latency_ms, member };
+            }
+            // miss: materialize and hand off to the batching lane (which
+            // re-checks the cache and counts the miss)
+            ask(pool, |tx| Job::Predict(view.materialize(), tx))
+        }
+        Ok(ParsedLine::Req(req)) => route_request(pool, req),
+    }
+}
+
+/// Serve an already-materialized request (everything but the borrowed
+/// `predict` fast path above).
+fn route_request(pool: &EnginePool, req: Request) -> Response {
     match req {
-        Request::Health => Response::ok_obj(|o| {
-            o.set("status", Json::Str("healthy".into()));
-        }),
+        Request::Health => Response::Health,
         Request::Stats => {
             let s = &pool.stats;
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
-            let overloaded = s.overloaded.load(Ordering::Relaxed);
-            let cache_hits = s.cache.hits.load(Ordering::Relaxed);
-            let cache_misses = s.cache.misses.load(Ordering::Relaxed);
-            let lanes = pool.predict_lanes();
-            Response::ok_obj(|o| {
-                o.set("requests", Json::Num(requests as f64));
-                o.set("artifact_batches", Json::Num(batches as f64));
-                o.set(
-                    "avg_batch_fill",
-                    Json::Num(if batches > 0 {
-                        batched as f64 / batches as f64
-                    } else {
-                        0.0
-                    }),
-                );
-                o.set("overloaded", Json::Num(overloaded as f64));
-                o.set("predict_lanes", Json::Num(lanes as f64));
-                o.set("cache_hits", Json::Num(cache_hits as f64));
-                o.set("cache_misses", Json::Num(cache_misses as f64));
-            })
+            Response::Stats {
+                requests,
+                artifact_batches: batches,
+                avg_batch_fill: if batches > 0 {
+                    batched as f64 / batches as f64
+                } else {
+                    0.0
+                },
+                overloaded: s.overloaded.load(Ordering::Relaxed),
+                predict_lanes: pool.predict_lanes(),
+                cache_hits: s.cache.hits.load(Ordering::Relaxed),
+                cache_misses: s.cache.misses.load(Ordering::Relaxed),
+            }
         }
-        Request::Instances => Response::ok_obj(|o| {
-            o.set(
-                "instances",
-                Json::Arr(
-                    Instance::ALL
-                        .iter()
-                        .map(|i| {
-                            let mut e = Json::obj();
-                            e.set("key", Json::Str(i.key().into()));
-                            e.set("gpu", Json::Str(i.spec().gpu_model.into()));
-                            e.set("price_hr", Json::Num(i.spec().price_hr));
-                            e
-                        })
-                        .collect(),
-                ),
-            );
-        }),
+        Request::Instances => Response::Instances,
         Request::Predict(p) => ask(pool, |tx| Job::Predict(p, tx)),
         Request::PredictBatchSize {
             instance,

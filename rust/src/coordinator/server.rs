@@ -21,7 +21,7 @@
 
 use crate::coordinator::dispatch::{EnginePool, EngineStats, PoolOptions};
 use crate::coordinator::protocol::Response;
-use crate::coordinator::router::route;
+use crate::coordinator::router::respond;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -267,26 +267,30 @@ fn handle_conn(stream: TcpStream, pool: &EnginePool) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
+    // per-connection wire buffers: decode scratch, cache-key scratch, and
+    // the encoded-response output buffer — reused line after line, so a
+    // steady-state request pays zero wire-layer allocations
+    let mut scratch = crate::coordinator::router::ConnScratch::default();
     loop {
         buf.clear();
-        let resp = match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES)? {
+        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES)? {
             LineRead::Eof => return Ok(()),
             LineRead::TooLong => Response::err_kind(
                 "line_too_long",
                 format!("request line exceeds {MAX_LINE_BYTES} bytes"),
-            ),
+            )
+            .encode_line(&mut scratch.out),
             LineRead::Line => match std::str::from_utf8(&buf) {
                 Ok(line) if line.trim().is_empty() => continue,
-                Ok(line) => route(pool, line),
+                Ok(line) => respond(pool, line, &mut scratch),
                 // lossy replacement would silently mangle profile keys;
                 // reject like any other malformed payload
-                Err(_) => {
-                    Response::err_kind("bad_request", "request line is not valid UTF-8")
-                }
+                Err(_) => Response::err_kind("bad_request", "request line is not valid UTF-8")
+                    .encode_line(&mut scratch.out),
             },
-        };
-        writer.write_all(resp.to_line().as_bytes())?;
-        writer.write_all(b"\n")?;
+        }
+        // one newline-terminated buffer, one write syscall per response
+        writer.write_all(&scratch.out)?;
         writer.flush()?;
     }
 }
@@ -501,11 +505,9 @@ mod tests {
                     Job::Shutdown => return,
                     Job::Predict(_, reply) => {
                         std::thread::sleep(delay);
-                        let _ = reply.send(crate::coordinator::protocol::Response::ok_obj(
-                            |o| {
-                                o.set("latency_ms", Json::Num(1.0));
-                            },
-                        ));
+                        let _ = reply.send(crate::coordinator::protocol::Response::Latency {
+                            latency_ms: 1.0,
+                        });
                     }
                     other => {
                         std::thread::sleep(delay);
@@ -515,9 +517,8 @@ mod tests {
                             | Job::PixelSize { reply, .. }
                             | Job::Recommend { reply, .. }
                             | Job::Plan { reply, .. } => {
-                                let _ = reply.send(
-                                    crate::coordinator::protocol::Response::ok_obj(|_| {}),
-                                );
+                                let _ = reply
+                                    .send(crate::coordinator::protocol::Response::Health);
                             }
                             _ => {}
                         }
@@ -544,11 +545,9 @@ mod tests {
                     Job::Predict(_, reply) => {
                         picked2.fetch_add(1, Ordering::SeqCst);
                         std::thread::sleep(Duration::from_millis(300));
-                        let _ = reply.send(crate::coordinator::protocol::Response::ok_obj(
-                            |o| {
-                                o.set("latency_ms", Json::Num(1.0));
-                            },
-                        ));
+                        let _ = reply.send(crate::coordinator::protocol::Response::Latency {
+                            latency_ms: 1.0,
+                        });
                     }
                     _ => {}
                 }

@@ -1,8 +1,17 @@
 //! Minimal JSON parser/serializer (no external crates in this offline env).
 //!
-//! Supports the full JSON grammar minus exotic escapes (\uXXXX surrogate
-//! pairs are decoded). Used for `artifacts/meta.json`, model persistence,
-//! and the coordinator's line-delimited protocol.
+//! Supports the full JSON grammar minus exotic escapes (lone \uXXXX
+//! escapes are decoded; surrogate pairs degrade to U+FFFD). Used for
+//! `artifacts/meta.json` and model persistence — the coordinator's
+//! line-delimited protocol now runs on the allocation-free streaming
+//! layer in [`crate::util::json_stream`] and only uses this DOM on cold
+//! paths (and as the reference decoder in the differential wire tests).
+//!
+//! Numbers are rendered by the shared shortest-round-trip formatter
+//! ([`crate::util::json_stream::push_f64`]): every finite value parses
+//! back bitwise-equal (including `-0.0`), and non-finite values — which
+//! have no JSON representation — serialize as `null` instead of the
+//! unparseable `NaN`/`inf` tokens this serializer used to emit.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -122,13 +131,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Json::Num(n) => crate::util::json_stream::push_f64(out, *n),
             Json::Str(s) => {
                 out.push('"');
                 for c in s.chars() {
@@ -378,6 +381,31 @@ mod tests {
         // integer-valued floats serialize without decimal point
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(1.5).to_string(), "1.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_not_garbage() {
+        // NaN/inf have no JSON representation; the old serializer emitted
+        // unparseable `NaN`/`inf` tokens
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let mut o = Json::obj();
+        o.set("x", Json::Num(f64::NAN));
+        assert!(Json::parse(&o.to_string()).is_ok());
+        // -0.0 keeps its sign bit through a round trip
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn control_chars_escape_and_round_trip() {
+        let nasty: String = (0u8..0x20).map(|b| b as char).collect();
+        let tok = Json::Str(nasty.clone()).to_string();
+        assert!(tok.bytes().all(|b| b >= 0x20), "{tok:?}");
+        let re = Json::parse(&tok).unwrap();
+        assert_eq!(re.as_str(), Some(nasty.as_str()));
     }
 
     #[test]

@@ -1,0 +1,1196 @@
+//! Zero-allocation streaming JSON layer for the serving hot loop.
+//!
+//! The DOM [`crate::util::Json`] materializes a `BTreeMap<String, Json>`
+//! plus one heap `String` per key for every request *and* response line —
+//! fine for model persistence and `artifacts/meta.json`, but pure per-line
+//! overhead on the wire. This module replaces it on the hot path with:
+//!
+//! * [`LineScratch::scan`] — a single-pass pull decoder over one request
+//!   line. Strings are **borrowed** `&str` slices of the line when they
+//!   contain no escapes; escaped ones are cow'd into one reusable
+//!   per-connection scratch `String`. Top-level fields, flat number/string
+//!   arrays, and flat `{op: ms}` profile objects are indexed into reusable
+//!   `Vec`s ([`RawVal`]/[`RawElem`]/[`RawPair`]) — a warm scan allocates
+//!   nothing. The accepted grammar and every error message (including byte
+//!   offsets) deliberately mirror the DOM parser, so the two decoders are
+//!   interchangeable (enforced by the differential fuzz test in
+//!   `tests/wire_differential.rs`). One hardening divergence: nesting is
+//!   capped at [`MAX_DEPTH`] instead of recursing until the stack dies.
+//! * [`JsonWriter`] — a direct-to-buffer encoder writing into a reusable
+//!   `Vec<u8>` that is handed straight to the socket write. No
+//!   intermediate `Json` values, no `String`s.
+//! * [`write_f64`] — a hand-rolled Grisu2 shortest-round-trip `f64`
+//!   formatter (no external crates in this offline env). Every emitted
+//!   number parses back **bitwise-equal** (`-0.0` included); the output is
+//!   verified by re-parsing and falls back to the std formatter on any
+//!   disagreement, so a formatter bug can only cost nanoseconds, never
+//!   correctness. Non-finite values serialize as `null` — the one JSON
+//!   token that cannot silently corrupt a stream (satellite fix shared
+//!   with the DOM serializer).
+//!
+//! The protocol layer (`coordinator/protocol.rs`) builds its DOM-free
+//! request parsing and response encoding on these primitives.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Nesting cap for the streaming decoder. The DOM parser recurses
+/// unboundedly (a `[[[[…` line could exhaust the stack); the streaming
+/// path fails with a structured error instead. Protocol requests nest at
+/// most 2 deep, so the cap is unobservable for well-formed traffic.
+pub const MAX_DEPTH: u32 = 96;
+
+// ---------------------------------------------------------------------------
+// f64 formatting: Grisu2 shortest round-trip digits + layout
+// ---------------------------------------------------------------------------
+
+/// Grisu scaling window: after multiplying by the cached power of ten the
+/// binary exponent must land in `[ALPHA, GAMMA]` (Loitsch 2010).
+const ALPHA: i32 = -60;
+const GAMMA: i32 = -32;
+
+#[derive(Debug, Clone, Copy)]
+struct DiyFp {
+    f: u64,
+    e: i32,
+}
+
+fn normalize(mut x: DiyFp) -> DiyFp {
+    while x.f & (1 << 63) == 0 {
+        x.f <<= 1;
+        x.e -= 1;
+    }
+    x
+}
+
+fn mul(x: DiyFp, y: DiyFp) -> DiyFp {
+    let p = (x.f as u128) * (y.f as u128);
+    DiyFp {
+        f: ((p >> 64) as u64).wrapping_add((p as u64) >> 63),
+        e: x.e + y.e + 64,
+    }
+}
+
+/// (normalized v, lower boundary, upper boundary) — boundaries share the
+/// upper's exponent.
+fn boundaries(v: f64) -> (DiyFp, DiyFp, DiyFp) {
+    let bits = v.to_bits();
+    let be = ((bits >> 52) & 0x7ff) as i32;
+    let frac = bits & ((1u64 << 52) - 1);
+    let (f, e) = if be == 0 {
+        (frac, -1074)
+    } else {
+        (frac + (1u64 << 52), be - 1075)
+    };
+    let plus = normalize(DiyFp { f: 2 * f + 1, e: e - 1 });
+    // at a power of two the lower neighbour is twice as close
+    let u_minus = if frac == 0 && be > 1 {
+        DiyFp { f: 4 * f - 1, e: e - 2 }
+    } else {
+        DiyFp { f: 2 * f - 1, e: e - 1 }
+    };
+    let minus = DiyFp {
+        f: u_minus.f << (u_minus.e - plus.e),
+        e: plus.e,
+    };
+    (normalize(DiyFp { f, e }), minus, plus)
+}
+
+/// Cached powers of ten `10^k = f × 2^e` (64-bit significands, k in
+/// −348..=340 step 8). Generated with exact integer arithmetic; the first
+/// entry matches double-conversion's published table.
+#[rustfmt::skip]
+const POW10_CACHE: [(u64, i32, i32); 87] = [
+    (0xfa8fd5a0081c0288, -1220, -348), (0xbaaee17fa23ebf76, -1193, -340), (0x8b16fb203055ac76, -1166, -332),
+    (0xcf42894a5dce35ea, -1140, -324), (0x9a6bb0aa55653b2d, -1113, -316), (0xe61acf033d1a45df, -1087, -308),
+    (0xab70fe17c79ac6ca, -1060, -300), (0xff77b1fcbebcdc4f, -1034, -292), (0xbe5691ef416bd60c, -1007, -284),
+    (0x8dd01fad907ffc3c, -980, -276), (0xd3515c2831559a83, -954, -268), (0x9d71ac8fada6c9b5, -927, -260),
+    (0xea9c227723ee8bcb, -901, -252), (0xaecc49914078536d, -874, -244), (0x823c12795db6ce57, -847, -236),
+    (0xc21094364dfb5637, -821, -228), (0x9096ea6f3848984f, -794, -220), (0xd77485cb25823ac7, -768, -212),
+    (0xa086cfcd97bf97f4, -741, -204), (0xef340a98172aace5, -715, -196), (0xb23867fb2a35b28e, -688, -188),
+    (0x84c8d4dfd2c63f3b, -661, -180), (0xc5dd44271ad3cdba, -635, -172), (0x936b9fcebb25c996, -608, -164),
+    (0xdbac6c247d62a584, -582, -156), (0xa3ab66580d5fdaf6, -555, -148), (0xf3e2f893dec3f126, -529, -140),
+    (0xb5b5ada8aaff80b8, -502, -132), (0x87625f056c7c4a8b, -475, -124), (0xc9bcff6034c13053, -449, -116),
+    (0x964e858c91ba2655, -422, -108), (0xdff9772470297ebd, -396, -100), (0xa6dfbd9fb8e5b88f, -369, -92),
+    (0xf8a95fcf88747d94, -343, -84), (0xb94470938fa89bcf, -316, -76), (0x8a08f0f8bf0f156b, -289, -68),
+    (0xcdb02555653131b6, -263, -60), (0x993fe2c6d07b7fac, -236, -52), (0xe45c10c42a2b3b06, -210, -44),
+    (0xaa242499697392d3, -183, -36), (0xfd87b5f28300ca0e, -157, -28), (0xbce5086492111aeb, -130, -20),
+    (0x8cbccc096f5088cc, -103, -12), (0xd1b71758e219652c, -77, -4), (0x9c40000000000000, -50, 4),
+    (0xe8d4a51000000000, -24, 12), (0xad78ebc5ac620000, 3, 20), (0x813f3978f8940984, 30, 28),
+    (0xc097ce7bc90715b3, 56, 36), (0x8f7e32ce7bea5c70, 83, 44), (0xd5d238a4abe98068, 109, 52),
+    (0x9f4f2726179a2245, 136, 60), (0xed63a231d4c4fb27, 162, 68), (0xb0de65388cc8ada8, 189, 76),
+    (0x83c7088e1aab65db, 216, 84), (0xc45d1df942711d9a, 242, 92), (0x924d692ca61be758, 269, 100),
+    (0xda01ee641a708dea, 295, 108), (0xa26da3999aef774a, 322, 116), (0xf209787bb47d6b85, 348, 124),
+    (0xb454e4a179dd1877, 375, 132), (0x865b86925b9bc5c2, 402, 140), (0xc83553c5c8965d3d, 428, 148),
+    (0x952ab45cfa97a0b3, 455, 156), (0xde469fbd99a05fe3, 481, 164), (0xa59bc234db398c25, 508, 172),
+    (0xf6c69a72a3989f5c, 534, 180), (0xb7dcbf5354e9bece, 561, 188), (0x88fcf317f22241e2, 588, 196),
+    (0xcc20ce9bd35c78a5, 614, 204), (0x98165af37b2153df, 641, 212), (0xe2a0b5dc971f303a, 667, 220),
+    (0xa8d9d1535ce3b396, 694, 228), (0xfb9b7cd9a4a7443c, 720, 236), (0xbb764c4ca7a44410, 747, 244),
+    (0x8bab8eefb6409c1a, 774, 252), (0xd01fef10a657842c, 800, 260), (0x9b10a4e5e9913129, 827, 268),
+    (0xe7109bfba19c0c9d, 853, 276), (0xac2820d9623bf429, 880, 284), (0x80444b5e7aa7cf85, 907, 292),
+    (0xbf21e44003acdd2d, 933, 300), (0x8e679c2f5e44ff8f, 960, 308), (0xd433179d9c8cb841, 986, 316),
+    (0x9e19db92b4e31ba9, 1013, 324), (0xeb96bf6ebadf77d9, 1039, 332), (0xaf87023b9bf0ee6b, 1066, 340),
+];
+
+/// Smallest cached power whose product with a significand of binary
+/// exponent `e_plus` lands at or above [`ALPHA`] (and, because table
+/// entries are ~26.6 bits apart while the window is 28 wide, at or below
+/// [`GAMMA`]).
+fn cached_power(e_plus: i32) -> (DiyFp, i32) {
+    let (mut lo, mut hi) = (0usize, POW10_CACHE.len() - 1);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if e_plus + POW10_CACHE[mid].1 + 64 >= ALPHA {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let (f, e, k) = POW10_CACHE[lo];
+    debug_assert!((ALPHA..=GAMMA).contains(&(e_plus + e + 64)));
+    (DiyFp { f, e }, k)
+}
+
+/// (digit count, 10^(count-1)) for a nonzero u32.
+fn largest_pow10(n: u32) -> (i32, u32) {
+    const POW: [u32; 10] = [
+        1, 10, 100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000,
+    ];
+    for i in (0..POW.len()).rev() {
+        if n >= POW[i] {
+            return (i as i32 + 1, POW[i]);
+        }
+    }
+    (1, 1)
+}
+
+fn grisu_round(buf: &mut [u8], len: usize, dist: u64, delta: u64, mut rest: u64, ten_k: u64) {
+    while rest < dist
+        && delta - rest >= ten_k
+        && (rest + ten_k < dist || dist - rest > rest + ten_k - dist)
+    {
+        buf[len - 1] -= 1;
+        rest += ten_k;
+    }
+}
+
+/// Digit generation: shortest digits of the value whose boundaries scale
+/// to `minus`/`plus` (all sharing one exponent in `[ALPHA, GAMMA]`).
+fn digit_gen(minus: DiyFp, w: DiyFp, plus: DiyFp, buf: &mut [u8; 24], len: &mut usize) -> i32 {
+    let mut delta = plus.f.wrapping_sub(minus.f);
+    let mut dist = plus.f.wrapping_sub(w.f);
+    let e = plus.e; // in [-60, -32]
+    let one_f = 1u64 << -e;
+    let mut p1 = (plus.f >> -e) as u32;
+    let mut p2 = plus.f & (one_f - 1);
+    let mut exp10 = 0i32;
+    let (k, mut pow10) = largest_pow10(p1);
+    let mut n = k;
+    while n > 0 {
+        let d = p1 / pow10;
+        p1 %= pow10;
+        buf[*len] = b'0' + d as u8;
+        *len += 1;
+        n -= 1;
+        let rest = ((p1 as u64) << -e) + p2;
+        if rest <= delta {
+            exp10 += n;
+            grisu_round(buf, *len, dist, delta, rest, (pow10 as u64) << -e);
+            return exp10;
+        }
+        pow10 /= 10;
+    }
+    loop {
+        p2 = p2.wrapping_mul(10);
+        delta = delta.wrapping_mul(10);
+        dist = dist.wrapping_mul(10);
+        buf[*len] = b'0' + (p2 >> -e) as u8;
+        *len += 1;
+        p2 &= one_f - 1;
+        exp10 -= 1;
+        if p2 <= delta {
+            grisu_round(buf, *len, dist, delta, p2, one_f);
+            return exp10;
+        }
+    }
+}
+
+/// Shortest digits + decimal exponent for a finite positive double:
+/// `value = digits × 10^exp10`.
+fn grisu2(v: f64, buf: &mut [u8; 24]) -> (usize, i32) {
+    let (w, minus, plus) = boundaries(v);
+    let (c, ck) = cached_power(plus.e);
+    let w2 = mul(w, c);
+    let mut m2 = mul(minus, c);
+    let mut p2 = mul(plus, c);
+    // tighten by 1 ulp against the rounding of `mul`
+    m2.f += 1;
+    p2.f -= 1;
+    let mut len = 0usize;
+    let e10 = digit_gen(m2, w2, p2, buf, &mut len);
+    (len, e10 - ck)
+}
+
+/// Fixed-size text buffer the formatter renders into (stack only; also
+/// the target of the std-formatter fallback, so no path allocates).
+struct FloatBuf {
+    buf: [u8; 40],
+    len: usize,
+}
+
+impl FloatBuf {
+    fn new() -> FloatBuf {
+        FloatBuf { buf: [0; 40], len: 0 }
+    }
+
+    fn push(&mut self, b: u8) {
+        self.buf[self.len] = b;
+        self.len += 1;
+    }
+
+    fn extend(&mut self, bytes: &[u8]) {
+        self.buf[self.len..self.len + bytes.len()].copy_from_slice(bytes);
+        self.len += bytes.len();
+    }
+
+    fn as_str(&self) -> &str {
+        // only ASCII digits/signs/dots are ever written
+        std::str::from_utf8(&self.buf[..self.len]).unwrap_or("0")
+    }
+}
+
+impl std::fmt::Write for FloatBuf {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        if self.len + s.len() > self.buf.len() {
+            return Err(std::fmt::Error);
+        }
+        self.extend(s.as_bytes());
+        Ok(())
+    }
+}
+
+fn push_u64(out: &mut FloatBuf, mut m: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (m % 10) as u8;
+        m /= 10;
+        if m == 0 {
+            break;
+        }
+    }
+    out.extend(&tmp[i..]);
+}
+
+/// Digits → number token. Fixed notation for "human" magnitudes,
+/// scientific for the extremes; every branch is a valid JSON number.
+fn layout(out: &mut FloatBuf, digits: &[u8], e10: i32) {
+    let n = digits.len() as i32;
+    let dot = n + e10; // decimal point position relative to digits[0]
+    if (1..=17).contains(&dot) {
+        if dot >= n {
+            out.extend(digits);
+            for _ in 0..dot - n {
+                out.push(b'0');
+            }
+        } else {
+            out.extend(&digits[..dot as usize]);
+            out.push(b'.');
+            out.extend(&digits[dot as usize..]);
+        }
+    } else if (-4..=0).contains(&dot) {
+        out.extend(b"0.");
+        for _ in 0..-dot {
+            out.push(b'0');
+        }
+        out.extend(digits);
+    } else {
+        out.push(digits[0]);
+        if digits.len() > 1 {
+            out.push(b'.');
+            out.extend(&digits[1..]);
+        }
+        out.push(b'e');
+        if dot - 1 < 0 {
+            out.push(b'-');
+        }
+        push_u64(out, (dot - 1).unsigned_abs() as u64);
+    }
+}
+
+/// Render `v` as the canonical wire number token:
+///
+/// * non-finite → `null` (NaN/∞ have no JSON representation; `null` is
+///   the only token that cannot corrupt the stream),
+/// * `-0.0` → `-0` (parses back bitwise-equal),
+/// * integer-valued `|v| < 9e15` → plain integer (matches the DOM
+///   serializer's historical behavior),
+/// * otherwise Grisu2 shortest digits, re-parse-verified with a std
+///   formatter fallback — the emitted token always parses back to
+///   exactly `v`'s bit pattern.
+fn format_f64(out: &mut FloatBuf, v: f64) {
+    if !v.is_finite() {
+        out.extend(b"null");
+        return;
+    }
+    if v == 0.0 {
+        if v.to_bits() >> 63 == 1 {
+            out.push(b'-');
+        }
+        out.push(b'0');
+        return;
+    }
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        if v < 0.0 {
+            out.push(b'-');
+        }
+        push_u64(out, v.abs() as u64);
+        return;
+    }
+    if v < 0.0 {
+        out.push(b'-');
+    }
+    let mut digits = [0u8; 24];
+    let (mut len, mut e10) = grisu2(v.abs(), &mut digits);
+    while len > 1 && digits[len - 1] == b'0' {
+        len -= 1;
+        e10 += 1;
+    }
+    layout(out, &digits[..len], e10);
+    // belt and braces: a formatter bug may cost a fallback, never a wrong
+    // wire value
+    let ok = out.as_str().parse::<f64>().map(f64::to_bits) == Ok(v.to_bits());
+    if !ok {
+        out.len = 0;
+        use std::fmt::Write as _;
+        let _ = write!(out, "{v:e}");
+    }
+}
+
+/// [`format_f64`] into a byte buffer (the streaming encoder's sink).
+pub fn write_f64(out: &mut Vec<u8>, v: f64) {
+    let mut b = FloatBuf::new();
+    format_f64(&mut b, v);
+    out.extend_from_slice(&b.buf[..b.len]);
+}
+
+/// [`format_f64`] into a `String` (the DOM serializer's sink — both
+/// serializers share one float formatter so their outputs agree).
+pub fn push_f64(out: &mut String, v: f64) {
+    let mut b = FloatBuf::new();
+    format_f64(&mut b, v);
+    out.push_str(b.as_str());
+}
+
+// ---------------------------------------------------------------------------
+// String escaping (shared by both serializers)
+// ---------------------------------------------------------------------------
+
+/// Write `s` as a JSON string token. Escapes `"` `\` `\n` `\r` `\t` and
+/// every other control char < 0x20 as `\u00xx` (the DOM serializer uses
+/// the same rules; raw control bytes never reach the wire).
+pub fn write_json_str(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    let bytes = s.as_bytes();
+    let mut run = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        let esc: &[u8] = match b {
+            b'"' => b"\\\"",
+            b'\\' => b"\\\\",
+            b'\n' => b"\\n",
+            b'\r' => b"\\r",
+            b'\t' => b"\\t",
+            0x00..=0x1f => b"",
+            _ => continue,
+        };
+        out.extend_from_slice(&bytes[run..i]);
+        if esc.is_empty() {
+            const HEX: &[u8; 16] = b"0123456789abcdef";
+            out.extend_from_slice(b"\\u00");
+            out.push(HEX[(b >> 4) as usize]);
+            out.push(HEX[(b & 0xf) as usize]);
+        } else {
+            out.extend_from_slice(esc);
+        }
+        run = i + 1;
+    }
+    out.extend_from_slice(&bytes[run..]);
+    out.push(b'"');
+}
+
+// ---------------------------------------------------------------------------
+// Direct-to-buffer encoder
+// ---------------------------------------------------------------------------
+
+/// Comma/colon-tracking JSON writer over a caller-owned `Vec<u8>`.
+/// Purely additive: never clears the buffer, never allocates beyond the
+/// buffer's own growth (zero once the buffer is warm). Nesting is capped
+/// at 63 levels (a `u64` bitmask tracks "first member emitted" per depth)
+/// — far beyond any protocol shape.
+pub struct JsonWriter<'a> {
+    out: &'a mut Vec<u8>,
+    depth: u32,
+    started: u64,
+    keyed: bool,
+}
+
+impl<'a> JsonWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> JsonWriter<'a> {
+        JsonWriter { out, depth: 0, started: 0, keyed: false }
+    }
+
+    fn value_prefix(&mut self) {
+        if self.keyed {
+            self.keyed = false;
+            return;
+        }
+        if self.started & (1 << self.depth) != 0 {
+            self.out.push(b',');
+        } else {
+            self.started |= 1 << self.depth;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.value_prefix();
+        self.out.push(b'{');
+        self.depth += 1;
+        debug_assert!(self.depth < 64);
+        self.started &= !(1 << self.depth);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.out.push(b'}');
+        self.depth -= 1;
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.value_prefix();
+        self.out.push(b'[');
+        self.depth += 1;
+        debug_assert!(self.depth < 64);
+        self.started &= !(1 << self.depth);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.out.push(b']');
+        self.depth -= 1;
+        self
+    }
+
+    /// Object member key (emits the separating comma when needed).
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        if self.started & (1 << self.depth) != 0 {
+            self.out.push(b',');
+        } else {
+            self.started |= 1 << self.depth;
+        }
+        write_json_str(self.out, k);
+        self.out.push(b':');
+        self.keyed = true;
+        self
+    }
+
+    pub fn str_(&mut self, s: &str) -> &mut Self {
+        self.value_prefix();
+        write_json_str(self.out, s);
+        self
+    }
+
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.value_prefix();
+        write_f64(self.out, v);
+        self
+    }
+
+    pub fn bool_(&mut self, b: bool) -> &mut Self {
+        self.value_prefix();
+        self.out.extend_from_slice(if b { b"true" } else { b"false" });
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.value_prefix();
+        self.out.extend_from_slice(b"null");
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pull decoder: one-pass scan of a request line into reusable indices
+// ---------------------------------------------------------------------------
+
+/// A string slice of either the request line or the unescape scratch.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    off: u32,
+    len: u32,
+    in_scratch: bool,
+}
+
+/// A classified top-level field value. Containers index into the
+/// scratch's `elems`/`pairs` stores; anything deeper than the flat
+/// protocol shapes is validated, then represented by [`RawElem::Other`]
+/// or a [`RawPair`] with `bad = true` (exactly the granularity the
+/// per-op validation needs to reproduce the DOM parser's errors).
+#[derive(Debug, Clone, Copy)]
+pub enum RawVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Span),
+    Arr { start: u32, len: u32 },
+    Obj { start: u32, len: u32 },
+}
+
+/// One element of a top-level array field.
+#[derive(Debug, Clone, Copy)]
+pub enum RawElem {
+    Num(f64),
+    Str(Span),
+    /// A structurally valid value that is neither a number nor a string.
+    Other,
+}
+
+/// One member of a flat top-level object field (a profile). `bad` marks
+/// a structurally valid value that is not a number.
+#[derive(Debug, Clone, Copy)]
+pub struct RawPair {
+    pub key: Span,
+    pub val: f64,
+    pub bad: bool,
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected `{}` at byte {}", b as char, self.pos)
+        }
+    }
+}
+
+/// Reusable per-connection decode state. `scan` clears and refills the
+/// index vectors and the unescape buffer; their capacities persist, so a
+/// steady-state scan performs zero heap allocations.
+#[derive(Default)]
+pub struct LineScratch {
+    fields: Vec<(Span, RawVal)>,
+    elems: Vec<RawElem>,
+    pairs: Vec<RawPair>,
+    unescape: String,
+}
+
+impl LineScratch {
+    /// Scan one line. Mirrors the DOM parser's grammar and error strings
+    /// exactly (the differential fuzz test keeps them locked together);
+    /// on success the top-level fields are queryable via [`Self::field`].
+    pub fn scan(&mut self, line: &str) -> Result<()> {
+        anyhow::ensure!(line.len() <= u32::MAX as usize, "line too large to index");
+        self.fields.clear();
+        self.elems.clear();
+        self.pairs.clear();
+        self.unescape.clear();
+        let mut cur = Cursor { bytes: line.as_bytes(), pos: 0 };
+        cur.skip_ws();
+        if cur.peek() == Some(b'{') {
+            // top-level object: index its fields (any other top-level
+            // value is validated and leaves the field table empty, so
+            // the op lookup fails with the DOM's error)
+            cur.pos += 1;
+            cur.skip_ws();
+            if cur.peek() == Some(b'}') {
+                cur.pos += 1;
+            } else {
+                loop {
+                    cur.skip_ws();
+                    let key = self.read_string(&mut cur)?;
+                    cur.skip_ws();
+                    cur.expect(b':')?;
+                    let val = self.classify_value(&mut cur, 1)?;
+                    self.fields.push((key, val));
+                    cur.skip_ws();
+                    match cur.peek() {
+                        Some(b',') => cur.pos += 1,
+                        Some(b'}') => {
+                            cur.pos += 1;
+                            break;
+                        }
+                        _ => bail!("expected , or }} at byte {}", cur.pos),
+                    }
+                }
+            }
+        } else {
+            // any other top-level value: validate fully (the op lookup
+            // will fail with the DOM's "missing/invalid `op`" error)
+            self.skip_value(&mut cur, 0)?;
+        }
+        cur.skip_ws();
+        if cur.pos != cur.bytes.len() {
+            bail!("trailing data at byte {}", cur.pos);
+        }
+        Ok(())
+    }
+
+    /// Last occurrence of a top-level field (the DOM's `BTreeMap` insert
+    /// makes duplicate keys last-wins; lookup from the end mirrors it).
+    pub fn field(&self, line: &str, name: &str) -> Option<RawVal> {
+        self.fields
+            .iter()
+            .rev()
+            .find(|(k, _)| self.str_of(line, *k) == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Resolve a span against the line / the unescape scratch.
+    pub fn str_of<'a>(&'a self, line: &'a str, s: Span) -> &'a str {
+        let src = if s.in_scratch { self.unescape.as_str() } else { line };
+        &src[s.off as usize..(s.off + s.len) as usize]
+    }
+
+    pub fn elems(&self, start: u32, len: u32) -> &[RawElem] {
+        &self.elems[start as usize..(start + len) as usize]
+    }
+
+    pub fn pairs(&self, start: u32, len: u32) -> &[RawPair] {
+        &self.pairs[start as usize..(start + len) as usize]
+    }
+
+    /// Stable-sort a pair range by key (byte-lexicographic — the same
+    /// order a `BTreeMap<String, _>` iterates) and drop duplicate keys
+    /// keeping the last occurrence (the DOM's insert semantics). Returns
+    /// the compacted length; the range keeps its start.
+    pub fn sort_dedup_pairs(&mut self, line: &str, start: u32, len: u32) -> u32 {
+        fn resolve<'a>(line: &'a str, unescape: &'a str, s: Span) -> &'a str {
+            let src = if s.in_scratch { unescape } else { line };
+            &src[s.off as usize..(s.off + s.len) as usize]
+        }
+        let unescape: &str = &self.unescape;
+        let range = &mut self.pairs[start as usize..(start + len) as usize];
+        // stable insertion sort, in place: std's stable `sort_by` heap-
+        // allocates a merge buffer once the slice outgrows its insertion
+        // threshold (~20), which would silently break the zero-allocation
+        // guarantee for realistic 30–60-op profiles. Profiles are small,
+        // so O(n²) insertion is also the fast choice here. Equal keys are
+        // never swapped, so duplicate keys keep wire order (last-wins
+        // dedup below stays correct).
+        for i in 1..range.len() {
+            let mut j = i;
+            while j > 0
+                && resolve(line, unescape, range[j - 1].key)
+                    > resolve(line, unescape, range[j].key)
+            {
+                range.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+        let mut w = 0usize;
+        for r in 0..range.len() {
+            let last_of_run = r + 1 == range.len()
+                || resolve(line, unescape, range[r + 1].key)
+                    != resolve(line, unescape, range[r].key);
+            if last_of_run {
+                range[w] = range[r];
+                w += 1;
+            }
+        }
+        w as u32
+    }
+
+    /// Parse a string token. Escape-free strings are borrowed from the
+    /// line; escaped ones are unescaped into the shared scratch (one
+    /// append-only buffer per line — offsets stay stable).
+    fn read_string(&mut self, cur: &mut Cursor) -> Result<Span> {
+        cur.expect(b'"')?;
+        let start = cur.pos;
+        // fast path: find the closing quote with no escapes in between
+        while let Some(b) = cur.peek() {
+            match b {
+                b'"' => {
+                    let span = Span {
+                        off: start as u32,
+                        len: (cur.pos - start) as u32,
+                        in_scratch: false,
+                    };
+                    cur.pos += 1;
+                    return Ok(span);
+                }
+                b'\\' => break,
+                _ => cur.pos += 1,
+            }
+        }
+        if cur.peek().is_none() {
+            bail!("unterminated string");
+        }
+        // slow path: cow the prefix into the scratch and keep unescaping
+        let scratch_start = self.unescape.len();
+        // the prefix is valid UTF-8 (token boundaries are ASCII)
+        self.unescape
+            .push_str(std::str::from_utf8(&cur.bytes[start..cur.pos])?);
+        loop {
+            match cur.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    cur.pos += 1;
+                    return Ok(Span {
+                        off: scratch_start as u32,
+                        len: (self.unescape.len() - scratch_start) as u32,
+                        in_scratch: true,
+                    });
+                }
+                Some(b'\\') => {
+                    cur.pos += 1;
+                    match cur.peek() {
+                        Some(b'"') => self.unescape.push('"'),
+                        Some(b'\\') => self.unescape.push('\\'),
+                        Some(b'/') => self.unescape.push('/'),
+                        Some(b'n') => self.unescape.push('\n'),
+                        Some(b't') => self.unescape.push('\t'),
+                        Some(b'r') => self.unescape.push('\r'),
+                        Some(b'b') => self.unescape.push('\u{8}'),
+                        Some(b'f') => self.unescape.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = std::str::from_utf8(
+                                cur.bytes
+                                    .get(cur.pos + 1..cur.pos + 5)
+                                    .ok_or_else(|| anyhow!("short \\u escape"))?,
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.unescape.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            cur.pos += 4;
+                        }
+                        other => bail!("bad escape {:?}", other.map(|c| c as char)),
+                    }
+                    cur.pos += 1;
+                }
+                Some(_) => {
+                    // copy a run of plain bytes (valid UTF-8 by input type)
+                    let run_start = cur.pos;
+                    while let Some(b) = cur.peek() {
+                        if b == b'"' || b == b'\\' {
+                            break;
+                        }
+                        cur.pos += 1;
+                    }
+                    self.unescape
+                        .push_str(std::str::from_utf8(&cur.bytes[run_start..cur.pos])?);
+                }
+            }
+        }
+    }
+
+    fn read_number(&mut self, cur: &mut Cursor) -> Result<f64> {
+        let start = cur.pos;
+        while let Some(c) = cur.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                cur.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&cur.bytes[start..cur.pos])?;
+        s.parse::<f64>().map_err(|e| anyhow!("{e}"))
+    }
+
+    fn read_literal(&mut self, cur: &mut Cursor, word: &str) -> Result<()> {
+        if cur.bytes[cur.pos..].starts_with(word.as_bytes()) {
+            cur.pos += word.len();
+            Ok(())
+        } else {
+            bail!("bad literal at byte {}", cur.pos)
+        }
+    }
+
+    /// Classify one field-level value: scalars inline, arrays/objects one
+    /// level deep into the element/pair stores, anything deeper validated
+    /// and recorded as `Other`/`bad`.
+    fn classify_value(&mut self, cur: &mut Cursor, depth: u32) -> Result<RawVal> {
+        cur.skip_ws();
+        match cur.peek() {
+            Some(b'{') => {
+                let start = self.pairs.len() as u32;
+                cur.pos += 1;
+                cur.skip_ws();
+                if cur.peek() == Some(b'}') {
+                    cur.pos += 1;
+                    return Ok(RawVal::Obj { start, len: 0 });
+                }
+                loop {
+                    cur.skip_ws();
+                    let key = self.read_string(cur)?;
+                    cur.skip_ws();
+                    cur.expect(b':')?;
+                    cur.skip_ws();
+                    let pair = match cur.peek() {
+                        Some(c) if c == b'-' || c.is_ascii_digit() => RawPair {
+                            key,
+                            val: self.read_number(cur)?,
+                            bad: false,
+                        },
+                        _ => {
+                            self.skip_value(cur, depth + 1)?;
+                            RawPair { key, val: 0.0, bad: true }
+                        }
+                    };
+                    self.pairs.push(pair);
+                    cur.skip_ws();
+                    match cur.peek() {
+                        Some(b',') => cur.pos += 1,
+                        Some(b'}') => {
+                            cur.pos += 1;
+                            return Ok(RawVal::Obj { start, len: self.pairs.len() as u32 - start });
+                        }
+                        _ => bail!("expected , or }} at byte {}", cur.pos),
+                    }
+                }
+            }
+            Some(b'[') => {
+                let start = self.elems.len() as u32;
+                cur.pos += 1;
+                cur.skip_ws();
+                if cur.peek() == Some(b']') {
+                    cur.pos += 1;
+                    return Ok(RawVal::Arr { start, len: 0 });
+                }
+                loop {
+                    cur.skip_ws();
+                    let elem = match cur.peek() {
+                        Some(c) if c == b'-' || c.is_ascii_digit() => {
+                            RawElem::Num(self.read_number(cur)?)
+                        }
+                        Some(b'"') => RawElem::Str(self.read_string(cur)?),
+                        _ => {
+                            self.skip_value(cur, depth + 1)?;
+                            RawElem::Other
+                        }
+                    };
+                    self.elems.push(elem);
+                    cur.skip_ws();
+                    match cur.peek() {
+                        Some(b',') => cur.pos += 1,
+                        Some(b']') => {
+                            cur.pos += 1;
+                            return Ok(RawVal::Arr { start, len: self.elems.len() as u32 - start });
+                        }
+                        _ => bail!("expected , or ] at byte {}", cur.pos),
+                    }
+                }
+            }
+            Some(b'"') => Ok(RawVal::Str(self.read_string(cur)?)),
+            Some(b't') => {
+                self.read_literal(cur, "true")?;
+                Ok(RawVal::Bool(true))
+            }
+            Some(b'f') => {
+                self.read_literal(cur, "false")?;
+                Ok(RawVal::Bool(false))
+            }
+            Some(b'n') => {
+                self.read_literal(cur, "null")?;
+                Ok(RawVal::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(RawVal::Num(self.read_number(cur)?)),
+            other => bail!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                cur.pos
+            ),
+        }
+    }
+
+    /// Validate (and discard) one value of any shape, with the same
+    /// grammar/errors as the DOM parser, bounded by [`MAX_DEPTH`].
+    fn skip_value(&mut self, cur: &mut Cursor, depth: u32) -> Result<()> {
+        anyhow::ensure!(depth <= MAX_DEPTH, "nesting deeper than {MAX_DEPTH} levels");
+        cur.skip_ws();
+        match cur.peek() {
+            Some(b'{') => {
+                cur.pos += 1;
+                cur.skip_ws();
+                if cur.peek() == Some(b'}') {
+                    cur.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    cur.skip_ws();
+                    self.read_string(cur)?;
+                    cur.skip_ws();
+                    cur.expect(b':')?;
+                    self.skip_value(cur, depth + 1)?;
+                    cur.skip_ws();
+                    match cur.peek() {
+                        Some(b',') => cur.pos += 1,
+                        Some(b'}') => {
+                            cur.pos += 1;
+                            return Ok(());
+                        }
+                        _ => bail!("expected , or }} at byte {}", cur.pos),
+                    }
+                }
+            }
+            Some(b'[') => {
+                cur.pos += 1;
+                cur.skip_ws();
+                if cur.peek() == Some(b']') {
+                    cur.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value(cur, depth + 1)?;
+                    cur.skip_ws();
+                    match cur.peek() {
+                        Some(b',') => cur.pos += 1,
+                        Some(b']') => {
+                            cur.pos += 1;
+                            return Ok(());
+                        }
+                        _ => bail!("expected , or ] at byte {}", cur.pos),
+                    }
+                }
+            }
+            Some(b'"') => self.read_string(cur).map(|_| ()),
+            Some(b't') => self.read_literal(cur, "true"),
+            Some(b'f') => self.read_literal(cur, "false"),
+            Some(b'n') => self.read_literal(cur, "null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.read_number(cur).map(|_| ()),
+            other => bail!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                cur.pos
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Json, Rng64};
+
+    fn fmt(v: f64) -> String {
+        let mut out = Vec::new();
+        write_f64(&mut out, v);
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn float_tokens_match_expectations() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(-0.0), "-0");
+        assert_eq!(fmt(42.0), "42");
+        assert_eq!(fmt(-42.0), "-42");
+        assert_eq!(fmt(12.5), "12.5");
+        assert_eq!(fmt(0.1), "0.1");
+        assert_eq!(fmt(1e16), "10000000000000000");
+        assert_eq!(fmt(1e300), "1e300");
+        assert_eq!(fmt(5e-324), "5e-324");
+        assert_eq!(fmt(f64::NAN), "null");
+        assert_eq!(fmt(f64::INFINITY), "null");
+        assert_eq!(fmt(f64::NEG_INFINITY), "null");
+    }
+
+    /// The satellite property test: serialize → parse is bitwise identity
+    /// over a seeded sweep (specials + random bit patterns), shared by
+    /// the streaming and DOM encoders (which use the same formatter —
+    /// also asserted here).
+    #[test]
+    fn float_round_trip_is_bitwise_over_seeded_sweep() {
+        let specials = [
+            0.0,
+            -0.0,
+            1.0,
+            0.1,
+            1.0 / 3.0,
+            2.0 / 3.0,
+            1e-5,
+            9e15,
+            9.007199254740992e15,
+            1e16,
+            1e300,
+            1e-300,
+            5e-324,
+            2.2250738585072014e-308,
+            2.225073858507201e-308, // largest subnormal
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            3.141592653589793,
+            1.0 + f64::EPSILON,
+        ];
+        let mut check = |v: f64| {
+            let s = fmt(v);
+            let back: f64 = s.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v:?} -> {s}");
+            // the DOM serializer goes through the same formatter
+            assert_eq!(Json::Num(v).to_string(), s, "{v:?}");
+            // and the DOM parser accepts the token back
+            assert_eq!(
+                Json::parse(&s).unwrap().as_f64().map(f64::to_bits),
+                Some(v.to_bits())
+            );
+        };
+        for &v in &specials {
+            check(v);
+            check(-v);
+        }
+        let mut rng = Rng64::new(0xF10A7);
+        for _ in 0..20_000 {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_finite() {
+                check(v);
+            }
+        }
+        for _ in 0..5_000 {
+            check(rng.range(-1e6, 1e6));
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null_everywhere() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(fmt(v), "null");
+            assert_eq!(Json::Num(v).to_string(), "null");
+            let mut s = String::new();
+            push_f64(&mut s, v);
+            assert_eq!(s, "null");
+        }
+        // and inside structures the result still parses
+        let j = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(1.5)]);
+        assert_eq!(Json::parse(&j.to_string()).unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn control_chars_escape_and_round_trip() {
+        let nasty: String = (0u8..0x20).map(|b| b as char).chain("aé\"\\b".chars()).collect();
+        let mut out = Vec::new();
+        write_json_str(&mut out, &nasty);
+        let tok = String::from_utf8(out).unwrap();
+        // no raw control bytes on the wire
+        assert!(tok.bytes().all(|b| b >= 0x20), "{tok:?}");
+        assert_eq!(Json::parse(&tok).unwrap().as_str(), Some(nasty.as_str()));
+        // DOM serializer produces the identical token
+        assert_eq!(Json::Str(nasty.clone()).to_string(), tok);
+    }
+
+    #[test]
+    fn writer_nests_and_separates() {
+        let mut out = Vec::new();
+        let mut w = JsonWriter::new(&mut out);
+        w.begin_obj();
+        w.key("a").num(1.0);
+        w.key("b").begin_arr();
+        w.num(1.5).str_("x").bool_(true).null();
+        w.begin_obj().end_obj();
+        w.end_arr();
+        w.key("c").begin_obj();
+        w.key("d").str_("e\nf");
+        w.end_obj();
+        w.end_obj();
+        let s = String::from_utf8(out).unwrap();
+        assert_eq!(s, r#"{"a":1,"b":[1.5,"x",true,null,{}],"c":{"d":"e\nf"}}"#);
+        assert_eq!(Json::parse(&s).unwrap().req_f64("a").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn scan_borrows_unescapes_and_indexes() {
+        let line = r#"{"op":"predict","anchor_latency_ms":42.5,"profile":{"Conv2D":286.0,"abc":1.5},"flags":[1,"x",true],"spot":false,"z":null}"#;
+        let mut s = LineScratch::default();
+        s.scan(line).unwrap();
+        let Some(RawVal::Str(op)) = s.field(line, "op") else { panic!() };
+        assert_eq!(s.str_of(line, op), "predict");
+        assert!(matches!(s.field(line, "anchor_latency_ms"), Some(RawVal::Num(v)) if v == 42.5));
+        let Some(RawVal::Obj { start, len }) = s.field(line, "profile") else { panic!() };
+        assert_eq!(len, 2);
+        let n = s.sort_dedup_pairs(line, start, len);
+        let pairs = s.pairs(start, n);
+        assert_eq!(s.str_of(line, pairs[0].key), "Conv2D");
+        assert_eq!(s.str_of(line, pairs[1].key), "abc"); // unescaped key
+        assert_eq!(pairs[1].val, 1.5);
+        let Some(RawVal::Arr { start, len }) = s.field(line, "flags") else { panic!() };
+        let el = s.elems(start, len);
+        assert!(matches!(el[0], RawElem::Num(v) if v == 1.0));
+        assert!(matches!(el[1], RawElem::Str(_)));
+        assert!(matches!(el[2], RawElem::Other));
+        assert!(matches!(s.field(line, "spot"), Some(RawVal::Bool(false))));
+        assert!(matches!(s.field(line, "z"), Some(RawVal::Null)));
+        assert!(s.field(line, "nope").is_none());
+    }
+
+    #[test]
+    fn scan_duplicate_fields_are_last_wins() {
+        let line = r#"{"op":"a","op":"b"}"#;
+        let mut s = LineScratch::default();
+        s.scan(line).unwrap();
+        let Some(RawVal::Str(op)) = s.field(line, "op") else { panic!() };
+        assert_eq!(s.str_of(line, op), "b");
+        // profile duplicate keys: last value survives sort+dedup
+        let line = r#"{"p":{"A":1,"A":2,"B":3}}"#;
+        s.scan(line).unwrap();
+        let Some(RawVal::Obj { start, len }) = s.field(line, "p") else { panic!() };
+        let n = s.sort_dedup_pairs(line, start, len);
+        let pairs = s.pairs(start, n);
+        assert_eq!(n, 2);
+        assert_eq!((s.str_of(line, pairs[0].key), pairs[0].val), ("A", 2.0));
+        assert_eq!((s.str_of(line, pairs[1].key), pairs[1].val), ("B", 3.0));
+    }
+
+    #[test]
+    fn scan_rejects_what_the_dom_rejects() {
+        let mut s = LineScratch::default();
+        for bad in ["{", "[1,]", "12 34", "\"unterminated", "{\"a\":}", "{\"a\"1}", "nul"] {
+            let mine = s.scan(bad).unwrap_err().to_string();
+            let dom = Json::parse(bad).unwrap_err().to_string();
+            assert_eq!(mine, dom, "{bad}");
+        }
+        // deep nesting: streaming fails structurally instead of blowing
+        // the stack (intentional hardening divergence from the DOM)
+        let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        assert!(s.scan(&deep).unwrap_err().to_string().contains("nesting"));
+    }
+
+    #[test]
+    fn scan_zero_allocation_shape_reuse() {
+        // capacities persist across scans; second scan of the same shape
+        // must not grow anything (observable via capacity snapshots)
+        let line = r#"{"op":"predict","profile":{"Conv2D":1.0,"Re\tlu":2.0},"xs":[1,2,3]}"#;
+        let mut s = LineScratch::default();
+        s.scan(line).unwrap();
+        let caps = (
+            s.fields.capacity(),
+            s.elems.capacity(),
+            s.pairs.capacity(),
+            s.unescape.capacity(),
+        );
+        for _ in 0..8 {
+            s.scan(line).unwrap();
+        }
+        assert_eq!(
+            caps,
+            (
+                s.fields.capacity(),
+                s.elems.capacity(),
+                s.pairs.capacity(),
+                s.unescape.capacity()
+            )
+        );
+    }
+}

@@ -6,6 +6,7 @@
 //! reproducible run-to-run.
 
 pub mod json;
+pub mod json_stream;
 mod rng;
 
 pub use json::Json;

@@ -73,6 +73,17 @@ fn sample_profile_line() -> String {
     req.to_string()
 }
 
+/// Cache-bust a predict line: nudge `anchor_latency_ms` by whole
+/// quantization buckets (cf. `big_sweep_line`) so each variant gets a
+/// distinct prediction-cache key and must take the engine-lane miss
+/// path instead of the router's warm-hit fast path.
+fn bust_predict_line(line: &str, bust: usize) -> String {
+    let mut req = Json::parse(line).unwrap();
+    let v = req.req_f64("anchor_latency_ms").unwrap();
+    req.set("anchor_latency_ms", Json::Num(v * (1.0 + bust as f64 * 1e-3)));
+    req.to_string()
+}
+
 #[test]
 fn serves_health_instances_predict_and_errors() {
     let Some(models) = model_dir() else { return };
@@ -441,17 +452,22 @@ fn predicts_are_not_blocked_by_inflight_recommend_sweeps() {
         (oks, durations, std::time::Instant::now())
     });
 
-    // three parallel predict clients start while sweep #0 is in flight;
-    // identical payloads coalesce in the affinity lane's batch window
+    // three parallel predict clients start while sweep #0 is in flight.
+    // Every measured line is CACHE-BUSTED (distinct anchor latency →
+    // distinct prediction-cache key): the router's warm-hit fast path
+    // must not answer them, or this gate would stop exercising the
+    // engine lanes entirely — the misses still share (anchor, target),
+    // so they land on one affinity lane and coalesce in its batch window
     std::thread::sleep(std::time::Duration::from_millis(2));
     let mut clients = Vec::new();
-    for _ in 0..3 {
+    for c in 0..3usize {
         let line = line.clone();
         clients.push(std::thread::spawn(move || {
             let mut max_rtt = std::time::Duration::ZERO;
-            for _ in 0..4 {
+            for k in 0..4usize {
+                let busted = bust_predict_line(&line, 1 + c * 4 + k);
                 let t = std::time::Instant::now();
-                let resp = send(addr, &line);
+                let resp = send(addr, &busted);
                 max_rtt = max_rtt.max(t.elapsed());
                 assert_eq!(
                     resp.get("ok").and_then(Json::as_bool),

@@ -1,0 +1,130 @@
+//! Differential fuzz: the streaming wire decoder (`Request::parse`) and
+//! the DOM reference decoder (`Request::parse_dom`) must agree on every
+//! protocol example line AND on seeded random mutations of them — same
+//! parsed request on success, same error kind *and message* (byte
+//! offsets included) on rejection. This is what licenses serving traffic
+//! through the DOM-free path while the DOM stays the reference.
+
+use repro::coordinator::Request;
+use repro::util::Rng64;
+
+/// Canonical wire examples: one (or more) per op, plus edge shapes —
+/// escaped keys, duplicate fields, whitespace, wrong-typed payloads.
+fn base_lines() -> Vec<String> {
+    let mut lines: Vec<String> = [
+        r#"{"op":"health"}"#,
+        r#"{"op":"stats"}"#,
+        r#"{"op":"instances"}"#,
+        r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":123.4,"profile":{"Conv2D":286.0,"Relu":26.0}}"#,
+        r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1.5,"profile":{}}"#,
+        "{\"\\u006fp\":\"predict\",\"anchor\":\"g4dn\",\"target\":\"p3\",\"anchor_latency_ms\":1.5,\"profile\":{\"a\\tb\":1,\"a\\tb\":2,\"B\":3.5}}",
+        r#" { "op" : "health" , "extra" : [ {"deep": [1, "x", null]} , true ] } "#,
+        r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.5}"#,
+        r#"{"op":"predict_pixel_size","instance":"ac1","pixels":128,"t_min":10.25,"t_max":90.75}"#,
+        r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"gpu_counts":[1,2],"include_spot":true,"top_k":8}"#,
+        r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"targets":["p3","g4dn"],"batches":[16,64,256],"pixel_sizes":[64],"profile_pmin":{"Conv2D":40.0},"anchor_lat_pmin":50.0,"profile_pmax":{"Conv2D":1200.0},"anchor_lat_pmax":1500.0}"#,
+        r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"cheapest","deadline_hours":4.0,"dataset_images":50000,"epochs":10}"#,
+        r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"fastest","budget_usd":12.5,"dataset_images":1000}"#,
+        r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"max_epochs","deadline_hours":2.0,"dataset_images":1000}"#,
+        // malformed on purpose: both decoders must reject identically
+        "not json",
+        "{}",
+        r#"{"op":42}"#,
+        "[1,2,3]",
+        r#""health""#,
+        "12 34",
+        r#"{"op":"nope"}"#,
+        r#"{"op":"predict","anchor":"zzz","target":"p3","anchor_latency_ms":1,"profile":{}}"#,
+        r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"Conv2D":"x"}}"#,
+        r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"a":1e400,"b":"x"}}"#,
+        r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"batches":[16.9],"gpu_counts":[1,"two"],"top_k":-1}"#,
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    // a line with every axis list populated near its caps
+    let batches: Vec<String> = (16..80).map(|b| b.to_string()).collect();
+    lines.push(format!(
+        r#"{{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":1}},"anchor_lat_bmin":5,"profile_bmax":{{"Conv2D":2}},"anchor_lat_bmax":10,"batches":[{}]}}"#,
+        batches.join(",")
+    ));
+    lines
+}
+
+/// Both decoders on one line; panic on any divergence.
+fn check_agreement(line: &str) {
+    let stream = Request::parse(line);
+    let dom = Request::parse_dom(line);
+    match (stream, dom) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "request divergence on {line:?}"),
+        (Err(a), Err(b)) => {
+            assert_eq!(a.kind(), b.kind(), "error-kind divergence on {line:?}");
+            assert_eq!(
+                a.to_string(),
+                b.to_string(),
+                "error-message divergence on {line:?}"
+            );
+        }
+        (a, b) => panic!(
+            "accept/reject divergence on {line:?}: streaming={:?} dom={:?}",
+            a.map(|_| "ok").map_err(|e| e.kind()),
+            b.map(|_| "ok").map_err(|e| e.kind()),
+        ),
+    }
+}
+
+#[test]
+fn decoders_agree_on_every_example_line() {
+    for line in base_lines() {
+        check_agreement(&line);
+    }
+}
+
+/// Seeded mutation fuzz: byte substitutions, insertions, deletions, and
+/// targeted token splices over every base line. Mutations that break
+/// UTF-8 are skipped (the server rejects those before parsing).
+#[test]
+fn decoders_agree_on_seeded_mutations() {
+    let bases = base_lines();
+    let mut rng = Rng64::new(0xD1FF);
+    // printable-ish substitution alphabet plus JSON-structural bytes
+    let alphabet: &[u8] = b"{}[]\",:.eE+-0123456789 \\abcdxyz\t\nu";
+    let splices = [
+        "1e400", "-0.0", "null", "true", "\"\"", "NaN", "1e-7", "9e99",
+        "{\"a\":1}", "[1]", "\\u0041", "\\ud800", "0x1", "01", "1.", ".5",
+    ];
+    let mut checked = 0usize;
+    for base in &bases {
+        for _ in 0..160 {
+            let mut bytes = base.clone().into_bytes();
+            match rng.below(4) {
+                0 => {
+                    // substitute a byte
+                    let i = rng.below(bytes.len());
+                    bytes[i] = alphabet[rng.below(alphabet.len())];
+                }
+                1 => {
+                    // delete a byte
+                    let i = rng.below(bytes.len());
+                    bytes.remove(i);
+                }
+                2 => {
+                    // insert a byte
+                    let i = rng.below(bytes.len() + 1);
+                    bytes.insert(i, alphabet[rng.below(alphabet.len())]);
+                }
+                _ => {
+                    // splice a token at a random position
+                    let i = rng.below(bytes.len() + 1);
+                    let tok = splices[rng.below(splices.len())];
+                    bytes.splice(i..i, tok.bytes());
+                }
+            }
+            if let Ok(mutated) = String::from_utf8(bytes) {
+                check_agreement(&mutated);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 2_000, "mutation corpus too small: {checked}");
+}
