@@ -34,6 +34,15 @@ cargo test -q --test wire_alloc
 echo "== cargo test -q (stress test excluded — it just ran single-shot) =="
 cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps
 
+# rustdoc gate: module docs, doc-examples, and intra-doc links must stay
+# warning-clean (broken links rot silently otherwise)
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+# markdown docs: every relative link in README/docs must resolve
+echo "== docs/*.md relative-link check =="
+../ci/doc_links.sh
+
 # advisory until the pre-existing tree is formatted/lint-clean (the seed
 # predates rustfmt/clippy enforcement); set CI_STRICT=1 to make them gate
 echo "== cargo fmt --check =="

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Relative-link check over the markdown docs: every [text](path) whose
+# target is not an URL or a pure anchor must point at an existing file
+# (anchors after '#' are stripped; paths resolve relative to the file
+# containing the link). Keeps docs/*.md and README.md from silently
+# rotting as files move.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for md in README.md ROADMAP.md docs/*.md; do
+    [[ -f "$md" ]] || continue
+    dir=$(dirname "$md")
+    # extract every inline-link destination
+    while IFS= read -r target; do
+        case "$target" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        path="${target%%#*}"
+        [[ -n "$path" ]] || continue
+        if [[ ! -e "$dir/$path" ]]; then
+            echo "BROKEN LINK: $md -> $target"
+            fail=1
+        fi
+    done < <(grep -oE '\]\(([^)]+)\)' "$md" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [[ "$fail" != 0 ]]; then
+    echo "doc_links.sh: broken relative links found"
+    exit 1
+fi
+echo "doc_links.sh: all relative doc links resolve"

@@ -110,7 +110,7 @@ fn main() -> repro::Result<()> {
     let cache = PredictionCache::new(16, 4096);
     let cache_stats = CacheStats::default();
     let scaling = ScalingTable::new();
-    let cands = advisor::sweep(&rt, &profet, &cache, &cache_stats, &scaling, &query)?;
+    let cands = advisor::sweep(&rt, 0, &profet, &cache, &cache_stats, &scaling, &query)?;
     assert!(!cands.is_empty(), "sweep produced no candidates");
 
     let points: Vec<(f64, f64)> = cands.iter().map(|c| c.objectives()).collect();

@@ -1,58 +1,176 @@
-//! New-GPU onboarding: the Table VI / Sec V-E scenario.
+//! New-GPU onboarding, **online** (Table VI / Sec V-E, served live).
 //!
-//! A cloud vendor releases a new GPU instance (AWS G5 / A10, or a
-//! different vendor's P100). The vendor — who controls the hardware before
-//! customers see it — runs the offline corpus on the new device, trains
-//! anchor→new-target models, and can then serve predictions for customer
-//! workloads profiled on any OLD instance.
+//! A cloud vendor releases a new GPU instance (AWS G5 / A10). The old
+//! workflow retrained offline and restarted the service; this example
+//! drives the live path end to end against a running server:
+//!
+//! 1. boot the PROFET service with models that know nothing about G5;
+//! 2. `predict` g4dn→g5 — a structured "no model" error;
+//! 3. stream the vendor's profiled measurements in as `ingest` lines;
+//! 4. `onboard` — the trainer lane fits the g4dn→g5 ensemble (frozen
+//!    feature space), validates it, and publishes registry epoch 2
+//!    WITHOUT interrupting service;
+//! 5. `predict` g4dn→g5 now answers, quoted against simulator truth;
+//! 6. `stats` shows the bumped `registry_epoch` / `last_reload`.
 //!
 //! Run: `cargo run --release --example new_gpu_onboarding`
 
+use repro::coordinator::{self, ServeOptions};
 use repro::data::Corpus;
 use repro::gpu::Instance;
 use repro::ml::metrics;
 use repro::predictor::{Profet, TrainOptions};
+use repro::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn send(addr: std::net::SocketAddr, line: &str) -> repro::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Json::parse(resp.trim())
+}
+
+fn predict_line(profile: &std::collections::BTreeMap<String, f64>, lat: f64) -> String {
+    let mut req = Json::obj();
+    req.set("op", Json::Str("predict".into()));
+    req.set("anchor", Json::Str("g4dn".into()));
+    req.set("target", Json::Str("g5".into()));
+    req.set("anchor_latency_ms", Json::Num(lat));
+    let mut prof = Json::obj();
+    for (k, v) in profile {
+        prof.set(k, Json::Num(*v));
+    }
+    req.set("profile", prof);
+    req.to_string()
+}
 
 fn main() -> repro::Result<()> {
-    let rt = repro::runtime::load_default()?;
-    println!("vendor-side onboarding of {:?} ...", Instance::NEW);
-    let corpus = Corpus::generate(&Instance::ALL);
+    let anchor = Instance::G4dn;
+    let new_gpu = Instance::G5;
+
+    // ---- vendor-side data: the offline corpus incl. the new device ----
+    println!("generating corpus (incl. the new {new_gpu} device) ...");
+    let corpus = Corpus::generate(&[anchor, Instance::P3, new_gpu]);
     let (train_idx, test_idx) = corpus.split_random(0.2, 3);
 
+    // ---- 1. boot the service on models that predate the new GPU -------
+    let rt = repro::runtime::load_default()?;
     let opts = TrainOptions {
-        anchors: Instance::CORE.to_vec(),
-        targets: Instance::NEW.to_vec(),
+        anchors: vec![anchor],
+        targets: vec![Instance::P3],
         n_trees: 40,
         dnn_epochs: 25,
         ..Default::default()
     };
     let profet = Profet::train(&rt, &corpus, &train_idx, &opts)?;
-    println!("trained {} anchor->new-GPU ensembles\n", profet.cross.len());
+    let model_dir = std::env::temp_dir().join("repro_onboarding_models");
+    std::fs::remove_dir_all(&model_dir).ok();
+    profet.save(&model_dir)?;
+    drop(profet);
+    drop(rt); // the service owns its own runtimes from here on
 
-    println!("{:16} {:>10} {:>10} {:>8}", "anchor -> new", "n", "MAPE %", "R2");
-    for t in Instance::NEW {
-        for a in Instance::CORE {
-            let mut truth = Vec::new();
-            let mut pred = Vec::new();
-            for &i in &test_idx {
-                let e = &corpus.entries[i];
-                let (Some(ar), Some(tr)) = (e.runs.get(&a), e.runs.get(&t)) else {
-                    continue;
-                };
-                let (p, _) = profet.predict_cross(&rt, a, t, &ar.profile, ar.latency_ms)?;
-                truth.push(tr.latency_ms);
-                pred.push(p);
-            }
-            println!(
-                "{:16} {:>10} {:>10.2} {:>8.3}",
-                format!("{} -> {}", a.key(), t.spec().gpu_model),
-                truth.len(),
-                metrics::mape(&truth, &pred),
-                metrics::r2(&truth, &pred)
-            );
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        repro::runtime::default_artifact_dir(),
+        model_dir.clone(),
+        &ServeOptions::default(),
+    )?;
+    let addr = handle.addr;
+    println!("service up on {addr} (epoch 1, targets: p3 only)\n");
+
+    // ---- 2. the new pair is not served yet ----------------------------
+    let sample = corpus
+        .entries
+        .iter()
+        .find(|e| e.runs.contains_key(&anchor) && e.runs.contains_key(&new_gpu))
+        .expect("corpus has paired runs");
+    let a_run = &sample.runs[&anchor];
+    let before = send(addr, &predict_line(&a_run.profile, a_run.latency_ms))?;
+    assert_eq!(before.get("ok").and_then(Json::as_bool), Some(false));
+    println!(
+        "predict g4dn->g5 before onboarding: {}",
+        before.req_str("error").unwrap_or("?")
+    );
+
+    // ---- 3. ingest the vendor's profiled measurements -----------------
+    let mut staged = 0usize;
+    for &i in &train_idx {
+        let e = &corpus.entries[i];
+        let (Some(ar), Some(tr)) = (e.runs.get(&anchor), e.runs.get(&new_gpu)) else {
+            continue;
+        };
+        let mut req = Json::obj();
+        req.set("op", Json::Str("ingest".into()));
+        req.set("anchor", Json::Str(anchor.key().into()));
+        req.set("target", Json::Str(new_gpu.key().into()));
+        req.set("model", Json::Str(e.workload.model.name().into()));
+        req.set("batch", Json::Num(e.workload.batch as f64));
+        req.set("pixels", Json::Num(e.workload.pixels as f64));
+        let mut prof = Json::obj();
+        for (k, v) in &ar.profile {
+            prof.set(k, Json::Num(*v));
         }
+        req.set("profile", prof);
+        req.set("anchor_latency_ms", Json::Num(ar.latency_ms));
+        req.set("target_latency_ms", Json::Num(tr.latency_ms));
+        let resp = send(addr, &req.to_string())?;
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        staged = resp.req_f64("staged")? as usize;
     }
+    println!("ingested {staged} g4dn->g5 measurements into the staging area");
+
+    // ---- 4. onboard: train + validate + publish, live -----------------
+    let t0 = std::time::Instant::now();
+    let ob = send(addr, r#"{"op":"onboard","anchor":"g4dn","target":"g5"}"#)?;
+    assert_eq!(ob.get("ok").and_then(Json::as_bool), Some(true), "{ob:?}");
+    println!(
+        "onboarded in {:.1}s -> registry epoch {} ({} pair, {} measurements)\n",
+        t0.elapsed().as_secs_f64(),
+        ob.req_f64("epoch")?,
+        ob.req_f64("pairs")?,
+        ob.req_f64("staged")?
+    );
+
+    // ---- 5. the new pair serves; quote it against simulator truth -----
+    let mut truth = Vec::new();
+    let mut pred = Vec::new();
+    for &i in &test_idx {
+        let e = &corpus.entries[i];
+        let (Some(ar), Some(tr)) = (e.runs.get(&anchor), e.runs.get(&new_gpu)) else {
+            continue;
+        };
+        let resp = send(addr, &predict_line(&ar.profile, ar.latency_ms))?;
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        truth.push(tr.latency_ms);
+        pred.push(resp.req_f64("latency_ms")?);
+    }
+    println!(
+        "{:16} {:>10} {:>10} {:>8}",
+        "anchor -> new", "n", "MAPE %", "R2"
+    );
+    println!(
+        "{:16} {:>10} {:>10.2} {:>8.3}",
+        format!("{} -> {}", anchor.key(), new_gpu.spec().gpu_model),
+        truth.len(),
+        metrics::mape(&truth, &pred),
+        metrics::r2(&truth, &pred)
+    );
+
+    // ---- 6. stats carry the registry state ----------------------------
+    let st = send(addr, r#"{"op":"stats"}"#)?;
+    println!(
+        "\nstats: registry_epoch={} last_reload={} requests={}",
+        st.req_f64("registry_epoch")?,
+        st.req_f64("last_reload")?,
+        st.req_f64("requests")?
+    );
     println!("\nCustomers profiled on old instances can now be quoted for the new hardware");
-    println!("before migrating — no customer-side reruns required (paper Sec III-C3).");
+    println!("without the service ever going down (paper Sec III-C3, served live).");
+    handle.stop();
+    std::fs::remove_dir_all(&model_dir).ok();
     Ok(())
 }

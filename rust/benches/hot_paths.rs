@@ -284,14 +284,14 @@ fn main() {
         bench(&mut results, "advisor_sweep cold (2 targets, full grid)", 600, || {
             let cache = PredictionCache::new(16, 4096);
             std::hint::black_box(
-                repro::advisor::sweep(rt, &profet, &cache, &stats, &scaling, &query).unwrap(),
+                repro::advisor::sweep(rt, 0, &profet, &cache, &stats, &scaling, &query).unwrap(),
             );
         });
         // warm: shared cache, phase-1 short-circuits to lookups
         let cache = PredictionCache::new(16, 4096);
         bench(&mut results, "advisor_sweep warm (cache hits)", 400, || {
             std::hint::black_box(
-                repro::advisor::sweep(rt, &profet, &cache, &stats, &scaling, &query).unwrap(),
+                repro::advisor::sweep(rt, 0, &profet, &cache, &stats, &scaling, &query).unwrap(),
             );
         });
 
@@ -329,7 +329,8 @@ fn main() {
             };
             let rtt = |pool: &EnginePool| {
                 let (tx, rx) = channel();
-                pool.submit(Job::Predict(predict.clone(), tx)).unwrap();
+                let snap = pool.registry().snapshot();
+                pool.submit(Job::Predict(predict.clone(), snap, tx)).unwrap();
                 rx.recv().unwrap()
             };
             bench(&mut results, "engine_pool predict rtt (advisor idle)", 400, || {
@@ -366,6 +367,7 @@ fn main() {
                         let job = Job::Recommend {
                             query: query.clone(),
                             top_k: 0,
+                            snap: pool.registry().snapshot(),
                             reply: tx,
                         };
                         if pool.submit(job).is_ok() {

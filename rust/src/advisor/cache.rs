@@ -1,12 +1,20 @@
 //! Sharded, capacity-bounded memoization cache for phase-1 predictions.
 //!
-//! Keyed by (anchor, target, quantized anchor latency, quantized profile
-//! fingerprint). The value is the exact `(latency, member)` pair the
-//! ensemble produced, stored verbatim — a cache hit returns a prediction
-//! bitwise-equal to the cold one it memoizes. Quantization (2^20 buckets
-//! per millisecond) only widens the *key*: two requests whose profile
-//! values agree to within ~1 ppm of a millisecond share an entry; anything
-//! coarser gets its own.
+//! Keyed by (registry epoch, anchor, target, quantized anchor latency,
+//! quantized profile fingerprint). The value is the exact `(latency,
+//! member)` pair the ensemble produced, stored verbatim — a cache hit
+//! returns a prediction bitwise-equal to the cold one it memoizes.
+//! Quantization (2^20 buckets per millisecond) only widens the *key*: two
+//! requests whose profile values agree to within ~1 ppm of a millisecond
+//! share an entry; anything coarser gets its own.
+//!
+//! The **epoch** component makes the cache registry-swap-safe: when the
+//! coordinator's model registry publishes a new epoch (see
+//! `crate::coordinator::registry`), every key built afterwards carries the
+//! new epoch, so entries computed by the old models simply stop matching —
+//! no stop-the-world flush, no lock over the whole cache. Stale entries
+//! age out through the normal per-shard FIFO eviction. Library callers
+//! without a registry pass any fixed epoch (by convention `0`).
 //!
 //! The shard array bounds lock hold times and keeps contention negligible
 //! when multiple threads consult the cache concurrently; each shard is
@@ -69,17 +77,19 @@ impl ProfileFingerprint {
     }
 }
 
-/// Cache key: instance pair + quantized anchor latency + the canonical
-/// quantized profile byte stream. The full byte stream participates in
-/// equality AND in the derived `Hash` (so the map's keyed SipHash sees
-/// the client-controlled bytes — crafted FNV collisions cannot force
-/// HashMap bucket pile-ups): a fingerprint collision between two
-/// different profiles degrades to a cache miss, never the wrong
+/// Cache key: registry epoch + instance pair + quantized anchor latency +
+/// the canonical quantized profile byte stream. The full byte stream
+/// participates in equality AND in the derived `Hash` (so the map's keyed
+/// SipHash sees the client-controlled bytes — crafted FNV collisions
+/// cannot force HashMap bucket pile-ups): a fingerprint collision between
+/// two different profiles degrades to a cache miss, never the wrong
 /// workload's prediction. `route` is only the shard selector, folding in
 /// every key component so per-target keys of one sweep spread across
-/// shards.
+/// shards. The epoch participates in equality, hash, and route: entries
+/// from a superseded model epoch can never answer a current-epoch lookup.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CacheKey {
+    pub epoch: u64,
     pub anchor: Instance,
     pub target: Instance,
     lat_q: u128,
@@ -90,30 +100,42 @@ pub struct CacheKey {
 
 impl CacheKey {
     pub fn of(
+        epoch: u64,
         anchor: Instance,
         target: Instance,
         anchor_latency_ms: f64,
         profile: &BTreeMap<String, f64>,
     ) -> CacheKey {
-        CacheKey::keyed(anchor, target, anchor_latency_ms, &ProfileFingerprint::of(profile))
+        CacheKey::keyed(
+            epoch,
+            anchor,
+            target,
+            anchor_latency_ms,
+            &ProfileFingerprint::of(profile),
+        )
     }
 
     /// Key from a precomputed profile fingerprint — the byte stream is
-    /// shared, only the (anchor, target, latency) header is hashed here.
+    /// shared, only the (epoch, anchor, target, latency) header is hashed
+    /// here.
     pub fn keyed(
+        epoch: u64,
         anchor: Instance,
         target: Instance,
         anchor_latency_ms: f64,
         pf: &ProfileFingerprint,
     ) -> CacheKey {
         let lat_q = quantize(anchor_latency_ms);
-        let mut header = Vec::with_capacity(32);
+        let mut header = Vec::with_capacity(40);
+        header.extend_from_slice(&epoch.to_le_bytes());
+        header.push(0x1f);
         header.extend_from_slice(anchor.key().as_bytes());
         header.push(0x1f);
         header.extend_from_slice(target.key().as_bytes());
         header.push(0x1f);
         header.extend_from_slice(&lat_q.to_le_bytes());
         CacheKey {
+            epoch,
             anchor,
             target,
             lat_q,
@@ -147,6 +169,7 @@ pub struct CacheKeyScratch {
 impl CacheKeyScratch {
     pub fn key<'a>(
         &mut self,
+        epoch: u64,
         anchor: Instance,
         target: Instance,
         anchor_latency_ms: f64,
@@ -169,12 +192,15 @@ impl CacheKeyScratch {
         let fingerprint = fnv1a(buf);
         let lat_q = quantize(anchor_latency_ms);
         self.header.clear();
+        self.header.extend_from_slice(&epoch.to_le_bytes());
+        self.header.push(0x1f);
         self.header.extend_from_slice(anchor.key().as_bytes());
         self.header.push(0x1f);
         self.header.extend_from_slice(target.key().as_bytes());
         self.header.push(0x1f);
         self.header.extend_from_slice(&lat_q.to_le_bytes());
         let key = CacheKey {
+            epoch,
             anchor,
             target,
             lat_q,
@@ -293,22 +319,38 @@ mod tests {
     #[test]
     fn identical_inputs_share_a_key() {
         let p = profile(&[("Conv2D", 286.0), ("Relu", 26.0)]);
-        let a = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
-        let b = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p.clone());
+        let a = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p);
+        let b = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p.clone());
         assert_eq!(a, b);
     }
 
     #[test]
     fn key_separates_pairs_latency_and_profiles() {
         let p = profile(&[("Conv2D", 286.0)]);
-        let base = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
-        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P2, 42.5, &p));
-        assert_ne!(base, CacheKey::of(Instance::P3, Instance::G4dn, 42.5, &p));
-        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.6, &p));
+        let base = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p);
+        assert_ne!(base, CacheKey::of(0, Instance::G4dn, Instance::P2, 42.5, &p));
+        assert_ne!(base, CacheKey::of(0, Instance::P3, Instance::G4dn, 42.5, &p));
+        assert_ne!(base, CacheKey::of(0, Instance::G4dn, Instance::P3, 42.6, &p));
         let p2 = profile(&[("Conv2D", 287.0)]);
-        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p2));
+        assert_ne!(base, CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p2));
         let p3 = profile(&[("Conv2D", 286.0), ("Relu", 1.0)]);
-        assert_ne!(base, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p3));
+        assert_ne!(base, CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p3));
+    }
+
+    /// A registry swap bumps the epoch; keys from different epochs must
+    /// never collide (this is how a publish invalidates stale entries
+    /// without flushing the cache).
+    #[test]
+    fn epoch_separates_otherwise_identical_keys() {
+        let p = profile(&[("Conv2D", 286.0)]);
+        let e0 = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p);
+        let e1 = CacheKey::of(1, Instance::G4dn, Instance::P3, 42.5, &p);
+        assert_ne!(e0, e1);
+        assert_ne!(e0.route, e1.route);
+        let cache = PredictionCache::new(4, 64);
+        cache.insert(e0, (1.0, Member::Forest));
+        // a lookup under the new epoch misses the old entry
+        assert!(cache.peek(&e1).is_none());
     }
 
     #[test]
@@ -317,14 +359,14 @@ mod tests {
         // below a quantization bucket (2^-20 ms): same key
         let near = profile(&[("Conv2D", 286.0 + 1e-8)]);
         assert_eq!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p),
-            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &near)
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &near)
         );
         // a few buckets away: distinct key
         let far = profile(&[("Conv2D", 286.0 + 1e-5)]);
         assert_ne!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p),
-            CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &far)
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &far)
         );
     }
 
@@ -339,8 +381,8 @@ mod tests {
         tricky.push('B');
         let p2: BTreeMap<String, f64> = [(tricky, 7.0)].into_iter().collect();
         assert_ne!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p1),
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p2)
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &p1),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &p2)
         );
     }
 
@@ -350,13 +392,13 @@ mod tests {
         let a = profile(&[("Conv2D", 1e300)]);
         let b = profile(&[("Conv2D", 2e300)]);
         assert_ne!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &a),
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &b)
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &a),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &b)
         );
         let p = profile(&[("Conv2D", 1.0)]);
         assert_ne!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 1e14, &p),
-            CacheKey::of(Instance::G4dn, Instance::P3, 2e14, &p)
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1e14, &p),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 2e14, &p)
         );
         // the tag bit keeps the fallback branch disjoint from the
         // quantized branch even for large-negative values, whose raw bit
@@ -364,8 +406,8 @@ mod tests {
         let neg_huge = -1.7e308f64;
         let in_band = (neg_huge.to_bits() as i64) as f64 / (1u64 << 20) as f64;
         assert_ne!(
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", neg_huge)])),
-            CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", in_band)]))
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", neg_huge)])),
+            CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &profile(&[("Conv2D", in_band)]))
         );
     }
 
@@ -373,10 +415,10 @@ mod tests {
     fn keyed_shares_profile_bytes_across_targets() {
         let p = profile(&[("Conv2D", 286.0), ("Relu", 26.0)]);
         let pf = ProfileFingerprint::of(&p);
-        let k_p3 = CacheKey::keyed(Instance::G4dn, Instance::P3, 42.5, &pf);
-        let k_p2 = CacheKey::keyed(Instance::G4dn, Instance::P2, 42.5, &pf);
+        let k_p3 = CacheKey::keyed(0, Instance::G4dn, Instance::P3, 42.5, &pf);
+        let k_p2 = CacheKey::keyed(0, Instance::G4dn, Instance::P2, 42.5, &pf);
         // same key as the from-scratch constructor
-        assert_eq!(k_p3, CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p));
+        assert_eq!(k_p3, CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p));
         // distinct keys, distinct shard routes, shared byte allocation
         assert_ne!(k_p3, k_p2);
         assert_ne!(k_p3.route, k_p2.route);
@@ -388,7 +430,7 @@ mod tests {
         let cache = PredictionCache::new(4, 64);
         let stats = CacheStats::default();
         let p = profile(&[("Conv2D", 286.0)]);
-        let key = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        let key = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p);
         assert!(cache.get(&key, &stats).is_none());
         cache.insert(key.clone(), (123.456, Member::Forest));
         let (v, m) = cache.get(&key, &stats).unwrap();
@@ -405,7 +447,7 @@ mod tests {
         let keys: Vec<CacheKey> = (0..200)
             .map(|i| {
                 let p = profile(&[("Conv2D", i as f64)]);
-                CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p)
+                CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &p)
             })
             .collect();
         for (i, k) in keys.iter().enumerate() {
@@ -421,7 +463,7 @@ mod tests {
     fn reinsert_does_not_duplicate_fifo_entries() {
         let cache = PredictionCache::new(1, 4);
         let p = profile(&[("Conv2D", 1.0)]);
-        let key = CacheKey::of(Instance::G4dn, Instance::P3, 1.0, &p);
+        let key = CacheKey::of(0, Instance::G4dn, Instance::P3, 1.0, &p);
         for _ in 0..100 {
             cache.insert(key.clone(), (1.0, Member::Dnn));
         }
@@ -442,7 +484,7 @@ mod tests {
             joins.push(std::thread::spawn(move || {
                 for i in 0..500u64 {
                     let p = profile(&[("Conv2D", (i % 64) as f64)]);
-                    let key = CacheKey::of(Instance::G4dn, Instance::P3, t as f64, &p);
+                    let key = CacheKey::of(0, Instance::G4dn, Instance::P3, t as f64, &p);
                     cache.insert(key.clone(), (i as f64, Member::Forest));
                     assert!(cache.get(&key, &stats).is_some());
                 }
@@ -457,11 +499,12 @@ mod tests {
     #[test]
     fn scratch_built_keys_match_the_owned_constructor() {
         let p = profile(&[("Conv2D", 286.0), ("Relu", 26.5), ("A\u{1f}b", 1.0)]);
-        let owned = CacheKey::of(Instance::G4dn, Instance::P3, 42.5, &p);
+        let owned = CacheKey::of(0, Instance::G4dn, Instance::P3, 42.5, &p);
         let mut scratch = CacheKeyScratch::default();
         // BTreeMap iteration is already sorted/deduped — the contract the
         // wire layer upholds via sort_dedup_pairs
         let built = scratch.key(
+            0,
             Instance::G4dn,
             Instance::P3,
             42.5,
@@ -477,6 +520,7 @@ mod tests {
         // the scratch reuses its byte allocation once the key is dropped
         let before = std::sync::Arc::as_ptr(scratch.bytes.as_ref().unwrap());
         let again = scratch.key(
+            0,
             Instance::G4dn,
             Instance::P3,
             42.5,
@@ -487,6 +531,7 @@ mod tests {
         // retained by the cache, instead of mutating shared bytes
         cache.insert(again, (9.5, Member::Dnn));
         let healed = scratch.key(
+            0,
             Instance::G4dn,
             Instance::P2,
             1.0,

@@ -130,8 +130,14 @@ struct Grid {
 
 /// Run the full sweep. Candidates come back unranked (the serving layer
 /// sorts); targets without a trained cross/scale model are skipped.
+///
+/// `epoch` is the model-registry epoch `profet` was snapshotted at — it
+/// becomes part of every phase-1 cache key so a sweep can never consume
+/// (or produce) cache entries belonging to a different model generation.
+/// In-process callers without a registry pass `0`.
 pub fn sweep(
     rt: &Runtime,
+    epoch: u64,
     profet: &Profet,
     cache: &PredictionCache,
     cache_stats: &CacheStats,
@@ -216,7 +222,8 @@ pub fn sweep(
         let Some(scale) = profet.scale.get(&target) else {
             continue;
         };
-        let Some(ep) = predict_endpoints(rt, profet, cache, cache_stats, req, target, &points)?
+        let Some(ep) =
+            predict_endpoints(rt, epoch, profet, cache, cache_stats, req, target, &points)?
         else {
             continue; // no cross model for this (anchor, target)
         };
@@ -246,8 +253,10 @@ impl<'a> EndpointPoint<'a> {
 /// itself; one cache-first batched ensemble execution otherwise.
 /// `points` is [batch_min, batch_max] or [batch_min, batch_max,
 /// pixel_min, pixel_max].
+#[allow(clippy::too_many_arguments)]
 fn predict_endpoints(
     rt: &Runtime,
+    epoch: u64,
     profet: &Profet,
     cache: &PredictionCache,
     cache_stats: &CacheStats,
@@ -268,7 +277,7 @@ fn predict_endpoints(
     let mut miss_idx: Vec<usize> = Vec::new();
     let mut miss_keys: Vec<CacheKey> = Vec::new();
     for (i, point) in points.iter().enumerate() {
-        let key = CacheKey::keyed(req.anchor, target, point.lat, &point.pf);
+        let key = CacheKey::keyed(epoch, req.anchor, target, point.lat, &point.pf);
         match cache.get(&key, cache_stats) {
             Some((v, _)) => vals[i] = Some(v),
             None => {

@@ -3,10 +3,10 @@
 //! The seed served every op through ONE `profet-engine` thread, so a
 //! single `recommend` sweep (hundreds of grid points) stalled every
 //! concurrent `predict` behind it — classic head-of-line blocking. The
-//! pool replaces that thread with N+1 engine replicas, each owning its
+//! pool replaces that thread with N+2 engine replicas, each owning its
 //! own non-`Send` PJRT [`Runtime`] (nothing non-`Send` ever crosses a
-//! thread boundary; the trained [`Profet`] registry is plain data and is
-//! loaded once, shared read-only across lanes behind an `Arc`):
+//! thread boundary; trained models are plain data, shared through the
+//! epoch-stamped [`ModelRegistry`]):
 //!
 //! * **predict lanes** (N, default = available parallelism) run the
 //!   dynamic-batching loop ([`crate::coordinator::lane::predict_lane`]).
@@ -17,6 +17,18 @@
 //! * **the advisor lane** (1, always present) runs `recommend`/`plan`
 //!   sweeps. A sweep can therefore never block predict traffic: the worst
 //!   case is sweeps queueing behind each other on their own lane.
+//! * **the trainer lane** (1, always present) runs the registry's write
+//!   side — `ingest` staging appends, `onboard` retraining, and `reload`
+//!   — modeled on the advisor lane so a multi-second training job can
+//!   never block predict traffic either. It is also the only writer of
+//!   the staging area and the model directory, which is what lets both
+//!   go lock-free.
+//!
+//! Every job carries the [`ModelSnapshot`] it was admitted with: a
+//! registry swap mid-queue changes nothing for jobs already submitted
+//! (they are answered by the epoch they started on), and the epoch woven
+//! into every cache key keeps post-swap lookups from ever matching
+//! pre-swap entries.
 //!
 //! Replicas share the sharded phase-1 [`PredictionCache`], the
 //! [`CacheStats`] counters, and the memoized multi-GPU [`ScalingTable`]
@@ -34,24 +46,27 @@
 use crate::advisor::{CacheStats, Objective, PredictionCache, SweepRequest, TrainingJob};
 use crate::coordinator::lane::{self, LaneCtx};
 use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::coordinator::registry::{IngestRequest, ModelRegistry, ModelSnapshot, OnboardOptions};
 use crate::gpu::Instance;
-use crate::predictor::Profet;
 use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 
-/// Work item submitted to an engine lane.
+/// Work item submitted to an engine lane. Model-consuming jobs carry the
+/// [`ModelSnapshot`] captured at admission, pinning them to one registry
+/// epoch for their whole life.
 pub enum Job {
-    Predict(PredictRequest, Sender<Response>),
+    Predict(PredictRequest, ModelSnapshot, Sender<Response>),
     BatchSize {
         instance: Instance,
         batch: usize,
         t_min: f64,
         t_max: f64,
+        snap: ModelSnapshot,
         reply: Sender<Response>,
     },
     PixelSize {
@@ -59,17 +74,37 @@ pub enum Job {
         pixels: usize,
         t_min: f64,
         t_max: f64,
+        snap: ModelSnapshot,
         reply: Sender<Response>,
     },
     Recommend {
         query: SweepRequest,
         top_k: usize,
+        snap: ModelSnapshot,
         reply: Sender<Response>,
     },
     Plan {
         query: SweepRequest,
         job: TrainingJob,
         objective: Objective,
+        snap: ModelSnapshot,
+        reply: Sender<Response>,
+    },
+    /// Stage one profiled measurement (trainer lane).
+    Ingest {
+        req: IngestRequest,
+        reply: Sender<Response>,
+    },
+    /// Train staged pairs and publish a new epoch (trainer lane).
+    Onboard {
+        pair: Option<(Instance, Instance)>,
+        reply: Sender<Response>,
+    },
+    /// Re-load the model dir and publish a new epoch (trainer lane).
+    /// `only_if_changed` is the mtime watcher's mode — a directory whose
+    /// fingerprint hasn't moved is skipped silently.
+    Reload {
+        only_if_changed: bool,
         reply: Sender<Response>,
     },
     Shutdown,
@@ -96,13 +131,18 @@ pub struct EngineStats {
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
     /// Number of predict lanes; `0` means `available_parallelism()`.
-    /// The advisor lane is always one additional replica.
+    /// The advisor and trainer lanes are always two additional replicas.
     pub predict_lanes: usize,
     /// Bound on each predict lane's job queue.
     pub predict_queue_cap: usize,
     /// Bound on the advisor lane's job queue (sweeps are long-running, so
     /// a deep queue would only hide latency — keep it shallow).
     pub advisor_queue_cap: usize,
+    /// Bound on the trainer lane's job queue (`ingest` appends are cheap
+    /// and bursty; `onboard`/`reload` are rare).
+    pub trainer_queue_cap: usize,
+    /// Hyper-parameters the trainer lane uses for `onboard` retraining.
+    pub onboard: OnboardOptions,
 }
 
 impl Default for PoolOptions {
@@ -111,6 +151,8 @@ impl Default for PoolOptions {
             predict_lanes: 0,
             predict_queue_cap: 512,
             advisor_queue_cap: 8,
+            trainer_queue_cap: 64,
+            onboard: OnboardOptions::default(),
         }
     }
 }
@@ -161,13 +203,24 @@ where
 /// capacity bounds memory. Each entry carries the canonical quantized
 /// profile bytes (collision-proof equality), ~1-2 KB for a realistic
 /// aggregated profile, so 32k entries cap the cache around tens of MB.
+/// Registry swaps don't flush it: superseded epochs' entries stop
+/// matching (the epoch is part of every key) and age out FIFO.
 const CACHE_SHARDS: usize = 16;
 const CACHE_CAPACITY: usize = 32_768;
+
+/// Which loop a real engine replica runs.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LaneKind {
+    Predict,
+    Advisor,
+    Trainer,
+}
 
 /// Handle to the engine replica pool.
 pub struct EnginePool {
     predict: Vec<Lane>,
     advisor: Lane,
+    trainer: Lane,
     /// Round-robin cursor for non-affine immediate jobs.
     rr: AtomicUsize,
     pub stats: Arc<EngineStats>,
@@ -175,42 +228,56 @@ pub struct EnginePool {
     /// holds) — the router peeks it to answer warm `predict`s without an
     /// engine round trip.
     cache: Arc<PredictionCache>,
+    /// The live model registry — the router snapshots it per request; the
+    /// trainer lane swaps it on `onboard`/`reload`.
+    registry: Arc<ModelRegistry>,
 }
 
 impl EnginePool {
-    /// Spawn the replicas. The trained model registry ([`Profet`]) is
-    /// plain owned data (forest lanes, flat DNN params, polynomial
-    /// coefficients), so it loads ONCE and is shared read-only across
-    /// every lane behind an `Arc` — only the non-`Send` PJRT [`Runtime`]
-    /// is loaded inside each lane's own thread (in parallel). Fails if
-    /// the registry or any replica's runtime fails to load.
+    /// Spawn the replicas. The trained models load ONCE into the
+    /// [`ModelRegistry`] (manifest-checked by [`crate::predictor::Profet::load`])
+    /// and are shared read-only across every lane through epoch-stamped
+    /// `Arc` snapshots — only the non-`Send` PJRT [`Runtime`] is loaded
+    /// inside each lane's own thread (in parallel). The trainer lane runs
+    /// the registry's probe-validation gate against the initial model set
+    /// before reporting ready, so a pool never comes up serving models
+    /// that can't answer the canned probe. Fails if the registry or any
+    /// replica's runtime fails to load.
     pub fn spawn(
         artifact_dir: PathBuf,
         model_dir: PathBuf,
         opts: &PoolOptions,
     ) -> Result<EnginePool> {
-        let profet = Arc::new(
-            Profet::load(&model_dir)
-                .with_context(|| format!("models: {}", model_dir.display()))?,
-        );
+        let registry = Arc::new(ModelRegistry::open(model_dir)?);
+        EnginePool::spawn_with_registry(artifact_dir, registry, opts)
+    }
+
+    /// [`EnginePool::spawn`] over a pre-built registry (the path `serve`
+    /// takes when the caller already loaded or trained the models).
+    pub fn spawn_with_registry(
+        artifact_dir: PathBuf,
+        registry: Arc<ModelRegistry>,
+        opts: &PoolOptions,
+    ) -> Result<EnginePool> {
         let stats = Arc::new(EngineStats::default());
         let cache = Arc::new(PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY));
         let ctx = LaneCtx {
             cache: cache.clone(),
             scaling: Arc::new(ScalingTable::new()),
             stats: stats.clone(),
+            registry: registry.clone(),
+            onboard: opts.onboard.clone(),
         };
         let n = opts.resolved_predict_lanes().max(1);
         let mut predict = Vec::with_capacity(n);
-        let mut readies = Vec::with_capacity(n + 1);
+        let mut readies = Vec::with_capacity(n + 2);
         for i in 0..n {
             let (lane, ready) = spawn_engine_lane(
                 format!("profet-predict-{i}"),
                 opts.predict_queue_cap,
                 artifact_dir.clone(),
-                profet.clone(),
                 ctx.clone(),
-                false,
+                LaneKind::Predict,
             )?;
             predict.push(lane);
             readies.push(ready);
@@ -218,18 +285,27 @@ impl EnginePool {
         let (advisor, ready) = spawn_engine_lane(
             "profet-advisor".into(),
             opts.advisor_queue_cap,
+            artifact_dir.clone(),
+            ctx.clone(),
+            LaneKind::Advisor,
+        )?;
+        readies.push(ready);
+        let (trainer, ready) = spawn_engine_lane(
+            "profet-trainer".into(),
+            opts.trainer_queue_cap,
             artifact_dir,
-            profet,
             ctx,
-            true,
+            LaneKind::Trainer,
         )?;
         readies.push(ready);
         let pool = EnginePool {
             predict,
             advisor,
+            trainer,
             rr: AtomicUsize::new(0),
             stats,
             cache,
+            registry,
         };
         // wait for every replica to come up; on failure the pool drop
         // below shuts down and joins the lanes that did start
@@ -242,7 +318,8 @@ impl EnginePool {
         Ok(pool)
     }
 
-    /// Number of predict lanes (the advisor lane is one more replica).
+    /// Number of predict lanes (the advisor + trainer lanes are two more
+    /// replicas).
     pub fn predict_lanes(&self) -> usize {
         self.predict.len()
     }
@@ -250,6 +327,11 @@ impl EnginePool {
     /// The shared phase-1 prediction cache (router fast-path peeks).
     pub fn cache(&self) -> &Arc<PredictionCache> {
         &self.cache
+    }
+
+    /// The live model registry (router snapshots + `stats` fields).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Deterministic (anchor, target) → predict-lane affinity, so
@@ -262,8 +344,9 @@ impl EnginePool {
     /// past the lane bound) — `Overloaded` is the backpressure signal.
     pub fn submit(&self, job: Job) -> std::result::Result<(), SubmitError> {
         let lane = match &job {
-            Job::Predict(req, _) => &self.predict[self.lane_of(req.anchor, req.target)],
+            Job::Predict(req, _, _) => &self.predict[self.lane_of(req.anchor, req.target)],
             Job::Recommend { .. } | Job::Plan { .. } => &self.advisor,
+            Job::Ingest { .. } | Job::Onboard { .. } | Job::Reload { .. } => &self.trainer,
             // shutdown is meaningful only from the pool's own Drop (which
             // bypasses submit and signals every lane directly); routing an
             // external one would silently kill a single predict lane
@@ -284,11 +367,15 @@ impl EnginePool {
     }
 
     fn lanes_mut(&mut self) -> impl Iterator<Item = &mut Lane> {
-        self.predict.iter_mut().chain(std::iter::once(&mut self.advisor))
+        self.predict
+            .iter_mut()
+            .chain(std::iter::once(&mut self.advisor))
+            .chain(std::iter::once(&mut self.trainer))
     }
 
     /// Test-only pool over caller-provided lane bodies (no PJRT runtime
     /// needed): exercises dispatch/affinity/backpressure in isolation.
+    /// The trainer lane reuses the advisor body shape.
     #[cfg(test)]
     pub(crate) fn mock<FP, FA>(
         n_predict: usize,
@@ -299,7 +386,7 @@ impl EnginePool {
     ) -> EnginePool
     where
         FP: Fn(usize, Receiver<Job>) + Send + Sync + Clone + 'static,
-        FA: FnOnce(Receiver<Job>) + Send + 'static,
+        FA: Fn(Receiver<Job>) + Send + Sync + Clone + 'static,
     {
         let predict = (0..n_predict.max(1))
             .map(|i| {
@@ -310,13 +397,19 @@ impl EnginePool {
                 .unwrap()
             })
             .collect();
-        let advisor = spawn_worker("mock-advisor", advisor_cap, advisor_body).unwrap();
+        let advisor = {
+            let body = advisor_body.clone();
+            spawn_worker("mock-advisor", advisor_cap, move |rx| body(rx)).unwrap()
+        };
+        let trainer = spawn_worker("mock-trainer", advisor_cap, move |rx| advisor_body(rx)).unwrap();
         EnginePool {
             predict,
             advisor,
+            trainer,
             rr: AtomicUsize::new(0),
             stats: Arc::new(EngineStats::default()),
             cache: Arc::new(PredictionCache::new(4, 1024)),
+            registry: Arc::new(crate::coordinator::registry::test_registry("mockpool")),
         }
     }
 }
@@ -326,7 +419,11 @@ impl Drop for EnginePool {
         // `send` (not `try_send`): a full queue is being drained by its
         // lane, so the shutdown job queues behind in-flight work and
         // every accepted job is flushed before the lane exits.
-        for lane in self.predict.iter().chain(std::iter::once(&self.advisor)) {
+        for lane in self
+            .predict
+            .iter()
+            .chain([&self.advisor, &self.trainer])
+        {
             let _ = lane.tx.send(Job::Shutdown);
         }
         for lane in self.lanes_mut() {
@@ -339,14 +436,15 @@ impl Drop for EnginePool {
 
 /// Spawn one real engine replica; the non-`Send` PJRT runtime loads
 /// inside the thread, readiness reported through the returned channel.
+/// The trainer replica additionally probe-validates the registry's
+/// initial model set before reporting ready.
 #[allow(clippy::type_complexity)]
 fn spawn_engine_lane(
     name: String,
     cap: usize,
     artifact_dir: PathBuf,
-    profet: Arc<Profet>,
     ctx: LaneCtx,
-    advisor: bool,
+    kind: LaneKind,
 ) -> Result<(Lane, Receiver<std::result::Result<(), String>>)> {
     let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
     let lane = spawn_worker(&name, cap, move |rx| {
@@ -357,11 +455,18 @@ fn spawn_engine_lane(
                 return;
             }
         };
+        if kind == LaneKind::Trainer {
+            let snap = ctx.registry.snapshot();
+            if let Err(e) = ModelRegistry::validate(&rt, &snap.profet) {
+                let _ = ready_tx.send(Err(format!("model validation: {e:#}")));
+                return;
+            }
+        }
         let _ = ready_tx.send(Ok(()));
-        if advisor {
-            lane::advisor_lane(&rt, &profet, rx, &ctx);
-        } else {
-            lane::predict_lane(&rt, &profet, rx, &ctx);
+        match kind {
+            LaneKind::Predict => lane::predict_lane(&rt, rx, &ctx),
+            LaneKind::Advisor => lane::advisor_lane(&rt, rx, &ctx),
+            LaneKind::Trainer => lane::trainer_lane(&rt, rx, &ctx),
         }
     })?;
     Ok((lane, ready_rx))
@@ -370,6 +475,7 @@ fn spawn_engine_lane(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::registry;
     use std::collections::BTreeMap;
     use std::sync::Mutex;
     use std::time::Duration;
@@ -383,13 +489,20 @@ mod tests {
         }
     }
 
+    fn snap() -> ModelSnapshot {
+        ModelSnapshot {
+            epoch: 1,
+            profet: Arc::new(registry::empty_profet()),
+        }
+    }
+
     /// Lane body that answers every job instantly, echoing its lane index
     /// through the `latency_ms` field of a typed reply.
     fn echo_lane(idx: usize, rx: Receiver<Job>) {
         for job in rx {
             match job {
                 Job::Shutdown => return,
-                Job::Predict(_, reply) => {
+                Job::Predict(_, _, reply) => {
                     let _ = reply.send(Response::Latency {
                         latency_ms: idx as f64,
                     });
@@ -399,6 +512,13 @@ mod tests {
                 }
                 Job::Recommend { reply, .. } | Job::Plan { reply, .. } => {
                     let _ = reply.send(Response::Health);
+                }
+                Job::Ingest { reply, .. }
+                | Job::Onboard { reply, .. }
+                | Job::Reload { reply, .. } => {
+                    let _ = reply.send(Response::Latency {
+                        latency_ms: idx as f64,
+                    });
                 }
             }
         }
@@ -416,14 +536,15 @@ mod tests {
             let mut lanes = Vec::new();
             for _ in 0..8 {
                 let (tx, rx) = channel();
-                pool.submit(Job::Predict(predict_req(anchor, target), tx)).unwrap();
+                pool.submit(Job::Predict(predict_req(anchor, target), snap(), tx))
+                    .unwrap();
                 let resp = rx.recv().unwrap();
                 let Response::Latency { latency_ms } = resp else { panic!("err") };
                 lanes.push(latency_ms as usize);
             }
             // every request for one pair hit the same lane...
             assert!(lanes.iter().all(|&l| l == lanes[0]), "{lanes:?}");
-            // ...and it was a predict lane, never the advisor
+            // ...and it was a predict lane, never the advisor/trainer
             assert!(lanes[0] < 4, "{lanes:?}");
         }
     }
@@ -465,6 +586,7 @@ mod tests {
         pool.submit(Job::Recommend {
             query: sample_query(),
             top_k: 0,
+            snap: snap(),
             reply: tx,
         })
         .unwrap();
@@ -475,6 +597,7 @@ mod tests {
             batch: 64,
             t_min: 1.0,
             t_max: 2.0,
+            snap: snap(),
             reply: tx,
         })
         .unwrap();
@@ -482,13 +605,59 @@ mod tests {
         assert_eq!(*hits.lock().unwrap(), vec!["advisor", "predict"]);
     }
 
+    /// Registry jobs route to the trainer lane — never to a predict lane
+    /// (where they would stall batching) or the advisor lane (where a
+    /// sweep backlog would delay a reload).
+    #[test]
+    fn registry_jobs_go_to_the_trainer_lane() {
+        let pool = EnginePool::mock(2, 64, 4, echo_lane, |rx| echo_lane(7, rx));
+        // the mock advisor body (idx 7) also backs the trainer lane; an
+        // advisor submit and a registry submit must both land on bodies
+        // with idx 7, while predicts stay on lanes 0/1
+        let (tx, rx) = channel();
+        pool.submit(Job::Reload {
+            only_if_changed: false,
+            reply: tx,
+        })
+        .unwrap();
+        let Response::Latency { latency_ms } = rx.recv().unwrap() else {
+            panic!("unexpected reply")
+        };
+        assert_eq!(latency_ms as usize, 7);
+        let (tx, rx) = channel();
+        pool.submit(Job::Onboard {
+            pair: Some((Instance::G4dn, Instance::G5)),
+            reply: tx,
+        })
+        .unwrap();
+        let Response::Latency { latency_ms } = rx.recv().unwrap() else {
+            panic!("unexpected reply")
+        };
+        assert_eq!(latency_ms as usize, 7);
+        // while the trainer queue backs up, predicts are unaffected
+        let (tx, rx) = channel();
+        pool.submit(Job::Predict(
+            predict_req(Instance::G4dn, Instance::P3),
+            snap(),
+            tx,
+        ))
+        .unwrap();
+        let Response::Latency { latency_ms } = rx.recv().unwrap() else {
+            panic!("unexpected reply")
+        };
+        assert!((latency_ms as usize) < 2, "{latency_ms}");
+    }
+
     fn reply_ok(job: Job) {
         match job {
-            Job::Predict(_, reply)
+            Job::Predict(_, _, reply)
             | Job::BatchSize { reply, .. }
             | Job::PixelSize { reply, .. }
             | Job::Recommend { reply, .. }
-            | Job::Plan { reply, .. } => {
+            | Job::Plan { reply, .. }
+            | Job::Ingest { reply, .. }
+            | Job::Onboard { reply, .. }
+            | Job::Reload { reply, .. } => {
                 let _ = reply.send(Response::Health);
             }
             Job::Shutdown => {}
@@ -538,13 +707,18 @@ mod tests {
         pool.submit(Job::Recommend {
             query: sample_query(),
             top_k: 0,
+            snap: snap(),
             reply: sweep_tx,
         })
         .unwrap();
         // while the "sweep" is stalled, a predict answers promptly
         let (tx, rx) = channel();
-        pool.submit(Job::Predict(predict_req(Instance::G4dn, Instance::P3), tx))
-            .unwrap();
+        pool.submit(Job::Predict(
+            predict_req(Instance::G4dn, Instance::P3),
+            snap(),
+            tx,
+        ))
+        .unwrap();
         let resp = rx
             .recv_timeout(Duration::from_secs(5))
             .expect("predict blocked behind an in-flight sweep");
@@ -586,6 +760,7 @@ mod tests {
             let r = pool.submit(Job::Recommend {
                 query: sample_query(),
                 top_k: 0,
+                snap: snap(),
                 reply: tx,
             });
             (r, rx)
@@ -605,8 +780,12 @@ mod tests {
         assert_eq!(pool.stats.overloaded.load(Ordering::Relaxed), 1);
         // predict lanes are unaffected by the advisor backlog
         let (tx, rx) = channel();
-        pool.submit(Job::Predict(predict_req(Instance::G4dn, Instance::P3), tx))
-            .unwrap();
+        pool.submit(Job::Predict(
+            predict_req(Instance::G4dn, Instance::P3),
+            snap(),
+            tx,
+        ))
+        .unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
         gate_tx.send(()).unwrap();
     }
@@ -620,7 +799,7 @@ mod tests {
         for i in 0..16 {
             let (tx, rx) = channel();
             let target = if i % 2 == 0 { Instance::P3 } else { Instance::P2 };
-            pool.submit(Job::Predict(predict_req(Instance::G4dn, target), tx))
+            pool.submit(Job::Predict(predict_req(Instance::G4dn, target), snap(), tx))
                 .unwrap();
             rxs.push(rx);
         }

@@ -10,15 +10,27 @@
 //! * [`advisor_lane`] — plain FIFO over long-running `recommend`/`plan`
 //!   sweeps, so they serialize behind each other instead of behind (or in
 //!   front of) predict traffic.
+//! * [`trainer_lane`] — plain FIFO over the registry's write side
+//!   (`ingest` staging appends, `onboard` retraining, `reload`). Training
+//!   a new device pair takes seconds; on its own lane that cost is
+//!   invisible to predict and advisor traffic, and the single-threaded
+//!   loop is what serializes every write to the staging area and the
+//!   model directory.
 //!
-//! Both loops flush every job they have accepted before exiting on
+//! Jobs carry the [`ModelSnapshot`] they were admitted with: a batch
+//! group only ever coalesces requests pinned to the **same** registry
+//! epoch (the group key includes it), so a swap landing mid-queue cannot
+//! mix two model generations inside one artifact execution, and pre-swap
+//! requests are answered by pre-swap models.
+//!
+//! All loops flush every job they have accepted before exiting on
 //! shutdown/disconnect — replies are never dropped on the floor.
 
 use crate::advisor::{self, CacheKey, Candidate, PlanChoice, PredictionCache};
 use crate::coordinator::dispatch::{EngineStats, Job};
 use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::coordinator::registry::{ModelRegistry, ModelSnapshot, OnboardOptions, RegistryError};
 use crate::gpu::Instance;
-use crate::predictor::Profet;
 use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
 use std::collections::BTreeMap;
@@ -29,24 +41,35 @@ use std::time::Duration;
 
 /// Batching window: how long a predict lane waits to coalesce more
 /// requests after a phase-1 predict group opens.
-pub(crate) const BATCH_WINDOW: Duration = Duration::from_millis(2);
+pub const BATCH_WINDOW: Duration = Duration::from_millis(2);
 
 /// State shared by every replica of one pool.
 #[derive(Clone)]
-pub(crate) struct LaneCtx {
+pub struct LaneCtx {
     pub cache: Arc<PredictionCache>,
     pub scaling: Arc<ScalingTable>,
     pub stats: Arc<EngineStats>,
+    /// The live model registry: snapshotted by the router per request,
+    /// mutated only by the trainer lane.
+    pub registry: Arc<ModelRegistry>,
+    /// Hyper-parameters for `onboard` retraining on the trainer lane.
+    pub onboard: OnboardOptions,
 }
 
-type PredictGroups = BTreeMap<(Instance, Instance), Vec<(PredictRequest, Sender<Response>)>>;
+/// Predict groups coalesce per (registry epoch, anchor, target): one
+/// artifact execution per group, and never across two model generations.
+type PredictGroups = BTreeMap<
+    (u64, Instance, Instance),
+    (ModelSnapshot, Vec<(PredictRequest, Sender<Response>)>),
+>;
 
 fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shutdown: &mut bool) {
     match job {
-        Job::Predict(req, reply) => {
+        Job::Predict(req, snap, reply) => {
             predicts
-                .entry((req.anchor, req.target))
-                .or_default()
+                .entry((snap.epoch, req.anchor, req.target))
+                .or_insert_with(|| (snap, Vec::new()))
+                .1
                 .push((req, reply));
         }
         Job::Shutdown => *shutdown = true,
@@ -56,7 +79,7 @@ fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shut
 
 /// Dynamic-batching predict loop (phase-1 `predict` + the cheap
 /// interpolation ops routed round-robin by the dispatcher).
-pub(crate) fn predict_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx: &LaneCtx) {
+pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
     loop {
         // block for the first job
         let first = match rx.recv() {
@@ -80,7 +103,7 @@ pub(crate) fn predict_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx
         }
         // answer cheap jobs before any coalescing wait
         for job in immediate.drain(..) {
-            run_immediate(job, rt, profet, ctx);
+            run_immediate(job, rt, ctx);
         }
         // the window is only armed while a predict group is pending
         if !predicts.is_empty() && !shutdown {
@@ -105,10 +128,10 @@ pub(crate) fn predict_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx
             }
             // cheap jobs that arrived during the window
             for job in immediate.drain(..) {
-                run_immediate(job, rt, profet, ctx);
+                run_immediate(job, rt, ctx);
             }
         }
-        run_predict_groups(predicts, rt, profet, ctx);
+        run_predict_groups(predicts, rt, ctx);
         if shutdown {
             return;
         }
@@ -117,25 +140,108 @@ pub(crate) fn predict_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx
 
 /// FIFO advisor loop: one long-running sweep at a time. Handles every job
 /// kind defensively (the dispatcher only routes `recommend`/`plan` here).
-pub(crate) fn advisor_lane(rt: &Runtime, profet: &Profet, rx: Receiver<Job>, ctx: &LaneCtx) {
+pub fn advisor_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
     for job in rx {
         match job {
             Job::Shutdown => return,
-            Job::Predict(req, reply) => {
+            Job::Predict(req, snap, reply) => {
                 let mut group: PredictGroups = BTreeMap::new();
                 group
-                    .entry((req.anchor, req.target))
-                    .or_default()
+                    .entry((snap.epoch, req.anchor, req.target))
+                    .or_insert_with(|| (snap, Vec::new()))
+                    .1
                     .push((req, reply));
-                run_predict_groups(group, rt, profet, ctx);
+                run_predict_groups(group, rt, ctx);
             }
-            other => run_immediate(other, rt, profet, ctx),
+            other => run_immediate(other, rt, ctx),
         }
     }
 }
 
+/// FIFO trainer loop: the registry's single writer. `ingest` appends are
+/// sub-millisecond; `onboard`/`reload` take as long as training/loading
+/// takes — which is exactly why this loop gets its own replica. Handles
+/// every job kind defensively (the dispatcher only routes
+/// `ingest`/`onboard`/`reload` here).
+pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
+    let stats = &ctx.stats;
+    for job in rx {
+        match job {
+            Job::Shutdown => return,
+            Job::Ingest { req, reply } => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let (anchor, target) = (req.anchor, req.target);
+                let resp = match ctx.registry.staging().append(&req) {
+                    Ok(staged) => Response::Ingested {
+                        anchor,
+                        target,
+                        staged,
+                    },
+                    Err(e) => Response::Err(format!("{e:#}")),
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Onboard { pair, reply } => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let resp = match ctx.registry.onboard(rt, pair, &ctx.onboard) {
+                    Ok(report) => Response::Onboarded {
+                        epoch: report.epoch,
+                        pairs: report.pairs.len(),
+                        staged: report.staged,
+                    },
+                    Err(e) => registry_error_response(e),
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Reload {
+                only_if_changed,
+                reply,
+            } => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let resp = match ctx.registry.reload(rt, only_if_changed) {
+                    Ok(Some(epoch)) => Response::Reloaded { epoch },
+                    // watcher mode, nothing changed: report the epoch that
+                    // is (still) current
+                    Ok(None) => Response::Reloaded {
+                        epoch: ctx.registry.epoch(),
+                    },
+                    Err(e) => registry_error_response(e),
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Predict(req, snap, reply) => {
+                let mut group: PredictGroups = BTreeMap::new();
+                group
+                    .entry((snap.epoch, req.anchor, req.target))
+                    .or_insert_with(|| (snap, Vec::new()))
+                    .1
+                    .push((req, reply));
+                run_predict_groups(group, rt, ctx);
+            }
+            other => run_immediate(other, rt, ctx),
+        }
+    }
+}
+
+/// Map a refused registry mutation to its structured wire error. The
+/// previous epoch is still serving in every branch — these are
+/// "nothing changed" errors, never partial states.
+fn registry_error_response(e: RegistryError) -> Response {
+    match e {
+        RegistryError::NoStagedData => Response::err_kind(
+            "no_staged_data",
+            "no staged measurements for the requested pair(s) — send `ingest` lines first",
+        ),
+        RegistryError::Rejected(err) => Response::err_kind(
+            "validation_failed",
+            format!("candidate rejected, previous epoch still serving: {err:#}"),
+        ),
+        RegistryError::Other(err) => Response::Err(format!("{err:#}")),
+    }
+}
+
 /// One non-phase-1-batched job (interpolation or advisor sweep).
-fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
+fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
     let stats = &ctx.stats;
     match job {
         Job::BatchSize {
@@ -143,10 +249,11 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
             batch,
             t_min,
             t_max,
+            snap,
             reply,
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
-            let resp = match profet.predict_batch_size(instance, batch, t_min, t_max) {
+            let resp = match snap.profet.predict_batch_size(instance, batch, t_min, t_max) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
@@ -157,10 +264,11 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
             pixels,
             t_min,
             t_max,
+            snap,
             reply,
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
-            let resp = match profet.predict_pixel_size(instance, pixels, t_min, t_max) {
+            let resp = match snap.profet.predict_pixel_size(instance, pixels, t_min, t_max) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
@@ -169,11 +277,19 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
         Job::Recommend {
             query,
             top_k,
+            snap,
             reply,
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
-            let resp = match advisor::sweep(rt, profet, &ctx.cache, &stats.cache, &ctx.scaling, &query)
-            {
+            let resp = match advisor::sweep(
+                rt,
+                snap.epoch,
+                &snap.profet,
+                &ctx.cache,
+                &stats.cache,
+                &ctx.scaling,
+                &query,
+            ) {
                 Ok(cands) if cands.is_empty() => Response::err_kind(
                     "no_candidates",
                     "no feasible (target, batch, pixels, gpus) candidate",
@@ -187,11 +303,19 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
             query,
             job,
             objective,
+            snap,
             reply,
         } => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
-            let resp = match advisor::sweep(rt, profet, &ctx.cache, &stats.cache, &ctx.scaling, &query)
-            {
+            let resp = match advisor::sweep(
+                rt,
+                snap.epoch,
+                &snap.profet,
+                &ctx.cache,
+                &stats.cache,
+                &ctx.scaling,
+                &query,
+            ) {
                 Ok(cands) if cands.is_empty() => Response::err_kind(
                     "no_candidates",
                     "no feasible (target, batch, pixels, gpus) candidate",
@@ -207,17 +331,24 @@ fn run_immediate(job: Job, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
             };
             let _ = reply.send(resp);
         }
+        // registry jobs are routed to the trainer lane; a defensive
+        // arrival here (only possible through test harnesses) answers
+        // with an error instead of silently dropping the reply
+        Job::Ingest { reply, .. } | Job::Onboard { reply, .. } | Job::Reload { reply, .. } => {
+            let _ = reply.send(Response::Err("registry op routed off the trainer lane".into()));
+        }
         Job::Predict(..) | Job::Shutdown => {}
     }
 }
 
 /// Batched phase-1 predictions: cache-first, then one artifact execution
-/// per (anchor, target) group over the *unique* misses.
-fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, profet: &Profet, ctx: &LaneCtx) {
+/// per (epoch, anchor, target) group over the *unique* misses.
+fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
     let stats = &ctx.stats;
     let cache = &ctx.cache;
-    for ((anchor, target), group) in predicts {
+    for ((epoch, anchor, target), (snap, group)) in predicts {
         stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
+        let profet = &snap.profet;
         let Some(model) = profet.cross.get(&(anchor, target)) else {
             for (_, reply) in group {
                 let _ = reply.send(Response::Err(format!("no model for {anchor}->{target}")));
@@ -231,7 +362,7 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, profet: &Profet, ct
         let mut miss_lats: Vec<f64> = Vec::new();
         let mut waiters: BTreeMap<CacheKey, Vec<usize>> = BTreeMap::new();
         for (i, (req, _)) in group.iter().enumerate() {
-            let key = CacheKey::of(anchor, target, req.anchor_latency_ms, &req.profile);
+            let key = CacheKey::of(epoch, anchor, target, req.anchor_latency_ms, &req.profile);
             if let Some(v) = cache.get(&key, &stats.cache) {
                 results[i] = Some(v);
                 continue;
@@ -374,5 +505,41 @@ mod tests {
             panic!("err response")
         };
         assert_eq!(candidates.len(), 3);
+    }
+
+    /// Predict jobs from different registry epochs never share a batch
+    /// group — the group key carries the epoch.
+    #[test]
+    fn absorb_groups_by_epoch_and_pair() {
+        use crate::coordinator::registry::empty_profet;
+        use std::collections::BTreeMap as Map;
+        use std::sync::mpsc::channel;
+        let req = |lat: f64| PredictRequest {
+            anchor: Instance::G4dn,
+            target: Instance::P3,
+            anchor_latency_ms: lat,
+            profile: Map::from([("Conv2D".to_string(), 1.0)]),
+        };
+        let snap_at = |epoch| ModelSnapshot {
+            epoch,
+            profet: Arc::new(empty_profet()),
+        };
+        let mut groups: PredictGroups = BTreeMap::new();
+        let mut immediate = Vec::new();
+        let mut shutdown = false;
+        for (epoch, lat) in [(1u64, 1.0), (1, 2.0), (2, 3.0), (1, 4.0)] {
+            let (tx, _rx) = channel();
+            absorb(
+                Job::Predict(req(lat), snap_at(epoch), tx),
+                &mut groups,
+                &mut immediate,
+                &mut shutdown,
+            );
+        }
+        assert_eq!(groups.len(), 2, "one group per (epoch, pair)");
+        assert_eq!(groups[&(1, Instance::G4dn, Instance::P3)].1.len(), 3);
+        assert_eq!(groups[&(2, Instance::G4dn, Instance::P3)].1.len(), 1);
+        assert!(immediate.is_empty());
+        assert!(!shutdown);
     }
 }

@@ -2,42 +2,58 @@
 //!
 //! The paper ships PROFET as a serverless endpoint (S3 + API Gateway +
 //! Lambda). Here the same serving semantics run as a self-contained TCP
-//! service speaking newline-delimited JSON:
+//! service speaking newline-delimited JSON (the end-to-end dataflow
+//! narrative, with diagrams, lives in `docs/ARCHITECTURE.md`; the wire
+//! reference in `docs/PROTOCOL.md`):
 //!
 //! * [`server`] — accept loop, one lightweight thread per connection,
 //!   bounded by a connection budget; `stop()` gracefully drains in-flight
-//!   connections (joins their handlers after flushing responses);
+//!   connections (joins their handlers after flushing responses); an
+//!   optional model-dir watcher hot-reloads the registry when the
+//!   directory changes;
 //! * [`router`] — request parsing/validation and dispatch over the
 //!   zero-allocation streaming wire layer (borrowed decode, typed
 //!   responses encoded straight into per-connection buffers; warm
 //!   `predict`s answered from the shared prediction cache without an
 //!   engine round trip — see `protocol.rs` §Wire path); full lane
 //!   queues answer with a structured `overloaded` error (backpressure);
+//! * [`registry`] — the live model registry: epoch-stamped `Arc<Profet>`
+//!   snapshots, validation-gated hot swaps (`reload`), and the staged
+//!   online-onboarding path (`ingest` → `onboard`) that brings a new GPU
+//!   instance type into a running service without dropping a request;
 //! * [`dispatch`] — the engine replica pool: N predict lanes + one
-//!   advisor lane, each replica owning its own non-`Send` PJRT
-//!   [`crate::runtime::Runtime`] + model registry. Phase-1 `predict`
+//!   advisor lane + one trainer lane, each replica owning its own
+//!   non-`Send` PJRT [`crate::runtime::Runtime`]. Phase-1 `predict`
 //!   jobs route by (anchor, target) affinity so dynamic batching still
-//!   coalesces; `recommend`/`plan` sweeps run on the advisor lane so a
-//!   sweep can never head-of-line-block predict traffic;
+//!   coalesces; `recommend`/`plan` sweeps run on the advisor lane and
+//!   registry writes (`ingest`/`onboard`/`reload`) on the trainer lane,
+//!   so neither sweeps nor multi-second training jobs can ever
+//!   head-of-line-block predict traffic;
 //! * [`lane`] — the per-replica work loops: the dynamic batcher (one
-//!   fixed-shape MLP artifact execution per coalesced (anchor, target)
-//!   group — the `b_pred`-row batch the HLO was lowered with) and the
-//!   FIFO advisor loop. The sharded phase-1 prediction cache and the
-//!   multi-GPU scaling table are shared (`Arc`) across all replicas.
+//!   fixed-shape MLP artifact execution per coalesced (epoch, anchor,
+//!   target) group — the `b_pred`-row batch the HLO was lowered with),
+//!   the FIFO advisor loop, and the FIFO trainer loop. The sharded
+//!   phase-1 prediction cache and the multi-GPU scaling table are shared
+//!   (`Arc`) across all replicas.
 //!
 //! Python never appears anywhere on this path: requests go JSON → feature
 //! vector → HLO executable → JSON.
 
-mod dispatch;
-mod lane;
-mod protocol;
-mod router;
-mod server;
+pub mod dispatch;
+pub mod lane;
+pub mod protocol;
+pub mod registry;
+pub mod router;
+pub mod server;
 
 pub use dispatch::{EnginePool, EngineStats, Job, PoolOptions, SubmitError};
 pub use protocol::{
     parse_line, ParseError, ParsedLine, PredictRequest, PredictView, Request, Response,
     WireScratch,
+};
+pub use registry::{
+    IngestRequest, ModelRegistry, ModelSnapshot, OnboardOptions, OnboardReport, RegistryError,
+    StagingArea,
 };
 pub use router::{respond, route, ConnScratch};
 pub use server::{serve, serve_with, ServeOptions, ServerHandle, MAX_LINE_BYTES};

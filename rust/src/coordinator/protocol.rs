@@ -1,15 +1,22 @@
 //! Wire protocol: newline-delimited JSON requests/responses.
 //!
+//! The complete op-by-op reference with request/response examples and the
+//! full error-kind table lives in `docs/PROTOCOL.md`; this table is the
+//! in-tree summary:
+//!
 //! | op | request fields | reply fields |
 //! |----|----------------|--------------|
 //! | `health` | — | `status` |
-//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload` |
 //! | `instances` | — | `instances[]` (key, gpu, price_hr) |
 //! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
 //! | `predict_batch_size` | `instance`, `batch`, `t_min`, `t_max` | `latency_ms` |
 //! | `predict_pixel_size` | `instance`, `pixels`, `t_min`, `t_max` | `latency_ms` |
 //! | `recommend` | `anchor`, `pixels`, `profile_bmin`/`anchor_lat_bmin`, `profile_bmax`/`anchor_lat_bmax`, optional `profile_pmin`/`anchor_lat_pmin`/`profile_pmax`/`anchor_lat_pmax`, optional `targets[]`, `batches[]`, `pixel_sizes[]`, `gpu_counts[]`, `include_spot`, `top_k` | `candidates[]` (each with `on_frontier`), `n_candidates`, `frontier_size` |
 //! | `plan` | `recommend` fields + `objective` (`cheapest`\|`fastest`\|`max_epochs`), `dataset_images`, `epochs`, `deadline_hours`\|`budget_usd` | `choice`, `hours`, `cost_usd`, `epochs`, `n_considered` |
+//! | `ingest` | `anchor`, `target`, `model`, `batch`, `pixels`, `profile`, `anchor_latency_ms`, `target_latency_ms` | `anchor`, `target`, `staged` |
+//! | `onboard` | optional `anchor` + `target` (both or neither; absent = every staged pair) | `epoch`, `pairs`, `staged` |
+//! | `reload` | — | `epoch` |
 //!
 //! Example request lines:
 //! ```json
@@ -36,7 +43,11 @@
 //! unrecognized `op` value and `bad_request` for malformed payloads.
 //! Under load shedding the service answers `kind:"overloaded"` (full
 //! engine-lane queue, or a connection past the server's budget) — the
-//! request was NOT executed and should be retried with backoff.
+//! request was NOT executed and should be retried with backoff. The
+//! registry ops add `no_staged_data` (`onboard` with nothing ingested)
+//! and `validation_failed` (`onboard`/`reload` candidate rejected by the
+//! registry's probe gate — the previous epoch is still serving). The full
+//! kind table is in `docs/PROTOCOL.md`.
 //!
 //! # Wire path (DOM-free hot loop)
 //!
@@ -60,7 +71,9 @@
 //! the same errors, byte offsets included.
 
 use crate::advisor::{Candidate, EndpointProfiles, Objective, SweepRequest, TrainingJob};
+use crate::coordinator::registry::IngestRequest;
 use crate::gpu::Instance;
+use crate::models::ModelId;
 use crate::predictor::Member;
 use crate::sim::workload::{BATCHES, PIXELS};
 use crate::util::json_stream::{JsonWriter, LineScratch, RawElem, RawVal};
@@ -109,6 +122,14 @@ pub enum Request {
         job: TrainingJob,
         objective: Objective,
     },
+    /// Stage one profiled measurement for a device pair (the online
+    /// onboarding input path; see `coordinator::registry`).
+    Ingest(IngestRequest),
+    /// Train the staged pair(s) and publish a new registry epoch.
+    /// `pair == None` onboards every staged pair.
+    Onboard { pair: Option<(Instance, Instance)> },
+    /// Re-load the model directory and publish it as a new epoch.
+    Reload,
 }
 
 /// Why a request line was rejected. `UnknownOp` is split out so the
@@ -241,6 +262,27 @@ impl Request {
                     }
                 }
             }
+            Request::Ingest(r) => {
+                o.set("op", Json::Str("ingest".into()));
+                o.set("anchor", Json::Str(r.anchor.key().into()));
+                o.set("target", Json::Str(r.target.key().into()));
+                o.set("model", Json::Str(r.model.name().into()));
+                o.set("batch", Json::Num(r.batch as f64));
+                o.set("pixels", Json::Num(r.pixels as f64));
+                o.set("profile", profile_json(&r.profile));
+                o.set("anchor_latency_ms", Json::Num(r.anchor_latency_ms));
+                o.set("target_latency_ms", Json::Num(r.target_latency_ms));
+            }
+            Request::Onboard { pair } => {
+                o.set("op", Json::Str("onboard".into()));
+                if let Some((a, t)) = pair {
+                    o.set("anchor", Json::Str(a.key().into()));
+                    o.set("target", Json::Str(t.key().into()));
+                }
+            }
+            Request::Reload => {
+                o.set("op", Json::Str("reload".into()));
+            }
         }
         o
     }
@@ -326,6 +368,9 @@ pub fn parse_line<'s>(
         "predict_pixel_size" => Op::PixelSize,
         "recommend" => Op::Recommend,
         "plan" => Op::Plan,
+        "ingest" => Op::Ingest,
+        "onboard" => Op::Onboard,
+        "reload" => Op::Reload,
         other => return Err(ParseError::UnknownOp(other.to_string())),
     };
     wire_request(op, line, ls).map_err(ParseError::Malformed)
@@ -341,6 +386,9 @@ enum Op {
     PixelSize,
     Recommend,
     Plan,
+    Ingest,
+    Onboard,
+    Reload,
 }
 
 fn wire_request<'s>(
@@ -394,7 +442,66 @@ fn wire_request<'s>(
             },
         },
         Op::Plan => sraw_plan(ls, line)?,
+        Op::Ingest => sraw_ingest(ls, line)?,
+        Op::Onboard => Request::Onboard {
+            pair: sraw_onboard_pair(ls, line)?,
+        },
+        Op::Reload => Request::Reload,
     }))
+}
+
+/// Streaming mirror of [`parse_ingest`] — same field order, same checks,
+/// same messages.
+fn sraw_ingest(ls: &mut LineScratch, line: &str) -> anyhow::Result<Request> {
+    let anchor = sraw_req_instance(ls, line, "anchor")?;
+    let target = sraw_req_instance(ls, line, "target")?;
+    anyhow::ensure!(anchor != target, "`anchor` and `target` must differ");
+    let model = ModelId::from_name(sraw_req_str(ls, line, "model")?)
+        .ok_or_else(|| anyhow!("unknown model in `model`"))?;
+    let batch = match ls.field(line, "batch") {
+        None => anyhow::bail!("missing `batch`"),
+        Some(v) => sraw_as_usize_strict(&v, "`batch`")?,
+    };
+    anyhow::ensure!(batch >= 1, "`batch` must be at least 1");
+    let pixels = match ls.field(line, "pixels") {
+        None => anyhow::bail!("missing `pixels`"),
+        Some(v) => sraw_as_usize_strict(&v, "`pixels`")?,
+    };
+    anyhow::ensure!(pixels >= 1, "`pixels` must be at least 1");
+    let profile = sraw_profile_map(ls, line, "profile")?;
+    Ok(Request::Ingest(IngestRequest {
+        anchor,
+        target,
+        model,
+        batch,
+        pixels,
+        profile,
+        anchor_latency_ms: sraw_req_positive(ls, line, "anchor_latency_ms")?,
+        target_latency_ms: sraw_req_positive(ls, line, "target_latency_ms")?,
+    }))
+}
+
+/// Streaming mirror of the `onboard` pair rule: both fields, or neither.
+fn sraw_onboard_pair(
+    ls: &LineScratch,
+    line: &str,
+) -> anyhow::Result<Option<(Instance, Instance)>> {
+    let anchor = match ls.field(line, "anchor") {
+        None => None,
+        Some(_) => Some(sraw_req_instance(ls, line, "anchor")?),
+    };
+    let target = match ls.field(line, "target") {
+        None => None,
+        Some(_) => Some(sraw_req_instance(ls, line, "target")?),
+    };
+    match (anchor, target) {
+        (Some(a), Some(t)) => {
+            anyhow::ensure!(a != t, "`anchor` and `target` must differ");
+            Ok(Some((a, t)))
+        }
+        (None, None) => Ok(None),
+        _ => anyhow::bail!("`anchor` and `target` must be given together"),
+    }
 }
 
 fn sraw_req_str<'a>(ls: &'a LineScratch, line: &'a str, key: &str) -> anyhow::Result<&'a str> {
@@ -689,8 +796,59 @@ fn parse_fields(op: &str, j: &Json) -> anyhow::Result<Option<Request>> {
             },
         },
         "plan" => parse_plan(j)?,
+        "ingest" => parse_ingest(j)?,
+        "onboard" => parse_onboard(j)?,
+        "reload" => Request::Reload,
         _ => return Ok(None),
     }))
+}
+
+/// DOM reference decoder for `ingest` (field order mirrored by
+/// [`sraw_ingest`]).
+fn parse_ingest(j: &Json) -> anyhow::Result<Request> {
+    let anchor = req_instance(j, "anchor")?;
+    let target = req_instance(j, "target")?;
+    anyhow::ensure!(anchor != target, "`anchor` and `target` must differ");
+    let model = ModelId::from_name(j.req_str("model")?)
+        .ok_or_else(|| anyhow!("unknown model in `model`"))?;
+    let batch = as_usize_strict(req_field(j, "batch")?, "`batch`")?;
+    anyhow::ensure!(batch >= 1, "`batch` must be at least 1");
+    let pixels = as_usize_strict(req_field(j, "pixels")?, "`pixels`")?;
+    anyhow::ensure!(pixels >= 1, "`pixels` must be at least 1");
+    let profile = parse_profile(j, "profile")?;
+    Ok(Request::Ingest(IngestRequest {
+        anchor,
+        target,
+        model,
+        batch,
+        pixels,
+        profile,
+        anchor_latency_ms: req_positive(j, "anchor_latency_ms")?,
+        target_latency_ms: req_positive(j, "target_latency_ms")?,
+    }))
+}
+
+/// DOM reference decoder for `onboard` (rule mirrored by
+/// [`sraw_onboard_pair`]): a pair restricts the onboard to one staged
+/// `(anchor, target)`; both fields must come together.
+fn parse_onboard(j: &Json) -> anyhow::Result<Request> {
+    let anchor = match j.get("anchor") {
+        None => None,
+        Some(_) => Some(req_instance(j, "anchor")?),
+    };
+    let target = match j.get("target") {
+        None => None,
+        Some(_) => Some(req_instance(j, "target")?),
+    };
+    let pair = match (anchor, target) {
+        (Some(a), Some(t)) => {
+            anyhow::ensure!(a != t, "`anchor` and `target` must differ");
+            Some((a, t))
+        }
+        (None, None) => None,
+        _ => anyhow::bail!("`anchor` and `target` must be given together"),
+    };
+    Ok(Request::Onboard { pair })
 }
 
 fn req_field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
@@ -989,6 +1147,11 @@ pub enum Response {
         predict_lanes: usize,
         cache_hits: u64,
         cache_misses: u64,
+        /// Current model-registry epoch (starts at 1; bumps on every
+        /// successful `onboard`/`reload`).
+        registry_epoch: u64,
+        /// Unix ms of the last successful post-boot publish; 0 = never.
+        last_reload: u64,
     },
     /// `instances` catalogue (payload derived from [`Instance::ALL`] at
     /// encode time — nothing to allocate or carry).
@@ -1012,6 +1175,22 @@ pub enum Response {
         epochs: f64,
         n_considered: usize,
     },
+    /// `ingest` acknowledgement: the pair and its staged count so far.
+    Ingested {
+        anchor: Instance,
+        target: Instance,
+        staged: usize,
+    },
+    /// `onboard` success: the published epoch, pairs trained, and staged
+    /// measurements consumed.
+    Onboarded {
+        epoch: u64,
+        pairs: usize,
+        staged: usize,
+    },
+    /// `reload` success (also the watcher's no-op answer): the current
+    /// epoch after the call.
+    Reloaded { epoch: u64 },
     /// Generic error (engine/model failures).
     Err(String),
     /// Structured error with a stable machine-readable kind tag.
@@ -1054,15 +1233,19 @@ impl Response {
                 predict_lanes,
                 cache_hits,
                 cache_misses,
+                registry_epoch,
+                last_reload,
             } => {
                 w.begin_obj();
                 w.key("artifact_batches").num(*artifact_batches as f64);
                 w.key("avg_batch_fill").num(*avg_batch_fill);
                 w.key("cache_hits").num(*cache_hits as f64);
                 w.key("cache_misses").num(*cache_misses as f64);
+                w.key("last_reload").num(*last_reload as f64);
                 w.key("ok").bool_(true);
                 w.key("overloaded").num(*overloaded as f64);
                 w.key("predict_lanes").num(*predict_lanes as f64);
+                w.key("registry_epoch").num(*registry_epoch as f64);
                 w.key("requests").num(*requests as f64);
                 w.end_obj();
             }
@@ -1123,6 +1306,36 @@ impl Response {
                 w.key("epochs").num(*epochs);
                 w.key("hours").num(*hours);
                 w.key("n_considered").num(*n_considered as f64);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::Ingested {
+                anchor,
+                target,
+                staged,
+            } => {
+                w.begin_obj();
+                w.key("anchor").str_(anchor.key());
+                w.key("ok").bool_(true);
+                w.key("staged").num(*staged as f64);
+                w.key("target").str_(target.key());
+                w.end_obj();
+            }
+            Response::Onboarded {
+                epoch,
+                pairs,
+                staged,
+            } => {
+                w.begin_obj();
+                w.key("epoch").num(*epoch as f64);
+                w.key("ok").bool_(true);
+                w.key("pairs").num(*pairs as f64);
+                w.key("staged").num(*staged as f64);
+                w.end_obj();
+            }
+            Response::Reloaded { epoch } => {
+                w.begin_obj();
+                w.key("epoch").num(*epoch as f64);
                 w.key("ok").bool_(true);
                 w.end_obj();
             }
@@ -1274,6 +1487,26 @@ mod tests {
                 objective,
             });
         }
+        // registry ops: ingest, onboard (targeted and catch-all), reload
+        roundtrip(&Request::Ingest(sample_ingest()));
+        roundtrip(&Request::Onboard {
+            pair: Some((Instance::G4dn, Instance::G5)),
+        });
+        roundtrip(&Request::Onboard { pair: None });
+        roundtrip(&Request::Reload);
+    }
+
+    fn sample_ingest() -> IngestRequest {
+        IngestRequest {
+            anchor: Instance::G4dn,
+            target: Instance::G5,
+            model: ModelId::from_name("VGG16").unwrap(),
+            batch: 32,
+            pixels: 64,
+            profile: profile(&[("Conv2D", 80.5), ("Relu", 8.25)]),
+            anchor_latency_ms: 120.5,
+            target_latency_ms: 60.25,
+        }
     }
 
     #[test]
@@ -1332,6 +1565,17 @@ mod tests {
             r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"epochs":1e400,"objective":"fastest","budget_usd":5}"#,
             r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"objective":"soonest","deadline_hours":1}"#,
             r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"dataset_images":1000,"objective":"fastest"}"#,
+            // ingest: identity pair, unknown model, zero batch, missing
+            // target latency, non-finite profile value
+            r#"{"op":"ingest","anchor":"g4dn","target":"g4dn","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+            r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"NotANet","batch":32,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+            r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":0,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+            r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10}"#,
+            r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1e400},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+            // onboard: lone anchor, identity pair, unknown instance
+            r#"{"op":"onboard","anchor":"g4dn"}"#,
+            r#"{"op":"onboard","anchor":"g4dn","target":"g4dn"}"#,
+            r#"{"op":"onboard","anchor":"g4dn","target":"warp9"}"#,
         ] {
             let err = Request::parse(line).unwrap_err();
             assert!(
@@ -1438,6 +1682,8 @@ mod tests {
                     predict_lanes: 4,
                     cache_hits: 9,
                     cache_misses: 8,
+                    registry_epoch: 2,
+                    last_reload: 1_753_600_000_123,
                 },
                 {
                     let mut o = Json::obj();
@@ -1449,9 +1695,47 @@ mod tests {
                     o.set("predict_lanes", Json::Num(4.0));
                     o.set("cache_hits", Json::Num(9.0));
                     o.set("cache_misses", Json::Num(8.0));
+                    o.set("registry_epoch", Json::Num(2.0));
+                    o.set("last_reload", Json::Num(1_753_600_000_123.0));
                     o
                 },
             ),
+            (
+                Response::Ingested {
+                    anchor: Instance::G4dn,
+                    target: Instance::G5,
+                    staged: 12,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("anchor", Json::Str("g4dn".into()));
+                    o.set("target", Json::Str("g5".into()));
+                    o.set("staged", Json::Num(12.0));
+                    o
+                },
+            ),
+            (
+                Response::Onboarded {
+                    epoch: 3,
+                    pairs: 2,
+                    staged: 48,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("epoch", Json::Num(3.0));
+                    o.set("pairs", Json::Num(2.0));
+                    o.set("staged", Json::Num(48.0));
+                    o
+                },
+            ),
+            (Response::Reloaded { epoch: 4 }, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("epoch", Json::Num(4.0));
+                o
+            }),
             (Response::Instances, {
                 let mut o = Json::obj();
                 o.set("ok", Json::Bool(true));
@@ -1571,6 +1855,10 @@ mod tests {
             " { \"op\" : \"health\" } ".into(),
             r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.5}"#.into(),
             r#"{"op":"predict_pixel_size","instance":"ac1","pixels":128,"t_min":10.25,"t_max":90.75}"#.into(),
+            r#"{"op":"reload"}"#.into(),
+            r#"{"op":"onboard"}"#.into(),
+            r#"{"op":"onboard","anchor":"g4dn","target":"g5"}"#.into(),
+            r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":80.5,"Relu":8.25},"anchor_latency_ms":120.5,"target_latency_ms":60.25}"#.into(),
         ];
         // roundtrip corpus: every variant's canonical serialization
         lines.push(

@@ -1,0 +1,841 @@
+//! Live model registry: epoch-stamped, hot-swappable [`Profet`] model
+//! sets plus the on-disk staging area behind online GPU onboarding.
+//!
+//! PROFET's premise is that cloud GPU catalogues move faster than anyone
+//! can re-benchmark them — yet until this module existed, the serving
+//! stack loaded its trained models exactly once at
+//! [`EnginePool::spawn`](crate::coordinator::dispatch::EnginePool::spawn)
+//! and never again: onboarding a new instance type meant killing a
+//! process that had learned to drain gracefully and answer warm predicts
+//! with zero allocations. The registry turns the model set into a live,
+//! versioned subsystem:
+//!
+//! * **Epoch-stamped snapshots.** The current model set is an
+//!   `Arc<Profet>` tagged with a monotonically increasing epoch. Readers
+//!   ([`ModelRegistry::snapshot`]) take a lightweight lock just long
+//!   enough to clone the `Arc` — one refcount bump per request, no
+//!   allocation, and never blocked behind model loading or training
+//!   (swaps prepare the candidate entirely outside the lock). A request
+//!   keeps the snapshot it started with, so an in-flight predict is
+//!   always answered by the epoch that admitted it, however many swaps
+//!   land while it waits in a lane queue.
+//! * **Validation before swap.** A candidate only becomes current after
+//!   [`ModelRegistry::validate`]: every `(anchor, target)` ensemble must
+//!   predict a finite, positive latency for a canned probe profile, and
+//!   every batch/pixel model must interpolate finitely. A candidate that
+//!   fails leaves the old epoch serving — a bad `reload` or `onboard` can
+//!   degrade nothing.
+//! * **Implicit cache invalidation.** The registry epoch is a component
+//!   of every phase-1 [`CacheKey`](crate::advisor::CacheKey): publishing
+//!   a new epoch makes all old entries unreachable without flushing (or
+//!   even locking) the shared prediction cache. Stale entries age out by
+//!   FIFO eviction.
+//! * **Staging + onboarding.** [`StagingArea`] persists profiled anchor
+//!   measurements per `(anchor, target)` pair (the `ingest` op) under
+//!   `<model_dir>/staging/`; [`ModelRegistry::onboard`] turns the staged
+//!   measurements into a corpus, retrains exactly the affected pairs via
+//!   [`Profet::retrain_pairs`] (frozen feature space, identical seed
+//!   derivation to [`Profet::train`]), persists the merged model set, and
+//!   publishes it as a new epoch. Training runs on the coordinator's
+//!   dedicated trainer lane, so it can never block predict traffic.
+//!
+//! The registry is deliberately runtime-free: everything needing the
+//! non-`Send` PJRT [`Runtime`] (probe validation, training) borrows one
+//! from the calling lane.
+
+use crate::data::{Corpus, Entry, RunData};
+use crate::gpu::Instance;
+use crate::models::ModelId;
+use crate::predictor::{Profet, TrainOptions};
+use crate::runtime::Runtime;
+use crate::sim::Workload;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One coherent view of the model set: the epoch it was published at plus
+/// the models themselves. Cloning is one `Arc` refcount bump — this is
+/// what every request captures at admission and carries through the lane
+/// queues, so concurrent swaps never change the models under a request.
+#[derive(Clone)]
+pub struct ModelSnapshot {
+    /// Monotonic publish counter; starts at 1 for the initial load.
+    pub epoch: u64,
+    pub profet: Arc<Profet>,
+}
+
+/// Why a registry mutation was refused. Split out so the serving layer
+/// can answer with distinct structured error kinds instead of one opaque
+/// string.
+#[derive(Debug)]
+pub enum RegistryError {
+    /// `onboard` found no staged measurements for the requested pair(s).
+    NoStagedData,
+    /// The candidate failed the pre-publish validation gate; the previous
+    /// epoch is still serving.
+    Rejected(anyhow::Error),
+    /// Anything else (I/O, training failure, malformed staging data); the
+    /// previous epoch is still serving.
+    Other(anyhow::Error),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::NoStagedData => {
+                write!(f, "no staged measurements — send `ingest` lines first")
+            }
+            RegistryError::Rejected(e) => write!(f, "candidate rejected: {e:#}"),
+            RegistryError::Other(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Hyper-parameters for online onboarding (smaller than a full offline
+/// `repro train` — staged corpora are small and the trainer lane should
+/// turn them around in seconds).
+#[derive(Debug, Clone)]
+pub struct OnboardOptions {
+    pub n_trees: usize,
+    pub dnn_epochs: usize,
+    pub poly_order: usize,
+    pub seed: u64,
+}
+
+impl Default for OnboardOptions {
+    fn default() -> OnboardOptions {
+        OnboardOptions {
+            n_trees: 40,
+            dnn_epochs: 25,
+            poly_order: 2,
+            seed: 0xB0A7,
+        }
+    }
+}
+
+/// What an `onboard` published.
+#[derive(Debug, Clone)]
+pub struct OnboardReport {
+    /// The newly current epoch.
+    pub epoch: u64,
+    /// Pairs retrained and published.
+    pub pairs: Vec<(Instance, Instance)>,
+    /// Staged measurements consumed across those pairs.
+    pub staged: usize,
+}
+
+/// The minimum staged measurements per pair before `onboard` will try to
+/// train (the ensemble itself requires ≥ 20 paired observations; checking
+/// here gives a precise error before any training cost is paid).
+pub const MIN_STAGED_PER_PAIR: usize = 20;
+
+// ---------------------------------------------------------------------------
+// Staging area
+// ---------------------------------------------------------------------------
+
+/// One profiled measurement for a device pair, as carried by the `ingest`
+/// op: the anchor-side aggregated profile + latency and the target-side
+/// ground-truth latency for one known workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IngestRequest {
+    pub anchor: Instance,
+    pub target: Instance,
+    pub model: ModelId,
+    pub batch: usize,
+    pub pixels: usize,
+    pub profile: BTreeMap<String, f64>,
+    pub anchor_latency_ms: f64,
+    pub target_latency_ms: f64,
+}
+
+impl IngestRequest {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", Json::Str(self.model.name().into()));
+        o.set("batch", Json::Num(self.batch as f64));
+        o.set("pixels", Json::Num(self.pixels as f64));
+        o.set("anchor_latency_ms", Json::Num(self.anchor_latency_ms));
+        o.set("target_latency_ms", Json::Num(self.target_latency_ms));
+        let mut prof = Json::obj();
+        for (k, v) in &self.profile {
+            prof.set(k, Json::Num(*v));
+        }
+        o.set("profile", prof);
+        o
+    }
+}
+
+/// Append-only on-disk staging for ingested measurements: one JSONL file
+/// per `(anchor, target)` pair under `<model_dir>/staging/`. Writes are
+/// serialized by construction — only the coordinator's single trainer
+/// lane touches the staging area — so no file locking is needed.
+///
+/// Per-pair line counts are cached in memory (seeded from the file on
+/// first touch), so an N-measurement ingest stream costs N appends, not
+/// the N² line re-counts a count-by-re-reading scheme would.
+pub struct StagingArea {
+    dir: PathBuf,
+    counts: Mutex<BTreeMap<(Instance, Instance), usize>>,
+}
+
+impl StagingArea {
+    pub fn new(model_dir: &Path) -> StagingArea {
+        StagingArea {
+            dir: model_dir.join("staging"),
+            counts: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The staging directory (`<model_dir>/staging`).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn pair_path(&self, anchor: Instance, target: Instance) -> PathBuf {
+        self.dir
+            .join(format!("{}_{}.jsonl", anchor.key(), target.key()))
+    }
+
+    /// Append one measurement; returns the total staged count for the
+    /// pair afterwards.
+    pub fn append(&self, req: &IngestRequest) -> Result<usize> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        // seed the cached count from disk BEFORE the write so the
+        // increment below lands on the right base (and a failed write
+        // leaves the count untouched)
+        let base = self.count(req.anchor, req.target);
+        let path = self.pair_path(req.anchor, req.target);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        writeln!(f, "{}", req.to_json())?;
+        f.flush()?;
+        let n = base + 1;
+        self.counts
+            .lock()
+            .unwrap()
+            .insert((req.anchor, req.target), n);
+        Ok(n)
+    }
+
+    /// Staged measurement count for one pair (0 when nothing staged).
+    /// Served from the in-memory counter once a pair has been touched;
+    /// cold pairs (e.g. staged by a previous process) are counted from
+    /// the file once and cached.
+    pub fn count(&self, anchor: Instance, target: Instance) -> usize {
+        if let Some(&n) = self.counts.lock().unwrap().get(&(anchor, target)) {
+            return n;
+        }
+        let n = match std::fs::read_to_string(self.pair_path(anchor, target)) {
+            Ok(text) => text.lines().filter(|l| !l.trim().is_empty()).count(),
+            Err(_) => 0,
+        };
+        self.counts.lock().unwrap().insert((anchor, target), n);
+        n
+    }
+
+    /// Every pair with at least one staged measurement, sorted.
+    pub fn staged_pairs(&self) -> Vec<(Instance, Instance)> {
+        let mut pairs = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return pairs;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".jsonl") else {
+                continue;
+            };
+            let Some((a, t)) = stem.split_once('_') else {
+                continue;
+            };
+            if let (Some(a), Some(t)) = (Instance::from_key(a), Instance::from_key(t)) {
+                pairs.push((a, t));
+            }
+        }
+        pairs.sort_unstable();
+        pairs
+    }
+
+    /// Materialize the staged measurements for `pairs` as a training
+    /// corpus: each measurement becomes one entry with an anchor run
+    /// (profile + latency) and a target run (ground-truth latency; the
+    /// target-side profile is not collected by `ingest` and is not needed
+    /// for cross-instance training). Returns the corpus and the total
+    /// measurement count.
+    pub fn corpus_for(&self, pairs: &[(Instance, Instance)]) -> Result<(Corpus, usize)> {
+        let mut corpus = Corpus::default();
+        let mut total = 0usize;
+        for &(anchor, target) in pairs {
+            let path = self.pair_path(anchor, target);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            for (ln, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let j = Json::parse(line).with_context(|| {
+                    format!("staging {}:{} is not valid JSON", path.display(), ln + 1)
+                })?;
+                let model = ModelId::from_name(j.req_str("model")?)
+                    .ok_or_else(|| anyhow!("staging line {}: unknown model", ln + 1))?;
+                let workload = Workload::new(model, j.req_usize("batch")?, j.req_usize("pixels")?);
+                let mut profile = BTreeMap::new();
+                if let Some(Json::Obj(m)) = j.get("profile") {
+                    for (op, v) in m {
+                        profile.insert(
+                            op.clone(),
+                            v.as_f64()
+                                .ok_or_else(|| anyhow!("staging line {}: bad profile", ln + 1))?,
+                        );
+                    }
+                }
+                let mut runs = BTreeMap::new();
+                runs.insert(
+                    anchor,
+                    RunData {
+                        profile,
+                        latency_ms: j.req_f64("anchor_latency_ms")?,
+                    },
+                );
+                runs.insert(
+                    target,
+                    RunData {
+                        profile: BTreeMap::new(),
+                        latency_ms: j.req_f64("target_latency_ms")?,
+                    },
+                );
+                corpus.entries.push(Entry { workload, runs });
+                total += 1;
+            }
+        }
+        Ok((corpus, total))
+    }
+
+    /// Drop the staged measurements for one pair (after a successful
+    /// onboard consumed them).
+    pub fn clear(&self, anchor: Instance, target: Instance) -> Result<()> {
+        let path = self.pair_path(anchor, target);
+        if path.exists() {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing {}", path.display()))?;
+        }
+        self.counts.lock().unwrap().remove(&(anchor, target));
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// The canned probe profile for the validation gate: a plausible
+/// aggregated CNN profile every healthy cross-instance ensemble must map
+/// to a finite, positive latency. Ops unknown to a model's feature space
+/// vectorize to zero, so the probe also exercises the
+/// frozen-vocabulary path an onboarded model serves with.
+fn probe_profile() -> BTreeMap<String, f64> {
+    BTreeMap::from([
+        ("Conv2D".to_string(), 120.0),
+        ("MatMul".to_string(), 45.0),
+        ("Relu".to_string(), 12.0),
+        ("FusedBatchNormV3".to_string(), 20.0),
+    ])
+}
+
+/// Anchor latency the probe profile is presented at.
+const PROBE_ANCHOR_LATENCY_MS: f64 = 200.0;
+
+/// Epoch-stamped, hot-swappable holder of the current [`Profet`] model
+/// set. See the [module docs](self) for the full design; in short:
+/// readers clone an `Arc` under a lightweight lock and keep that snapshot
+/// for the life of their request, writers validate a candidate end to end
+/// and then swap the `Arc` in one short critical section.
+pub struct ModelRegistry {
+    current: Mutex<ModelSnapshot>,
+    /// Lock-free mirror of the current epoch (for `stats` and hot paths
+    /// that only need the number).
+    epoch: AtomicU64,
+    /// Unix milliseconds of the last successful publish after the initial
+    /// load; `0` until the first `reload`/`onboard` lands.
+    last_reload_unix_ms: AtomicU64,
+    /// Fingerprint of the model dir contents at the last load/publish —
+    /// lets the mtime watcher skip reloads for directories it has already
+    /// seen (including the registry's own `onboard` saves).
+    dir_fingerprint: AtomicU64,
+    model_dir: PathBuf,
+    staging: StagingArea,
+}
+
+impl ModelRegistry {
+    /// Load the initial epoch from `model_dir` (manifest-checked by
+    /// [`Profet::load`]). The full runtime probe gate runs on the trainer
+    /// lane once it has a [`Runtime`] — see
+    /// [`ModelRegistry::validate`].
+    pub fn open(model_dir: PathBuf) -> Result<ModelRegistry> {
+        let profet = Profet::load(&model_dir)
+            .with_context(|| format!("models: {}", model_dir.display()))?;
+        Ok(ModelRegistry::with_model(profet, model_dir))
+    }
+
+    /// Wrap an already-built model set (tests; also the path `serve`
+    /// takes when it trained in-process). Epoch starts at 1.
+    pub fn with_model(profet: Profet, model_dir: PathBuf) -> ModelRegistry {
+        let reg = ModelRegistry {
+            current: Mutex::new(ModelSnapshot {
+                epoch: 1,
+                profet: Arc::new(profet),
+            }),
+            epoch: AtomicU64::new(1),
+            last_reload_unix_ms: AtomicU64::new(0),
+            dir_fingerprint: AtomicU64::new(0),
+            staging: StagingArea::new(&model_dir),
+            model_dir,
+        };
+        reg.dir_fingerprint
+            .store(dir_fingerprint(&reg.model_dir), Ordering::SeqCst);
+        reg
+    }
+
+    /// The model directory this registry loads from and persists to.
+    pub fn model_dir(&self) -> &Path {
+        &self.model_dir
+    }
+
+    /// The staging area for `ingest`ed measurements.
+    pub fn staging(&self) -> &StagingArea {
+        &self.staging
+    }
+
+    /// Clone the current snapshot: one short lock, one `Arc` refcount
+    /// bump, zero allocations. Requests call this exactly once at
+    /// admission and carry the snapshot with them.
+    pub fn snapshot(&self) -> ModelSnapshot {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The current epoch (lock-free; for `stats` and monitoring).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Unix ms of the last successful post-boot publish (0 = never).
+    pub fn last_reload_unix_ms(&self) -> u64 {
+        self.last_reload_unix_ms.load(Ordering::SeqCst)
+    }
+
+    /// The pre-publish validation gate: every cross-instance ensemble
+    /// must map the canned probe profile to a finite, positive latency,
+    /// and every batch/pixel model must interpolate finitely across the
+    /// modeled batch/pixel range. Pure read over the candidate — run it
+    /// before [`ModelRegistry::swap`] (or use
+    /// [`ModelRegistry::publish`], which does both).
+    pub fn validate(rt: &Runtime, profet: &Profet) -> Result<()> {
+        anyhow::ensure!(
+            !profet.cross.is_empty(),
+            "candidate has no cross-instance models"
+        );
+        let probe = probe_profile();
+        for (&(a, t), _) in &profet.cross {
+            let (lat, _member) = profet
+                .predict_cross(rt, a, t, &probe, PROBE_ANCHOR_LATENCY_MS)
+                .with_context(|| format!("probe predict {a}->{t} failed"))?;
+            anyhow::ensure!(
+                lat.is_finite() && lat > 0.0,
+                "probe predict {a}->{t} returned non-finite/non-positive latency {lat}"
+            );
+        }
+        for (&g, _) in &profet.scale {
+            for (b, p) in [(16usize, 32usize), (64, 64), (256, 256)] {
+                let vb = profet.predict_batch_size(g, b, 10.0, 100.0)?;
+                let vp = profet.predict_pixel_size(g, p, 10.0, 100.0)?;
+                anyhow::ensure!(
+                    vb.is_finite() && vp.is_finite(),
+                    "probe interpolation on {g} returned non-finite latency"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Atomically publish an (already validated) candidate as the new
+    /// current epoch and return that epoch. The lock is held only for the
+    /// pointer swap — readers are never blocked behind loading,
+    /// validation, or training, all of which happen before this call.
+    ///
+    /// Prefer [`ModelRegistry::publish`], which runs the validation gate
+    /// first; `swap` exists for callers that have already validated (or
+    /// measured) the candidate through other means.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use repro::coordinator::registry::ModelRegistry;
+    /// use repro::predictor::Profet;
+    ///
+    /// let registry = ModelRegistry::open("models".into())?;
+    /// let candidate = Profet::load("models_v2")?;
+    /// let rt = repro::runtime::load_default()?;
+    /// ModelRegistry::validate(&rt, &candidate)?; // gate first ...
+    /// let epoch = registry.swap(candidate);      // ... then swap
+    /// assert_eq!(epoch, registry.epoch());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn swap(&self, profet: Profet) -> u64 {
+        self.swap_with_fingerprint(profet, dir_fingerprint(&self.model_dir))
+    }
+
+    /// [`ModelRegistry::swap`] recording `fp` as the model-dir
+    /// fingerprint instead of re-scanning the directory. Callers that
+    /// loaded the candidate from disk pass the fingerprint captured
+    /// **before** the load: if the directory changed while the candidate
+    /// was loading/validating, the stored value won't match the current
+    /// contents and the watcher's next conditional reload picks the new
+    /// state up — a post-publish re-scan would absorb that change
+    /// unloaded and make the watcher skip it forever.
+    fn swap_with_fingerprint(&self, profet: Profet, fp: u64) -> u64 {
+        let profet = Arc::new(profet);
+        let next = {
+            let mut cur = self.current.lock().unwrap();
+            let next = cur.epoch + 1;
+            *cur = ModelSnapshot {
+                epoch: next,
+                profet,
+            };
+            next
+        };
+        self.epoch.store(next, Ordering::SeqCst);
+        self.last_reload_unix_ms
+            .store(unix_ms(), Ordering::SeqCst);
+        self.dir_fingerprint.store(fp, Ordering::SeqCst);
+        next
+    }
+
+    /// Validate, then swap. On a gate failure the current epoch keeps
+    /// serving untouched.
+    pub fn publish(&self, rt: &Runtime, profet: Profet) -> Result<u64, RegistryError> {
+        ModelRegistry::validate(rt, &profet).map_err(RegistryError::Rejected)?;
+        Ok(self.swap(profet))
+    }
+
+    /// Re-load the model directory and publish it as a new epoch (the
+    /// `reload` op). With `only_if_changed` (the mtime watcher's mode) a
+    /// directory whose fingerprint matches the last load/publish is
+    /// skipped, returning `Ok(None)`.
+    pub fn reload(
+        &self,
+        rt: &Runtime,
+        only_if_changed: bool,
+    ) -> Result<Option<u64>, RegistryError> {
+        // capture the fingerprint BEFORE loading: this is the directory
+        // state the candidate corresponds to. A concurrent writer racing
+        // the load changes the live fingerprint past this value, so the
+        // next conditional reload re-reads the finished directory instead
+        // of silently absorbing a half-copied one.
+        let fp = dir_fingerprint(&self.model_dir);
+        if only_if_changed && fp == self.dir_fingerprint.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        let candidate = Profet::load(&self.model_dir)
+            .with_context(|| format!("reloading {}", self.model_dir.display()))
+            .map_err(RegistryError::Rejected)?;
+        ModelRegistry::validate(rt, &candidate).map_err(RegistryError::Rejected)?;
+        Ok(Some(self.swap_with_fingerprint(candidate, fp)))
+    }
+
+    /// Online onboarding (the `onboard` op): train the staged pairs
+    /// (all of them, or just `pair`), merge into the current model set,
+    /// persist, and publish. Consumed staging files are cleared only
+    /// after the new epoch is live. On any failure the current epoch
+    /// keeps serving and the staged measurements stay for a retry.
+    pub fn onboard(
+        &self,
+        rt: &Runtime,
+        pair: Option<(Instance, Instance)>,
+        opts: &OnboardOptions,
+    ) -> Result<OnboardReport, RegistryError> {
+        let pairs = self.staged_pairs_for(pair)?;
+        for &(a, t) in &pairs {
+            let n = self.staging.count(a, t);
+            if n < MIN_STAGED_PER_PAIR {
+                return Err(RegistryError::Other(anyhow!(
+                    "pair {a}->{t} has {n} staged measurement(s); needs ≥ {MIN_STAGED_PER_PAIR}"
+                )));
+            }
+        }
+        let (corpus, staged_n) = self
+            .staging
+            .corpus_for(&pairs)
+            .map_err(RegistryError::Other)?;
+        let train_idx: Vec<usize> = (0..corpus.entries.len()).collect();
+        let base = self.snapshot();
+        let train_opts = TrainOptions {
+            anchors: Vec::new(), // unused by retrain_pairs
+            targets: Vec::new(),
+            clustering: true, // unused: the feature space is frozen
+            poly_order: opts.poly_order,
+            n_trees: opts.n_trees,
+            dnn_epochs: opts.dnn_epochs,
+            seed: opts.seed,
+        };
+        let candidate = base
+            .profet
+            .retrain_pairs(rt, &corpus, &train_idx, &pairs, &train_opts)
+            .map_err(RegistryError::Other)?;
+        // gate BEFORE persisting: a rejected candidate must not overwrite
+        // the on-disk models backing the currently serving epoch (it
+        // would also put the --model-dir-watch poller into a rejected-
+        // reload loop)
+        ModelRegistry::validate(rt, &candidate).map_err(RegistryError::Rejected)?;
+        candidate
+            .save(&self.model_dir)
+            .with_context(|| format!("persisting {}", self.model_dir.display()))
+            .map_err(RegistryError::Other)?;
+        let epoch = self.swap(candidate);
+        for &(a, t) in &pairs {
+            // post-publish cleanup: a failure here leaves harmless
+            // already-consumed files behind, never a half-published epoch
+            let _ = self.staging.clear(a, t);
+        }
+        Ok(OnboardReport {
+            epoch,
+            pairs,
+            staged: staged_n,
+        })
+    }
+
+    /// Resolve which staged pairs an `onboard` should train: everything
+    /// staged, or just `pair` when given. Empty resolution is the
+    /// distinct [`RegistryError::NoStagedData`] so the wire can answer
+    /// with its own error kind.
+    fn staged_pairs_for(
+        &self,
+        pair: Option<(Instance, Instance)>,
+    ) -> Result<Vec<(Instance, Instance)>, RegistryError> {
+        let staged = self.staging.staged_pairs();
+        let pairs: Vec<(Instance, Instance)> = match pair {
+            Some(p) => staged.into_iter().filter(|&q| q == p).collect(),
+            None => staged,
+        };
+        if pairs.is_empty() {
+            return Err(RegistryError::NoStagedData);
+        }
+        Ok(pairs)
+    }
+}
+
+/// Current wall clock as unix milliseconds.
+fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Order-independent fingerprint of the model dir's top-level `*.json`
+/// files (name, mtime, size). Subdirectories — notably `staging/` — are
+/// excluded on purpose: ingesting measurements must not look like a model
+/// change to the `--model-dir-watch` poller.
+pub(crate) fn dir_fingerprint(dir: &Path) -> u64 {
+    let mut acc = 0u64;
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if !path.is_file() || path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let Ok(meta) = entry.metadata() else { continue };
+        let mtime = meta
+            .modified()
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let name = entry.file_name();
+        let mut h = crate::util::fnv1a(name.to_string_lossy().as_bytes());
+        h ^= mtime.rotate_left(17) ^ meta.len().rotate_left(41);
+        acc = acc.wrapping_add(h);
+    }
+    acc
+}
+
+/// A model-free `Profet` over an empty vocabulary — registry/dispatch
+/// mechanics tests don't need trained models (everything that does is
+/// covered by the runtime-gated integration tests).
+#[cfg(test)]
+pub(crate) fn empty_profet() -> Profet {
+    Profet {
+        feature_space: crate::features::FeatureSpace::fit(&[], false, 4).unwrap(),
+        cross: BTreeMap::new(),
+        scale: BTreeMap::new(),
+    }
+}
+
+/// A registry over [`empty_profet`] in a scratch temp dir (test seam for
+/// the dispatcher's mock pools).
+#[cfg(test)]
+pub(crate) fn test_registry(tag: &str) -> ModelRegistry {
+    let dir = std::env::temp_dir().join(format!("repro_testreg_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).ok();
+    ModelRegistry::with_model(empty_profet(), dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "repro_registry_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ingest(anchor: Instance, target: Instance, batch: usize) -> IngestRequest {
+        IngestRequest {
+            anchor,
+            target,
+            model: ModelId::ALL[0],
+            batch,
+            pixels: 64,
+            profile: BTreeMap::from([("Conv2D".to_string(), batch as f64)]),
+            anchor_latency_ms: 10.0 + batch as f64,
+            target_latency_ms: 5.0 + batch as f64,
+        }
+    }
+
+    #[test]
+    fn snapshot_epoch_and_swap_are_coherent() {
+        let dir = temp_dir("swap");
+        let reg = ModelRegistry::with_model(empty_profet(), dir);
+        assert_eq!(reg.epoch(), 1);
+        assert_eq!(reg.last_reload_unix_ms(), 0);
+        let before = reg.snapshot();
+        assert_eq!(before.epoch, 1);
+
+        let e2 = reg.swap(empty_profet());
+        assert_eq!(e2, 2);
+        assert_eq!(reg.epoch(), 2);
+        assert!(reg.last_reload_unix_ms() > 0);
+        // the pre-swap snapshot still points at the old epoch's models —
+        // in-flight requests are answered by the epoch they started on
+        assert_eq!(before.epoch, 1);
+        assert_eq!(reg.snapshot().epoch, 2);
+    }
+
+    #[test]
+    fn concurrent_readers_never_observe_a_torn_snapshot() {
+        let dir = temp_dir("race");
+        let reg = Arc::new(ModelRegistry::with_model(empty_profet(), dir));
+        let stop = Arc::new(AtomicU64::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let reg = reg.clone();
+            let stop = stop.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut last = 0u64;
+                while stop.load(Ordering::Relaxed) == 0 {
+                    let snap = reg.snapshot();
+                    // epochs only move forward under concurrent swaps
+                    assert!(snap.epoch >= last, "{} < {last}", snap.epoch);
+                    last = snap.epoch;
+                }
+            }));
+        }
+        for _ in 0..50 {
+            reg.swap(empty_profet());
+        }
+        stop.store(1, Ordering::Relaxed);
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(reg.epoch(), 51);
+    }
+
+    #[test]
+    fn staging_append_count_pairs_corpus_roundtrip() {
+        let dir = temp_dir("staging");
+        let staging = StagingArea::new(&dir);
+        assert_eq!(staging.count(Instance::G4dn, Instance::G5), 0);
+        assert!(staging.staged_pairs().is_empty());
+
+        for b in [16, 32, 64] {
+            let n = staging.append(&ingest(Instance::G4dn, Instance::G5, b)).unwrap();
+            assert_eq!(n, [16, 32, 64].iter().position(|&x| x == b).unwrap() + 1);
+        }
+        staging.append(&ingest(Instance::P3, Instance::Ac1, 128)).unwrap();
+        assert_eq!(
+            staging.staged_pairs(),
+            vec![(Instance::G4dn, Instance::G5), (Instance::P3, Instance::Ac1)]
+        );
+
+        let (corpus, total) = staging
+            .corpus_for(&[(Instance::G4dn, Instance::G5)])
+            .unwrap();
+        assert_eq!(total, 3);
+        assert_eq!(corpus.entries.len(), 3);
+        let e = &corpus.entries[0];
+        assert_eq!(e.workload.batch, 16);
+        let anchor_run = &e.runs[&Instance::G4dn];
+        assert_eq!(anchor_run.profile["Conv2D"], 16.0);
+        assert_eq!(anchor_run.latency_ms, 26.0);
+        assert_eq!(e.runs[&Instance::G5].latency_ms, 21.0);
+
+        staging.clear(Instance::G4dn, Instance::G5).unwrap();
+        assert_eq!(staging.count(Instance::G4dn, Instance::G5), 0);
+        assert_eq!(staging.staged_pairs(), vec![(Instance::P3, Instance::Ac1)]);
+    }
+
+    #[test]
+    fn onboard_without_staged_data_is_a_distinct_error() {
+        let dir = temp_dir("nostage");
+        let reg = ModelRegistry::with_model(empty_profet(), dir);
+        // no runtime needed: the staged-pairs check fires before training
+        match reg.staged_pairs_for(None) {
+            Err(RegistryError::NoStagedData) => {}
+            other => panic!("expected NoStagedData, got {other:?}"),
+        }
+        // a pair filter that matches nothing staged is the same error
+        reg.staging()
+            .append(&ingest(Instance::G4dn, Instance::G5, 16))
+            .unwrap();
+        match reg.staged_pairs_for(Some((Instance::P3, Instance::Ac1))) {
+            Err(RegistryError::NoStagedData) => {}
+            other => panic!("expected NoStagedData, got {other:?}"),
+        }
+        assert_eq!(
+            reg.staged_pairs_for(None).unwrap(),
+            vec![(Instance::G4dn, Instance::G5)]
+        );
+    }
+
+    #[test]
+    fn ingest_does_not_disturb_the_model_dir_fingerprint() {
+        let dir = temp_dir("fingerprint");
+        std::fs::write(dir.join("feature_space.json"), "{}").unwrap();
+        let before = dir_fingerprint(&dir);
+        assert_ne!(before, 0);
+        // staged measurements land in a subdirectory the watcher ignores
+        let staging = StagingArea::new(&dir);
+        staging.append(&ingest(Instance::G4dn, Instance::G5, 16)).unwrap();
+        assert_eq!(dir_fingerprint(&dir), before);
+        // touching a top-level model file does change it
+        std::fs::write(dir.join("cross_g4dn_g5.json"), "{}").unwrap();
+        assert_ne!(dir_fingerprint(&dir), before);
+    }
+}

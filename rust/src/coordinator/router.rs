@@ -5,14 +5,22 @@
 //!
 //! The hot loop is allocation-free: [`respond`] decodes through the
 //! per-connection [`ConnScratch`] (borrowed field names/profile keys,
-//! reusable index vectors), builds the cache key in a reusable byte
-//! buffer, and encodes the typed [`Response`] directly into the reused
-//! output buffer. A steady-state cache-hit `predict` round trip touches
-//! the heap zero times (enforced by `tests/wire_alloc.rs`).
+//! reusable index vectors), snapshots the model registry (one `Arc`
+//! refcount bump — the epoch it yields becomes part of the cache key, so
+//! a registry swap implicitly invalidates every older entry), builds the
+//! cache key in a reusable byte buffer, and encodes the typed
+//! [`Response`] directly into the reused output buffer. A steady-state
+//! cache-hit `predict` round trip touches the heap zero times (enforced
+//! by `tests/wire_alloc.rs`).
+//!
+//! On a cache miss, the captured [`ModelSnapshot`] travels with the job:
+//! however long the request waits in a lane queue, it is answered by the
+//! model epoch that admitted it.
 
+use crate::advisor::CacheKeyScratch;
 use crate::coordinator::dispatch::{EnginePool, Job, SubmitError};
 use crate::coordinator::protocol::{parse_line, ParsedLine, Request, Response, WireScratch};
-use crate::advisor::CacheKeyScratch;
+use crate::coordinator::registry::ModelSnapshot;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Sender};
 
@@ -71,18 +79,32 @@ fn route_scratch(
     match parse_line(line, wire) {
         Err(e) => Response::err_kind(e.kind(), format!("bad request: {e}")),
         Ok(ParsedLine::Predict(view)) => {
-            // cache fast path: key the borrowed profile spans directly —
-            // a warm hit never materializes the request or touches a lane
-            let key = keys.key(view.anchor, view.target, view.anchor_latency_ms, view.pairs());
+            // cache fast path: the key only needs the current epoch (one
+            // lock-free atomic load — the registry mutex stays off the
+            // warm path entirely), keyed over the borrowed profile spans
+            // directly — a warm hit never materializes the request or
+            // touches a lane
+            let key = keys.key(
+                pool.registry().epoch(),
+                view.anchor,
+                view.target,
+                view.anchor_latency_ms,
+                view.pairs(),
+            );
             if let Some((latency_ms, member)) = pool.cache().peek(&key) {
                 let stats = &pool.stats;
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.cache.hits.fetch_add(1, Ordering::Relaxed);
                 return Response::Prediction { latency_ms, member };
             }
-            // miss: materialize and hand off to the batching lane (which
-            // re-checks the cache and counts the miss)
-            ask(pool, |tx| Job::Predict(view.materialize(), tx))
+            // miss: NOW pin the request to a full snapshot (Arc clone)
+            // and hand off to the batching lane, which re-checks the
+            // cache under the snapshot's epoch and counts the miss. (A
+            // swap racing this admission just means the request is
+            // served — and cached — under the newer epoch, exactly as if
+            // it had arrived a moment later.)
+            let snap: ModelSnapshot = pool.registry().snapshot();
+            ask(pool, |tx| Job::Predict(view.materialize(), snap, tx))
         }
         Ok(ParsedLine::Req(req)) => route_request(pool, req),
     }
@@ -95,6 +117,7 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
         Request::Health => Response::Health,
         Request::Stats => {
             let s = &pool.stats;
+            let reg = pool.registry();
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
@@ -110,47 +133,74 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
                 predict_lanes: pool.predict_lanes(),
                 cache_hits: s.cache.hits.load(Ordering::Relaxed),
                 cache_misses: s.cache.misses.load(Ordering::Relaxed),
+                registry_epoch: reg.epoch(),
+                last_reload: reg.last_reload_unix_ms(),
             }
         }
         Request::Instances => Response::Instances,
-        Request::Predict(p) => ask(pool, |tx| Job::Predict(p, tx)),
+        Request::Predict(p) => {
+            let snap = pool.registry().snapshot();
+            ask(pool, |tx| Job::Predict(p, snap, tx))
+        }
         Request::PredictBatchSize {
             instance,
             batch,
             t_min,
             t_max,
-        } => ask(pool, |tx| Job::BatchSize {
-            instance,
-            batch,
-            t_min,
-            t_max,
-            reply: tx,
-        }),
+        } => {
+            let snap = pool.registry().snapshot();
+            ask(pool, |tx| Job::BatchSize {
+                instance,
+                batch,
+                t_min,
+                t_max,
+                snap,
+                reply: tx,
+            })
+        }
         Request::PredictPixelSize {
             instance,
             pixels,
             t_min,
             t_max,
-        } => ask(pool, |tx| Job::PixelSize {
-            instance,
-            pixels,
-            t_min,
-            t_max,
-            reply: tx,
-        }),
-        Request::Recommend { query, top_k } => ask(pool, |tx| Job::Recommend {
-            query,
-            top_k,
-            reply: tx,
-        }),
+        } => {
+            let snap = pool.registry().snapshot();
+            ask(pool, |tx| Job::PixelSize {
+                instance,
+                pixels,
+                t_min,
+                t_max,
+                snap,
+                reply: tx,
+            })
+        }
+        Request::Recommend { query, top_k } => {
+            let snap = pool.registry().snapshot();
+            ask(pool, |tx| Job::Recommend {
+                query,
+                top_k,
+                snap,
+                reply: tx,
+            })
+        }
         Request::Plan {
             query,
             job,
             objective,
-        } => ask(pool, |tx| Job::Plan {
-            query,
-            job,
-            objective,
+        } => {
+            let snap = pool.registry().snapshot();
+            ask(pool, |tx| Job::Plan {
+                query,
+                job,
+                objective,
+                snap,
+                reply: tx,
+            })
+        }
+        Request::Ingest(req) => ask(pool, |tx| Job::Ingest { req, reply: tx }),
+        Request::Onboard { pair } => ask(pool, |tx| Job::Onboard { pair, reply: tx }),
+        Request::Reload => ask(pool, |tx| Job::Reload {
+            only_if_changed: false,
             reply: tx,
         }),
     }

@@ -18,8 +18,16 @@
 //! mid-request finishes it and flushes the response before exiting, so
 //! accepted requests never lose their replies (the seed leaked handler
 //! threads on shutdown).
+//!
+//! With [`ServeOptions::model_dir_watch`] set, a watcher thread polls the
+//! model directory on that interval and submits a conditional `reload`
+//! job (trainer lane) whenever the directory fingerprint moves — dropping
+//! a freshly trained model dir in place hot-swaps the registry epoch with
+//! no operator interaction and no restart. The fingerprint ignores the
+//! `staging/` subdirectory, so `ingest` traffic never looks like a model
+//! change.
 
-use crate::coordinator::dispatch::{EnginePool, EngineStats, PoolOptions};
+use crate::coordinator::dispatch::{EnginePool, EngineStats, Job, PoolOptions};
 use crate::coordinator::protocol::Response;
 use crate::coordinator::router::respond;
 use anyhow::{Context, Result};
@@ -50,6 +58,11 @@ pub struct ServeOptions {
     /// `max_connections + 1` gets a structured `overloaded` line and is
     /// closed immediately.
     pub max_connections: usize,
+    /// Poll the model directory on this interval and hot-reload it
+    /// (publish a new registry epoch) when its contents change. `None`
+    /// (the default) disables the watcher; `repro serve
+    /// --model-dir-watch <secs>` enables it.
+    pub model_dir_watch: Option<std::time::Duration>,
 }
 
 impl Default for ServeOptions {
@@ -57,6 +70,7 @@ impl Default for ServeOptions {
         ServeOptions {
             pool: PoolOptions::default(),
             max_connections: 256,
+            model_dir_watch: None,
         }
     }
 }
@@ -93,6 +107,11 @@ pub struct ServerHandle {
     shutdown: Arc<AtomicBool>,
     conns: Arc<ConnTable>,
     join: Option<std::thread::JoinHandle<()>>,
+    /// Dropping the sender wakes the model-dir watcher (if any)
+    /// immediately; the join below then completes without waiting out a
+    /// poll interval.
+    watch_stop: Option<std::sync::mpsc::Sender<()>>,
+    watch_join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -106,6 +125,11 @@ impl ServerHandle {
 
     fn drain(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // stop the model-dir watcher first (dropping its channel wakes it)
+        drop(self.watch_stop.take());
+        if let Some(j) = self.watch_join.take() {
+            let _ = j.join();
+        }
         // poke the accept loop awake so it observes the flag
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
@@ -142,7 +166,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        if self.join.is_some() || self.conns.active() > 0 {
+        if self.join.is_some() || self.watch_join.is_some() || self.conns.active() > 0 {
             self.drain();
         }
     }
@@ -155,7 +179,8 @@ pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<Se
     serve_with(addr, artifact_dir, model_dir, &ServeOptions::default())
 }
 
-/// [`serve`] with explicit pool sizing and connection budget.
+/// [`serve`] with explicit pool sizing, connection budget, and optional
+/// model-dir watching.
 pub fn serve_with(
     addr: &str,
     artifact_dir: PathBuf,
@@ -163,19 +188,33 @@ pub fn serve_with(
     opts: &ServeOptions,
 ) -> Result<ServerHandle> {
     let pool = EnginePool::spawn(artifact_dir, model_dir, &opts.pool)?;
-    serve_pool(addr, pool, opts.max_connections)
+    serve_pool_watched(addr, pool, opts.max_connections, opts.model_dir_watch)
 }
 
-/// Accept loop over a pre-built pool (also the test seam: unit tests
-/// drive it with a mock pool, no PJRT runtime required).
+/// [`serve_pool_watched`] without a watcher (the unit-test seam: mock
+/// pools, no PJRT runtime required).
 pub(crate) fn serve_pool(
     addr: &str,
     pool: EnginePool,
     max_connections: usize,
 ) -> Result<ServerHandle> {
+    serve_pool_watched(addr, pool, max_connections, None)
+}
+
+/// Accept loop over a pre-built pool, plus the optional model-dir watch
+/// thread.
+pub(crate) fn serve_pool_watched(
+    addr: &str,
+    pool: EnginePool,
+    max_connections: usize,
+    watch: Option<std::time::Duration>,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     let pool = Arc::new(pool);
+    // the watcher needs its own pool handle before the accept loop
+    // captures `pool` by move
+    let watch_pool = watch.map(|_| pool.clone());
     let stats = pool.stats.clone();
     let stats2 = stats.clone();
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -235,13 +274,64 @@ pub(crate) fn serve_pool(
             }
         })?;
 
+    let (watch_stop, watch_join) = match (watch, watch_pool) {
+        (Some(interval), Some(pool)) => {
+            let (tx, rx) = std::sync::mpsc::channel::<()>();
+            let join = std::thread::Builder::new()
+                .name("profet-model-watch".into())
+                .spawn(move || model_dir_watch_loop(&pool, interval, rx))?;
+            (Some(tx), Some(join))
+        }
+        _ => (None, None),
+    };
+
     Ok(ServerHandle {
         addr: local,
         stats,
         shutdown,
         conns,
         join: Some(join),
+        watch_stop,
+        watch_join,
     })
+}
+
+/// The model-dir watcher: every `interval`, submit a *conditional* reload
+/// to the trainer lane (the registry skips it when the directory
+/// fingerprint hasn't moved — including after the registry's own
+/// `onboard` saves) and wait for the outcome before sleeping again, so at
+/// most one watcher-initiated reload is ever in flight. Exits as soon as
+/// the server handle drops its stop channel.
+fn model_dir_watch_loop(
+    pool: &EnginePool,
+    interval: std::time::Duration,
+    stop: std::sync::mpsc::Receiver<()>,
+) {
+    loop {
+        match stop.recv_timeout(interval) {
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            // a stop signal or a dropped server handle ends the watch
+            Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        if pool
+            .submit(Job::Reload {
+                only_if_changed: true,
+                reply: tx,
+            })
+            .is_err()
+        {
+            continue; // trainer queue momentarily full — try next tick
+        }
+        match rx.recv() {
+            Ok(Response::Reloaded { .. }) => {}
+            Ok(Response::ErrKind { kind, msg }) => {
+                eprintln!("model-dir watch: reload refused ({kind}): {msg}");
+            }
+            Ok(Response::Err(msg)) => eprintln!("model-dir watch: reload failed: {msg}"),
+            Ok(_) | Err(_) => {}
+        }
+    }
 }
 
 /// Answer a budget-rejected connection with one structured error line.
@@ -380,7 +470,7 @@ fn drain_until_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
 
 #[cfg(test)]
 mod tests {
-    use super::{drain_until_newline, read_line_bounded, serve_pool, LineRead};
+    use super::{drain_until_newline, read_line_bounded, serve_pool, serve_pool_watched, LineRead};
     use crate::coordinator::dispatch::{EnginePool, Job};
     use crate::util::Json;
     use std::io::{BufRead as _, BufReader, Write as _};
@@ -503,7 +593,7 @@ mod tests {
             for job in rx {
                 match job {
                     Job::Shutdown => return,
-                    Job::Predict(_, reply) => {
+                    Job::Predict(_, _, reply) => {
                         std::thread::sleep(delay);
                         let _ = reply.send(crate::coordinator::protocol::Response::Latency {
                             latency_ms: 1.0,
@@ -542,7 +632,7 @@ mod tests {
             for job in rx {
                 match job {
                     Job::Shutdown => return,
-                    Job::Predict(_, reply) => {
+                    Job::Predict(_, _, reply) => {
                         picked2.fetch_add(1, Ordering::SeqCst);
                         std::thread::sleep(Duration::from_millis(300));
                         let _ = reply.send(crate::coordinator::protocol::Response::Latency {
@@ -582,6 +672,57 @@ mod tests {
         let resp = client.join().unwrap();
         let j = Json::parse(resp.trim()).expect("drained connection lost its response");
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+    }
+
+    /// The `--model-dir-watch` poller submits *conditional* reload jobs
+    /// to the trainer lane on its interval, and the graceful drain stops
+    /// it immediately (no waiting out a poll period).
+    #[test]
+    fn model_dir_watcher_submits_conditional_reloads_and_stops_on_drain() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let reloads = std::sync::Arc::new(AtomicUsize::new(0));
+        let r2 = reloads.clone();
+        let advisor = move |rx: Receiver<Job>| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    Job::Reload {
+                        only_if_changed,
+                        reply,
+                    } => {
+                        assert!(only_if_changed, "watcher reloads must be conditional");
+                        r2.fetch_add(1, Ordering::SeqCst);
+                        let _ = reply.send(
+                            crate::coordinator::protocol::Response::Reloaded { epoch: 1 },
+                        );
+                    }
+                    _ => {}
+                }
+            }
+        };
+        let body = slow_echo(Duration::ZERO);
+        let pool = EnginePool::mock(1, 16, 8, body, advisor);
+        let handle = serve_pool_watched(
+            "127.0.0.1:0",
+            pool,
+            8,
+            Some(Duration::from_millis(20)),
+        )
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while reloads.load(Ordering::SeqCst) < 2 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "watcher never polled the model dir"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let t0 = std::time::Instant::now();
+        handle.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drain waited out the watcher interval"
+        );
     }
 
     #[test]

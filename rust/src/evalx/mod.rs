@@ -3,9 +3,11 @@
 //!
 //! Each `fig_*` / `table_*` function returns a plain-text report with the
 //! same rows/series the paper presents; [`run`] dispatches by experiment
-//! id ("fig9", "table4", ..., or "all"). Shape assertions (who wins, where
-//! the crossovers are) are emitted as CHECK lines so `cargo bench` output
-//! documents whether the reproduction holds.
+//! id (any entry of [`ALL_EXPERIMENTS`], or `"all"`) over a shared
+//! [`Ctx`] that trains the system once and reuses it across experiments.
+//! Shape assertions (who wins, where the crossovers are) are emitted as
+//! CHECK lines so `repro eval` output documents whether the reproduction
+//! holds. Driven by `repro eval --exp <id> [--out report.txt]`.
 
 mod ablations;
 mod context;

@@ -8,13 +8,18 @@
 //!   substrate, TF-profiler emulation, operation-name clustering, classical
 //!   ML (OLS / random forest), the median ensemble, batch/pixel polynomial
 //!   models, baselines (Paleo, MLPredict, Habitat), the evaluation harness
-//!   for every table/figure in the paper, and a tokio prediction service.
+//!   for every table/figure in the paper, and a threaded TCP/JSON
+//!   prediction service ([`coordinator`]) with an engine replica pool, a
+//!   zero-allocation wire path, and a live, hot-swappable model registry
+//!   ([`coordinator::registry`]) for online GPU onboarding.
 //! * **L2/L1 (python/, build time only)** — the DNN ensemble member
 //!   (128·64·32·16·1 MLP) and the batched Levenshtein kernel, written in
 //!   JAX/Pallas and AOT-lowered to HLO text artifacts executed here via the
 //!   PJRT CPU client ([`runtime`]). Python is never on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and per-experiment index.
+//! See `DESIGN.md` for the system inventory and per-experiment index,
+//! `docs/ARCHITECTURE.md` for the serving dataflow narrative, and
+//! `docs/PROTOCOL.md` for the wire reference.
 
 pub mod advisor;
 pub mod baselines;

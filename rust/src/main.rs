@@ -74,7 +74,8 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve> [-
   repro simulate --model VGG16 --batch 32 --pixels 128 [--instance p3]
   repro eval     [--exp all|fig9|table4|...] [--out results.txt]
   repro serve    [--addr 127.0.0.1:7878] [--models models] [--pool N]
-                 [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]";
+                 [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]
+                 [--model-dir-watch SECS]";
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -244,6 +245,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let model_dir = args.get_or("models", "models");
     let defaults = repro::coordinator::ServeOptions::default();
+    // `--model-dir-watch 5` polls every 5 s; a bare `--model-dir-watch`
+    // (no value) uses the 5 s default; 0 is rejected (it would busy-loop
+    // the watcher and the trainer lane)
+    let model_dir_watch = match args.get("model-dir-watch") {
+        None => None,
+        Some("true") => Some(std::time::Duration::from_secs(5)),
+        Some(v) => {
+            let secs: u64 = v.parse().with_context(|| "--model-dir-watch")?;
+            anyhow::ensure!(secs >= 1, "--model-dir-watch must be at least 1 second");
+            Some(std::time::Duration::from_secs(secs))
+        }
+    };
     let opts = repro::coordinator::ServeOptions {
         pool: repro::coordinator::PoolOptions {
             // 0 = auto (available parallelism)
@@ -251,8 +264,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             predict_queue_cap: args.usize_or("queue-cap", defaults.pool.predict_queue_cap)?,
             advisor_queue_cap: args
                 .usize_or("advisor-queue-cap", defaults.pool.advisor_queue_cap)?,
+            trainer_queue_cap: args
+                .usize_or("trainer-queue-cap", defaults.pool.trainer_queue_cap)?,
+            onboard: defaults.pool.onboard.clone(),
         },
         max_connections: args.usize_or("max-conns", defaults.max_connections)?,
+        model_dir_watch,
     };
     let handle = repro::coordinator::serve_with(
         &addr,
@@ -261,17 +278,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &opts,
     )?;
     println!(
-        "PROFET service listening on {} ({} predict lanes + 1 advisor lane, \
-         {} max connections)",
+        "PROFET service listening on {} ({} predict lanes + 1 advisor + 1 trainer lane, \
+         {} max connections{})",
         handle.addr,
         opts.pool.resolved_predict_lanes(),
-        opts.max_connections
+        opts.max_connections,
+        match opts.model_dir_watch {
+            Some(d) => format!(", model dir watched every {}s", d.as_secs()),
+            None => String::new(),
+        }
     );
     println!("protocol: newline-delimited JSON; try:");
     println!(r#"  {{"op":"health"}}"#);
     println!(r#"  {{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":120.0,"profile":{{"Conv2D":40.0}}}}"#);
     println!(r#"  {{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":8.0}},"anchor_lat_bmin":20.0,"profile_bmax":{{"Conv2D":90.0}},"anchor_lat_bmax":200.0,"include_spot":true}}"#);
-    println!("(full op table in rust/src/coordinator/protocol.rs)");
+    println!(r#"  {{"op":"stats"}}  (registry_epoch / last_reload track hot reloads)"#);
+    println!("(full op reference in docs/PROTOCOL.md)");
     // park forever
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

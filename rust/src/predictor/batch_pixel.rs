@@ -20,6 +20,7 @@ pub fn norm_pixels(p: usize) -> f64 {
 }
 
 /// Per-instance polynomial scalers for batch and pixel interpolation.
+#[derive(Clone)]
 pub struct BatchPixelModel {
     pub instance: Instance,
     pub batch_poly: PolyRegression,

@@ -30,6 +30,7 @@ impl Member {
 }
 
 /// The per-(anchor, target) ensemble.
+#[derive(Clone)]
 pub struct CrossInstanceModel {
     pub anchor: Instance,
     pub target: Instance,

@@ -6,5 +6,5 @@ mod cross_instance;
 mod profet;
 
 pub use batch_pixel::BatchPixelModel;
-pub use cross_instance::{CrossInstanceModel, Member};
-pub use profet::{Profet, TrainOptions};
+pub use cross_instance::{CrossInstanceModel, EnsembleConfig, Member};
+pub use profet::{MissingModels, Profet, TrainOptions};

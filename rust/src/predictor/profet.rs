@@ -1,6 +1,27 @@
 //! The end-to-end PROFET facade (Fig 3): holds the fitted feature space,
 //! every cross-instance ensemble, and the per-instance batch/pixel models;
 //! persists to / loads from a model directory.
+//!
+//! # Model directory layout
+//!
+//! [`Profet::save`] writes one JSON file per component plus a
+//! `manifest.json` inventory:
+//!
+//! ```text
+//! models/
+//!   manifest.json           # expected cross pairs + scale instances
+//!   feature_space.json      # fitted op-name clustering / vectorizer
+//!   cross_<a>_<t>.json      # one per (anchor, target) ensemble
+//!   scale_<g>.json          # one per-instance batch/pixel model
+//! ```
+//!
+//! [`Profet::load`] checks the directory against the manifest and fails
+//! **at load time** with a structured [`MissingModels`] error when a
+//! listed component file is absent — a registry candidate with a deleted
+//! or half-copied model dir is rejected before it can serve a single
+//! request (the old behavior deferred the failure to the first `predict`
+//! for the missing pair). Directories written before the manifest existed
+//! load as before (no completeness information to check against).
 
 use super::batch_pixel::BatchPixelModel;
 use super::cross_instance::{CrossInstanceModel, EnsembleConfig, Member};
@@ -11,6 +32,7 @@ use crate::runtime::Runtime;
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
 
 /// Training options for the full system.
@@ -44,7 +66,64 @@ impl Default for TrainOptions {
     }
 }
 
-/// The trained system.
+/// Structured load-time completeness failure: the model directory's
+/// `manifest.json` lists components whose files are missing or unreadable.
+/// Carried inside the `anyhow` error chain ([`Profet::load`]) so callers —
+/// notably the coordinator's model-registry validation gate — can
+/// `downcast_ref::<MissingModels>()` and enumerate exactly which pairs are
+/// gone instead of pattern-matching an error string.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MissingModels {
+    /// Missing cross-instance ensembles, `(anchor, target)`.
+    pub cross: Vec<(Instance, Instance)>,
+    /// Missing per-instance batch/pixel models.
+    pub scale: Vec<Instance>,
+}
+
+impl MissingModels {
+    pub fn is_empty(&self) -> bool {
+        self.cross.is_empty() && self.scale.is_empty()
+    }
+}
+
+impl fmt::Display for MissingModels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "model dir is missing ")?;
+        let mut sep = "";
+        if !self.cross.is_empty() {
+            let pairs: Vec<String> = self
+                .cross
+                .iter()
+                .map(|(a, t)| format!("{a}->{t}"))
+                .collect();
+            write!(
+                f,
+                "{} cross-instance model(s): {}",
+                self.cross.len(),
+                pairs.join(", ")
+            )?;
+            sep = "; ";
+        }
+        if !self.scale.is_empty() {
+            let insts: Vec<&str> = self.scale.iter().map(|g| g.key()).collect();
+            write!(
+                f,
+                "{sep}{} batch/pixel model(s): {}",
+                self.scale.len(),
+                insts.join(", ")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for MissingModels {}
+
+/// The trained system. `Clone` is cheap relative to training (the models
+/// are plain data) and is what the coordinator's registry leans on to
+/// build an onboarding candidate next to the live epoch
+/// ([`Profet::retrain_pairs`]).
+#[derive(Clone)]
 pub struct Profet {
     pub feature_space: FeatureSpace,
     pub cross: BTreeMap<(Instance, Instance), CrossInstanceModel>,
@@ -53,6 +132,21 @@ pub struct Profet {
 
 impl Profet {
     /// Train everything from corpus entries `train_idx`.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use repro::data::Corpus;
+    /// use repro::gpu::Instance;
+    /// use repro::predictor::{Profet, TrainOptions};
+    ///
+    /// let rt = repro::runtime::load_default()?;
+    /// let corpus = Corpus::generate(&Instance::ALL);
+    /// let (train_idx, _test_idx) = corpus.split_random(0.2, 7);
+    /// let profet = Profet::train(&rt, &corpus, &train_idx, &TrainOptions::default())?;
+    /// assert!(!profet.cross.is_empty());
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn train(
         rt: &Runtime,
         corpus: &Corpus,
@@ -183,7 +277,78 @@ impl Profet {
         self.predict_batch_size(target, b, t_min, t_max)
     }
 
-    /// Save to a directory (one JSON per component).
+    /// Retrain the given `(anchor, target)` cross-instance ensembles from
+    /// `corpus` and return a **new** `Profet` that is this one plus the
+    /// refitted pairs — the online-onboarding path behind the
+    /// coordinator's `onboard` op.
+    ///
+    /// The existing [`FeatureSpace`] is reused verbatim (op names the
+    /// frozen vocabulary has never seen vectorize to zero, exactly as they
+    /// would at predict time), so the refitted pairs stay compatible with
+    /// every model already in the registry. Per-pair hyper-parameters and
+    /// seed derivation match [`Profet::train`] exactly. Instances that
+    /// appear in `pairs` but have no batch/pixel interpolation model yet
+    /// get one fitted from `corpus` when it contains the min/max-batch
+    /// observations that fit needs; instances that already have one keep
+    /// it (the staged onboarding corpus is typically far smaller than the
+    /// corpus the existing model was fitted on).
+    ///
+    /// `self` is untouched: on any error the caller still holds the old,
+    /// fully working model set — which is what lets the registry keep the
+    /// previous epoch serving when onboarding fails.
+    pub fn retrain_pairs(
+        &self,
+        rt: &Runtime,
+        corpus: &Corpus,
+        train_idx: &[usize],
+        pairs: &[(Instance, Instance)],
+        opts: &TrainOptions,
+    ) -> Result<Profet> {
+        anyhow::ensure!(!pairs.is_empty(), "no (anchor, target) pairs to retrain");
+        let mut next = self.clone();
+        for &(a, t) in pairs {
+            anyhow::ensure!(a != t, "cannot retrain identity pair {a}->{t}");
+            let m = CrossInstanceModel::fit(
+                rt,
+                &next.feature_space,
+                corpus,
+                train_idx,
+                a,
+                t,
+                EnsembleConfig {
+                    n_trees: opts.n_trees,
+                    dnn_epochs: opts.dnn_epochs,
+                    seed: opts.seed ^ crate::util::seed_of(&[a.key(), t.key()]),
+                },
+            )
+            .with_context(|| format!("retraining cross model {a}->{t}"))?;
+            next.cross.insert((a, t), m);
+        }
+        for &(a, t) in pairs {
+            for g in [a, t] {
+                if next.scale.contains_key(&g) {
+                    continue;
+                }
+                if let Ok(m) = BatchPixelModel::fit(corpus, train_idx, g, opts.poly_order) {
+                    next.scale.insert(g, m);
+                }
+            }
+        }
+        Ok(next)
+    }
+
+    /// Save to a directory: one JSON per component plus a `manifest.json`
+    /// inventory that [`Profet::load`] verifies the directory against.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use repro::predictor::Profet;
+    ///
+    /// let profet = Profet::load("models")?;
+    /// profet.save("models_backup")?;
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
@@ -203,10 +368,63 @@ impl Profet {
                 m.to_json().to_string(),
             )?;
         }
+        std::fs::write(dir.join("manifest.json"), self.manifest_json().to_string())?;
         Ok(())
     }
 
+    /// The `manifest.json` payload: every component this model set expects
+    /// its directory to contain.
+    fn manifest_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "cross",
+            Json::Arr(
+                self.cross
+                    .keys()
+                    .map(|(a, t)| {
+                        Json::Arr(vec![
+                            Json::Str(a.key().into()),
+                            Json::Str(t.key().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "scale",
+            Json::Arr(
+                self.scale
+                    .keys()
+                    .map(|g| Json::Str(g.key().into()))
+                    .collect(),
+            ),
+        );
+        o
+    }
+
     /// Load a previously saved model directory.
+    ///
+    /// When the directory carries a `manifest.json` (every directory
+    /// written by [`Profet::save`] since the registry work does), the
+    /// loaded components are checked against it and any gap is surfaced
+    /// **now** as a structured [`MissingModels`] error — not at the first
+    /// predict for the missing pair. A directory with no cross-instance
+    /// models at all is likewise rejected. This check is what the serving
+    /// registry's validation gate leans on before publishing an epoch.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use repro::predictor::{MissingModels, Profet};
+    ///
+    /// match Profet::load("models") {
+    ///     Ok(profet) => println!("{} cross models", profet.cross.len()),
+    ///     Err(e) => match e.downcast_ref::<MissingModels>() {
+    ///         Some(gap) => eprintln!("incomplete dir: {gap}"),
+    ///         None => eprintln!("unreadable dir: {e:#}"),
+    ///     },
+    /// }
+    /// ```
     pub fn load(dir: impl AsRef<Path>) -> Result<Profet> {
         let dir = dir.as_ref();
         let fs_json = Json::parse(&std::fs::read_to_string(dir.join("feature_space.json"))?)?;
@@ -229,10 +447,124 @@ impl Profet {
                 scale.insert(m.instance, m);
             }
         }
+        let manifest_path = dir.join("manifest.json");
+        if manifest_path.exists() {
+            let manifest = Json::parse(&std::fs::read_to_string(&manifest_path)?)
+                .context("parsing manifest.json")?;
+            let gap = manifest_gap(&manifest, &cross, &scale)?;
+            if !gap.is_empty() {
+                return Err(anyhow::Error::new(gap)
+                    .context(format!("loading {}", dir.display())));
+            }
+        }
+        anyhow::ensure!(
+            !cross.is_empty(),
+            "model dir {} contains no cross-instance models — run `repro train` first",
+            dir.display()
+        );
         Ok(Profet {
             feature_space,
             cross,
             scale,
         })
+    }
+}
+
+/// Diff a parsed `manifest.json` against the components actually loaded.
+/// Pure over its inputs (unit-tested without any trained model on disk).
+fn manifest_gap(
+    manifest: &Json,
+    cross: &BTreeMap<(Instance, Instance), CrossInstanceModel>,
+    scale: &BTreeMap<Instance, BatchPixelModel>,
+) -> Result<MissingModels> {
+    let mut gap = MissingModels::default();
+    for entry in manifest.req_arr("cross").context("manifest.json")? {
+        let pair = entry
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("manifest.json: malformed cross pair"))?;
+        let inst = |j: &Json| -> Result<Instance> {
+            j.as_str()
+                .and_then(Instance::from_key)
+                .ok_or_else(|| anyhow!("manifest.json: unknown instance in cross pair"))
+        };
+        let (a, t) = (inst(&pair[0])?, inst(&pair[1])?);
+        if !cross.contains_key(&(a, t)) {
+            gap.cross.push((a, t));
+        }
+    }
+    for entry in manifest.req_arr("scale").context("manifest.json")? {
+        let g = entry
+            .as_str()
+            .and_then(Instance::from_key)
+            .ok_or_else(|| anyhow!("manifest.json: unknown instance in scale list"))?;
+        if !scale.contains_key(&g) {
+            gap.scale.push(g);
+        }
+    }
+    Ok(gap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest(cross: &[(&str, &str)], scale: &[&str]) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "cross",
+            Json::Arr(
+                cross
+                    .iter()
+                    .map(|(a, t)| {
+                        Json::Arr(vec![Json::Str((*a).into()), Json::Str((*t).into())])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "scale",
+            Json::Arr(scale.iter().map(|g| Json::Str((*g).into())).collect()),
+        );
+        o
+    }
+
+    #[test]
+    fn manifest_gap_lists_every_missing_component() {
+        // nothing loaded, three components expected
+        let m = manifest(&[("g4dn", "p3"), ("g4dn", "p2")], &["p3"]);
+        let gap = manifest_gap(&m, &BTreeMap::new(), &BTreeMap::new()).unwrap();
+        assert_eq!(
+            gap.cross,
+            vec![
+                (Instance::G4dn, Instance::P3),
+                (Instance::G4dn, Instance::P2)
+            ]
+        );
+        assert_eq!(gap.scale, vec![Instance::P3]);
+        assert!(!gap.is_empty());
+        // the Display form names each missing pair (what the structured
+        // wire error and log lines show operators)
+        let msg = gap.to_string();
+        assert!(msg.contains("g4dn->p3"), "{msg}");
+        assert!(msg.contains("g4dn->p2"), "{msg}");
+        assert!(msg.contains("p3"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_gap_empty_when_complete() {
+        let m = manifest(&[], &[]);
+        let gap = manifest_gap(&m, &BTreeMap::new(), &BTreeMap::new()).unwrap();
+        assert!(gap.is_empty());
+    }
+
+    #[test]
+    fn manifest_gap_rejects_malformed_manifests() {
+        // unknown instance key
+        let m = manifest(&[("warp9", "p3")], &[]);
+        assert!(manifest_gap(&m, &BTreeMap::new(), &BTreeMap::new()).is_err());
+        // missing the cross field entirely
+        let empty = Json::obj();
+        assert!(manifest_gap(&empty, &BTreeMap::new(), &BTreeMap::new()).is_err());
     }
 }

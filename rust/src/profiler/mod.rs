@@ -5,7 +5,11 @@
 //! details` (layer name, output tensor, memory) and per-layer latencies;
 //! PROFET deliberately uses only the *aggregated* (Operation, Time) pairs
 //! so the internal architecture is never revealed. [`Profile::aggregated`]
-//! is exactly that view.
+//! is exactly that view — it is the `profile` object a client uploads on
+//! the wire (`predict`, `recommend`, and the onboarding `ingest` op all
+//! carry it), the feature payload [`crate::features::FeatureSpace`]
+//! vectorizes, and the black-box contract that lets one anchor profile
+//! price a workload on hardware the client has never touched.
 
 use std::collections::BTreeMap;
 

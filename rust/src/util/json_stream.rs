@@ -367,14 +367,14 @@ fn format_f64(out: &mut FloatBuf, v: f64) {
     }
 }
 
-/// [`format_f64`] into a byte buffer (the streaming encoder's sink).
+/// `format_f64` into a byte buffer (the streaming encoder's sink).
 pub fn write_f64(out: &mut Vec<u8>, v: f64) {
     let mut b = FloatBuf::new();
     format_f64(&mut b, v);
     out.extend_from_slice(&b.buf[..b.len]);
 }
 
-/// [`format_f64`] into a `String` (the DOM serializer's sink — both
+/// `format_f64` into a `String` (the DOM serializer's sink — both
 /// serializers share one float formatter so their outputs agree).
 pub fn push_f64(out: &mut String, v: f64) {
     let mut b = FloatBuf::new();

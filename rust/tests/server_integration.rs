@@ -2,7 +2,9 @@
 //! port, train + save a model directory, then drive it like a client —
 //! including concurrent requests that exercise the dynamic batcher, a
 //! `recommend` sweep racing a `predict` stream (head-of-line isolation
-//! across engine lanes), queue backpressure, and graceful drain.
+//! across engine lanes), queue backpressure, graceful drain, and the
+//! live model registry (`reload`/`ingest`/`onboard` hot swaps racing
+//! predict traffic, failed-validation rollback, load-time completeness).
 
 use repro::coordinator;
 use repro::data::Corpus;
@@ -44,6 +46,23 @@ fn model_dir() -> Option<&'static std::path::PathBuf> {
         Some(dir)
     })
     .as_ref()
+}
+
+/// Copy the shared trained model dir into a private scratch dir — the
+/// registry tests mutate their model directory (reload/onboard/corrupt),
+/// which must never race the read-only tests sharing `model_dir()`.
+fn copy_model_dir(tag: &str) -> std::path::PathBuf {
+    let src = model_dir().expect("caller checked");
+    let dst = std::env::temp_dir().join(format!("repro_server_models_{tag}"));
+    std::fs::remove_dir_all(&dst).ok();
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            std::fs::copy(&path, dst.join(path.file_name().unwrap())).unwrap();
+        }
+    }
+    dst
 }
 
 fn send(addr: std::net::SocketAddr, line: &str) -> Json {
@@ -665,4 +684,273 @@ fn stop_drains_inflight_sweep_response() {
     let resp = client.join().unwrap();
     let j = Json::parse(resp.trim()).expect("in-flight response lost during drain");
     assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+}
+
+// ---------------------------------------------------------------------------
+// Live model registry: hot reload, onboarding, rollback
+// ---------------------------------------------------------------------------
+
+/// THE registry swap test: `reload` issued against a running server
+/// publishes new epochs while concurrent predicts are in flight — every
+/// predict succeeds (none dropped, none errored), `stats.registry_epoch`
+/// increments, and post-swap traffic refills the cache under the new
+/// epoch (first repeat is a miss, second a hit).
+#[test]
+fn reload_publishes_new_epoch_without_dropping_concurrent_predicts() {
+    let Some(_) = model_dir() else { return };
+    let models = copy_model_dir("reload");
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // boot state: epoch 1, never reloaded
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("registry_epoch").unwrap() as u64, 1);
+    assert_eq!(st.req_f64("last_reload").unwrap() as u64, 0);
+
+    // warm one line under epoch 1 (miss, then hit)
+    let line = sample_profile_line();
+    let first = send(addr, &line);
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true), "{first:?}");
+    let second = send(addr, &line);
+    assert_eq!(
+        first.req_f64("latency_ms").unwrap().to_bits(),
+        second.req_f64("latency_ms").unwrap().to_bits()
+    );
+
+    // concurrent predict stream across the swap boundary: cache-busted
+    // (distinct keys) so they exercise the full engine path, not just the
+    // router's warm hit
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..3usize {
+        let line = line.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut n = 0usize;
+            let mut k = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) || n < 4 {
+                let busted = bust_predict_line(&line, 1 + c * 1000 + k);
+                k += 1;
+                let resp = send(addr, &busted);
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "predict dropped/errored across a reload: {resp:?}"
+                );
+                n += 1;
+                if n > 500 {
+                    break; // safety valve under very slow CI
+                }
+            }
+            n
+        }));
+    }
+
+    // two reloads land mid-stream; each publishes the next epoch
+    let r1 = send(addr, r#"{"op":"reload"}"#);
+    assert_eq!(r1.get("ok").and_then(Json::as_bool), Some(true), "{r1:?}");
+    assert_eq!(r1.req_f64("epoch").unwrap() as u64, 2);
+    let r2 = send(addr, r#"{"op":"reload"}"#);
+    assert_eq!(r2.req_f64("epoch").unwrap() as u64, 3);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let served: usize = clients.into_iter().map(|j| j.join().unwrap()).sum();
+    assert!(served >= 12, "{served}");
+
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("registry_epoch").unwrap() as u64, 3);
+    assert!(st.req_f64("last_reload").unwrap() > 0.0);
+
+    // post-swap cache refill: the epoch-1-warm line misses once under
+    // epoch 3 (stale entries unreachable, no flush), then hits again
+    let misses_before = handle.stats.cache.misses.load(std::sync::atomic::Ordering::Relaxed);
+    let hits_before = handle.stats.cache.hits.load(std::sync::atomic::Ordering::Relaxed);
+    let again = send(addr, &line);
+    assert_eq!(again.get("ok").and_then(Json::as_bool), Some(true), "{again:?}");
+    // bitwise-equal to the epoch-1 answer: same models were re-loaded
+    assert_eq!(
+        again.req_f64("latency_ms").unwrap().to_bits(),
+        first.req_f64("latency_ms").unwrap().to_bits()
+    );
+    let warm = send(addr, &line);
+    assert_eq!(warm.get("ok").and_then(Json::as_bool), Some(true));
+    let misses_after = handle.stats.cache.misses.load(std::sync::atomic::Ordering::Relaxed);
+    let hits_after = handle.stats.cache.hits.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        misses_after > misses_before,
+        "post-swap repeat should be a cache miss under the new epoch"
+    );
+    assert!(
+        hits_after > hits_before,
+        "second post-swap repeat should hit the refilled cache"
+    );
+    handle.stop();
+    std::fs::remove_dir_all(&models).ok();
+}
+
+/// A candidate that fails the validation gate (here: a model dir whose
+/// manifest lists a deleted component) is rejected with a structured
+/// error and the previous epoch KEEPS SERVING — asserted via `stats` and
+/// by the old pair still answering.
+#[test]
+fn failed_reload_validation_leaves_previous_epoch_serving() {
+    let Some(_) = model_dir() else { return };
+    let models = copy_model_dir("badreload");
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+    let before = send(addr, &line);
+    assert_eq!(before.get("ok").and_then(Json::as_bool), Some(true), "{before:?}");
+
+    // corrupt the dir: the manifest still lists cross_g4dn_p3.json
+    std::fs::remove_file(models.join("cross_g4dn_p3.json")).unwrap();
+    let r = send(addr, r#"{"op":"reload"}"#);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{r:?}");
+    assert_eq!(r.req_str("kind").unwrap(), "validation_failed");
+    assert!(
+        r.req_str("error").unwrap().contains("g4dn->p3"),
+        "error should name the missing pair: {r:?}"
+    );
+
+    // nothing changed: epoch 1 still serving, predictions still answered
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("registry_epoch").unwrap() as u64, 1);
+    let after = send(addr, &line);
+    assert_eq!(after.get("ok").and_then(Json::as_bool), Some(true), "{after:?}");
+    assert_eq!(
+        before.req_f64("latency_ms").unwrap().to_bits(),
+        after.req_f64("latency_ms").unwrap().to_bits()
+    );
+
+    // the load-time structured error is also visible to library callers
+    let err = repro::predictor::Profet::load(&models).unwrap_err();
+    let gap = err
+        .downcast_ref::<repro::predictor::MissingModels>()
+        .expect("MissingModels in the chain");
+    assert_eq!(
+        gap.cross,
+        vec![(Instance::G4dn, Instance::P3)]
+    );
+    handle.stop();
+    std::fs::remove_dir_all(&models).ok();
+}
+
+/// Online onboarding end to end: `ingest` staged measurements for a pair
+/// the server has never seen (g4dn→p2), `onboard` trains + publishes it
+/// live, and the pair starts answering — with the manifest on disk
+/// updated so a restart serves it too.
+#[test]
+fn ingest_onboard_brings_a_new_pair_live() {
+    let Some(_) = model_dir() else { return };
+    let models = copy_model_dir("onboard");
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // onboarding with nothing staged is its own structured error
+    let empty = send(addr, r#"{"op":"onboard"}"#);
+    assert_eq!(empty.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(empty.req_str("kind").unwrap(), "no_staged_data");
+
+    // the new pair is unknown before onboarding
+    let corpus = Corpus::generate(&[Instance::G4dn, Instance::P2]);
+    let paired: Vec<&repro::data::Entry> = corpus
+        .entries
+        .iter()
+        .filter(|e| e.runs.contains_key(&Instance::G4dn) && e.runs.contains_key(&Instance::P2))
+        .collect();
+    assert!(paired.len() >= 30, "{}", paired.len());
+    let probe = {
+        let ar = &paired[0].runs[&Instance::G4dn];
+        let mut req = Json::obj();
+        req.set("op", Json::Str("predict".into()));
+        req.set("anchor", Json::Str("g4dn".into()));
+        req.set("target", Json::Str("p2".into()));
+        req.set("anchor_latency_ms", Json::Num(ar.latency_ms));
+        let mut prof = Json::obj();
+        for (k, v) in &ar.profile {
+            prof.set(&k.clone(), Json::Num(*v));
+        }
+        req.set("profile", prof);
+        req.to_string()
+    };
+    let before = send(addr, &probe);
+    assert_eq!(before.get("ok").and_then(Json::as_bool), Some(false), "{before:?}");
+
+    // stage measurements (more than the ≥20 the trainer requires)
+    let mut staged = 0;
+    for e in paired.iter().take(40) {
+        let ar = &e.runs[&Instance::G4dn];
+        let tr = &e.runs[&Instance::P2];
+        let mut req = Json::obj();
+        req.set("op", Json::Str("ingest".into()));
+        req.set("anchor", Json::Str("g4dn".into()));
+        req.set("target", Json::Str("p2".into()));
+        req.set("model", Json::Str(e.workload.model.name().into()));
+        req.set("batch", Json::Num(e.workload.batch as f64));
+        req.set("pixels", Json::Num(e.workload.pixels as f64));
+        let mut prof = Json::obj();
+        for (k, v) in &ar.profile {
+            prof.set(&k.clone(), Json::Num(*v));
+        }
+        req.set("profile", prof);
+        req.set("anchor_latency_ms", Json::Num(ar.latency_ms));
+        req.set("target_latency_ms", Json::Num(tr.latency_ms));
+        let resp = send(addr, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        staged = resp.req_f64("staged").unwrap() as usize;
+    }
+    assert_eq!(staged, 40);
+
+    // onboard: trains on the trainer lane, validates, publishes epoch 2
+    let ob = send(addr, r#"{"op":"onboard","anchor":"g4dn","target":"p2"}"#);
+    assert_eq!(ob.get("ok").and_then(Json::as_bool), Some(true), "{ob:?}");
+    assert_eq!(ob.req_f64("epoch").unwrap() as u64, 2);
+    assert_eq!(ob.req_f64("pairs").unwrap() as u64, 1);
+    assert_eq!(ob.req_f64("staged").unwrap() as u64, 40);
+
+    // the pair now serves, and the answer is cache-stable
+    let after = send(addr, &probe);
+    assert_eq!(after.get("ok").and_then(Json::as_bool), Some(true), "{after:?}");
+    let lat = after.req_f64("latency_ms").unwrap();
+    assert!(lat > 0.0 && lat.is_finite(), "{lat}");
+    let again = send(addr, &probe);
+    assert_eq!(
+        lat.to_bits(),
+        again.req_f64("latency_ms").unwrap().to_bits()
+    );
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("registry_epoch").unwrap() as u64, 2);
+    assert!(st.req_f64("last_reload").unwrap() > 0.0);
+
+    // consumed staging was cleared; the old pair still serves
+    let old = send(addr, &sample_profile_line());
+    assert_eq!(old.get("ok").and_then(Json::as_bool), Some(true), "{old:?}");
+    assert!(!models.join("staging").join("g4dn_p2.jsonl").exists());
+    handle.stop();
+
+    // the persisted dir (manifest included) round-trips with the new pair
+    let loaded = repro::predictor::Profet::load(&models).unwrap();
+    assert!(loaded.cross.contains_key(&(Instance::G4dn, Instance::P2)));
+    // ...and deleting the freshly onboarded component is caught at load
+    std::fs::remove_file(models.join("cross_g4dn_p2.json")).unwrap();
+    let err = repro::predictor::Profet::load(&models).unwrap_err();
+    let gap = err
+        .downcast_ref::<repro::predictor::MissingModels>()
+        .expect("MissingModels in the chain");
+    assert_eq!(gap.cross, vec![(Instance::G4dn, Instance::P2)]);
+    std::fs::remove_dir_all(&models).ok();
 }

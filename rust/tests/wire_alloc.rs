@@ -11,6 +11,11 @@
 //! the cache before any engine involvement, so this path IS the whole
 //! round trip for steady-state traffic.
 //!
+//! The registry epoch is woven into the cache key on this path (the
+//! router reads it off the snapshot — an atomic load plus an `Arc`
+//! refcount bump, no allocation); the key here uses a fixed epoch the
+//! same way.
+//!
 //! Run explicitly by `ci/check.sh` (`cargo test -q --test wire_alloc`).
 
 use repro::advisor::{CacheKey, CacheKeyScratch, PredictionCache};
@@ -51,6 +56,10 @@ fn allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
+/// The registry epoch warm requests are pinned to (arbitrary nonzero —
+/// the point is that weaving it into the key costs no allocations).
+const EPOCH: u64 = 7;
+
 /// One warm predict round trip at the wire layer. Returns the encoded
 /// response length so nothing is optimized away.
 fn round_trip(
@@ -64,7 +73,13 @@ fn round_trip(
     let ParsedLine::Predict(view) = parsed else {
         panic!("expected a predict view");
     };
-    let key = keys.key(view.anchor, view.target, view.anchor_latency_ms, view.pairs());
+    let key = keys.key(
+        EPOCH,
+        view.anchor,
+        view.target,
+        view.anchor_latency_ms,
+        view.pairs(),
+    );
     let (latency_ms, member) = cache.peek(&key).expect("warm cache must hit");
     let resp = Response::Prediction { latency_ms, member };
     resp.encode_line(out);
@@ -99,7 +114,7 @@ fn warm_predict_round_trip_is_zero_allocation() {
     let Ok(Request::Predict(req)) = Request::parse(line) else {
         panic!("parse failed");
     };
-    let owned = CacheKey::of(req.anchor, req.target, req.anchor_latency_ms, &req.profile);
+    let owned = CacheKey::of(EPOCH, req.anchor, req.target, req.anchor_latency_ms, &req.profile);
     cache.insert(owned, (123.456, Member::Forest));
 
     // warm every buffer (scratch vecs, unescape string, out buffer)

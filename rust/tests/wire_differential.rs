@@ -26,6 +26,11 @@ fn base_lines() -> Vec<String> {
         r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"cheapest","deadline_hours":4.0,"dataset_images":50000,"epochs":10}"#,
         r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"fastest","budget_usd":12.5,"dataset_images":1000}"#,
         r#"{"op":"plan","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":80.0},"anchor_lat_bmin":95.0,"profile_bmax":{"Conv2D":900.0},"anchor_lat_bmax":1020.0,"objective":"max_epochs","deadline_hours":2.0,"dataset_images":1000}"#,
+        // registry ops (live model hot-reload / online onboarding)
+        r#"{"op":"reload"}"#,
+        r#"{"op":"onboard"}"#,
+        r#"{"op":"onboard","anchor":"g4dn","target":"g5"}"#,
+        r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":80.5,"Relu":8.25},"anchor_latency_ms":120.5,"target_latency_ms":60.25}"#,
         // malformed on purpose: both decoders must reject identically
         "not json",
         "{}",
@@ -38,6 +43,9 @@ fn base_lines() -> Vec<String> {
         r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"Conv2D":"x"}}"#,
         r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":1,"profile":{"a":1e400,"b":"x"}}"#,
         r#"{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{"Conv2D":1},"anchor_lat_bmin":5,"profile_bmax":{"Conv2D":2},"anchor_lat_bmax":10,"batches":[16.9],"gpu_counts":[1,"two"],"top_k":-1}"#,
+        r#"{"op":"ingest","anchor":"g4dn","target":"g4dn","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+        r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"NotANet","batch":0,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
+        r#"{"op":"onboard","anchor":"g4dn"}"#,
     ]
     .into_iter()
     .map(String::from)
