@@ -34,6 +34,12 @@ cargo test -q --test wire_alloc
 echo "== cargo test -q (stress test excluded — it just ran single-shot) =="
 cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps
 
+# boots a real server and fires a short strict open-loop burst: any
+# dropped reply or malformed BENCH_serve.json fails; self-skips (loudly)
+# when the PJRT backend is unavailable (shared logic: ci/loadgen_smoke.sh)
+echo "== loadgen smoke (server boot + strict burst) =="
+../ci/loadgen_smoke.sh
+
 # rustdoc gate: module docs, doc-examples, and intra-doc links must stay
 # warning-clean (broken links rot silently otherwise)
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="

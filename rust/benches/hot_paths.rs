@@ -213,6 +213,13 @@ fn main() {
             predict_lanes: 8,
             cache_hits: 100_000,
             cache_misses: 23_456,
+            registry_epoch: 2,
+            last_reload: 1_753_600_000_123,
+            open_conns: 512,
+            active_conns: 64,
+            idle_conns: 448,
+            evictions: 17,
+            reactor_threads: 2,
         };
         bench(&mut results, "wire encode stats response (reused buf)", 200, || {
             stats.encode_line(&mut out);

@@ -46,6 +46,7 @@
 use crate::advisor::{CacheStats, Objective, PredictionCache, SweepRequest, TrainingJob};
 use crate::coordinator::lane::{self, LaneCtx};
 use crate::coordinator::protocol::{PredictRequest, Response};
+use crate::coordinator::reactor::CompletionQueue;
 use crate::coordinator::registry::{IngestRequest, ModelRegistry, ModelSnapshot, OnboardOptions};
 use crate::gpu::Instance;
 use crate::runtime::Runtime;
@@ -56,18 +57,55 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 
+/// Where a lane delivers a job's [`Response`]. Blocking callers (CLI
+/// paths, the model-dir watcher, tests) hold the receiving end of a
+/// channel; reactor connections instead enqueue the response on their
+/// owning reactor thread's [`CompletionQueue`], which wakes the reactor
+/// to flush it on writable readiness — no thread ever parks per request.
+pub struct Reply(ReplyKind);
+
+enum ReplyKind {
+    Channel(Sender<Response>),
+    Completion { queue: Arc<CompletionQueue>, conn: u64 },
+}
+
+impl Reply {
+    /// A blocking reply: the caller waits on the channel's receiver.
+    pub fn channel(tx: Sender<Response>) -> Reply {
+        Reply(ReplyKind::Channel(tx))
+    }
+
+    /// A reactor reply: the response is queued for connection `conn` on
+    /// its reactor's completion queue (which wakes the reactor).
+    pub(crate) fn completion(queue: Arc<CompletionQueue>, conn: u64) -> Reply {
+        Reply(ReplyKind::Completion { queue, conn })
+    }
+
+    /// Deliver the response. Consumes the reply — every job answers
+    /// exactly once. A disconnected channel receiver (caller gave up) is
+    /// ignored, same as the old raw `Sender` behavior.
+    pub fn send(self, resp: Response) {
+        match self.0 {
+            ReplyKind::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyKind::Completion { queue, conn } => queue.push(conn, resp),
+        }
+    }
+}
+
 /// Work item submitted to an engine lane. Model-consuming jobs carry the
 /// [`ModelSnapshot`] captured at admission, pinning them to one registry
 /// epoch for their whole life.
 pub enum Job {
-    Predict(PredictRequest, ModelSnapshot, Sender<Response>),
+    Predict(PredictRequest, ModelSnapshot, Reply),
     BatchSize {
         instance: Instance,
         batch: usize,
         t_min: f64,
         t_max: f64,
         snap: ModelSnapshot,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     PixelSize {
         instance: Instance,
@@ -75,37 +113,37 @@ pub enum Job {
         t_min: f64,
         t_max: f64,
         snap: ModelSnapshot,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     Recommend {
         query: SweepRequest,
         top_k: usize,
         snap: ModelSnapshot,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     Plan {
         query: SweepRequest,
         job: TrainingJob,
         objective: Objective,
         snap: ModelSnapshot,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     /// Stage one profiled measurement (trainer lane).
     Ingest {
         req: IngestRequest,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     /// Train staged pairs and publish a new epoch (trainer lane).
     Onboard {
         pair: Option<(Instance, Instance)>,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     /// Re-load the model dir and publish a new epoch (trainer lane).
     /// `only_if_changed` is the mtime watcher's mode — a directory whose
     /// fingerprint hasn't moved is skipped silently.
     Reload {
         only_if_changed: bool,
-        reply: Sender<Response>,
+        reply: Reply,
     },
     Shutdown,
 }
@@ -125,6 +163,26 @@ pub struct EngineStats {
     /// Phase-1 prediction-cache hit/miss counters (predict + advisor),
     /// shared across all replicas.
     pub cache: CacheStats,
+    /// Reactor connection-tier health (the `stats` op's
+    /// `open_conns`/`active_conns`/`idle_conns`/`evictions` fields).
+    pub conns: ConnStats,
+}
+
+/// Connection-tier health, maintained by the acceptor and the reactor
+/// threads, read by the router's `stats` op.
+#[derive(Debug, Default)]
+pub struct ConnStats {
+    /// Connections currently open (gauge) — includes idle keep-alives.
+    /// The acceptor increments it at admission; the owning reactor
+    /// decrements at close, so it doubles as the connection-budget count.
+    pub open: AtomicU64,
+    /// Connections with an engine job in flight right now (gauge).
+    /// `idle_conns` reported by the `stats` op is `open - active`.
+    pub active: AtomicU64,
+    /// Connections evicted by the reactor idle timeout (counter).
+    pub evicted: AtomicU64,
+    /// Reactor threads serving connections (set once at serve start).
+    pub reactor_threads: AtomicU64,
 }
 
 /// Pool sizing/backpressure knobs.
@@ -503,20 +561,20 @@ mod tests {
             match job {
                 Job::Shutdown => return,
                 Job::Predict(_, _, reply) => {
-                    let _ = reply.send(Response::Latency {
+                    reply.send(Response::Latency {
                         latency_ms: idx as f64,
                     });
                 }
                 Job::BatchSize { reply, .. } | Job::PixelSize { reply, .. } => {
-                    let _ = reply.send(Response::Health);
+                    reply.send(Response::Health);
                 }
                 Job::Recommend { reply, .. } | Job::Plan { reply, .. } => {
-                    let _ = reply.send(Response::Health);
+                    reply.send(Response::Health);
                 }
                 Job::Ingest { reply, .. }
                 | Job::Onboard { reply, .. }
                 | Job::Reload { reply, .. } => {
-                    let _ = reply.send(Response::Latency {
+                    reply.send(Response::Latency {
                         latency_ms: idx as f64,
                     });
                 }
@@ -536,7 +594,7 @@ mod tests {
             let mut lanes = Vec::new();
             for _ in 0..8 {
                 let (tx, rx) = channel();
-                pool.submit(Job::Predict(predict_req(anchor, target), snap(), tx))
+                pool.submit(Job::Predict(predict_req(anchor, target), snap(), Reply::channel(tx)))
                     .unwrap();
                 let resp = rx.recv().unwrap();
                 let Response::Latency { latency_ms } = resp else { panic!("err") };
@@ -587,7 +645,7 @@ mod tests {
             query: sample_query(),
             top_k: 0,
             snap: snap(),
-            reply: tx,
+            reply: Reply::channel(tx),
         })
         .unwrap();
         rx.recv().unwrap();
@@ -598,7 +656,7 @@ mod tests {
             t_min: 1.0,
             t_max: 2.0,
             snap: snap(),
-            reply: tx,
+            reply: Reply::channel(tx),
         })
         .unwrap();
         rx.recv().unwrap();
@@ -617,7 +675,7 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(Job::Reload {
             only_if_changed: false,
-            reply: tx,
+            reply: Reply::channel(tx),
         })
         .unwrap();
         let Response::Latency { latency_ms } = rx.recv().unwrap() else {
@@ -627,7 +685,7 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(Job::Onboard {
             pair: Some((Instance::G4dn, Instance::G5)),
-            reply: tx,
+            reply: Reply::channel(tx),
         })
         .unwrap();
         let Response::Latency { latency_ms } = rx.recv().unwrap() else {
@@ -639,7 +697,7 @@ mod tests {
         pool.submit(Job::Predict(
             predict_req(Instance::G4dn, Instance::P3),
             snap(),
-            tx,
+            Reply::channel(tx),
         ))
         .unwrap();
         let Response::Latency { latency_ms } = rx.recv().unwrap() else {
@@ -658,7 +716,7 @@ mod tests {
             | Job::Ingest { reply, .. }
             | Job::Onboard { reply, .. }
             | Job::Reload { reply, .. } => {
-                let _ = reply.send(Response::Health);
+                reply.send(Response::Health);
             }
             Job::Shutdown => {}
         }
@@ -708,7 +766,7 @@ mod tests {
             query: sample_query(),
             top_k: 0,
             snap: snap(),
-            reply: sweep_tx,
+            reply: Reply::channel(sweep_tx),
         })
         .unwrap();
         // while the "sweep" is stalled, a predict answers promptly
@@ -716,7 +774,7 @@ mod tests {
         pool.submit(Job::Predict(
             predict_req(Instance::G4dn, Instance::P3),
             snap(),
-            tx,
+            Reply::channel(tx),
         ))
         .unwrap();
         let resp = rx
@@ -761,7 +819,7 @@ mod tests {
                 query: sample_query(),
                 top_k: 0,
                 snap: snap(),
-                reply: tx,
+                reply: Reply::channel(tx),
             });
             (r, rx)
         };
@@ -783,7 +841,7 @@ mod tests {
         pool.submit(Job::Predict(
             predict_req(Instance::G4dn, Instance::P3),
             snap(),
-            tx,
+            Reply::channel(tx),
         ))
         .unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
@@ -799,7 +857,7 @@ mod tests {
         for i in 0..16 {
             let (tx, rx) = channel();
             let target = if i % 2 == 0 { Instance::P3 } else { Instance::P2 };
-            pool.submit(Job::Predict(predict_req(Instance::G4dn, target), snap(), tx))
+            pool.submit(Job::Predict(predict_req(Instance::G4dn, target), snap(), Reply::channel(tx)))
                 .unwrap();
             rxs.push(rx);
         }

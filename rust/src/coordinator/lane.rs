@@ -27,7 +27,7 @@
 //! shutdown/disconnect — replies are never dropped on the floor.
 
 use crate::advisor::{self, CacheKey, Candidate, PlanChoice, PredictionCache};
-use crate::coordinator::dispatch::{EngineStats, Job};
+use crate::coordinator::dispatch::{EngineStats, Job, Reply};
 use crate::coordinator::protocol::{PredictRequest, Response};
 use crate::coordinator::registry::{ModelRegistry, ModelSnapshot, OnboardOptions, RegistryError};
 use crate::gpu::Instance;
@@ -35,7 +35,7 @@ use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -60,7 +60,7 @@ pub struct LaneCtx {
 /// artifact execution per group, and never across two model generations.
 type PredictGroups = BTreeMap<
     (u64, Instance, Instance),
-    (ModelSnapshot, Vec<(PredictRequest, Sender<Response>)>),
+    (ModelSnapshot, Vec<(PredictRequest, Reply)>),
 >;
 
 fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shutdown: &mut bool) {
@@ -179,7 +179,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => Response::Err(format!("{e:#}")),
                 };
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Onboard { pair, reply } => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -191,7 +191,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => registry_error_response(e),
                 };
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Reload {
                 only_if_changed,
@@ -207,7 +207,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => registry_error_response(e),
                 };
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Predict(req, snap, reply) => {
                 let mut group: PredictGroups = BTreeMap::new();
@@ -257,7 +257,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            let _ = reply.send(resp);
+            reply.send(resp);
         }
         Job::PixelSize {
             instance,
@@ -272,7 +272,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            let _ = reply.send(resp);
+            reply.send(resp);
         }
         Job::Recommend {
             query,
@@ -297,7 +297,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(cands) => recommend_response(&cands, top_k),
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            let _ = reply.send(resp);
+            reply.send(resp);
         }
         Job::Plan {
             query,
@@ -329,13 +329,13 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            let _ = reply.send(resp);
+            reply.send(resp);
         }
         // registry jobs are routed to the trainer lane; a defensive
         // arrival here (only possible through test harnesses) answers
         // with an error instead of silently dropping the reply
         Job::Ingest { reply, .. } | Job::Onboard { reply, .. } | Job::Reload { reply, .. } => {
-            let _ = reply.send(Response::Err("registry op routed off the trainer lane".into()));
+            reply.send(Response::Err("registry op routed off the trainer lane".into()));
         }
         Job::Predict(..) | Job::Shutdown => {}
     }
@@ -351,7 +351,7 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
         let profet = &snap.profet;
         let Some(model) = profet.cross.get(&(anchor, target)) else {
             for (_, reply) in group {
-                let _ = reply.send(Response::Err(format!("no model for {anchor}->{target}")));
+                reply.send(Response::Err(format!("no model for {anchor}->{target}")));
             }
             continue;
         };
@@ -397,7 +397,7 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
                             Some((v, member)) => ok_prediction(v, member),
                             None => Response::Err(msg.clone()),
                         };
-                        let _ = reply.send(resp);
+                        reply.send(resp);
                     }
                     continue;
                 }
@@ -408,7 +408,7 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
                 Some((v, member)) => ok_prediction(v, member),
                 None => Response::Err("prediction missing from batch".into()),
             };
-            let _ = reply.send(resp);
+            reply.send(resp);
         }
     }
 }
@@ -530,7 +530,7 @@ mod tests {
         for (epoch, lat) in [(1u64, 1.0), (1, 2.0), (2, 3.0), (1, 4.0)] {
             let (tx, _rx) = channel();
             absorb(
-                Job::Predict(req(lat), snap_at(epoch), tx),
+                Job::Predict(req(lat), snap_at(epoch), Reply::channel(tx)),
                 &mut groups,
                 &mut immediate,
                 &mut shutdown,

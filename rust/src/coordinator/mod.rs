@@ -6,11 +6,17 @@
 //! narrative, with diagrams, lives in `docs/ARCHITECTURE.md`; the wire
 //! reference in `docs/PROTOCOL.md`):
 //!
-//! * [`server`] — accept loop, one lightweight thread per connection,
-//!   bounded by a connection budget; `stop()` gracefully drains in-flight
-//!   connections (joins their handlers after flushing responses); an
+//! * [`server`] — the admission loop: enforces the connection budget
+//!   (best-effort nonblocking `overloaded` rejection) and hands accepted
+//!   sockets to the reactor pool; `stop()` gracefully drains in-flight
+//!   connections (flushes every accepted request's response); an
 //!   optional model-dir watcher hot-reloads the registry when the
 //!   directory changes;
+//! * [`reactor`] — the readiness-polled connection tier: a few epoll
+//!   threads own all sockets (idle keep-alive connections cost file
+//!   descriptors, not threads), frame request lines nonblockingly,
+//!   answer warm predicts inline, and flush engine completions back on
+//!   writable readiness;
 //! * [`router`] — request parsing/validation and dispatch over the
 //!   zero-allocation streaming wire layer (borrowed decode, typed
 //!   responses encoded straight into per-connection buffers; warm
@@ -42,11 +48,12 @@
 pub mod dispatch;
 pub mod lane;
 pub mod protocol;
+pub mod reactor;
 pub mod registry;
 pub mod router;
 pub mod server;
 
-pub use dispatch::{EnginePool, EngineStats, Job, PoolOptions, SubmitError};
+pub use dispatch::{ConnStats, EnginePool, EngineStats, Job, PoolOptions, Reply, SubmitError};
 pub use protocol::{
     parse_line, ParseError, ParsedLine, PredictRequest, PredictView, Request, Response,
     WireScratch,
@@ -55,5 +62,5 @@ pub use registry::{
     IngestRequest, ModelRegistry, ModelSnapshot, OnboardOptions, OnboardReport, RegistryError,
     StagingArea,
 };
-pub use router::{respond, route, ConnScratch};
+pub use router::{respond, respond_or_submit, route, ConnScratch, RouteOutcome};
 pub use server::{serve, serve_with, ServeOptions, ServerHandle, MAX_LINE_BYTES};

@@ -7,7 +7,7 @@
 //! | op | request fields | reply fields |
 //! |----|----------------|--------------|
 //! | `health` | — | `status` |
-//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload`, `open_conns`, `active_conns`, `idle_conns`, `evictions`, `reactor_threads` |
 //! | `instances` | — | `instances[]` (key, gpu, price_hr) |
 //! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
 //! | `predict_batch_size` | `instance`, `batch`, `t_min`, `t_max` | `latency_ms` |
@@ -1152,6 +1152,16 @@ pub enum Response {
         registry_epoch: u64,
         /// Unix ms of the last successful post-boot publish; 0 = never.
         last_reload: u64,
+        /// Connections currently owned by the reactor (gauge).
+        open_conns: u64,
+        /// Connections with an engine job in flight (gauge).
+        active_conns: u64,
+        /// `open_conns - active_conns` (gauge).
+        idle_conns: u64,
+        /// Connections closed by the idle-timeout sweep (counter).
+        evictions: u64,
+        /// Reactor threads serving this listener.
+        reactor_threads: u64,
     },
     /// `instances` catalogue (payload derived from [`Instance::ALL`] at
     /// encode time — nothing to allocate or carry).
@@ -1235,16 +1245,26 @@ impl Response {
                 cache_misses,
                 registry_epoch,
                 last_reload,
+                open_conns,
+                active_conns,
+                idle_conns,
+                evictions,
+                reactor_threads,
             } => {
                 w.begin_obj();
+                w.key("active_conns").num(*active_conns as f64);
                 w.key("artifact_batches").num(*artifact_batches as f64);
                 w.key("avg_batch_fill").num(*avg_batch_fill);
                 w.key("cache_hits").num(*cache_hits as f64);
                 w.key("cache_misses").num(*cache_misses as f64);
+                w.key("evictions").num(*evictions as f64);
+                w.key("idle_conns").num(*idle_conns as f64);
                 w.key("last_reload").num(*last_reload as f64);
                 w.key("ok").bool_(true);
+                w.key("open_conns").num(*open_conns as f64);
                 w.key("overloaded").num(*overloaded as f64);
                 w.key("predict_lanes").num(*predict_lanes as f64);
+                w.key("reactor_threads").num(*reactor_threads as f64);
                 w.key("registry_epoch").num(*registry_epoch as f64);
                 w.key("requests").num(*requests as f64);
                 w.end_obj();
@@ -1684,6 +1704,11 @@ mod tests {
                     cache_misses: 8,
                     registry_epoch: 2,
                     last_reload: 1_753_600_000_123,
+                    open_conns: 21,
+                    active_conns: 5,
+                    idle_conns: 16,
+                    evictions: 7,
+                    reactor_threads: 2,
                 },
                 {
                     let mut o = Json::obj();
@@ -1697,6 +1722,11 @@ mod tests {
                     o.set("cache_misses", Json::Num(8.0));
                     o.set("registry_epoch", Json::Num(2.0));
                     o.set("last_reload", Json::Num(1_753_600_000_123.0));
+                    o.set("open_conns", Json::Num(21.0));
+                    o.set("active_conns", Json::Num(5.0));
+                    o.set("idle_conns", Json::Num(16.0));
+                    o.set("evictions", Json::Num(7.0));
+                    o.set("reactor_threads", Json::Num(2.0));
                     o
                 },
             ),

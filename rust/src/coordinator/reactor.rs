@@ -1,0 +1,719 @@
+//! Readiness-polled connection reactor: a few threads own *all* sockets.
+//!
+//! The previous tier spent one blocking thread per connection, so 10k
+//! idle keep-alive clients cost 10k parked threads. Here each reactor
+//! thread runs one [`Poller`] (epoll on Linux — see [`crate::util::poll`])
+//! over its share of the accepted sockets and a self-pipe [`Waker`]; an
+//! idle connection costs a file descriptor and a ~100-byte table entry,
+//! nothing else.
+//!
+//! Per connection the reactor keeps the PR 4 wire buffers
+//! ([`ConnScratch`]) plus an inbound byte buffer with the same
+//! line-framing semantics the old bounded reader had: lines are
+//! newline-delimited with `\r` stripped, a line past [`MAX_LINE_BYTES`]
+//! is discarded as it streams in and answered with a structured
+//! `line_too_long` error (the connection then keeps serving), and a
+//! final unterminated line at EOF is served like any other.
+//!
+//! The request path is two-tier, exactly as before:
+//!
+//! * **warm/inline** — parse → cache-key → peek → encode happens right
+//!   on the reactor thread through
+//!   [`crate::coordinator::router::respond_or_submit`]; a steady-state
+//!   cache-hit `predict` stays zero-allocation (`tests/wire_alloc.rs`).
+//! * **cold** — the job goes to its [`EnginePool`] lane carrying a
+//!   [`Reply`] that points back at this reactor's [`CompletionQueue`];
+//!   the lane's `send` enqueues the response and wakes the reactor,
+//!   which encodes and flushes it on writable readiness. While a job is
+//!   in flight the connection's read interest is dropped (one in-flight
+//!   request per connection), which preserves the protocol's "requests
+//!   on one connection are answered in order" guarantee and turns TCP
+//!   receive-buffer backpressure on pipelining clients.
+//!
+//! Misbehaving peers are bounded three ways: the line cap above, an
+//! optional **idle timeout** (a slow-loris dribbling bytes never
+//! completes a line, so it is evicted like any idle connection), and a
+//! **write-stall timeout** (a peer that stops reading its replies is
+//! closed once its backlog makes no progress for
+//! [`crate::coordinator::ServeOptions::write_stall_timeout`]).
+//!
+//! **Graceful drain**: [`ReactorPool::drain`] half-closes every read
+//! side, serves whatever complete lines were already buffered, waits for
+//! every in-flight engine reply to flush, then closes. An accepted
+//! request never loses its response; the only bound is the write-stall
+//! timeout for peers that stopped reading.
+
+use crate::coordinator::dispatch::{EnginePool, EngineStats, Reply};
+use crate::coordinator::protocol::Response;
+use crate::coordinator::router::{self, ConnScratch, RouteOutcome};
+use crate::coordinator::server::MAX_LINE_BYTES;
+use crate::util::poll::{Event, Interest, Poller, Waker};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token reserved for the reactor's own waker pipe.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// One read syscall's worth of inbound bytes (reused per reactor).
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Per-event read budget: how many chunks one socket may consume before
+/// the reactor moves on (level-triggered readiness re-fires if more
+/// bytes remain, so fairness costs nothing).
+const READ_BUDGET: usize = 8;
+
+/// How often the timer sweep (idle eviction, write-stall) runs at most.
+const SWEEP_GRANULARITY: Duration = Duration::from_millis(100);
+
+/// Completion hand-back: engine lanes push `(connection, response)` here
+/// and wake the owning reactor, which flushes the response through the
+/// connection's writable-readiness path. One queue per reactor thread.
+pub struct CompletionQueue {
+    items: Mutex<Vec<(u64, Response)>>,
+    waker: Arc<Waker>,
+}
+
+impl CompletionQueue {
+    fn new(waker: Arc<Waker>) -> CompletionQueue {
+        CompletionQueue { items: Mutex::new(Vec::new()), waker }
+    }
+
+    /// Engine-lane side (via [`Reply::send`]): enqueue and wake.
+    pub(crate) fn push(&self, conn: u64, resp: Response) {
+        self.items.lock().unwrap().push((conn, resp));
+        self.waker.wake();
+    }
+
+    fn drain_into(&self, out: &mut Vec<(u64, Response)>) {
+        out.append(&mut self.items.lock().unwrap());
+    }
+}
+
+/// Reactor sizing/eviction knobs (resolved from
+/// [`crate::coordinator::ServeOptions`]).
+#[derive(Debug, Clone)]
+pub(crate) struct ReactorConfig {
+    pub threads: usize,
+    /// Evict a connection with no complete request line for this long.
+    /// `None` disables eviction (idle keep-alives live forever).
+    pub idle_timeout: Option<Duration>,
+    /// Close a connection whose reply backlog makes no write progress
+    /// for this long (peer stopped reading).
+    pub write_stall_timeout: Duration,
+}
+
+/// Handoff mailbox from the acceptor (and the drain signal).
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    drain: bool,
+}
+
+struct Reactor {
+    waker: Arc<Waker>,
+    inbox: Arc<Mutex<Inbox>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// The set of reactor threads behind one server.
+pub(crate) struct ReactorPool {
+    reactors: Vec<Reactor>,
+    next: AtomicUsize,
+}
+
+impl ReactorPool {
+    pub(crate) fn spawn(pool: Arc<EnginePool>, cfg: &ReactorConfig) -> Result<ReactorPool> {
+        let threads = cfg.threads.max(1);
+        pool.stats
+            .conns
+            .reactor_threads
+            .store(threads as u64, Ordering::Relaxed);
+        let mut reactors = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let waker = Arc::new(Waker::new()?);
+            let inbox = Arc::new(Mutex::new(Inbox::default()));
+            let ctx = ReactorCtx {
+                pool: pool.clone(),
+                stats: pool.stats.clone(),
+                queue: Arc::new(CompletionQueue::new(waker.clone())),
+                waker: waker.clone(),
+                inbox: inbox.clone(),
+                cfg: cfg.clone(),
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("profet-reactor-{i}"))
+                .spawn(move || reactor_loop(ctx))?;
+            reactors.push(Reactor {
+                waker,
+                inbox,
+                join: Mutex::new(Some(join)),
+            });
+        }
+        Ok(ReactorPool { reactors, next: AtomicUsize::new(0) })
+    }
+
+    /// Hand an accepted connection to the next reactor (round-robin).
+    /// The acceptor has already counted it against `stats.conns.open`.
+    pub(crate) fn adopt(&self, stream: TcpStream) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.reactors.len();
+        let r = &self.reactors[i];
+        r.inbox.lock().unwrap().conns.push(stream);
+        r.waker.wake();
+    }
+
+    /// Graceful drain: signal every reactor and join it. Returns once
+    /// every in-flight response has been flushed (or its peer stalled
+    /// out) and every connection is closed. Idempotent — a second call
+    /// finds the joins already taken.
+    pub(crate) fn drain(&self) {
+        for r in &self.reactors {
+            r.inbox.lock().unwrap().drain = true;
+            r.waker.wake();
+        }
+        for r in &self.reactors {
+            let handle = r.join.lock().unwrap().take();
+            if let Some(j) = handle {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for ReactorPool {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Everything one reactor thread shares with the outside.
+struct ReactorCtx {
+    pool: Arc<EnginePool>,
+    stats: Arc<EngineStats>,
+    queue: Arc<CompletionQueue>,
+    waker: Arc<Waker>,
+    inbox: Arc<Mutex<Inbox>>,
+    cfg: ReactorConfig,
+}
+
+/// Per-connection reactor state. Steady-state warm traffic touches only
+/// `stream`, `inbuf`, and `scratch` — all reused, zero allocations.
+struct Conn {
+    stream: TcpStream,
+    scratch: ConnScratch,
+    /// Unparsed inbound bytes (complete and partial lines).
+    inbuf: Vec<u8>,
+    /// Prefix of `inbuf` already scanned without finding a newline, so a
+    /// slowly growing partial line is never rescanned from the start.
+    scanned: usize,
+    /// An oversized line is being discarded up to its newline.
+    discarding: bool,
+    /// Reply bytes the socket wouldn't take yet (backpressure spill).
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// An engine job is in flight — reads pause until its reply lands.
+    awaiting: bool,
+    /// Peer finished sending (EOF read, hangup, or drain half-close).
+    eof: bool,
+    /// Fd was deregistered after a hangup while awaiting an engine
+    /// reply (a level-triggered HUP would otherwise spin the poller).
+    detached: bool,
+    interest: Interest,
+    /// Last complete request line / delivered reply (idle eviction).
+    last_activity: Instant,
+    /// Last write progress while a backlog exists (stall eviction).
+    last_write: Instant,
+}
+
+impl Conn {
+    fn has_backlog(&self) -> bool {
+        self.outpos < self.outbuf.len()
+    }
+
+    /// Nothing left to read, work on, or flush — close cleanly.
+    fn done(&self) -> bool {
+        self.eof && !self.awaiting && !self.has_backlog() && self.inbuf.is_empty()
+    }
+}
+
+fn reactor_loop(ctx: ReactorCtx) {
+    let poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("reactor: poller init failed: {e}");
+            return;
+        }
+    };
+    if let Err(e) = poller.add(ctx.waker.fd(), WAKE_TOKEN, Interest::READ) {
+        eprintln!("reactor: waker registration failed: {e}");
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut events: Vec<Event> = Vec::new();
+    let mut completions: Vec<(u64, Response)> = Vec::new();
+    let mut dead: Vec<u64> = Vec::new();
+    let mut rdbuf = vec![0u8; READ_CHUNK];
+    let mut draining = false;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut last_sweep = Instant::now();
+
+    loop {
+        // 1) adopt handed-over connections / notice the drain signal
+        {
+            let mut inbox = ctx.inbox.lock().unwrap();
+            if inbox.drain {
+                draining = true;
+            }
+            for stream in inbox.conns.drain(..) {
+                if draining {
+                    // raced the drain: never served, close unannounced
+                    ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                register(&poller, &mut conns, &mut next_id, stream, &ctx);
+            }
+        }
+
+        // 2) drain transition: half-close every read side; buffered
+        //    complete lines (and the final partial one) still get served,
+        //    mirroring what the old per-connection reader saw at EOF
+        if draining && drain_deadline.is_none() {
+            drain_deadline =
+                Some(Instant::now() + ctx.cfg.write_stall_timeout + Duration::from_secs(60));
+            for (&id, conn) in conns.iter_mut() {
+                let _ = conn.stream.shutdown(Shutdown::Read);
+                conn.eof = true;
+                if !conn.awaiting && !(process(&ctx, id, conn) && sync_interest(&poller, id, conn))
+                {
+                    dead.push(id);
+                }
+            }
+            close_dead(&poller, &mut conns, &mut dead, &ctx);
+        }
+
+        // 3) engine completions → encode, flush, resume buffered lines
+        ctx.queue.drain_into(&mut completions);
+        for (id, resp) in completions.drain(..) {
+            let Some(conn) = conns.get_mut(&id) else {
+                continue; // connection died while its job was in flight
+            };
+            if !(deliver(&ctx, id, conn, resp) && sync_interest(&poller, id, conn)) {
+                dead.push(id);
+            }
+        }
+        close_dead(&poller, &mut conns, &mut dead, &ctx);
+
+        // 4) drain exit: everything flushed (or the hard deadline hit)
+        if draining {
+            for (&id, conn) in conns.iter() {
+                if conn.done() || (!conn.awaiting && !conn.has_backlog()) {
+                    dead.push(id);
+                }
+            }
+            close_dead(&poller, &mut conns, &mut dead, &ctx);
+            let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
+            if conns.is_empty() || expired {
+                for (_, conn) in conns.drain() {
+                    if conn.awaiting {
+                        ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        }
+
+        // 5) wait: block forever when nothing is timed, otherwise tick
+        //    often enough for eviction/stall sweeps (and drain progress)
+        let any_backlog = conns.values().any(Conn::has_backlog);
+        let timeout = if draining {
+            Some(Duration::from_millis(100))
+        } else {
+            match (ctx.cfg.idle_timeout, any_backlog) {
+                (Some(idle), _) => Some(
+                    (idle / 2).clamp(Duration::from_millis(10), Duration::from_millis(250)),
+                ),
+                (None, true) => Some(Duration::from_millis(500)),
+                (None, false) => None,
+            }
+        };
+        if let Err(e) = poller.wait(&mut events, timeout) {
+            eprintln!("reactor: poll failed: {e}");
+            for (_, conn) in conns.drain() {
+                if conn.awaiting {
+                    ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
+                }
+                ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+            }
+            return;
+        }
+
+        // 6) readiness events
+        for ev in &events {
+            if ev.token == WAKE_TOKEN {
+                ctx.waker.drain();
+                continue;
+            }
+            let Some(conn) = conns.get_mut(&ev.token) else {
+                continue; // closed earlier in this batch
+            };
+            if ev.hangup && conn.awaiting {
+                // peer is fully gone but an engine reply is pending:
+                // deregister (a level-triggered HUP with no interest
+                // bits would spin the loop) and let the completion
+                // attempt its write and close
+                if !conn.detached {
+                    let _ = poller.del(conn.stream.as_raw_fd());
+                    conn.detached = true;
+                    conn.eof = true;
+                }
+                continue;
+            }
+            let mut alive = true;
+            if ev.writable {
+                alive = flush_backlog(conn);
+            }
+            if alive && (ev.readable || ev.hangup) && !conn.eof && !conn.awaiting {
+                alive = fill(conn, &mut rdbuf) && process(&ctx, ev.token, conn);
+            }
+            if !(alive && sync_interest(&poller, ev.token, conn)) || conn.done() {
+                dead.push(ev.token);
+            }
+        }
+        close_dead(&poller, &mut conns, &mut dead, &ctx);
+
+        // 7) timer sweep: write-stall and idle eviction
+        let now = Instant::now();
+        if now.duration_since(last_sweep) >= SWEEP_GRANULARITY {
+            last_sweep = now;
+            for (&id, conn) in conns.iter() {
+                if conn.has_backlog()
+                    && now.duration_since(conn.last_write) > ctx.cfg.write_stall_timeout
+                {
+                    dead.push(id); // peer stopped reading its replies
+                } else if let Some(idle) = ctx.cfg.idle_timeout {
+                    if !draining
+                        && !conn.awaiting
+                        && !conn.has_backlog()
+                        && now.duration_since(conn.last_activity) > idle
+                    {
+                        ctx.stats.conns.evicted.fetch_add(1, Ordering::Relaxed);
+                        dead.push(id);
+                    }
+                }
+            }
+            close_dead(&poller, &mut conns, &mut dead, &ctx);
+        }
+    }
+}
+
+fn register(
+    poller: &Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_id: &mut u64,
+    stream: TcpStream,
+    ctx: &ReactorCtx,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+        return;
+    }
+    stream.set_nodelay(true).ok();
+    let id = *next_id;
+    *next_id += 1;
+    if poller.add(stream.as_raw_fd(), id, Interest::READ).is_err() {
+        ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+        return;
+    }
+    let now = Instant::now();
+    conns.insert(
+        id,
+        Conn {
+            stream,
+            scratch: ConnScratch::default(),
+            inbuf: Vec::new(),
+            scanned: 0,
+            discarding: false,
+            outbuf: Vec::new(),
+            outpos: 0,
+            awaiting: false,
+            eof: false,
+            detached: false,
+            interest: Interest::READ,
+            last_activity: now,
+            last_write: now,
+        },
+    );
+}
+
+fn close_dead(
+    poller: &Poller,
+    conns: &mut HashMap<u64, Conn>,
+    dead: &mut Vec<u64>,
+    ctx: &ReactorCtx,
+) {
+    for id in dead.drain(..) {
+        if let Some(conn) = conns.remove(&id) {
+            if !conn.detached {
+                let _ = poller.del(conn.stream.as_raw_fd());
+            }
+            if conn.awaiting {
+                ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Keep the kernel's interest mask in sync with the connection state:
+/// read while a request may arrive, write while a backlog exists.
+fn sync_interest(poller: &Poller, id: u64, conn: &mut Conn) -> bool {
+    if conn.detached {
+        return true;
+    }
+    let want = Interest {
+        readable: !conn.eof && !conn.awaiting,
+        writable: conn.has_backlog(),
+    };
+    if want != conn.interest {
+        if poller.modify(conn.stream.as_raw_fd(), id, want).is_err() {
+            return false;
+        }
+        conn.interest = want;
+    }
+    true
+}
+
+/// Read until `WouldBlock`, EOF, or the fairness budget. Returns `false`
+/// on a hard read error (connection is dropped).
+fn fill(conn: &mut Conn, rdbuf: &mut [u8]) -> bool {
+    for _ in 0..READ_BUDGET {
+        match conn.stream.read(rdbuf) {
+            Ok(0) => {
+                conn.eof = true;
+                return true;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&rdbuf[..n]);
+                if n < rdbuf.len() {
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+fn find_newline(buf: &[u8], from: usize) -> Option<usize> {
+    buf[from..].iter().position(|&b| b == b'\n').map(|p| from + p)
+}
+
+/// Parse and serve every actionable buffered line. Stops at a partial
+/// line, or as soon as a request is handed to an engine lane (in-order
+/// replies: one in-flight job per connection). Returns `false` if the
+/// connection died on a write error.
+fn process(ctx: &ReactorCtx, id: u64, conn: &mut Conn) -> bool {
+    loop {
+        if conn.discarding {
+            match find_newline(&conn.inbuf, 0) {
+                Some(nl) => {
+                    conn.inbuf.drain(..=nl);
+                    conn.scanned = 0;
+                    conn.discarding = false;
+                    conn.last_activity = Instant::now();
+                    if !respond_too_long(conn) {
+                        return false;
+                    }
+                }
+                None => {
+                    conn.inbuf.clear();
+                    conn.scanned = 0;
+                    if conn.eof {
+                        // unterminated oversized line at EOF still gets
+                        // its structured error (old reader semantics)
+                        conn.discarding = false;
+                        if !respond_too_long(conn) {
+                            return false;
+                        }
+                    }
+                    return true;
+                }
+            }
+            continue;
+        }
+        if conn.awaiting {
+            return true;
+        }
+        match find_newline(&conn.inbuf, conn.scanned) {
+            Some(nl) => {
+                if nl > MAX_LINE_BYTES {
+                    // a complete-but-oversized line delivered in one gulp
+                    conn.inbuf.drain(..=nl);
+                    conn.scanned = 0;
+                    conn.last_activity = Instant::now();
+                    if !respond_too_long(conn) {
+                        return false;
+                    }
+                    continue;
+                }
+                if !serve_line(ctx, id, conn, Some(nl)) {
+                    return false;
+                }
+            }
+            None => {
+                conn.scanned = conn.inbuf.len();
+                if conn.inbuf.len() > MAX_LINE_BYTES {
+                    // partial line already past the cap: drop what we
+                    // hold and discard the rest as it streams in
+                    conn.inbuf.clear();
+                    conn.scanned = 0;
+                    conn.discarding = true;
+                    continue;
+                }
+                if conn.eof && !conn.inbuf.is_empty() {
+                    // final unterminated line is served like any other
+                    if !serve_line(ctx, id, conn, None) {
+                        return false;
+                    }
+                    continue;
+                }
+                return true;
+            }
+        }
+    }
+}
+
+/// Serve the line ending at `nl` (`None` = the final unterminated line,
+/// which consumes the whole buffer). Consumes the line's bytes and
+/// queues/flushes its response, or submits its engine job.
+fn serve_line(ctx: &ReactorCtx, id: u64, conn: &mut Conn, nl: Option<usize>) -> bool {
+    let Conn { inbuf, scratch, .. } = conn;
+    let end = match nl {
+        // \r is stripped on terminated lines only (old reader parity)
+        Some(p) if p > 0 && inbuf[p - 1] == b'\r' => p - 1,
+        Some(p) => p,
+        None => inbuf.len(),
+    };
+    let mut wrote = true;
+    let mut submitted = false;
+    match std::str::from_utf8(&inbuf[..end]) {
+        Ok(line) if line.trim().is_empty() => wrote = false,
+        Ok(line) => {
+            match router::respond_or_submit(&ctx.pool, line, scratch, || {
+                Reply::completion(ctx.queue.clone(), id)
+            }) {
+                RouteOutcome::Done => {}
+                RouteOutcome::Pending => {
+                    submitted = true;
+                    wrote = false;
+                }
+            }
+        }
+        // lossy replacement would silently mangle profile keys; reject
+        // like any other malformed payload
+        Err(_) => Response::err_kind("bad_request", "request line is not valid UTF-8")
+            .encode_line(&mut scratch.out),
+    }
+    match nl {
+        Some(p) => {
+            conn.inbuf.drain(..=p);
+        }
+        None => conn.inbuf.clear(),
+    }
+    conn.scanned = 0;
+    conn.last_activity = Instant::now();
+    if submitted {
+        conn.awaiting = true;
+        ctx.stats.conns.active.fetch_add(1, Ordering::Relaxed);
+    }
+    if wrote {
+        return queue_write(conn);
+    }
+    true
+}
+
+fn respond_too_long(conn: &mut Conn) -> bool {
+    Response::err_kind(
+        "line_too_long",
+        format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+    )
+    .encode_line(&mut conn.scratch.out);
+    queue_write(conn)
+}
+
+/// An engine reply arrived for `conn`: encode, flush, resume parsing
+/// whatever lines are already buffered.
+fn deliver(ctx: &ReactorCtx, id: u64, conn: &mut Conn, resp: Response) -> bool {
+    conn.awaiting = false;
+    ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
+    conn.last_activity = Instant::now();
+    resp.encode_line(&mut conn.scratch.out);
+    if !queue_write(conn) {
+        return false;
+    }
+    if conn.detached {
+        // peer hung up while the job ran; the reply got its best-effort
+        // write above, nothing more to serve
+        return false;
+    }
+    process(ctx, id, conn)
+}
+
+/// Write `conn.scratch.out` (one encoded response line) straight to the
+/// socket; whatever the socket won't take spills into the backlog
+/// buffer, to be flushed on writable readiness. The warm path writes
+/// directly from the reused scratch buffer — no copies, no allocations.
+fn queue_write(conn: &mut Conn) -> bool {
+    if conn.has_backlog() {
+        // keep strict response order: never bypass queued bytes
+        let out = &conn.scratch.out;
+        conn.outbuf.extend_from_slice(out);
+        return true;
+    }
+    let mut off = 0;
+    while off < conn.scratch.out.len() {
+        match conn.stream.write(&conn.scratch.out[off..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                off += n;
+                conn.last_write = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if off < conn.scratch.out.len() {
+        conn.outbuf.extend_from_slice(&conn.scratch.out[off..]);
+        conn.last_write = Instant::now();
+    }
+    true
+}
+
+/// Writable readiness: push the spilled backlog out.
+fn flush_backlog(conn: &mut Conn) -> bool {
+    while conn.outpos < conn.outbuf.len() {
+        match conn.stream.write(&conn.outbuf[conn.outpos..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.outpos += n;
+                conn.last_write = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    conn.outbuf.clear();
+    conn.outpos = 0;
+    true
+}

@@ -3,26 +3,37 @@
 //! shared prediction cache without ever materializing the request, and
 //! forwards the rest to the [`EnginePool`].
 //!
-//! The hot loop is allocation-free: [`respond`] decodes through the
-//! per-connection [`ConnScratch`] (borrowed field names/profile keys,
-//! reusable index vectors), snapshots the model registry (one `Arc`
-//! refcount bump — the epoch it yields becomes part of the cache key, so
-//! a registry swap implicitly invalidates every older entry), builds the
-//! cache key in a reusable byte buffer, and encodes the typed
-//! [`Response`] directly into the reused output buffer. A steady-state
-//! cache-hit `predict` round trip touches the heap zero times (enforced
-//! by `tests/wire_alloc.rs`).
+//! The hot loop is allocation-free: [`respond`] / [`respond_or_submit`]
+//! decode through the per-connection [`ConnScratch`] (borrowed field
+//! names/profile keys, reusable index vectors), snapshot the model
+//! registry (one `Arc` refcount bump — the epoch it yields becomes part
+//! of the cache key, so a registry swap implicitly invalidates every
+//! older entry), build the cache key in a reusable byte buffer, and
+//! encode the typed [`Response`] directly into the reused output buffer.
+//! A steady-state cache-hit `predict` round trip touches the heap zero
+//! times (enforced by `tests/wire_alloc.rs`).
+//!
+//! Two calling conventions over one routing core:
+//!
+//! * [`respond`] / [`route`] — **blocking**: cold requests park the
+//!   calling thread on a channel until the lane replies. Used by
+//!   embedding callers (benches, examples, the model-dir watcher).
+//! * [`respond_or_submit`] — **nonblocking**: a cold request is handed
+//!   to its lane with a caller-built [`Reply`] (the reactor passes a
+//!   completion-queue reply) and [`RouteOutcome::Pending`] is returned;
+//!   the response comes back through that reply later. Warm/inline
+//!   requests encode immediately and return [`RouteOutcome::Done`].
 //!
 //! On a cache miss, the captured [`ModelSnapshot`] travels with the job:
 //! however long the request waits in a lane queue, it is answered by the
 //! model epoch that admitted it.
 
 use crate::advisor::CacheKeyScratch;
-use crate::coordinator::dispatch::{EnginePool, Job, SubmitError};
+use crate::coordinator::dispatch::{EnginePool, Job, Reply, SubmitError};
 use crate::coordinator::protocol::{parse_line, ParsedLine, Request, Response, WireScratch};
 use crate::coordinator::registry::ModelSnapshot;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver};
 
 /// Per-connection reusable buffers: decode scratch, cache-key scratch,
 /// and the encoded-response output buffer. All capacities persist across
@@ -35,21 +46,19 @@ pub struct ConnScratch {
     pub out: Vec<u8>,
 }
 
-/// Submit one engine job and wait for its reply. A full lane queue is
-/// surfaced as the structured `overloaded` error — load is shed at the
-/// dispatcher, never buffered unboundedly.
-fn ask(pool: &EnginePool, make: impl FnOnce(Sender<Response>) -> Job) -> Response {
-    let (tx, rx) = channel();
-    match pool.submit(make(tx)) {
-        Ok(()) => rx
-            .recv()
-            .unwrap_or_else(|_| Response::Err("engine gone".into())),
-        Err(SubmitError::Overloaded) => Response::err_kind(
-            "overloaded",
-            "engine queue is full — shed load and retry",
-        ),
-        Err(SubmitError::Gone) => Response::Err("engine gone".into()),
-    }
+/// What [`respond_or_submit`] did with the line.
+pub enum RouteOutcome {
+    /// The reply is encoded in `scratch.out` — write it out now.
+    Done,
+    /// The request went to an engine lane; its response arrives through
+    /// the [`Reply`] the caller supplied.
+    Pending,
+}
+
+/// Routing result before the caller decides how to wait.
+enum Handled {
+    Inline(Response),
+    Submitted,
 }
 
 /// Handle one request line end to end: decode, serve, and encode the
@@ -57,27 +66,91 @@ fn ask(pool: &EnginePool, make: impl FnOnce(Sender<Response>) -> Job) -> Respons
 /// engine works, same as the old `route`).
 pub fn respond(pool: &EnginePool, line: &str, scratch: &mut ConnScratch) {
     let ConnScratch { wire, keys, out } = scratch;
-    let resp = route_scratch(pool, line, wire, keys);
-    resp.encode_line(out);
+    let mut waiter: Option<Receiver<Response>> = None;
+    let handled = handle_line(pool, line, wire, keys, || {
+        let (tx, rx) = channel();
+        waiter = Some(rx);
+        Reply::channel(tx)
+    });
+    block_on(handled, waiter).encode_line(out);
+}
+
+/// Handle one request line without ever blocking the caller: warm and
+/// inline requests encode their reply into `scratch.out` immediately;
+/// cold requests are submitted to their engine lane carrying the
+/// [`Reply`] built by `reply` (called at most once, only on submission).
+/// Submit failures (`overloaded`, engine gone) are encoded inline — the
+/// caller never waits for a reply that will not come.
+pub fn respond_or_submit(
+    pool: &EnginePool,
+    line: &str,
+    scratch: &mut ConnScratch,
+    reply: impl FnOnce() -> Reply,
+) -> RouteOutcome {
+    let ConnScratch { wire, keys, out } = scratch;
+    match handle_line(pool, line, wire, keys, reply) {
+        Handled::Inline(resp) => {
+            resp.encode_line(out);
+            RouteOutcome::Done
+        }
+        Handled::Submitted => RouteOutcome::Pending,
+    }
 }
 
 /// Handle one request line; blocking. Compatibility entry point over
-/// fresh scratch buffers — servers use [`respond`] with per-connection
-/// scratch instead.
+/// fresh scratch buffers — servers use the scratch-reusing variants.
 pub fn route(pool: &EnginePool, line: &str) -> Response {
     let mut wire = WireScratch::default();
     let mut keys = CacheKeyScratch::default();
-    route_scratch(pool, line, &mut wire, &mut keys)
+    let mut waiter: Option<Receiver<Response>> = None;
+    let handled = handle_line(pool, line, &mut wire, &mut keys, || {
+        let (tx, rx) = channel();
+        waiter = Some(rx);
+        Reply::channel(tx)
+    });
+    block_on(handled, waiter)
 }
 
-fn route_scratch(
+fn block_on(handled: Handled, waiter: Option<Receiver<Response>>) -> Response {
+    match handled {
+        Handled::Inline(resp) => resp,
+        Handled::Submitted => match waiter {
+            Some(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::Err("engine gone".into())),
+            // unreachable: Submitted implies the reply closure ran
+            None => Response::Err("engine gone".into()),
+        },
+    }
+}
+
+/// Submit one engine job. A full lane queue is surfaced as the
+/// structured `overloaded` error — load is shed at the dispatcher,
+/// never buffered unboundedly.
+fn submit(
+    pool: &EnginePool,
+    reply: impl FnOnce() -> Reply,
+    make: impl FnOnce(Reply) -> Job,
+) -> Handled {
+    match pool.submit(make(reply())) {
+        Ok(()) => Handled::Submitted,
+        Err(SubmitError::Overloaded) => Handled::Inline(Response::err_kind(
+            "overloaded",
+            "engine queue is full — shed load and retry",
+        )),
+        Err(SubmitError::Gone) => Handled::Inline(Response::Err("engine gone".into())),
+    }
+}
+
+fn handle_line(
     pool: &EnginePool,
     line: &str,
     wire: &mut WireScratch,
     keys: &mut CacheKeyScratch,
-) -> Response {
+    reply: impl FnOnce() -> Reply,
+) -> Handled {
     match parse_line(line, wire) {
-        Err(e) => Response::err_kind(e.kind(), format!("bad request: {e}")),
+        Err(e) => Handled::Inline(Response::err_kind(e.kind(), format!("bad request: {e}"))),
         Ok(ParsedLine::Predict(view)) => {
             // cache fast path: the key only needs the current epoch (one
             // lock-free atomic load — the registry mutex stays off the
@@ -95,7 +168,7 @@ fn route_scratch(
                 let stats = &pool.stats;
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.cache.hits.fetch_add(1, Ordering::Relaxed);
-                return Response::Prediction { latency_ms, member };
+                return Handled::Inline(Response::Prediction { latency_ms, member });
             }
             // miss: NOW pin the request to a full snapshot (Arc clone)
             // and hand off to the batching lane, which re-checks the
@@ -104,24 +177,26 @@ fn route_scratch(
             // served — and cached — under the newer epoch, exactly as if
             // it had arrived a moment later.)
             let snap: ModelSnapshot = pool.registry().snapshot();
-            ask(pool, |tx| Job::Predict(view.materialize(), snap, tx))
+            submit(pool, reply, |r| Job::Predict(view.materialize(), snap, r))
         }
-        Ok(ParsedLine::Req(req)) => route_request(pool, req),
+        Ok(ParsedLine::Req(req)) => route_request(pool, req, reply),
     }
 }
 
 /// Serve an already-materialized request (everything but the borrowed
 /// `predict` fast path above).
-fn route_request(pool: &EnginePool, req: Request) -> Response {
+fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply) -> Handled {
     match req {
-        Request::Health => Response::Health,
+        Request::Health => Handled::Inline(Response::Health),
         Request::Stats => {
             let s = &pool.stats;
             let reg = pool.registry();
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
-            Response::Stats {
+            let open_conns = s.conns.open.load(Ordering::Relaxed);
+            let active_conns = s.conns.active.load(Ordering::Relaxed);
+            Handled::Inline(Response::Stats {
                 requests,
                 artifact_batches: batches,
                 avg_batch_fill: if batches > 0 {
@@ -135,12 +210,17 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
                 cache_misses: s.cache.misses.load(Ordering::Relaxed),
                 registry_epoch: reg.epoch(),
                 last_reload: reg.last_reload_unix_ms(),
-            }
+                open_conns,
+                active_conns,
+                idle_conns: open_conns.saturating_sub(active_conns),
+                evictions: s.conns.evicted.load(Ordering::Relaxed),
+                reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed),
+            })
         }
-        Request::Instances => Response::Instances,
+        Request::Instances => Handled::Inline(Response::Instances),
         Request::Predict(p) => {
             let snap = pool.registry().snapshot();
-            ask(pool, |tx| Job::Predict(p, snap, tx))
+            submit(pool, reply, |r| Job::Predict(p, snap, r))
         }
         Request::PredictBatchSize {
             instance,
@@ -149,13 +229,13 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
             t_max,
         } => {
             let snap = pool.registry().snapshot();
-            ask(pool, |tx| Job::BatchSize {
+            submit(pool, reply, |r| Job::BatchSize {
                 instance,
                 batch,
                 t_min,
                 t_max,
                 snap,
-                reply: tx,
+                reply: r,
             })
         }
         Request::PredictPixelSize {
@@ -165,22 +245,22 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
             t_max,
         } => {
             let snap = pool.registry().snapshot();
-            ask(pool, |tx| Job::PixelSize {
+            submit(pool, reply, |r| Job::PixelSize {
                 instance,
                 pixels,
                 t_min,
                 t_max,
                 snap,
-                reply: tx,
+                reply: r,
             })
         }
         Request::Recommend { query, top_k } => {
             let snap = pool.registry().snapshot();
-            ask(pool, |tx| Job::Recommend {
+            submit(pool, reply, |r| Job::Recommend {
                 query,
                 top_k,
                 snap,
-                reply: tx,
+                reply: r,
             })
         }
         Request::Plan {
@@ -189,19 +269,19 @@ fn route_request(pool: &EnginePool, req: Request) -> Response {
             objective,
         } => {
             let snap = pool.registry().snapshot();
-            ask(pool, |tx| Job::Plan {
+            submit(pool, reply, |r| Job::Plan {
                 query,
                 job,
                 objective,
                 snap,
-                reply: tx,
+                reply: r,
             })
         }
-        Request::Ingest(req) => ask(pool, |tx| Job::Ingest { req, reply: tx }),
-        Request::Onboard { pair } => ask(pool, |tx| Job::Onboard { pair, reply: tx }),
-        Request::Reload => ask(pool, |tx| Job::Reload {
+        Request::Ingest(req) => submit(pool, reply, |r| Job::Ingest { req, reply: r }),
+        Request::Onboard { pair } => submit(pool, reply, |r| Job::Onboard { pair, reply: r }),
+        Request::Reload => submit(pool, reply, |r| Job::Reload {
             only_if_changed: false,
-            reply: tx,
+            reply: r,
         }),
     }
 }

@@ -1,5 +1,18 @@
-//! TCP server: accept loop + one thread per connection, newline-delimited
-//! JSON in/out. Connections share the [`EnginePool`] replica handle.
+//! TCP server: accept loop + readiness-polled connection reactor,
+//! newline-delimited JSON in/out. Connections share the [`EnginePool`]
+//! replica handle.
+//!
+//! The accept thread does admission only: it enforces the **connection
+//! budget** ([`ServeOptions::max_connections`], tracked by the
+//! `stats.conns.open` gauge) — past it, a connection is answered with one
+//! best-effort nonblocking `overloaded` error line and closed — and hands
+//! every admitted socket to a [`ReactorPool`] reactor thread
+//! (round-robin). The reactors own all sockets from there: nonblocking
+//! line-framed reads, warm predicts answered inline on the reactor
+//! thread, cold requests dispatched to engine lanes with completions
+//! flushed back on writable readiness (see [`crate::coordinator::reactor`]
+//! for the full state machine). Ten thousand idle keep-alive connections
+//! cost ten thousand file descriptors — not threads.
 //!
 //! Request lines are length-bounded ([`MAX_LINE_BYTES`]): a client that
 //! streams an endless unterminated line cannot buffer arbitrary bytes in
@@ -7,17 +20,12 @@
 //! with a structured `line_too_long` error, and the connection keeps
 //! serving subsequent well-formed lines.
 //!
-//! The accept loop enforces a **connection budget**
-//! ([`ServeOptions::max_connections`]): past it, a connection is answered
-//! with one structured `overloaded` error line and closed instead of
-//! spawning an unbounded handler thread per socket.
-//!
 //! [`ServerHandle::stop`] is a **graceful drain**: it stops accepting,
-//! half-closes (read side) every live connection so idle handlers wake
-//! with EOF, and then *joins* every in-flight handler thread — a handler
-//! mid-request finishes it and flushes the response before exiting, so
-//! accepted requests never lose their replies (the seed leaked handler
-//! threads on shutdown).
+//! half-closes (read side) every live connection, serves whatever
+//! complete lines were already buffered, flushes every in-flight engine
+//! response, and only then returns — accepted requests never lose their
+//! replies. A peer that stopped reading its replies is bounded by
+//! [`ServeOptions::write_stall_timeout`], so it cannot wedge the drain.
 //!
 //! With [`ServeOptions::model_dir_watch`] set, a watcher thread polls the
 //! model directory on that interval and submits a conditional `reload`
@@ -27,30 +35,23 @@
 //! `staging/` subdirectory, so `ingest` traffic never looks like a model
 //! change.
 
-use crate::coordinator::dispatch::{EnginePool, EngineStats, Job, PoolOptions};
+use crate::coordinator::dispatch::{EnginePool, EngineStats, Job, PoolOptions, Reply};
 use crate::coordinator::protocol::Response;
-use crate::coordinator::router::respond;
+use crate::coordinator::reactor::{ReactorConfig, ReactorPool};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Upper bound on one request line (advisor requests carry four profile
 /// objects comfortably under 64 KiB; 1 MiB leaves an order of magnitude
 /// of headroom).
 pub const MAX_LINE_BYTES: usize = 1024 * 1024;
 
-/// Per-connection write timeout: a peer that stops *reading* its replies
-/// (full TCP send buffer) unblocks the handler with an error after this
-/// long instead of wedging it forever — which also guarantees the
-/// graceful drain's handler joins always terminate. A handler waiting on
-/// a long engine job is unaffected: the clock only runs inside `write`.
-const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
-
-/// Server configuration: engine-pool shape + connection budget.
+/// Server configuration: engine-pool shape + connection tier knobs.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub pool: PoolOptions,
@@ -58,11 +59,22 @@ pub struct ServeOptions {
     /// `max_connections + 1` gets a structured `overloaded` line and is
     /// closed immediately.
     pub max_connections: usize,
+    /// Reactor threads owning the sockets; `0` (the default) sizes from
+    /// the host: one reactor per four cores, capped at 4.
+    pub reactor_threads: usize,
+    /// Evict a connection that completes no request line for this long.
+    /// `None` (the default) keeps idle keep-alive connections forever —
+    /// they cost a file descriptor each, nothing more.
+    pub idle_timeout: Option<Duration>,
+    /// Close a connection whose reply backlog makes no write progress
+    /// for this long — a peer that stops *reading* cannot hold buffered
+    /// responses (or the graceful drain) hostage.
+    pub write_stall_timeout: Duration,
     /// Poll the model directory on this interval and hot-reload it
     /// (publish a new registry epoch) when its contents change. `None`
     /// (the default) disables the watcher; `repro serve
     /// --model-dir-watch <secs>` enables it.
-    pub model_dir_watch: Option<std::time::Duration>,
+    pub model_dir_watch: Option<Duration>,
 }
 
 impl Default for ServeOptions {
@@ -70,31 +82,27 @@ impl Default for ServeOptions {
         ServeOptions {
             pool: PoolOptions::default(),
             max_connections: 256,
+            reactor_threads: 0,
+            idle_timeout: None,
+            write_stall_timeout: Duration::from_secs(30),
             model_dir_watch: None,
         }
     }
 }
 
-/// Live-connection registry: stream clones (for the drain's read-side
-/// half-close) and handler join handles, keyed by connection id.
-#[derive(Default)]
-struct ConnTable {
-    streams: Mutex<HashMap<u64, TcpStream>>,
-    joins: Mutex<HashMap<u64, std::thread::JoinHandle<()>>>,
-    next_id: AtomicU64,
-}
-
-impl ConnTable {
-    fn active(&self) -> usize {
-        self.streams.lock().unwrap().len()
-    }
-
-    /// Called by a handler as its last action: a finished connection
-    /// detaches its own join handle (dropping a JoinHandle detaches), so
-    /// the tables never grow beyond the live-connection count.
-    fn deregister(&self, id: u64) {
-        self.streams.lock().unwrap().remove(&id);
-        self.joins.lock().unwrap().remove(&id);
+impl ServeOptions {
+    /// `reactor_threads` with the `0 = auto` sentinel resolved: one
+    /// reactor per four cores, at least 1, at most 4 (reactors are
+    /// readiness-bound, not compute-bound — the engine lanes own the
+    /// cores).
+    pub fn resolved_reactor_threads(&self) -> usize {
+        if self.reactor_threads > 0 {
+            return self.reactor_threads;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ((cores + 3) / 4).clamp(1, 4)
     }
 }
 
@@ -102,10 +110,11 @@ impl ConnTable {
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     /// Engine statistics (requests served, artifact batches executed,
-    /// cache hits/misses, overload rejections) — shared across replicas.
+    /// cache hits/misses, overload rejections, connection gauges) —
+    /// shared across replicas and reactors.
     pub stats: Arc<EngineStats>,
     shutdown: Arc<AtomicBool>,
-    conns: Arc<ConnTable>,
+    reactors: Option<Arc<ReactorPool>>,
     join: Option<std::thread::JoinHandle<()>>,
     /// Dropping the sender wakes the model-dir watcher (if any)
     /// immediately; the join below then completes without waiting out a
@@ -115,10 +124,11 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Graceful drain: stop accepting, wake idle handlers with EOF, and
-    /// join every in-flight connection handler. A handler that is waiting
-    /// on the engine finishes its request and flushes the response before
-    /// exiting — accepted requests never lose their reply.
+    /// Graceful drain: stop accepting, half-close every live connection,
+    /// and wait for the reactors to flush every accepted request's
+    /// response — a request that reached an engine lane is answered and
+    /// written out before this returns. Idle peers see EOF; peers that
+    /// stopped reading are bounded by the write-stall timeout.
     pub fn stop(mut self) {
         self.drain();
     }
@@ -135,52 +145,30 @@ impl ServerHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        // half-close the read side of every live connection: handlers
-        // blocked in `read` wake with EOF; a handler mid-request still
-        // writes its response (the write side stays open)
-        let streams: Vec<TcpStream> = {
-            let mut map = self.conns.streams.lock().unwrap();
-            map.drain().map(|(_, s)| s).collect()
-        };
-        for s in &streams {
-            let _ = s.shutdown(Shutdown::Read);
-        }
-        // the socket dups served their purpose (the half-close above);
-        // drop them now so the handler-side close is the last reference.
-        // Handler joins below always terminate: a handler is either
-        // waiting on the engine (every accepted job completes and
-        // replies), reading (woken by the half-close), or writing
-        // (bounded by WRITE_TIMEOUT) — so an in-flight request flushes
-        // its response no matter how long its engine job runs, and a
-        // peer that stopped reading cannot wedge the drain.
-        drop(streams);
-        let joins: Vec<std::thread::JoinHandle<()>> = {
-            let mut map = self.conns.joins.lock().unwrap();
-            map.drain().map(|(_, j)| j).collect()
-        };
-        for j in joins {
-            let _ = j.join();
+        // reactors: half-close, flush, close, join (see ReactorPool)
+        if let Some(reactors) = self.reactors.take() {
+            reactors.drain();
         }
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        if self.join.is_some() || self.watch_join.is_some() || self.conns.active() > 0 {
+        if self.join.is_some() || self.watch_join.is_some() || self.reactors.is_some() {
             self.drain();
         }
     }
 }
 
 /// Start the service with default options: binds `addr` (use port 0 for
-/// ephemeral), spawns the engine pool and the accept loop, returns
-/// immediately.
+/// ephemeral), spawns the engine pool, the reactors, and the accept
+/// loop, returns immediately.
 pub fn serve(addr: &str, artifact_dir: PathBuf, model_dir: PathBuf) -> Result<ServerHandle> {
     serve_with(addr, artifact_dir, model_dir, &ServeOptions::default())
 }
 
-/// [`serve`] with explicit pool sizing, connection budget, and optional
-/// model-dir watching.
+/// [`serve`] with explicit pool sizing, connection budget, reactor
+/// sizing, and optional model-dir watching.
 pub fn serve_with(
     addr: &str,
     artifact_dir: PathBuf,
@@ -188,40 +176,70 @@ pub fn serve_with(
     opts: &ServeOptions,
 ) -> Result<ServerHandle> {
     let pool = EnginePool::spawn(artifact_dir, model_dir, &opts.pool)?;
-    serve_pool_watched(addr, pool, opts.max_connections, opts.model_dir_watch)
+    serve_pool_opts(addr, pool, opts)
 }
 
-/// [`serve_pool_watched`] without a watcher (the unit-test seam: mock
-/// pools, no PJRT runtime required).
+/// [`serve_pool_opts`] with default connection-tier knobs (the unit-test
+/// seam: mock pools, no PJRT runtime required).
+#[cfg(test)]
 pub(crate) fn serve_pool(
     addr: &str,
     pool: EnginePool,
     max_connections: usize,
 ) -> Result<ServerHandle> {
-    serve_pool_watched(addr, pool, max_connections, None)
+    serve_pool_opts(
+        addr,
+        pool,
+        &ServeOptions {
+            max_connections,
+            ..ServeOptions::default()
+        },
+    )
 }
 
-/// Accept loop over a pre-built pool, plus the optional model-dir watch
-/// thread.
+/// [`serve_pool_opts`] with a model-dir watcher (test seam).
+#[cfg(test)]
 pub(crate) fn serve_pool_watched(
     addr: &str,
     pool: EnginePool,
     max_connections: usize,
-    watch: Option<std::time::Duration>,
+    watch: Option<Duration>,
+) -> Result<ServerHandle> {
+    serve_pool_opts(
+        addr,
+        pool,
+        &ServeOptions {
+            max_connections,
+            model_dir_watch: watch,
+            ..ServeOptions::default()
+        },
+    )
+}
+
+/// Admission loop + reactor pool over a pre-built engine pool, plus the
+/// optional model-dir watch thread. (`opts.pool` is ignored here — the
+/// pool is already running.)
+pub(crate) fn serve_pool_opts(
+    addr: &str,
+    pool: EnginePool,
+    opts: &ServeOptions,
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     let pool = Arc::new(pool);
-    // the watcher needs its own pool handle before the accept loop
-    // captures `pool` by move
-    let watch_pool = watch.map(|_| pool.clone());
+    let watch_pool = opts.model_dir_watch.map(|_| pool.clone());
     let stats = pool.stats.clone();
     let stats2 = stats.clone();
     let shutdown = Arc::new(AtomicBool::new(false));
     let shutdown2 = shutdown.clone();
-    let conns = Arc::new(ConnTable::default());
-    let conns2 = conns.clone();
-    let max_connections = max_connections.max(1);
+    let cfg = ReactorConfig {
+        threads: opts.resolved_reactor_threads(),
+        idle_timeout: opts.idle_timeout,
+        write_stall_timeout: opts.write_stall_timeout,
+    };
+    let reactors = Arc::new(ReactorPool::spawn(pool.clone(), &cfg)?);
+    let reactors2 = reactors.clone();
+    let max_connections = opts.max_connections.max(1);
 
     let join = std::thread::Builder::new()
         .name("profet-accept".into())
@@ -231,50 +249,19 @@ pub(crate) fn serve_pool_watched(
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                if conns2.active() >= max_connections {
+                // the open gauge is the budget: incremented here at
+                // admission, decremented by the reactor at close
+                if stats2.conns.open.load(Ordering::Relaxed) as usize >= max_connections {
                     stats2.overloaded.fetch_add(1, Ordering::Relaxed);
                     reject_overloaded(stream, max_connections);
                     continue;
                 }
-                let id = conns2.next_id.fetch_add(1, Ordering::Relaxed);
-                // register the stream clone BEFORE spawning, so the
-                // budget check and the drain both see this connection
-                match stream.try_clone() {
-                    Ok(clone) => {
-                        conns2.streams.lock().unwrap().insert(id, clone);
-                    }
-                    Err(_) => continue,
-                }
-                let pool = pool.clone();
-                let conns3 = conns2.clone();
-                let spawned = std::thread::Builder::new()
-                    .name(format!("profet-conn-{id}"))
-                    .spawn(move || {
-                        let _ = handle_conn(stream, &pool);
-                        conns3.deregister(id);
-                    });
-                match spawned {
-                    Ok(handle) => {
-                        // the handler may already have finished (instant
-                        // EOF) and deregistered `id` BEFORE this insert —
-                        // re-check the stream table and detach the handle
-                        // if so, or the joins map would leak one finished
-                        // entry per short-lived connection until drain.
-                        // (Locks taken sequentially, never nested, so
-                        // there is no order inversion with deregister.)
-                        conns2.joins.lock().unwrap().insert(id, handle);
-                        if !conns2.streams.lock().unwrap().contains_key(&id) {
-                            conns2.joins.lock().unwrap().remove(&id);
-                        }
-                    }
-                    Err(_) => {
-                        conns2.streams.lock().unwrap().remove(&id);
-                    }
-                }
+                stats2.conns.open.fetch_add(1, Ordering::Relaxed);
+                reactors2.adopt(stream);
             }
         })?;
 
-    let (watch_stop, watch_join) = match (watch, watch_pool) {
+    let (watch_stop, watch_join) = match (opts.model_dir_watch, watch_pool) {
         (Some(interval), Some(pool)) => {
             let (tx, rx) = std::sync::mpsc::channel::<()>();
             let join = std::thread::Builder::new()
@@ -289,7 +276,7 @@ pub(crate) fn serve_pool_watched(
         addr: local,
         stats,
         shutdown,
-        conns,
+        reactors: Some(reactors),
         join: Some(join),
         watch_stop,
         watch_join,
@@ -302,11 +289,7 @@ pub(crate) fn serve_pool_watched(
 /// `onboard` saves) and wait for the outcome before sleeping again, so at
 /// most one watcher-initiated reload is ever in flight. Exits as soon as
 /// the server handle drops its stop channel.
-fn model_dir_watch_loop(
-    pool: &EnginePool,
-    interval: std::time::Duration,
-    stop: std::sync::mpsc::Receiver<()>,
-) {
+fn model_dir_watch_loop(pool: &EnginePool, interval: Duration, stop: std::sync::mpsc::Receiver<()>) {
     loop {
         match stop.recv_timeout(interval) {
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
@@ -317,7 +300,7 @@ fn model_dir_watch_loop(
         if pool
             .submit(Job::Reload {
                 only_if_changed: true,
-                reply: tx,
+                reply: Reply::channel(tx),
             })
             .is_err()
         {
@@ -334,256 +317,31 @@ fn model_dir_watch_loop(
     }
 }
 
-/// Answer a budget-rejected connection with one structured error line.
-/// Written from the accept thread, so the bound is much tighter than
-/// WRITE_TIMEOUT — one short line fits any send buffer without blocking,
-/// and a pathological peer must not stall the accept loop.
+/// Answer a budget-rejected connection with one structured error line —
+/// strictly best-effort and nonblocking: the accept thread must never
+/// stall behind a peer's receive window (one short line into a fresh
+/// socket's empty send buffer virtually always succeeds; if it cannot,
+/// the peer just sees the close).
 fn reject_overloaded(mut stream: TcpStream, max_connections: usize) {
-    stream
-        .set_write_timeout(Some(std::time::Duration::from_secs(1)))
-        .ok();
+    stream.set_nonblocking(true).ok();
     let resp = Response::err_kind(
         "overloaded",
         format!("connection budget of {max_connections} exhausted — retry later"),
     );
-    let _ = stream.write_all(resp.to_line().as_bytes());
-    let _ = stream.write_all(b"\n");
-    let _ = stream.flush();
-}
-
-fn handle_conn(stream: TcpStream, pool: &EnginePool) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut buf = Vec::new();
-    // per-connection wire buffers: decode scratch, cache-key scratch, and
-    // the encoded-response output buffer — reused line after line, so a
-    // steady-state request pays zero wire-layer allocations
-    let mut scratch = crate::coordinator::router::ConnScratch::default();
-    loop {
-        buf.clear();
-        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES)? {
-            LineRead::Eof => return Ok(()),
-            LineRead::TooLong => Response::err_kind(
-                "line_too_long",
-                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
-            )
-            .encode_line(&mut scratch.out),
-            LineRead::Line => match std::str::from_utf8(&buf) {
-                Ok(line) if line.trim().is_empty() => continue,
-                Ok(line) => respond(pool, line, &mut scratch),
-                // lossy replacement would silently mangle profile keys;
-                // reject like any other malformed payload
-                Err(_) => Response::err_kind("bad_request", "request line is not valid UTF-8")
-                    .encode_line(&mut scratch.out),
-            },
-        }
-        // one newline-terminated buffer, one write syscall per response
-        writer.write_all(&scratch.out)?;
-        writer.flush()?;
-    }
-}
-
-enum LineRead {
-    /// A complete line (newline stripped) is in the buffer.
-    Line,
-    /// The line exceeded `max`; its bytes were discarded up to and
-    /// including the terminating newline (or EOF).
-    TooLong,
-    /// Clean end of stream with no pending bytes.
-    Eof,
-}
-
-/// `read_line` with a hard cap: never holds more than `max` line bytes
-/// (plus the reader's fixed internal buffer) regardless of what the peer
-/// sends. Oversized lines are drained, not buffered.
-fn read_line_bounded<R: BufRead>(
-    reader: &mut R,
-    buf: &mut Vec<u8>,
-    max: usize,
-) -> std::io::Result<LineRead> {
-    loop {
-        let (consume, found_newline, overflow) = {
-            let available = reader.fill_buf()?;
-            if available.is_empty() {
-                return Ok(if buf.is_empty() {
-                    LineRead::Eof
-                } else {
-                    LineRead::Line // final unterminated line
-                });
-            }
-            match available.iter().position(|&b| b == b'\n') {
-                Some(pos) => {
-                    if buf.len() + pos > max {
-                        (pos + 1, true, true)
-                    } else {
-                        buf.extend_from_slice(&available[..pos]);
-                        (pos + 1, true, false)
-                    }
-                }
-                None => {
-                    if buf.len() + available.len() > max {
-                        (available.len(), false, true)
-                    } else {
-                        buf.extend_from_slice(available);
-                        (available.len(), false, false)
-                    }
-                }
-            }
-        };
-        reader.consume(consume);
-        if overflow {
-            if !found_newline {
-                drain_until_newline(reader)?;
-            }
-            return Ok(LineRead::TooLong);
-        }
-        if found_newline {
-            if buf.last() == Some(&b'\r') {
-                buf.pop();
-            }
-            return Ok(LineRead::Line);
-        }
-    }
-}
-
-/// Discard bytes up to and including the next newline (or EOF).
-fn drain_until_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
-    loop {
-        let (consume, done) = {
-            let available = reader.fill_buf()?;
-            if available.is_empty() {
-                return Ok(());
-            }
-            match available.iter().position(|&b| b == b'\n') {
-                Some(pos) => (pos + 1, true),
-                None => (available.len(), false),
-            }
-        };
-        reader.consume(consume);
-        if done {
-            return Ok(());
-        }
-    }
+    let mut out = Vec::new();
+    resp.encode_line(&mut out);
+    let _ = stream.write(&out);
 }
 
 #[cfg(test)]
 mod tests {
-    use super::{drain_until_newline, read_line_bounded, serve_pool, serve_pool_watched, LineRead};
+    use super::{serve_pool, serve_pool_opts, serve_pool_watched, ServeOptions, MAX_LINE_BYTES};
     use crate::coordinator::dispatch::{EnginePool, Job};
     use crate::util::Json;
-    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::io::{BufRead as _, BufReader, Read as _, Write as _};
     use std::net::TcpStream;
     use std::sync::mpsc::Receiver;
     use std::time::Duration;
-
-    fn reader(bytes: &[u8]) -> BufReader<std::io::Cursor<Vec<u8>>> {
-        // tiny internal buffer so lines span many fill_buf() rounds
-        BufReader::with_capacity(8, std::io::Cursor::new(bytes.to_vec()))
-    }
-
-    #[test]
-    fn reads_lines_and_strips_terminators() {
-        let mut r = reader(b"alpha\nbeta\r\n\ngamma");
-        let mut buf = Vec::new();
-        for expect in [&b"alpha"[..], b"beta", b"", b"gamma"] {
-            buf.clear();
-            assert!(matches!(
-                read_line_bounded(&mut r, &mut buf, 64).unwrap(),
-                LineRead::Line
-            ));
-            assert_eq!(buf, expect);
-        }
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
-            LineRead::Eof
-        ));
-    }
-
-    #[test]
-    fn oversized_line_is_rejected_and_stream_recovers() {
-        let mut input = vec![b'x'; 1000];
-        input.push(b'\n');
-        input.extend_from_slice(b"ok\n");
-        let mut r = reader(&input);
-        let mut buf = Vec::new();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::TooLong
-        ));
-        // the bounded reader never buffered more than the cap
-        assert!(buf.len() <= 100, "{}", buf.len());
-        // and the next line parses normally
-        buf.clear();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::Line
-        ));
-        assert_eq!(buf, b"ok");
-    }
-
-    #[test]
-    fn oversized_line_at_exact_boundary() {
-        // a line of exactly `max` bytes is allowed
-        let mut input = vec![b'y'; 100];
-        input.push(b'\n');
-        let mut r = reader(&input);
-        let mut buf = Vec::new();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::Line
-        ));
-        assert_eq!(buf.len(), 100);
-        // one byte more is not
-        let mut input = vec![b'y'; 101];
-        input.push(b'\n');
-        let mut r = reader(&input);
-        buf.clear();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::TooLong
-        ));
-    }
-
-    #[test]
-    fn unterminated_oversized_line_hits_eof() {
-        let input = vec![b'z'; 500];
-        let mut r = reader(&input);
-        let mut buf = Vec::new();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::TooLong
-        ));
-        buf.clear(); // the connection loop clears between lines
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 100).unwrap(),
-            LineRead::Eof
-        ));
-    }
-
-    #[test]
-    fn final_unterminated_line_is_returned() {
-        let mut r = reader(b"tail-no-newline");
-        let mut buf = Vec::new();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
-            LineRead::Line
-        ));
-        assert_eq!(buf, b"tail-no-newline");
-    }
-
-    #[test]
-    fn drain_stops_at_newline() {
-        let mut r = reader(b"aaaaaaaaaaaaaaaaaaaa\nnext");
-        drain_until_newline(&mut r).unwrap();
-        let mut buf = Vec::new();
-        assert!(matches!(
-            read_line_bounded(&mut r, &mut buf, 64).unwrap(),
-            LineRead::Line
-        ));
-        assert_eq!(buf, b"next");
-    }
 
     // ---- pool-backed server behavior (mock lanes, no PJRT needed) ----
 
@@ -595,20 +353,19 @@ mod tests {
                     Job::Shutdown => return,
                     Job::Predict(_, _, reply) => {
                         std::thread::sleep(delay);
-                        let _ = reply.send(crate::coordinator::protocol::Response::Latency {
+                        reply.send(crate::coordinator::protocol::Response::Latency {
                             latency_ms: 1.0,
                         });
                     }
                     other => {
                         std::thread::sleep(delay);
-                        // reply ok to whatever carries a reply channel
+                        // reply ok to whatever carries a reply handle
                         match other {
                             Job::BatchSize { reply, .. }
                             | Job::PixelSize { reply, .. }
                             | Job::Recommend { reply, .. }
                             | Job::Plan { reply, .. } => {
-                                let _ = reply
-                                    .send(crate::coordinator::protocol::Response::Health);
+                                reply.send(crate::coordinator::protocol::Response::Health);
                             }
                             _ => {}
                         }
@@ -618,14 +375,109 @@ mod tests {
         }
     }
 
+    fn echo_pool(delay: Duration) -> EnginePool {
+        let body = slow_echo(delay);
+        EnginePool::mock(1, 16, 4, body.clone(), move |rx| body(0, rx))
+    }
+
     fn predict_line() -> &'static str {
         r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":10.0,"profile":{"Conv2D":1.0}}"#
     }
 
+    fn health_line() -> &'static str {
+        r#"{"op":"health"}"#
+    }
+
+    /// Line framing over a real reactor connection: pipelined lines in
+    /// one write, `\r\n` terminators stripped, blank lines skipped, and
+    /// the final unterminated line served at EOF.
     #[test]
-    fn stop_drains_in_flight_requests_without_dropping_responses() {
+    fn pipelined_lines_crlf_and_final_unterminated_line() {
+        let handle = serve_pool("127.0.0.1:0", echo_pool(Duration::ZERO), 8).unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(health_line().as_bytes());
+        payload.extend_from_slice(b"\r\n");
+        payload.extend_from_slice(b"\n"); // blank line: skipped, no reply
+        payload.extend_from_slice(health_line().as_bytes());
+        payload.extend_from_slice(b"\n");
+        payload.extend_from_slice(health_line().as_bytes()); // no newline
+        stream.write_all(&payload).unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(stream);
+        for _ in 0..3 {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            assert!(resp.contains("\"status\":\"healthy\""), "{resp}");
+        }
+        let mut tail = String::new();
+        assert_eq!(reader.read_line(&mut tail).unwrap(), 0, "expected EOF");
+        handle.stop();
+    }
+
+    /// The 1 MiB line cap under the reactor: an oversized line gets the
+    /// structured `line_too_long` error and the SAME connection keeps
+    /// serving; a line of exactly `MAX_LINE_BYTES` is not oversized.
+    #[test]
+    fn oversized_line_is_rejected_and_connection_recovers() {
+        let handle = serve_pool("127.0.0.1:0", echo_pool(Duration::ZERO), 8).unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        let mut garbage = vec![b'{'; MAX_LINE_BYTES + 128];
+        garbage.push(b'\n');
+        stream.write_all(&garbage).unwrap();
+        stream.write_all(health_line().as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).unwrap();
+        assert_eq!(j.req_str("kind").unwrap(), "line_too_long", "{resp}");
+        resp.clear();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"status\":\"healthy\""), "{resp}");
+
+        // exactly MAX_LINE_BYTES is allowed through the cap — it reaches
+        // the parser (and fails there as malformed JSON, not as too-long)
+        let mut exact = vec![b'{'; MAX_LINE_BYTES];
+        exact.push(b'\n');
+        stream.write_all(&exact).unwrap();
+        resp.clear();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).unwrap();
+        assert_eq!(j.req_str("kind").unwrap(), "bad_request", "{resp}");
+        handle.stop();
+    }
+
+    /// In-order replies on one connection: a pipelined inline op behind
+    /// a slow engine job must wait for the engine reply (requests on one
+    /// connection are answered in order).
+    #[test]
+    fn pipelined_inline_op_waits_behind_engine_job() {
+        let handle = serve_pool("127.0.0.1:0", echo_pool(Duration::from_millis(150)), 8).unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(predict_line().as_bytes());
+        payload.extend_from_slice(b"\n");
+        payload.extend_from_slice(health_line().as_bytes());
+        payload.extend_from_slice(b"\n");
+        stream.write_all(&payload).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut first = String::new();
+        reader.read_line(&mut first).unwrap();
+        assert!(first.contains("latency_ms"), "engine reply first: {first}");
+        let mut second = String::new();
+        reader.read_line(&mut second).unwrap();
+        assert!(second.contains("healthy"), "inline op second: {second}");
+        handle.stop();
+    }
+
+    /// Drain correctness with the full mix: an idle peer (sees EOF), a
+    /// mid-request peer (its in-flight engine reply is flushed), and a
+    /// peer that only reads after the drain (its reply was flushed into
+    /// the socket before close).
+    #[test]
+    fn stop_drains_mixed_idle_midflight_and_late_reading_peers() {
         use std::sync::atomic::{AtomicUsize, Ordering};
-        // mock engine that signals job pickup, then works "slowly"
         let picked = std::sync::Arc::new(AtomicUsize::new(0));
         let picked2 = picked.clone();
         let body = move |_idx: usize, rx: Receiver<Job>| {
@@ -635,7 +487,7 @@ mod tests {
                     Job::Predict(_, _, reply) => {
                         picked2.fetch_add(1, Ordering::SeqCst);
                         std::thread::sleep(Duration::from_millis(300));
-                        let _ = reply.send(crate::coordinator::protocol::Response::Latency {
+                        reply.send(crate::coordinator::protocol::Response::Latency {
                             latency_ms: 1.0,
                         });
                     }
@@ -647,8 +499,10 @@ mod tests {
         let handle = serve_pool("127.0.0.1:0", pool, 8).unwrap();
         let addr = handle.addr;
 
-        // a client with a request in flight on a slow engine
-        let client = std::thread::spawn(move || {
+        // idle peer: connected, never sends
+        let idle = TcpStream::connect(addr).unwrap();
+        // mid-request peer: blocked reading its in-flight reply
+        let midflight = std::thread::spawn(move || {
             let mut stream = TcpStream::connect(addr).unwrap();
             stream.write_all(predict_line().as_bytes()).unwrap();
             stream.write_all(b"\n").unwrap();
@@ -657,21 +511,85 @@ mod tests {
             reader.read_line(&mut resp).unwrap();
             resp
         });
-        // wait until the engine has provably picked the request up, then
-        // drain mid-flight (a fixed sleep would race conn scheduling)
+        // late reader: sends a request but reads only after stop()
+        let mut late = TcpStream::connect(addr).unwrap();
+        late.write_all(predict_line().as_bytes()).unwrap();
+        late.write_all(b"\n").unwrap();
+
+        // wait until the engine provably owns both predicts
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        while picked.load(Ordering::SeqCst) == 0 {
+        while picked.load(Ordering::SeqCst) < 2 {
             assert!(
                 std::time::Instant::now() < deadline,
-                "request never reached the mock engine"
+                "requests never reached the mock engine"
             );
             std::thread::sleep(Duration::from_millis(2));
         }
         handle.stop();
-        // stop() returned only after the handler flushed the response
-        let resp = client.join().unwrap();
+
+        // mid-flight reply arrived (stop returned only after the flush)
+        let resp = midflight.join().unwrap();
         let j = Json::parse(resp.trim()).expect("drained connection lost its response");
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        // the late reader's reply is sitting in its socket, then EOF
+        let mut buf = String::new();
+        let mut late_reader = BufReader::new(late);
+        late_reader.read_line(&mut buf).unwrap();
+        let j = Json::parse(buf.trim()).expect("late reader lost its response");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{buf}");
+        buf.clear();
+        assert_eq!(late_reader.read_line(&mut buf).unwrap(), 0, "expected EOF");
+        // the idle peer was closed
+        let mut b = [0u8; 1];
+        let mut idle = idle;
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(idle.read(&mut b).unwrap_or(0), 0, "idle peer not closed");
+    }
+
+    /// Slow-loris: a peer dribbling a partial line never completes a
+    /// request, so the idle timeout evicts it — while a well-behaved
+    /// connection on the SAME reactor thread keeps being served.
+    #[test]
+    fn slow_loris_partial_line_is_evicted_while_others_are_served() {
+        let opts = ServeOptions {
+            max_connections: 8,
+            reactor_threads: 1,
+            idle_timeout: Some(Duration::from_millis(150)),
+            ..ServeOptions::default()
+        };
+        let handle = serve_pool_opts("127.0.0.1:0", echo_pool(Duration::ZERO), &opts).unwrap();
+        let addr = handle.addr;
+
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.write_all(b"{\"op\":").unwrap(); // partial line, never finished
+
+        // the single reactor thread still serves a healthy connection
+        let mut good = TcpStream::connect(addr).unwrap();
+        good.write_all(health_line().as_bytes()).unwrap();
+        good.write_all(b"\n").unwrap();
+        let mut good_reader = BufReader::new(good);
+        let mut resp = String::new();
+        good_reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("healthy"), "{resp}");
+
+        // the dribbler is evicted by the idle timeout (partial bytes do
+        // not count as activity), surfacing as EOF on its socket
+        loris
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut b = [0u8; 1];
+        let n = loris.read(&mut b).unwrap_or(0);
+        assert_eq!(n, 0, "slow-loris connection was not evicted");
+        assert!(
+            handle
+                .stats
+                .conns
+                .evicted
+                .load(std::sync::atomic::Ordering::Relaxed)
+                >= 1,
+            "eviction counter not bumped"
+        );
+        handle.stop();
     }
 
     /// The `--model-dir-watch` poller submits *conditional* reload jobs
@@ -692,9 +610,7 @@ mod tests {
                     } => {
                         assert!(only_if_changed, "watcher reloads must be conditional");
                         r2.fetch_add(1, Ordering::SeqCst);
-                        let _ = reply.send(
-                            crate::coordinator::protocol::Response::Reloaded { epoch: 1 },
-                        );
+                        reply.send(crate::coordinator::protocol::Response::Reloaded { epoch: 1 });
                     }
                     _ => {}
                 }
@@ -727,9 +643,7 @@ mod tests {
 
     #[test]
     fn connection_budget_rejects_with_structured_overloaded() {
-        let body = slow_echo(Duration::ZERO);
-        let pool = EnginePool::mock(1, 16, 4, body.clone(), move |rx| body(0, rx));
-        let handle = serve_pool("127.0.0.1:0", pool, 1).unwrap();
+        let handle = serve_pool("127.0.0.1:0", echo_pool(Duration::ZERO), 1).unwrap();
         let addr = handle.addr;
 
         // connection 1 occupies the whole budget (held open, proven live)
@@ -777,6 +691,46 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
         };
         assert!(served, "budget slot was never released");
+        handle.stop();
+    }
+
+    /// The reactor surfaces connection gauges through the `stats` op:
+    /// open/idle reflect live connections, reactor_threads the pool size.
+    #[test]
+    fn stats_op_reports_reactor_health() {
+        let opts = ServeOptions {
+            max_connections: 8,
+            reactor_threads: 2,
+            ..ServeOptions::default()
+        };
+        let handle = serve_pool_opts("127.0.0.1:0", echo_pool(Duration::ZERO), &opts).unwrap();
+        let addr = handle.addr;
+        let _idle = TcpStream::connect(addr).unwrap();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // the idle peer's accept races this request: poll stats until
+        // the gauge includes both connections
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let j = loop {
+            writer.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let j = Json::parse(resp.trim()).unwrap();
+            let open = j.get("open_conns").and_then(Json::as_f64).unwrap() as u64;
+            if open >= 2 {
+                break j;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "idle connection never showed in open_conns: {resp}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap() as u64;
+        assert_eq!(num("reactor_threads"), 2);
+        assert!(num("idle_conns") >= 1);
+        assert_eq!(num("active_conns"), 0);
         handle.stop();
     }
 }

@@ -8,10 +8,12 @@
 //!   substrate, TF-profiler emulation, operation-name clustering, classical
 //!   ML (OLS / random forest), the median ensemble, batch/pixel polynomial
 //!   models, baselines (Paleo, MLPredict, Habitat), the evaluation harness
-//!   for every table/figure in the paper, and a threaded TCP/JSON
-//!   prediction service ([`coordinator`]) with an engine replica pool, a
-//!   zero-allocation wire path, and a live, hot-swappable model registry
-//!   ([`coordinator::registry`]) for online GPU onboarding.
+//!   for every table/figure in the paper, and a TCP/JSON prediction
+//!   service ([`coordinator`]) with a readiness-polled connection reactor,
+//!   an engine replica pool, a zero-allocation wire path, a live,
+//!   hot-swappable model registry ([`coordinator::registry`]) for online
+//!   GPU onboarding, and an open-loop load generator ([`loadgen`]) for
+//!   tail-latency benchmarking.
 //! * **L2/L1 (python/, build time only)** — the DNN ensemble member
 //!   (128·64·32·16·1 MLP) and the batched Levenshtein kernel, written in
 //!   JAX/Pallas and AOT-lowered to HLO text artifacts executed here via the
@@ -29,6 +31,7 @@ pub mod dnn;
 pub mod evalx;
 pub mod features;
 pub mod gpu;
+pub mod loadgen;
 pub mod ml;
 pub mod models;
 pub mod ops;

@@ -1,0 +1,635 @@
+//! Open-loop load generator for the serving tier (`repro loadgen`).
+//!
+//! **Open-loop, not closed-loop**: requests are scheduled on a fixed
+//! arrival clock (request *k* fires at `k / rate` seconds after start,
+//! round-robin across the connection fleet) and the generator never
+//! waits for a response before sending the next request. A slow server
+//! therefore accumulates genuine queueing delay instead of silently
+//! throttling the offered load — and every latency sample is measured
+//! from the request's **scheduled** send instant, so coordinated
+//! omission cannot hide a stall: if the generator (or the server) falls
+//! behind, the backlog shows up in the tail percentiles where it
+//! belongs.
+//!
+//! Each connection runs a writer thread (sends at the schedule) and a
+//! reader thread (pairs response lines FIFO with in-flight requests —
+//! the protocol answers requests on one connection in order, so FIFO
+//! pairing is exact). The mix is deterministic: request `k` is a
+//! `predict` iff `k % 100 < predict_pct`, with `anchor_latency_ms`
+//! cycling over a small set of distinct values so the run exercises both
+//! the cold engine path and the warm zero-allocation cache path.
+//!
+//! [`LoadgenReport`] aggregates p50/p95/p99/p999/mean/max latency,
+//! throughput, and error/overload/drop counts, and serializes to the
+//! documented `BENCH_serve.json` schema (`profet.loadgen.v1` — see
+//! README §Loadgen):
+//!
+//! ```json
+//! {
+//!   "schema": "profet.loadgen.v1",
+//!   "config": {"addr": "...", "rate": 500.0, "duration_s": 10.0,
+//!              "conns": 16, "predict_pct": 90},
+//!   "totals": {"sent": 5000, "completed": 5000, "ok": 4990,
+//!              "errors": 10, "overloaded": 0, "dropped": 0, "unsent": 0},
+//!   "elapsed_s": 10.02,
+//!   "throughput_rps": 499.0,
+//!   "latency_ms": {"p50": 0.4, "p95": 1.1, "p99": 2.3, "p999": 7.9,
+//!                  "mean": 0.6, "max": 12.0},
+//!   "per_op": {"predict": {"count": 4500, "ok": 4500, "p50": 0.3, "p99": 1.9},
+//!              "recommend": {"count": 500, "ok": 490, "p50": 2.0, "p99": 6.5}}
+//! }
+//! ```
+//!
+//! A `dropped` request is one the server accepted bytes for but never
+//! answered (its connection died first) — the graceful-drain contract
+//! says this must be zero, and `--strict` turns any violation into a
+//! nonzero exit for CI.
+
+use crate::util::{quantile, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Request kinds the generator mixes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Predict,
+    Recommend,
+}
+
+impl OpKind {
+    pub fn key(self) -> &'static str {
+        match self {
+            OpKind::Predict => "predict",
+            OpKind::Recommend => "recommend",
+        }
+    }
+}
+
+/// Generator configuration (`repro loadgen` flags).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Offered arrival rate, requests/second (open-loop clock).
+    pub rate: f64,
+    /// Run length; `floor(rate * duration)` requests are scheduled.
+    pub duration: Duration,
+    /// Connection fleet size; arrivals round-robin across it.
+    pub conns: usize,
+    /// Percentage of requests that are `predict` (0..=100); the rest
+    /// are `recommend` sweeps.
+    pub predict_pct: u32,
+    /// Anchor instance key for generated requests.
+    pub anchor: String,
+    /// Target instance key for generated `predict` requests.
+    pub target: String,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            addr: "127.0.0.1:7878".into(),
+            rate: 200.0,
+            duration: Duration::from_secs(10),
+            conns: 16,
+            predict_pct: 90,
+            anchor: "g4dn".into(),
+            target: "p3".into(),
+        }
+    }
+}
+
+/// Latency percentile summary, milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Per-op-kind slice of the run.
+#[derive(Debug, Clone, Default)]
+pub struct OpSummary {
+    pub count: u64,
+    pub ok: u64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// Everything a run measured; serializes to `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub opts: LoadgenOptions,
+    /// Requests written to a socket (each is owed a response).
+    pub sent: u64,
+    /// Responses received (ok + errors + overloaded).
+    pub completed: u64,
+    pub ok: u64,
+    /// Structured/engine errors (`"ok":false`, not overload).
+    pub errors: u64,
+    /// `kind:"overloaded"` responses (connection budget or full lanes).
+    pub overloaded: u64,
+    /// Sent but never answered — the connection died first. The drain
+    /// contract says this must be zero.
+    pub dropped: u64,
+    /// Never written (connect/write failure before the request left).
+    pub unsent: u64,
+    /// Wall time from the schedule origin to the last completion.
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub latency: LatencySummary,
+    /// Per-kind breakdown, keyed by [`OpKind::key`].
+    pub per_op: Vec<(OpKind, OpSummary)>,
+}
+
+/// Deterministic open-loop mix: request `k` is a predict iff
+/// `k % 100 < predict_pct`.
+pub fn op_for(k: usize, predict_pct: u32) -> OpKind {
+    if (k % 100) < predict_pct as usize {
+        OpKind::Predict
+    } else {
+        OpKind::Recommend
+    }
+}
+
+/// The wire line for request `k` (newline-terminated). Predicts cycle
+/// `anchor_latency_ms` over 16 distinct values: the first pass misses
+/// into the engine, repeats hit the warm zero-allocation cache path —
+/// both sides of the serving tier are on the clock.
+pub fn request_line(kind: OpKind, k: usize, anchor: &str, target: &str) -> String {
+    match kind {
+        OpKind::Predict => format!(
+            "{{\"op\":\"predict\",\"anchor\":\"{anchor}\",\"target\":\"{target}\",\
+             \"anchor_latency_ms\":{lat:.1},\
+             \"profile\":{{\"Conv2D\":286.0,\"Relu\":26.0}}}}\n",
+            lat = 50.0 + (k % 16) as f64,
+        ),
+        OpKind::Recommend => format!(
+            "{{\"op\":\"recommend\",\"anchor\":\"{anchor}\",\"pixels\":64,\
+             \"profile_bmin\":{{\"Conv2D\":80.0}},\"anchor_lat_bmin\":95.0,\
+             \"profile_bmax\":{{\"Conv2D\":900.0}},\"anchor_lat_bmax\":1020.0,\
+             \"top_k\":4}}\n",
+        ),
+    }
+}
+
+/// How one completed request ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Ok,
+    Overloaded,
+    Error,
+}
+
+fn classify(line: &str) -> Outcome {
+    if line.contains("\"ok\":true") {
+        Outcome::Ok
+    } else if line.contains("\"kind\":\"overloaded\"") {
+        Outcome::Overloaded
+    } else {
+        Outcome::Error
+    }
+}
+
+/// One answered request: kind, scheduled offset, measured latency.
+struct Sample {
+    kind: OpKind,
+    latency_ms: f64,
+    outcome: Outcome,
+    /// Offset of the completion from the schedule origin (throughput).
+    done_at_s: f64,
+}
+
+/// What one connection's writer/reader pair produced.
+#[derive(Default)]
+struct ConnResult {
+    samples: Vec<Sample>,
+    dropped: u64,
+    unsent: u64,
+}
+
+/// Run the generator against a live server. Blocks for roughly
+/// `duration` plus response drain time.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    anyhow::ensure!(opts.rate > 0.0, "--rate must be positive");
+    anyhow::ensure!(opts.predict_pct <= 100, "--predict-pct must be 0..=100");
+    let total = ((opts.rate * opts.duration.as_secs_f64()).floor() as usize).max(1);
+    let conns = opts.conns.max(1).min(total);
+
+    // schedule origin slightly in the future so every fleet thread is
+    // up before the first arrival is due
+    let start = Instant::now() + Duration::from_millis(50);
+    let mut handles = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let addr = opts.addr.clone();
+        let anchor = opts.anchor.clone();
+        let target = opts.target.clone();
+        let rate = opts.rate;
+        let predict_pct = opts.predict_pct;
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-conn-{c}"))
+            .spawn(move || {
+                conn_worker(&addr, start, c, conns, total, rate, predict_pct, &anchor, &target)
+            })
+            .context("spawning loadgen connection worker")?;
+        handles.push(handle);
+    }
+
+    let mut samples: Vec<Sample> = Vec::with_capacity(total);
+    let mut dropped = 0u64;
+    let mut unsent = 0u64;
+    for h in handles {
+        let r = h.join().unwrap_or_default();
+        samples.extend(r.samples);
+        dropped += r.dropped;
+        unsent += r.unsent;
+    }
+    Ok(aggregate(opts, total as u64, samples, dropped, unsent))
+}
+
+/// One connection of the fleet: writer sends its round-robin share of
+/// the schedule, reader pairs response lines FIFO and timestamps them.
+#[allow(clippy::too_many_arguments)]
+fn conn_worker(
+    addr: &str,
+    start: Instant,
+    conn_idx: usize,
+    conns: usize,
+    total: usize,
+    rate: f64,
+    predict_pct: u32,
+    anchor: &str,
+    target: &str,
+) -> ConnResult {
+    let my_count = (conn_idx..total).step_by(conns).count() as u64;
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            return ConnResult {
+                unsent: my_count,
+                ..ConnResult::default()
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            return ConnResult {
+                unsent: my_count,
+                ..ConnResult::default()
+            }
+        }
+    };
+
+    // scheduled-offset + kind of every request in flight, FIFO
+    let (meta_tx, meta_rx): (Sender<(Duration, OpKind)>, Receiver<(Duration, OpKind)>) = channel();
+    let reader = std::thread::spawn(move || read_responses(reader_stream, start, meta_rx));
+
+    let mut stream = stream;
+    let mut unsent = 0u64;
+    for k in (conn_idx..total).step_by(conns) {
+        let offset = Duration::from_secs_f64(k as f64 / rate);
+        let kind = op_for(k, predict_pct);
+        let line = request_line(kind, k, anchor, target);
+        // open-loop clock: sleep to the arrival instant, never to the
+        // previous response
+        let sched = start + offset;
+        let now = Instant::now();
+        if sched > now {
+            std::thread::sleep(sched - now);
+        }
+        if meta_tx.send((offset, kind)).is_err() {
+            unsent += 1;
+            continue; // reader died (connection reset) — count the rest
+        }
+        if stream.write_all(line.as_bytes()).is_err() {
+            // the meta above is now owed a response that cannot come;
+            // the reader will see EOF and count it dropped
+            unsent += (conn_idx..total).step_by(conns).filter(|&j| j > k).count() as u64;
+            break;
+        }
+    }
+    drop(meta_tx); // reader drains in-flight metas, then stops
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut result = reader.join().unwrap_or_default();
+    result.unsent += unsent;
+    result
+}
+
+fn read_responses(
+    stream: TcpStream,
+    start: Instant,
+    meta_rx: Receiver<(Duration, OpKind)>,
+) -> ConnResult {
+    let mut reader = BufReader::new(stream);
+    let mut result = ConnResult::default();
+    let mut line = String::new();
+    while let Ok((offset, kind)) = meta_rx.recv() {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => {
+                // connection died with requests in flight: this one and
+                // everything still queued behind it lost its response
+                result.dropped += 1;
+                while meta_rx.recv().is_ok() {
+                    result.dropped += 1;
+                }
+                return result;
+            }
+            Ok(_) => {
+                let done = start.elapsed();
+                let latency = done.saturating_sub(offset);
+                result.samples.push(Sample {
+                    kind,
+                    latency_ms: latency.as_secs_f64() * 1e3,
+                    outcome: classify(&line),
+                    done_at_s: done.as_secs_f64(),
+                });
+            }
+        }
+    }
+    result
+}
+
+fn summarize(latencies: &[f64]) -> LatencySummary {
+    if latencies.is_empty() {
+        return LatencySummary::default();
+    }
+    LatencySummary {
+        p50: quantile(latencies, 0.50),
+        p95: quantile(latencies, 0.95),
+        p99: quantile(latencies, 0.99),
+        p999: quantile(latencies, 0.999),
+        mean: crate::util::mean(latencies),
+        max: latencies.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+fn aggregate(
+    opts: &LoadgenOptions,
+    scheduled: u64,
+    samples: Vec<Sample>,
+    dropped: u64,
+    unsent: u64,
+) -> LoadgenReport {
+    let completed = samples.len() as u64;
+    let sent = completed + dropped;
+    debug_assert!(sent + unsent <= scheduled + conn_slack(scheduled));
+    let ok = samples.iter().filter(|s| s.outcome == Outcome::Ok).count() as u64;
+    let overloaded = samples
+        .iter()
+        .filter(|s| s.outcome == Outcome::Overloaded)
+        .count() as u64;
+    let errors = completed - ok - overloaded;
+    let latencies: Vec<f64> = samples.iter().map(|s| s.latency_ms).collect();
+    let elapsed_s = samples
+        .iter()
+        .map(|s| s.done_at_s)
+        .fold(0.0, f64::max)
+        .max(opts.duration.as_secs_f64());
+    let mut per_op = Vec::new();
+    for kind in [OpKind::Predict, OpKind::Recommend] {
+        let lats: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.latency_ms)
+            .collect();
+        let ok_n = samples
+            .iter()
+            .filter(|s| s.kind == kind && s.outcome == Outcome::Ok)
+            .count() as u64;
+        per_op.push((
+            kind,
+            OpSummary {
+                count: lats.len() as u64,
+                ok: ok_n,
+                p50: quantile(&lats, 0.50),
+                p99: quantile(&lats, 0.99),
+            },
+        ));
+    }
+    LoadgenReport {
+        opts: opts.clone(),
+        sent,
+        completed,
+        ok,
+        errors,
+        overloaded,
+        dropped,
+        unsent,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 {
+            completed as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        latency: summarize(&latencies),
+        per_op,
+    }
+}
+
+// debug-assert bookkeeping slack: a writer that dies between queueing a
+// meta and counting its remainder can be off by one per connection
+fn conn_slack(scheduled: u64) -> u64 {
+    scheduled.min(64)
+}
+
+impl LoadgenReport {
+    /// Serialize to the documented `profet.loadgen.v1` schema (see the
+    /// module docs / README §Loadgen).
+    pub fn to_json(&self) -> Json {
+        let mut config = Json::obj();
+        config.set("addr", Json::Str(self.opts.addr.clone()));
+        config.set("rate", Json::Num(self.opts.rate));
+        config.set(
+            "duration_s",
+            Json::Num(self.opts.duration.as_secs_f64()),
+        );
+        config.set("conns", Json::Num(self.opts.conns as f64));
+        config.set("predict_pct", Json::Num(self.opts.predict_pct as f64));
+
+        let mut totals = Json::obj();
+        totals.set("sent", Json::Num(self.sent as f64));
+        totals.set("completed", Json::Num(self.completed as f64));
+        totals.set("ok", Json::Num(self.ok as f64));
+        totals.set("errors", Json::Num(self.errors as f64));
+        totals.set("overloaded", Json::Num(self.overloaded as f64));
+        totals.set("dropped", Json::Num(self.dropped as f64));
+        totals.set("unsent", Json::Num(self.unsent as f64));
+
+        let mut latency = Json::obj();
+        latency.set("p50", Json::Num(self.latency.p50));
+        latency.set("p95", Json::Num(self.latency.p95));
+        latency.set("p99", Json::Num(self.latency.p99));
+        latency.set("p999", Json::Num(self.latency.p999));
+        latency.set("mean", Json::Num(self.latency.mean));
+        latency.set("max", Json::Num(self.latency.max));
+
+        let mut per_op = Json::obj();
+        for (kind, s) in &self.per_op {
+            let mut o = Json::obj();
+            o.set("count", Json::Num(s.count as f64));
+            o.set("ok", Json::Num(s.ok as f64));
+            o.set("p50", Json::Num(s.p50));
+            o.set("p99", Json::Num(s.p99));
+            per_op.set(kind.key(), o);
+        }
+
+        let mut root = Json::obj();
+        root.set("schema", Json::Str("profet.loadgen.v1".into()));
+        root.set("config", config);
+        root.set("totals", totals);
+        root.set("elapsed_s", Json::Num(self.elapsed_s));
+        root.set("throughput_rps", Json::Num(self.throughput_rps));
+        root.set("latency_ms", latency);
+        root.set("per_op", per_op);
+        root
+    }
+
+    /// The CI gate: violations that make a `--strict` run exit nonzero.
+    pub fn strict_violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if self.completed == 0 {
+            v.push("no request completed — server unreachable or dead".into());
+        }
+        if self.dropped > 0 {
+            v.push(format!(
+                "{} request(s) dropped — a connection died owing responses",
+                self.dropped
+            ));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatch::{EnginePool, Job};
+    use crate::coordinator::server::serve_pool;
+    use std::sync::mpsc::Receiver as JobReceiver;
+
+    #[test]
+    fn mix_is_deterministic_and_proportional() {
+        let predicts = (0..1000).filter(|&k| op_for(k, 90) == OpKind::Predict).count();
+        assert_eq!(predicts, 900);
+        assert_eq!(
+            (0..1000).filter(|&k| op_for(k, 0) == OpKind::Predict).count(),
+            0
+        );
+        assert_eq!(
+            (0..1000).filter(|&k| op_for(k, 100) == OpKind::Predict).count(),
+            1000
+        );
+        // stable: same k, same kind
+        assert_eq!(op_for(7, 50), op_for(7, 50));
+    }
+
+    #[test]
+    fn request_lines_are_valid_wire_json() {
+        for k in 0..32 {
+            for kind in [OpKind::Predict, OpKind::Recommend] {
+                let line = request_line(kind, k, "g4dn", "p3");
+                assert!(line.ends_with('\n'));
+                let j = Json::parse(line.trim()).expect("generator emitted invalid JSON");
+                assert_eq!(j.req_str("op").unwrap(), kind.key());
+            }
+        }
+    }
+
+    #[test]
+    fn summary_percentiles_match_quantiles() {
+        let lat: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = summarize(&lat);
+        assert!((s.p50 - 500.5).abs() < 1.0, "{}", s.p50);
+        assert!((s.p99 - 990.0).abs() < 1.5, "{}", s.p99);
+        assert!((s.p999 - 999.0).abs() < 1.5, "{}", s.p999);
+        assert_eq!(s.max, 1000.0);
+        assert!(summarize(&[]).max == 0.0);
+    }
+
+    #[test]
+    fn classification_matches_wire_shapes() {
+        assert_eq!(classify("{\"latency_ms\":1.0,\"ok\":true}"), Outcome::Ok);
+        assert_eq!(
+            classify("{\"error\":\"x\",\"kind\":\"overloaded\",\"ok\":false}"),
+            Outcome::Overloaded
+        );
+        assert_eq!(classify("{\"error\":\"x\",\"ok\":false}"), Outcome::Error);
+    }
+
+    /// Full open-loop run against a live (mock-pool) server: every
+    /// scheduled request is sent, answered, and accounted — zero drops —
+    /// and the report serializes to the documented schema.
+    #[test]
+    fn end_to_end_run_against_mock_server_loses_nothing() {
+        let body = |_idx: usize, rx: JobReceiver<Job>| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    Job::Predict(_, _, reply) => {
+                        reply.send(crate::coordinator::protocol::Response::Latency {
+                            latency_ms: 1.0,
+                        });
+                    }
+                    Job::Recommend { reply, .. } => {
+                        reply.send(crate::coordinator::protocol::Response::Health);
+                    }
+                    _ => {}
+                }
+            }
+        };
+        let pool = EnginePool::mock(2, 256, 256, body, move |rx| body(0, rx));
+        let handle = serve_pool("127.0.0.1:0", pool, 32).unwrap();
+        let opts = LoadgenOptions {
+            addr: handle.addr.to_string(),
+            rate: 400.0,
+            duration: Duration::from_millis(250),
+            conns: 4,
+            predict_pct: 75,
+            ..LoadgenOptions::default()
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.dropped, 0, "drain contract violated");
+        assert_eq!(report.unsent, 0);
+        assert_eq!(report.sent, 100, "400 rps * 0.25 s");
+        assert_eq!(report.completed, 100);
+        assert_eq!(report.ok, 100);
+        assert!(report.strict_violations().is_empty());
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.latency.p50 >= 0.0 && report.latency.p999 >= report.latency.p50);
+
+        // schema round-trip: required keys present and well-formed
+        let text = report.to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.req_str("schema").unwrap(), "profet.loadgen.v1");
+        for key in ["config", "totals", "latency_ms", "per_op"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        for key in ["p50", "p95", "p99", "p999", "mean", "max"] {
+            assert!(
+                j.get("latency_ms").unwrap().get(key).and_then(Json::as_f64).is_some(),
+                "missing latency_ms.{key}"
+            );
+        }
+        let totals = j.get("totals").unwrap();
+        assert_eq!(
+            totals.get("dropped").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        let per_op = j.get("per_op").unwrap();
+        let n = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64).unwrap() as u64;
+        let predict = per_op.get("predict").unwrap();
+        let recommend = per_op.get("recommend").unwrap();
+        assert_eq!(n(predict, "count") + n(recommend, "count"), 100);
+        assert_eq!(n(predict, "count"), 75, "75% predict mix");
+        handle.stop();
+    }
+}

@@ -7,6 +7,7 @@
 //!   simulate  run the GPU simulator for one workload
 //!   eval      regenerate the paper's tables/figures (DESIGN.md index)
 //!   serve     start the TCP/JSON prediction service
+//!   loadgen   open-loop load generator against a live server (BENCH_serve.json)
 
 use anyhow::{anyhow, Context, Result};
 use repro::data::Corpus;
@@ -66,7 +67,7 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve> [--flags]
+const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loadgen> [--flags]
   repro dataset  [--out data/corpus.json] [--instances core|all]
   repro train    [--corpus data/corpus.json] [--out models] [--fast true]
   repro predict  --model VGG16 --batch 32 --pixels 128 \\
@@ -75,7 +76,11 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve> [-
   repro eval     [--exp all|fig9|table4|...] [--out results.txt]
   repro serve    [--addr 127.0.0.1:7878] [--models models] [--pool N]
                  [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]
-                 [--model-dir-watch SECS]";
+                 [--reactor-threads N] [--idle-timeout SECS]
+                 [--model-dir-watch SECS]
+  repro loadgen  [--addr 127.0.0.1:7878] [--rate 200] [--duration 10]
+                 [--conns 16] [--predict-pct 90] [--anchor g4dn] [--target p3]
+                 [--out BENCH_serve.json] [--strict]";
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -91,6 +96,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         other => {
             println!("{USAGE}");
             Err(anyhow!("unknown command `{other}`"))
@@ -257,6 +263,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(std::time::Duration::from_secs(secs))
         }
     };
+    // `--idle-timeout 300` evicts keep-alive connections idle for 5 min;
+    // omitted = never evict (idle connections only cost a file descriptor)
+    let idle_timeout = match args.get("idle-timeout") {
+        None => None,
+        Some(v) => {
+            let secs: u64 = v.parse().with_context(|| "--idle-timeout")?;
+            anyhow::ensure!(secs >= 1, "--idle-timeout must be at least 1 second");
+            Some(std::time::Duration::from_secs(secs))
+        }
+    };
     let opts = repro::coordinator::ServeOptions {
         pool: repro::coordinator::PoolOptions {
             // 0 = auto (available parallelism)
@@ -269,6 +285,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             onboard: defaults.pool.onboard.clone(),
         },
         max_connections: args.usize_or("max-conns", defaults.max_connections)?,
+        // 0 = auto (scales with available parallelism)
+        reactor_threads: args.usize_or("reactor-threads", defaults.reactor_threads)?,
+        idle_timeout,
+        write_stall_timeout: defaults.write_stall_timeout,
         model_dir_watch,
     };
     let handle = repro::coordinator::serve_with(
@@ -279,9 +299,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     println!(
         "PROFET service listening on {} ({} predict lanes + 1 advisor + 1 trainer lane, \
-         {} max connections{})",
+         {} reactor threads, {} max connections{})",
         handle.addr,
         opts.pool.resolved_predict_lanes(),
+        opts.resolved_reactor_threads(),
         opts.max_connections,
         match opts.model_dir_watch {
             Some(d) => format!(", model dir watched every {}s", d.as_secs()),
@@ -298,4 +319,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let rate: f64 = args
+        .get_or("rate", "200")
+        .parse()
+        .with_context(|| "--rate")?;
+    let duration_s: f64 = args
+        .get_or("duration", "10")
+        .parse()
+        .with_context(|| "--duration")?;
+    anyhow::ensure!(duration_s > 0.0, "--duration must be positive");
+    let predict_pct = args.usize_or("predict-pct", 90)?;
+    anyhow::ensure!(predict_pct <= 100, "--predict-pct must be 0..=100");
+    let opts = repro::loadgen::LoadgenOptions {
+        addr: args.get_or("addr", "127.0.0.1:7878"),
+        rate,
+        duration: std::time::Duration::from_secs_f64(duration_s),
+        conns: args.usize_or("conns", 16)?,
+        predict_pct: predict_pct as u32,
+        anchor: args.get_or("anchor", "g4dn"),
+        target: args.get_or("target", "p3"),
+    };
+    eprintln!(
+        "loadgen: open-loop {} rps for {:.1}s over {} conns ({}% predict) -> {}",
+        opts.rate, duration_s, opts.conns, opts.predict_pct, opts.addr
+    );
+    let report = repro::loadgen::run(&opts)?;
+    let out = args.get_or("out", "BENCH_serve.json");
+    let mut text = report.to_json().to_string();
+    text.push('\n');
+    std::fs::write(&out, &text).with_context(|| format!("writing {out}"))?;
+    println!(
+        "sent {} / completed {} (ok {}, errors {}, overloaded {}, dropped {}, unsent {})",
+        report.sent, report.completed, report.ok, report.errors, report.overloaded,
+        report.dropped, report.unsent
+    );
+    println!(
+        "throughput {:.1} rps; latency ms p50 {:.2} p95 {:.2} p99 {:.2} p999 {:.2} max {:.2}",
+        report.throughput_rps,
+        report.latency.p50,
+        report.latency.p95,
+        report.latency.p99,
+        report.latency.p999,
+        report.latency.max
+    );
+    println!("wrote {out}");
+    if args.get("strict").is_some() {
+        // CI gate: re-parse what we just wrote, then fail on violations
+        let parsed = repro::util::Json::parse(text.trim())
+            .with_context(|| format!("{out} is not valid JSON"))?;
+        anyhow::ensure!(
+            parsed.req_str("schema").ok() == Some("profet.loadgen.v1"),
+            "{out} missing schema marker"
+        );
+        let violations = report.strict_violations();
+        if !violations.is_empty() {
+            for v in &violations {
+                eprintln!("strict violation: {v}");
+            }
+            anyhow::bail!("loadgen --strict failed with {} violation(s)", violations.len());
+        }
+    }
+    Ok(())
 }

@@ -7,6 +7,7 @@
 
 pub mod json;
 pub mod json_stream;
+pub mod poll;
 mod rng;
 
 pub use json::Json;

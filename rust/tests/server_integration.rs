@@ -137,10 +137,19 @@ fn serves_health_instances_predict_and_errors() {
     let v = b.req_f64("latency_ms").unwrap();
     assert!(v > 50.0 && v < 1000.0, "{v}");
 
-    // serving stats reflect the traffic so far
+    // serving stats reflect the traffic so far, including the reactor
+    // tier's connection health (each send() opens its own connection, so
+    // only the stats connection itself is necessarily still open)
     let st = send(addr, r#"{"op":"stats"}"#);
     assert!(st.req_f64("requests").unwrap() >= 2.0);
     assert!(st.req_f64("artifact_batches").unwrap() >= 1.0);
+    assert!(st.req_f64("reactor_threads").unwrap() >= 1.0);
+    assert!(st.req_f64("open_conns").unwrap() >= 1.0);
+    let open = st.req_f64("open_conns").unwrap();
+    let active = st.req_f64("active_conns").unwrap();
+    let idle = st.req_f64("idle_conns").unwrap();
+    assert_eq!(active + idle, open, "conn gauge split must add up");
+    assert_eq!(st.req_f64("evictions").unwrap(), 0.0, "no idle timeout configured");
 
     // errors: bad op (structured, with a kind tag), unknown pair
     let e = send(addr, r#"{"op":"nope"}"#);
