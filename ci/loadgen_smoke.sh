@@ -5,10 +5,12 @@
 # .github/workflows/ci.yml (same skip/drift rules as stress_check.sh).
 #
 # Fails when: the burst drops a reply (graceful-drain/reactor regression),
-# zero requests complete (server dead), or the artifact is missing a
-# schema key. Prints an explicit SKIPPED note when the PJRT backend is
-# unavailable in this build (training a model dir is impossible), so a
-# silent pass can't masquerade as coverage.
+# zero requests complete (server dead), the artifact is missing a schema
+# key (including the v2 `server` section of server-side deltas), or the
+# post-burst `metrics` op comes back with empty stage histograms (the
+# observatory went blind). Prints an explicit SKIPPED note when the PJRT
+# backend is unavailable in this build (training a model dir is
+# impossible), so a silent pass can't masquerade as coverage.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -52,11 +54,28 @@ echo "== loadgen smoke: short open-loop burst (--strict) =="
     --predict-pct 80 --out "$tmp/BENCH_serve.json" --strict
 
 echo "== loadgen smoke: artifact schema check =="
-for key in '"schema":"profet.loadgen.v1"' '"p50"' '"p95"' '"p99"' '"p999"' \
-           '"throughput_rps"' '"dropped"' '"overloaded"' '"per_op"'; do
+for key in '"schema":"profet.loadgen.v2"' '"p50"' '"p95"' '"p99"' '"p999"' \
+           '"throughput_rps"' '"dropped"' '"overloaded"' '"per_op"' \
+           '"server"' '"queue_wait_ms"' '"execute_ms"' '"cache_hit_ratio"'; do
     grep -qF "$key" "$tmp/BENCH_serve.json" \
         || { echo "BENCH_serve.json missing $key"; cat "$tmp/BENCH_serve.json"; exit 1; }
 done
+
+echo "== loadgen smoke: observatory check (metrics op after the burst) =="
+# one-shot newline-delimited request over /dev/tcp; the server answers a
+# line per request and holds the connection open, so read exactly one
+metrics=$(exec 3<>"/dev/tcp/${addr%:*}/${addr##*:}" \
+    && printf '{"op":"metrics"}\n' >&3 && head -n1 <&3 && exec 3<&- 3>&-)
+echo "$metrics" | grep -qF '"ok":true' \
+    || { echo "metrics op failed: $metrics"; exit 1; }
+# the burst just pushed hundreds of requests through every stage — an
+# empty histogram here means the instrumentation fell off the hot path
+for stage in '"stage":"parse"' '"stage":"queue_wait"' '"stage":"execute"' \
+             '"stage":"write_flush"'; do
+    echo "$metrics" | grep -qF "$stage" \
+        || { echo "metrics reply missing populated $stage histogram"; echo "$metrics" | head -c 2000; exit 1; }
+done
+echo "metrics op: per-stage histograms populated"
 
 # publish for the workflow's artifact upload step (repo root)
 cp "$tmp/BENCH_serve.json" ../BENCH_serve.json

@@ -220,6 +220,8 @@ fn main() {
             idle_conns: 448,
             evictions: 17,
             reactor_threads: 2,
+            uptime_s: 3600.5,
+            version: env!("CARGO_PKG_VERSION"),
         };
         bench(&mut results, "wire encode stats response (reused buf)", 200, || {
             stats.encode_line(&mut out);

@@ -49,6 +49,7 @@ use crate::coordinator::protocol::{PredictRequest, Response};
 use crate::coordinator::reactor::CompletionQueue;
 use crate::coordinator::registry::{IngestRequest, ModelRegistry, ModelSnapshot, OnboardOptions};
 use crate::gpu::Instance;
+use crate::obs::{Obs, OpClass, Stage, Temp, TraceState};
 use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
 use anyhow::Result;
@@ -56,13 +57,60 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Observability metadata riding on every [`Reply`]: the monotonic
+/// stage timestamps the latency observatory needs (admission, lane
+/// dequeue, completion-queue push), the `(op, temp)` histogram key, and
+/// — for sampled requests — the boxed per-request [`TraceState`].
+///
+/// `Instant`s are stored inline (no boxing); only the trace allocates,
+/// and only on the cold submit path, which already allocates to
+/// materialize the job.
+#[derive(Debug)]
+pub struct ReqMeta {
+    /// Admission instant (reply construction in the router/reactor).
+    pub(crate) submitted: Instant,
+    /// Lane dequeue instant (set by the lane's absorb step).
+    pub(crate) dequeued: Option<Instant>,
+    /// Completion-queue push instant (set by [`Reply::send`]).
+    pub(crate) pushed: Option<Instant>,
+    pub(crate) op: OpClass,
+    pub(crate) temp: Temp,
+    pub(crate) trace: Option<Box<TraceState>>,
+}
+
+impl ReqMeta {
+    fn new() -> ReqMeta {
+        ReqMeta {
+            submitted: Instant::now(),
+            dequeued: None,
+            pushed: None,
+            op: OpClass::Other,
+            temp: Temp::Cold,
+            trace: None,
+        }
+    }
+
+    /// Record one stage observation into the histograms AND the
+    /// request's trace (when it carries one).
+    pub(crate) fn record(&mut self, obs: &Obs, stage: Stage, ns: u64) {
+        obs.record_ns(stage, self.op, self.temp, ns);
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.note(stage, ns);
+        }
+    }
+}
 
 /// Where a lane delivers a job's [`Response`]. Blocking callers (CLI
 /// paths, the model-dir watcher, tests) hold the receiving end of a
 /// channel; reactor connections instead enqueue the response on their
 /// owning reactor thread's [`CompletionQueue`], which wakes the reactor
 /// to flush it on writable readiness — no thread ever parks per request.
-pub struct Reply(ReplyKind);
+pub struct Reply {
+    kind: ReplyKind,
+    meta: ReqMeta,
+}
 
 enum ReplyKind {
     Channel(Sender<Response>),
@@ -72,24 +120,38 @@ enum ReplyKind {
 impl Reply {
     /// A blocking reply: the caller waits on the channel's receiver.
     pub fn channel(tx: Sender<Response>) -> Reply {
-        Reply(ReplyKind::Channel(tx))
+        Reply {
+            kind: ReplyKind::Channel(tx),
+            meta: ReqMeta::new(),
+        }
     }
 
     /// A reactor reply: the response is queued for connection `conn` on
     /// its reactor's completion queue (which wakes the reactor).
     pub(crate) fn completion(queue: Arc<CompletionQueue>, conn: u64) -> Reply {
-        Reply(ReplyKind::Completion { queue, conn })
+        Reply {
+            kind: ReplyKind::Completion { queue, conn },
+            meta: ReqMeta::new(),
+        }
+    }
+
+    pub(crate) fn meta_mut(&mut self) -> &mut ReqMeta {
+        &mut self.meta
     }
 
     /// Deliver the response. Consumes the reply — every job answers
     /// exactly once. A disconnected channel receiver (caller gave up) is
     /// ignored, same as the old raw `Sender` behavior.
     pub fn send(self, resp: Response) {
-        match self.0 {
+        let mut meta = self.meta;
+        match self.kind {
             ReplyKind::Channel(tx) => {
                 let _ = tx.send(resp);
             }
-            ReplyKind::Completion { queue, conn } => queue.push(conn, resp),
+            ReplyKind::Completion { queue, conn } => {
+                meta.pushed = Some(Instant::now());
+                queue.push(conn, resp, meta);
+            }
         }
     }
 }
@@ -148,6 +210,24 @@ pub enum Job {
     Shutdown,
 }
 
+impl Job {
+    /// The reply's observability metadata, for lanes to stamp dequeue
+    /// times and record stage histograms. `Shutdown` carries none.
+    pub(crate) fn meta_mut(&mut self) -> Option<&mut ReqMeta> {
+        match self {
+            Job::Predict(_, _, reply) => Some(reply.meta_mut()),
+            Job::BatchSize { reply, .. }
+            | Job::PixelSize { reply, .. }
+            | Job::Recommend { reply, .. }
+            | Job::Plan { reply, .. }
+            | Job::Ingest { reply, .. }
+            | Job::Onboard { reply, .. }
+            | Job::Reload { reply, .. } => Some(reply.meta_mut()),
+            Job::Shutdown => None,
+        }
+    }
+}
+
 /// Serving statistics, shared by every replica (exposed for
 /// tests/monitoring through the `stats` op).
 #[derive(Debug, Default)]
@@ -201,6 +281,13 @@ pub struct PoolOptions {
     pub trainer_queue_cap: usize,
     /// Hyper-parameters the trainer lane uses for `onboard` retraining.
     pub onboard: OnboardOptions,
+    /// Completed request traces at/above this admission→delivery total
+    /// (milliseconds) enter the slow-request ring and are dumped as one
+    /// structured JSON line on stderr (`repro serve --trace-slow-ms`).
+    pub trace_slow_ms: f64,
+    /// Every Nth engine submission carries a trace context; `1` traces
+    /// everything, `0` disables tracing (`repro serve --trace-sample`).
+    pub trace_sample: u64,
 }
 
 impl Default for PoolOptions {
@@ -211,6 +298,8 @@ impl Default for PoolOptions {
             advisor_queue_cap: 8,
             trainer_queue_cap: 64,
             onboard: OnboardOptions::default(),
+            trace_slow_ms: 250.0,
+            trace_sample: 1,
         }
     }
 }
@@ -289,6 +378,10 @@ pub struct EnginePool {
     /// The live model registry — the router snapshots it per request; the
     /// trainer lane swaps it on `onboard`/`reload`.
     registry: Arc<ModelRegistry>,
+    /// The latency observatory every tier records into (reactor parse /
+    /// warm lookups, lane queue/batch/execute stages, registry swaps)
+    /// and the `metrics` op reads from.
+    obs: Arc<Obs>,
 }
 
 impl EnginePool {
@@ -319,12 +412,15 @@ impl EnginePool {
     ) -> Result<EnginePool> {
         let stats = Arc::new(EngineStats::default());
         let cache = Arc::new(PredictionCache::new(CACHE_SHARDS, CACHE_CAPACITY));
+        let obs = Arc::new(Obs::new(opts.trace_slow_ms, opts.trace_sample));
+        registry.set_obs(obs.clone());
         let ctx = LaneCtx {
             cache: cache.clone(),
             scaling: Arc::new(ScalingTable::new()),
             stats: stats.clone(),
             registry: registry.clone(),
             onboard: opts.onboard.clone(),
+            obs: obs.clone(),
         };
         let n = opts.resolved_predict_lanes().max(1);
         let mut predict = Vec::with_capacity(n);
@@ -364,6 +460,7 @@ impl EnginePool {
             stats,
             cache,
             registry,
+            obs,
         };
         // wait for every replica to come up; on failure the pool drop
         // below shuts down and joins the lanes that did start
@@ -390,6 +487,11 @@ impl EnginePool {
     /// The live model registry (router snapshots + `stats` fields).
     pub fn registry(&self) -> &Arc<ModelRegistry> {
         &self.registry
+    }
+
+    /// The pool's latency observatory (histograms, traces, uptime).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Deterministic (anchor, target) → predict-lane affinity, so
@@ -468,6 +570,7 @@ impl EnginePool {
             stats: Arc::new(EngineStats::default()),
             cache: Arc::new(PredictionCache::new(4, 1024)),
             registry: Arc::new(crate::coordinator::registry::test_registry("mockpool")),
+            obs: Arc::new(Obs::new(PoolOptions::default().trace_slow_ms, 1)),
         }
     }
 }

@@ -31,13 +31,14 @@ use crate::coordinator::dispatch::{EngineStats, Job, Reply};
 use crate::coordinator::protocol::{PredictRequest, Response};
 use crate::coordinator::registry::{ModelRegistry, ModelSnapshot, OnboardOptions, RegistryError};
 use crate::gpu::Instance;
+use crate::obs::{Obs, Stage};
 use crate::runtime::Runtime;
 use crate::sim::multigpu::ScalingTable;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Batching window: how long a predict lane waits to coalesce more
 /// requests after a phase-1 predict group opens.
@@ -54,6 +55,27 @@ pub struct LaneCtx {
     pub registry: Arc<ModelRegistry>,
     /// Hyper-parameters for `onboard` retraining on the trainer lane.
     pub onboard: OnboardOptions,
+    /// The pool's latency observatory: lanes record queue-wait,
+    /// batch-assembly, and execute stage histograms into it.
+    pub obs: Arc<Obs>,
+}
+
+/// Saturating `Duration` → nanoseconds for histogram recording.
+#[inline]
+fn ns_of(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// Stamp a freshly dequeued job: queue-wait histogram (submit → here)
+/// plus the dequeue instant later stages measure from. `Shutdown`
+/// carries no metadata and is skipped.
+fn mark_dequeued(ctx: &LaneCtx, job: &mut Job) {
+    if let Some(meta) = job.meta_mut() {
+        let now = Instant::now();
+        let wait = ns_of(now.duration_since(meta.submitted));
+        meta.dequeued = Some(now);
+        meta.record(&ctx.obs, Stage::QueueWait, wait);
+    }
 }
 
 /// Predict groups coalesce per (registry epoch, anchor, target): one
@@ -82,10 +104,11 @@ fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shut
 pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
     loop {
         // block for the first job
-        let first = match rx.recv() {
+        let mut first = match rx.recv() {
             Ok(j) => j,
             Err(_) => return,
         };
+        mark_dequeued(ctx, &mut first);
         let mut predicts: PredictGroups = BTreeMap::new();
         let mut immediate = Vec::new();
         let mut shutdown = false;
@@ -93,7 +116,10 @@ pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
         // greedy drain: take everything already queued without sleeping
         loop {
             match rx.try_recv() {
-                Ok(j) => absorb(j, &mut predicts, &mut immediate, &mut shutdown),
+                Ok(mut j) => {
+                    mark_dequeued(ctx, &mut j);
+                    absorb(j, &mut predicts, &mut immediate, &mut shutdown)
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     shutdown = true;
@@ -111,7 +137,8 @@ pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
             while let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
             {
                 match rx.recv_timeout(remaining) {
-                    Ok(j) => {
+                    Ok(mut j) => {
+                        mark_dequeued(ctx, &mut j);
                         absorb(j, &mut predicts, &mut immediate, &mut shutdown);
                         // shutdown is always the queue's last job — don't
                         // wait out the rest of the window behind it
@@ -141,7 +168,8 @@ pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
 /// FIFO advisor loop: one long-running sweep at a time. Handles every job
 /// kind defensively (the dispatcher only routes `recommend`/`plan` here).
 pub fn advisor_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
-    for job in rx {
+    for mut job in rx {
+        mark_dequeued(ctx, &mut job);
         match job {
             Job::Shutdown => return,
             Job::Predict(req, snap, reply) => {
@@ -165,7 +193,9 @@ pub fn advisor_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
 /// `ingest`/`onboard`/`reload` here).
 pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
     let stats = &ctx.stats;
-    for job in rx {
+    for mut job in rx {
+        mark_dequeued(ctx, &mut job);
+        let t0 = Instant::now();
         match job {
             Job::Shutdown => return,
             Job::Ingest { req, reply } => {
@@ -179,7 +209,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => Response::Err(format!("{e:#}")),
                 };
-                reply.send(resp);
+                finish_with_execute(ctx, reply, resp, t0);
             }
             Job::Onboard { pair, reply } => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -191,7 +221,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => registry_error_response(e),
                 };
-                reply.send(resp);
+                finish_with_execute(ctx, reply, resp, t0);
             }
             Job::Reload {
                 only_if_changed,
@@ -207,7 +237,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                     },
                     Err(e) => registry_error_response(e),
                 };
-                reply.send(resp);
+                finish_with_execute(ctx, reply, resp, t0);
             }
             Job::Predict(req, snap, reply) => {
                 let mut group: PredictGroups = BTreeMap::new();
@@ -240,9 +270,17 @@ fn registry_error_response(e: RegistryError) -> Response {
     }
 }
 
+/// Record the handler duration as the job's `execute` stage, then
+/// deliver the response.
+fn finish_with_execute(ctx: &LaneCtx, mut reply: Reply, resp: Response, t0: Instant) {
+    reply.meta_mut().record(&ctx.obs, Stage::Execute, ns_of(t0.elapsed()));
+    reply.send(resp);
+}
+
 /// One non-phase-1-batched job (interpolation or advisor sweep).
 fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
     let stats = &ctx.stats;
+    let t0 = Instant::now();
     match job {
         Job::BatchSize {
             instance,
@@ -257,7 +295,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            reply.send(resp);
+            finish_with_execute(ctx, reply, resp, t0);
         }
         Job::PixelSize {
             instance,
@@ -272,7 +310,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            reply.send(resp);
+            finish_with_execute(ctx, reply, resp, t0);
         }
         Job::Recommend {
             query,
@@ -297,7 +335,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 Ok(cands) => recommend_response(&cands, top_k),
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            reply.send(resp);
+            finish_with_execute(ctx, reply, resp, t0);
         }
         Job::Plan {
             query,
@@ -329,7 +367,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
                 },
                 Err(e) => Response::Err(format!("{e:#}")),
             };
-            reply.send(resp);
+            finish_with_execute(ctx, reply, resp, t0);
         }
         // registry jobs are routed to the trainer lane; a defensive
         // arrival here (only possible through test harnesses) answers
@@ -346,11 +384,24 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
 fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
     let stats = &ctx.stats;
     let cache = &ctx.cache;
-    for ((epoch, anchor, target), (snap, group)) in predicts {
+    for ((epoch, anchor, target), (snap, mut group)) in predicts {
         stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
+        // batch assembly: lane dequeue → coalesced execution start, per
+        // member (early arrivals paid more of the window than late ones)
+        let exec_start = Instant::now();
+        for (_, reply) in group.iter_mut() {
+            let meta = reply.meta_mut();
+            if let Some(dq) = meta.dequeued {
+                let ns = ns_of(exec_start.duration_since(dq));
+                meta.record(&ctx.obs, Stage::BatchAssembly, ns);
+            }
+        }
         let profet = &snap.profet;
         let Some(model) = profet.cross.get(&(anchor, target)) else {
-            for (_, reply) in group {
+            for (_, mut reply) in group {
+                reply
+                    .meta_mut()
+                    .record(&ctx.obs, Stage::Execute, ns_of(exec_start.elapsed()));
                 reply.send(Response::Err(format!("no model for {anchor}->{target}")));
             }
             continue;
@@ -392,22 +443,28 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
                 }
                 Err(e) => {
                     let msg = format!("{e:#}");
-                    for (i, (_, reply)) in group.into_iter().enumerate() {
+                    let exec_ns = ns_of(exec_start.elapsed());
+                    for (i, (_, mut reply)) in group.into_iter().enumerate() {
                         let resp = match results[i] {
                             Some((v, member)) => ok_prediction(v, member),
                             None => Response::Err(msg.clone()),
                         };
+                        reply.meta_mut().record(&ctx.obs, Stage::Execute, exec_ns);
                         reply.send(resp);
                     }
                     continue;
                 }
             }
         }
-        for (i, (_, reply)) in group.into_iter().enumerate() {
+        // the group's execution cost, attributed to every member (they
+        // shared one coalesced artifact execution — see OBSERVABILITY.md)
+        let exec_ns = ns_of(exec_start.elapsed());
+        for (i, (_, mut reply)) in group.into_iter().enumerate() {
             let resp = match results[i] {
                 Some((v, member)) => ok_prediction(v, member),
                 None => Response::Err("prediction missing from batch".into()),
             };
+            reply.meta_mut().record(&ctx.obs, Stage::Execute, exec_ns);
             reply.send(resp);
         }
     }

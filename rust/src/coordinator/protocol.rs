@@ -7,7 +7,8 @@
 //! | op | request fields | reply fields |
 //! |----|----------------|--------------|
 //! | `health` | — | `status` |
-//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload`, `open_conns`, `active_conns`, `idle_conns`, `evictions`, `reactor_threads` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload`, `open_conns`, `active_conns`, `idle_conns`, `evictions`, `reactor_threads`, `uptime_s`, `version` |
+//! | `metrics` | — | `uptime_s`, `version`, `gauges{}`, `stages[]` (per-stage × op × warm/cold latency histograms with `p50_ms`/`p90_ms`/`p99_ms`/`max_ms` and raw `buckets`), `slow_traces[]` (see `docs/OBSERVABILITY.md`) |
 //! | `instances` | — | `instances[]` (key, gpu, price_hr) |
 //! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
 //! | `predict_batch_size` | `instance`, `batch`, `t_min`, `t_max` | `latency_ms` |
@@ -72,6 +73,7 @@
 
 use crate::advisor::{Candidate, EndpointProfiles, Objective, SweepRequest, TrainingJob};
 use crate::coordinator::registry::IngestRequest;
+use crate::obs::MetricsSnapshot;
 use crate::gpu::Instance;
 use crate::models::ModelId;
 use crate::predictor::Member;
@@ -98,6 +100,9 @@ pub enum Request {
     Health,
     /// Serving counters (requests, artifact batches, cache hits/misses).
     Stats,
+    /// Latency observatory snapshot: per-stage histograms, gauges, and
+    /// the sampled slow-request ring (see [`crate::obs`]).
+    Metrics,
     Instances,
     Predict(PredictRequest),
     PredictBatchSize {
@@ -198,6 +203,9 @@ impl Request {
             }
             Request::Stats => {
                 o.set("op", Json::Str("stats".into()));
+            }
+            Request::Metrics => {
+                o.set("op", Json::Str("metrics".into()));
             }
             Request::Instances => {
                 o.set("op", Json::Str("instances".into()));
@@ -362,6 +370,7 @@ pub fn parse_line<'s>(
     let op = match op {
         "health" => Op::Health,
         "stats" => Op::Stats,
+        "metrics" => Op::Metrics,
         "instances" => Op::Instances,
         "predict" => Op::Predict,
         "predict_batch_size" => Op::BatchSize,
@@ -380,6 +389,7 @@ pub fn parse_line<'s>(
 enum Op {
     Health,
     Stats,
+    Metrics,
     Instances,
     Predict,
     BatchSize,
@@ -399,6 +409,7 @@ fn wire_request<'s>(
     Ok(ParsedLine::Req(match op {
         Op::Health => Request::Health,
         Op::Stats => Request::Stats,
+        Op::Metrics => Request::Metrics,
         Op::Instances => Request::Instances,
         Op::Predict => {
             let anchor = sraw_req_instance(ls, line, "anchor")?;
@@ -774,6 +785,7 @@ fn parse_fields(op: &str, j: &Json) -> anyhow::Result<Option<Request>> {
     Ok(Some(match op {
         "health" => Request::Health,
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics,
         "instances" => Request::Instances,
         "predict" => parse_predict(j)?,
         "predict_batch_size" => Request::PredictBatchSize {
@@ -1162,7 +1174,15 @@ pub enum Response {
         evictions: u64,
         /// Reactor threads serving this listener.
         reactor_threads: u64,
+        /// Seconds since the engine pool spawned.
+        uptime_s: f64,
+        /// Crate version serving this reply.
+        version: &'static str,
     },
+    /// `metrics` reply: full latency-observatory snapshot (boxed — this
+    /// is a cold, allocating op by design and the variant would otherwise
+    /// dominate the enum's size).
+    Metrics(Box<MetricsSnapshot>),
     /// `instances` catalogue (payload derived from [`Instance::ALL`] at
     /// encode time — nothing to allocate or carry).
     Instances,
@@ -1250,6 +1270,8 @@ impl Response {
                 idle_conns,
                 evictions,
                 reactor_threads,
+                uptime_s,
+                version,
             } => {
                 w.begin_obj();
                 w.key("active_conns").num(*active_conns as f64);
@@ -1267,6 +1289,65 @@ impl Response {
                 w.key("reactor_threads").num(*reactor_threads as f64);
                 w.key("registry_epoch").num(*registry_epoch as f64);
                 w.key("requests").num(*requests as f64);
+                w.key("uptime_s").num(*uptime_s);
+                w.key("version").str_(version);
+                w.end_obj();
+            }
+            Response::Metrics(m) => {
+                w.begin_obj();
+                w.key("gauges").begin_obj();
+                for (name, val) in &m.gauges {
+                    w.key(name).num(*val);
+                }
+                w.end_obj();
+                w.key("ok").bool_(true);
+                w.key("slow_traces").begin_arr();
+                for t in &m.slow {
+                    w.begin_obj();
+                    w.key("batch_assembly_ms").num(t.batch_assembly_ms);
+                    w.key("completion_wait_ms").num(t.completion_wait_ms);
+                    w.key("execute_ms").num(t.execute_ms);
+                    w.key("op").str_(t.op);
+                    w.key("parse_ms").num(t.parse_ms);
+                    w.key("queue_wait_ms").num(t.queue_wait_ms);
+                    w.key("seq").num(t.seq as f64);
+                    w.key("temp").str_(t.temp);
+                    w.key("total_ms").num(t.total_ms);
+                    w.key("unattributed_ms").num(t.unattributed_ms);
+                    w.end_obj();
+                }
+                w.end_arr();
+                w.key("stages").begin_arr();
+                for s in &m.stages {
+                    w.begin_obj();
+                    w.key("cells").begin_arr();
+                    for c in &s.cells {
+                        w.begin_obj();
+                        w.key("buckets").begin_arr();
+                        for (idx, n) in &c.buckets {
+                            w.begin_arr();
+                            w.num(*idx as f64);
+                            w.num(*n as f64);
+                            w.end_arr();
+                        }
+                        w.end_arr();
+                        w.key("count").num(c.count as f64);
+                        w.key("max_ms").num(c.max_ms);
+                        w.key("op").str_(c.op);
+                        w.key("p50_ms").num(c.p50_ms);
+                        w.key("p90_ms").num(c.p90_ms);
+                        w.key("p99_ms").num(c.p99_ms);
+                        w.key("sum_ms").num(c.sum_ms);
+                        w.key("temp").str_(c.temp);
+                        w.end_obj();
+                    }
+                    w.end_arr();
+                    w.key("stage").str_(s.stage);
+                    w.end_obj();
+                }
+                w.end_arr();
+                w.key("uptime_s").num(m.uptime_s);
+                w.key("version").str_(env!("CARGO_PKG_VERSION"));
                 w.end_obj();
             }
             Response::Instances => {
@@ -1456,6 +1537,7 @@ mod tests {
     fn roundtrip_every_variant() {
         roundtrip(&Request::Health);
         roundtrip(&Request::Stats);
+        roundtrip(&Request::Metrics);
         roundtrip(&Request::Instances);
         roundtrip(&Request::Predict(PredictRequest {
             anchor: Instance::G4dn,
@@ -1709,6 +1791,8 @@ mod tests {
                     idle_conns: 16,
                     evictions: 7,
                     reactor_threads: 2,
+                    uptime_s: 12.5,
+                    version: env!("CARGO_PKG_VERSION"),
                 },
                 {
                     let mut o = Json::obj();
@@ -1727,6 +1811,100 @@ mod tests {
                     o.set("idle_conns", Json::Num(16.0));
                     o.set("evictions", Json::Num(7.0));
                     o.set("reactor_threads", Json::Num(2.0));
+                    o.set("uptime_s", Json::Num(12.5));
+                    o.set("version", Json::Str(env!("CARGO_PKG_VERSION").into()));
+                    o
+                },
+            ),
+            (
+                Response::Metrics(Box::new(MetricsSnapshot {
+                    uptime_s: 3.25,
+                    gauges: vec![("open_conns", 2.0), ("requests", 5.0)],
+                    stages: vec![crate::obs::StageSummary {
+                        stage: "execute",
+                        cells: vec![crate::obs::CellSummary {
+                            op: "predict",
+                            temp: "cold",
+                            count: 2,
+                            sum_ms: 3.5,
+                            p50_ms: 1.5,
+                            p90_ms: 2.0,
+                            p99_ms: 2.0,
+                            max_ms: 2.0,
+                            buckets: vec![(40, 1), (41, 1)],
+                        }],
+                    }],
+                    slow: vec![crate::obs::TraceEntry {
+                        seq: 9,
+                        op: "recommend",
+                        temp: "cold",
+                        total_ms: 300.5,
+                        parse_ms: 0.25,
+                        queue_wait_ms: 10.0,
+                        batch_assembly_ms: 0.0,
+                        execute_ms: 289.0,
+                        completion_wait_ms: 1.0,
+                        unattributed_ms: 0.25,
+                    }],
+                })),
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("uptime_s", Json::Num(3.25));
+                    o.set("version", Json::Str(env!("CARGO_PKG_VERSION").into()));
+                    o.set("gauges", {
+                        let mut g = Json::obj();
+                        g.set("open_conns", Json::Num(2.0));
+                        g.set("requests", Json::Num(5.0));
+                        g
+                    });
+                    o.set(
+                        "stages",
+                        Json::Arr(vec![{
+                            let mut s = Json::obj();
+                            s.set("stage", Json::Str("execute".into()));
+                            s.set(
+                                "cells",
+                                Json::Arr(vec![{
+                                    let mut c = Json::obj();
+                                    c.set("op", Json::Str("predict".into()));
+                                    c.set("temp", Json::Str("cold".into()));
+                                    c.set("count", Json::Num(2.0));
+                                    c.set("sum_ms", Json::Num(3.5));
+                                    c.set("p50_ms", Json::Num(1.5));
+                                    c.set("p90_ms", Json::Num(2.0));
+                                    c.set("p99_ms", Json::Num(2.0));
+                                    c.set("max_ms", Json::Num(2.0));
+                                    c.set(
+                                        "buckets",
+                                        Json::Arr(vec![
+                                            Json::Arr(vec![Json::Num(40.0), Json::Num(1.0)]),
+                                            Json::Arr(vec![Json::Num(41.0), Json::Num(1.0)]),
+                                        ]),
+                                    );
+                                    c
+                                }]),
+                            );
+                            s
+                        }]),
+                    );
+                    o.set(
+                        "slow_traces",
+                        Json::Arr(vec![{
+                            let mut t = Json::obj();
+                            t.set("seq", Json::Num(9.0));
+                            t.set("op", Json::Str("recommend".into()));
+                            t.set("temp", Json::Str("cold".into()));
+                            t.set("total_ms", Json::Num(300.5));
+                            t.set("parse_ms", Json::Num(0.25));
+                            t.set("queue_wait_ms", Json::Num(10.0));
+                            t.set("batch_assembly_ms", Json::Num(0.0));
+                            t.set("execute_ms", Json::Num(289.0));
+                            t.set("completion_wait_ms", Json::Num(1.0));
+                            t.set("unattributed_ms", Json::Num(0.25));
+                            t
+                        }]),
+                    );
                     o
                 },
             ),
@@ -1878,6 +2056,7 @@ mod tests {
         let mut lines: Vec<String> = vec![
             r#"{"op":"health"}"#.into(),
             r#"{"op":"stats"}"#.into(),
+            r#"{"op":"metrics"}"#.into(),
             r#"{"op":"instances"}"#.into(),
             r#"{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":42.5,"profile":{"Conv2D":286,"Relu":26}}"#.into(),
             // escaped field + profile keys, duplicate keys, odd spacing

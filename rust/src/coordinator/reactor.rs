@@ -43,10 +43,11 @@
 //! request never loses its response; the only bound is the write-stall
 //! timeout for peers that stopped reading.
 
-use crate::coordinator::dispatch::{EnginePool, EngineStats, Reply};
+use crate::coordinator::dispatch::{EnginePool, EngineStats, Reply, ReqMeta};
 use crate::coordinator::protocol::Response;
 use crate::coordinator::router::{self, ConnScratch, RouteOutcome};
 use crate::coordinator::server::MAX_LINE_BYTES;
+use crate::obs::{OpClass, Stage, Temp, TraceEntry};
 use crate::util::poll::{Event, Interest, Poller, Waker};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -71,11 +72,14 @@ const READ_BUDGET: usize = 8;
 /// How often the timer sweep (idle eviction, write-stall) runs at most.
 const SWEEP_GRANULARITY: Duration = Duration::from_millis(100);
 
-/// Completion hand-back: engine lanes push `(connection, response)` here
-/// and wake the owning reactor, which flushes the response through the
-/// connection's writable-readiness path. One queue per reactor thread.
+/// Completion hand-back: engine lanes push `(connection, response,
+/// request metadata)` here and wake the owning reactor, which flushes
+/// the response through the connection's writable-readiness path. One
+/// queue per reactor thread. The [`ReqMeta`] rides along so delivery
+/// can record the completion-queue wait and finalize the request's
+/// trace.
 pub struct CompletionQueue {
-    items: Mutex<Vec<(u64, Response)>>,
+    items: Mutex<Vec<(u64, Response, ReqMeta)>>,
     waker: Arc<Waker>,
 }
 
@@ -85,14 +89,20 @@ impl CompletionQueue {
     }
 
     /// Engine-lane side (via [`Reply::send`]): enqueue and wake.
-    pub(crate) fn push(&self, conn: u64, resp: Response) {
-        self.items.lock().unwrap().push((conn, resp));
+    pub(crate) fn push(&self, conn: u64, resp: Response, meta: ReqMeta) {
+        self.items.lock().unwrap().push((conn, resp, meta));
         self.waker.wake();
     }
 
-    fn drain_into(&self, out: &mut Vec<(u64, Response)>) {
+    fn drain_into(&self, out: &mut Vec<(u64, Response, ReqMeta)>) {
         out.append(&mut self.items.lock().unwrap());
     }
+}
+
+/// Saturating `Duration` → nanoseconds for histogram recording.
+#[inline]
+fn ns_of(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
 }
 
 /// Reactor sizing/eviction knobs (resolved from
@@ -256,7 +266,7 @@ fn reactor_loop(ctx: ReactorCtx) {
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_id: u64 = 0;
     let mut events: Vec<Event> = Vec::new();
-    let mut completions: Vec<(u64, Response)> = Vec::new();
+    let mut completions: Vec<(u64, Response, ReqMeta)> = Vec::new();
     let mut dead: Vec<u64> = Vec::new();
     let mut rdbuf = vec![0u8; READ_CHUNK];
     let mut draining = false;
@@ -299,11 +309,11 @@ fn reactor_loop(ctx: ReactorCtx) {
 
         // 3) engine completions → encode, flush, resume buffered lines
         ctx.queue.drain_into(&mut completions);
-        for (id, resp) in completions.drain(..) {
+        for (id, resp, meta) in completions.drain(..) {
             let Some(conn) = conns.get_mut(&id) else {
                 continue; // connection died while its job was in flight
             };
-            if !(deliver(&ctx, id, conn, resp) && sync_interest(&poller, id, conn)) {
+            if !(deliver(&ctx, id, conn, resp, meta) && sync_interest(&poller, id, conn)) {
                 dead.push(id);
             }
         }
@@ -376,8 +386,15 @@ fn reactor_loop(ctx: ReactorCtx) {
                 continue;
             }
             let mut alive = true;
-            if ev.writable {
+            if ev.writable && conn.has_backlog() {
+                let t0 = Instant::now();
                 alive = flush_backlog(conn);
+                ctx.pool.obs().record_ns(
+                    Stage::WriteFlush,
+                    OpClass::Other,
+                    Temp::Cold,
+                    ns_of(t0.elapsed()),
+                );
             }
             if alive && (ev.readable || ev.hangup) && !conn.eof && !conn.awaiting {
                 alive = fill(conn, &mut rdbuf) && process(&ctx, ev.token, conn);
@@ -636,7 +653,15 @@ fn serve_line(ctx: &ReactorCtx, id: u64, conn: &mut Conn, nl: Option<usize>) -> 
         ctx.stats.conns.active.fetch_add(1, Ordering::Relaxed);
     }
     if wrote {
-        return queue_write(conn);
+        // inline replies (health/stats/warm predicts/errors) aggregate
+        // their flush under `other:warm` — the op is gone by this point
+        // and the warm path must not re-derive it
+        let t0 = Instant::now();
+        let ok = queue_write(conn);
+        ctx.pool
+            .obs()
+            .record_ns(Stage::WriteFlush, OpClass::Other, Temp::Warm, ns_of(t0.elapsed()));
+        return ok;
     }
     true
 }
@@ -651,13 +676,33 @@ fn respond_too_long(conn: &mut Conn) -> bool {
 }
 
 /// An engine reply arrived for `conn`: encode, flush, resume parsing
-/// whatever lines are already buffered.
-fn deliver(ctx: &ReactorCtx, id: u64, conn: &mut Conn, resp: Response) -> bool {
+/// whatever lines are already buffered. Records the completion-queue
+/// wait and the write flush, and finalizes the request's trace (the
+/// admission→delivery total, checked against the slow threshold).
+fn deliver(ctx: &ReactorCtx, id: u64, conn: &mut Conn, resp: Response, mut meta: ReqMeta) -> bool {
     conn.awaiting = false;
     ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
     conn.last_activity = Instant::now();
+    let obs = ctx.pool.obs();
+    if let Some(pushed) = meta.pushed {
+        meta.record(obs, Stage::CompletionWait, ns_of(pushed.elapsed()));
+    }
+    // the trace closes here: write flush happens after delivery and is
+    // histogram-only (see docs/OBSERVABILITY.md)
+    if let Some(trace) = meta.trace.take() {
+        let total_ms = meta.submitted.elapsed().as_secs_f64() * 1e3;
+        obs.complete_trace(TraceEntry::from_state(
+            meta.op.name(),
+            meta.temp.name(),
+            total_ms,
+            &trace,
+        ));
+    }
     resp.encode_line(&mut conn.scratch.out);
-    if !queue_write(conn) {
+    let t0 = Instant::now();
+    let wrote = queue_write(conn);
+    obs.record_ns(Stage::WriteFlush, meta.op, meta.temp, ns_of(t0.elapsed()));
+    if !wrote {
         return false;
     }
     if conn.detached {

@@ -46,6 +46,7 @@
 use crate::data::{Corpus, Entry, RunData};
 use crate::gpu::Instance;
 use crate::models::ModelId;
+use crate::obs::{Obs, OpClass, Stage, Temp};
 use crate::predictor::{Profet, TrainOptions};
 use crate::runtime::Runtime;
 use crate::sim::Workload;
@@ -56,7 +57,8 @@ use std::fmt;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 /// One coherent view of the model set: the epoch it was published at plus
 /// the models themselves. Cloning is one `Arc` refcount bump — this is
@@ -375,6 +377,12 @@ pub struct ModelRegistry {
     dir_fingerprint: AtomicU64,
     model_dir: PathBuf,
     staging: StagingArea,
+    /// Latency observatory for timing the publish critical section
+    /// ([`Stage::RegistrySwap`]). Wired in by
+    /// [`EnginePool::spawn_with_registry`](crate::coordinator::dispatch::EnginePool::spawn_with_registry);
+    /// a registry used standalone (tests, offline tools) simply skips the
+    /// recording.
+    obs: OnceLock<Arc<Obs>>,
 }
 
 impl ModelRegistry {
@@ -401,6 +409,7 @@ impl ModelRegistry {
             dir_fingerprint: AtomicU64::new(0),
             staging: StagingArea::new(&model_dir),
             model_dir,
+            obs: OnceLock::new(),
         };
         reg.dir_fingerprint
             .store(dir_fingerprint(&reg.model_dir), Ordering::SeqCst);
@@ -415,6 +424,14 @@ impl ModelRegistry {
     /// The staging area for `ingest`ed measurements.
     pub fn staging(&self) -> &StagingArea {
         &self.staging
+    }
+
+    /// Attach the latency observatory that publish critical sections
+    /// report to. First caller wins; later calls are ignored (the
+    /// registry outlives no pool, so this only matters in tests that
+    /// share a registry across pools).
+    pub(crate) fn set_obs(&self, obs: Arc<Obs>) {
+        let _ = self.obs.set(obs);
     }
 
     /// Clone the current snapshot: one short lock, one `Arc` refcount
@@ -505,6 +522,7 @@ impl ModelRegistry {
     /// unloaded and make the watcher skip it forever.
     fn swap_with_fingerprint(&self, profet: Profet, fp: u64) -> u64 {
         let profet = Arc::new(profet);
+        let t0 = Instant::now();
         let next = {
             let mut cur = self.current.lock().unwrap();
             let next = cur.epoch + 1;
@@ -514,6 +532,10 @@ impl ModelRegistry {
             };
             next
         };
+        if let Some(obs) = self.obs.get() {
+            // the pause every in-flight snapshot() briefly contends with
+            obs.record(Stage::RegistrySwap, OpClass::Other, Temp::Cold, t0.elapsed());
+        }
         self.epoch.store(next, Ordering::SeqCst);
         self.last_reload_unix_ms
             .store(unix_ms(), Ordering::SeqCst);

@@ -32,8 +32,15 @@ use crate::advisor::CacheKeyScratch;
 use crate::coordinator::dispatch::{EnginePool, Job, Reply, SubmitError};
 use crate::coordinator::protocol::{parse_line, ParsedLine, Request, Response, WireScratch};
 use crate::coordinator::registry::ModelSnapshot;
+use crate::obs::{MetricsSnapshot, OpClass, Stage, Temp};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+#[inline]
+fn ns_of(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
 
 /// Per-connection reusable buffers: decode scratch, cache-key scratch,
 /// and the encoded-response output buffer. All capacities persist across
@@ -127,12 +134,29 @@ fn block_on(handled: Handled, waiter: Option<Receiver<Response>>) -> Response {
 /// Submit one engine job. A full lane queue is surfaced as the
 /// structured `overloaded` error — load is shed at the dispatcher,
 /// never buffered unboundedly.
+///
+/// Stamps the job's [`ReqMeta`](crate::coordinator::dispatch::ReqMeta)
+/// with the op class before handoff and, when the observatory samples
+/// this request, attaches a trace context pre-seeded with the parse
+/// duration so the eventual slow dump attributes the full lifecycle.
 fn submit(
     pool: &EnginePool,
+    op: OpClass,
+    parse_ns: u64,
     reply: impl FnOnce() -> Reply,
     make: impl FnOnce(Reply) -> Job,
 ) -> Handled {
-    match pool.submit(make(reply())) {
+    let mut r = reply();
+    {
+        let meta = r.meta_mut();
+        meta.op = op;
+        meta.temp = Temp::Cold;
+        meta.trace = pool.obs().maybe_trace();
+        if let Some(t) = meta.trace.as_deref_mut() {
+            t.note(Stage::Parse, parse_ns);
+        }
+    }
+    match pool.submit(make(r)) {
         Ok(()) => Handled::Submitted,
         Err(SubmitError::Overloaded) => Handled::Inline(Response::err_kind(
             "overloaded",
@@ -149,14 +173,22 @@ fn handle_line(
     keys: &mut CacheKeyScratch,
     reply: impl FnOnce() -> Reply,
 ) -> Handled {
-    match parse_line(line, wire) {
-        Err(e) => Handled::Inline(Response::err_kind(e.kind(), format!("bad request: {e}"))),
+    let t0 = Instant::now();
+    let parsed = parse_line(line, wire);
+    let parse_ns = ns_of(t0.elapsed());
+    match parsed {
+        Err(e) => {
+            pool.obs()
+                .record_ns(Stage::Parse, OpClass::Other, Temp::Cold, parse_ns);
+            Handled::Inline(Response::err_kind(e.kind(), format!("bad request: {e}")))
+        }
         Ok(ParsedLine::Predict(view)) => {
             // cache fast path: the key only needs the current epoch (one
             // lock-free atomic load — the registry mutex stays off the
             // warm path entirely), keyed over the borrowed profile spans
             // directly — a warm hit never materializes the request or
             // touches a lane
+            let lk0 = Instant::now();
             let key = keys.key(
                 pool.registry().epoch(),
                 view.anchor,
@@ -164,7 +196,16 @@ fn handle_line(
                 view.anchor_latency_ms,
                 view.pairs(),
             );
-            if let Some((latency_ms, member)) = pool.cache().peek(&key) {
+            let hit = pool.cache().peek(&key);
+            let lookup_ns = ns_of(lk0.elapsed());
+            // warm vs cold decides the temperature of both cells; the
+            // recordings themselves are two relaxed atomic adds each, so
+            // the warm round trip stays allocation-free
+            let temp = if hit.is_some() { Temp::Warm } else { Temp::Cold };
+            let obs = pool.obs();
+            obs.record_ns(Stage::Parse, OpClass::Predict, temp, parse_ns);
+            obs.record_ns(Stage::WarmLookup, OpClass::Predict, temp, lookup_ns);
+            if let Some((latency_ms, member)) = hit {
                 let stats = &pool.stats;
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.cache.hits.fetch_add(1, Ordering::Relaxed);
@@ -177,15 +218,43 @@ fn handle_line(
             // served — and cached — under the newer epoch, exactly as if
             // it had arrived a moment later.)
             let snap: ModelSnapshot = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::Predict(view.materialize(), snap, r))
+            submit(pool, OpClass::Predict, parse_ns, reply, |r| {
+                Job::Predict(view.materialize(), snap, r)
+            })
         }
-        Ok(ParsedLine::Req(req)) => route_request(pool, req, reply),
+        Ok(ParsedLine::Req(req)) => {
+            pool.obs()
+                .record_ns(Stage::Parse, op_class_of(&req), Temp::Cold, parse_ns);
+            route_request(pool, req, parse_ns, reply)
+        }
+    }
+}
+
+/// Observatory op class of a materialized request. Cheap queries and
+/// wire-level infrastructure all aggregate under [`OpClass::Other`];
+/// the phase-2 interpolation ops ride under [`OpClass::Predict`].
+fn op_class_of(req: &Request) -> OpClass {
+    match req {
+        Request::Health | Request::Stats | Request::Instances | Request::Metrics => OpClass::Other,
+        Request::Predict(_)
+        | Request::PredictBatchSize { .. }
+        | Request::PredictPixelSize { .. } => OpClass::Predict,
+        Request::Recommend { .. } => OpClass::Recommend,
+        Request::Plan { .. } => OpClass::Plan,
+        Request::Ingest(_) => OpClass::Ingest,
+        Request::Onboard { .. } => OpClass::Onboard,
+        Request::Reload => OpClass::Reload,
     }
 }
 
 /// Serve an already-materialized request (everything but the borrowed
 /// `predict` fast path above).
-fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply) -> Handled {
+fn route_request(
+    pool: &EnginePool,
+    req: Request,
+    parse_ns: u64,
+    reply: impl FnOnce() -> Reply,
+) -> Handled {
     match req {
         Request::Health => Handled::Inline(Response::Health),
         Request::Stats => {
@@ -194,8 +263,12 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
+            // the two connection gauges are maintained by different
+            // threads, so read `open` once and clamp `active` to it:
+            // every derived triple then satisfies active + idle == open
+            // instead of occasionally publishing a torn pair
             let open_conns = s.conns.open.load(Ordering::Relaxed);
-            let active_conns = s.conns.active.load(Ordering::Relaxed);
+            let active_conns = s.conns.active.load(Ordering::Relaxed).min(open_conns);
             Handled::Inline(Response::Stats {
                 requests,
                 artifact_batches: batches,
@@ -212,15 +285,44 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
                 last_reload: reg.last_reload_unix_ms(),
                 open_conns,
                 active_conns,
-                idle_conns: open_conns.saturating_sub(active_conns),
+                idle_conns: open_conns - active_conns,
                 evictions: s.conns.evicted.load(Ordering::Relaxed),
                 reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed),
+                uptime_s: pool.obs().uptime_s(),
+                version: env!("CARGO_PKG_VERSION"),
             })
+        }
+        Request::Metrics => {
+            let s = &pool.stats;
+            let obs = pool.obs();
+            let open = s.conns.open.load(Ordering::Relaxed);
+            let active = s.conns.active.load(Ordering::Relaxed).min(open);
+            // byte-sorted by name — the encoder emits them in list order
+            let gauges = vec![
+                ("active_conns", active as f64),
+                ("cache_hits", s.cache.hits.load(Ordering::Relaxed) as f64),
+                ("cache_misses", s.cache.misses.load(Ordering::Relaxed) as f64),
+                ("evictions", s.conns.evicted.load(Ordering::Relaxed) as f64),
+                ("idle_conns", (open - active) as f64),
+                ("open_conns", open as f64),
+                ("overloaded", s.overloaded.load(Ordering::Relaxed) as f64),
+                ("predict_lanes", pool.predict_lanes() as f64),
+                ("registry_epoch", pool.registry().epoch() as f64),
+                ("requests", s.requests.load(Ordering::Relaxed) as f64),
+            ];
+            Handled::Inline(Response::Metrics(Box::new(MetricsSnapshot {
+                uptime_s: obs.uptime_s(),
+                gauges,
+                stages: obs.stage_summaries(),
+                slow: obs.slow_traces(),
+            })))
         }
         Request::Instances => Handled::Inline(Response::Instances),
         Request::Predict(p) => {
             let snap = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::Predict(p, snap, r))
+            submit(pool, OpClass::Predict, parse_ns, reply, |r| {
+                Job::Predict(p, snap, r)
+            })
         }
         Request::PredictBatchSize {
             instance,
@@ -229,7 +331,7 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
             t_max,
         } => {
             let snap = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::BatchSize {
+            submit(pool, OpClass::Predict, parse_ns, reply, |r| Job::BatchSize {
                 instance,
                 batch,
                 t_min,
@@ -245,7 +347,7 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
             t_max,
         } => {
             let snap = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::PixelSize {
+            submit(pool, OpClass::Predict, parse_ns, reply, |r| Job::PixelSize {
                 instance,
                 pixels,
                 t_min,
@@ -256,7 +358,7 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
         }
         Request::Recommend { query, top_k } => {
             let snap = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::Recommend {
+            submit(pool, OpClass::Recommend, parse_ns, reply, |r| Job::Recommend {
                 query,
                 top_k,
                 snap,
@@ -269,7 +371,7 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
             objective,
         } => {
             let snap = pool.registry().snapshot();
-            submit(pool, reply, |r| Job::Plan {
+            submit(pool, OpClass::Plan, parse_ns, reply, |r| Job::Plan {
                 query,
                 job,
                 objective,
@@ -277,9 +379,17 @@ fn route_request(pool: &EnginePool, req: Request, reply: impl FnOnce() -> Reply)
                 reply: r,
             })
         }
-        Request::Ingest(req) => submit(pool, reply, |r| Job::Ingest { req, reply: r }),
-        Request::Onboard { pair } => submit(pool, reply, |r| Job::Onboard { pair, reply: r }),
-        Request::Reload => submit(pool, reply, |r| Job::Reload {
+        Request::Ingest(req) => submit(pool, OpClass::Ingest, parse_ns, reply, |r| Job::Ingest {
+            req,
+            reply: r,
+        }),
+        Request::Onboard { pair } => {
+            submit(pool, OpClass::Onboard, parse_ns, reply, |r| Job::Onboard {
+                pair,
+                reply: r,
+            })
+        }
+        Request::Reload => submit(pool, OpClass::Reload, parse_ns, reply, |r| Job::Reload {
             only_if_changed: false,
             reply: r,
         }),

@@ -12,8 +12,9 @@
 //!   service ([`coordinator`]) with a readiness-polled connection reactor,
 //!   an engine replica pool, a zero-allocation wire path, a live,
 //!   hot-swappable model registry ([`coordinator::registry`]) for online
-//!   GPU onboarding, and an open-loop load generator ([`loadgen`]) for
-//!   tail-latency benchmarking.
+//!   GPU onboarding, an open-loop load generator ([`loadgen`]) for
+//!   tail-latency benchmarking, and a per-stage latency observatory
+//!   ([`obs`]) behind the `metrics` wire op.
 //! * **L2/L1 (python/, build time only)** — the DNN ensemble member
 //!   (128·64·32·16·1 MLP) and the batched Levenshtein kernel, written in
 //!   JAX/Pallas and AOT-lowered to HLO text artifacts executed here via the
@@ -34,6 +35,7 @@ pub mod gpu;
 pub mod loadgen;
 pub mod ml;
 pub mod models;
+pub mod obs;
 pub mod ops;
 pub mod predictor;
 pub mod profiler;

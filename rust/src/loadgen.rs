@@ -21,12 +21,12 @@
 //!
 //! [`LoadgenReport`] aggregates p50/p95/p99/p999/mean/max latency,
 //! throughput, and error/overload/drop counts, and serializes to the
-//! documented `BENCH_serve.json` schema (`profet.loadgen.v1` — see
+//! documented `BENCH_serve.json` schema (`profet.loadgen.v2` — see
 //! README §Loadgen):
 //!
 //! ```json
 //! {
-//!   "schema": "profet.loadgen.v1",
+//!   "schema": "profet.loadgen.v2",
 //!   "config": {"addr": "...", "rate": 500.0, "duration_s": 10.0,
 //!              "conns": 16, "predict_pct": 90},
 //!   "totals": {"sent": 5000, "completed": 5000, "ok": 4990,
@@ -36,15 +36,30 @@
 //!   "latency_ms": {"p50": 0.4, "p95": 1.1, "p99": 2.3, "p999": 7.9,
 //!                  "mean": 0.6, "max": 12.0},
 //!   "per_op": {"predict": {"count": 4500, "ok": 4500, "p50": 0.3, "p99": 1.9},
-//!              "recommend": {"count": 500, "ok": 490, "p50": 2.0, "p99": 6.5}}
+//!              "recommend": {"count": 500, "ok": 490, "p50": 2.0, "p99": 6.5}},
+//!   "server": {"requests": 5000, "cache_hits": 4484, "cache_misses": 16,
+//!              "cache_hit_ratio": 0.996, "evictions": 0, "overloaded": 0,
+//!              "queue_wait_ms": {"count": 516, "p50": 0.3, "p99": 2.1, "max": 4.0},
+//!              "execute_ms": {"count": 516, "p50": 0.8, "p99": 3.0, "max": 6.2}}
 //! }
 //! ```
+//!
+//! The `server` section is the **server-side delta** of this run: the
+//! generator captures a `stats` + `metrics` snapshot (see
+//! `docs/OBSERVABILITY.md`) over a dedicated connection before the first
+//! arrival and again after the last completion, and reports the
+//! difference — queue-wait and execute stage histograms (all ops, warm +
+//! cold, merged), cache hit ratio, evictions, and shed load as the
+//! *server* saw them, alongside the client-observed round-trip
+//! percentiles above. Against a server that cannot answer `metrics` the
+//! section is omitted (the rest of the report is unaffected).
 //!
 //! A `dropped` request is one the server accepted bytes for but never
 //! answered (its connection died first) — the graceful-drain contract
 //! says this must be zero, and `--strict` turns any violation into a
 //! nonzero exit for CI.
 
+use crate::obs::HistSnapshot;
 use crate::util::{quantile, Json};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -146,6 +161,131 @@ pub struct LoadgenReport {
     pub latency: LatencySummary,
     /// Per-kind breakdown, keyed by [`OpKind::key`].
     pub per_op: Vec<(OpKind, OpSummary)>,
+    /// Server-side delta over the run (`stats` + `metrics` snapshots
+    /// before/after); `None` when the target could not answer them.
+    pub server: Option<ServerSnapshot>,
+}
+
+/// Server-side counters and stage histograms from one `stats` +
+/// `metrics` capture — or, via [`ServerSnapshot::delta_from`], the
+/// difference between two captures (what one run contributed).
+#[derive(Debug, Clone, Default)]
+pub struct ServerSnapshot {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Idle-timeout connection evictions.
+    pub evictions: u64,
+    /// Requests shed with `kind:"overloaded"`.
+    pub overloaded: u64,
+    /// `queue_wait` stage histogram, every op × warm/cold cell merged.
+    pub queue_wait: HistSnapshot,
+    /// `execute` stage histogram, every op × warm/cold cell merged.
+    pub execute: HistSnapshot,
+}
+
+impl ServerSnapshot {
+    /// Capture over a dedicated blocking connection. `None` on any
+    /// connect/protocol failure — an older server without the `metrics`
+    /// op degrades the report, never the run.
+    pub fn fetch(addr: &str) -> Option<ServerSnapshot> {
+        let mut stream = TcpStream::connect(addr).ok()?;
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone().ok()?);
+        let stats = fetch_op(&mut stream, &mut reader, "{\"op\":\"stats\"}\n")?;
+        let metrics = fetch_op(&mut stream, &mut reader, "{\"op\":\"metrics\"}\n")?;
+        let n = |k: &str| stats.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        Some(ServerSnapshot {
+            requests: n("requests"),
+            cache_hits: n("cache_hits"),
+            cache_misses: n("cache_misses"),
+            evictions: n("evictions"),
+            overloaded: n("overloaded"),
+            queue_wait: stage_hist(&metrics, "queue_wait"),
+            execute: stage_hist(&metrics, "execute"),
+        })
+    }
+
+    /// What happened between `before` and `self`: counter deltas and
+    /// histogram windows ([`HistSnapshot::diff_from`]).
+    pub fn delta_from(&self, before: &ServerSnapshot) -> ServerSnapshot {
+        ServerSnapshot {
+            requests: self.requests.saturating_sub(before.requests),
+            cache_hits: self.cache_hits.saturating_sub(before.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(before.cache_misses),
+            evictions: self.evictions.saturating_sub(before.evictions),
+            overloaded: self.overloaded.saturating_sub(before.overloaded),
+            queue_wait: self.queue_wait.diff_from(&before.queue_wait),
+            execute: self.execute.diff_from(&before.execute),
+        }
+    }
+
+    /// Cache hit ratio over the captured window (0 when no predict
+    /// touched the cache).
+    pub fn cache_hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One request/response exchange on the snapshot connection.
+fn fetch_op(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Option<Json> {
+    stream.write_all(line.as_bytes()).ok()?;
+    let mut resp = String::new();
+    match reader.read_line(&mut resp) {
+        Ok(nread) if nread > 0 => Json::parse(resp.trim()).ok(),
+        _ => None,
+    }
+}
+
+/// Merge every cell of the named stage in a `metrics` reply into one
+/// histogram. Cells are sparse `[bucket_index, count]` pairs over the
+/// shared log-linear bucket table, so merging loses nothing.
+fn stage_hist(metrics: &Json, stage: &str) -> HistSnapshot {
+    let mut merged = HistSnapshot::empty();
+    let Some(Json::Arr(stages)) = metrics.get("stages") else {
+        return merged;
+    };
+    for s in stages {
+        if s.get("stage").and_then(Json::as_str) != Some(stage) {
+            continue;
+        }
+        let Some(Json::Arr(cells)) = s.get("cells") else {
+            continue;
+        };
+        for cell in cells {
+            merged.merge(&cell_hist(cell));
+        }
+    }
+    merged
+}
+
+/// Reconstruct one cell's [`HistSnapshot`] from its wire form.
+fn cell_hist(cell: &Json) -> HistSnapshot {
+    let mut buckets: Vec<(u32, u64)> = Vec::new();
+    let mut count = 0u64;
+    if let Some(Json::Arr(bs)) = cell.get("buckets") {
+        for b in bs {
+            let Json::Arr(pair) = b else { continue };
+            let idx = pair.first().and_then(Json::as_f64);
+            let n = pair.get(1).and_then(Json::as_f64);
+            if let (Some(idx), Some(n)) = (idx, n) {
+                buckets.push((idx as u32, n as u64));
+                count += n as u64;
+            }
+        }
+    }
+    buckets.sort_unstable_by_key(|&(i, _)| i);
+    let sum_ms = cell.get("sum_ms").and_then(Json::as_f64).unwrap_or(0.0);
+    HistSnapshot {
+        buckets,
+        count,
+        sum_ns: (sum_ms.max(0.0) * 1e6).round() as u64,
+    }
 }
 
 /// Deterministic open-loop mix: request `k` is a predict iff
@@ -222,6 +362,10 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let total = ((opts.rate * opts.duration.as_secs_f64()).floor() as usize).max(1);
     let conns = opts.conns.max(1).min(total);
 
+    // server-side baseline, captured before the first arrival so the
+    // post-run delta isolates exactly this run's contribution
+    let server_before = ServerSnapshot::fetch(&opts.addr);
+
     // schedule origin slightly in the future so every fleet thread is
     // up before the first arrival is due
     let start = Instant::now() + Duration::from_millis(50);
@@ -250,7 +394,13 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         dropped += r.dropped;
         unsent += r.unsent;
     }
-    Ok(aggregate(opts, total as u64, samples, dropped, unsent))
+    let server = match (server_before, ServerSnapshot::fetch(&opts.addr)) {
+        (Some(before), Some(after)) => Some(after.delta_from(&before)),
+        _ => None,
+    };
+    let mut report = aggregate(opts, total as u64, samples, dropped, unsent);
+    report.server = server;
+    Ok(report)
 }
 
 /// One connection of the fleet: writer sends its round-robin share of
@@ -432,6 +582,7 @@ fn aggregate(
         },
         latency: summarize(&latencies),
         per_op,
+        server: None,
     }
 }
 
@@ -442,7 +593,7 @@ fn conn_slack(scheduled: u64) -> u64 {
 }
 
 impl LoadgenReport {
-    /// Serialize to the documented `profet.loadgen.v1` schema (see the
+    /// Serialize to the documented `profet.loadgen.v2` schema (see the
     /// module docs / README §Loadgen).
     pub fn to_json(&self) -> Json {
         let mut config = Json::obj();
@@ -483,13 +634,33 @@ impl LoadgenReport {
         }
 
         let mut root = Json::obj();
-        root.set("schema", Json::Str("profet.loadgen.v1".into()));
+        root.set("schema", Json::Str("profet.loadgen.v2".into()));
         root.set("config", config);
         root.set("totals", totals);
         root.set("elapsed_s", Json::Num(self.elapsed_s));
         root.set("throughput_rps", Json::Num(self.throughput_rps));
         root.set("latency_ms", latency);
         root.set("per_op", per_op);
+        if let Some(sv) = &self.server {
+            let hist = |h: &HistSnapshot| {
+                let mut o = Json::obj();
+                o.set("count", Json::Num(h.count as f64));
+                o.set("p50", Json::Num(h.quantile_ns(0.50) as f64 / 1e6));
+                o.set("p99", Json::Num(h.quantile_ns(0.99) as f64 / 1e6));
+                o.set("max", Json::Num(h.max_ns() as f64 / 1e6));
+                o
+            };
+            let mut s = Json::obj();
+            s.set("requests", Json::Num(sv.requests as f64));
+            s.set("cache_hits", Json::Num(sv.cache_hits as f64));
+            s.set("cache_misses", Json::Num(sv.cache_misses as f64));
+            s.set("cache_hit_ratio", Json::Num(sv.cache_hit_ratio()));
+            s.set("evictions", Json::Num(sv.evictions as f64));
+            s.set("overloaded", Json::Num(sv.overloaded as f64));
+            s.set("queue_wait_ms", hist(&sv.queue_wait));
+            s.set("execute_ms", hist(&sv.execute));
+            root.set("server", s);
+        }
         root
     }
 
@@ -609,9 +780,34 @@ mod tests {
         // schema round-trip: required keys present and well-formed
         let text = report.to_json().to_string();
         let j = Json::parse(&text).unwrap();
-        assert_eq!(j.req_str("schema").unwrap(), "profet.loadgen.v1");
-        for key in ["config", "totals", "latency_ms", "per_op"] {
+        assert_eq!(j.req_str("schema").unwrap(), "profet.loadgen.v2");
+        for key in ["config", "totals", "latency_ms", "per_op", "server"] {
             assert!(j.get(key).is_some(), "missing {key}");
+        }
+        // server-side delta: both `stats` and `metrics` answered, and the
+        // section carries the documented shape
+        let server = j.get("server").unwrap();
+        for key in [
+            "requests",
+            "cache_hits",
+            "cache_misses",
+            "cache_hit_ratio",
+            "evictions",
+            "overloaded",
+            "queue_wait_ms",
+            "execute_ms",
+        ] {
+            assert!(server.get(key).is_some(), "missing server.{key}");
+        }
+        let ratio = server.get("cache_hit_ratio").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&ratio), "{ratio}");
+        for h in ["queue_wait_ms", "execute_ms"] {
+            for k in ["count", "p50", "p99", "max"] {
+                assert!(
+                    server.get(h).unwrap().get(k).and_then(Json::as_f64).is_some(),
+                    "missing server.{h}.{k}"
+                );
+            }
         }
         for key in ["p50", "p95", "p99", "p999", "mean", "max"] {
             assert!(

@@ -77,7 +77,8 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loa
   repro serve    [--addr 127.0.0.1:7878] [--models models] [--pool N]
                  [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]
                  [--reactor-threads N] [--idle-timeout SECS]
-                 [--model-dir-watch SECS]
+                 [--model-dir-watch SECS] [--trace-slow-ms MS]
+                 [--trace-sample N]
   repro loadgen  [--addr 127.0.0.1:7878] [--rate 200] [--duration 10]
                  [--conns 16] [--predict-pct 90] [--anchor g4dn] [--target p3]
                  [--out BENCH_serve.json] [--strict]";
@@ -283,6 +284,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             trainer_queue_cap: args
                 .usize_or("trainer-queue-cap", defaults.pool.trainer_queue_cap)?,
             onboard: defaults.pool.onboard.clone(),
+            // slow-request dumps to stderr past this threshold; tracing
+            // samples every Nth engine request (0 disables)
+            trace_slow_ms: match args.get("trace-slow-ms") {
+                None => defaults.pool.trace_slow_ms,
+                Some(v) => v.parse().with_context(|| "--trace-slow-ms")?,
+            },
+            trace_sample: match args.get("trace-sample") {
+                None => defaults.pool.trace_sample,
+                Some(v) => v.parse().with_context(|| "--trace-sample")?,
+            },
         },
         max_connections: args.usize_or("max-conns", defaults.max_connections)?,
         // 0 = auto (scales with available parallelism)
@@ -314,6 +325,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(r#"  {{"op":"predict","anchor":"g4dn","target":"p3","anchor_latency_ms":120.0,"profile":{{"Conv2D":40.0}}}}"#);
     println!(r#"  {{"op":"recommend","anchor":"g4dn","pixels":64,"profile_bmin":{{"Conv2D":8.0}},"anchor_lat_bmin":20.0,"profile_bmax":{{"Conv2D":90.0}},"anchor_lat_bmax":200.0,"include_spot":true}}"#);
     println!(r#"  {{"op":"stats"}}  (registry_epoch / last_reload track hot reloads)"#);
+    println!(r#"  {{"op":"metrics"}}  (per-stage latency histograms + slow-request traces)"#);
     println!("(full op reference in docs/PROTOCOL.md)");
     // park forever
     loop {
@@ -371,7 +383,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         let parsed = repro::util::Json::parse(text.trim())
             .with_context(|| format!("{out} is not valid JSON"))?;
         anyhow::ensure!(
-            parsed.req_str("schema").ok() == Some("profet.loadgen.v1"),
+            parsed.req_str("schema").ok() == Some("profet.loadgen.v2"),
             "{out} missing schema marker"
         );
         let violations = report.strict_violations();

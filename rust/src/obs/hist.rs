@@ -1,0 +1,394 @@
+//! Mergeable log-linear latency histograms.
+//!
+//! The bucket table is **fixed and global**: base-2 log-linear with
+//! [`SUB`] (= 8) linear sub-buckets per power-of-two octave, indexed in
+//! nanoseconds. Values below 8 ns get one bucket per nanosecond
+//! (indices 0..8); a value `v >= 8` with `e = floor(log2 v)` lands in
+//! index `(e - 2) * 8 + m` where `m` is the top three mantissa bits
+//! below the leading one. Octaves above [`MAX_EXP`] (2^36 ns ≈ 68.7 s)
+//! collapse into the top bucket, so anything slower than ~137 s
+//! saturates there — durations, not timestamps, so the cap is generous.
+//!
+//! The scheme gives every bucket a relative width of `1/(8+m) <= 1/8`,
+//! so quoting a bucket **midpoint** as a quantile is within **12.5 %**
+//! of the exact order statistic (typically half that); the property
+//! tests below enforce the bound against the exact sorted-sample
+//! reference ([`crate::util::quantile`]).
+//!
+//! [`Hist`] is the live, lock-free recording cell (a flat array of
+//! relaxed atomics — recording is two `fetch_add`s and never
+//! allocates). [`HistSnapshot`] is the frozen, sparse, *mergeable*
+//! read-side value: merging is pointwise addition of bucket counts, so
+//! it is associative and commutative and per-thread shards can be
+//! combined in any order on read.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// log2 of the number of linear sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+/// Linear sub-buckets per power-of-two octave.
+pub const SUB: u64 = 1 << SUB_BITS;
+/// Largest fully-resolved exponent: values in `[2^36, 2^37)` ns fill
+/// the last octave; anything `>= 2^37` ns saturates into its top
+/// bucket.
+const MAX_EXP: u32 = 36;
+/// Total bucket count (indices `0 .. N_BUCKETS`).
+pub const N_BUCKETS: usize = ((MAX_EXP - 2) as usize) * (SUB as usize) + (SUB as usize);
+/// Documented relative-error bound for bucketed quantiles.
+pub const QUANTILE_REL_ERROR: f64 = 1.0 / SUB as f64;
+
+/// Bucket index for a duration in nanoseconds. Total and monotone
+/// non-decreasing over `u64`.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < SUB {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros();
+    if e > MAX_EXP {
+        return N_BUCKETS - 1;
+    }
+    let m = (ns >> (e - SUB_BITS)) & (SUB - 1);
+    ((e - 2) as usize) * (SUB as usize) + m as usize
+}
+
+/// `[lower, upper)` bounds of a bucket, nanoseconds. The top bucket's
+/// upper bound is its nominal octave edge — saturated values above it
+/// are still *counted* there (their `sum_ns` stays exact).
+#[inline]
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUB as usize {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let e = (idx as u64 / SUB) + 2;
+    let m = idx as u64 % SUB;
+    let lo = (1u64 << e) + (m << (e - SUB_BITS as u64));
+    (lo, lo + (1u64 << (e - SUB_BITS as u64)))
+}
+
+/// Midpoint representative quoted for quantiles in a bucket.
+#[inline]
+pub fn bucket_mid(idx: usize) -> u64 {
+    let (lo, hi) = bucket_bounds(idx);
+    lo + (hi - lo) / 2
+}
+
+/// One live histogram cell: fixed bucket table of relaxed atomics plus
+/// an exact running sum. Recording never allocates and never locks.
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration (nanoseconds). Two relaxed `fetch_add`s.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+    }
+
+    /// Cheap emptiness probe without building a snapshot.
+    pub fn is_empty(&self) -> bool {
+        self.sum_ns.load(Relaxed) == 0 && self.buckets.iter().all(|b| b.load(Relaxed) == 0)
+    }
+
+    /// Freeze the current counts into a sparse snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::empty();
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Relaxed);
+            if c > 0 {
+                out.buckets.push((idx as u32, c));
+                out.count += c;
+            }
+        }
+        out.sum_ns = self.sum_ns.load(Relaxed);
+        out
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+/// Frozen sparse histogram: `(bucket index, count)` pairs sorted by
+/// index, plus exact totals. Merging is pointwise addition —
+/// associative and commutative — so shards combine in any order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    /// Non-empty buckets, sorted by index.
+    pub buckets: Vec<(u32, u64)>,
+    /// Total recorded samples (sum of bucket counts).
+    pub count: u64,
+    /// Exact sum of recorded nanoseconds (not bucketed).
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot::default()
+    }
+
+    /// Pointwise-add `other` into `self`.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.buckets.is_empty() {
+            self.sum_ns += other.sum_ns;
+            self.count += other.count;
+            return;
+        }
+        let mut merged = Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.buckets.len() && j < other.buckets.len() {
+            let (ai, ac) = self.buckets[i];
+            let (bi, bc) = other.buckets[j];
+            if ai < bi {
+                merged.push((ai, ac));
+                i += 1;
+            } else if bi < ai {
+                merged.push((bi, bc));
+                j += 1;
+            } else {
+                merged.push((ai, ac + bc));
+                i += 1;
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&self.buckets[i..]);
+        merged.extend_from_slice(&other.buckets[j..]);
+        self.buckets = merged;
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Bucketed quantile: walk cumulative counts to the 0-based rank
+    /// `round(q * (count - 1))` and quote that bucket's midpoint.
+    /// Within [`QUANTILE_REL_ERROR`] of the exact order statistic.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for &(idx, c) in &self.buckets {
+            seen += c;
+            if seen > rank {
+                return bucket_mid(idx as usize);
+            }
+        }
+        bucket_mid(self.buckets.last().map(|&(i, _)| i as usize).unwrap_or(0))
+    }
+
+    /// Upper bound of the highest non-empty bucket (0 if empty) — an
+    /// upper estimate of the maximum recorded value, except for
+    /// saturated samples which may exceed it.
+    pub fn max_ns(&self) -> u64 {
+        self.buckets
+            .last()
+            .map(|&(i, _)| bucket_bounds(i as usize).1)
+            .unwrap_or(0)
+    }
+
+    /// Mean in nanoseconds (exact, from `sum_ns`).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Pointwise `self - earlier` (saturating), for before/after deltas
+    /// over a monotone counter source (e.g. `repro loadgen` bracketing
+    /// a run with two `metrics` snapshots).
+    pub fn diff_from(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut out = HistSnapshot::empty();
+        let (mut i, mut j) = (0, 0);
+        while i < self.buckets.len() {
+            let (ai, ac) = self.buckets[i];
+            let mut c = ac;
+            while j < earlier.buckets.len() && earlier.buckets[j].0 < ai {
+                j += 1;
+            }
+            if j < earlier.buckets.len() && earlier.buckets[j].0 == ai {
+                c = ac.saturating_sub(earlier.buckets[j].1);
+            }
+            if c > 0 {
+                out.buckets.push((ai, c));
+                out.count += c;
+            }
+            i += 1;
+        }
+        out.sum_ns = self.sum_ns.saturating_sub(earlier.sum_ns);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantile;
+
+    /// Deterministic 64-bit LCG (MMIX constants) for seeded fuzzing.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            self.0
+        }
+        fn uniform01(&mut self) -> f64 {
+            (self.next() >> 11) as f64 / (1u64 << 53) as f64
+        }
+    }
+
+    #[test]
+    fn index_is_total_monotone_and_bounds_contain() {
+        let mut probes: Vec<u64> = (0..4096).collect();
+        for e in 3..63u32 {
+            let p = 1u64 << e;
+            probes.extend_from_slice(&[p - 1, p, p + 1, p + (p >> 1)]);
+        }
+        probes.extend_from_slice(&[u64::MAX - 1, u64::MAX]);
+        probes.sort_unstable();
+        let mut prev = 0usize;
+        for &v in &probes {
+            let idx = bucket_index(v);
+            assert!(idx < N_BUCKETS, "idx {idx} out of range for {v}");
+            assert!(idx >= prev, "index not monotone at {v}");
+            prev = idx;
+            let (lo, hi) = bucket_bounds(idx);
+            if idx < N_BUCKETS - 1 {
+                assert!(lo <= v && v < hi, "{v} outside [{lo},{hi}) idx {idx}");
+            } else {
+                assert!(v >= lo, "top bucket lower bound broken for {v}");
+            }
+        }
+        // every bucket index round-trips through its own lower bound
+        for idx in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo < hi);
+            assert_eq!(bucket_index(lo), idx);
+            assert_eq!(bucket_index(hi - 1), idx);
+        }
+    }
+
+    #[test]
+    fn bucketed_quantiles_match_exact_reference_within_documented_error() {
+        // three seeded shapes: log-uniform (1 µs .. 1 s), uniform
+        // (0.1 .. 10 ms), and a bimodal warm/cold mixture
+        for (seed, shape) in [(11u64, 0), (42, 1), (1234, 2)] {
+            let mut rng = Lcg(seed);
+            let h = Hist::new();
+            let mut exact: Vec<f64> = Vec::new();
+            for _ in 0..512 {
+                let u = rng.uniform01();
+                let ns = match shape {
+                    0 => (1e3 * (1e6f64).powf(u)) as u64,
+                    1 => (1e5 + u * 9.9e6) as u64,
+                    _ => {
+                        if rng.uniform01() < 0.8 {
+                            (5e4 + u * 1e5) as u64
+                        } else {
+                            (2e7 + u * 3e8) as u64
+                        }
+                    }
+                };
+                h.record(ns);
+                exact.push(ns as f64);
+            }
+            let snap = h.snapshot();
+            assert_eq!(snap.count, 512);
+            for q in [0.5, 0.9, 0.99] {
+                let approx = snap.quantile_ns(q) as f64;
+                let reference = quantile(&exact, q);
+                let rel = (approx - reference).abs() / reference;
+                assert!(
+                    rel <= QUANTILE_REL_ERROR,
+                    "seed {seed} shape {shape} q{q}: {approx} vs {reference} (rel {rel:.4})"
+                );
+            }
+            // mean is exact, not bucketed
+            let mean_ref = exact.iter().sum::<f64>() / exact.len() as f64;
+            assert!((snap.mean_ns() - mean_ref).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Lcg(7);
+        let mk = |rng: &mut Lcg| {
+            let h = Hist::new();
+            for _ in 0..200 {
+                h.record(rng.next() % 1_000_000_000);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge not commutative");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge not associative");
+        assert_eq!(ab_c.count, a.count + b.count + c.count);
+        assert_eq!(ab_c.sum_ns, a.sum_ns + b.sum_ns + c.sum_ns);
+    }
+
+    #[test]
+    fn top_bucket_saturates_without_losing_counts_or_sums() {
+        let h = Hist::new();
+        let big = 1u64 << 40; // ~18 min, far past the 2^37 ns octave edge
+        h.record(big);
+        h.record(u64::MAX / 2);
+        h.record(100);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 3);
+        assert_eq!(snap.sum_ns, big + u64::MAX / 2 + 100);
+        let top = snap.buckets.last().unwrap();
+        assert_eq!(top.0 as usize, N_BUCKETS - 1);
+        assert_eq!(top.1, 2, "both oversized samples share the top bucket");
+        // p99 lands in the top bucket and quotes its midpoint
+        assert_eq!(snap.quantile_ns(0.99), bucket_mid(N_BUCKETS - 1));
+        assert_eq!(snap.max_ns(), bucket_bounds(N_BUCKETS - 1).1);
+    }
+
+    #[test]
+    fn diff_from_recovers_a_window() {
+        let h = Hist::new();
+        for ns in [100u64, 5_000, 5_000] {
+            h.record(ns);
+        }
+        let before = h.snapshot();
+        for ns in [100u64, 70_000] {
+            h.record(ns);
+        }
+        let after = h.snapshot();
+        let window = after.diff_from(&before);
+        assert_eq!(window.count, 2);
+        assert_eq!(window.sum_ns, 70_100);
+        assert_eq!(window.buckets.len(), 2);
+        // empty window when nothing moved
+        assert_eq!(after.diff_from(&after), HistSnapshot::empty());
+    }
+}

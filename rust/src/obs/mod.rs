@@ -1,0 +1,505 @@
+//! # obs — the serving tier's latency observatory
+//!
+//! Dependency-free instrumentation layer for the coordinator: per-stage
+//! log-linear latency histograms ([`hist`]), per-request trace contexts
+//! with a sampled slow-request ring ([`trace`]), and the merged
+//! [`MetricsSnapshot`] served by the `metrics` wire op.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The warm predict path stays zero-allocation.** Recording is a
+//!    thread-local shard pick plus two relaxed atomic adds into a
+//!    pre-sized bucket table — no locks, no boxing, no `Instant`
+//!    indirection. Everything that allocates (snapshots, traces, the
+//!    ring) lives on cold paths.
+//! 2. **Shards merge on read.** Each recording thread writes its own
+//!    shard (assigned round-robin on first use); the `metrics` op
+//!    merges shards into one [`hist::HistSnapshot`] per cell. Merge is
+//!    associative and commutative, so read-side cost never touches the
+//!    hot path.
+//! 3. **Fixed taxonomy.** Cells are keyed `(Stage, OpClass, Temp)` —
+//!    eight pipeline stages × seven op classes × warm/cold — documented
+//!    in `docs/OBSERVABILITY.md`. The cube is dense and pre-allocated
+//!    (112 cells/shard) so recording never takes a map lookup.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot, N_BUCKETS, QUANTILE_REL_ERROR};
+pub use trace::{TraceEntry, TraceState};
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Instrumented pipeline stages, in request-path order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Streaming wire decode on the reactor thread.
+    Parse,
+    /// Prediction-cache key build + probe on the reactor thread.
+    WarmLookup,
+    /// Engine submit → lane dequeue (queueing delay).
+    QueueWait,
+    /// Lane dequeue → coalesced batch execution start.
+    BatchAssembly,
+    /// Engine/model execution (per coalesced group on predict lanes).
+    Execute,
+    /// Model-registry swap pause (publish critical section).
+    RegistrySwap,
+    /// Completion-queue push → reactor delivery pickup.
+    CompletionWait,
+    /// Response bytes → socket (per delivery flush attempt).
+    WriteFlush,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 8] = [
+        Stage::Parse,
+        Stage::WarmLookup,
+        Stage::QueueWait,
+        Stage::BatchAssembly,
+        Stage::Execute,
+        Stage::RegistrySwap,
+        Stage::CompletionWait,
+        Stage::WriteFlush,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::WarmLookup => "warm_lookup",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Execute => "execute",
+            Stage::RegistrySwap => "registry_swap",
+            Stage::CompletionWait => "completion_wait",
+            Stage::WriteFlush => "write_flush",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            Stage::Parse => 0,
+            Stage::WarmLookup => 1,
+            Stage::QueueWait => 2,
+            Stage::BatchAssembly => 3,
+            Stage::Execute => 4,
+            Stage::RegistrySwap => 5,
+            Stage::CompletionWait => 6,
+            Stage::WriteFlush => 7,
+        }
+    }
+}
+
+/// Op classes histograms are keyed by. The phase-2 interpolation ops
+/// ride under [`OpClass::Predict`]; `health`/`stats`/`instances`/
+/// `metrics` and infrastructure work (write backlog flushes, registry
+/// swaps) land in [`OpClass::Other`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Predict,
+    Recommend,
+    Plan,
+    Ingest,
+    Onboard,
+    Reload,
+    Other,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 7] = [
+        OpClass::Predict,
+        OpClass::Recommend,
+        OpClass::Plan,
+        OpClass::Ingest,
+        OpClass::Onboard,
+        OpClass::Reload,
+        OpClass::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Predict => "predict",
+            OpClass::Recommend => "recommend",
+            OpClass::Plan => "plan",
+            OpClass::Ingest => "ingest",
+            OpClass::Onboard => "onboard",
+            OpClass::Reload => "reload",
+            OpClass::Other => "other",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            OpClass::Predict => 0,
+            OpClass::Recommend => 1,
+            OpClass::Plan => 2,
+            OpClass::Ingest => 3,
+            OpClass::Onboard => 4,
+            OpClass::Reload => 5,
+            OpClass::Other => 6,
+        }
+    }
+}
+
+/// Cache temperature of the path that served the request. Only
+/// meaningful for `predict`; every other op records as [`Temp::Cold`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Temp {
+    /// Answered inline from the prediction cache on the reactor thread.
+    Warm,
+    /// Went through an engine lane.
+    Cold,
+}
+
+impl Temp {
+    pub fn name(self) -> &'static str {
+        match self {
+            Temp::Warm => "warm",
+            Temp::Cold => "cold",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            Temp::Warm => 0,
+            Temp::Cold => 1,
+        }
+    }
+}
+
+const N_OPS: usize = OpClass::ALL.len();
+const N_TEMPS: usize = 2;
+const N_CELLS: usize = Stage::ALL.len() * N_OPS * N_TEMPS;
+
+#[inline]
+fn cell_index(stage: Stage, op: OpClass, temp: Temp) -> usize {
+    (stage.index() * N_OPS + op.index()) * N_TEMPS + temp.index()
+}
+
+/// Recording shards per [`Obs`]. More than the reactor-thread cap (4)
+/// plus a typical lane count, so contention is rare even on wide
+/// machines; threads beyond this share shards round-robin.
+const N_SHARDS: usize = 8;
+
+/// Capacity of the slow-request ring (newest entries win).
+pub const SLOW_RING_CAP: usize = 64;
+
+/// Process-wide thread registration for shard picks: each thread gets a
+/// stable small integer on first record, used modulo the shard count.
+/// Shared across `Obs` instances by design — the slot is a property of
+/// the thread, not of the registry.
+static THREAD_SEQ: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    static THREAD_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn thread_slot() -> usize {
+    THREAD_SLOT.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = THREAD_SEQ.fetch_add(1, Relaxed);
+        s.set(v);
+        v
+    })
+}
+
+struct Shard {
+    cells: Vec<Hist>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            cells: (0..N_CELLS).map(|_| Hist::new()).collect(),
+        }
+    }
+}
+
+/// The per-pool observatory: pre-sized histogram shards, the trace
+/// sampling config, and the slow-request ring. One per [`EnginePool`];
+/// shared by reactor threads, lanes, and the registry via `Arc`.
+///
+/// [`EnginePool`]: crate::coordinator::EnginePool
+pub struct Obs {
+    shards: Vec<Shard>,
+    started: Instant,
+    trace_slow_ms: f64,
+    trace_sample: u64,
+    trace_seq: AtomicU64,
+    slow_ring: Mutex<VecDeque<TraceEntry>>,
+}
+
+impl Obs {
+    /// `trace_slow_ms`: completed traces at/above this total land in
+    /// the ring (and on stderr). `trace_sample`: every Nth engine
+    /// submission carries a trace; `0` disables tracing entirely.
+    pub fn new(trace_slow_ms: f64, trace_sample: u64) -> Obs {
+        Obs {
+            shards: (0..N_SHARDS).map(|_| Shard::new()).collect(),
+            started: Instant::now(),
+            trace_slow_ms,
+            trace_sample,
+            trace_seq: AtomicU64::new(0),
+            slow_ring: Mutex::new(VecDeque::with_capacity(SLOW_RING_CAP)),
+        }
+    }
+
+    /// Seconds since this observatory (== its pool) was built.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn trace_slow_ms(&self) -> f64 {
+        self.trace_slow_ms
+    }
+
+    /// Record one stage duration. Alloc-free and lock-free: a
+    /// thread-local shard pick plus two relaxed atomic adds.
+    #[inline]
+    pub fn record(&self, stage: Stage, op: OpClass, temp: Temp, dur: Duration) {
+        self.record_ns(stage, op, temp, dur.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// [`Obs::record`] with a raw nanosecond value.
+    #[inline]
+    pub fn record_ns(&self, stage: Stage, op: OpClass, temp: Temp, ns: u64) {
+        let shard = &self.shards[thread_slot() % self.shards.len()];
+        shard.cells[cell_index(stage, op, temp)].record(ns);
+    }
+
+    /// Sampling decision for an engine submission: every
+    /// `trace_sample`-th call returns a fresh boxed [`TraceState`].
+    /// Allocates — cold path only (the submit it rides already does).
+    pub fn maybe_trace(&self) -> Option<Box<TraceState>> {
+        if self.trace_sample == 0 {
+            return None;
+        }
+        let seq = self.trace_seq.fetch_add(1, Relaxed);
+        if seq % self.trace_sample != 0 {
+            return None;
+        }
+        Some(Box::new(TraceState {
+            seq,
+            ..TraceState::default()
+        }))
+    }
+
+    /// Fold a delivered trace into the slow ring if it crossed the
+    /// threshold, dumping one structured JSON line on stderr.
+    pub fn complete_trace(&self, entry: TraceEntry) {
+        if entry.total_ms < self.trace_slow_ms {
+            return;
+        }
+        eprintln!("{}", entry.to_json_line());
+        let mut ring = self.slow_ring.lock().unwrap();
+        if ring.len() == SLOW_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(entry);
+    }
+
+    /// Current ring contents, oldest first.
+    pub fn slow_traces(&self) -> Vec<TraceEntry> {
+        self.slow_ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Merge all shards for one `(stage, op, temp)` cell.
+    pub fn cell_snapshot(&self, stage: Stage, op: OpClass, temp: Temp) -> HistSnapshot {
+        let idx = cell_index(stage, op, temp);
+        let mut out = HistSnapshot::empty();
+        for shard in &self.shards {
+            out.merge(&shard.cells[idx].snapshot());
+        }
+        out
+    }
+
+    /// The full merged read-side view: every non-empty cell of every
+    /// stage, shards combined, quantiles extracted. Allocates freely —
+    /// this backs the cold `metrics` op.
+    pub fn stage_summaries(&self) -> Vec<StageSummary> {
+        let mut stages = Vec::new();
+        for stage in Stage::ALL {
+            let mut cells = Vec::new();
+            for op in OpClass::ALL {
+                for temp in [Temp::Warm, Temp::Cold] {
+                    let snap = self.cell_snapshot(stage, op, temp);
+                    if snap.count == 0 {
+                        continue;
+                    }
+                    cells.push(CellSummary::from_snapshot(op.name(), temp.name(), &snap));
+                }
+            }
+            if !cells.is_empty() {
+                stages.push(StageSummary {
+                    stage: stage.name(),
+                    cells,
+                });
+            }
+        }
+        stages
+    }
+}
+
+const NS_PER_MS: f64 = 1e6;
+
+/// One stage's non-empty cells, as served by the `metrics` op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSummary {
+    pub stage: &'static str,
+    pub cells: Vec<CellSummary>,
+}
+
+/// One `(op, temp)` histogram cell: exact count/sum, bucketed
+/// quantiles, and the sparse bucket table itself (so clients — e.g.
+/// `repro loadgen` — can diff two snapshots and re-extract quantiles
+/// for the window between them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSummary {
+    pub op: &'static str,
+    pub temp: &'static str,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    /// Upper bound of the highest non-empty bucket (bucketed, not
+    /// exact — see `docs/OBSERVABILITY.md`).
+    pub max_ms: f64,
+    /// Sparse `(bucket index, count)` pairs, ascending.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl CellSummary {
+    pub fn from_snapshot(op: &'static str, temp: &'static str, snap: &HistSnapshot) -> CellSummary {
+        CellSummary {
+            op,
+            temp,
+            count: snap.count,
+            sum_ms: snap.sum_ns as f64 / NS_PER_MS,
+            p50_ms: snap.quantile_ns(0.50) as f64 / NS_PER_MS,
+            p90_ms: snap.quantile_ns(0.90) as f64 / NS_PER_MS,
+            p99_ms: snap.quantile_ns(0.99) as f64 / NS_PER_MS,
+            max_ms: snap.max_ns() as f64 / NS_PER_MS,
+            buckets: snap.buckets.clone(),
+        }
+    }
+}
+
+/// Everything the `metrics` op returns: process uptime, flat gauges
+/// (filled by the router from the engine stats + registry), the merged
+/// per-stage histograms, and the slow-trace ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub uptime_s: f64,
+    /// `(name, value)` pairs, **byte-sorted by name** (the encoder
+    /// emits them in order).
+    pub gauges: Vec<(&'static str, f64)>,
+    pub stages: Vec<StageSummary>,
+    pub slow: Vec<TraceEntry>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_index_is_a_bijection_over_the_cube() {
+        let mut seen = vec![false; N_CELLS];
+        for stage in Stage::ALL {
+            for op in OpClass::ALL {
+                for temp in [Temp::Warm, Temp::Cold] {
+                    let idx = cell_index(stage, op, temp);
+                    assert!(!seen[idx], "collision at {stage:?}/{op:?}/{temp:?}");
+                    seen[idx] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn record_lands_in_the_right_cell_and_merges_across_threads() {
+        let obs = std::sync::Arc::new(Obs::new(250.0, 1));
+        obs.record(Stage::Parse, OpClass::Predict, Temp::Warm, Duration::from_micros(5));
+        // other cells stay empty
+        assert_eq!(obs.cell_snapshot(Stage::Parse, OpClass::Predict, Temp::Cold).count, 0);
+        assert_eq!(obs.cell_snapshot(Stage::Execute, OpClass::Predict, Temp::Warm).count, 0);
+        assert_eq!(obs.cell_snapshot(Stage::Parse, OpClass::Predict, Temp::Warm).count, 1);
+
+        // 4 threads × 100 records merge losslessly regardless of which
+        // shard each thread landed on
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let o = obs.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    o.record_ns(Stage::Execute, OpClass::Recommend, Temp::Cold, 1_000 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = obs.cell_snapshot(Stage::Execute, OpClass::Recommend, Temp::Cold);
+        assert_eq!(snap.count, 400);
+        assert_eq!(snap.sum_ns, 4 * (100 * 1_000 + (0..100).sum::<u64>()));
+
+        let stages = obs.stage_summaries();
+        assert_eq!(stages.len(), 2, "only non-empty stages are emitted");
+        assert_eq!(stages[0].stage, "parse");
+        assert_eq!(stages[1].stage, "execute");
+        let cell = &stages[1].cells[0];
+        assert_eq!((cell.op, cell.temp, cell.count), ("recommend", "cold", 400));
+        assert!(cell.p50_ms > 0.0 && cell.p99_ms >= cell.p50_ms);
+        assert!(!cell.buckets.is_empty());
+    }
+
+    #[test]
+    fn trace_sampling_and_slow_ring_semantics() {
+        let obs = Obs::new(5.0, 3);
+        // every 3rd submission is sampled, starting with the first
+        let picks: Vec<bool> = (0..9).map(|_| obs.maybe_trace().is_some()).collect();
+        assert_eq!(picks, [true, false, false, true, false, false, true, false, false]);
+
+        // below-threshold traces never enter the ring
+        let fast = TraceEntry::from_state("predict", "cold", 1.0, &TraceState::default());
+        obs.complete_trace(fast);
+        assert!(obs.slow_traces().is_empty());
+
+        // slow ones do, newest-wins at capacity
+        for i in 0..(SLOW_RING_CAP + 5) {
+            let st = TraceState {
+                seq: i as u64,
+                ..TraceState::default()
+            };
+            obs.complete_trace(TraceEntry::from_state("recommend", "cold", 10.0, &st));
+        }
+        let ring = obs.slow_traces();
+        assert_eq!(ring.len(), SLOW_RING_CAP);
+        assert_eq!(ring.first().unwrap().seq, 5, "oldest entries evicted");
+        assert_eq!(ring.last().unwrap().seq, (SLOW_RING_CAP + 4) as u64);
+
+        // sample = 0 disables tracing
+        let off = Obs::new(0.0, 0);
+        assert!(off.maybe_trace().is_none());
+    }
+
+    #[test]
+    fn uptime_is_monotone() {
+        let obs = Obs::new(250.0, 1);
+        let a = obs.uptime_s();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(obs.uptime_s() > a);
+        assert!(a >= 0.0);
+    }
+}

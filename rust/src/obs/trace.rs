@@ -1,0 +1,163 @@
+//! Per-request trace contexts and the slow-request ring.
+//!
+//! A sampled request (every `trace_sample`-th engine submission)
+//! carries a [`TraceState`] on its reply metadata through reactor →
+//! dispatch → lane → completion; each instrumented stage adds its
+//! nanoseconds as it happens. When the response is delivered back to
+//! the client, the state is folded into a [`TraceEntry`] — the
+//! admission→delivery wall time plus the per-stage breakdown — and, if
+//! the total crossed the `--trace-slow-ms` threshold, the entry is
+//! pushed into a fixed-capacity ring buffer (newest wins) and dumped as
+//! one structured JSON line on stderr. The ring is served back over the
+//! wire by the `metrics` op (`slow_traces`).
+//!
+//! Traces only exist on the engine (cold) path: warm cache hits are
+//! answered inline on the reactor thread and must stay
+//! zero-allocation, so they are histogram-only.
+
+use super::Stage;
+
+/// Mutable per-request stage accumulator, boxed onto `ReqMeta` for
+/// sampled requests (cold path only — the submit already allocates).
+#[derive(Debug, Clone, Default)]
+pub struct TraceState {
+    /// Monotone trace sequence number (sampling counter value).
+    pub seq: u64,
+    pub parse_ns: u64,
+    pub queue_wait_ns: u64,
+    pub batch_assembly_ns: u64,
+    pub execute_ns: u64,
+    pub completion_wait_ns: u64,
+}
+
+impl TraceState {
+    /// Fold one stage observation in. Stages outside the per-request
+    /// path (warm lookup, registry swap, write flush) are ignored —
+    /// they are histogram-only.
+    pub fn note(&mut self, stage: Stage, ns: u64) {
+        match stage {
+            Stage::Parse => self.parse_ns += ns,
+            Stage::QueueWait => self.queue_wait_ns += ns,
+            Stage::BatchAssembly => self.batch_assembly_ns += ns,
+            Stage::Execute => self.execute_ns += ns,
+            Stage::CompletionWait => self.completion_wait_ns += ns,
+            Stage::WarmLookup | Stage::RegistrySwap | Stage::WriteFlush => {}
+        }
+    }
+}
+
+/// One finished slow-request record: total admission→delivery latency
+/// plus the attributed stage breakdown, milliseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub seq: u64,
+    pub op: &'static str,
+    pub temp: &'static str,
+    pub total_ms: f64,
+    pub parse_ms: f64,
+    pub queue_wait_ms: f64,
+    pub batch_assembly_ms: f64,
+    pub execute_ms: f64,
+    pub completion_wait_ms: f64,
+    /// `total - sum(stages)`, clamped at zero: reactor readiness gaps,
+    /// scheduler noise, and the un-instrumented tail of the path.
+    pub unattributed_ms: f64,
+}
+
+const NS_PER_MS: f64 = 1e6;
+
+impl TraceEntry {
+    /// Fold a completed [`TraceState`] into an entry. `total_ms` is the
+    /// admission→delivery wall time measured by the caller.
+    pub fn from_state(op: &'static str, temp: &'static str, total_ms: f64, st: &TraceState) -> TraceEntry {
+        let parse_ms = st.parse_ns as f64 / NS_PER_MS;
+        let queue_wait_ms = st.queue_wait_ns as f64 / NS_PER_MS;
+        let batch_assembly_ms = st.batch_assembly_ns as f64 / NS_PER_MS;
+        let execute_ms = st.execute_ns as f64 / NS_PER_MS;
+        let completion_wait_ms = st.completion_wait_ns as f64 / NS_PER_MS;
+        let attributed = parse_ms + queue_wait_ms + batch_assembly_ms + execute_ms + completion_wait_ms;
+        TraceEntry {
+            seq: st.seq,
+            op,
+            temp,
+            total_ms,
+            parse_ms,
+            queue_wait_ms,
+            batch_assembly_ms,
+            execute_ms,
+            completion_wait_ms,
+            unattributed_ms: (total_ms - attributed).max(0.0),
+        }
+    }
+
+    /// One structured JSON line for the stderr slow-request dump (keys
+    /// byte-sorted, same convention as the wire).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"batch_assembly_ms\":{:.3},\"completion_wait_ms\":{:.3},\
+             \"execute_ms\":{:.3},\"op\":\"{}\",\"parse_ms\":{:.3},\
+             \"queue_wait_ms\":{:.3},\"seq\":{},\"slow_trace\":true,\
+             \"temp\":\"{}\",\"total_ms\":{:.3},\"unattributed_ms\":{:.3}}}",
+            self.batch_assembly_ms,
+            self.completion_wait_ms,
+            self.execute_ms,
+            self.op,
+            self.parse_ms,
+            self.queue_wait_ms,
+            self.seq,
+            self.temp,
+            self.total_ms,
+            self.unattributed_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn note_routes_stages_and_ignores_histogram_only_ones() {
+        let mut st = TraceState::default();
+        st.note(Stage::Parse, 1_000);
+        st.note(Stage::QueueWait, 2_000);
+        st.note(Stage::QueueWait, 3_000); // accumulates
+        st.note(Stage::BatchAssembly, 4_000);
+        st.note(Stage::Execute, 5_000);
+        st.note(Stage::CompletionWait, 6_000);
+        st.note(Stage::WarmLookup, 999_999);
+        st.note(Stage::RegistrySwap, 999_999);
+        st.note(Stage::WriteFlush, 999_999);
+        assert_eq!(st.parse_ns, 1_000);
+        assert_eq!(st.queue_wait_ns, 5_000);
+        assert_eq!(st.batch_assembly_ns, 4_000);
+        assert_eq!(st.execute_ns, 5_000);
+        assert_eq!(st.completion_wait_ns, 6_000);
+    }
+
+    #[test]
+    fn entry_attributes_and_clamps_unattributed() {
+        let st = TraceState {
+            seq: 3,
+            parse_ns: 1_000_000,
+            queue_wait_ns: 2_000_000,
+            batch_assembly_ns: 0,
+            execute_ns: 3_000_000,
+            completion_wait_ns: 500_000,
+        };
+        let e = TraceEntry::from_state("predict", "cold", 10.0, &st);
+        assert_eq!(e.seq, 3);
+        assert!((e.unattributed_ms - 3.5).abs() < 1e-9);
+        // clock skew between independent Instants can make the parts
+        // exceed the whole; the residual clamps at zero
+        let tight = TraceEntry::from_state("predict", "cold", 5.0, &st);
+        assert_eq!(tight.unattributed_ms, 0.0);
+
+        let line = e.to_json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"op\":\"predict\""));
+        assert!(line.contains("\"slow_trace\":true"));
+        assert!(line.contains("\"total_ms\":10.000"));
+        crate::util::Json::parse(&line).expect("dump line is valid JSON");
+    }
+}

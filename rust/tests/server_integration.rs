@@ -963,3 +963,183 @@ fn ingest_onboard_brings_a_new_pair_live() {
     assert_eq!(gap.cross, vec![(Instance::G4dn, Instance::P2)]);
     std::fs::remove_dir_all(&models).ok();
 }
+
+/// Sum of `sum_ms` over every cell of the named stage in a `metrics`
+/// reply (all ops, warm + cold).
+fn stage_sum_ms(metrics: &Json, stage: &str) -> f64 {
+    let mut total = 0.0;
+    for s in metrics.req_arr("stages").unwrap() {
+        if s.req_str("stage").unwrap() != stage {
+            continue;
+        }
+        for cell in s.req_arr("cells").unwrap() {
+            total += cell.req_f64("sum_ms").unwrap();
+        }
+    }
+    total
+}
+
+/// Total sample count over every cell of the named stage.
+fn stage_count(metrics: &Json, stage: &str) -> u64 {
+    let mut total = 0u64;
+    for s in metrics.req_arr("stages").unwrap() {
+        if s.req_str("stage").unwrap() != stage {
+            continue;
+        }
+        for cell in s.req_arr("cells").unwrap() {
+            total += cell.req_f64("count").unwrap() as u64;
+        }
+    }
+    total
+}
+
+/// The latency observatory end to end: mixed warm/cold traffic populates
+/// per-stage histograms the `metrics` op exposes, server-side queue-wait
+/// + execute time never exceeds what the client observed (the stages are
+/// a decomposition of the round trip, not an independent estimate), and
+/// the connection-gauge snapshot is torn-read-free even with a sweep in
+/// flight.
+#[test]
+fn metrics_observatory_reflects_mixed_traffic() {
+    let Some(models) = model_dir() else { return };
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // serial mixed traffic, wall-clocked as one window: every server-side
+    // stage sample recorded below happened inside this window
+    let t0 = std::time::Instant::now();
+    let line = sample_profile_line();
+    let n_cold = 5usize;
+    for bust in 0..n_cold {
+        // bust 0 = the base line (cold on first sight), 1.. = distinct keys
+        let l = if bust == 0 { line.clone() } else { bust_predict_line(&line, bust) };
+        let resp = send(addr, &l);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    }
+    let n_warm = 4usize;
+    for _ in 0..n_warm {
+        // exact repeat of the base line: warm cache hit, no engine
+        let resp = send(addr, &line);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    }
+    let client_elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // `stats` carries the new uptime/version fields
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert!(st.req_f64("uptime_s").unwrap() >= 0.0);
+    assert_eq!(st.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+
+    let m = send(addr, r#"{"op":"metrics"}"#);
+    assert_eq!(m.get("ok").and_then(Json::as_bool), Some(true), "{m:?}");
+    assert!(m.req_f64("uptime_s").unwrap() >= 0.0);
+    assert_eq!(m.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+    let gauges = m.get("gauges").expect("gauges object");
+    assert!(gauges.req_f64("requests").unwrap() >= (n_cold + n_warm) as f64);
+    assert!(gauges.req_f64("cache_hits").unwrap() >= n_warm as f64);
+
+    // every engine-bound request passed parse → queue-wait → execute →
+    // completion-wait; warm hits only parse + warm-lookup
+    for stage in ["parse", "queue_wait", "execute", "completion_wait"] {
+        assert!(stage_count(&m, stage) > 0, "stage {stage} recorded nothing");
+    }
+    assert!(stage_count(&m, "queue_wait") >= n_cold as u64);
+    assert!(stage_count(&m, "execute") >= n_cold as u64);
+    // warm predicts landed in the warm parse/warm_lookup cells
+    let warm_lookups: u64 = stage_count(&m, "warm_lookup");
+    assert!(warm_lookups >= (n_cold + n_warm) as u64, "{warm_lookups}");
+
+    // decomposition invariant: with strictly serial traffic the server
+    // cannot have spent more queue-wait + execute time than the client
+    // waited in total (exact sums, not bucketed quantiles)
+    let server_ms = stage_sum_ms(&m, "queue_wait") + stage_sum_ms(&m, "execute");
+    assert!(
+        server_ms <= client_elapsed_ms,
+        "server accounted {server_ms:.3} ms > client observed {client_elapsed_ms:.3} ms"
+    );
+
+    // torn-read gate: snapshot the gauges while a sweep holds a
+    // connection active — the published triple must still add up
+    let mut sweep = TcpStream::connect(addr).unwrap();
+    sweep.write_all(big_sweep_line(1).as_bytes()).unwrap();
+    sweep.write_all(b"\n").unwrap();
+    for _ in 0..10 {
+        let st = send(addr, r#"{"op":"stats"}"#);
+        let open = st.req_f64("open_conns").unwrap();
+        let active = st.req_f64("active_conns").unwrap();
+        let idle = st.req_f64("idle_conns").unwrap();
+        assert_eq!(active + idle, open, "gauge split tore: {st:?}");
+    }
+    // drain the sweep so stop() isn't owed a response
+    let mut reader = BufReader::new(sweep);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+
+    handle.stop();
+}
+
+/// Slow-request tracing end to end: with the slow threshold at zero and
+/// 1-in-1 sampling, a forced engine-path request must appear in the
+/// `metrics` slow-trace ring with a full stage breakdown that adds up to
+/// its total.
+#[test]
+fn slow_requests_land_in_the_trace_ring() {
+    let Some(models) = model_dir() else { return };
+    let opts = coordinator::ServeOptions {
+        pool: coordinator::PoolOptions {
+            // every sampled engine request qualifies as "slow"
+            trace_slow_ms: 0.0,
+            trace_sample: 1,
+            ..coordinator::PoolOptions::default()
+        },
+        ..coordinator::ServeOptions::default()
+    };
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &opts,
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let resp = send(addr, &big_sweep_line(1));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    let m = send(addr, r#"{"op":"metrics"}"#);
+    let traces = m.req_arr("slow_traces").unwrap();
+    assert!(!traces.is_empty(), "trace ring empty: {m:?}");
+    let t = traces
+        .iter()
+        .find(|t| t.req_str("op").unwrap() == "recommend")
+        .expect("the sweep must be in the ring");
+    assert_eq!(t.req_str("temp").unwrap(), "cold");
+    let total = t.req_f64("total_ms").unwrap();
+    assert!(total > 0.0, "{total}");
+    let parts: f64 = [
+        "parse_ms",
+        "queue_wait_ms",
+        "batch_assembly_ms",
+        "execute_ms",
+        "completion_wait_ms",
+        "unattributed_ms",
+    ]
+    .iter()
+    .map(|k| {
+        let v = t.req_f64(k).unwrap();
+        assert!(v >= 0.0, "{k} negative: {v}");
+        v
+    })
+    .sum();
+    // the breakdown decomposes the total (unattributed soaks up drift;
+    // tiny float slack from the %.3 wire rounding)
+    assert!((parts - total).abs() <= 0.01 * total.max(1.0), "{parts} vs {total}");
+    assert!(t.req_f64("execute_ms").unwrap() > 0.0, "sweep spent no execute time?");
+
+    handle.stop();
+}

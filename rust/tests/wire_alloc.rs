@@ -1,15 +1,20 @@
 //! Wire-layer allocation gate: a warm `predict` round trip through the
 //! serving wire path — streaming decode, cache-key construction, cache
-//! peek, typed response encode — must perform ZERO heap allocations.
+//! peek, observatory stage recording, typed response encode — must
+//! perform ZERO heap allocations.
 //!
 //! The test installs a counting `#[global_allocator]` (one binary, one
 //! test fn, so no concurrent test noise) and drives exactly the code the
 //! connection handler runs per line (`parse_line` → `PredictView` →
 //! `CacheKeyScratch::key` → `PredictionCache::peek` →
-//! `Response::encode_line`). Engine-side work (channel handoff, batch
-//! grouping) is out of scope by design: a *warm* predict is answered from
-//! the cache before any engine involvement, so this path IS the whole
-//! round trip for steady-state traffic.
+//! `Response::encode_line`), including the two `Obs::record_ns` calls the
+//! router makes per warm line (parse + warm-lookup stage histograms) —
+//! the latency observatory rides the hot path and must stay free too.
+//! Engine-side work (channel handoff, batch grouping) is out of scope by
+//! design: a *warm* predict is answered from the cache before any engine
+//! involvement, so this path IS the whole round trip for steady-state
+//! traffic. The allocating `metrics` snapshot op is exercised outside
+//! the measured windows (it is cold/monitoring traffic by contract).
 //!
 //! The registry epoch is woven into the cache key on this path (the
 //! router reads it off the snapshot — an atomic load plus an `Arc`
@@ -20,9 +25,11 @@
 
 use repro::advisor::{CacheKey, CacheKeyScratch, PredictionCache};
 use repro::coordinator::{parse_line, ParsedLine, Request, Response, WireScratch};
+use repro::obs::{Obs, OpClass, Stage, Temp};
 use repro::predictor::Member;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 struct CountingAlloc;
 
@@ -67,12 +74,16 @@ fn round_trip(
     wire: &mut WireScratch,
     keys: &mut CacheKeyScratch,
     cache: &PredictionCache,
+    obs: &Obs,
     out: &mut Vec<u8>,
 ) -> usize {
+    let t0 = Instant::now();
     let parsed = parse_line(line, wire).expect("valid predict line");
+    let parse_ns = t0.elapsed().as_nanos() as u64;
     let ParsedLine::Predict(view) = parsed else {
         panic!("expected a predict view");
     };
+    let lk0 = Instant::now();
     let key = keys.key(
         EPOCH,
         view.anchor,
@@ -81,6 +92,14 @@ fn round_trip(
         view.pairs(),
     );
     let (latency_ms, member) = cache.peek(&key).expect("warm cache must hit");
+    // the two histogram recordings the router makes on every warm hit
+    obs.record_ns(Stage::Parse, OpClass::Predict, Temp::Warm, parse_ns);
+    obs.record_ns(
+        Stage::WarmLookup,
+        OpClass::Predict,
+        Temp::Warm,
+        lk0.elapsed().as_nanos() as u64,
+    );
     let resp = Response::Prediction { latency_ms, member };
     resp.encode_line(out);
     out.len()
@@ -107,6 +126,9 @@ fn warm_predict_round_trip_is_zero_allocation() {
     let mut wire = WireScratch::default();
     let mut keys = CacheKeyScratch::default();
     let mut out = Vec::new();
+    // built before the measured windows: the shard histograms allocate
+    // once at construction, never on record
+    let obs = Obs::new(250.0, 1);
 
     // seed the cache through the owned-key constructor (what the engine
     // lane does on the cold miss), NOT through the scratch key — the
@@ -117,9 +139,10 @@ fn warm_predict_round_trip_is_zero_allocation() {
     let owned = CacheKey::of(EPOCH, req.anchor, req.target, req.anchor_latency_ms, &req.profile);
     cache.insert(owned, (123.456, Member::Forest));
 
-    // warm every buffer (scratch vecs, unescape string, out buffer)
+    // warm every buffer (scratch vecs, unescape string, out buffer) and
+    // the thread's observatory shard slot
     for _ in 0..3 {
-        assert!(round_trip(line, &mut wire, &mut keys, &cache, &mut out) > 0);
+        assert!(round_trip(line, &mut wire, &mut keys, &cache, &obs, &mut out) > 0);
     }
     let body = String::from_utf8(out.clone()).unwrap();
     assert!(body.contains("\"ok\":true"), "{body}");
@@ -132,7 +155,7 @@ fn warm_predict_round_trip_is_zero_allocation() {
     for _ in 0..3 {
         let before = allocs();
         for _ in 0..64 {
-            round_trip(line, &mut wire, &mut keys, &cache, &mut out);
+            round_trip(line, &mut wire, &mut keys, &cache, &obs, &mut out);
         }
         best = best.min(allocs() - before);
         if best == 0 {
@@ -141,12 +164,13 @@ fn warm_predict_round_trip_is_zero_allocation() {
     }
     assert_eq!(best, 0, "warm predict round trip allocated on the wire path");
 
-    warm_interpolation_and_inline_ops_are_zero_allocation();
+    warm_interpolation_and_inline_ops_are_zero_allocation(&obs);
+    metrics_round_trip_reports_the_recorded_stages(&obs);
 }
 
 /// Second phase, called from the single test fn (one test fn per binary
 /// keeps the measured windows free of concurrent-test allocations).
-fn warm_interpolation_and_inline_ops_are_zero_allocation() {
+fn warm_interpolation_and_inline_ops_are_zero_allocation(obs: &Obs) {
     let batch_line = r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.5}"#;
     let health_line = r#"{"op":"health"}"#;
     let mut wire = WireScratch::default();
@@ -155,15 +179,31 @@ fn warm_interpolation_and_inline_ops_are_zero_allocation() {
     let cycle = |wire: &mut WireScratch, out: &mut Vec<u8>| {
         // interpolation request: parse to the typed Request (no owned
         // payload), encode its reply shape
+        let t0 = Instant::now();
         match parse_line(batch_line, wire) {
             Ok(ParsedLine::Req(Request::PredictBatchSize { batch, .. })) => {
+                obs.record_ns(
+                    Stage::Parse,
+                    OpClass::Predict,
+                    Temp::Cold,
+                    t0.elapsed().as_nanos() as u64,
+                );
                 Response::Latency { latency_ms: batch as f64 }.encode_line(out);
             }
             other => panic!("unexpected parse: {:?}", other.is_ok()),
         }
-        // inline health round trip
+        // inline health round trip, parse stage recorded like the router
+        let t0 = Instant::now();
         match parse_line(health_line, wire) {
-            Ok(ParsedLine::Req(Request::Health)) => Response::Health.encode_line(out),
+            Ok(ParsedLine::Req(Request::Health)) => {
+                obs.record_ns(
+                    Stage::Parse,
+                    OpClass::Other,
+                    Temp::Cold,
+                    t0.elapsed().as_nanos() as u64,
+                );
+                Response::Health.encode_line(out)
+            }
             other => panic!("unexpected parse: {:?}", other.is_ok()),
         }
     };
@@ -183,4 +223,30 @@ fn warm_interpolation_and_inline_ops_are_zero_allocation() {
         }
     }
     assert_eq!(best, 0, "warm interpolation/inline ops allocated on the wire path");
+}
+
+/// Outside the measured windows: the `metrics` op parses on the shared
+/// wire path and its reply (built over everything the loops above
+/// recorded) encodes to well-formed JSON with the warm cells present.
+/// This op allocates by contract — no counter assertions here.
+fn metrics_round_trip_reports_the_recorded_stages(obs: &Obs) {
+    let mut wire = WireScratch::default();
+    match parse_line(r#"{"op":"metrics"}"#, &mut wire) {
+        Ok(ParsedLine::Req(Request::Metrics)) => {}
+        other => panic!("metrics line did not parse: {:?}", other.is_ok()),
+    }
+    let snap = repro::obs::MetricsSnapshot {
+        uptime_s: obs.uptime_s(),
+        gauges: vec![("requests", 0.0)],
+        stages: obs.stage_summaries(),
+        slow: obs.slow_traces(),
+    };
+    let mut out = Vec::new();
+    Response::Metrics(Box::new(snap)).encode_line(&mut out);
+    let body = String::from_utf8(out).unwrap();
+    assert!(body.contains("\"ok\":true"), "{body}");
+    assert!(body.contains("\"stage\":\"parse\""), "{body}");
+    assert!(body.contains("\"stage\":\"warm_lookup\""), "{body}");
+    assert!(body.contains("\"temp\":\"warm\""), "{body}");
+    repro::util::Json::parse(body.trim()).expect("metrics reply must be valid JSON");
 }
