@@ -40,6 +40,13 @@ cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps
 echo "== loadgen smoke (server boot + strict burst) =="
 ../ci/loadgen_smoke.sh
 
+# invariant linter, hard gate: hot-path allocations, reactor blocking
+# calls, unsafe/atomic hygiene, protocol doc drift — findings name the
+# exact file:line and rule (see docs/ANALYSIS.md for the catalogue and
+# the allowlist syntax)
+echo "== repro lint (static analysis) =="
+target/release/repro lint
+
 # rustdoc gate: module docs, doc-examples, and intra-doc links must stay
 # warning-clean (broken links rot silently otherwise)
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="

@@ -269,6 +269,8 @@ impl PredictionCache {
     /// Look up a prediction, counting the outcome in `stats`.
     pub fn get(&self, key: &CacheKey, stats: &CacheStats) -> Option<(f64, Member)> {
         let got = self.shard_of(key).lock().unwrap().map.get(key).copied();
+        // ordering: hit/miss tallies are stats-only monotonic counters read
+        // by the metrics snapshot; they order nothing.
         match got {
             Some(_) => stats.hits.fetch_add(1, Ordering::Relaxed),
             None => stats.misses.fetch_add(1, Ordering::Relaxed),

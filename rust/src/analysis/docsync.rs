@@ -1,0 +1,462 @@
+//! Protocol ↔ documentation consistency checker (`doc-drift` rule).
+//!
+//! The wire reference (`docs/PROTOCOL.md`) makes enumerable claims —
+//! the op table, the error-kind table, the `stats`/`metrics` field
+//! lists, the stage taxonomy — that silently rot as the code moves.
+//! This module extracts the same enumerations from the *sources*
+//! (string literals located via the masked lexical scan, so comments
+//! and unrelated strings cannot contaminate them) and cross-checks:
+//!
+//! | enumeration | code source | doc anchor | direction |
+//! |---|---|---|---|
+//! | op names | `protocol.rs` `"…" => Op::…` match | `## Ops` table + `### <op>` headings | both |
+//! | error kinds | `ParseError::kind()` arms + every literal `err_kind("…")` call site | `## Error kinds` table | both |
+//! | `stats` fields | `w.key("…")` calls in the `Response::Stats` encode arm | `### stats` response example | both |
+//! | `metrics` gauges | the `gauges = vec![…]` table in `router.rs` | `"gauges":{…}` in the `### metrics` example | both |
+//! | `metrics` fields | `w.key("…")` calls in the `Response::Metrics` encode arm | `### metrics` section text | code → doc |
+//! | stage names | `Stage::… => "…"` arms in `obs/mod.rs` | `### metrics` section text | code → doc |
+//!
+//! Any mismatch is a hard `doc-drift` finding pointing at the doc
+//! section (the doc is what gets edited either way: add the missing
+//! row or drop the stale one).
+
+use super::lexer::Scan;
+use super::rules::{Finding, RULE_DOC_DRIFT};
+use std::collections::BTreeSet;
+
+/// Everything extracted from the sources that the doc must agree with.
+#[derive(Debug, Default)]
+pub struct CodeInventory {
+    pub ops: BTreeSet<String>,
+    pub error_kinds: BTreeSet<String>,
+    pub stats_keys: BTreeSet<String>,
+    pub metrics_keys: BTreeSet<String>,
+    pub gauges: BTreeSet<String>,
+    pub stages: BTreeSet<String>,
+}
+
+/// Is `line` (1-based) inside a `#[cfg(test)]` item? Callers pass the
+/// per-file test mask computed by the rules engine.
+type TestMask<'a> = &'a dyn Fn(usize) -> bool;
+
+fn line_of(masked: &str, pos: usize) -> usize {
+    masked.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+fn masked_line(masked: &str, line: usize) -> &str {
+    masked.split('\n').nth(line.wrapping_sub(1)).unwrap_or("")
+}
+
+/// Op names: string literals on non-test lines of `protocol.rs` whose
+/// masked text contains a `=> Op::` match arm.
+pub fn ops_in_code(protocol: &Scan, in_test: TestMask) -> BTreeSet<String> {
+    protocol
+        .strings
+        .iter()
+        .filter(|l| !in_test(l.line) && masked_line(&protocol.masked, l.line).contains("=> Op::"))
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+/// Stage names: literals on `Stage::… => "…"` arms of `obs/mod.rs`.
+pub fn stages_in_code(obs: &Scan, in_test: TestMask) -> BTreeSet<String> {
+    obs.strings
+        .iter()
+        .filter(|l| {
+            let ml = masked_line(&obs.masked, l.line);
+            !in_test(l.line) && ml.contains("Stage::") && ml.contains("=>")
+        })
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+/// Error kinds from one file: `ParseError::… => "…"` arms (the parser's
+/// own `kind()` table — the literal must directly follow `=>`, which
+/// excludes `Display` arms like `… => write!(f, "…")`) plus the first
+/// literal argument of every `err_kind(` call site. A non-literal first
+/// argument (e.g. `err_kind(e.kind(), …)`) contributes nothing: the
+/// literal must follow the call with only whitespace and the opening
+/// quote in between.
+pub fn error_kinds_in_code(scan: &Scan, in_test: TestMask, out: &mut BTreeSet<String>) {
+    for l in &scan.strings {
+        if in_test(l.line) || l.start == 0 {
+            continue;
+        }
+        let ml = masked_line(&scan.masked, l.line);
+        if ml.contains("ParseError::")
+            && scan.masked[..l.start - 1].trim_end().ends_with("=>")
+        {
+            out.insert(l.text.clone());
+        }
+    }
+    for (pos, _) in scan.masked.match_indices("err_kind(") {
+        let call_end = pos + "err_kind(".len();
+        if in_test(line_of(&scan.masked, pos)) {
+            continue;
+        }
+        if let Some(lit) = scan.strings.iter().find(|l| l.start > call_end) {
+            let between = &scan.masked[call_end..lit.start.min(scan.masked.len())];
+            if between.chars().all(|c| c.is_whitespace() || c == '"') {
+                out.insert(lit.text.clone());
+            }
+        }
+    }
+}
+
+/// `w.key("…")` literals between the `anchor` occurrence (e.g.
+/// `Response::Stats`) and the next `Response::` token — i.e. the keys
+/// one encode arm emits.
+pub fn keys_in_encode_arm(scan: &Scan, anchor: &str, in_test: TestMask) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for (pos, _) in scan.masked.match_indices(anchor) {
+        if in_test(line_of(&scan.masked, pos)) {
+            continue;
+        }
+        let start = pos + anchor.len();
+        let end = scan.masked[start..]
+            .find("Response::")
+            .map_or(scan.masked.len(), |p| start + p);
+        for l in &scan.strings {
+            if l.start > start
+                && l.start < end
+                && l.start >= 1
+                && scan.masked[..l.start - 1].ends_with(".key(")
+            {
+                out.insert(l.text.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Gauge names: every literal inside the `gauges = vec![ … ];` table.
+pub fn gauges_in_code(router: &Scan, in_test: TestMask) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for (pos, _) in router.masked.match_indices("gauges = vec![") {
+        if in_test(line_of(&router.masked, pos)) {
+            continue;
+        }
+        let end = router.masked[pos..].find("];").map_or(router.masked.len(), |p| pos + p);
+        for l in &router.strings {
+            if l.start > pos && l.start < end {
+                out.insert(l.text.clone());
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Markdown side
+// ---------------------------------------------------------------------
+
+/// A `#`-heading section of the doc: (1-based heading line, body text
+/// from the heading to the next heading of the same or higher level).
+pub fn md_section(doc: &str, heading: &str) -> Option<(usize, String)> {
+    let level = heading.bytes().take_while(|&b| b == b'#').count();
+    let lines: Vec<&str> = doc.split('\n').collect();
+    let start = lines.iter().position(|l| l.trim_end() == heading)?;
+    let mut body = String::new();
+    for l in &lines[start + 1..] {
+        let hashes = l.bytes().take_while(|&b| b == b'#').count();
+        if hashes > 0 && hashes <= level && l.as_bytes().get(hashes) == Some(&b' ') {
+            break;
+        }
+        body.push_str(l);
+        body.push('\n');
+    }
+    Some((start + 1, body))
+}
+
+/// First-column backticked tokens of a markdown table: rows look like
+/// ``| [`name`](#anchor) | …`` or ``| `name` | …``.
+pub fn md_table_tokens(section: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in section.split('\n') {
+        let t = line.trim_start();
+        if !t.starts_with("| [`") && !t.starts_with("| `") {
+            continue;
+        }
+        let after = &t[t.find('`').map(|p| p + 1).unwrap_or(t.len())..];
+        if let Some(end) = after.find('`') {
+            out.insert(after[..end].to_string());
+        }
+    }
+    out
+}
+
+/// Fenced code blocks (``` … ```), in order.
+pub fn md_code_blocks(section: &str) -> Vec<String> {
+    let mut blocks = Vec::new();
+    let mut cur: Option<String> = None;
+    for line in section.split('\n') {
+        if line.trim_start().starts_with("```") {
+            match cur.take() {
+                Some(b) => blocks.push(b),
+                None => cur = Some(String::new()),
+            }
+            continue;
+        }
+        if let Some(b) = cur.as_mut() {
+            b.push_str(line);
+            b.push('\n');
+        }
+    }
+    blocks
+}
+
+/// `"ident":` keys of a JSON-ish example text.
+pub fn json_example_keys(block: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let b = block.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            if let Some(close) = block[i + 1..].find('"') {
+                let name = &block[i + 1..i + 1 + close];
+                let rest = &b[i + 1 + close + 1..];
+                if rest.first() == Some(&b':')
+                    && !name.is_empty()
+                    && name.bytes().all(|c| c.is_ascii_lowercase() || c == b'_' || c.is_ascii_digit())
+                {
+                    out.insert(name.to_string());
+                }
+                i += close + 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The response example keys of an op section: the union of every
+/// fenced block that is *not* the request (requests carry `"op":`).
+fn response_example_keys(section: &str) -> BTreeSet<String> {
+    md_code_blocks(section)
+        .iter()
+        .filter(|b| !b.contains("\"op\":"))
+        .flat_map(|b| json_example_keys(b))
+        .collect()
+}
+
+fn drift(doc_file: &str, line: usize, msg: String) -> Finding {
+    Finding {
+        file: doc_file.to_string(),
+        line,
+        rule: RULE_DOC_DRIFT,
+        message: msg,
+        snippet: String::new(),
+        advisory: false,
+    }
+}
+
+fn compare_sets(
+    what: &str,
+    code: &BTreeSet<String>,
+    doc: &BTreeSet<String>,
+    doc_file: &str,
+    line: usize,
+    findings: &mut Vec<Finding>,
+) {
+    for missing in code.difference(doc) {
+        findings.push(drift(
+            doc_file,
+            line,
+            format!("{what}: code has `{missing}` but the doc does not list it"),
+        ));
+    }
+    for stale in doc.difference(code) {
+        findings.push(drift(
+            doc_file,
+            line,
+            format!("{what}: doc lists `{stale}` but the code does not produce it"),
+        ));
+    }
+}
+
+/// Cross-check one [`CodeInventory`] against the protocol doc text.
+pub fn check_doc(
+    inv: &CodeInventory,
+    doc: &str,
+    doc_file: &str,
+    findings: &mut Vec<Finding>,
+) {
+    // ops table + per-op section headings
+    match md_section(doc, "## Ops") {
+        Some((line, body)) => {
+            compare_sets("op table", &inv.ops, &md_table_tokens(&body), doc_file, line, findings);
+        }
+        None => findings.push(drift(doc_file, 1, "missing `## Ops` section".into())),
+    }
+    for op in &inv.ops {
+        if md_section(doc, &format!("### {op}")).is_none() {
+            findings.push(drift(doc_file, 1, format!("op `{op}` has no `### {op}` section")));
+        }
+    }
+
+    // error kinds
+    match md_section(doc, "## Error kinds") {
+        Some((line, body)) => compare_sets(
+            "error-kind table",
+            &inv.error_kinds,
+            &md_table_tokens(&body),
+            doc_file,
+            line,
+            findings,
+        ),
+        None => findings.push(drift(doc_file, 1, "missing `## Error kinds` section".into())),
+    }
+
+    // stats response fields
+    if let Some((line, body)) = md_section(doc, "### stats") {
+        compare_sets(
+            "stats fields",
+            &inv.stats_keys,
+            &response_example_keys(&body),
+            doc_file,
+            line,
+            findings,
+        );
+    }
+
+    // metrics: gauges exactly, other emitted keys + stage names by mention
+    if let Some((line, body)) = md_section(doc, "### metrics") {
+        let doc_gauges: BTreeSet<String> = body
+            .find("\"gauges\":{")
+            .map(|p| {
+                let after = &body[p + "\"gauges\":{".len()..];
+                let end = after.find('}').unwrap_or(after.len());
+                json_example_keys(&after[..end])
+            })
+            .unwrap_or_default();
+        compare_sets("metrics gauges", &inv.gauges, &doc_gauges, doc_file, line, findings);
+        for key in &inv.metrics_keys {
+            if key == "gauges" || doc_gauges.contains(key) {
+                continue;
+            }
+            if !body.contains(&format!("\"{key}\"")) && !body.contains(&format!("`{key}`")) {
+                findings.push(drift(
+                    doc_file,
+                    line,
+                    format!("metrics fields: code emits `{key}` but the section never mentions it"),
+                ));
+            }
+        }
+        for stage in &inv.stages {
+            if !body.contains(&format!("`{stage}`")) {
+                findings.push(drift(
+                    doc_file,
+                    line,
+                    format!("stage taxonomy: code records stage `{stage}` but the section never mentions it"),
+                ));
+            }
+        }
+    } else {
+        findings.push(drift(doc_file, 1, "missing `### metrics` section".into()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scan;
+
+    fn never_test(_: usize) -> bool {
+        false
+    }
+
+    #[test]
+    fn extracts_ops_error_kinds_and_keys() {
+        let src = r#"
+fn parse(op: &str) {
+    let op = match op {
+        "health" => Op::Health,
+        "predict" => Op::Predict,
+        other => return Err(ParseError::UnknownOp(other.to_string())),
+    };
+}
+impl ParseError {
+    fn kind(&self) -> &'static str {
+        match self {
+            ParseError::UnknownOp(_) => "unknown_op",
+            ParseError::Malformed(_) => "bad_request",
+        }
+    }
+}
+fn encode(w: &mut W) {
+    match self {
+        Response::Stats { .. } => {
+            w.key("ok").bool_(true);
+            w.key("requests").num(1.0);
+        }
+        Response::Err { .. } => {
+            w.key("error").str_("x");
+        }
+    }
+    let e = Response::err_kind(
+        "overloaded",
+        format!("queue full"),
+    );
+    let f = Response::err_kind(e.kind(), format!("bad request"));
+}
+"#;
+        let s = scan(src);
+        let ops = ops_in_code(&s, &never_test);
+        assert_eq!(ops, ["health", "predict"].iter().map(|s| s.to_string()).collect());
+        let mut kinds = std::collections::BTreeSet::new();
+        error_kinds_in_code(&s, &never_test, &mut kinds);
+        assert_eq!(
+            kinds,
+            ["unknown_op", "bad_request", "overloaded"].iter().map(|s| s.to_string()).collect(),
+            "literal-first err_kind only — `e.kind()` site contributes nothing"
+        );
+        let keys = keys_in_encode_arm(&s, "Response::Stats", &never_test);
+        assert_eq!(keys, ["ok", "requests"].iter().map(|s| s.to_string()).collect());
+    }
+
+    #[test]
+    fn markdown_tables_sections_and_examples() {
+        let doc = "# P\n\n## Ops\n\n| op | x |\n|---|---|\n| [`health`](#health) | h |\n| [`predict`](#predict) | p |\n\n### health\n\n```json\n{\"op\":\"health\"}\n```\n```json\n{\"ok\":true,\"status\":\"healthy\"}\n```\n\n### predict\n\nbody\n\n## Error kinds\n\n| kind | m |\n|---|---|\n| `bad_request` | b |\n";
+        let (line, ops_body) = md_section(doc, "## Ops").unwrap();
+        assert_eq!(line, 3);
+        assert_eq!(
+            md_table_tokens(&ops_body),
+            ["health", "predict"].iter().map(|s| s.to_string()).collect()
+        );
+        // section body stops at the next ## — it still includes ### subsections
+        assert!(ops_body.contains("### health"));
+        let (_, health) = md_section(doc, "### health").unwrap();
+        let blocks = md_code_blocks(&health);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(
+            json_example_keys(&blocks[1]),
+            ["ok", "status"].iter().map(|s| s.to_string()).collect()
+        );
+    }
+
+    #[test]
+    fn drift_is_detected_in_both_directions() {
+        let mut inv = CodeInventory::default();
+        inv.ops.insert("health".into());
+        inv.ops.insert("brand_new_op".into());
+        let doc = "## Ops\n\n| [`health`](#health) | h |\n| [`removed_op`](#removed_op) | r |\n\n### health\n\n## Error kinds\n\n### metrics\n\nx\n";
+        let mut findings = Vec::new();
+        check_doc(&inv, doc, "docs/PROTOCOL.md", &mut findings);
+        assert!(
+            findings.iter().any(|f| f.message.contains("`brand_new_op`")
+                && f.message.contains("doc does not list")),
+            "{findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.message.contains("`removed_op`")
+                && f.message.contains("code does not produce")),
+            "{findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.message.contains("no `### brand_new_op` section")),
+            "{findings:?}"
+        );
+        assert!(findings.iter().all(|f| f.rule == RULE_DOC_DRIFT && f.file == "docs/PROTOCOL.md"));
+    }
+}

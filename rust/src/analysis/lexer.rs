@@ -1,0 +1,294 @@
+//! String/comment-aware lexical scan for the invariant linter.
+//!
+//! [`scan`] walks a Rust source file once and produces a [`Scan`]:
+//!
+//! * `masked` — a byte-for-byte copy of the source where every comment
+//!   and every string/char-literal *body* is replaced with spaces
+//!   (newlines preserved). Token searches over `masked` can therefore
+//!   never be fooled by a forbidden token living inside a string
+//!   literal or a comment — the same trick the repo's balance-scan
+//!   syntax checker uses.
+//! * `strings` — every string literal (regular, raw, byte) with its
+//!   line, the byte offset of its first content byte in the original
+//!   source, and its raw (unescaped-as-written) content. The doc-drift
+//!   checker reads op names, error kinds, and field names out of these.
+//! * `comments` — one entry **per source line** of every comment (line
+//!   comments, doc comments, and each line of a block comment), so rule
+//!   code can ask "does line N carry a comment containing X" without
+//!   re-lexing.
+//!
+//! The lexer understands: `//`/`///`/`//!` line comments, nested `/* */`
+//! block comments, `"…"` strings with escapes, raw strings `r"…"` /
+//! `r#"…"#` (any hash count) and their byte twins `br#"…"#`, byte
+//! strings `b"…"`, char literals `'a'` / `'\n'` / `'\u{1F600}'`, and
+//! lifetimes (`'a`, which must *not* be consumed as an unterminated
+//! char literal). That is everything the crate's own sources use; the
+//! linter only ever runs over this repository.
+
+/// One string literal: `line` is 1-based, `start` is the byte offset of
+/// the first *content* byte (just past the opening quote) in the
+/// original source, `text` is the content as written (escapes not
+/// processed — op names and JSON keys never contain escapes).
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    pub line: usize,
+    pub start: usize,
+    pub text: String,
+}
+
+/// One source line's worth of comment text (`//` markers and `/*`/`*/`
+/// delimiters stripped from the recorded text's edges, interior kept).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Result of lexing one file. See the module docs for the fields.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub masked: String,
+    pub strings: Vec<StrLit>,
+    pub comments: Vec<Comment>,
+}
+
+/// `true` for bytes that can continue a Rust identifier — used to give
+/// plain-substring token searches word boundaries.
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` (see module docs). Never fails: unterminated constructs
+/// simply run to end-of-file, which is fine for a linter that only runs
+/// over sources the compiler also accepts.
+pub fn scan(src: &str) -> Scan {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut masked = Vec::with_capacity(n);
+    let mut strings = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push one comment entry per line of `text` starting at `start_line`.
+    let mut push_comment = |start_line: usize, text: &str| {
+        for (k, part) in text.split('\n').enumerate() {
+            let t = part.trim();
+            let t = t.strip_prefix("/*").unwrap_or(t);
+            let t = t.strip_suffix("*/").unwrap_or(t);
+            let t = t.trim_start_matches('/').trim_start_matches('!').trim();
+            let t = t.strip_prefix('*').unwrap_or(t).trim();
+            comments.push(Comment { line: start_line + k, text: t.to_string() });
+        }
+    };
+
+    // Copy `len` bytes verbatim into masked, tracking newlines.
+    macro_rules! copy {
+        ($len:expr) => {{
+            let l = $len;
+            for _ in 0..l {
+                if bytes[i] == b'\n' {
+                    line += 1;
+                }
+                masked.push(bytes[i]);
+                i += 1;
+            }
+        }};
+    }
+    // Blank `len` bytes (newlines preserved), tracking newlines.
+    macro_rules! blank {
+        ($len:expr) => {{
+            let l = $len;
+            for _ in 0..l {
+                if bytes[i] == b'\n' {
+                    line += 1;
+                    masked.push(b'\n');
+                } else {
+                    masked.push(b' ');
+                }
+                i += 1;
+            }
+        }};
+    }
+
+    while i < n {
+        let b = bytes[i];
+        // line comment
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let end = bytes[i..].iter().position(|&c| c == b'\n').map_or(n, |p| i + p);
+            push_comment(line, &src[i..end]);
+            blank!(end - i);
+            continue;
+        }
+        // block comment (nested)
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < n {
+                if bytes[j] == b'/' && j + 1 < n && bytes[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if bytes[j] == b'*' && j + 1 < n && bytes[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            push_comment(start_line, &src[start..j.min(n)]);
+            blank!(j.min(n) - i);
+            continue;
+        }
+        // raw string r"…" / r#"…"# / br#"…"# (only when `r` starts a token)
+        if (b == b'r' || (b == b'b' && i + 1 < n && bytes[i + 1] == b'r'))
+            && (i == 0 || !is_ident_byte(bytes[i - 1]))
+        {
+            let mut j = i + if b == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && bytes[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && bytes[j] == b'"' {
+                // find closing `"` + `hashes` hashes
+                let body_start = j + 1;
+                let mut k = body_start;
+                let close = loop {
+                    if k >= n {
+                        break n;
+                    }
+                    if bytes[k] == b'"' && bytes[k + 1..].iter().take(hashes).filter(|&&c| c == b'#').count() == hashes {
+                        break k;
+                    }
+                    k += 1;
+                };
+                strings.push(StrLit {
+                    line: line + src[i..body_start].matches('\n').count(),
+                    start: body_start,
+                    text: src[body_start..close].to_string(),
+                });
+                copy!(body_start - i); // prefix + opening quote stay visible
+                blank!(close.min(n) - body_start);
+                // closing quote + hashes
+                copy!((close + 1 + hashes).min(n) - close.min(n));
+                continue;
+            }
+            // not a raw string — fall through as a normal identifier char
+        }
+        // string literal (also reached for the `"` of b"…")
+        if b == b'"' {
+            let body_start = i + 1;
+            let mut j = body_start;
+            while j < n {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    _ => j += 1,
+                }
+            }
+            strings.push(StrLit {
+                line,
+                start: body_start,
+                text: src[body_start..j.min(n)].to_string(),
+            });
+            copy!(1); // opening quote
+            blank!(j.min(n) - body_start);
+            if i < n {
+                copy!(1); // closing quote
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if b == b'\'' {
+            // 'x' or '\…' is a char literal; anything else ('a, 'static,
+            // '_) is a lifetime and the quote passes through untouched
+            let is_char = if i + 1 < n && bytes[i + 1] == b'\\' {
+                true
+            } else {
+                i + 2 < n && bytes[i + 2] == b'\''
+            };
+            if is_char {
+                let mut j = i + 1;
+                while j < n {
+                    match bytes[j] {
+                        b'\\' => j += 2,
+                        b'\'' => break,
+                        _ => j += 1,
+                    }
+                }
+                copy!(1); // opening quote
+                blank!(j.min(n) - (i));
+                if i < n {
+                    copy!(1); // closing quote
+                }
+                continue;
+            }
+        }
+        copy!(1);
+    }
+
+    Scan {
+        masked: String::from_utf8(masked).expect("masking preserves UTF-8 boundaries"),
+        strings,
+        comments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments_but_not_code() {
+        let src = r#"
+fn f() {
+    let a = "format!(inside a string)"; // format! in a comment
+    let b = format!("real");
+}
+"#;
+        let s = scan(src);
+        assert_eq!(s.masked.len(), src.len());
+        // the real macro call survives in masked text
+        assert!(s.masked.contains("format!("));
+        // exactly once: the string body and the comment are blanked
+        assert_eq!(s.masked.matches("format!").count(), 1);
+        assert_eq!(s.strings.len(), 2);
+        assert_eq!(s.strings[0].text, "format!(inside a string)");
+        assert!(s.comments.iter().any(|c| c.text.contains("format! in a comment")));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let src = "fn g<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; let r = r#\"vec![\"#; }";
+        let s = scan(src);
+        assert!(!s.masked.contains("vec!"), "raw string body must be blanked");
+        assert!(s.masked.contains("<'a>"), "lifetime must survive");
+        assert_eq!(s.strings.iter().filter(|l| l.text == "vec![").count(), 1);
+        assert_eq!(s.masked.len(), src.len());
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline() {
+        let src = "a /* outer /* inner */ still */ b\n/* l1\n l2 */ c";
+        let s = scan(src);
+        assert!(s.masked.contains('a') && s.masked.contains('b') && s.masked.contains('c'));
+        assert!(!s.masked.contains("inner") && !s.masked.contains("still"));
+        // multiline block comment yields one entry per line
+        assert!(s.comments.iter().any(|c| c.line == 2 && c.text.contains("l1")));
+        assert!(s.comments.iter().any(|c| c.line == 3 && c.text.contains("l2")));
+    }
+
+    #[test]
+    fn string_line_and_offset_are_exact() {
+        let src = "let x = 1;\nlet op = \"predict\";\n";
+        let s = scan(src);
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].line, 2);
+        assert_eq!(&src[s.strings[0].start..s.strings[0].start + 7], "predict");
+    }
+}

@@ -1,0 +1,271 @@
+//! In-repo invariant linter (`repro lint`).
+//!
+//! The serving stack makes promises the type system cannot state: the
+//! wire path allocates nothing ([`crate::util::json_stream`]), reactor
+//! threads never block ([`crate::coordinator::reactor`]), every
+//! `unsafe` and every relaxed atomic is justified in prose, and
+//! `docs/PROTOCOL.md` lists exactly the ops/error kinds/fields the code
+//! ships. This module is a dependency-free static-analysis engine that
+//! machine-checks those promises on every CI run, complementing the
+//! runtime gates (`tests/wire_alloc.rs`, the stress harness).
+//!
+//! Architecture, bottom-up:
+//!
+//! * [`lexer`] — one-pass string/comment-aware scan producing masked
+//!   text (so tokens inside literals/comments can never trip a rule)
+//!   plus string-literal and comment tables.
+//! * [`rules`] — the five per-file rules (`hot-path-alloc`,
+//!   `reactor-blocking-call`, `unsafe-hygiene`, `relaxed-ordering`,
+//!   advisory `unwrap-in-server`) and the `// lint: allow(…)`
+//!   annotation machinery, itself checked by the `lint-annotation`
+//!   meta-rule.
+//! * [`docsync`] — the cross-file `doc-drift` rule: protocol/obs
+//!   enumerations extracted from source string literals, cross-checked
+//!   against `docs/PROTOCOL.md`.
+//! * this module — source discovery, orchestration, and the three
+//!   output forms: human text, machine JSON (`--json`), and the
+//!   committed allowlist audit (`--audit`, pasted into
+//!   `docs/ANALYSIS.md`).
+//!
+//! Hard findings fail `repro lint` (exit 1); advisory findings are
+//! printed but do not. See `docs/ANALYSIS.md` for the rule catalogue.
+
+pub mod docsync;
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::Json;
+use docsync::CodeInventory;
+use rules::{check_file, Allowance, FileCtx, Finding};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Everything one lint run produced.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Files scanned, as `rust/`-relative paths (e.g. `src/lib.rs`).
+    pub files: Vec<String>,
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// All allowlisted sites (annotations + builtin allowances), sorted.
+    pub allowances: Vec<Allowance>,
+}
+
+impl Report {
+    pub fn hard_count(&self) -> usize {
+        self.findings.iter().filter(|f| !f.advisory).count()
+    }
+
+    pub fn advisory_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.advisory).count()
+    }
+
+    /// Human-readable rendering: one block per finding plus a summary
+    /// trailer.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let tag = if f.advisory { " (advisory)" } else { "" };
+            out.push_str(&format!("{}:{} [{}]{} {}\n", f.file, f.line, f.rule, tag, f.message));
+            if !f.snippet.is_empty() {
+                out.push_str(&format!("    {}\n", f.snippet));
+            }
+        }
+        out.push_str(&format!(
+            "lint: {} files scanned, {} hard finding(s), {} advisory finding(s), \
+             {} allowlisted site(s)\n",
+            self.files.len(),
+            self.hard_count(),
+            self.advisory_count(),
+            self.allowances.len(),
+        ));
+        out
+    }
+
+    /// Machine-readable rendering (`repro lint --json`).
+    pub fn to_json(&self) -> String {
+        let mut root = Json::obj();
+        root.set("files_scanned", Json::Num(self.files.len() as f64))
+            .set("hard_findings", Json::Num(self.hard_count() as f64))
+            .set("advisory_findings", Json::Num(self.advisory_count() as f64));
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("file", Json::Str(f.file.clone()))
+                    .set("line", Json::Num(f.line as f64))
+                    .set("rule", Json::Str(f.rule.to_string()))
+                    .set("advisory", Json::Bool(f.advisory))
+                    .set("message", Json::Str(f.message.clone()))
+                    .set("snippet", Json::Str(f.snippet.clone()));
+                o
+            })
+            .collect();
+        root.set("findings", Json::Arr(findings));
+        let allows = self
+            .allowances
+            .iter()
+            .map(|a| {
+                let mut o = Json::obj();
+                o.set("file", Json::Str(a.file.clone()))
+                    .set("line", Json::Num(a.line as f64))
+                    .set("rule", Json::Str(a.rule.clone()))
+                    .set("reason", Json::Str(a.reason.clone()));
+                o
+            })
+            .collect();
+        root.set("allowances", Json::Arr(allows));
+        root.to_string()
+    }
+
+    /// The allowlist audit table (`repro lint --audit`) — the markdown
+    /// committed in `docs/ANALYSIS.md` §Allowlist audit is regenerated
+    /// from this verbatim.
+    pub fn render_audit(&self) -> String {
+        let mut out = String::from("| file | line | rule | reason |\n|---|---:|---|---|\n");
+        for a in &self.allowances {
+            out.push_str(&format!(
+                "| `{}` | {} | `{}` | {} |\n",
+                a.file, a.line, a.rule, a.reason
+            ));
+        }
+        out
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, as `rust/`-relative
+/// forward-slash paths, sorted for deterministic output.
+fn collect_rs(rust_root: &Path, dir: &str, out: &mut Vec<String>) {
+    fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) {
+        let Ok(entries) = fs::read_dir(dir) else { return };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                walk(base, &p, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                if let Ok(rel) = p.strip_prefix(base) {
+                    out.push(rel.to_string_lossy().replace('\\', "/"));
+                }
+            }
+        }
+    }
+    walk(rust_root, &rust_root.join(dir), out);
+    out.sort();
+}
+
+/// The sources the doc-drift checker reads its enumerations from.
+const PROTOCOL_SRC: &str = "src/coordinator/protocol.rs";
+const ROUTER_SRC: &str = "src/coordinator/router.rs";
+const OBS_SRC: &str = "src/obs/mod.rs";
+const DOC_FILE: &str = "docs/PROTOCOL.md";
+
+/// Build the code-side inventory for the doc-drift check from the
+/// already-lexed file contexts.
+fn build_inventory(ctxs: &[(String, FileCtx)]) -> CodeInventory {
+    let mut inv = CodeInventory::default();
+    for (path, ctx) in ctxs {
+        let in_test = |l: usize| ctx.in_test(l);
+        // error kinds come from every coordinator file that can emit an
+        // error response (reactor, router, server, lane, protocol)
+        if path.starts_with("src/coordinator/") {
+            docsync::error_kinds_in_code(&ctx.scan, &in_test, &mut inv.error_kinds);
+        }
+        if path == PROTOCOL_SRC {
+            inv.ops = docsync::ops_in_code(&ctx.scan, &in_test);
+            inv.stats_keys = docsync::keys_in_encode_arm(&ctx.scan, "Response::Stats", &in_test);
+            inv.metrics_keys =
+                docsync::keys_in_encode_arm(&ctx.scan, "Response::Metrics", &in_test);
+        }
+        if path == ROUTER_SRC {
+            inv.gauges = docsync::gauges_in_code(&ctx.scan, &in_test);
+        }
+        if path == OBS_SRC {
+            inv.stages = docsync::stages_in_code(&ctx.scan, &in_test);
+        }
+    }
+    inv
+}
+
+/// Run the full lint over the repo rooted at `repo_root` (the directory
+/// holding `rust/` and `docs/`).
+pub fn run(repo_root: &Path) -> std::io::Result<Report> {
+    let rust_root = repo_root.join("rust");
+    let mut files = Vec::new();
+    for dir in ["src", "tests", "benches"] {
+        collect_rs(&rust_root, dir, &mut files);
+    }
+    files.sort();
+    files.dedup();
+
+    let mut findings = Vec::new();
+    let mut allowances = Vec::new();
+    let mut ctxs: Vec<(String, FileCtx)> = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(rust_root.join(path))?;
+        let ctx = check_file(path, &src, &mut findings);
+        allowances.extend(ctx.allowances.iter().cloned());
+        ctxs.push((path.clone(), ctx));
+    }
+
+    let inv = build_inventory(&ctxs);
+    let doc_path: PathBuf = repo_root.join(DOC_FILE);
+    match fs::read_to_string(&doc_path) {
+        Ok(doc) => docsync::check_doc(&inv, &doc, DOC_FILE, &mut findings),
+        Err(e) => findings.push(Finding {
+            file: DOC_FILE.to_string(),
+            line: 1,
+            rule: rules::RULE_DOC_DRIFT,
+            message: format!("cannot read protocol doc: {e}"),
+            snippet: String::new(),
+            advisory: false,
+        }),
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    allowances.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+
+    Ok(Report { files, findings, allowances })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_all_three_forms() {
+        let report = Report {
+            files: vec!["src/a.rs".into()],
+            findings: vec![Finding {
+                file: "src/a.rs".into(),
+                line: 3,
+                rule: rules::RULE_ALLOC,
+                message: "boom".into(),
+                snippet: "let v = Vec::new();".into(),
+                advisory: false,
+            }],
+            allowances: vec![Allowance {
+                file: "src/b.rs".into(),
+                line: 9,
+                rule: rules::RULE_BLOCK.into(),
+                reason: "poller wait".into(),
+            }],
+        };
+        let text = report.render_text();
+        assert!(text.contains("src/a.rs:3 [hot-path-alloc] boom"));
+        assert!(text.contains("1 hard finding(s)"));
+        let json = Json::parse(&report.to_json()).expect("valid json");
+        assert_eq!(json.req_usize("hard_findings").unwrap(), 1);
+        assert_eq!(json.req_arr("findings").unwrap().len(), 1);
+        assert_eq!(
+            json.req_arr("allowances").unwrap()[0].req_str("reason").unwrap(),
+            "poller wait"
+        );
+        let audit = report.render_audit();
+        assert!(audit.contains("| `src/b.rs` | 9 | `reactor-blocking-call` | poller wait |"));
+    }
+}

@@ -1,0 +1,645 @@
+//! The invariant rules and their annotation/allowlist machinery.
+//!
+//! Every rule is named, and every rule can be silenced at a specific
+//! site with an inline annotation comment (the committed audit of all
+//! annotations lives in `docs/ANALYSIS.md`):
+//!
+//! * `// lint: allow(<rule>): <reason>` — trailing on a line allows
+//!   that line; on its own line it allows the next line.
+//! * `// lint: allow(<rule>) begin` … `// lint: allow(<rule>) end` —
+//!   allows every line of the enclosed region.
+//!
+//! Two rules use *justification comments* instead of allow-annotations,
+//! because the point is forcing an explanation, not an exemption:
+//!
+//! * `unsafe-hygiene` — every `unsafe` keyword needs a `// SAFETY:`
+//!   comment on the same line or in the contiguous comment/code block
+//!   directly above it.
+//! * `relaxed-ordering` — every `Relaxed` atomic ordering needs an
+//!   `// ordering:` comment the same way.
+//!
+//! `#[cfg(test)]` items (tracked brace-exactly) are exempt from every
+//! rule except `unsafe-hygiene` — test code may allocate and panic
+//! freely, but a bare `unsafe` is never fine.
+
+use super::lexer::{is_ident_byte, scan, Scan};
+use std::collections::BTreeMap;
+
+/// Rule identifiers (stable: they appear in findings, annotations, CI
+/// output, and `docs/ANALYSIS.md`).
+pub const RULE_ALLOC: &str = "hot-path-alloc";
+pub const RULE_BLOCK: &str = "reactor-blocking-call";
+pub const RULE_UNSAFE: &str = "unsafe-hygiene";
+pub const RULE_ORDERING: &str = "relaxed-ordering";
+pub const RULE_UNWRAP: &str = "unwrap-in-server";
+pub const RULE_ANNOTATION: &str = "lint-annotation";
+pub const RULE_DOC_DRIFT: &str = "doc-drift";
+
+/// Every rule id an annotation may name.
+pub const ALL_RULES: &[&str] = &[
+    RULE_ALLOC,
+    RULE_BLOCK,
+    RULE_UNSAFE,
+    RULE_ORDERING,
+    RULE_UNWRAP,
+    RULE_ANNOTATION,
+    RULE_DOC_DRIFT,
+];
+
+/// Files (paths relative to `rust/`) where the hot-path allocation rule
+/// applies: the zero-allocation wire layer. Runtime complement:
+/// `tests/wire_alloc.rs` (the counting-allocator gate).
+pub const ALLOC_HOT_FILES: &[&str] = &[
+    "src/util/json_stream.rs",
+    "src/coordinator/protocol.rs",
+    "src/coordinator/reactor.rs",
+];
+
+/// Files where the reactor blocking-call rule applies: everything that
+/// runs on a reactor thread's event loop.
+pub const BLOCK_FILES: &[&str] = &["src/coordinator/reactor.rs"];
+
+/// Path prefix for the advisory unwrap rule (the serving tier).
+pub const UNWRAP_PREFIX: &str = "src/coordinator/";
+
+/// Allocation-capable constructs forbidden on the wire-hot files.
+/// Token matching is word-bounded and runs over comment/string-masked
+/// text, so `"format!"` in a string literal never trips it.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    "String::new",
+    "String::from",
+    "String::with_capacity",
+    "format!",
+    "Box::new",
+    "Arc::new",
+    "Rc::new",
+    "HashMap::new",
+    "BTreeMap::new",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".clone(",
+    ".collect(",
+    ".with_capacity(",
+];
+
+/// Blocking or lock-taking constructs forbidden on reactor threads.
+const BLOCK_TOKENS: &[&str] = &[
+    ".lock(",
+    ".join(",
+    "::sleep(",
+    ".recv(",
+    ".recv_timeout(",
+    ".wait(",
+    ".wait_timeout(",
+    ".read_to_end(",
+    ".read_to_string(",
+    ".read_exact(",
+    ".write_all(",
+    ".accept(",
+];
+
+/// One lint finding. `advisory` findings are reported but do not fail
+/// `repro lint` (today: only `unwrap-in-server`).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    pub snippet: String,
+    pub advisory: bool,
+}
+
+/// One allowlist entry, for the audit (`repro lint --audit` regenerates
+/// the table committed in `docs/ANALYSIS.md`).
+#[derive(Debug, Clone)]
+pub struct Allowance {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    /// The annotation's reason text, or a builtin tag
+    /// (`lock-poison propagation`, `cfg(test) item`).
+    pub reason: String,
+}
+
+/// Parsed per-file context shared by all rules.
+pub struct FileCtx {
+    pub path: String,
+    pub scan: Scan,
+    /// 1-based line → raw source text.
+    raw_lines: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)]`-gated item.
+    test_mask: Vec<bool>,
+    /// rule → lines allowed by line annotations.
+    line_allows: BTreeMap<String, Vec<usize>>,
+    /// rule → (begin, end) line ranges from region annotations.
+    region_allows: BTreeMap<String, Vec<(usize, usize)>>,
+    /// Annotation audit entries (+ problems surface as findings).
+    pub allowances: Vec<Allowance>,
+}
+
+impl FileCtx {
+    /// Lex and pre-process one source file.
+    pub fn new(path: &str, src: &str, findings: &mut Vec<Finding>) -> FileCtx {
+        let scan = scan(src);
+        let raw_lines: Vec<String> = src.split('\n').map(|l| l.to_string()).collect();
+        let test_mask = cfg_test_mask(&raw_lines, &scan);
+        let mut ctx = FileCtx {
+            path: path.to_string(),
+            scan,
+            raw_lines,
+            test_mask,
+            line_allows: BTreeMap::new(),
+            region_allows: BTreeMap::new(),
+            allowances: Vec::new(),
+        };
+        ctx.parse_annotations(findings);
+        ctx
+    }
+
+    fn n_lines(&self) -> usize {
+        self.raw_lines.len()
+    }
+
+    /// 1-based raw line (empty string past EOF).
+    fn raw_line(&self, line: usize) -> &str {
+        self.raw_lines.get(line.wrapping_sub(1)).map_or("", |s| s.as_str())
+    }
+
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_mask.get(line.wrapping_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Does `line` carry a comment whose text contains `needle`?
+    fn line_comment_contains(&self, line: usize, needle: &str) -> bool {
+        self.scan
+            .comments
+            .iter()
+            .any(|c| c.line == line && c.text.contains(needle))
+    }
+
+    /// Is the masked content of `line` effectively empty (blank or
+    /// comment-only)?
+    fn masked_blank(&self, line: usize) -> bool {
+        masked_line(&self.scan.masked, line).trim().is_empty()
+    }
+
+    /// `// lint: allow(rule): reason` and region begin/end parsing.
+    fn parse_annotations(&mut self, findings: &mut Vec<Finding>) {
+        let mut open: BTreeMap<String, (usize, String)> = BTreeMap::new();
+        let comments: Vec<(usize, String)> = self
+            .scan
+            .comments
+            .iter()
+            .map(|c| (c.line, c.text.clone()))
+            .collect();
+        for (line, text) in comments {
+            let Some(rest) = text.trim().strip_prefix("lint: allow(") else {
+                continue;
+            };
+            let Some(close) = rest.find(')') else {
+                findings.push(self.annotation_problem(line, "malformed annotation: missing `)`"));
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            let tail = rest[close + 1..].trim();
+            if !ALL_RULES.contains(&rule.as_str()) {
+                findings.push(self.annotation_problem(
+                    line,
+                    &format!("unknown rule `{rule}` in annotation"),
+                ));
+                continue;
+            }
+            if tail == "begin" || tail.starts_with("begin:") {
+                let reason = tail.strip_prefix("begin").unwrap_or("").trim_start_matches(':');
+                open.insert(rule, (line, reason.trim().to_string()));
+            } else if tail == "end" {
+                match open.remove(&rule) {
+                    Some((begin, reason)) => {
+                        self.region_allows.entry(rule.clone()).or_default().push((begin, line));
+                        self.allowances.push(Allowance {
+                            file: self.path.clone(),
+                            line: begin,
+                            rule: format!("{rule} (region → {line})"),
+                            reason,
+                        });
+                    }
+                    None => findings.push(self.annotation_problem(
+                        line,
+                        &format!("`lint: allow({rule}) end` without a begin"),
+                    )),
+                }
+            } else {
+                // line annotation: covers its own line when trailing
+                // code, else the next line
+                let reason = tail.trim_start_matches(':').trim().to_string();
+                let target = if self.masked_blank(line) { line + 1 } else { line };
+                self.line_allows.entry(rule.clone()).or_default().push(target);
+                self.allowances.push(Allowance {
+                    file: self.path.clone(),
+                    line: target,
+                    rule,
+                    reason,
+                });
+            }
+        }
+        for (rule, (line, _)) in open {
+            findings.push(self.annotation_problem(
+                line,
+                &format!("`lint: allow({rule}) begin` without an end"),
+            ));
+        }
+    }
+
+    fn annotation_problem(&self, line: usize, msg: &str) -> Finding {
+        Finding {
+            file: self.path.clone(),
+            line,
+            rule: RULE_ANNOTATION,
+            message: msg.to_string(),
+            snippet: self.raw_line(line).trim().to_string(),
+            advisory: false,
+        }
+    }
+
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        if self.line_allows.get(rule).is_some_and(|v| v.contains(&line)) {
+            return true;
+        }
+        self.region_allows
+            .get(rule)
+            .is_some_and(|v| v.iter().any(|&(b, e)| (b..=e).contains(&line)))
+    }
+
+    /// `needle` appears as a comment on `line` or anywhere in the
+    /// contiguous (no blank raw line) block of at most `window` lines
+    /// directly above it — the justification-comment coverage rule.
+    fn justified(&self, line: usize, needle: &str, window: usize) -> bool {
+        if self.line_comment_contains(line, needle) {
+            return true;
+        }
+        let mut l = line;
+        for _ in 0..window {
+            if l <= 1 {
+                return false;
+            }
+            l -= 1;
+            if self.raw_line(l).trim().is_empty() {
+                return false;
+            }
+            if self.line_comment_contains(l, needle) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn finding(&self, rule: &'static str, line: usize, message: String, advisory: bool) -> Finding {
+        Finding {
+            file: self.path.clone(),
+            line,
+            rule,
+            message,
+            snippet: self.raw_line(line).trim().to_string(),
+            advisory,
+        }
+    }
+}
+
+/// 1-based line slice of the masked text.
+fn masked_line(masked: &str, line: usize) -> &str {
+    masked.split('\n').nth(line.wrapping_sub(1)).unwrap_or("")
+}
+
+/// Compute which lines sit inside `#[cfg(test)]`-gated items by brace
+/// tracking over masked text: the attribute gates the next item, which
+/// extends to where its braces re-balance (or to its terminating `;`
+/// before any brace opens, e.g. `#[cfg(test)] use …;`).
+fn cfg_test_mask(raw_lines: &[String], scan: &Scan) -> Vec<bool> {
+    let masked_lines: Vec<&str> = scan.masked.split('\n').collect();
+    let mut mask = vec![false; raw_lines.len()];
+    let mut i = 0usize;
+    while i < raw_lines.len() {
+        // masked text: a `#[cfg(test)]` inside a doc comment or string
+        // literal must not open a region
+        if !masked_lines.get(i).copied().unwrap_or("").trim().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < raw_lines.len() {
+            mask[j] = true;
+            let ml = masked_lines.get(j).copied().unwrap_or("");
+            for b in ml.bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            if !opened && ml.trim_end().ends_with(';') {
+                break; // braceless item (use/static declaration)
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Word-bounded occurrences of `token` in `masked`, as byte offsets.
+/// Tokens starting with `.` or ending with `(`/`!` carry their own
+/// boundary on that side; identifier edges are checked explicitly.
+fn token_sites(masked: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let tb = token.as_bytes();
+    let mb = masked.as_bytes();
+    for (pos, _) in masked.match_indices(token) {
+        let first = tb[0];
+        if is_ident_byte(first) && pos > 0 && is_ident_byte(mb[pos - 1]) {
+            continue;
+        }
+        let last = tb[tb.len() - 1];
+        let after = pos + tb.len();
+        if is_ident_byte(last) && after < mb.len() && is_ident_byte(mb[after]) {
+            continue;
+        }
+        out.push(pos);
+    }
+    out
+}
+
+/// 1-based line of byte offset `pos`.
+fn line_of(masked: &str, pos: usize) -> usize {
+    masked.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Rule 1: hot-path allocation lint (wire-hot files only).
+pub fn check_alloc(ctx: &mut FileCtx, findings: &mut Vec<Finding>) {
+    if !ALLOC_HOT_FILES.contains(&ctx.path.as_str()) {
+        return;
+    }
+    for token in ALLOC_TOKENS {
+        for pos in token_sites(&ctx.scan.masked, token) {
+            let line = line_of(&ctx.scan.masked, pos);
+            if ctx.in_test(line) || ctx.allowed(RULE_ALLOC, line) {
+                continue;
+            }
+            findings.push(ctx.finding(
+                RULE_ALLOC,
+                line,
+                format!(
+                    "allocation-capable `{}` in wire-hot module (annotate cold/error paths \
+                     with `lint: allow({RULE_ALLOC})`)",
+                    token.trim_matches(|c| c == '.' || c == '(')
+                ),
+                false,
+            ));
+        }
+    }
+}
+
+/// Rule 2: no blocking calls on reactor threads.
+pub fn check_block(ctx: &mut FileCtx, findings: &mut Vec<Finding>) {
+    if !BLOCK_FILES.contains(&ctx.path.as_str()) {
+        return;
+    }
+    for token in BLOCK_TOKENS {
+        for pos in token_sites(&ctx.scan.masked, token) {
+            let line = line_of(&ctx.scan.masked, pos);
+            if ctx.in_test(line) || ctx.allowed(RULE_BLOCK, line) {
+                continue;
+            }
+            findings.push(ctx.finding(
+                RULE_BLOCK,
+                line,
+                format!(
+                    "blocking call `{}` on a reactor-thread path (annotate designed \
+                     waits with `lint: allow({RULE_BLOCK})`)",
+                    token.trim_matches(|c| c == '.' || c == '(')
+                ),
+                false,
+            ));
+        }
+    }
+}
+
+/// Rule 3: every `unsafe` carries a `// SAFETY:` comment. Applies
+/// everywhere, test code included.
+pub fn check_unsafe(ctx: &mut FileCtx, findings: &mut Vec<Finding>) {
+    for pos in token_sites(&ctx.scan.masked, "unsafe") {
+        let line = line_of(&ctx.scan.masked, pos);
+        if ctx.justified(line, "SAFETY:", 20) || ctx.allowed(RULE_UNSAFE, line) {
+            continue;
+        }
+        findings.push(ctx.finding(
+            RULE_UNSAFE,
+            line,
+            "`unsafe` without a `// SAFETY:` comment on or directly above it".to_string(),
+            false,
+        ));
+    }
+}
+
+/// Rule 4: every `Relaxed` atomic ordering carries an `// ordering:`
+/// justification. `use` imports are exempt (the use sites are not), and
+/// the rule only covers library code under `src/` — test/bench
+/// harnesses may count however they like.
+pub fn check_ordering(ctx: &mut FileCtx, findings: &mut Vec<Finding>) {
+    if !ctx.path.starts_with("src/") {
+        return;
+    }
+    for pos in token_sites(&ctx.scan.masked, "Relaxed") {
+        let line = line_of(&ctx.scan.masked, pos);
+        if ctx.in_test(line) || masked_line(&ctx.scan.masked, line).trim_start().starts_with("use ")
+        {
+            continue;
+        }
+        if ctx.justified(line, "ordering:", 20) || ctx.allowed(RULE_ORDERING, line) {
+            continue;
+        }
+        findings.push(ctx.finding(
+            RULE_ORDERING,
+            line,
+            "`Ordering::Relaxed` without an `// ordering:` justification comment".to_string(),
+            false,
+        ));
+    }
+}
+
+/// Rule 5 (advisory): `.unwrap()`/`.expect(` on serving-tier runtime
+/// paths. `.lock().unwrap()` is auto-allowed as deliberate lock-poison
+/// propagation (crash over serving with a corrupted invariant) and
+/// recorded in the audit.
+pub fn check_unwrap(ctx: &mut FileCtx, findings: &mut Vec<Finding>) {
+    if !ctx.path.starts_with(UNWRAP_PREFIX) {
+        return;
+    }
+    let masked = ctx.scan.masked.clone();
+    for token in [".unwrap()", ".expect("] {
+        for pos in token_sites(&masked, token) {
+            let line = line_of(&masked, pos);
+            if ctx.in_test(line) || ctx.allowed(RULE_UNWRAP, line) {
+                continue;
+            }
+            // builtin allowance: receiver is a `.lock()` call (possibly
+            // across a line break from rustfmt chaining)
+            let before = masked[..pos].trim_end();
+            if before.ends_with(".lock()") {
+                ctx.allowances.push(Allowance {
+                    file: ctx.path.clone(),
+                    line,
+                    rule: RULE_UNWRAP.to_string(),
+                    reason: "builtin: lock-poison propagation".to_string(),
+                });
+                continue;
+            }
+            findings.push(ctx.finding(
+                RULE_UNWRAP,
+                line,
+                format!(
+                    "`{}` on a serving-tier runtime path — return a structured error instead",
+                    token.trim_matches(|c| c == '.' || c == '(')
+                ),
+                true,
+            ));
+        }
+    }
+}
+
+/// Run every per-file rule over one source file.
+pub fn check_file(path: &str, src: &str, findings: &mut Vec<Finding>) -> FileCtx {
+    let mut ctx = FileCtx::new(path, src, findings);
+    check_alloc(&mut ctx, findings);
+    check_block(&mut ctx, findings);
+    check_unsafe(&mut ctx, findings);
+    check_ordering(&mut ctx, findings);
+    check_unwrap(&mut ctx, findings);
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> (Vec<Finding>, FileCtx) {
+        let mut findings = Vec::new();
+        let ctx = check_file(path, src, &mut findings);
+        (findings, ctx)
+    }
+
+    #[test]
+    fn cfg_test_items_are_brace_tracked_not_to_eof() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn b() {}\n";
+        let (_, ctx) = run("src/x.rs", src);
+        assert!(!ctx.in_test(1));
+        assert!(ctx.in_test(3) && ctx.in_test(4) && ctx.in_test(5));
+        assert!(!ctx.in_test(6), "code after the test mod is live again");
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment_with_exact_location() {
+        let src = "fn f() {\n    let x = unsafe { g() };\n}\n";
+        let (f, _) = run("src/any.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_UNSAFE);
+        assert_eq!(f[0].line, 2);
+        let ok = "fn f() {\n    // SAFETY: g has no preconditions\n    let x = unsafe { g() };\n}\n";
+        assert!(run("src/any.rs", ok).0.is_empty());
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "fn f() -> &'static str {\n    // format! would allocate here\n    \"format!(vec![Box::new])\"\n}\n";
+        let (f, _) = run("src/util/json_stream.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn line_annotation_allows_trailing_and_next_line() {
+        let bad = "fn f() { let v = Vec::new(); }\n";
+        let (f, _) = run("src/util/json_stream.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), (RULE_ALLOC, 1));
+        let trailing =
+            "fn f() { let v = Vec::new(); } // lint: allow(hot-path-alloc): cold init\n";
+        assert!(run("src/util/json_stream.rs", trailing).0.is_empty());
+        let above = "// lint: allow(hot-path-alloc): cold init\nfn f() { let v = Vec::new(); }\n";
+        assert!(run("src/util/json_stream.rs", above).0.is_empty());
+    }
+
+    #[test]
+    fn region_annotation_and_unbalanced_region() {
+        let src = "// lint: allow(hot-path-alloc) begin: DOM reference path\nfn f() { format!(\"x\"); }\n// lint: allow(hot-path-alloc) end\nfn g() { format!(\"y\"); }\n";
+        let (f, _) = run("src/coordinator/protocol.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_ALLOC, 4));
+        let unbalanced = "// lint: allow(hot-path-alloc) begin\nfn f() {}\n";
+        let (f, _) = run("src/coordinator/protocol.rs", unbalanced);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_ANNOTATION);
+    }
+
+    #[test]
+    fn unknown_rule_annotation_is_a_finding() {
+        let src = "// lint: allow(no-such-rule): oops\nfn f() {}\n";
+        let (f, _) = run("src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), (RULE_ANNOTATION, 1));
+    }
+
+    #[test]
+    fn blocking_call_in_reactor_fires_and_allows() {
+        let src = "fn f(m: &std::sync::Mutex<i32>) {\n    let g = m.lock();\n}\n";
+        let (f, _) = run("src/coordinator/reactor.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), (RULE_BLOCK, 2));
+        // same file path is also alloc-hot; a non-alloc token only trips block
+        assert!(f.iter().all(|x| x.rule == RULE_BLOCK));
+    }
+
+    #[test]
+    fn relaxed_ordering_needs_justification_but_use_is_exempt() {
+        let src = "use std::sync::atomic::{AtomicU64, Ordering::Relaxed};\nfn f(c: &std::sync::atomic::AtomicU64) {\n    c.fetch_add(1, Relaxed);\n}\n";
+        let (f, _) = run("src/obs/hist.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_ORDERING, 3));
+        let ok = "fn f(c: &std::sync::atomic::AtomicU64) {\n    // ordering: independent counter, no cross-field sync\n    c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);\n}\n";
+        assert!(run("src/obs/hist.rs", ok).0.is_empty());
+    }
+
+    #[test]
+    fn unwrap_is_advisory_and_lock_poison_is_builtin_allowed() {
+        let src = "fn f(m: &std::sync::Mutex<i32>, r: Result<i32, ()>) {\n    let a = m.lock().unwrap();\n    let b = r.unwrap();\n}\n";
+        let (f, ctx) = run("src/coordinator/registry.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line, f[0].advisory), (RULE_UNWRAP, 3, true));
+        assert!(ctx
+            .allowances
+            .iter()
+            .any(|a| a.line == 2 && a.reason.contains("lock-poison")));
+        // multiline chain: `.lock()\n.unwrap()` still auto-allowed
+        let chained = "fn f(m: &std::sync::Mutex<i32>) {\n    let a = m\n        .lock()\n        .unwrap();\n}\n";
+        assert!(run("src/coordinator/registry.rs", chained).0.is_empty());
+    }
+
+    #[test]
+    fn alloc_fires_outside_reactor_test_mod_only() {
+        let src = "fn hot() { let s = x.to_string(); }\n#[cfg(test)]\nmod tests {\n    fn t() { let v = vec![1]; }\n}\n";
+        let (f, _) = run("src/coordinator/reactor.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_ALLOC, 1));
+    }
+}

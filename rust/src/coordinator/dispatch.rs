@@ -512,6 +512,8 @@ impl EnginePool {
             // external one would silently kill a single predict lane
             Job::Shutdown => return Ok(()),
             _ => {
+                // ordering: round-robin cursor — any interleaving of the
+                // increments is an acceptable lane assignment.
                 let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.predict.len();
                 &self.predict[i]
             }
@@ -519,6 +521,7 @@ impl EnginePool {
         match lane.tx.try_send(job) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => {
+                // ordering: stats-only shed counter; orders nothing.
                 self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Overloaded)
             }

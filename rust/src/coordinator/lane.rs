@@ -199,7 +199,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
         match job {
             Job::Shutdown => return,
             Job::Ingest { req, reply } => {
-                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter // ordering: stats-only counter
                 let (anchor, target) = (req.anchor, req.target);
                 let resp = match ctx.registry.staging().append(&req) {
                     Ok(staged) => Response::Ingested {
@@ -212,7 +212,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                 finish_with_execute(ctx, reply, resp, t0);
             }
             Job::Onboard { pair, reply } => {
-                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter // ordering: stats-only counter
                 let resp = match ctx.registry.onboard(rt, pair, &ctx.onboard) {
                     Ok(report) => Response::Onboarded {
                         epoch: report.epoch,
@@ -227,7 +227,7 @@ pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
                 only_if_changed,
                 reply,
             } => {
-                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter // ordering: stats-only counter
                 let resp = match ctx.registry.reload(rt, only_if_changed) {
                     Ok(Some(epoch)) => Response::Reloaded { epoch },
                     // watcher mode, nothing changed: report the epoch that
@@ -290,7 +290,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
             snap,
             reply,
         } => {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter
             let resp = match snap.profet.predict_batch_size(instance, batch, t_min, t_max) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
@@ -305,7 +305,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
             snap,
             reply,
         } => {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter
             let resp = match snap.profet.predict_pixel_size(instance, pixels, t_min, t_max) {
                 Ok(v) => Response::Latency { latency_ms: v },
                 Err(e) => Response::Err(format!("{e:#}")),
@@ -318,7 +318,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
             snap,
             reply,
         } => {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter
             let resp = match advisor::sweep(
                 rt,
                 snap.epoch,
@@ -344,7 +344,7 @@ fn run_immediate(job: Job, rt: &Runtime, ctx: &LaneCtx) {
             snap,
             reply,
         } => {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter
             let resp = match advisor::sweep(
                 rt,
                 snap.epoch,
@@ -385,7 +385,7 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
     let stats = &ctx.stats;
     let cache = &ctx.cache;
     for ((epoch, anchor, target), (snap, mut group)) in predicts {
-        stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed);
+        stats.requests.fetch_add(group.len() as u64, Ordering::Relaxed); // ordering: stats-only counter
         // batch assembly: lane dequeue → coalesced execution start, per
         // member (early arrivals paid more of the window than late ones)
         let exec_start = Instant::now();
@@ -430,6 +430,8 @@ fn run_predict_groups(predicts: PredictGroups, rt: &Runtime, ctx: &LaneCtx) {
                 .and_then(|feats| model.predict_batch(rt, &feats, &miss_lats));
             match executed {
                 Ok(preds) => {
+                    // ordering: batch tallies are stats-only counters read
+                    // by the metrics snapshot; they order nothing.
                     stats.batches.fetch_add(1, Ordering::Relaxed);
                     stats
                         .batched_requests

@@ -188,7 +188,7 @@ impl Request {
         let op = j.req_str("op").map_err(ParseError::Malformed)?;
         match parse_fields(op, &j) {
             Ok(Some(req)) => Ok(req),
-            Ok(None) => Err(ParseError::UnknownOp(op.to_string())),
+            Ok(None) => Err(ParseError::UnknownOp(op.to_string())), // lint: allow(hot-path-alloc): unknown-op error path, not reached by valid traffic
             Err(e) => Err(ParseError::Malformed(e)),
         }
     }
@@ -345,7 +345,7 @@ impl<'s> PredictView<'s> {
             anchor: self.anchor,
             target: self.target,
             anchor_latency_ms: self.anchor_latency_ms,
-            profile: self.pairs().map(|(k, v)| (k.to_string(), v)).collect(),
+            profile: self.pairs().map(|(k, v)| (k.to_string(), v)).collect(), // lint: allow(hot-path-alloc): materialize() runs once per cache miss to build the engine-lane request
         }
     }
 }
@@ -380,7 +380,7 @@ pub fn parse_line<'s>(
         "ingest" => Op::Ingest,
         "onboard" => Op::Onboard,
         "reload" => Op::Reload,
-        other => return Err(ParseError::UnknownOp(other.to_string())),
+        other => return Err(ParseError::UnknownOp(other.to_string())), // lint: allow(hot-path-alloc): unknown-op error path, not reached by valid traffic
     };
     wire_request(op, line, ls).map_err(ParseError::Malformed)
 }
@@ -590,8 +590,8 @@ fn sraw_profile_map(
     Ok(ls
         .pairs(start, len)
         .iter()
-        .map(|p| (ls.str_of(line, p.key).to_string(), p.val))
-        .collect())
+        .map(|p| (ls.str_of(line, p.key).to_string(), p.val)) // lint: allow(hot-path-alloc): cache-miss submission — builds the owned request handed to an engine lane
+        .collect()) // lint: allow(hot-path-alloc): cache-miss submission — builds the owned request handed to an engine lane
 }
 
 fn sraw_usize_list(
@@ -603,7 +603,7 @@ fn sraw_usize_list(
     max_value: usize,
 ) -> anyhow::Result<Vec<usize>> {
     match ls.field(line, key) {
-        None => Ok(Vec::new()),
+        None => Ok(Vec::new()), // lint: allow(hot-path-alloc): empty-Vec construction allocates nothing
         Some(RawVal::Arr { start, len }) => {
             anyhow::ensure!(
                 len as usize <= max_entries,
@@ -617,7 +617,7 @@ fn sraw_usize_list(
                             RawElem::Num(n) => Some(*n),
                             _ => None,
                         },
-                        &format!("entry in `{key}`"),
+                        &format!("entry in `{key}`"), // lint: allow(hot-path-alloc): cold-op parse path (plan/recommend batch lists)
                     )?;
                     anyhow::ensure!(
                         (min_value..=max_value).contains(&n),
@@ -625,7 +625,7 @@ fn sraw_usize_list(
                     );
                     Ok(n)
                 })
-                .collect()
+                .collect() // lint: allow(hot-path-alloc): cold-op numeric list, bounded by max_entries
         }
         Some(_) => Err(anyhow!("`{key}` must be an array of numbers")),
     }
@@ -633,7 +633,7 @@ fn sraw_usize_list(
 
 fn sraw_targets(ls: &LineScratch, line: &str) -> anyhow::Result<Vec<Instance>> {
     match ls.field(line, "targets") {
-        None => Ok(Vec::new()),
+        None => Ok(Vec::new()), // lint: allow(hot-path-alloc): empty-Vec construction allocates nothing
         Some(RawVal::Arr { start, len }) => {
             anyhow::ensure!(
                 len as usize <= MAX_TARGET_ENTRIES,
@@ -648,7 +648,7 @@ fn sraw_targets(ls: &LineScratch, line: &str) -> anyhow::Result<Vec<Instance>> {
                     }
                     .ok_or_else(|| anyhow!("unknown instance in `targets`"))
                 })
-                .collect()
+                .collect() // lint: allow(hot-path-alloc): cold-op (recommend/plan) target list, bounded by MAX_TARGET_ENTRIES
         }
         Some(_) => anyhow::bail!("`targets` must be an array of instance keys"),
     }
@@ -871,6 +871,7 @@ fn req_instance(j: &Json, key: &str) -> anyhow::Result<Instance> {
     Instance::from_key(j.req_str(key)?).ok_or_else(|| anyhow!("unknown instance in `{key}`"))
 }
 
+// lint: allow(hot-path-alloc) begin: DOM reference parser — differential-testing twin of the scratch parser; requests it builds go to engine lanes, not the reactor
 fn parse_profile(j: &Json, key: &str) -> anyhow::Result<BTreeMap<String, f64>> {
     match j.get(key) {
         Some(Json::Obj(m)) => {
@@ -1073,6 +1074,7 @@ fn parse_query(j: &Json) -> anyhow::Result<SweepRequest> {
         },
     })
 }
+// lint: allow(hot-path-alloc) end
 
 /// Required positive finite number (infinities from overflowing JSON
 /// literals like `1e400` would otherwise flow into the planner and come
@@ -1127,10 +1129,10 @@ fn query_json(q: &SweepRequest, o: &mut Json) {
     if !q.targets.is_empty() {
         o.set(
             "targets",
-            Json::Arr(q.targets.iter().map(|t| Json::Str(t.key().into())).collect()),
+            Json::Arr(q.targets.iter().map(|t| Json::Str(t.key().into())).collect()), // lint: allow(hot-path-alloc): DOM round-trip encoder for tests/clients, never on the serving path
         );
     }
-    let usize_arr = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+    let usize_arr = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect()); // lint: allow(hot-path-alloc): DOM round-trip encoder for tests/clients, never on the serving path
     if !q.batches.is_empty() {
         o.set("batches", usize_arr(&q.batches));
     }
@@ -1459,8 +1461,9 @@ impl Response {
     /// One line as an owned `String` (cold paths/tests; the serving loop
     /// uses [`Self::encode_line`] into a reused buffer instead).
     pub fn to_line(&self) -> String {
-        let mut out = Vec::new();
+        let mut out = Vec::new(); // lint: allow(hot-path-alloc): cold convenience wrapper; the serving loop uses encode_line
         self.encode(&mut out);
+        // lint: allow(unwrap-in-server): JsonWriter only ever emits ASCII/escaped UTF-8, so this is unreachable
         String::from_utf8(out).expect("encoder emits UTF-8")
     }
 }

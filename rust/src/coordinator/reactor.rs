@@ -85,16 +85,18 @@ pub struct CompletionQueue {
 
 impl CompletionQueue {
     fn new(waker: Arc<Waker>) -> CompletionQueue {
-        CompletionQueue { items: Mutex::new(Vec::new()), waker }
+        CompletionQueue { items: Mutex::new(Vec::new()), waker } // lint: allow(hot-path-alloc): empty-Vec construction at startup allocates nothing
     }
 
     /// Engine-lane side (via [`Reply::send`]): enqueue and wake.
     pub(crate) fn push(&self, conn: u64, resp: Response, meta: ReqMeta) {
+        // lint: allow(reactor-blocking-call): runs on an engine lane, not the reactor; push-only critical section
         self.items.lock().unwrap().push((conn, resp, meta));
         self.waker.wake();
     }
 
     fn drain_into(&self, out: &mut Vec<(u64, Response, ReqMeta)>) {
+        // lint: allow(reactor-blocking-call): bounded swap-drain — the only reactor-side lock, held for one append
         out.append(&mut self.items.lock().unwrap());
     }
 }
@@ -140,10 +142,12 @@ pub(crate) struct ReactorPool {
 impl ReactorPool {
     pub(crate) fn spawn(pool: Arc<EnginePool>, cfg: &ReactorConfig) -> Result<ReactorPool> {
         let threads = cfg.threads.max(1);
+        // ordering: one-time gauge write at startup, read only by stats
         pool.stats
             .conns
             .reactor_threads
             .store(threads as u64, Ordering::Relaxed);
+        // lint: allow(hot-path-alloc) begin: one-time pool construction at server startup
         let mut reactors = Vec::with_capacity(threads);
         for i in 0..threads {
             let waker = Arc::new(Waker::new()?);
@@ -165,14 +169,18 @@ impl ReactorPool {
                 join: Mutex::new(Some(join)),
             });
         }
+        // lint: allow(hot-path-alloc) end
         Ok(ReactorPool { reactors, next: AtomicUsize::new(0) })
     }
 
     /// Hand an accepted connection to the next reactor (round-robin).
     /// The acceptor has already counted it against `stats.conns.open`.
     pub(crate) fn adopt(&self, stream: TcpStream) {
+        // ordering: round-robin cursor — occasional duplicate indices
+        // under contention only skew balance, never correctness
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.reactors.len();
         let r = &self.reactors[i];
+        // lint: allow(reactor-blocking-call): runs on the acceptor thread; reactor holds this lock only for a bounded drain
         r.inbox.lock().unwrap().conns.push(stream);
         r.waker.wake();
     }
@@ -182,6 +190,7 @@ impl ReactorPool {
     /// out) and every connection is closed. Idempotent — a second call
     /// finds the joins already taken.
     pub(crate) fn drain(&self) {
+        // lint: allow(reactor-blocking-call) begin: shutdown path runs on the caller's thread, not a reactor
         for r in &self.reactors {
             r.inbox.lock().unwrap().drain = true;
             r.waker.wake();
@@ -192,6 +201,7 @@ impl ReactorPool {
                 let _ = j.join();
             }
         }
+        // lint: allow(reactor-blocking-call) end
     }
 }
 
@@ -263,12 +273,14 @@ fn reactor_loop(ctx: ReactorCtx) {
         eprintln!("reactor: waker registration failed: {e}");
         return;
     }
+    // lint: allow(hot-path-alloc) begin: loop-lifetime buffers allocated once per reactor and reused every iteration
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_id: u64 = 0;
     let mut events: Vec<Event> = Vec::new();
     let mut completions: Vec<(u64, Response, ReqMeta)> = Vec::new();
     let mut dead: Vec<u64> = Vec::new();
     let mut rdbuf = vec![0u8; READ_CHUNK];
+    // lint: allow(hot-path-alloc) end
     let mut draining = false;
     let mut drain_deadline: Option<Instant> = None;
     let mut last_sweep = Instant::now();
@@ -276,6 +288,7 @@ fn reactor_loop(ctx: ReactorCtx) {
     loop {
         // 1) adopt handed-over connections / notice the drain signal
         {
+            // lint: allow(reactor-blocking-call): adoption mailbox — acceptor holds it only to push one stream
             let mut inbox = ctx.inbox.lock().unwrap();
             if inbox.drain {
                 draining = true;
@@ -283,6 +296,7 @@ fn reactor_loop(ctx: ReactorCtx) {
             for stream in inbox.conns.drain(..) {
                 if draining {
                     // raced the drain: never served, close unannounced
+                    // ordering: gauge decrement; monotonic counter, no ordering dependency
                     ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
                     continue;
                 }
@@ -331,8 +345,10 @@ fn reactor_loop(ctx: ReactorCtx) {
             if conns.is_empty() || expired {
                 for (_, conn) in conns.drain() {
                     if conn.awaiting {
+                        // ordering: gauge decrements at shutdown; stats-only
                         ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
                     }
+                    // ordering: gauge decrement at shutdown; stats-only
                     ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
                 }
                 return;
@@ -353,12 +369,15 @@ fn reactor_loop(ctx: ReactorCtx) {
                 (None, false) => None,
             }
         };
+        // lint: allow(reactor-blocking-call): the event loop's designed wait — epoll/poll readiness, not a stall
         if let Err(e) = poller.wait(&mut events, timeout) {
             eprintln!("reactor: poll failed: {e}");
             for (_, conn) in conns.drain() {
                 if conn.awaiting {
+                    // ordering: gauge decrements on teardown; stats-only
                     ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
                 }
+                // ordering: gauge decrement on teardown; stats-only
                 ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
             }
             return;
@@ -420,6 +439,7 @@ fn reactor_loop(ctx: ReactorCtx) {
                         && !conn.has_backlog()
                         && now.duration_since(conn.last_activity) > idle
                     {
+                        // ordering: eviction counter; stats-only
                         ctx.stats.conns.evicted.fetch_add(1, Ordering::Relaxed);
                         dead.push(id);
                     }
@@ -438,6 +458,7 @@ fn register(
     ctx: &ReactorCtx,
 ) {
     if stream.set_nonblocking(true).is_err() {
+        // ordering: gauge decrement on a failed adopt; stats-only
         ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
         return;
     }
@@ -445,6 +466,7 @@ fn register(
     let id = *next_id;
     *next_id += 1;
     if poller.add(stream.as_raw_fd(), id, Interest::READ).is_err() {
+        // ordering: gauge decrement on a failed adopt; stats-only
         ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
         return;
     }
@@ -454,10 +476,10 @@ fn register(
         Conn {
             stream,
             scratch: ConnScratch::default(),
-            inbuf: Vec::new(),
+            inbuf: Vec::new(), // lint: allow(hot-path-alloc): empty-Vec construction allocates nothing; grows lazily per connection
             scanned: 0,
             discarding: false,
-            outbuf: Vec::new(),
+            outbuf: Vec::new(), // lint: allow(hot-path-alloc): empty-Vec construction allocates nothing; grows lazily per connection
             outpos: 0,
             awaiting: false,
             eof: false,
@@ -481,8 +503,10 @@ fn close_dead(
                 let _ = poller.del(conn.stream.as_raw_fd());
             }
             if conn.awaiting {
+                // ordering: gauge decrement on close; stats-only
                 ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
             }
+            // ordering: gauge decrement on close; stats-only
             ctx.stats.conns.open.fetch_sub(1, Ordering::Relaxed);
         }
     }
@@ -626,6 +650,7 @@ fn serve_line(ctx: &ReactorCtx, id: u64, conn: &mut Conn, nl: Option<usize>) -> 
         Ok(line) if line.trim().is_empty() => wrote = false,
         Ok(line) => {
             match router::respond_or_submit(&ctx.pool, line, scratch, || {
+                // lint: allow(hot-path-alloc): Arc refcount bump, not a heap allocation; built only when a job is actually submitted
                 Reply::completion(ctx.queue.clone(), id)
             }) {
                 RouteOutcome::Done => {}
@@ -650,6 +675,7 @@ fn serve_line(ctx: &ReactorCtx, id: u64, conn: &mut Conn, nl: Option<usize>) -> 
     conn.last_activity = Instant::now();
     if submitted {
         conn.awaiting = true;
+        // ordering: gauge increment; stats-only
         ctx.stats.conns.active.fetch_add(1, Ordering::Relaxed);
     }
     if wrote {
@@ -669,7 +695,7 @@ fn serve_line(ctx: &ReactorCtx, id: u64, conn: &mut Conn, nl: Option<usize>) -> 
 fn respond_too_long(conn: &mut Conn) -> bool {
     Response::err_kind(
         "line_too_long",
-        format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+        format!("request line exceeds {MAX_LINE_BYTES} bytes"), // lint: allow(hot-path-alloc): abuse-rejection error path, not the serving path
     )
     .encode_line(&mut conn.scratch.out);
     queue_write(conn)
@@ -681,6 +707,7 @@ fn respond_too_long(conn: &mut Conn) -> bool {
 /// admission→delivery total, checked against the slow threshold).
 fn deliver(ctx: &ReactorCtx, id: u64, conn: &mut Conn, resp: Response, mut meta: ReqMeta) -> bool {
     conn.awaiting = false;
+    // ordering: gauge decrement; stats-only
     ctx.stats.conns.active.fetch_sub(1, Ordering::Relaxed);
     conn.last_activity = Instant::now();
     let obs = ctx.pool.obs();

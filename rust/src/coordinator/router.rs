@@ -207,6 +207,8 @@ fn handle_line(
             obs.record_ns(Stage::WarmLookup, OpClass::Predict, temp, lookup_ns);
             if let Some((latency_ms, member)) = hit {
                 let stats = &pool.stats;
+                // ordering: stats-only counters read by the metrics
+                // snapshot; they order nothing.
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.cache.hits.fetch_add(1, Ordering::Relaxed);
                 return Handled::Inline(Response::Prediction { latency_ms, member });
@@ -260,6 +262,9 @@ fn route_request(
         Request::Stats => {
             let s = &pool.stats;
             let reg = pool.registry();
+            // ordering: every load in this arm is a stats-only gauge
+            // read; approximate, independently-raced values are the
+            // contract of the stats snapshot.
             let requests = s.requests.load(Ordering::Relaxed);
             let batches = s.batches.load(Ordering::Relaxed);
             let batched = s.batched_requests.load(Ordering::Relaxed);
@@ -277,17 +282,17 @@ fn route_request(
                 } else {
                     0.0
                 },
-                overloaded: s.overloaded.load(Ordering::Relaxed),
+                overloaded: s.overloaded.load(Ordering::Relaxed), // ordering: stats-only gauge
                 predict_lanes: pool.predict_lanes(),
-                cache_hits: s.cache.hits.load(Ordering::Relaxed),
-                cache_misses: s.cache.misses.load(Ordering::Relaxed),
+                cache_hits: s.cache.hits.load(Ordering::Relaxed), // ordering: stats-only gauge
+                cache_misses: s.cache.misses.load(Ordering::Relaxed), // ordering: stats-only gauge
                 registry_epoch: reg.epoch(),
                 last_reload: reg.last_reload_unix_ms(),
                 open_conns,
                 active_conns,
                 idle_conns: open_conns - active_conns,
-                evictions: s.conns.evicted.load(Ordering::Relaxed),
-                reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed),
+                evictions: s.conns.evicted.load(Ordering::Relaxed), // ordering: stats-only gauge
+                reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed), // ordering: stats-only gauge
                 uptime_s: pool.obs().uptime_s(),
                 version: env!("CARGO_PKG_VERSION"),
             })
@@ -295,20 +300,23 @@ fn route_request(
         Request::Metrics => {
             let s = &pool.stats;
             let obs = pool.obs();
+            // ordering: stats-only gauge reads — same contract as the
+            // stats arm above; `active` is clamped to `open` to avoid
+            // publishing a torn pair.
             let open = s.conns.open.load(Ordering::Relaxed);
             let active = s.conns.active.load(Ordering::Relaxed).min(open);
             // byte-sorted by name — the encoder emits them in list order
             let gauges = vec![
                 ("active_conns", active as f64),
-                ("cache_hits", s.cache.hits.load(Ordering::Relaxed) as f64),
-                ("cache_misses", s.cache.misses.load(Ordering::Relaxed) as f64),
-                ("evictions", s.conns.evicted.load(Ordering::Relaxed) as f64),
+                ("cache_hits", s.cache.hits.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
+                ("cache_misses", s.cache.misses.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
+                ("evictions", s.conns.evicted.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("idle_conns", (open - active) as f64),
                 ("open_conns", open as f64),
-                ("overloaded", s.overloaded.load(Ordering::Relaxed) as f64),
+                ("overloaded", s.overloaded.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("predict_lanes", pool.predict_lanes() as f64),
                 ("registry_epoch", pool.registry().epoch() as f64),
-                ("requests", s.requests.load(Ordering::Relaxed) as f64),
+                ("requests", s.requests.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
             ];
             Handled::Inline(Response::Metrics(Box::new(MetricsSnapshot {
                 uptime_s: obs.uptime_s(),

@@ -250,7 +250,10 @@ pub(crate) fn serve_pool_opts(
                 }
                 let Ok(stream) = stream else { continue };
                 // the open gauge is the budget: incremented here at
-                // admission, decremented by the reactor at close
+                // admission, decremented by the reactor at close.
+                // ordering: the cap is advisory — a race can momentarily
+                // admit one connection past the limit, which the budget
+                // tolerates; nothing downstream synchronizes on the gauge.
                 if stats2.conns.open.load(Ordering::Relaxed) as usize >= max_connections {
                     stats2.overloaded.fetch_add(1, Ordering::Relaxed);
                     reject_overloaded(stream, max_connections);

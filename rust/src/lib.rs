@@ -25,6 +25,7 @@
 //! `docs/PROTOCOL.md` for the wire reference.
 
 pub mod advisor;
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

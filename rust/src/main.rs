@@ -8,6 +8,7 @@
 //!   eval      regenerate the paper's tables/figures (DESIGN.md index)
 //!   serve     start the TCP/JSON prediction service
 //!   loadgen   open-loop load generator against a live server (BENCH_serve.json)
+//!   lint      in-repo invariant linter (docs/ANALYSIS.md rule catalogue)
 
 use anyhow::{anyhow, Context, Result};
 use repro::data::Corpus;
@@ -81,7 +82,8 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loa
                  [--trace-sample N]
   repro loadgen  [--addr 127.0.0.1:7878] [--rate 200] [--duration 10]
                  [--conns 16] [--predict-pct 90] [--anchor g4dn] [--target p3]
-                 [--out BENCH_serve.json] [--strict]";
+                 [--out BENCH_serve.json] [--strict]
+  repro lint     [--root PATH] [--json] [--audit]";
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -98,6 +100,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "lint" => cmd_lint(&args),
         other => {
             println!("{USAGE}");
             Err(anyhow!("unknown command `{other}`"))
@@ -331,6 +334,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    // --root overrides; otherwise walk up from cwd to the directory
+    // holding both rust/src and docs (works from the repo root or from
+    // inside rust/, e.g. under `cargo run`)
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let mut dir = std::env::current_dir()?;
+            loop {
+                if dir.join("rust/src").is_dir() && dir.join("docs").is_dir() {
+                    break dir;
+                }
+                if !dir.pop() {
+                    return Err(anyhow!(
+                        "cannot find repo root (rust/src + docs) above cwd — pass --root"
+                    ));
+                }
+            }
+        }
+    };
+    let report = repro::analysis::run(&root)
+        .with_context(|| format!("linting {}", root.display()))?;
+    if args.get("audit").is_some() {
+        print!("{}", report.render_audit());
+        return Ok(());
+    }
+    if args.get("json").is_some() {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.hard_count() > 0 {
+        anyhow::bail!("lint failed with {} hard finding(s)", report.hard_count());
+    }
+    Ok(())
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {

@@ -92,18 +92,24 @@ impl Hist {
     /// Record one duration (nanoseconds). Two relaxed `fetch_add`s.
     #[inline]
     pub fn record(&self, ns: u64) {
+        // ordering: per-bucket tallies are independent monotonic counters;
+        // snapshots tolerate tearing across buckets by design.
         self.buckets[bucket_index(ns)].fetch_add(1, Relaxed);
         self.sum_ns.fetch_add(ns, Relaxed);
     }
 
     /// Cheap emptiness probe without building a snapshot.
     pub fn is_empty(&self) -> bool {
+        // ordering: advisory probe; a racing record may flip the answer
+        // either way, and callers only use it to skip empty cells.
         self.sum_ns.load(Relaxed) == 0 && self.buckets.iter().all(|b| b.load(Relaxed) == 0)
     }
 
     /// Freeze the current counts into a sparse snapshot.
     pub fn snapshot(&self) -> HistSnapshot {
         let mut out = HistSnapshot::empty();
+        // ordering: snapshot reads race with recording threads; each cell
+        // is read once and small cross-bucket skew is acceptable.
         for (idx, b) in self.buckets.iter().enumerate() {
             let c = b.load(Relaxed);
             if c > 0 {
@@ -111,7 +117,7 @@ impl Hist {
                 out.count += c;
             }
         }
-        out.sum_ns = self.sum_ns.load(Relaxed);
+        out.sum_ns = self.sum_ns.load(Relaxed); // ordering: same snapshot contract
         out
     }
 }

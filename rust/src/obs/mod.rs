@@ -207,6 +207,8 @@ fn thread_slot() -> usize {
         if v != usize::MAX {
             return v;
         }
+        // ordering: slot assignment only needs uniqueness, which
+        // fetch_add gives under any ordering.
         let v = THREAD_SEQ.fetch_add(1, Relaxed);
         s.set(v);
         v
@@ -284,6 +286,8 @@ impl Obs {
         if self.trace_sample == 0 {
             return None;
         }
+        // ordering: sampling counter — 1-in-N selection needs no
+        // cross-thread ordering, only atomicity.
         let seq = self.trace_seq.fetch_add(1, Relaxed);
         if seq % self.trace_sample != 0 {
             return None;

@@ -126,6 +126,8 @@ mod sys {
 
     impl Poller {
         pub fn new() -> io::Result<Poller> {
+            // SAFETY: no pointer arguments; the returned fd is checked
+            // for errors before being stored.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -135,6 +137,8 @@ mod sys {
 
         fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
             let mut ev = EpollEvent { events: mask(interest), data: token };
+            // SAFETY: `ev` is a live stack value the kernel only reads;
+            // epfd is the owned epoll fd and the result is checked.
             if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -160,6 +164,9 @@ mod sys {
             out.clear();
             let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
             loop {
+                // SAFETY: `buf` is a live stack array and the length
+                // passed is exactly `buf.len()`, so the kernel writes
+                // at most that many events; epfd is the owned epoll fd.
                 let n = unsafe {
                     epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms(timeout))
                 };
@@ -189,6 +196,8 @@ mod sys {
 
     impl Drop for Poller {
         fn drop(&mut self) {
+            // SAFETY: epfd was returned by `epoll_create1` in `new`,
+            // is owned exclusively by this Poller, and is closed once.
             unsafe { close(self.epfd) };
         }
     }
@@ -203,6 +212,8 @@ mod sys {
     impl Waker {
         pub fn new() -> io::Result<Waker> {
             let mut fds = [0i32; 2];
+            // SAFETY: `pipe2` writes exactly two fds into the provided
+            // 2-element array; the result is checked before use.
             if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -213,6 +224,9 @@ mod sys {
         /// pending, so the failed write is deliberately ignored.
         pub fn wake(&self) {
             let b = 1u8;
+            // SAFETY: writes 1 byte from a live stack variable to the
+            // owned pipe write end; EAGAIN on a full pipe is ignored
+            // (a wake is already pending).
             unsafe { write(self.wfd, &b, 1) };
         }
 
@@ -221,6 +235,9 @@ mod sys {
         pub fn drain(&self) {
             let mut buf = [0u8; 64];
             loop {
+                // SAFETY: `buf` is a live stack array and `buf.len()`
+                // bounds the write; rfd is the owned O_NONBLOCK pipe
+                // read end, so a short/failed read just ends the loop.
                 let n = unsafe { read(self.rfd, buf.as_mut_ptr(), buf.len()) };
                 if n < buf.len() as isize {
                     return;
@@ -236,6 +253,8 @@ mod sys {
 
     impl Drop for Waker {
         fn drop(&mut self) {
+            // SAFETY: both fds were returned by `pipe2` in `new`, are
+            // owned exclusively by this Waker, and are closed once.
             unsafe {
                 close(self.rfd);
                 close(self.wfd);
@@ -324,6 +343,9 @@ mod sys {
                 (fds, tokens)
             };
             loop {
+                // SAFETY: `fds` is a live Vec rebuilt above; the length
+                // passed is exactly `fds.len()`, and the kernel only
+                // mutates `revents` within those bounds.
                 let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms(timeout)) };
                 if n < 0 {
                     let err = io::Error::last_os_error();
@@ -355,10 +377,14 @@ mod sys {
     impl Waker {
         pub fn new() -> io::Result<Waker> {
             let mut fds = [0i32; 2];
+            // SAFETY: `pipe` writes exactly two fds into the provided
+            // 2-element array; the result is checked before use.
             if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
                 return Err(io::Error::last_os_error());
             }
             for fd in fds {
+                // SAFETY: plain fcntl flag set on an fd we just
+                // created; no pointers involved.
                 if unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) } < 0 {
                     return Err(io::Error::last_os_error());
                 }
@@ -368,12 +394,18 @@ mod sys {
 
         pub fn wake(&self) {
             let b = 1u8;
+            // SAFETY: writes 1 byte from a live stack variable to the
+            // owned pipe write end; EAGAIN on a full pipe is ignored
+            // (a wake is already pending).
             unsafe { write(self.wfd, &b, 1) };
         }
 
         pub fn drain(&self) {
             let mut buf = [0u8; 64];
             loop {
+                // SAFETY: `buf` is a live stack array and `buf.len()`
+                // bounds the write; rfd is the owned nonblocking pipe
+                // read end, so a short/failed read just ends the loop.
                 let n = unsafe { read(self.rfd, buf.as_mut_ptr(), buf.len()) };
                 if n < buf.len() as isize {
                     return;
@@ -388,6 +420,8 @@ mod sys {
 
     impl Drop for Waker {
         fn drop(&mut self) {
+            // SAFETY: both fds were returned by `pipe` in `new`, are
+            // owned exclusively by this Waker, and are closed once.
             unsafe {
                 close(self.rfd);
                 close(self.wfd);

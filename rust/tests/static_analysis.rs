@@ -1,0 +1,322 @@
+//! Tier-1 gate for the invariant linter (`repro lint`).
+//!
+//! Two halves:
+//!
+//! 1. **The repo lints clean** — `analysis::run` over this very
+//!    checkout must produce zero hard findings, which is exactly what
+//!    `repro lint` enforces in CI. A regression anywhere (a stray
+//!    `format!` on the wire path, a bare `unsafe`, doc drift) fails
+//!    `cargo test` before it fails the CI gate.
+//! 2. **The linter itself works** — fixture sources with seeded
+//!    violations must fire each rule at the exact file:line, allowlist
+//!    annotations must silence them, and forbidden tokens inside
+//!    string literals/comments must not trip anything.
+
+use repro::analysis::docsync::{self, CodeInventory};
+use repro::analysis::rules::{
+    self, check_file, Finding, RULE_ALLOC, RULE_ANNOTATION, RULE_BLOCK, RULE_DOC_DRIFT,
+    RULE_ORDERING, RULE_UNSAFE, RULE_UNWRAP,
+};
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    // CARGO_MANIFEST_DIR is <repo>/rust; the linter wants the repo root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+}
+
+fn lint(path: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_file(path, src, &mut findings);
+    findings
+}
+
+fn ids(findings: &[Finding]) -> Vec<(&'static str, usize)> {
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+// -------------------------------------------------------------------
+// 1. the repo itself
+// -------------------------------------------------------------------
+
+#[test]
+fn repository_lints_clean() {
+    let report = repro::analysis::run(repo_root()).expect("lint run");
+    let hard: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| !f.advisory)
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        hard.is_empty(),
+        "repo must lint clean (this is the `repro lint` CI gate):\n{}",
+        hard.join("\n")
+    );
+    // sanity: the scan actually covered the tree
+    assert!(
+        report.files.iter().any(|f| f == "src/util/json_stream.rs"),
+        "wire-hot module missing from scan: {:?}",
+        report.files
+    );
+    assert!(report.files.len() > 30, "suspiciously few files scanned");
+    // every allowlisted site in the audit carries a reason
+    for a in &report.allowances {
+        assert!(
+            !a.reason.trim().is_empty(),
+            "allowance without a reason at {}:{} ({})",
+            a.file,
+            a.line,
+            a.rule
+        );
+    }
+}
+
+#[test]
+fn repository_advisory_findings_are_unwrap_only() {
+    let report = repro::analysis::run(repo_root()).expect("lint run");
+    for f in report.findings.iter().filter(|f| f.advisory) {
+        assert_eq!(
+            f.rule, RULE_UNWRAP,
+            "only unwrap-in-server may be advisory: {f:?}"
+        );
+    }
+}
+
+// -------------------------------------------------------------------
+// 2. seeded violations fire with exact rule id + line
+// -------------------------------------------------------------------
+
+#[test]
+fn seeded_alloc_violation_fires_at_exact_line() {
+    let src = "fn hot(w: &mut W) {\n    w.push(1);\n    let s = format!(\"{}\", 2);\n}\n";
+    let f = lint("src/util/json_stream.rs", src);
+    assert_eq!(ids(&f), vec![(RULE_ALLOC, 3)], "{f:?}");
+    assert!(f[0].message.contains("format!"));
+    // identical source in a non-hot file: silent
+    assert!(lint("src/ml/forest.rs", src).is_empty());
+}
+
+#[test]
+fn seeded_blocking_violation_fires_in_reactor_only() {
+    let src = "fn f(rx: &std::sync::mpsc::Receiver<u8>) {\n    let v = rx.recv();\n}\n";
+    let f = lint("src/coordinator/reactor.rs", src);
+    assert_eq!(ids(&f), vec![(RULE_BLOCK, 2)], "{f:?}");
+    assert!(lint("src/coordinator/server.rs", src).is_empty());
+}
+
+#[test]
+fn seeded_bare_unsafe_fires_everywhere_even_tests() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        unsafe { x() };\n    }\n}\n";
+    let f = lint("src/util/poll.rs", src);
+    assert_eq!(ids(&f), vec![(RULE_UNSAFE, 4)], "cfg(test) is not exempt: {f:?}");
+}
+
+#[test]
+fn seeded_relaxed_without_justification_fires() {
+    let src = "fn f(c: &std::sync::atomic::AtomicUsize) {\n    c.store(0, std::sync::atomic::Ordering::Relaxed);\n}\n";
+    let f = lint("src/obs/mod.rs", src);
+    assert_eq!(ids(&f), vec![(RULE_ORDERING, 2)], "{f:?}");
+    // tests/benches are out of scope for the ordering rule
+    assert!(lint("tests/wire_alloc.rs", src).is_empty());
+}
+
+#[test]
+fn seeded_unwrap_is_advisory_with_lock_poison_builtin() {
+    let src = "fn f(m: &std::sync::Mutex<u8>, r: Result<u8, ()>) {\n    let a = m.lock().unwrap();\n    let b = r.unwrap();\n    let c = r.expect(\"boom\");\n}\n";
+    let f = lint("src/coordinator/dispatch.rs", src);
+    assert_eq!(ids(&f), vec![(RULE_UNWRAP, 3), (RULE_UNWRAP, 4)], "{f:?}");
+    assert!(f.iter().all(|x| x.advisory), "unwrap rule must stay advisory");
+}
+
+// -------------------------------------------------------------------
+// 3. allowlist annotations + false positives
+// -------------------------------------------------------------------
+
+#[test]
+fn allow_annotations_silence_and_are_audited() {
+    let src = "\
+// lint: allow(hot-path-alloc): one-time connection setup
+fn cold() { let v = Vec::new(); }
+fn hot() { let s = String::new(); } // lint: allow(hot-path-alloc): error path
+// lint: allow(reactor-blocking-call) begin: startup only
+fn boot(m: &std::sync::Mutex<u8>) { let g = m.lock(); }
+// lint: allow(reactor-blocking-call) end
+";
+    let mut findings = Vec::new();
+    let ctx = check_file("src/coordinator/reactor.rs", src, &mut findings);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(ctx.allowances.len(), 3);
+    assert!(ctx.allowances.iter().any(|a| a.reason.contains("startup only")));
+}
+
+#[test]
+fn unknown_rule_and_unbalanced_region_are_hard_findings() {
+    let f = lint("src/x.rs", "// lint: allow(not-a-rule): hm\nfn f() {}\n");
+    assert_eq!(ids(&f), vec![(RULE_ANNOTATION, 1)]);
+    let f = lint("src/x.rs", "// lint: allow(hot-path-alloc) begin\nfn f() {}\n");
+    assert_eq!(ids(&f), vec![(RULE_ANNOTATION, 1)]);
+    assert!(!f[0].advisory);
+}
+
+#[test]
+fn tokens_inside_strings_and_comments_never_fire() {
+    let src = r##"
+fn doc() -> &'static str {
+    // a comment may say format! or Vec::new or .lock() or unsafe freely
+    /* even Ordering::Relaxed in a block comment */
+    "format!(vec![Box::new(x.lock().unwrap())]) unsafe Relaxed"
+}
+fn raw() -> &'static str {
+    r#"String::from(".to_string(")"#
+}
+"##;
+    let f = lint("src/coordinator/reactor.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn word_boundaries_prevent_identifier_false_positives() {
+    // `MyVec::new_unsafe_relaxed` must not match Vec::new / unsafe / Relaxed
+    let src = "fn f() { let x = NotRelaxed::unsafe_marker(); }\n";
+    let f = lint("src/obs/mod.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// -------------------------------------------------------------------
+// 4. doc-drift fixtures
+// -------------------------------------------------------------------
+
+fn fixture_inventory() -> CodeInventory {
+    let mut inv = CodeInventory::default();
+    inv.ops.insert("health".into());
+    inv.error_kinds.insert("bad_request".into());
+    inv.stats_keys.insert("requests".into());
+    inv.gauges.insert("depth".into());
+    inv.stages.insert("parse".into());
+    inv.metrics_keys.insert("gauges".into());
+    inv
+}
+
+const CLEAN_DOC: &str = "\
+# Protocol
+
+## Ops
+
+| op | purpose |
+|---|---|
+| [`health`](#health) | liveness |
+
+### health
+
+x
+
+### stats
+
+```json
+{\"op\":\"stats\"}
+```
+```json
+{\"requests\":1}
+```
+
+### metrics
+
+gauges:
+
+```json
+{\"gauges\":{\"depth\":3}}
+```
+
+stages: `parse`.
+
+## Error kinds
+
+| kind | meaning |
+|---|---|
+| `bad_request` | malformed |
+";
+
+#[test]
+fn doc_drift_clean_fixture_passes() {
+    let mut findings = Vec::new();
+    docsync::check_doc(&fixture_inventory(), CLEAN_DOC, "docs/PROTOCOL.md", &mut findings);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn doc_drift_detects_missing_and_stale_entries() {
+    let mut inv = fixture_inventory();
+    inv.ops.insert("reload".into()); // in code, absent from doc
+    let doc = CLEAN_DOC.replace("| `bad_request` | malformed |", "| `gone_kind` | stale |");
+    let mut findings = Vec::new();
+    docsync::check_doc(&inv, &doc, "docs/PROTOCOL.md", &mut findings);
+    assert!(findings.iter().all(|f| f.rule == RULE_DOC_DRIFT && !f.advisory));
+    assert!(
+        findings.iter().any(|f| f.message.contains("`reload`")),
+        "missing op undetected: {findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("`gone_kind`")),
+        "stale kind undetected: {findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("`bad_request`")),
+        "removed kind undetected: {findings:?}"
+    );
+    // findings anchor to the doc's section heading lines
+    let ops_heading = 1 + CLEAN_DOC.lines().position(|l| l == "## Ops").unwrap();
+    assert!(findings
+        .iter()
+        .any(|f| f.message.contains("`reload`") && f.line == ops_heading));
+}
+
+#[test]
+fn doc_drift_extraction_skips_test_code_and_non_literals() {
+    let src = "\
+fn parse(op: &str) -> Op {
+    match op {
+        \"health\" => Op::Health,
+        _ => panic!(),
+    }
+}
+fn route(e: E) -> Response {
+    Response::err_kind(e.kind(), format!(\"x\"))
+}
+#[cfg(test)]
+mod tests {
+    fn t() {
+        let _ = match \"fake_op\" {
+            \"fake_op\" => Op::Health,
+            _ => panic!(),
+        };
+    }
+}
+";
+    let mut findings = Vec::new();
+    let ctx = check_file("src/coordinator/protocol.rs", src, &mut findings);
+    let in_test = |l: usize| ctx.in_test(l);
+    let ops = docsync::ops_in_code(&ctx.scan, &in_test);
+    assert_eq!(ops.len(), 1);
+    assert!(ops.contains("health"), "{ops:?}");
+    let mut kinds = std::collections::BTreeSet::new();
+    docsync::error_kinds_in_code(&ctx.scan, &in_test, &mut kinds);
+    assert!(kinds.is_empty(), "e.kind() is not a literal: {kinds:?}");
+}
+
+// -------------------------------------------------------------------
+// 5. rule catalogue stays in sync with the docs
+// -------------------------------------------------------------------
+
+#[test]
+fn every_rule_id_is_documented_in_analysis_md() {
+    let doc = std::fs::read_to_string(repo_root().join("docs/ANALYSIS.md"))
+        .expect("docs/ANALYSIS.md exists");
+    for rule in rules::ALL_RULES {
+        assert!(
+            doc.contains(&format!("`{rule}`")),
+            "rule `{rule}` missing from docs/ANALYSIS.md"
+        );
+    }
+}
