@@ -31,8 +31,15 @@ echo "== server stress test (single-shot, bounded) =="
 echo "== wire allocation gate (counting allocator) =="
 cargo test -q --test wire_alloc
 
-echo "== cargo test -q (stress test excluded — it just ran single-shot) =="
-cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps
+echo "== cargo test -q (stress + chaos excluded — they run single-shot) =="
+cargo test -q -- --skip predicts_are_not_blocked_by_inflight_recommend_sweeps --skip chaos_
+
+# fault-injection suite, single-shot under a hard timeout and forced to
+# one test thread (the failpoint registry is process-global): save-crash
+# matrix, torn staging tails, panicking replicas, reactor write faults,
+# watcher faults, deadline shedding (shared logic: ci/chaos_check.sh)
+echo "== chaos suite (failpoint injection, bounded, single-threaded) =="
+../ci/chaos_check.sh
 
 # boots a real server and fires a short strict open-loop burst: any
 # dropped reply or malformed BENCH_serve.json fails; self-skips (loudly)

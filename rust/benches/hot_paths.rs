@@ -218,6 +218,7 @@ fn main() {
             open_conns: 512,
             active_conns: 64,
             idle_conns: 448,
+            lane_restarts: 0,
             evictions: 17,
             reactor_threads: 2,
             uptime_s: 3600.5,

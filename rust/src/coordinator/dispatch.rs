@@ -57,7 +57,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Observability metadata riding on every [`Reply`]: the monotonic
 /// stage timestamps the latency observatory needs (admission, lane
@@ -78,6 +78,10 @@ pub struct ReqMeta {
     pub(crate) op: OpClass,
     pub(crate) temp: Temp,
     pub(crate) trace: Option<Box<TraceState>>,
+    /// Absolute expiry instant for the request's queue-time budget
+    /// (`--default-deadline-ms`). `None` = no deadline. Jobs past it are
+    /// shed at lane dequeue with the `deadline_exceeded` error kind.
+    pub(crate) deadline: Option<Instant>,
 }
 
 impl ReqMeta {
@@ -89,6 +93,7 @@ impl ReqMeta {
             op: OpClass::Other,
             temp: Temp::Cold,
             trace: None,
+            deadline: None,
         }
     }
 
@@ -107,8 +112,13 @@ impl ReqMeta {
 /// channel; reactor connections instead enqueue the response on their
 /// owning reactor thread's [`CompletionQueue`], which wakes the reactor
 /// to flush it on writable readiness — no thread ever parks per request.
+///
+/// The destination is held as an `Option` so the drop guard below can
+/// tell a delivered reply (`None`) from one abandoned by a panic
+/// unwinding through a lane body — the only way a `Reply` drops while
+/// still armed.
 pub struct Reply {
-    kind: ReplyKind,
+    kind: Option<ReplyKind>,
     meta: ReqMeta,
 }
 
@@ -121,7 +131,7 @@ impl Reply {
     /// A blocking reply: the caller waits on the channel's receiver.
     pub fn channel(tx: Sender<Response>) -> Reply {
         Reply {
-            kind: ReplyKind::Channel(tx),
+            kind: Some(ReplyKind::Channel(tx)),
             meta: ReqMeta::new(),
         }
     }
@@ -130,7 +140,7 @@ impl Reply {
     /// its reactor's completion queue (which wakes the reactor).
     pub(crate) fn completion(queue: Arc<CompletionQueue>, conn: u64) -> Reply {
         Reply {
-            kind: ReplyKind::Completion { queue, conn },
+            kind: Some(ReplyKind::Completion { queue, conn }),
             meta: ReqMeta::new(),
         }
     }
@@ -142,9 +152,17 @@ impl Reply {
     /// Deliver the response. Consumes the reply — every job answers
     /// exactly once. A disconnected channel receiver (caller gave up) is
     /// ignored, same as the old raw `Sender` behavior.
-    pub fn send(self, resp: Response) {
-        let mut meta = self.meta;
-        match self.kind {
+    pub fn send(mut self, resp: Response) {
+        self.deliver(resp);
+    }
+
+    /// Shared delivery path for [`Reply::send`] and the drop guard.
+    /// Taking the kind disarms the guard; the meta is moved out with a
+    /// fresh placeholder so `&mut self` delivery works from `Drop`.
+    fn deliver(&mut self, resp: Response) {
+        let Some(kind) = self.kind.take() else { return };
+        let mut meta = std::mem::replace(&mut self.meta, ReqMeta::new());
+        match kind {
             ReplyKind::Channel(tx) => {
                 let _ = tx.send(resp);
             }
@@ -152,6 +170,23 @@ impl Reply {
                 meta.pushed = Some(Instant::now());
                 queue.push(conn, resp, meta);
             }
+        }
+    }
+}
+
+/// No-lost-replies guarantee: a `Reply` dropped while still armed — a
+/// panic unwinding through a lane body is the only path — answers its
+/// caller with a structured `internal_error` instead of leaving a
+/// channel hung or a reactor connection wedged forever. The lane
+/// supervisor ([`supervise`]) then respawns the replica, so the error
+/// text can promise a restart.
+impl Drop for Reply {
+    fn drop(&mut self) {
+        if self.kind.is_some() {
+            self.deliver(Response::err_kind(
+                "internal_error",
+                "engine replica panicked mid-request; lane restarted",
+            ));
         }
     }
 }
@@ -240,6 +275,10 @@ pub struct EngineStats {
     /// Jobs/connections rejected with the structured `overloaded` error
     /// (full lane queue or exhausted connection budget).
     pub overloaded: AtomicU64,
+    /// Lane replicas respawned by the supervisor after a panic (counter;
+    /// the `stats` op's `lane_restarts` field). A healthy process stays
+    /// at 0 forever.
+    pub lane_restarts: AtomicU64,
     /// Phase-1 prediction-cache hit/miss counters (predict + advisor),
     /// shared across all replicas.
     pub cache: CacheStats,
@@ -288,6 +327,11 @@ pub struct PoolOptions {
     /// Every Nth engine submission carries a trace context; `1` traces
     /// everything, `0` disables tracing (`repro serve --trace-sample`).
     pub trace_sample: u64,
+    /// Queue-time budget stamped into every engine submission
+    /// (`repro serve --default-deadline-ms`); a job still queued past
+    /// `submitted + deadline` is shed at lane dequeue with the
+    /// `deadline_exceeded` error kind. `None` disables deadlines.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for PoolOptions {
@@ -300,6 +344,7 @@ impl Default for PoolOptions {
             onboard: OnboardOptions::default(),
             trace_slow_ms: 250.0,
             trace_sample: 1,
+            default_deadline: None,
         }
     }
 }
@@ -382,6 +427,9 @@ pub struct EnginePool {
     /// warm lookups, lane queue/batch/execute stages, registry swaps)
     /// and the `metrics` op reads from.
     obs: Arc<Obs>,
+    /// Queue-time budget the router stamps into every submission
+    /// ([`PoolOptions::default_deadline`]).
+    default_deadline: Option<Duration>,
 }
 
 impl EnginePool {
@@ -461,6 +509,7 @@ impl EnginePool {
             cache,
             registry,
             obs,
+            default_deadline: opts.default_deadline,
         };
         // wait for every replica to come up; on failure the pool drop
         // below shuts down and joins the lanes that did start
@@ -492,6 +541,12 @@ impl EnginePool {
     /// The pool's latency observatory (histograms, traces, uptime).
     pub fn obs(&self) -> &Arc<Obs> {
         &self.obs
+    }
+
+    /// The queue-time budget the router stamps into submissions
+    /// (`None` = deadlines disabled).
+    pub(crate) fn default_deadline(&self) -> Option<Duration> {
+        self.default_deadline
     }
 
     /// Deterministic (anchor, target) → predict-lane affinity, so
@@ -538,7 +593,10 @@ impl EnginePool {
 
     /// Test-only pool over caller-provided lane bodies (no PJRT runtime
     /// needed): exercises dispatch/affinity/backpressure in isolation.
-    /// The trainer lane reuses the advisor body shape.
+    /// The trainer lane reuses the advisor body shape. Bodies run under
+    /// the same [`supervise`] loop as real replicas (borrowing the
+    /// receiver so a respawn re-enters the body on the same queue), which
+    /// lets tests drive the panic-respawn path without a runtime.
     #[cfg(test)]
     pub(crate) fn mock<FP, FA>(
         n_predict: usize,
@@ -548,32 +606,45 @@ impl EnginePool {
         advisor_body: FA,
     ) -> EnginePool
     where
-        FP: Fn(usize, Receiver<Job>) + Send + Sync + Clone + 'static,
-        FA: Fn(Receiver<Job>) + Send + Sync + Clone + 'static,
+        FP: Fn(usize, &Receiver<Job>) + Send + Sync + Clone + 'static,
+        FA: Fn(&Receiver<Job>) + Send + Sync + Clone + 'static,
     {
+        let stats = Arc::new(EngineStats::default());
         let predict = (0..n_predict.max(1))
             .map(|i| {
                 let body = predict_body.clone();
+                let stats = stats.clone();
                 spawn_worker(&format!("mock-predict-{i}"), predict_cap, move |rx| {
-                    body(i, rx)
+                    supervise(&format!("mock-predict-{i}"), &stats, || body(i, &rx))
                 })
                 .unwrap()
             })
             .collect();
         let advisor = {
             let body = advisor_body.clone();
-            spawn_worker("mock-advisor", advisor_cap, move |rx| body(rx)).unwrap()
+            let stats = stats.clone();
+            spawn_worker("mock-advisor", advisor_cap, move |rx| {
+                supervise("mock-advisor", &stats, || body(&rx))
+            })
+            .unwrap()
         };
-        let trainer = spawn_worker("mock-trainer", advisor_cap, move |rx| advisor_body(rx)).unwrap();
+        let trainer = {
+            let stats = stats.clone();
+            spawn_worker("mock-trainer", advisor_cap, move |rx| {
+                supervise("mock-trainer", &stats, || advisor_body(&rx))
+            })
+            .unwrap()
+        };
         EnginePool {
             predict,
             advisor,
             trainer,
             rr: AtomicUsize::new(0),
-            stats: Arc::new(EngineStats::default()),
+            stats,
             cache: Arc::new(PredictionCache::new(4, 1024)),
             registry: Arc::new(crate::coordinator::registry::test_registry("mockpool")),
             obs: Arc::new(Obs::new(PoolOptions::default().trace_slow_ms, 1)),
+            default_deadline: None,
         }
     }
 }
@@ -598,10 +669,40 @@ impl Drop for EnginePool {
     }
 }
 
+/// Run one lane body under supervision: a panic unwinding out of `body`
+/// — a poisoned model, a bug, an injected `lane.execute` failpoint — is
+/// caught, counted in `stats.lane_restarts`, and the body re-entered
+/// after a capped exponential backoff (10ms doubling to 1s). The job the
+/// panic interrupted still answers: its [`Reply`] drop guard sends
+/// `internal_error` during the unwind. A clean return is a real shutdown
+/// and ends the loop. The body keeps borrowing the same receiver and
+/// runtime across restarts, so a respawn costs the backoff sleep, not a
+/// runtime reload.
+fn supervise<F>(name: &str, stats: &EngineStats, mut body: F)
+where
+    F: FnMut(),
+{
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&mut body)) {
+            Ok(()) => return,
+            Err(_) => {
+                // ordering: stats-only restart counter; orders nothing.
+                stats.lane_restarts.fetch_add(1, Ordering::Relaxed);
+                eprintln!("lane {name}: replica panicked; respawning after {backoff:?}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+}
+
 /// Spawn one real engine replica; the non-`Send` PJRT runtime loads
 /// inside the thread, readiness reported through the returned channel.
 /// The trainer replica additionally probe-validates the registry's
-/// initial model set before reporting ready.
+/// initial model set before reporting ready. Once ready, the lane loop
+/// runs under [`supervise`], so a panic respawns the replica instead of
+/// silently killing the lane.
 #[allow(clippy::type_complexity)]
 fn spawn_engine_lane(
     name: String,
@@ -611,7 +712,8 @@ fn spawn_engine_lane(
     kind: LaneKind,
 ) -> Result<(Lane, Receiver<std::result::Result<(), String>>)> {
     let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-    let lane = spawn_worker(&name, cap, move |rx| {
+    let thread_name = name.clone();
+    let lane = spawn_worker(&thread_name, cap, move |rx| {
         let rt = match Runtime::load(&artifact_dir) {
             Ok(rt) => rt,
             Err(e) => {
@@ -627,11 +729,12 @@ fn spawn_engine_lane(
             }
         }
         let _ = ready_tx.send(Ok(()));
-        match kind {
-            LaneKind::Predict => lane::predict_lane(&rt, rx, &ctx),
-            LaneKind::Advisor => lane::advisor_lane(&rt, rx, &ctx),
-            LaneKind::Trainer => lane::trainer_lane(&rt, rx, &ctx),
-        }
+        let stats = ctx.stats.clone();
+        supervise(&name, &stats, || match kind {
+            LaneKind::Predict => lane::predict_lane(&rt, &rx, &ctx),
+            LaneKind::Advisor => lane::advisor_lane(&rt, &rx, &ctx),
+            LaneKind::Trainer => lane::trainer_lane(&rt, &rx, &ctx),
+        });
     })?;
     Ok((lane, ready_rx))
 }
@@ -662,7 +765,7 @@ mod tests {
 
     /// Lane body that answers every job instantly, echoing its lane index
     /// through the `latency_ms` field of a typed reply.
-    fn echo_lane(idx: usize, rx: Receiver<Job>) {
+    fn echo_lane(idx: usize, rx: &Receiver<Job>) {
         for job in rx {
             match job {
                 Job::Shutdown => return,
@@ -952,6 +1055,60 @@ mod tests {
         .unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
         gate_tx.send(()).unwrap();
+    }
+
+    /// The tentpole supervision contract, without a runtime: a replica
+    /// panic mid-job answers that job with a structured `internal_error`
+    /// (the `Reply` drop guard), counts a restart, and the respawned
+    /// replica keeps serving the same queue.
+    #[test]
+    fn panicking_replica_answers_internal_error_and_respawns() {
+        use std::sync::atomic::AtomicBool;
+        let poisoned = Arc::new(AtomicBool::new(true));
+        let p = poisoned.clone();
+        let pool = EnginePool::mock(
+            1,
+            64,
+            4,
+            move |_idx, rx| {
+                for job in rx {
+                    match job {
+                        Job::Shutdown => return,
+                        job => {
+                            // ordering: test-only one-shot panic trigger.
+                            if p.swap(false, Ordering::Relaxed) {
+                                panic!("injected replica panic");
+                            }
+                            reply_ok(job);
+                        }
+                    }
+                }
+            },
+            |rx| echo_lane(99, rx),
+        );
+        let submit_predict = |pool: &EnginePool| {
+            let (tx, rx) = channel();
+            pool.submit(Job::Predict(
+                predict_req(Instance::G4dn, Instance::P3),
+                snap(),
+                Reply::channel(tx),
+            ))
+            .unwrap();
+            rx
+        };
+        // job 1 trips the panic; its reply must still arrive, structured
+        let rx = submit_predict(&pool);
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Response::ErrKind { kind, .. } => assert_eq!(kind, "internal_error"),
+            other => panic!("expected internal_error, got {other:?}"),
+        }
+        assert!(pool.stats.lane_restarts.load(Ordering::Relaxed) >= 1);
+        // the respawned replica answers the next job on the same queue
+        let rx = submit_predict(&pool);
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Health
+        ));
     }
 
     #[test]

@@ -24,7 +24,14 @@
 //! requests are answered by pre-swap models.
 //!
 //! All loops flush every job they have accepted before exiting on
-//! shutdown/disconnect — replies are never dropped on the floor.
+//! shutdown/disconnect — replies are never dropped on the floor. Every
+//! dequeue goes through [`admit`]: jobs past their
+//! `--default-deadline-ms` queue budget are shed there with the
+//! structured `deadline_exceeded` error, and the `lane.execute`
+//! failpoint hooks the same spot so chaos tests can poison execution.
+//! The loops themselves run under the dispatcher's supervisor — a panic
+//! respawns the replica (its in-flight replies answer `internal_error`
+//! via the [`Reply`] drop guard) instead of killing the lane.
 
 use crate::advisor::{self, CacheKey, Candidate, PlanChoice, PredictionCache};
 use crate::coordinator::dispatch::{EngineStats, Job, Reply};
@@ -66,16 +73,68 @@ fn ns_of(d: Duration) -> u64 {
     d.as_nanos().min(u64::MAX as u128) as u64
 }
 
-/// Stamp a freshly dequeued job: queue-wait histogram (submit → here)
-/// plus the dequeue instant later stages measure from. `Shutdown`
-/// carries no metadata and is skipped.
-fn mark_dequeued(ctx: &LaneCtx, job: &mut Job) {
+/// Admit a freshly dequeued job into execution: stamp the queue-wait
+/// histogram (submit → here) and the dequeue instant later stages
+/// measure from, then enforce the request deadline — a job whose queue
+/// wait already exceeded its `--default-deadline-ms` budget is answered
+/// with the structured `deadline_exceeded` error here and never
+/// executed. Shedding at dequeue keeps an overloaded queue from burning
+/// engine time on replies nobody is waiting for. Returns `None` when the
+/// job was shed (or consumed by the `lane.execute` chaos hook).
+fn admit(ctx: &LaneCtx, mut job: Job) -> Option<Job> {
+    let now = Instant::now();
+    let mut expired = false;
     if let Some(meta) = job.meta_mut() {
-        let now = Instant::now();
         let wait = ns_of(now.duration_since(meta.submitted));
         meta.dequeued = Some(now);
         meta.record(&ctx.obs, Stage::QueueWait, wait);
+        expired = meta.deadline.is_some_and(|d| now > d);
     }
+    if expired {
+        if let Some(reply) = take_reply(job) {
+            reply.send(Response::err_kind(
+                "deadline_exceeded",
+                "queue wait exceeded the request deadline budget",
+            ));
+        }
+        return None;
+    }
+    inject_execute_fault(job)
+}
+
+/// Pull the reply out of any job kind (`Shutdown` carries none).
+fn take_reply(job: Job) -> Option<Reply> {
+    match job {
+        Job::Predict(_, _, reply)
+        | Job::BatchSize { reply, .. }
+        | Job::PixelSize { reply, .. }
+        | Job::Recommend { reply, .. }
+        | Job::Plan { reply, .. }
+        | Job::Ingest { reply, .. }
+        | Job::Onboard { reply, .. }
+        | Job::Reload { reply, .. } => Some(reply),
+        Job::Shutdown => None,
+    }
+}
+
+/// Chaos hook on every lane's execution path: an armed `lane.execute`
+/// failpoint either panics inside the hook — unwinding into
+/// [`supervise`](crate::coordinator::dispatch), with every in-flight
+/// [`Reply`] drop guard answering `internal_error` — or, for
+/// `return-err`, consumes the job with a structured `internal_error`
+/// reply. `Shutdown` is never faulted (a swallowed shutdown would hang
+/// the pool's drop join), and a disarmed point costs one relaxed load.
+fn inject_execute_fault(job: Job) -> Option<Job> {
+    if matches!(job, Job::Shutdown) || crate::fp!("lane.execute").is_none() {
+        return Some(job);
+    }
+    if let Some(reply) = take_reply(job) {
+        reply.send(Response::err_kind(
+            "internal_error",
+            "injected lane.execute failure",
+        ));
+    }
+    None
 }
 
 /// Predict groups coalesce per (registry epoch, anchor, target): one
@@ -101,24 +160,26 @@ fn absorb(job: Job, predicts: &mut PredictGroups, immediate: &mut Vec<Job>, shut
 
 /// Dynamic-batching predict loop (phase-1 `predict` + the cheap
 /// interpolation ops routed round-robin by the dispatcher).
-pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
+pub fn predict_lane(rt: &Runtime, rx: &Receiver<Job>, ctx: &LaneCtx) {
     loop {
         // block for the first job
-        let mut first = match rx.recv() {
+        let first = match rx.recv() {
             Ok(j) => j,
             Err(_) => return,
         };
-        mark_dequeued(ctx, &mut first);
         let mut predicts: PredictGroups = BTreeMap::new();
         let mut immediate = Vec::new();
         let mut shutdown = false;
-        absorb(first, &mut predicts, &mut immediate, &mut shutdown);
+        if let Some(first) = admit(ctx, first) {
+            absorb(first, &mut predicts, &mut immediate, &mut shutdown);
+        }
         // greedy drain: take everything already queued without sleeping
         loop {
             match rx.try_recv() {
-                Ok(mut j) => {
-                    mark_dequeued(ctx, &mut j);
-                    absorb(j, &mut predicts, &mut immediate, &mut shutdown)
+                Ok(j) => {
+                    if let Some(j) = admit(ctx, j) {
+                        absorb(j, &mut predicts, &mut immediate, &mut shutdown)
+                    }
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -137,9 +198,10 @@ pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
             while let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
             {
                 match rx.recv_timeout(remaining) {
-                    Ok(mut j) => {
-                        mark_dequeued(ctx, &mut j);
-                        absorb(j, &mut predicts, &mut immediate, &mut shutdown);
+                    Ok(j) => {
+                        if let Some(j) = admit(ctx, j) {
+                            absorb(j, &mut predicts, &mut immediate, &mut shutdown);
+                        }
                         // shutdown is always the queue's last job — don't
                         // wait out the rest of the window behind it
                         if shutdown {
@@ -167,9 +229,9 @@ pub fn predict_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
 
 /// FIFO advisor loop: one long-running sweep at a time. Handles every job
 /// kind defensively (the dispatcher only routes `recommend`/`plan` here).
-pub fn advisor_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
-    for mut job in rx {
-        mark_dequeued(ctx, &mut job);
+pub fn advisor_lane(rt: &Runtime, rx: &Receiver<Job>, ctx: &LaneCtx) {
+    for job in rx {
+        let Some(job) = admit(ctx, job) else { continue };
         match job {
             Job::Shutdown => return,
             Job::Predict(req, snap, reply) => {
@@ -191,10 +253,10 @@ pub fn advisor_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
 /// takes — which is exactly why this loop gets its own replica. Handles
 /// every job kind defensively (the dispatcher only routes
 /// `ingest`/`onboard`/`reload` here).
-pub fn trainer_lane(rt: &Runtime, rx: Receiver<Job>, ctx: &LaneCtx) {
+pub fn trainer_lane(rt: &Runtime, rx: &Receiver<Job>, ctx: &LaneCtx) {
     let stats = &ctx.stats;
-    for mut job in rx {
-        mark_dequeued(ctx, &mut job);
+    for job in rx {
+        let Some(job) = admit(ctx, job) else { continue };
         let t0 = Instant::now();
         match job {
             Job::Shutdown => return,
@@ -600,5 +662,38 @@ mod tests {
         assert_eq!(groups[&(2, Instance::G4dn, Instance::P3)].1.len(), 1);
         assert!(immediate.is_empty());
         assert!(!shutdown);
+    }
+
+    /// A job whose deadline already passed is shed at dequeue with the
+    /// structured `deadline_exceeded` error, never executed; one with
+    /// headroom passes through untouched.
+    #[test]
+    fn admit_sheds_expired_jobs_with_deadline_exceeded() {
+        use crate::coordinator::registry::test_registry;
+        use std::sync::mpsc::channel;
+        let ctx = LaneCtx {
+            cache: Arc::new(PredictionCache::new(4, 64)),
+            scaling: Arc::new(ScalingTable::new()),
+            stats: Arc::new(EngineStats::default()),
+            registry: Arc::new(test_registry("deadline")),
+            onboard: OnboardOptions::default(),
+            obs: Arc::new(Obs::new(250.0, 1)),
+        };
+        let (tx, rx) = channel();
+        let mut reply = Reply::channel(tx);
+        reply.meta_mut().deadline = Some(Instant::now() - Duration::from_millis(5));
+        let job = Job::Reload { only_if_changed: false, reply };
+        assert!(admit(&ctx, job).is_none(), "expired job must be shed");
+        match rx.try_recv().unwrap() {
+            Response::ErrKind { kind, .. } => assert_eq!(kind, "deadline_exceeded"),
+            other => panic!("expected deadline_exceeded, got {other:?}"),
+        }
+        // headroom: admitted, and no reply is sent at admission
+        let (tx, rx) = channel();
+        let mut reply = Reply::channel(tx);
+        reply.meta_mut().deadline = Some(Instant::now() + Duration::from_secs(60));
+        let job = Job::Reload { only_if_changed: false, reply };
+        assert!(admit(&ctx, job).is_some());
+        assert!(rx.try_recv().is_err(), "no reply may be sent at admission");
     }
 }

@@ -1172,6 +1172,9 @@ pub enum Response {
         active_conns: u64,
         /// `open_conns - active_conns` (gauge).
         idle_conns: u64,
+        /// Lane replicas respawned by the supervisor after a panic
+        /// (counter; 0 on a healthy process).
+        lane_restarts: u64,
         /// Connections closed by the idle-timeout sweep (counter).
         evictions: u64,
         /// Reactor threads serving this listener.
@@ -1270,6 +1273,7 @@ impl Response {
                 open_conns,
                 active_conns,
                 idle_conns,
+                lane_restarts,
                 evictions,
                 reactor_threads,
                 uptime_s,
@@ -1283,6 +1287,7 @@ impl Response {
                 w.key("cache_misses").num(*cache_misses as f64);
                 w.key("evictions").num(*evictions as f64);
                 w.key("idle_conns").num(*idle_conns as f64);
+                w.key("lane_restarts").num(*lane_restarts as f64);
                 w.key("last_reload").num(*last_reload as f64);
                 w.key("ok").bool_(true);
                 w.key("open_conns").num(*open_conns as f64);
@@ -1792,6 +1797,7 @@ mod tests {
                     open_conns: 21,
                     active_conns: 5,
                     idle_conns: 16,
+                    lane_restarts: 1,
                     evictions: 7,
                     reactor_threads: 2,
                     uptime_s: 12.5,
@@ -1812,6 +1818,7 @@ mod tests {
                     o.set("open_conns", Json::Num(21.0));
                     o.set("active_conns", Json::Num(5.0));
                     o.set("idle_conns", Json::Num(16.0));
+                    o.set("lane_restarts", Json::Num(1.0));
                     o.set("evictions", Json::Num(7.0));
                     o.set("reactor_threads", Json::Num(2.0));
                     o.set("uptime_s", Json::Num(12.5));

@@ -48,6 +48,7 @@ use crate::coordinator::protocol::Response;
 use crate::coordinator::router::{self, ConnScratch, RouteOutcome};
 use crate::coordinator::server::MAX_LINE_BYTES;
 use crate::obs::{OpClass, Stage, Temp, TraceEntry};
+use crate::util::failpoint::Hit;
 use crate::util::poll::{Event, Interest, Poller, Waker};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -745,6 +746,17 @@ fn deliver(ctx: &ReactorCtx, id: u64, conn: &mut Conn, resp: Response, mut meta:
 /// buffer, to be flushed on writable readiness. The warm path writes
 /// directly from the reused scratch buffer — no copies, no allocations.
 fn queue_write(conn: &mut Conn) -> bool {
+    // failpoint `reactor.write`: partial-write(n) caps this call's socket
+    // write at n bytes (the rest spills to the backlog, exercising the
+    // writable-readiness flush path without a slow peer); return-err
+    // closes the connection as a hard write error; delay stalls inline.
+    // Unarmed, this is a single relaxed atomic load — the warm path
+    // stays allocation-free.
+    let cap = match crate::fp!("reactor.write") {
+        None => usize::MAX,
+        Some(Hit::PartialWrite(n)) => n,
+        Some(Hit::ReturnErr) => return false,
+    };
     if conn.has_backlog() {
         // keep strict response order: never bypass queued bytes
         let out = &conn.scratch.out;
@@ -752,8 +764,9 @@ fn queue_write(conn: &mut Conn) -> bool {
         return true;
     }
     let mut off = 0;
-    while off < conn.scratch.out.len() {
-        match conn.stream.write(&conn.scratch.out[off..]) {
+    let end = conn.scratch.out.len().min(cap);
+    while off < end {
+        match conn.stream.write(&conn.scratch.out[off..end]) {
             Ok(0) => return false,
             Ok(n) => {
                 off += n;
@@ -773,8 +786,18 @@ fn queue_write(conn: &mut Conn) -> bool {
 
 /// Writable readiness: push the spilled backlog out.
 fn flush_backlog(conn: &mut Conn) -> bool {
-    while conn.outpos < conn.outbuf.len() {
-        match conn.stream.write(&conn.outbuf[conn.outpos..]) {
+    // failpoint `reactor.flush`: partial-write(n) caps the flush at n
+    // bytes per readiness event (keeps a backlog alive so write-stall
+    // sweeps see it); return-err drops the connection; delay stalls the
+    // flush inline. A single relaxed atomic load when unarmed.
+    let cap = match crate::fp!("reactor.flush") {
+        None => usize::MAX,
+        Some(Hit::PartialWrite(n)) => n,
+        Some(Hit::ReturnErr) => return false,
+    };
+    let end = conn.outbuf.len().min(conn.outpos.saturating_add(cap));
+    while conn.outpos < end {
+        match conn.stream.write(&conn.outbuf[conn.outpos..end]) {
             Ok(0) => return false,
             Ok(n) => {
                 conn.outpos += n;
@@ -785,7 +808,9 @@ fn flush_backlog(conn: &mut Conn) -> bool {
             Err(_) => return false,
         }
     }
-    conn.outbuf.clear();
-    conn.outpos = 0;
+    if conn.outpos >= conn.outbuf.len() {
+        conn.outbuf.clear();
+        conn.outpos = 0;
+    }
     true
 }

@@ -38,6 +38,14 @@
 //!   derivation to [`Profet::train`]), persists the merged model set, and
 //!   publishes it as a new epoch. Training runs on the coordinator's
 //!   dedicated trainer lane, so it can never block predict traffic.
+//! * **Crash safety.** Model persistence goes through [`Profet::save`]'s
+//!   temp-sibling + fsync + manifest-last rename protocol, and
+//!   [`ModelRegistry::open`]/[`ModelRegistry::reload`] sweep orphaned
+//!   temp dirs a crashed save left behind. Staged measurements are a
+//!   checksummed append log whose replay skips (and counts) torn or
+//!   corrupt lines instead of failing the onboard. Fault coverage lives
+//!   in `tests/chaos.rs`; the invariants are documented in
+//!   `docs/RESILIENCE.md`.
 //!
 //! The registry is deliberately runtime-free: everything needing the
 //! non-`Send` PJRT [`Runtime`] (probe validation, training) borrows one
@@ -179,6 +187,13 @@ impl IngestRequest {
 /// serialized by construction — only the coordinator's single trainer
 /// lane touches the staging area — so no file locking is needed.
 ///
+/// Each line is `<16-hex-fnv1a> <json>`: the checksum lets replay detect
+/// a torn tail (a crash mid-append) and skip it instead of failing the
+/// whole onboard. Legacy lines that start directly with `{` (written
+/// before the checksum existed) are still accepted. An append onto a
+/// file whose last record is torn first terminates the torn bytes with a
+/// newline, so one crash never corrupts later measurements.
+///
 /// Per-pair line counts are cached in memory (seeded from the file on
 /// first touch), so an N-measurement ingest stream costs N appends, not
 /// the N² line re-counts a count-by-re-reading scheme would.
@@ -206,8 +221,11 @@ impl StagingArea {
     }
 
     /// Append one measurement; returns the total staged count for the
-    /// pair afterwards.
+    /// pair afterwards. The record is checksummed (see the type docs) so
+    /// a crash mid-append leaves a tail that replay skips, not a poisoned
+    /// file.
     pub fn append(&self, req: &IngestRequest) -> Result<usize> {
+        use std::io::{Read as _, Seek as _, SeekFrom};
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating {}", self.dir.display()))?;
         // seed the cached count from disk BEFORE the write so the
@@ -216,11 +234,40 @@ impl StagingArea {
         let base = self.count(req.anchor, req.target);
         let path = self.pair_path(req.anchor, req.target);
         let mut f = std::fs::OpenOptions::new()
+            .read(true)
             .create(true)
             .append(true)
             .open(&path)
             .with_context(|| format!("opening {}", path.display()))?;
-        writeln!(f, "{}", req.to_json())?;
+        // heal a torn tail left by a crashed append: if the file doesn't
+        // end in a newline, start this record on a fresh line so the torn
+        // bytes stay isolated on their own (checksum-invalid, skipped)
+        // line instead of fusing with this record
+        let needs_sep = f.metadata()?.len() > 0 && {
+            f.seek(SeekFrom::End(-1))?;
+            let mut last = [0u8; 1];
+            f.read_exact(&mut last)?;
+            last[0] != b'\n'
+        };
+        let json = req.to_json().to_string();
+        let mut line = String::with_capacity(json.len() + 18);
+        if needs_sep {
+            line.push('\n');
+        }
+        line.push_str(&format!("{:016x} {json}\n", crate::util::fnv1a(json.as_bytes())));
+        match crate::fp!("registry.staging.append") {
+            Some(crate::util::failpoint::Hit::ReturnErr) => {
+                anyhow::bail!("failpoint registry.staging.append: injected append failure")
+            }
+            Some(crate::util::failpoint::Hit::PartialWrite(n)) => {
+                let n = n.min(line.len());
+                f.write_all(&line.as_bytes()[..n])?;
+                f.flush()?;
+                anyhow::bail!("failpoint registry.staging.append: torn append after {n} bytes")
+            }
+            None => {}
+        }
+        f.write_all(line.as_bytes())?;
         f.flush()?;
         let n = base + 1;
         self.counts
@@ -233,13 +280,17 @@ impl StagingArea {
     /// Staged measurement count for one pair (0 when nothing staged).
     /// Served from the in-memory counter once a pair has been touched;
     /// cold pairs (e.g. staged by a previous process) are counted from
-    /// the file once and cached.
+    /// the file once and cached. Only checksum-valid lines count, so a
+    /// torn tail can never inflate the [`MIN_STAGED_PER_PAIR`] gate.
     pub fn count(&self, anchor: Instance, target: Instance) -> usize {
         if let Some(&n) = self.counts.lock().unwrap().get(&(anchor, target)) {
             return n;
         }
         let n = match std::fs::read_to_string(self.pair_path(anchor, target)) {
-            Ok(text) => text.lines().filter(|l| !l.trim().is_empty()).count(),
+            Ok(text) => text
+                .lines()
+                .filter(|l| !l.trim().is_empty() && parse_staged_line(l).is_some())
+                .count(),
             Err(_) => 0,
         };
         self.counts.lock().unwrap().insert((anchor, target), n);
@@ -275,6 +326,11 @@ impl StagingArea {
     /// target-side profile is not collected by `ingest` and is not needed
     /// for cross-instance training). Returns the corpus and the total
     /// measurement count.
+    ///
+    /// Torn or corrupt lines (checksum mismatch, unparseable JSON, a
+    /// shape that doesn't decode) are skipped and counted — losing one
+    /// measurement to a crash must never fail the onboard that consumes
+    /// the other N.
     pub fn corpus_for(&self, pairs: &[(Instance, Instance)]) -> Result<(Corpus, usize)> {
         let mut corpus = Corpus::default();
         let mut total = 0usize;
@@ -282,43 +338,25 @@ impl StagingArea {
             let path = self.pair_path(anchor, target);
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading {}", path.display()))?;
-            for (ln, line) in text.lines().enumerate() {
+            let mut skipped = 0usize;
+            for line in text.lines() {
                 if line.trim().is_empty() {
                     continue;
                 }
-                let j = Json::parse(line).with_context(|| {
-                    format!("staging {}:{} is not valid JSON", path.display(), ln + 1)
-                })?;
-                let model = ModelId::from_name(j.req_str("model")?)
-                    .ok_or_else(|| anyhow!("staging line {}: unknown model", ln + 1))?;
-                let workload = Workload::new(model, j.req_usize("batch")?, j.req_usize("pixels")?);
-                let mut profile = BTreeMap::new();
-                if let Some(Json::Obj(m)) = j.get("profile") {
-                    for (op, v) in m {
-                        profile.insert(
-                            op.clone(),
-                            v.as_f64()
-                                .ok_or_else(|| anyhow!("staging line {}: bad profile", ln + 1))?,
-                        );
-                    }
-                }
-                let mut runs = BTreeMap::new();
-                runs.insert(
-                    anchor,
-                    RunData {
-                        profile,
-                        latency_ms: j.req_f64("anchor_latency_ms")?,
-                    },
-                );
-                runs.insert(
-                    target,
-                    RunData {
-                        profile: BTreeMap::new(),
-                        latency_ms: j.req_f64("target_latency_ms")?,
-                    },
-                );
-                corpus.entries.push(Entry { workload, runs });
+                let Some(entry) =
+                    parse_staged_line(line).and_then(|j| entry_of(&j, anchor, target))
+                else {
+                    skipped += 1;
+                    continue;
+                };
+                corpus.entries.push(entry);
                 total += 1;
+            }
+            if skipped > 0 {
+                eprintln!(
+                    "registry: skipped {skipped} torn/corrupt staged line(s) in {}",
+                    path.display()
+                );
             }
         }
         Ok((corpus, total))
@@ -335,6 +373,56 @@ impl StagingArea {
         self.counts.lock().unwrap().remove(&(anchor, target));
         Ok(())
     }
+}
+
+/// Validate one staged line and return its JSON payload. Checksummed
+/// lines are `<16-hex-fnv1a> <json>`; legacy lines start directly with
+/// `{` and carry no checksum. `None` means torn/corrupt (truncated hex
+/// prefix, checksum mismatch, unparseable JSON) — callers skip it.
+fn parse_staged_line(line: &str) -> Option<Json> {
+    let line = line.trim_end();
+    let json = if line.starts_with('{') {
+        line // legacy, pre-checksum format
+    } else {
+        let hex = line.get(..16)?;
+        let rest = line.get(16..)?.strip_prefix(' ')?;
+        let sum = u64::from_str_radix(hex, 16).ok()?;
+        if sum != crate::util::fnv1a(rest.as_bytes()) {
+            return None;
+        }
+        rest
+    };
+    Json::parse(json).ok()
+}
+
+/// Decode one staged measurement into a corpus entry; `None` for a
+/// payload whose shape doesn't decode (treated like a torn line by
+/// [`StagingArea::corpus_for`]).
+fn entry_of(j: &Json, anchor: Instance, target: Instance) -> Option<Entry> {
+    let model = ModelId::from_name(j.req_str("model").ok()?)?;
+    let workload = Workload::new(model, j.req_usize("batch").ok()?, j.req_usize("pixels").ok()?);
+    let mut profile = BTreeMap::new();
+    if let Some(Json::Obj(m)) = j.get("profile") {
+        for (op, v) in m {
+            profile.insert(op.clone(), v.as_f64()?);
+        }
+    }
+    let mut runs = BTreeMap::new();
+    runs.insert(
+        anchor,
+        RunData {
+            profile,
+            latency_ms: j.req_f64("anchor_latency_ms").ok()?,
+        },
+    );
+    runs.insert(
+        target,
+        RunData {
+            profile: BTreeMap::new(),
+            latency_ms: j.req_f64("target_latency_ms").ok()?,
+        },
+    );
+    Some(Entry { workload, runs })
 }
 
 // ---------------------------------------------------------------------------
@@ -391,6 +479,16 @@ impl ModelRegistry {
     /// lane once it has a [`Runtime`] — see
     /// [`ModelRegistry::validate`].
     pub fn open(model_dir: PathBuf) -> Result<ModelRegistry> {
+        // a crash mid-save (see `Profet::save`) can leave orphaned
+        // `<dir>.tmp.<pid>.<seq>` staging siblings behind; sweep them
+        // before the load so they never accumulate across restarts
+        let swept = crate::predictor::sweep_orphaned_saves(&model_dir);
+        if swept > 0 {
+            eprintln!(
+                "registry: swept {swept} orphaned save dir(s) beside {}",
+                model_dir.display()
+            );
+        }
         let profet = Profet::load(&model_dir)
             .with_context(|| format!("models: {}", model_dir.display()))?;
         Ok(ModelRegistry::with_model(profet, model_dir))
@@ -559,6 +657,18 @@ impl ModelRegistry {
         rt: &Runtime,
         only_if_changed: bool,
     ) -> Result<Option<u64>, RegistryError> {
+        // recover first: a crashed save leaves orphaned temp siblings
+        // (never a torn serving dir — see `Profet::save`); sweeping here
+        // keeps long-lived watched processes tidy without a restart.
+        // Orphans live BESIDE the model dir, so this can't perturb the
+        // fingerprint captured below.
+        let swept = crate::predictor::sweep_orphaned_saves(&self.model_dir);
+        if swept > 0 {
+            eprintln!(
+                "registry: swept {swept} orphaned save dir(s) beside {}",
+                self.model_dir.display()
+            );
+        }
         // capture the fingerprint BEFORE loading: this is the directory
         // state the candidate corresponds to. A concurrent writer racing
         // the load changes the live fingerprint past this value, so the
@@ -728,6 +838,17 @@ mod tests {
         dir
     }
 
+    // the failpoint registry is process-global and lib tests run in
+    // parallel: every test that either arms `registry.staging.append` or
+    // calls `StagingArea::append` takes this lock so an armed window
+    // can't fail an unrelated test's append.
+    static FP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn fp_lock() -> std::sync::MutexGuard<'static, ()> {
+        // a panicking holder (failed assert) must not wedge later tests
+        FP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn ingest(anchor: Instance, target: Instance, batch: usize) -> IngestRequest {
         IngestRequest {
             anchor,
@@ -791,6 +912,7 @@ mod tests {
 
     #[test]
     fn staging_append_count_pairs_corpus_roundtrip() {
+        let _g = fp_lock();
         let dir = temp_dir("staging");
         let staging = StagingArea::new(&dir);
         assert_eq!(staging.count(Instance::G4dn, Instance::G5), 0);
@@ -824,7 +946,86 @@ mod tests {
     }
 
     #[test]
+    fn torn_or_corrupt_staged_tail_is_skipped_not_fatal() {
+        let _g = fp_lock();
+        let dir = temp_dir("torn");
+        let staging = StagingArea::new(&dir);
+        for b in [16, 32] {
+            staging.append(&ingest(Instance::G4dn, Instance::G5, b)).unwrap();
+        }
+        let path = staging.dir().join("g4dn_g5.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // every written line carries a checksum over its JSON payload
+        for line in text.lines() {
+            let (hex, rest) = line.split_at(16);
+            assert_eq!(
+                u64::from_str_radix(hex, 16).unwrap(),
+                crate::util::fnv1a(rest[1..].as_bytes())
+            );
+        }
+        // a legacy (pre-checksum) line still replays; a torn tail — the
+        // first bytes of a checksummed record, no newline — does not
+        let legacy = ingest(Instance::G4dn, Instance::G5, 64).to_json().to_string();
+        let torn = &text.lines().next().unwrap()[..25];
+        std::fs::write(&path, format!("{text}{legacy}\n{torn}")).unwrap();
+
+        // a fresh staging area (cold count cache) sees only valid lines
+        let staging = StagingArea::new(&dir);
+        assert_eq!(staging.count(Instance::G4dn, Instance::G5), 3);
+        let (corpus, total) = staging
+            .corpus_for(&[(Instance::G4dn, Instance::G5)])
+            .unwrap();
+        assert_eq!(total, 3);
+        assert_eq!(corpus.entries.len(), 3);
+        assert_eq!(corpus.entries[2].workload.batch, 64);
+
+        // appending onto the torn tail heals it: the new record starts on
+        // its own line and the torn bytes stay isolated and skipped
+        staging.append(&ingest(Instance::G4dn, Instance::G5, 128)).unwrap();
+        let staging = StagingArea::new(&dir);
+        assert_eq!(staging.count(Instance::G4dn, Instance::G5), 4);
+        let (corpus, total) = staging
+            .corpus_for(&[(Instance::G4dn, Instance::G5)])
+            .unwrap();
+        assert_eq!(total, 4);
+        assert_eq!(corpus.entries[3].workload.batch, 128);
+    }
+
+    #[test]
+    fn injected_torn_append_is_invisible_to_replay() {
+        let _g = fp_lock();
+        let dir = temp_dir("fpappend");
+        let staging = StagingArea::new(&dir);
+        staging.append(&ingest(Instance::G4dn, Instance::G5, 16)).unwrap();
+        crate::util::failpoint::configure(
+            "registry.staging.append",
+            crate::util::failpoint::Action::PartialWrite(10),
+        );
+        let r = staging.append(&ingest(Instance::G4dn, Instance::G5, 32));
+        crate::util::failpoint::clear("registry.staging.append");
+        assert!(r.is_err(), "torn append must surface as an error");
+        // the torn half-record is invisible to a cold recount and replay
+        let staging = StagingArea::new(&dir);
+        assert_eq!(staging.count(Instance::G4dn, Instance::G5), 1);
+        let (_, total) = staging
+            .corpus_for(&[(Instance::G4dn, Instance::G5)])
+            .unwrap();
+        assert_eq!(total, 1);
+        // and the next append lands cleanly after the torn bytes
+        assert_eq!(
+            staging.append(&ingest(Instance::G4dn, Instance::G5, 64)).unwrap(),
+            2
+        );
+        let (corpus, total) = staging
+            .corpus_for(&[(Instance::G4dn, Instance::G5)])
+            .unwrap();
+        assert_eq!(total, 2);
+        assert_eq!(corpus.entries[1].workload.batch, 64);
+    }
+
+    #[test]
     fn onboard_without_staged_data_is_a_distinct_error() {
+        let _g = fp_lock();
         let dir = temp_dir("nostage");
         let reg = ModelRegistry::with_model(empty_profet(), dir);
         // no runtime needed: the staged-pairs check fires before training
@@ -848,6 +1049,7 @@ mod tests {
 
     #[test]
     fn ingest_does_not_disturb_the_model_dir_fingerprint() {
+        let _g = fp_lock();
         let dir = temp_dir("fingerprint");
         std::fs::write(dir.join("feature_space.json"), "{}").unwrap();
         let before = dir_fingerprint(&dir);

@@ -151,6 +151,9 @@ fn submit(
         let meta = r.meta_mut();
         meta.op = op;
         meta.temp = Temp::Cold;
+        // absolute expiry from the server-wide deadline budget; the lane
+        // sheds the job at dequeue if the queue wait alone blew it
+        meta.deadline = pool.default_deadline().map(|d| meta.submitted + d);
         meta.trace = pool.obs().maybe_trace();
         if let Some(t) = meta.trace.as_deref_mut() {
             t.note(Stage::Parse, parse_ns);
@@ -291,6 +294,7 @@ fn route_request(
                 open_conns,
                 active_conns,
                 idle_conns: open_conns - active_conns,
+                lane_restarts: s.lane_restarts.load(Ordering::Relaxed), // ordering: stats-only gauge
                 evictions: s.conns.evicted.load(Ordering::Relaxed), // ordering: stats-only gauge
                 reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed), // ordering: stats-only gauge
                 uptime_s: pool.obs().uptime_s(),
@@ -312,6 +316,7 @@ fn route_request(
                 ("cache_misses", s.cache.misses.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("evictions", s.conns.evicted.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("idle_conns", (open - active) as f64),
+                ("lane_restarts", s.lane_restarts.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("open_conns", open as f64),
                 ("overloaded", s.overloaded.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("predict_lanes", pool.predict_lanes() as f64),

@@ -299,23 +299,39 @@ fn model_dir_watch_loop(pool: &EnginePool, interval: Duration, stop: std::sync::
             // a stop signal or a dropped server handle ends the watch
             Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
         }
-        let (tx, rx) = std::sync::mpsc::channel();
-        if pool
-            .submit(Job::Reload {
-                only_if_changed: true,
-                reply: Reply::channel(tx),
-            })
-            .is_err()
-        {
-            continue; // trainer queue momentarily full — try next tick
+        // failpoint `server.watch.tick`: fault one poll tick — return-err
+        // skips it (a vanished/unreadable model dir looks the same: the
+        // served epoch is untouched), delay stalls it, panic exercises the
+        // catch_unwind below. Unarmed: one relaxed atomic load per tick.
+        if crate::fp!("server.watch.tick").is_some() {
+            eprintln!("model-dir watch: injected tick fault; keeping the served epoch");
+            continue;
         }
-        match rx.recv() {
-            Ok(Response::Reloaded { .. }) => {}
-            Ok(Response::ErrKind { kind, msg }) => {
-                eprintln!("model-dir watch: reload refused ({kind}): {msg}");
+        // a panic anywhere in the tick (including an injected one) must
+        // not kill the watcher: the served epoch stays live and the next
+        // interval tries again
+        let tick = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            if pool
+                .submit(Job::Reload {
+                    only_if_changed: true,
+                    reply: Reply::channel(tx),
+                })
+                .is_err()
+            {
+                return; // trainer queue momentarily full — try next tick
             }
-            Ok(Response::Err(msg)) => eprintln!("model-dir watch: reload failed: {msg}"),
-            Ok(_) | Err(_) => {}
+            match rx.recv() {
+                Ok(Response::Reloaded { .. }) => {}
+                Ok(Response::ErrKind { kind, msg }) => {
+                    eprintln!("model-dir watch: reload refused ({kind}): {msg}");
+                }
+                Ok(Response::Err(msg)) => eprintln!("model-dir watch: reload failed: {msg}"),
+                Ok(_) | Err(_) => {}
+            }
+        }));
+        if tick.is_err() {
+            eprintln!("model-dir watch: tick panicked; keeping the served epoch");
         }
     }
 }
@@ -349,7 +365,9 @@ mod tests {
     // ---- pool-backed server behavior (mock lanes, no PJRT needed) ----
 
     /// Mock lane: answers every job `ok`, optionally after a delay.
-    fn slow_echo(delay: Duration) -> impl Fn(usize, Receiver<Job>) + Send + Sync + Clone + 'static {
+    fn slow_echo(
+        delay: Duration,
+    ) -> impl Fn(usize, &Receiver<Job>) + Send + Sync + Clone + 'static {
         move |_idx, rx| {
             for job in rx {
                 match job {
@@ -483,7 +501,7 @@ mod tests {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let picked = std::sync::Arc::new(AtomicUsize::new(0));
         let picked2 = picked.clone();
-        let body = move |_idx: usize, rx: Receiver<Job>| {
+        let body = move |_idx: usize, rx: &Receiver<Job>| {
             for job in rx {
                 match job {
                     Job::Shutdown => return,
@@ -603,7 +621,7 @@ mod tests {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let reloads = std::sync::Arc::new(AtomicUsize::new(0));
         let r2 = reloads.clone();
-        let advisor = move |rx: Receiver<Job>| {
+        let advisor = move |rx: &Receiver<Job>| {
             for job in rx {
                 match job {
                     Job::Shutdown => return,
@@ -642,6 +660,73 @@ mod tests {
             t0.elapsed() < Duration::from_secs(5),
             "drain waited out the watcher interval"
         );
+    }
+
+    /// Watcher resilience (the deleted/unreadable-model-dir scenario): a
+    /// reload that panics mid-tick gets its lane respawned and the watcher
+    /// keeps polling; reloads that fail cleanly afterwards are logged and
+    /// skipped. Through it all the served epoch keeps answering — no
+    /// panic, no spurious reload, no wedged watcher.
+    #[test]
+    fn watcher_keeps_serving_when_reload_panics_or_fails() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ticks = std::sync::Arc::new(AtomicUsize::new(0));
+        let t2 = ticks.clone();
+        let advisor = move |rx: &Receiver<Job>| {
+            for job in rx {
+                match job {
+                    Job::Shutdown => return,
+                    Job::Reload { reply, .. } => {
+                        // tick 0: the model dir vanished so violently the
+                        // lane panics — the supervisor must respawn it and
+                        // the reply drop guard answers the watcher. Later
+                        // ticks: a clean structured failure.
+                        let n = t2.fetch_add(1, Ordering::SeqCst);
+                        if n == 0 {
+                            panic!("injected reload panic: model dir deleted mid-watch");
+                        }
+                        reply.send(crate::coordinator::protocol::Response::err_kind(
+                            "validation_failed",
+                            "model dir unreadable mid-watch",
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        };
+        let body = slow_echo(Duration::ZERO);
+        let pool = EnginePool::mock(1, 16, 8, body, advisor);
+        let handle =
+            serve_pool_watched("127.0.0.1:0", pool, 8, Some(Duration::from_millis(20))).unwrap();
+
+        // the watcher must survive the panicking tick AND keep polling
+        // through the cleanly-failing ones
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while ticks.load(Ordering::SeqCst) < 3 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "watcher wedged after a failing reload tick"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            handle
+                .stats
+                .lane_restarts
+                .load(std::sync::atomic::Ordering::Relaxed)
+                >= 1,
+            "panicking reload lane was not respawned"
+        );
+
+        // the old epoch keeps serving: a fresh connection still answers
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        stream.write_all(health_line().as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"status\":\"healthy\""), "{resp}");
+        handle.stop();
     }
 
     #[test]

@@ -101,6 +101,12 @@ pub struct LoadgenOptions {
     pub anchor: String,
     /// Target instance key for generated `predict` requests.
     pub target: String,
+    /// Bounded attempts for each connection's *initial* connect
+    /// (`--connect-retries`): attempt `i` backs off `10ms * 2^i` (capped
+    /// at 2 s) plus a deterministic per-connection jitter, so a fleet
+    /// racing a server still binding its listener spreads its
+    /// reconnects. `0` is treated as 1 (a single attempt, no retry).
+    pub connect_retries: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -113,6 +119,7 @@ impl Default for LoadgenOptions {
             predict_pct: 90,
             anchor: "g4dn".into(),
             target: "p3".into(),
+            connect_retries: 5,
         }
     }
 }
@@ -376,10 +383,13 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         let target = opts.target.clone();
         let rate = opts.rate;
         let predict_pct = opts.predict_pct;
+        let retries = opts.connect_retries;
         let handle = std::thread::Builder::new()
             .name(format!("loadgen-conn-{c}"))
             .spawn(move || {
-                conn_worker(&addr, start, c, conns, total, rate, predict_pct, &anchor, &target)
+                conn_worker(
+                    &addr, start, c, conns, total, rate, predict_pct, &anchor, &target, retries,
+                )
             })
             .context("spawning loadgen connection worker")?;
         handles.push(handle);
@@ -416,11 +426,12 @@ fn conn_worker(
     predict_pct: u32,
     anchor: &str,
     target: &str,
+    connect_retries: usize,
 ) -> ConnResult {
     let my_count = (conn_idx..total).step_by(conns).count() as u64;
-    let stream = match TcpStream::connect(addr) {
-        Ok(s) => s,
-        Err(_) => {
+    let stream = match connect_with_retries(addr, connect_retries, conn_idx) {
+        Some(s) => s,
+        None => {
             return ConnResult {
                 unsent: my_count,
                 ..ConnResult::default()
@@ -471,6 +482,37 @@ fn conn_worker(
     let mut result = reader.join().unwrap_or_default();
     result.unsent += unsent;
     result
+}
+
+/// Connect with bounded retries: on a refused/failed connect, sleep the
+/// [`retry_backoff`] schedule and try again, up to `attempts` total
+/// connect calls (`0` is treated as 1). Retries cover the *initial*
+/// connect only — once a stream exists, mid-run failures stay failures
+/// (they are part of what the run measures).
+fn connect_with_retries(addr: &str, attempts: usize, conn_idx: usize) -> Option<TcpStream> {
+    let attempts = attempts.max(1);
+    for attempt in 0..attempts {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Some(s),
+            Err(_) if attempt + 1 < attempts => {
+                std::thread::sleep(retry_backoff(addr, conn_idx, attempt));
+            }
+            Err(_) => return None,
+        }
+    }
+    None
+}
+
+/// Backoff before retrying attempt `attempt` (0-based): `10ms * 2^attempt`
+/// capped at 2 s, plus up to 25% deterministic jitter seeded by fnv1a
+/// over (addr, connection index, attempt) — the fleet's retries
+/// de-synchronize without a random source, and a given run's schedule is
+/// reproducible.
+fn retry_backoff(addr: &str, conn_idx: usize, attempt: usize) -> Duration {
+    let base_ms = 10u64.saturating_mul(1 << attempt.min(16)).min(2_000);
+    let seed = crate::util::fnv1a(format!("{addr}#{conn_idx}#{attempt}").as_bytes());
+    let jitter_ms = seed % (base_ms / 4 + 1);
+    Duration::from_millis(base_ms + jitter_ms)
 }
 
 fn read_responses(
@@ -727,6 +769,55 @@ mod tests {
     }
 
     #[test]
+    fn connect_backoff_schedule_is_bounded_and_deterministic() {
+        for attempt in 0..12 {
+            let base = 10u64.saturating_mul(1 << attempt.min(16)).min(2_000);
+            let d = retry_backoff("127.0.0.1:1", 3, attempt);
+            assert!(d >= Duration::from_millis(base), "attempt {attempt}: {d:?}");
+            assert!(
+                d <= Duration::from_millis(base + base / 4),
+                "attempt {attempt}: {d:?} exceeds 25% jitter over {base}ms"
+            );
+        }
+        // deterministic: same (addr, conn, attempt) → same delay
+        assert_eq!(retry_backoff("a", 0, 3), retry_backoff("a", 0, 3));
+        // jitter spreads the fleet: not every connection gets one delay
+        let distinct: std::collections::BTreeSet<Duration> =
+            (0..16).map(|c| retry_backoff("a", c, 3)).collect();
+        assert!(distinct.len() > 1, "jitter never varied across the fleet");
+    }
+
+    /// `--connect-retries` semantics: a refused port exhausts its bounded
+    /// attempts and gives up; a server that binds mid-backoff is reached.
+    #[test]
+    fn connect_retries_are_bounded_and_recover_when_the_server_appears() {
+        // reserve a port, then free it: nothing is listening
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        assert!(
+            connect_with_retries(&addr.to_string(), 2, 0).is_none(),
+            "connect to a dead port should exhaust its attempts"
+        );
+        // late-binding server: the listener appears while retries back off
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            std::net::TcpListener::bind(addr)
+        });
+        let stream = connect_with_retries(&addr.to_string(), 8, 0);
+        let listener = server.join().unwrap();
+        assert!(
+            listener.is_ok(),
+            "reserved port was taken by another process — rerun"
+        );
+        assert!(
+            stream.is_some(),
+            "retries never reached the late-binding server"
+        );
+    }
+
+    #[test]
     fn classification_matches_wire_shapes() {
         assert_eq!(classify("{\"latency_ms\":1.0,\"ok\":true}"), Outcome::Ok);
         assert_eq!(
@@ -741,7 +832,7 @@ mod tests {
     /// and the report serializes to the documented schema.
     #[test]
     fn end_to_end_run_against_mock_server_loses_nothing() {
-        let body = |_idx: usize, rx: JobReceiver<Job>| {
+        let body = |_idx: usize, rx: &JobReceiver<Job>| {
             for job in rx {
                 match job {
                     Job::Shutdown => return,

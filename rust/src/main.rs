@@ -79,10 +79,11 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loa
                  [--queue-cap 512] [--advisor-queue-cap 8] [--max-conns 256]
                  [--reactor-threads N] [--idle-timeout SECS]
                  [--model-dir-watch SECS] [--trace-slow-ms MS]
-                 [--trace-sample N]
+                 [--trace-sample N] [--default-deadline-ms MS]
+                 [--failpoints 'name=action;...']
   repro loadgen  [--addr 127.0.0.1:7878] [--rate 200] [--duration 10]
                  [--conns 16] [--predict-pct 90] [--anchor g4dn] [--target p3]
-                 [--out BENCH_serve.json] [--strict]
+                 [--connect-retries 5] [--out BENCH_serve.json] [--strict]
   repro lint     [--root PATH] [--json] [--audit]";
 
 fn run() -> Result<()> {
@@ -255,6 +256,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let model_dir = args.get_or("models", "models");
     let defaults = repro::coordinator::ServeOptions::default();
+    // chaos injection (docs/RESILIENCE.md): `REPRO_FAILPOINTS` first, then
+    // `--failpoints` on top (the flag wins on a name collision)
+    repro::util::failpoint::init_from_env().map_err(|e| anyhow!("REPRO_FAILPOINTS: {e}"))?;
+    if let Some(spec) = args.get("failpoints") {
+        repro::util::failpoint::configure_from_str(spec)
+            .map_err(|e| anyhow!("--failpoints: {e}"))?;
+    }
+    // `--default-deadline-ms 250` sheds any engine job still queued 250 ms
+    // after admission with a structured `deadline_exceeded`; omitted =
+    // no deadline (jobs wait out the queue)
+    let default_deadline = match args.get("default-deadline-ms") {
+        None => defaults.pool.default_deadline,
+        Some(v) => {
+            let ms: u64 = v.parse().with_context(|| "--default-deadline-ms")?;
+            anyhow::ensure!(ms >= 1, "--default-deadline-ms must be at least 1");
+            Some(std::time::Duration::from_millis(ms))
+        }
+    };
     // `--model-dir-watch 5` polls every 5 s; a bare `--model-dir-watch`
     // (no value) uses the 5 s default; 0 is rejected (it would busy-loop
     // the watcher and the trainer lane)
@@ -297,6 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 None => defaults.pool.trace_sample,
                 Some(v) => v.parse().with_context(|| "--trace-sample")?,
             },
+            default_deadline,
         },
         max_connections: args.usize_or("max-conns", defaults.max_connections)?,
         // 0 = auto (scales with available parallelism)
@@ -393,6 +413,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         predict_pct: predict_pct as u32,
         anchor: args.get_or("anchor", "g4dn"),
         target: args.get_or("target", "p3"),
+        connect_retries: args.usize_or("connect-retries", 5)?,
     };
     eprintln!(
         "loadgen: open-loop {} rps for {:.1}s over {} conns ({}% predict) -> {}",

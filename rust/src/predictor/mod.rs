@@ -7,4 +7,4 @@ mod profet;
 
 pub use batch_pixel::BatchPixelModel;
 pub use cross_instance::{CrossInstanceModel, EnsembleConfig, Member};
-pub use profet::{MissingModels, Profet, TrainOptions};
+pub use profet::{sweep_orphaned_saves, CorruptModel, MissingModels, Profet, TrainOptions};

@@ -21,7 +21,28 @@
 //! or half-copied model dir is rejected before it can serve a single
 //! request (the old behavior deferred the failure to the first `predict`
 //! for the missing pair). Directories written before the manifest existed
-//! load as before (no completeness information to check against).
+//! load as before (no completeness information to check against). A
+//! component file that exists but cannot be read or parsed fails with a
+//! structured [`CorruptModel`] error naming the offending file.
+//!
+//! # Crash safety
+//!
+//! [`Profet::save`] never writes into the serving directory in place.
+//! Every file is staged into a unique temp sibling
+//! (`<dir>.tmp.<pid>.<seq>`, same filesystem so `rename(2)` is atomic)
+//! and fsynced there; then either the whole staged directory is renamed
+//! over a not-yet-existing target, or — for a live target — each
+//! component file is renamed in individually with `manifest.json`
+//! renamed **strictly last** and the directory fsynced around it. Any
+//! crash therefore leaves one of exactly two states: the old directory
+//! untouched (plus an orphaned temp sibling), or a directory whose old
+//! manifest still describes a loadable set while new component files
+//! wait unreferenced. [`sweep_orphaned_saves`] removes leftover temp
+//! siblings; the serving registry runs it at open and before every
+//! reload. The single-writer invariant (only the trainer lane saves)
+//! is what makes the sweep safe to run there. Chaos coverage:
+//! `rust/tests/chaos.rs` drives the `registry.save.{stage,commit,
+//! finalize}` failpoints through every step of this protocol.
 
 use super::batch_pixel::BatchPixelModel;
 use super::cross_instance::{CrossInstanceModel, EnsembleConfig, Member};
@@ -118,6 +139,47 @@ impl fmt::Display for MissingModels {
 }
 
 impl std::error::Error for MissingModels {}
+
+/// Structured load-time corruption failure: a model component file
+/// exists but cannot be read or parsed (torn write, truncation, disk
+/// fault). Carried inside the `anyhow` chain from [`Profet::load`] so
+/// callers can `downcast_ref::<CorruptModel>()` and learn exactly which
+/// file to restore instead of pattern-matching an opaque parse error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptModel {
+    /// The offending file, as resolved under the loaded directory.
+    pub file: std::path::PathBuf,
+    /// What went wrong reading or parsing it.
+    pub detail: String,
+}
+
+impl fmt::Display for CorruptModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "corrupt or unreadable model file {}: {} — restore the file or re-run `repro train`",
+            self.file.display(),
+            self.detail
+        )
+    }
+}
+
+impl std::error::Error for CorruptModel {}
+
+/// Wrap a per-file failure as a [`CorruptModel`] anyhow error.
+fn corrupt(path: &Path, detail: String) -> anyhow::Error {
+    anyhow::Error::new(CorruptModel {
+        file: path.to_path_buf(),
+        detail,
+    })
+}
+
+/// Read + parse one model component file, mapping every failure to a
+/// structured [`CorruptModel`] naming the file.
+fn read_model_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path).map_err(|e| corrupt(path, e.to_string()))?;
+    Json::parse(&text).map_err(|e| corrupt(path, format!("{e:#}")))
+}
 
 /// The trained system. `Clone` is cheap relative to training (the models
 /// are plain data) and is what the coordinator's registry leans on to
@@ -351,24 +413,94 @@ impl Profet {
     /// ```
     pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
-        std::fs::create_dir_all(dir)?;
-        std::fs::write(
-            dir.join("feature_space.json"),
+        let tmp = temp_sibling(dir)?;
+        std::fs::create_dir_all(&tmp)
+            .with_context(|| format!("creating staging dir {}", tmp.display()))?;
+        let result = self
+            .save_via(&tmp, dir)
+            .with_context(|| format!("saving {}", dir.display()));
+        if result.is_err() {
+            // a *failed* save cleans its own staging dir; only a crash
+            // (panic/kill) leaves one behind, and the recovery sweep
+            // removes those at the next open/reload
+            let _ = std::fs::remove_dir_all(&tmp);
+        }
+        result
+    }
+
+    /// Stage every component into `tmp` (written + fsynced), then
+    /// publish into `dir` with atomic renames, manifest strictly last —
+    /// see the module docs for the crash-safety argument.
+    fn save_via(&self, tmp: &Path, dir: &Path) -> Result<()> {
+        let mut files: Vec<(String, String)> = Vec::new();
+        files.push((
+            "feature_space.json".to_string(),
             self.feature_space.to_json().to_string(),
-        )?;
+        ));
         for ((a, t), m) in &self.cross {
-            std::fs::write(
-                dir.join(format!("cross_{}_{}.json", a.key(), t.key())),
+            files.push((
+                format!("cross_{}_{}.json", a.key(), t.key()),
                 m.to_json().to_string(),
-            )?;
+            ));
         }
         for (g, m) in &self.scale {
-            std::fs::write(
-                dir.join(format!("scale_{}.json", g.key())),
-                m.to_json().to_string(),
-            )?;
+            files.push((format!("scale_{}.json", g.key()), m.to_json().to_string()));
         }
-        std::fs::write(dir.join("manifest.json"), self.manifest_json().to_string())?;
+        // stage: a crash anywhere in here touches only the temp dir
+        for (name, contents) in &files {
+            stage_file(&tmp.join(name), contents.as_bytes())?;
+        }
+        stage_file(
+            &tmp.join("manifest.json"),
+            self.manifest_json().to_string().as_bytes(),
+        )?;
+        fsync_dir(tmp)?;
+        // fresh target: one whole-directory rename publishes everything
+        if !dir.exists() {
+            if crate::fp!("registry.save.finalize").is_some() {
+                anyhow::bail!("failpoint registry.save.finalize: injected commit failure");
+            }
+            std::fs::rename(tmp, dir)
+                .with_context(|| format!("publishing {}", dir.display()))?;
+            if let Some(parent) = nonempty_parent(dir) {
+                fsync_dir(parent)?;
+            }
+            return Ok(());
+        }
+        // live target: rename components in one by one — any crash
+        // prefix plus the OLD manifest still describes a loadable set —
+        // then flip the manifest last (the commit point)
+        for (name, _) in &files {
+            if crate::fp!("registry.save.commit").is_some() {
+                anyhow::bail!("failpoint registry.save.commit: injected commit failure");
+            }
+            std::fs::rename(tmp.join(name), dir.join(name))
+                .with_context(|| format!("publishing {name}"))?;
+        }
+        fsync_dir(dir)?;
+        if crate::fp!("registry.save.finalize").is_some() {
+            anyhow::bail!("failpoint registry.save.finalize: injected commit failure");
+        }
+        std::fs::rename(tmp.join("manifest.json"), dir.join("manifest.json"))
+            .context("publishing manifest.json")?;
+        fsync_dir(dir)?;
+        // post-commit hygiene, both best-effort: the emptied staging dir
+        // goes away, and component files the new manifest no longer
+        // lists are dropped (stale extras never fail a load, so a crash
+        // here is harmless)
+        let _ = std::fs::remove_dir_all(tmp);
+        let keep: std::collections::BTreeSet<&str> =
+            files.iter().map(|(n, _)| n.as_str()).collect();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let fname = entry.file_name();
+                let Some(fname) = fname.to_str() else { continue };
+                let component = fname.starts_with("cross_") || fname.starts_with("scale_");
+                if component && fname.ends_with(".json") && !keep.contains(fname) {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
         Ok(())
     }
 
@@ -427,8 +559,9 @@ impl Profet {
     /// ```
     pub fn load(dir: impl AsRef<Path>) -> Result<Profet> {
         let dir = dir.as_ref();
-        let fs_json = Json::parse(&std::fs::read_to_string(dir.join("feature_space.json"))?)?;
-        let feature_space = FeatureSpace::from_json(&fs_json)?;
+        let fs_path = dir.join("feature_space.json");
+        let feature_space = FeatureSpace::from_json(&read_model_json(&fs_path)?)
+            .map_err(|e| corrupt(&fs_path, format!("{e:#}")))?;
         let mut cross = BTreeMap::new();
         let mut scale = BTreeMap::new();
         for entry in std::fs::read_dir(dir)? {
@@ -437,20 +570,20 @@ impl Profet {
                 continue;
             };
             if name.starts_with("cross_") && name.ends_with(".json") {
-                let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+                let j = read_model_json(&path)?;
                 let m = CrossInstanceModel::from_json(&j)
-                    .with_context(|| format!("loading {name}"))?;
+                    .map_err(|e| corrupt(&path, format!("{e:#}")))?;
                 cross.insert((m.anchor, m.target), m);
             } else if name.starts_with("scale_") && name.ends_with(".json") {
-                let j = Json::parse(&std::fs::read_to_string(&path)?)?;
-                let m = BatchPixelModel::from_json(&j)?;
+                let j = read_model_json(&path)?;
+                let m = BatchPixelModel::from_json(&j)
+                    .map_err(|e| corrupt(&path, format!("{e:#}")))?;
                 scale.insert(m.instance, m);
             }
         }
         let manifest_path = dir.join("manifest.json");
         if manifest_path.exists() {
-            let manifest = Json::parse(&std::fs::read_to_string(&manifest_path)?)
-                .context("parsing manifest.json")?;
+            let manifest = read_model_json(&manifest_path)?;
             let gap = manifest_gap(&manifest, &cross, &scale)?;
             if !gap.is_empty() {
                 return Err(anyhow::Error::new(gap)
@@ -468,6 +601,106 @@ impl Profet {
             scale,
         })
     }
+}
+
+/// Marker infix in staged-save directory names; the recovery sweep
+/// matches on it (`<dir>.tmp.<pid>.<seq>`).
+const TEMP_INFIX: &str = ".tmp.";
+
+/// Unique temp sibling of `dir`, in the same parent directory (and
+/// therefore on the same filesystem, which keeps `rename(2)` atomic).
+fn temp_sibling(dir: &Path) -> Result<std::path::PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    // ordering: uniqueness counter only — any interleaving of the
+    // increments yields distinct staging names.
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let name = dir
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow!("model dir path {} has no directory name", dir.display()))?;
+    Ok(dir.with_file_name(format!(
+        "{name}{TEMP_INFIX}{}.{seq}",
+        std::process::id()
+    )))
+}
+
+/// `dir.parent()`, with the empty path (relative single-component dirs
+/// like `models`) normalized to `.` so it can be opened and listed.
+fn nonempty_parent(dir: &Path) -> Option<&Path> {
+    match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => Some(p),
+        Some(_) => Some(Path::new(".")),
+        None => None,
+    }
+}
+
+/// Write one staged file: full contents + fsync, honoring the
+/// `registry.save.stage` failpoint (`partial-write(n)` leaves a torn
+/// file in the staging dir, simulating a crash mid-write).
+fn stage_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    use crate::util::failpoint::Hit;
+    use std::io::Write;
+    let truncate_at = match crate::fp!("registry.save.stage") {
+        Some(Hit::ReturnErr) => {
+            anyhow::bail!("failpoint registry.save.stage: injected write failure")
+        }
+        Some(Hit::PartialWrite(n)) => Some(n.min(bytes.len())),
+        None => None,
+    };
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    if let Some(n) = truncate_at {
+        f.write_all(&bytes[..n])?;
+        let _ = f.sync_all();
+        anyhow::bail!("failpoint registry.save.stage: torn write after {n} bytes");
+    }
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", path.display()))?;
+    f.sync_all()
+        .with_context(|| format!("fsync {}", path.display()))?;
+    Ok(())
+}
+
+/// fsync a directory so freshly created/renamed entries are durable.
+fn fsync_dir(dir: &Path) -> Result<()> {
+    let d = std::fs::File::open(dir)
+        .with_context(|| format!("opening {} for fsync", dir.display()))?;
+    d.sync_all()
+        .with_context(|| format!("fsync {}", dir.display()))?;
+    Ok(())
+}
+
+/// Remove orphaned staging directories (`<dir>.tmp.<pid>.<seq>`) left
+/// next to `dir` by a save that crashed before committing. Returns how
+/// many were removed; unreadable parents count zero (nothing to sweep).
+/// Only call while no save can be in flight — in the serving stack that
+/// is the trainer lane's single-writer invariant (the registry sweeps
+/// at open and before each reload).
+pub fn sweep_orphaned_saves(dir: impl AsRef<Path>) -> usize {
+    let dir = dir.as_ref();
+    let (Some(parent), Some(name)) = (
+        nonempty_parent(dir),
+        dir.file_name().and_then(|n| n.to_str()),
+    ) else {
+        return 0;
+    };
+    let prefix = format!("{name}{TEMP_INFIX}");
+    let Ok(entries) = std::fs::read_dir(parent) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let fname = entry.file_name();
+        let Some(fname) = fname.to_str() else { continue };
+        if fname.starts_with(&prefix)
+            && entry.path().is_dir()
+            && std::fs::remove_dir_all(entry.path()).is_ok()
+        {
+            removed += 1;
+        }
+    }
+    removed
 }
 
 /// Diff a parsed `manifest.json` against the components actually loaded.
@@ -566,5 +799,155 @@ mod tests {
         // missing the cross field entirely
         let empty = Json::obj();
         assert!(manifest_gap(&empty, &BTreeMap::new(), &BTreeMap::new()).is_err());
+    }
+
+    // ---- crash-safe save + corruption reporting ----
+
+    use crate::util::failpoint;
+
+    /// Serializes the tests below that arm the process-global
+    /// `registry.save.*` failpoints (lib tests run in parallel).
+    static FP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn fp_lock() -> std::sync::MutexGuard<'static, ()> {
+        FP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn temp_model_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "repro_profet_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A component-less (but saveable) system: enough to exercise the
+    /// staging/rename protocol without a trained model.
+    fn tiny_profet() -> Profet {
+        Profet {
+            feature_space: FeatureSpace::fit(&[], false, 4).unwrap(),
+            cross: BTreeMap::new(),
+            scale: BTreeMap::new(),
+        }
+    }
+
+    /// No `<dir>.tmp.*` staging sibling left next to `dir`.
+    fn no_temp_sibling(dir: &Path) -> bool {
+        let parent = nonempty_parent(dir).unwrap();
+        let prefix = format!(
+            "{}{TEMP_INFIX}",
+            dir.file_name().unwrap().to_str().unwrap()
+        );
+        std::fs::read_dir(parent).unwrap().flatten().all(|e| {
+            !e.file_name().to_str().unwrap_or("").starts_with(&prefix)
+        })
+    }
+
+    #[test]
+    fn save_publishes_atomically_and_cleans_its_staging_dir() {
+        let _g = fp_lock();
+        let root = temp_model_dir("atomic_save");
+        let dir = root.join("models");
+        let p = tiny_profet();
+        // fresh target: whole-directory rename
+        p.save(&dir).unwrap();
+        assert!(dir.join("feature_space.json").is_file());
+        assert!(dir.join("manifest.json").is_file());
+        assert!(no_temp_sibling(&dir));
+        // live target: per-file renames, manifest last
+        p.save(&dir).unwrap();
+        assert!(no_temp_sibling(&dir));
+        let m = Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap());
+        assert!(m.is_ok(), "manifest must stay parseable after a re-save");
+    }
+
+    #[test]
+    fn injected_crash_at_every_save_step_leaves_the_old_state_loadable() {
+        let _g = fp_lock();
+        let root = temp_model_dir("save_crash_matrix");
+        let dir = root.join("models");
+        tiny_profet().save(&dir).unwrap();
+        let actions = [
+            ("registry.save.stage", failpoint::Action::ReturnErr),
+            ("registry.save.stage", failpoint::Action::PartialWrite(4)),
+            ("registry.save.commit", failpoint::Action::ReturnErr),
+            ("registry.save.finalize", failpoint::Action::ReturnErr),
+        ];
+        for (point, action) in actions {
+            failpoint::configure(point, action);
+            let err = tiny_profet().save(&dir);
+            failpoint::clear(point);
+            assert!(err.is_err(), "{point} must fail the save");
+            assert!(no_temp_sibling(&dir), "{point} left a staging dir");
+            // the serving state survives: manifest + feature space are
+            // intact and mutually consistent (old or fully-new set)
+            let m = Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap());
+            assert!(m.is_ok(), "{point} corrupted manifest.json");
+            let fs_json =
+                Json::parse(&std::fs::read_to_string(dir.join("feature_space.json")).unwrap())
+                    .unwrap();
+            assert!(FeatureSpace::from_json(&fs_json).is_ok(), "{point}");
+        }
+        // a crash before the fresh-target publish leaves no target at all
+        let fresh = root.join("models_fresh");
+        failpoint::configure("registry.save.finalize", failpoint::Action::ReturnErr);
+        assert!(tiny_profet().save(&fresh).is_err());
+        failpoint::clear("registry.save.finalize");
+        assert!(!fresh.exists(), "aborted fresh save must not half-create the dir");
+        assert!(no_temp_sibling(&fresh));
+    }
+
+    #[test]
+    fn sweep_removes_only_matching_orphan_dirs() {
+        let root = temp_model_dir("sweep");
+        let dir = root.join("m");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::create_dir_all(root.join("m.tmp.1.2")).unwrap();
+        std::fs::create_dir_all(root.join("m.tmp.99.0")).unwrap();
+        std::fs::create_dir_all(root.join("m2")).unwrap(); // different dir
+        std::fs::create_dir_all(root.join("mother.tmp.1.0")).unwrap(); // different dir's orphan
+        std::fs::write(root.join("m.tmp.file"), b"not a dir").unwrap();
+        assert_eq!(sweep_orphaned_saves(&dir), 2);
+        assert!(dir.is_dir());
+        assert!(root.join("m2").is_dir());
+        assert!(root.join("mother.tmp.1.0").is_dir());
+        assert!(root.join("m.tmp.file").is_file());
+        assert!(!root.join("m.tmp.1.2").exists());
+        assert!(!root.join("m.tmp.99.0").exists());
+        // nothing left to sweep; missing parents sweep zero
+        assert_eq!(sweep_orphaned_saves(&dir), 0);
+        assert_eq!(sweep_orphaned_saves(root.join("gone").join("m")), 0);
+    }
+
+    #[test]
+    fn load_names_the_corrupt_file_in_a_structured_error() {
+        let _g = fp_lock();
+        let root = temp_model_dir("corrupt_load");
+        let dir = root.join("models");
+        tiny_profet().save(&dir).unwrap();
+        // a truncated cross-instance (forest ensemble) file: the exact
+        // torn-write shape the atomic save protocol prevents, planted
+        // here to prove load degrades to a structured error
+        std::fs::write(dir.join("cross_g4dn_p3.json"), "{\"forest\": [").unwrap();
+        let err = Profet::load(&dir).expect_err("truncated cross file must fail the load");
+        let corrupt = err
+            .downcast_ref::<CorruptModel>()
+            .unwrap_or_else(|| panic!("expected CorruptModel, got: {err:#}"));
+        assert!(
+            corrupt.file.ends_with("cross_g4dn_p3.json"),
+            "error must name the offending file: {corrupt}"
+        );
+        assert!(corrupt.to_string().contains("cross_g4dn_p3.json"));
+
+        // same for a torn feature space
+        std::fs::remove_file(dir.join("cross_g4dn_p3.json")).unwrap();
+        std::fs::write(dir.join("feature_space.json"), "{\"vocab\"").unwrap();
+        let err = Profet::load(&dir).expect_err("truncated feature space must fail the load");
+        let corrupt = err
+            .downcast_ref::<CorruptModel>()
+            .unwrap_or_else(|| panic!("expected CorruptModel, got: {err:#}"));
+        assert!(corrupt.file.ends_with("feature_space.json"), "{corrupt}");
     }
 }

@@ -1,0 +1,310 @@
+//! Deterministic fault injection: named failpoints.
+//!
+//! A failpoint is a named hook compiled into a code path (`registry.
+//! save.stage`, `lane.execute`, ...) that normally does nothing. Chaos
+//! tests — and operators reproducing an incident — arm points at
+//! runtime with an action:
+//!
+//! | action             | effect at the hook                            |
+//! |--------------------|-----------------------------------------------|
+//! | `off`              | disarmed (same as never configured)           |
+//! | `return-err`       | the caller takes its error path               |
+//! | `panic`            | `panic!` unwinds from the hook                |
+//! | `partial-write(n)` | the caller truncates the write to `n` bytes   |
+//! | `delay(ms)`        | the hook sleeps `ms` milliseconds, then no-op |
+//!
+//! Configuration comes from the `REPRO_FAILPOINTS` environment variable
+//! or the `repro serve --failpoints` flag, both in the same syntax:
+//! `name=action;name=action` (e.g.
+//! `registry.save.finalize=panic;reactor.write=delay(25)`). The full
+//! catalogue of compiled-in points lives in `docs/RESILIENCE.md`.
+//!
+//! **Hot-path cost.** [`check`] is a single relaxed atomic load and a
+//! predictable branch while no point is armed — no lock, no allocation,
+//! no syscall — so the reactor's zero-allocation warm predict path
+//! (`tests/wire_alloc.rs`) is unaffected by failpoints being compiled
+//! in. The slow path (a `Mutex` + `BTreeMap` lookup) only runs while at
+//! least one point is armed, which never happens in production unless
+//! an operator asked for it.
+//!
+//! Dependency-free by design (std only): this module must be usable
+//! from every layer, including `util` itself.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What an armed failpoint does when its hook is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Disarmed — identical to the point never being configured.
+    Off,
+    /// The caller takes its error path (injected I/O or logic failure).
+    ReturnErr,
+    /// `panic!` unwinds from the hook (crash/kill simulation).
+    Panic,
+    /// The caller truncates the write to this many bytes, then errors
+    /// (torn-write simulation).
+    PartialWrite(usize),
+    /// Sleep this many milliseconds at the hook, then continue
+    /// (stall/slow-disk simulation).
+    Delay(u64),
+}
+
+/// What [`check`] asks the *caller* to do. `Panic` and `Delay` are
+/// executed inside `check` itself and never surface here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hit {
+    /// Take the error path now.
+    ReturnErr,
+    /// Truncate the pending write to this many bytes, then error.
+    PartialWrite(usize),
+}
+
+/// Number of currently armed (non-`Off`) points. The hot path reads
+/// this once and branches; all mutation happens under [`REGISTRY`]'s
+/// lock, which recomputes the count before releasing.
+static ARMED: AtomicU32 = AtomicU32::new(0);
+
+struct Registry {
+    actions: BTreeMap<String, Action>,
+    hits: BTreeMap<String, u64>,
+}
+
+static REGISTRY: Mutex<Registry> = Mutex::new(Registry {
+    actions: BTreeMap::new(),
+    hits: BTreeMap::new(),
+});
+
+/// Evaluate the named failpoint. Disarmed points (the production case)
+/// cost one relaxed load and a branch. Armed points record a hit and
+/// apply their action: `Panic`/`Delay` execute here; `ReturnErr`/
+/// `PartialWrite` are returned for the caller to act on.
+#[inline]
+pub fn check(name: &str) -> Option<Hit> {
+    // ordering: advisory arming flag — a configure racing with this
+    // load may miss one in-flight hit, which chaos tests tolerate by
+    // configuring before issuing traffic. No data is guarded by it.
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    check_armed(name)
+}
+
+#[cold]
+fn check_armed(name: &str) -> Option<Hit> {
+    let action = {
+        let mut reg = REGISTRY.lock().unwrap();
+        let Some(action) = reg.actions.get(name).copied() else {
+            return None;
+        };
+        if action == Action::Off {
+            return None;
+        }
+        *reg.hits.entry(name.to_string()).or_insert(0) += 1;
+        action
+    };
+    match action {
+        Action::Off => None,
+        Action::ReturnErr => Some(Hit::ReturnErr),
+        Action::PartialWrite(n) => Some(Hit::PartialWrite(n)),
+        Action::Panic => panic!("failpoint `{name}` fired: injected panic"),
+        Action::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+    }
+}
+
+/// Recompute [`ARMED`] from the action table. Call with the lock held.
+fn rearm(reg: &Registry) {
+    let n = reg.actions.values().filter(|a| **a != Action::Off).count() as u32;
+    // ordering: published count is advisory (see `check`); the registry
+    // lock already serializes configuration itself.
+    ARMED.store(n, Ordering::Relaxed);
+}
+
+/// Arm (or disarm, with [`Action::Off`]) one named point.
+pub fn configure(name: &str, action: Action) {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.actions.insert(name.to_string(), action);
+    rearm(&reg);
+}
+
+/// Disarm one point and forget its hit counter.
+pub fn clear(name: &str) {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.actions.remove(name);
+    reg.hits.remove(name);
+    rearm(&reg);
+}
+
+/// Disarm every point and forget all hit counters.
+pub fn clear_all() {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.actions.clear();
+    reg.hits.clear();
+    rearm(&reg);
+}
+
+/// How many times the named point fired while armed (any action,
+/// including `off`-masked points never count).
+pub fn hit_count(name: &str) -> u64 {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .hits
+        .get(name)
+        .copied()
+        .unwrap_or(0)
+}
+
+/// Parse one action in the configuration syntax.
+pub fn parse_action(s: &str) -> Result<Action, String> {
+    let s = s.trim();
+    if let Some(rest) = s.strip_prefix("partial-write(") {
+        let n = rest
+            .strip_suffix(')')
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .ok_or_else(|| format!("bad partial-write argument in `{s}`"))?;
+        return Ok(Action::PartialWrite(n));
+    }
+    if let Some(rest) = s.strip_prefix("delay(") {
+        let ms = rest
+            .strip_suffix(')')
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .ok_or_else(|| format!("bad delay argument in `{s}`"))?;
+        return Ok(Action::Delay(ms));
+    }
+    match s {
+        "off" => Ok(Action::Off),
+        "return-err" => Ok(Action::ReturnErr),
+        "panic" => Ok(Action::Panic),
+        other => Err(format!(
+            "unknown failpoint action `{other}` \
+             (expected off|return-err|panic|partial-write(N)|delay(MS))"
+        )),
+    }
+}
+
+/// Configure a whole `name=action;name=action` spec (the
+/// `REPRO_FAILPOINTS` / `--failpoints` syntax). Empty segments are
+/// ignored so trailing `;` is fine.
+pub fn configure_from_str(spec: &str) -> Result<(), String> {
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, action) = part
+            .split_once('=')
+            .ok_or_else(|| format!("expected name=action, got `{part}`"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("empty failpoint name in `{part}`"));
+        }
+        configure(name, parse_action(action)?);
+    }
+    Ok(())
+}
+
+/// Arm points from the `REPRO_FAILPOINTS` environment variable, if set.
+pub fn init_from_env() -> Result<(), String> {
+    match std::env::var("REPRO_FAILPOINTS") {
+        Ok(spec) => configure_from_str(&spec),
+        Err(_) => Ok(()),
+    }
+}
+
+/// `fp!("name")` — the hook form used at injection sites; expands to
+/// [`check`] so a disarmed site stays a relaxed-load branch.
+#[macro_export]
+macro_rules! fp {
+    ($name:literal) => {
+        $crate::util::failpoint::check($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // every test uses its own `test.<name>.*` point names: the registry
+    // is process-global and lib tests run in parallel.
+
+    #[test]
+    fn disarmed_points_are_invisible() {
+        assert_eq!(check("test.invisible.never-configured"), None);
+        configure("test.invisible.off", Action::Off);
+        assert_eq!(check("test.invisible.off"), None);
+        assert_eq!(hit_count("test.invisible.off"), 0);
+        clear("test.invisible.off");
+    }
+
+    #[test]
+    fn return_err_and_partial_write_surface_to_the_caller() {
+        configure("test.surface.err", Action::ReturnErr);
+        configure("test.surface.partial", Action::PartialWrite(7));
+        assert_eq!(check("test.surface.err"), Some(Hit::ReturnErr));
+        assert_eq!(check("test.surface.partial"), Some(Hit::PartialWrite(7)));
+        assert_eq!(hit_count("test.surface.err"), 1);
+        assert_eq!(check("test.surface.err"), Some(Hit::ReturnErr));
+        assert_eq!(hit_count("test.surface.err"), 2);
+        clear("test.surface.err");
+        clear("test.surface.partial");
+        assert_eq!(check("test.surface.err"), None);
+        assert_eq!(hit_count("test.surface.err"), 0);
+    }
+
+    #[test]
+    fn panic_action_unwinds_from_the_hook() {
+        configure("test.panic.point", Action::Panic);
+        let r = std::panic::catch_unwind(|| check("test.panic.point"));
+        clear("test.panic.point");
+        assert!(r.is_err(), "panic action must unwind");
+        assert_eq!(check("test.panic.point"), None, "cleared after the test");
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        configure("test.delay.point", Action::Delay(20));
+        let t0 = std::time::Instant::now();
+        assert_eq!(check("test.delay.point"), None);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        assert_eq!(hit_count("test.delay.point"), 1);
+        clear("test.delay.point");
+    }
+
+    #[test]
+    fn spec_syntax_round_trips() {
+        assert_eq!(parse_action("off"), Ok(Action::Off));
+        assert_eq!(parse_action("return-err"), Ok(Action::ReturnErr));
+        assert_eq!(parse_action("panic"), Ok(Action::Panic));
+        assert_eq!(parse_action("partial-write(12)"), Ok(Action::PartialWrite(12)));
+        assert_eq!(parse_action("delay(250)"), Ok(Action::Delay(250)));
+        assert!(parse_action("explode").is_err());
+        assert!(parse_action("partial-write(x)").is_err());
+        assert!(parse_action("delay()").is_err());
+
+        configure_from_str(
+            "test.spec.a=return-err; test.spec.b=delay(1);; test.spec.c=off;",
+        )
+        .unwrap();
+        assert_eq!(check("test.spec.a"), Some(Hit::ReturnErr));
+        assert_eq!(check("test.spec.c"), None);
+        assert!(configure_from_str("no-equals-sign").is_err());
+        assert!(configure_from_str("=panic").is_err());
+        clear("test.spec.a");
+        clear("test.spec.b");
+        clear("test.spec.c");
+    }
+
+    #[test]
+    fn fp_macro_expands_to_check() {
+        configure("test.macro.point", Action::ReturnErr);
+        assert_eq!(crate::fp!("test.macro.point"), Some(Hit::ReturnErr));
+        clear("test.macro.point");
+        assert_eq!(crate::fp!("test.macro.point"), None);
+    }
+}

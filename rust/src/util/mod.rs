@@ -5,6 +5,7 @@
 //! [`Rng64`] seeded from explicit values, so every experiment is exactly
 //! reproducible run-to-run.
 
+pub mod failpoint;
 pub mod json;
 pub mod json_stream;
 pub mod poll;

@@ -1,0 +1,517 @@
+//! Failpoint-driven chaos suite: every fault hook compiled into the
+//! serving stack (`docs/RESILIENCE.md` has the catalogue) is armed here
+//! and driven end to end — crash at each step of the crash-safe model
+//! save, a torn staging-log tail under live `ingest`/`onboard`, an
+//! engine replica panicking mid-request, reactor write stalls and torn
+//! socket writes under drain, and a model-dir watcher whose reload tick
+//! faults mid-watch. The invariants under test: the serving directory
+//! is never left unloadable, no client reply is ever lost (worst case
+//! it degrades to a structured error), and the registry epoch only
+//! moves forward.
+//!
+//! The failpoint registry is process-global, so this binary must run
+//! single-threaded: `ci/chaos_check.sh` passes `--test-threads=1`, and
+//! every test name carries the `chaos_` prefix so the general
+//! `cargo test` sweep in `ci/check.sh` can `--skip chaos_`.
+
+use repro::coordinator::{self, PoolOptions, ServeOptions};
+use repro::data::Corpus;
+use repro::gpu::Instance;
+use repro::predictor::{sweep_orphaned_saves, Profet, TrainOptions};
+use repro::runtime;
+use repro::util::failpoint::{self, Action};
+use repro::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Train once per test binary, save to a chaos-private temp dir (never
+/// shared with `server_integration` — both binaries may run in one CI
+/// sweep). `None` when the runtime backend is unavailable.
+fn model_dir() -> Option<&'static std::path::PathBuf> {
+    static DIR: OnceLock<Option<std::path::PathBuf>> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let rt = match runtime::load_default() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping chaos tests: runtime unavailable: {e:#}");
+                return None;
+            }
+        };
+        let corpus = Corpus::generate(&[Instance::G4dn, Instance::P3]);
+        let (train_idx, _) = corpus.split_random(0.1, 11);
+        let opts = TrainOptions {
+            anchors: vec![Instance::G4dn],
+            targets: vec![Instance::P3],
+            clustering: true,
+            poly_order: 2,
+            n_trees: 15,
+            dnn_epochs: 8,
+            seed: 99,
+        };
+        let profet = Profet::train(&rt, &corpus, &train_idx, &opts).unwrap();
+        let dir = std::env::temp_dir().join("repro_chaos_models");
+        std::fs::remove_dir_all(&dir).ok();
+        profet.save(&dir).unwrap();
+        Some(dir)
+    })
+    .as_ref()
+}
+
+/// Copy the shared trained dir into a test-private scratch dir — chaos
+/// tests corrupt, overwrite, and hot-swap their model directory.
+fn copy_model_dir(tag: &str) -> std::path::PathBuf {
+    let src = model_dir().expect("caller checked");
+    let dst = std::env::temp_dir().join(format!("repro_chaos_models_{tag}"));
+    std::fs::remove_dir_all(&dst).ok();
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            std::fs::copy(&path, dst.join(path.file_name().unwrap())).unwrap();
+        }
+    }
+    dst
+}
+
+fn send(addr: std::net::SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap()
+}
+
+fn sample_profile_line() -> String {
+    let w = repro::sim::Workload::new(repro::models::ModelId::ResNet18, 32, 64);
+    let run = repro::sim::run_workload(&w, Instance::G4dn).unwrap();
+    let mut profile = Json::obj();
+    for (k, v) in run.profile.aggregated() {
+        profile.set(&k, Json::Num(v));
+    }
+    let mut req = Json::obj();
+    req.set("op", Json::Str("predict".into()));
+    req.set("anchor", Json::Str("g4dn".into()));
+    req.set("target", Json::Str("p3".into()));
+    req.set("anchor_latency_ms", Json::Num(run.latency_ms));
+    req.set("profile", profile);
+    req.to_string()
+}
+
+/// Cache-bust a predict line by whole quantization buckets so each
+/// variant takes the engine-lane miss path (cf. `server_integration`).
+fn bust_predict_line(line: &str, bust: usize) -> String {
+    let mut req = Json::parse(line).unwrap();
+    let v = req.req_f64("anchor_latency_ms").unwrap();
+    req.set("anchor_latency_ms", Json::Num(v * (1.0 + bust as f64 * 1e-3)));
+    req.to_string()
+}
+
+/// Disarm everything on entry and exit (even when a test panics): the
+/// failpoint registry is process-global and outlives each test.
+struct FpGuard;
+
+impl Drop for FpGuard {
+    fn drop(&mut self) {
+        failpoint::clear_all();
+    }
+}
+
+fn fp_guard() -> FpGuard {
+    failpoint::clear_all();
+    FpGuard
+}
+
+fn assert_ok(resp: &Json) {
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+}
+
+fn assert_err_kind(resp: &Json, kind: &str) {
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    assert_eq!(resp.req_str("kind").unwrap(), kind, "{resp:?}");
+}
+
+/// Tentpole (b)+(e): crash the model save at every step — staged write
+/// (error and torn-file flavors), component commit, manifest finalize,
+/// each as both a clean error and a panic — and prove the serving
+/// directory loads cleanly after every single one. Panicked saves leave
+/// staging orphans behind by design; the recovery sweep removes them.
+#[test]
+fn chaos_save_crash_matrix_leaves_the_serving_dir_loadable() {
+    let Some(_) = model_dir() else { return };
+    let _fp = fp_guard();
+    let dir = copy_model_dir("save_matrix");
+    let profet = Profet::load(&dir).unwrap();
+
+    let mut panics = 0;
+    for point in ["registry.save.stage", "registry.save.commit", "registry.save.finalize"] {
+        for action in [Action::ReturnErr, Action::Panic] {
+            failpoint::configure(point, action);
+            let result = catch_unwind(AssertUnwindSafe(|| profet.save(&dir)));
+            failpoint::clear_all();
+            match result {
+                Ok(Ok(())) => panic!("save must fail with {point} armed as {action:?}"),
+                Ok(Err(_)) => {}
+                Err(_) => panics += 1,
+            }
+            Profet::load(&dir).unwrap_or_else(|e| {
+                panic!("serving dir corrupt after {point} {action:?}: {e:#}")
+            });
+        }
+    }
+    assert_eq!(panics, 3, "the panic flavor of each point must unwind");
+
+    // a torn staged write stays confined to the temp sibling
+    failpoint::configure("registry.save.stage", Action::PartialWrite(10));
+    assert!(profet.save(&dir).is_err(), "torn staged write must fail the save");
+    failpoint::clear_all();
+    Profet::load(&dir).expect("torn staged write must never touch the serving dir");
+
+    // each panicked save abandoned its staging sibling; the sweep (what
+    // the registry runs at open and before reload) removes all of them
+    let swept = sweep_orphaned_saves(&dir);
+    assert!(swept >= 3, "expected the 3 panicked saves' orphans, swept {swept}");
+    assert_eq!(sweep_orphaned_saves(&dir), 0, "sweep must converge");
+
+    // fresh-target flavor: a failed finalize publishes nothing at all
+    let fresh = std::env::temp_dir().join("repro_chaos_models_fresh_target");
+    std::fs::remove_dir_all(&fresh).ok();
+    failpoint::configure("registry.save.finalize", Action::ReturnErr);
+    assert!(profet.save(&fresh).is_err());
+    failpoint::clear_all();
+    assert!(!fresh.exists(), "failed fresh-target save must not create the dir");
+
+    // and with everything disarmed the same paths round-trip cleanly
+    profet.save(&dir).unwrap();
+    profet.save(&fresh).unwrap();
+    Profet::load(&dir).unwrap();
+    Profet::load(&fresh).unwrap();
+    assert_eq!(sweep_orphaned_saves(&dir), 0, "clean saves leave no orphans");
+}
+
+/// Tentpole (b)+(e): tear the staging append log mid-record under live
+/// `ingest` traffic, then prove replay skips the torn tail and the
+/// `onboard` still trains and publishes the new pair.
+#[test]
+fn chaos_torn_staging_tail_never_fails_the_onboard() {
+    let Some(_) = model_dir() else { return };
+    let _fp = fp_guard();
+    let models = copy_model_dir("torn_staging");
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let corpus = Corpus::generate(&[Instance::G4dn, Instance::P2]);
+    let paired: Vec<&repro::data::Entry> = corpus
+        .entries
+        .iter()
+        .filter(|e| e.runs.contains_key(&Instance::G4dn) && e.runs.contains_key(&Instance::P2))
+        .collect();
+    assert!(paired.len() >= 33, "{}", paired.len());
+    let ingest_line = |e: &repro::data::Entry| {
+        let ar = &e.runs[&Instance::G4dn];
+        let tr = &e.runs[&Instance::P2];
+        let mut req = Json::obj();
+        req.set("op", Json::Str("ingest".into()));
+        req.set("anchor", Json::Str("g4dn".into()));
+        req.set("target", Json::Str("p2".into()));
+        req.set("model", Json::Str(e.workload.model.name().into()));
+        req.set("batch", Json::Num(e.workload.batch as f64));
+        req.set("pixels", Json::Num(e.workload.pixels as f64));
+        let mut prof = Json::obj();
+        for (k, v) in &ar.profile {
+            prof.set(&k.clone(), Json::Num(*v));
+        }
+        req.set("profile", prof);
+        req.set("anchor_latency_ms", Json::Num(ar.latency_ms));
+        req.set("target_latency_ms", Json::Num(tr.latency_ms));
+        req.to_string()
+    };
+
+    // 5 clean records land
+    let mut staged = 0;
+    for e in paired.iter().take(5) {
+        let resp = send(addr, &ingest_line(e));
+        assert_ok(&resp);
+        staged = resp.req_f64("staged").unwrap() as usize;
+    }
+    assert_eq!(staged, 5);
+
+    // a crash mid-append tears the 6th record: the client sees a
+    // structured failure and the file is left without a trailing newline
+    failpoint::configure("registry.staging.append", Action::PartialWrite(25));
+    let torn = send(addr, &ingest_line(paired[5]));
+    assert_eq!(torn.get("ok").and_then(Json::as_bool), Some(false), "{torn:?}");
+    failpoint::clear_all();
+    let log = models.join("staging").join("g4dn_p2.jsonl");
+    let bytes = std::fs::read(&log).unwrap();
+    assert!(!bytes.ends_with(b"\n"), "append must have been torn mid-record");
+
+    // the next append heals the tail; the torn bytes never count again
+    for e in paired.iter().skip(6).take(27) {
+        let resp = send(addr, &ingest_line(e));
+        assert_ok(&resp);
+        staged = resp.req_f64("staged").unwrap() as usize;
+    }
+    assert_eq!(staged, 32, "torn record must not count toward the staged total");
+
+    // onboard trains on the 32 valid records and publishes epoch 2 —
+    // the torn tail is skipped, never fatal
+    let ob = send(addr, r#"{"op":"onboard","anchor":"g4dn","target":"p2"}"#);
+    assert_ok(&ob);
+    assert_eq!(ob.req_f64("epoch").unwrap() as u64, 2);
+    assert_eq!(ob.req_f64("staged").unwrap() as u64, 32);
+
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert_eq!(st.req_f64("registry_epoch").unwrap() as u64, 2);
+    handle.stop();
+}
+
+/// Tentpole (c)+(e): a replica that panics mid-request answers a
+/// structured `internal_error` instead of wedging the connection, the
+/// supervisor respawns it (visible as `lane_restarts` in `stats`), and
+/// the very next request is served normally.
+#[test]
+fn chaos_panicking_replica_answers_internal_error_and_recovers() {
+    let Some(models) = model_dir() else { return };
+    let _fp = fp_guard();
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+
+    // clean cold predict through the engine lane first
+    assert_ok(&send(addr, &bust_predict_line(&line, 1)));
+
+    // return-err flavor: the lane consumes the job with a structured error
+    failpoint::configure("lane.execute", Action::ReturnErr);
+    let e1 = send(addr, &bust_predict_line(&line, 2));
+    assert_err_kind(&e1, "internal_error");
+
+    // panic flavor: the replica unwinds mid-request; the reply drop
+    // guard still answers — the client is never left hanging
+    failpoint::configure("lane.execute", Action::Panic);
+    let e2 = send(addr, &bust_predict_line(&line, 3));
+    assert_err_kind(&e2, "internal_error");
+    assert!(
+        e2.req_str("error").unwrap().contains("panicked"),
+        "drop-guard reply should say the replica panicked: {e2:?}"
+    );
+    failpoint::clear_all();
+
+    // the supervisor respawned the replica: the next request works and
+    // the restart is surfaced in stats
+    assert_ok(&send(addr, &bust_predict_line(&line, 4)));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = send(addr, r#"{"op":"stats"}"#);
+        if st.req_f64("lane_restarts").unwrap() >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "lane_restarts never surfaced: {st:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.stop();
+}
+
+/// Tentpole (a)+(e): reactor write stalls (`delay`) and torn socket
+/// writes (`partial-write`, forcing the backlog/flush path) must never
+/// lose or corrupt a reply, and a graceful drain completes while the
+/// faults are still armed.
+#[test]
+fn chaos_reactor_write_faults_do_not_lose_replies() {
+    let Some(models) = model_dir() else { return };
+    let _fp = fp_guard();
+    let handle = coordinator::serve(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+    let baseline = send(addr, &line);
+    assert_ok(&baseline);
+    let expect_bits = baseline.req_f64("latency_ms").unwrap().to_bits();
+
+    // write stall: every reactor write sleeps, replies still arrive intact
+    failpoint::configure("reactor.write", Action::Delay(5));
+    failpoint::configure("reactor.flush", Action::Delay(5));
+    for _ in 0..5 {
+        let warm = send(addr, &line);
+        assert_ok(&warm);
+        assert_eq!(warm.req_f64("latency_ms").unwrap().to_bits(), expect_bits);
+    }
+
+    // torn writes: cap every direct write at 9 bytes so each reply is
+    // forced through the backlog, then flushed across many poll cycles
+    failpoint::configure("reactor.write", Action::PartialWrite(9));
+    failpoint::configure("reactor.flush", Action::Off);
+    for _ in 0..3 {
+        let warm = send(addr, &line);
+        assert_ok(&warm);
+        assert_eq!(warm.req_f64("latency_ms").unwrap().to_bits(), expect_bits);
+    }
+
+    // harshest combination: torn direct writes AND a torn flush path;
+    // a multi-hundred-byte stats reply still arrives whole
+    failpoint::configure("reactor.flush", Action::PartialWrite(7));
+    for _ in 0..3 {
+        let warm = send(addr, &line);
+        assert_ok(&warm);
+        assert_eq!(warm.req_f64("latency_ms").unwrap().to_bits(), expect_bits);
+    }
+    let st = send(addr, r#"{"op":"stats"}"#);
+    assert!(st.req_f64("requests").unwrap() >= 12.0, "{st:?}");
+    assert!(failpoint::hit_count("reactor.write") >= 10, "write hook must have fired");
+    assert!(failpoint::hit_count("reactor.flush") >= 1, "flush hook must have fired");
+
+    // drain under injection: concurrent clients all get their reply,
+    // then a graceful stop completes with the faults still armed
+    failpoint::configure("reactor.write", Action::Delay(10));
+    failpoint::configure("reactor.flush", Action::Delay(10));
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            let line = line.clone();
+            std::thread::spawn(move || send(addr, &line))
+        })
+        .collect();
+    for c in clients {
+        let resp = c.join().unwrap();
+        assert_ok(&resp);
+        assert_eq!(resp.req_f64("latency_ms").unwrap().to_bits(), expect_bits);
+    }
+    handle.stop(); // must not hang with delay hooks armed
+}
+
+/// Satellite 3 + tentpole (e): while every watcher tick faults, a model
+/// directory change is NOT picked up and the old epoch keeps serving;
+/// once the fault clears, the watcher converges to the new epoch — and
+/// the observed epoch never moves backwards.
+#[test]
+fn chaos_watcher_tick_faults_keep_the_served_epoch() {
+    let Some(_) = model_dir() else { return };
+    let _fp = fp_guard();
+    let models = copy_model_dir("watch_fault");
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &ServeOptions {
+            model_dir_watch: Some(Duration::from_millis(50)),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+    assert_ok(&send(addr, &line));
+    let epoch_of = |st: &Json| st.req_f64("registry_epoch").unwrap() as u64;
+    assert_eq!(epoch_of(&send(addr, r#"{"op":"stats"}"#)), 1);
+
+    // fault every tick, then change the model dir's fingerprint (size
+    // delta — trailing whitespace keeps the JSON valid)
+    failpoint::configure("server.watch.tick", Action::ReturnErr);
+    let fs_path = models.join("feature_space.json");
+    let mut contents = std::fs::read(&fs_path).unwrap();
+    contents.push(b'\n');
+    std::fs::write(&fs_path, &contents).unwrap();
+
+    // let the watcher tick at least twice while faulted
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while failpoint::hit_count("server.watch.tick") < 2 {
+        assert!(Instant::now() < deadline, "watcher never ticked");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the change was NOT picked up: old epoch, predictions still served
+    assert_eq!(epoch_of(&send(addr, r#"{"op":"stats"}"#)), 1);
+    assert_ok(&send(addr, &line));
+
+    // clear the fault: the watcher converges to epoch 2, monotonically
+    failpoint::clear_all();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut last = 1;
+    loop {
+        let epoch = epoch_of(&send(addr, r#"{"op":"stats"}"#));
+        assert!(epoch >= last, "epoch must never move backwards: {last} -> {epoch}");
+        last = epoch;
+        if epoch == 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "watcher never reloaded after the fault cleared");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_ok(&send(addr, &line));
+    handle.stop();
+}
+
+/// Tentpole (d): with a `--default-deadline-ms` budget configured, jobs
+/// whose queue wait blew the budget are shed at dequeue with the
+/// structured `deadline_exceeded` error — and the job that caused the
+/// pile-up still answers normally.
+#[test]
+fn chaos_queue_wait_past_the_deadline_is_shed_structurally() {
+    let Some(models) = model_dir() else { return };
+    let _fp = fp_guard();
+    let handle = coordinator::serve_with(
+        "127.0.0.1:0",
+        runtime::default_artifact_dir(),
+        models.clone(),
+        &ServeOptions {
+            pool: PoolOptions {
+                predict_lanes: 1, // one lane so the stall serializes the queue
+                default_deadline: Some(Duration::from_millis(100)),
+                ..PoolOptions::default()
+            },
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let line = sample_profile_line();
+
+    // the first admitted job stalls 400ms inside the lane (well past the
+    // 100ms budget); everything queued behind it expires in the queue
+    failpoint::configure("lane.execute", Action::Delay(400));
+    let clients: Vec<_> = (0..4)
+        .map(|bust| {
+            let line = bust_predict_line(&line, 10 + bust);
+            let t = std::thread::spawn(move || send(addr, &line));
+            std::thread::sleep(Duration::from_millis(5));
+            t
+        })
+        .collect();
+    let replies: Vec<Json> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    failpoint::clear_all();
+
+    let ok = replies
+        .iter()
+        .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(true))
+        .count();
+    let shed: Vec<&Json> = replies
+        .iter()
+        .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(false))
+        .collect();
+    assert_eq!(ok, 1, "exactly the first-admitted job executes: {replies:?}");
+    assert_eq!(shed.len(), 3, "{replies:?}");
+    for r in &shed {
+        assert_eq!(r.req_str("kind").unwrap(), "deadline_exceeded", "{r:?}");
+    }
+
+    // with the stall gone, fresh cold predicts are well inside budget
+    assert_ok(&send(addr, &bust_predict_line(&line, 20)));
+    handle.stop();
+}

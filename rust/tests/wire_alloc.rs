@@ -21,6 +21,13 @@
 //! refcount bump, no allocation); the key here uses a fixed epoch the
 //! same way.
 //!
+//! Failpoints (`util::failpoint`) are compiled into the serving stack —
+//! including the reactor write path — but a disarmed hook is a single
+//! relaxed atomic load and a branch, so this gate holds with the chaos
+//! harness built in. No test here arms a point; arming only ever
+//! happens in `tests/chaos.rs` (a separate process) or by operator
+//! request via `REPRO_FAILPOINTS`/`--failpoints`.
+//!
 //! Run explicitly by `ci/check.sh` (`cargo test -q --test wire_alloc`).
 
 use repro::advisor::{CacheKey, CacheKeyScratch, PredictionCache};
