@@ -47,6 +47,12 @@ echo "== chaos suite (failpoint injection, bounded, single-threaded) =="
 echo "== loadgen smoke (server boot + strict burst) =="
 ../ci/loadgen_smoke.sh
 
+# the deterministic cluster harness (stub backends, hard timeout) plus a
+# router + two-backend end-to-end burst; the end-to-end half self-skips
+# when PJRT is unavailable (shared logic: ci/cluster_smoke.sh)
+echo "== cluster gate (harness + route-tier smoke) =="
+../ci/cluster_smoke.sh
+
 # invariant linter, hard gate: hot-path allocations, reactor blocking
 # calls, unsafe/atomic hygiene, protocol doc drift — findings name the
 # exact file:line and rule (see docs/ANALYSIS.md for the catalogue and

@@ -1,0 +1,96 @@
+#!/usr/bin/env bash
+# Cluster gate — shared by ci/check.sh and .github/workflows/ci.yml so
+# the timeout and skip/drift rules can never diverge between the two CI
+# paths. Two halves:
+#
+# 1. The deterministic cluster harness (tests/cluster.rs over the stub
+#    backends in tests/cluster_util/): shard-routing-vs-ring oracle,
+#    kill/failover/rejoin with hint replay, two-phase epoch agreement,
+#    torn-snapshot invariants. Runtime-free (no PJRT, no model dir), so
+#    this half ALWAYS runs — under a hard timeout, with a name-filter
+#    guard so renaming the cluster_ tests can't silently empty the gate.
+#
+# 2. An end-to-end smoke: train a fast model dir, boot two real
+#    `repro serve` backends plus a `repro route` front process, fire a
+#    short `repro loadgen --targets` burst through the router, and check
+#    the BENCH_serve.json `cluster` section plus a live `cluster_stats`
+#    probe. Self-skips (loudly) when the PJRT backend is unavailable in
+#    this build, same as loadgen_smoke.sh.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cluster harness (deterministic, stub backends) =="
+out=$(timeout "${CLUSTER_TIMEOUT:-240}" cargo test --test cluster cluster_ -- --nocapture 2>&1) \
+    || { echo "$out"; echo "cluster harness FAILED (or stalled past the ${CLUSTER_TIMEOUT:-240}s bound)"; exit 1; }
+echo "$out"
+if echo "$out" | grep -q "running 0 tests"; then
+    echo "cluster filter matched nothing — were the cluster_ tests renamed?"
+    exit 1
+fi
+
+BIN=target/release/repro
+[[ -x "$BIN" ]] || { echo "cluster smoke: $BIN missing — run cargo build --release first"; exit 1; }
+
+tmp=$(mktemp -d "${TMPDIR:-/tmp}/repro_cluster_smoke.XXXXXX")
+pids=()
+cleanup() {
+    for pid in "${pids[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+echo "== cluster smoke: training a fast model dir =="
+if ! train_out=$("$BIN" train --fast true --out "$tmp/models" 2>&1); then
+    echo "$train_out"
+    if echo "$train_out" | grep -qi "pjrt\|runtime\|bindings"; then
+        echo "note: cluster end-to-end smoke SKIPPED (PJRT backend unavailable in this build)"
+        exit 0
+    fi
+    echo "cluster smoke: train failed for a non-runtime reason"
+    exit 1
+fi
+
+# boot_addr <log> — wait for a "listening on <addr>" line, echo the addr
+boot_addr() {
+    local log=$1 pid=$2 addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$log" | head -1)
+        [[ -n "$addr" ]] && { echo "$addr"; return 0; }
+        kill -0 "$pid" 2>/dev/null || { cat "$log" >&2; echo "process died during boot" >&2; return 1; }
+        sleep 0.1
+    done
+    cat "$log" >&2; echo "process never printed its address" >&2; return 1
+}
+
+echo "== cluster smoke: booting two backends + the route tier =="
+"$BIN" serve --addr 127.0.0.1:0 --models "$tmp/models" >"$tmp/serve_a.log" 2>&1 &
+pids+=($!)
+"$BIN" serve --addr 127.0.0.1:0 --models "$tmp/models" >"$tmp/serve_b.log" 2>&1 &
+pids+=($!)
+addr_a=$(boot_addr "$tmp/serve_a.log" "${pids[0]}")
+addr_b=$(boot_addr "$tmp/serve_b.log" "${pids[1]}")
+"$BIN" route --addr 127.0.0.1:0 --backends "$addr_a,$addr_b" \
+    --probe-interval-ms 100 >"$tmp/route.log" 2>&1 &
+pids+=($!)
+router=$(boot_addr "$tmp/route.log" "${pids[2]}")
+echo "backends on $addr_a + $addr_b, router on $router"
+
+echo "== cluster smoke: open-loop burst through the router (--strict) =="
+"$BIN" loadgen --addr "$router" --targets "$addr_a,$addr_b" \
+    --rate 300 --duration 2 --conns 8 --predict-pct 80 \
+    --out "$tmp/BENCH_serve.json" --strict
+
+echo "== cluster smoke: artifact cluster section =="
+for key in '"cluster"' '"backends"' '"throughput_rps"' '"share"' '"shard_skew"'; do
+    grep -qF "$key" "$tmp/BENCH_serve.json" \
+        || { echo "BENCH_serve.json missing $key"; cat "$tmp/BENCH_serve.json"; exit 1; }
+done
+
+echo "== cluster smoke: cluster_stats probe =="
+stats=$(exec 3<>"/dev/tcp/${router%:*}/${router##*:}" \
+    && printf '{"op":"cluster_stats"}\n' >&3 && head -n1 <&3 && exec 3<&- 3>&-)
+echo "$stats" | grep -qF '"ok":true' \
+    || { echo "cluster_stats op failed: $stats"; exit 1; }
+echo "$stats" | grep -qF '"healthy_backends":2' \
+    || { echo "router does not see both backends healthy: $stats"; exit 1; }
+echo "cluster smoke: passed ($stats)"

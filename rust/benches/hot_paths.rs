@@ -220,6 +220,7 @@ fn main() {
             idle_conns: 448,
             lane_restarts: 0,
             evictions: 17,
+            hints_applied: 9,
             reactor_threads: 2,
             uptime_s: 3600.5,
             version: env!("CARGO_PKG_VERSION"),

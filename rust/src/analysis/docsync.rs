@@ -10,8 +10,9 @@
 //! | enumeration | code source | doc anchor | direction |
 //! |---|---|---|---|
 //! | op names | `protocol.rs` `"…" => Op::…` match | `## Ops` table + `### <op>` headings | both |
-//! | error kinds | `ParseError::kind()` arms + every literal `err_kind("…")` call site | `## Error kinds` table | both |
+//! | error kinds | `ParseError::kind()` arms + every literal `err_kind("…")` / `cluster_err("…")` call site | `## Error kinds` table | both |
 //! | `stats` fields | `w.key("…")` calls in the `Response::Stats` encode arm | `### stats` response example | both |
+//! | `cluster_stats` fields | `w.key("…")` calls in the `Response::ClusterStats` encode arm | `### cluster_stats` response example | both |
 //! | `metrics` gauges | the `gauges = vec![…]` table in `router.rs` | `"gauges":{…}` in the `### metrics` example | both |
 //! | `metrics` fields | `w.key("…")` calls in the `Response::Metrics` encode arm | `### metrics` section text | code → doc |
 //! | stage names | `Stage::… => "…"` arms in `obs/mod.rs` | `### metrics` section text | code → doc |
@@ -30,6 +31,7 @@ pub struct CodeInventory {
     pub ops: BTreeSet<String>,
     pub error_kinds: BTreeSet<String>,
     pub stats_keys: BTreeSet<String>,
+    pub cluster_stats_keys: BTreeSet<String>,
     pub metrics_keys: BTreeSet<String>,
     pub gauges: BTreeSet<String>,
     pub stages: BTreeSet<String>,
@@ -73,10 +75,11 @@ pub fn stages_in_code(obs: &Scan, in_test: TestMask) -> BTreeSet<String> {
 /// Error kinds from one file: `ParseError::… => "…"` arms (the parser's
 /// own `kind()` table — the literal must directly follow `=>`, which
 /// excludes `Display` arms like `… => write!(f, "…")`) plus the first
-/// literal argument of every `err_kind(` call site. A non-literal first
-/// argument (e.g. `err_kind(e.kind(), …)`) contributes nothing: the
-/// literal must follow the call with only whitespace and the opening
-/// quote in between.
+/// literal argument of every `err_kind(` and `cluster_err(` call site
+/// (the route tier's structured per-node errors carry a kind too). A
+/// non-literal first argument (e.g. `err_kind(e.kind(), …)`)
+/// contributes nothing: the literal must follow the call with only
+/// whitespace and the opening quote in between.
 pub fn error_kinds_in_code(scan: &Scan, in_test: TestMask, out: &mut BTreeSet<String>) {
     for l in &scan.strings {
         if in_test(l.line) || l.start == 0 {
@@ -89,15 +92,17 @@ pub fn error_kinds_in_code(scan: &Scan, in_test: TestMask, out: &mut BTreeSet<St
             out.insert(l.text.clone());
         }
     }
-    for (pos, _) in scan.masked.match_indices("err_kind(") {
-        let call_end = pos + "err_kind(".len();
-        if in_test(line_of(&scan.masked, pos)) {
-            continue;
-        }
-        if let Some(lit) = scan.strings.iter().find(|l| l.start > call_end) {
-            let between = &scan.masked[call_end..lit.start.min(scan.masked.len())];
-            if between.chars().all(|c| c.is_whitespace() || c == '"') {
-                out.insert(lit.text.clone());
+    for needle in ["err_kind(", "cluster_err("] {
+        for (pos, _) in scan.masked.match_indices(needle) {
+            let call_end = pos + needle.len();
+            if in_test(line_of(&scan.masked, pos)) {
+                continue;
+            }
+            if let Some(lit) = scan.strings.iter().find(|l| l.start > call_end) {
+                let between = &scan.masked[call_end..lit.start.min(scan.masked.len())];
+                if between.chars().all(|c| c.is_whitespace() || c == '"') {
+                    out.insert(lit.text.clone());
+                }
             }
         }
     }
@@ -320,6 +325,21 @@ pub fn check_doc(
         );
     }
 
+    // cluster_stats response fields (the route tier's own op) — nested
+    // per-backend keys included, the doc example must show them all
+    if let Some((line, body)) = md_section(doc, "### cluster_stats") {
+        compare_sets(
+            "cluster_stats fields",
+            &inv.cluster_stats_keys,
+            &response_example_keys(&body),
+            doc_file,
+            line,
+            findings,
+        );
+    } else if !inv.cluster_stats_keys.is_empty() {
+        findings.push(drift(doc_file, 1, "missing `### cluster_stats` section".into()));
+    }
+
     // metrics: gauges exactly, other emitted keys + stage names by mention
     if let Some((line, body)) = md_section(doc, "### metrics") {
         let doc_gauges: BTreeSet<String> = body
@@ -399,6 +419,11 @@ fn encode(w: &mut W) {
         format!("queue full"),
     );
     let f = Response::err_kind(e.kind(), format!("bad request"));
+    let g = Response::cluster_err(
+        "epoch_divergence",
+        "nodes disagree".to_string(),
+        Vec::new(),
+    );
 }
 "#;
         let s = scan(src);
@@ -408,8 +433,11 @@ fn encode(w: &mut W) {
         error_kinds_in_code(&s, &never_test, &mut kinds);
         assert_eq!(
             kinds,
-            ["unknown_op", "bad_request", "overloaded"].iter().map(|s| s.to_string()).collect(),
-            "literal-first err_kind only — `e.kind()` site contributes nothing"
+            ["unknown_op", "bad_request", "overloaded", "epoch_divergence"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            "literal-first err_kind/cluster_err only — `e.kind()` site contributes nothing"
         );
         let keys = keys_in_encode_arm(&s, "Response::Stats", &never_test);
         assert_eq!(keys, ["ok", "requests"].iter().map(|s| s.to_string()).collect());

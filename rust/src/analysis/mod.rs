@@ -174,6 +174,8 @@ fn build_inventory(ctxs: &[(String, FileCtx)]) -> CodeInventory {
         if path == PROTOCOL_SRC {
             inv.ops = docsync::ops_in_code(&ctx.scan, &in_test);
             inv.stats_keys = docsync::keys_in_encode_arm(&ctx.scan, "Response::Stats", &in_test);
+            inv.cluster_stats_keys =
+                docsync::keys_in_encode_arm(&ctx.scan, "Response::ClusterStats", &in_test);
             inv.metrics_keys =
                 docsync::keys_in_encode_arm(&ctx.scan, "Response::Metrics", &in_test);
         }

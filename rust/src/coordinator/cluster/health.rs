@@ -1,0 +1,118 @@
+//! Health prober for the route tier: per-interval `stats` probes with
+//! ejection/rejoin hysteresis and cache-hint replay.
+//!
+//! Probing with `stats` (not `health`) buys the epoch for free: every
+//! successful probe refreshes the backend's last-seen `registry_epoch`,
+//! which the router needs to build cache hints for that backend.
+//!
+//! Transitions are hysteretic: a backend is ejected after
+//! `fail_threshold` *consecutive* probe failures and rejoins on the
+//! first success afterwards. On rejoin, every cache hint buffered for
+//! that backend while it was away is replayed into it — predicts its
+//! shard missed during the outage were answered (colder) by fallback
+//! owners, and the replays re-warm the returning owner's cache.
+//!
+//! The prober owns its own [`Peer`] per backend, so probes never
+//! contend with request-path forwards on a connection.
+
+use super::peer::Peer;
+use super::router::Shared;
+use crate::util::Json;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// What one probe observation did to a backend's membership state.
+enum Transition {
+    None,
+    Ejected,
+    Rejoined,
+}
+
+/// Apply one probe result under the cluster lock (single acquisition —
+/// the counters and the flag can never be observed torn).
+fn note_probe(shared: &Shared, i: usize, result: Result<Option<u64>, ()>) -> Transition {
+    let mut st = shared.state.lock().unwrap();
+    let b = &mut st.backends[i];
+    match result {
+        Ok(epoch) => {
+            b.consecutive_failures = 0;
+            if let Some(e) = epoch {
+                b.epoch = Some(e);
+            }
+            if !b.healthy {
+                b.healthy = true;
+                st.rejoins += 1;
+                return Transition::Rejoined;
+            }
+            Transition::None
+        }
+        Err(()) => {
+            b.consecutive_failures += 1;
+            if b.healthy && b.consecutive_failures >= shared.fail_threshold {
+                b.healthy = false;
+                st.ejections += 1;
+                return Transition::Ejected;
+            }
+            Transition::None
+        }
+    }
+}
+
+/// Replay every hint buffered for backend `i` (called right after its
+/// rejoin). Hints are drained under one lock acquisition, sent outside
+/// the lock, and counted as replayed whether the backend applied them
+/// or not — an epoch-mismatch drop on the backend is still a delivery.
+fn replay_hints(shared: &Shared, i: usize, peer: &mut Peer) {
+    let mine: Vec<String> = {
+        let mut st = shared.state.lock().unwrap();
+        let (mine, rest): (Vec<_>, Vec<_>) =
+            st.pending_hints.drain(..).partition(|(owner, _)| *owner == i);
+        st.pending_hints = rest.into_iter().collect();
+        mine.into_iter().map(|(_, line)| line).collect()
+    };
+    for line in mine {
+        if peer.call(&line).is_ok() {
+            let mut st = shared.state.lock().unwrap();
+            st.hints_replayed += 1;
+            st.forwarded += 1;
+            st.backends[i].requests += 1;
+        }
+    }
+}
+
+/// The prober thread body: probe every backend each interval until the
+/// router shuts down.
+pub(crate) fn prober_loop(shared: &Shared, interval: Duration) {
+    let mut peers: Vec<Peer> = shared
+        .ring
+        .backends()
+        .iter()
+        .map(|a| Peer::new(a, shared.call_timeout))
+        .collect();
+    // ordering: shutdown latch — see RouteHandle::stop; the prober only
+    // needs to notice eventually.
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        for (i, peer) in peers.iter_mut().enumerate() {
+            let result = match peer.call(r#"{"op":"stats"}"#) {
+                Ok(reply) => {
+                    let epoch = Json::parse(&reply)
+                        .ok()
+                        .filter(|j| j.get("ok").and_then(Json::as_bool) == Some(true))
+                        .and_then(|j| j.get("registry_epoch").and_then(|e| e.as_f64()))
+                        .map(|e| e as u64);
+                    // a reachable socket answering garbage (or a router
+                    // misconfigured to probe itself) is not healthy
+                    match epoch {
+                        Some(e) => Ok(Some(e)),
+                        None => Err(()),
+                    }
+                }
+                Err(_) => Err(()),
+            };
+            if let Transition::Rejoined = note_probe(shared, i, result) {
+                replay_hints(shared, i, peer);
+            }
+        }
+        std::thread::sleep(interval);
+    }
+}

@@ -1,0 +1,25 @@
+//! Multi-node serving tier: the `repro route` front process.
+//!
+//! A cluster is N independent `repro serve` backends behind one (or
+//! more) stateless routers. Prediction state is keyed by
+//! `(anchor, target)`, so it shards cleanly: the [`ring`] maps each
+//! pair to an owning backend (rendezvous hashing — minimal churn on
+//! membership change), [`peer`] speaks the existing line protocol to
+//! backends, [`health`] probes membership and replays buffered cache
+//! hints into rejoining owners, and [`router`] ties it together:
+//! sharded forwards with failover, two-phase epoch-agreed publishes,
+//! and the router-local `cluster_stats` op.
+//!
+//! The deterministic cluster test harness lives in
+//! `tests/cluster_util/` (stub backends on real ephemeral-port
+//! listeners) and `tests/cluster.rs`; chaos coverage reuses the
+//! `cluster.peer.send[.<addr>]` failpoints (`docs/RESILIENCE.md`).
+
+pub mod health;
+pub mod peer;
+pub mod ring;
+pub mod router;
+
+pub use peer::Peer;
+pub use ring::Ring;
+pub use router::{serve_cluster, RouteHandle, RouteOptions};

@@ -1,0 +1,179 @@
+//! Blocking line-protocol client for one backend, with lazy reconnect.
+//!
+//! A [`Peer`] owns (at most) one TCP connection to a single backend and
+//! speaks the same newline-delimited JSON the backend serves to
+//! clients — the route tier is a protocol-transparent proxy, so request
+//! lines are forwarded verbatim and reply lines relayed back verbatim.
+//!
+//! Connections are pooled across calls and re-established lazily: a
+//! call on a dead pooled connection retries exactly once on a fresh
+//! socket (the backend's idle sweep may have closed it between calls),
+//! then surfaces the error so the router can fail over to the next ring
+//! owner.
+//!
+//! Failpoints (chaos tests, `docs/RESILIENCE.md`): every call checks
+//! the shared `cluster.peer.send` point *and* the per-backend
+//! `cluster.peer.send.<addr>` point, so a test can partition one
+//! backend while the rest of the fleet keeps answering.
+
+use crate::util::failpoint::{self, Hit};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One backend endpoint: address, pooled connection, timeouts.
+pub struct Peer {
+    addr: String,
+    /// Dynamic failpoint name `cluster.peer.send.<addr>` (built once —
+    /// [`failpoint::check`] takes any `&str`).
+    fp_name: String,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Peer {
+    pub fn new(addr: &str, timeout: Duration) -> Peer {
+        Peer {
+            addr: addr.to_string(),
+            fp_name: format!("cluster.peer.send.{addr}"),
+            timeout,
+            conn: None,
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> io::Result<BufReader<TcpStream>> {
+        let sa = self.addr.to_socket_addrs()?.next().ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "unresolvable backend address")
+        })?;
+        let stream = TcpStream::connect_timeout(&sa, self.timeout)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        Ok(BufReader::new(stream))
+    }
+
+    /// Write one request line, read one reply line (newline stripped).
+    fn exchange(conn: &mut BufReader<TcpStream>, line: &str) -> io::Result<String> {
+        let stream = conn.get_mut();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut reply = String::new();
+        if conn.read_line(&mut reply)? == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "backend closed the connection",
+            ));
+        }
+        while reply.ends_with('\n') || reply.ends_with('\r') {
+            reply.pop();
+        }
+        Ok(reply)
+    }
+
+    /// One request/reply round trip. Errors mean "this backend did not
+    /// answer" — the caller decides whether to fail over.
+    pub fn call(&mut self, line: &str) -> io::Result<String> {
+        for name in ["cluster.peer.send", self.fp_name.as_str()] {
+            match failpoint::check(name) {
+                Some(Hit::ReturnErr) | Some(Hit::PartialWrite(_)) => {
+                    // injected partition: drop the pooled connection so a
+                    // later disarm starts clean
+                    self.conn = None;
+                    return Err(io::Error::new(
+                        io::ErrorKind::ConnectionReset,
+                        format!("failpoint `{name}` fired: injected peer fault"),
+                    ));
+                }
+                None => {}
+            }
+        }
+        let reused = self.conn.is_some();
+        let mut conn = match self.conn.take() {
+            Some(c) => c,
+            None => self.connect()?,
+        };
+        match Self::exchange(&mut conn, line) {
+            Ok(reply) => {
+                self.conn = Some(conn);
+                Ok(reply)
+            }
+            // the pooled connection may simply have been idle-closed by
+            // the backend between calls — one fresh-socket retry
+            // distinguishes "stale pool entry" from "backend down"
+            Err(_) if reused => {
+                drop(conn);
+                let mut fresh = self.connect()?;
+                let reply = Self::exchange(&mut fresh, line)?;
+                self.conn = Some(fresh);
+                Ok(reply)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One-shot echo server: accepts a single connection, answers every
+    /// line with a fixed reply, then exits.
+    fn echo_backend(reply: &'static str) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let mut line = String::new();
+            while {
+                line.clear();
+                reader.read_line(&mut line).unwrap_or(0) > 0
+            } {
+                out.write_all(reply.as_bytes()).unwrap();
+                out.write_all(b"\n").unwrap();
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn call_round_trips_and_pools_the_connection() {
+        let (addr, h) = echo_backend(r#"{"ok":true}"#);
+        let mut peer = Peer::new(&addr, Duration::from_secs(5));
+        assert_eq!(peer.call(r#"{"op":"health"}"#).unwrap(), r#"{"ok":true}"#);
+        assert_eq!(peer.call(r#"{"op":"health"}"#).unwrap(), r#"{"ok":true}"#);
+        assert!(peer.conn.is_some(), "connection must be pooled");
+        drop(peer);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn per_backend_failpoint_injects_a_peer_fault() {
+        let (addr, h) = echo_backend(r#"{"ok":true}"#);
+        let mut peer = Peer::new(&addr, Duration::from_secs(5));
+        assert!(peer.call(r#"{"op":"health"}"#).is_ok());
+        let fp = format!("cluster.peer.send.{addr}");
+        failpoint::configure(&fp, failpoint::Action::ReturnErr);
+        let err = peer.call(r#"{"op":"health"}"#).unwrap_err();
+        assert!(err.to_string().contains("injected peer fault"), "{err}");
+        assert!(peer.conn.is_none(), "injected fault must drop the pool");
+        failpoint::clear(&fp);
+        assert!(peer.call(r#"{"op":"health"}"#).is_ok(), "recovers after disarm");
+        drop(peer);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_backend_surfaces_an_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // nothing listens here any more
+        let mut peer = Peer::new(&addr, Duration::from_millis(200));
+        assert!(peer.call(r#"{"op":"health"}"#).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Rendezvous (highest-random-weight) hash ring for the route tier.
+//!
+//! The cluster shards prediction state by `(anchor, target)` pair: the
+//! shard key is [`seed_of`] over the two instance keys — the *same*
+//! identity the in-process dispatcher uses to pin a pair to a predict
+//! lane, so a pair that hashes together locally also hashes together
+//! across the fleet. Each backend address is scored against the shard
+//! key with a splitmix64-style finalizer; the backend with the highest
+//! score owns the key, and the full descending-score order is the
+//! failover order.
+//!
+//! Rendezvous hashing gives the minimal-churn property for free, with
+//! no virtual-node bookkeeping: removing one backend remaps *only* the
+//! keys that backend owned (every other backend's scores are
+//! untouched), and adding one steals only the keys it now wins. The
+//! property tests below pin both guarantees plus the balance bound.
+
+use crate::util::seed_of;
+
+/// Immutable membership snapshot with per-backend score seeds.
+///
+/// The ring is built once over the full *configured* membership and
+/// never rebuilt on health transitions: the router walks
+/// [`Ring::owners`] in order and skips unhealthy backends, which is
+/// exactly HRW failover. When the backend comes back, the walk finds it
+/// first again — rejoin restores its shard with zero remapping of
+/// anyone else's keys.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    backends: Vec<String>,
+    seeds: Vec<u64>,
+}
+
+impl Ring {
+    /// Build a ring over `backends` (sorted + deduped, so the index
+    /// order is stable regardless of configuration order).
+    pub fn new(mut backends: Vec<String>) -> Ring {
+        backends.sort();
+        backends.dedup();
+        let seeds = backends.iter().map(|b| seed_of(&[b.as_str()])).collect();
+        Ring { backends, seeds }
+    }
+
+    /// Number of configured backends.
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// True when no backends are configured.
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// The sorted backend addresses (index-aligned with [`Ring::owners`]).
+    pub fn backends(&self) -> &[String] {
+        &self.backends
+    }
+
+    /// Shard key of an `(anchor, target)` pair — [`seed_of`] over both
+    /// instance keys, matching the dispatcher's predict-lane identity.
+    pub fn shard_key(anchor: &str, target: &str) -> u64 {
+        seed_of(&[anchor, target])
+    }
+
+    /// Per-(backend, key) rendezvous score: mix the backend's seed with
+    /// the shard key, then run a splitmix64 finalizer so single-bit key
+    /// differences avalanche across the whole word.
+    fn score(seed: u64, key: u64) -> u64 {
+        let mut z = seed ^ key.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// All backend indices in descending score order for `key`: the
+    /// first entry owns the shard, the rest are the failover order.
+    pub fn owners(&self, key: u64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.backends.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse((Self::score(self.seeds[i], key), i)));
+        idx
+    }
+
+    /// The owning backend index for `key`, if any backend is configured.
+    pub fn owner(&self, key: u64) -> Option<usize> {
+        (0..self.backends.len()).max_by_key(|&i| (Self::score(self.seeds[i], key), i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic membership/key generator (no rand crate by design).
+    fn lcg(state: &mut u64) -> u64 {
+        *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *state
+    }
+
+    fn members(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+    }
+
+    #[test]
+    fn owner_is_first_of_owners_and_deterministic() {
+        let ring = Ring::new(members(5));
+        let mut s = 42u64;
+        for _ in 0..1000 {
+            let key = lcg(&mut s);
+            let order = ring.owners(key);
+            assert_eq!(order.len(), 5);
+            assert_eq!(ring.owner(key), Some(order[0]));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "owners is a permutation");
+            assert_eq!(order, ring.owners(key), "stable across calls");
+        }
+    }
+
+    #[test]
+    fn membership_order_and_duplicates_do_not_change_ownership() {
+        let a = Ring::new(members(4));
+        let mut shuffled = members(4);
+        shuffled.reverse();
+        shuffled.push(shuffled[0].clone());
+        let b = Ring::new(shuffled);
+        assert_eq!(a.backends(), b.backends());
+        let mut s = 7u64;
+        for _ in 0..500 {
+            let key = lcg(&mut s);
+            assert_eq!(a.owner(key), b.owner(key));
+        }
+    }
+
+    /// Documented balance bound: with 10k uniform keys over n backends
+    /// (3..=16), every backend's share stays within ±40% of fair. For a
+    /// uniform hash the binomial stddev at n=16 is ~4% of the mean, so
+    /// ±40% is ~10 sigma — a failure means the mixer is broken, not bad
+    /// luck.
+    #[test]
+    fn balance_within_documented_bounds_across_3_to_16_backends() {
+        const KEYS: usize = 10_000;
+        for n in 3..=16usize {
+            let ring = Ring::new(members(n));
+            let mut counts = vec![0usize; n];
+            let mut s = 0xD1CE_5EEDu64 ^ n as u64;
+            for _ in 0..KEYS {
+                counts[ring.owner(lcg(&mut s)).unwrap()] += 1;
+            }
+            let fair = KEYS as f64 / n as f64;
+            for (i, &c) in counts.iter().enumerate() {
+                let share = c as f64 / fair;
+                assert!(
+                    (0.6..=1.4).contains(&share),
+                    "n={n} backend {i} holds {c} keys ({share:.2}x fair)"
+                );
+            }
+        }
+    }
+
+    /// Minimal churn on loss: removing one backend remaps only the keys
+    /// that backend owned. Every other key keeps its owner *address*.
+    #[test]
+    fn removing_one_backend_remaps_only_its_keys() {
+        let full = Ring::new(members(8));
+        for gone in 0..8usize {
+            let survivors: Vec<String> =
+                members(8).into_iter().enumerate().filter(|(i, _)| *i != gone).map(|(_, m)| m).collect();
+            let shrunk = Ring::new(survivors);
+            let mut s = 0xBEEFu64 ^ gone as u64;
+            let mut moved = 0usize;
+            for _ in 0..2000 {
+                let key = lcg(&mut s);
+                let before = &full.backends()[full.owner(key).unwrap()];
+                let after = &shrunk.backends()[shrunk.owner(key).unwrap()];
+                if before == &full.backends()[gone] {
+                    moved += 1; // had to move — its owner is gone
+                } else {
+                    assert_eq!(before, after, "key not owned by the lost backend moved");
+                }
+            }
+            assert!(moved > 0, "the lost backend owned at least some keys");
+        }
+    }
+
+    /// Minimal churn on join: an added backend only steals keys for
+    /// itself — no key moves between two pre-existing backends.
+    #[test]
+    fn adding_one_backend_steals_only_for_itself() {
+        let small = Ring::new(members(6));
+        let mut grown_members = members(6);
+        grown_members.push("10.0.1.99:7070".to_string());
+        let grown = Ring::new(grown_members);
+        let mut s = 0xF00Du64;
+        let mut stolen = 0usize;
+        for _ in 0..2000 {
+            let key = lcg(&mut s);
+            let before = &small.backends()[small.owner(key).unwrap()];
+            let after = &grown.backends()[grown.owner(key).unwrap()];
+            if after == "10.0.1.99:7070" {
+                stolen += 1;
+            } else {
+                assert_eq!(before, after, "key moved between pre-existing backends");
+            }
+        }
+        assert!(stolen > 0, "the new backend won at least some keys");
+    }
+
+    /// Failover-order consistency over seeded random membership walks:
+    /// dropping a backend from the membership yields exactly the old
+    /// owners order with that backend deleted — so walking owners() and
+    /// skipping the unhealthy is equivalent to rebuilding the ring.
+    #[test]
+    fn owners_order_survives_membership_deletion() {
+        let mut s = 0xACE5u64;
+        for _ in 0..20 {
+            let n = 3 + (lcg(&mut s) % 10) as usize;
+            let full = Ring::new(members(n));
+            let gone = (lcg(&mut s) % n as u64) as usize;
+            let survivors: Vec<String> =
+                full.backends().iter().filter(|b| *b != &full.backends()[gone]).cloned().collect();
+            let shrunk = Ring::new(survivors);
+            for _ in 0..200 {
+                let key = lcg(&mut s);
+                let expect: Vec<&String> = full
+                    .owners(key)
+                    .into_iter()
+                    .filter(|&i| i != gone)
+                    .map(|i| &full.backends()[i])
+                    .collect();
+                let got: Vec<&String> =
+                    shrunk.owners(key).into_iter().map(|i| &shrunk.backends()[i]).collect();
+                assert_eq!(expect, got);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_key_matches_dispatcher_identity() {
+        // same fnv1a-over-joined-parts identity as dispatch::lane_of
+        assert_eq!(Ring::shard_key("p3.2xlarge", "g4dn.xlarge"), seed_of(&["p3.2xlarge", "g4dn.xlarge"]));
+        assert_ne!(
+            Ring::shard_key("p3.2xlarge", "g4dn.xlarge"),
+            Ring::shard_key("g4dn.xlarge", "p3.2xlarge"),
+            "pair key is ordered"
+        );
+    }
+
+    #[test]
+    fn empty_ring_is_safe() {
+        let ring = Ring::new(Vec::new());
+        assert!(ring.is_empty());
+        assert_eq!(ring.owner(1), None);
+        assert!(ring.owners(1).is_empty());
+    }
+}

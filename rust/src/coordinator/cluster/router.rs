@@ -1,0 +1,610 @@
+//! The route tier (`repro route`): a protocol-transparent front process
+//! that shards requests by `(anchor, target)` across N `repro serve`
+//! backends over the existing line protocol.
+//!
+//! Dataflow (see `docs/ARCHITECTURE.md` §Cluster for the full diagram):
+//!
+//! * **Sharded ops** (`predict`, `predict_batch_size`,
+//!   `predict_pixel_size`, `hint`) route to the [`Ring`] owner of their
+//!   shard key; if the owner is ejected or fails mid-call, the router
+//!   walks the rendezvous failover order and counts a `retry`. A predict
+//!   answered by a fallback owner is also buffered as a cache `hint` for
+//!   the primary, replayed when it rejoins — so its cache is warm again
+//!   the moment it returns.
+//! * **Fan-out ops** (`ingest`, and the two-phase `onboard`/`reload`
+//!   publish) go to every healthy backend. A publish first runs the
+//!   `dry_run` validation gate on every node (phase 1); only if every
+//!   node accepts does the real publish run (phase 2), and the router
+//!   verifies all nodes landed on the same `registry_epoch`. Any
+//!   rejection or divergence is reported as a structured
+//!   [`Response::ClusterErr`] with one [`NodeReport`] per node — the
+//!   fleet is never left on a torn epoch by a candidate that some nodes
+//!   would refuse.
+//! * **Any-node ops** (`stats`, `metrics`, `instances`, `recommend`,
+//!   `plan`) go to the first healthy backend — this state is replicated,
+//!   not sharded.
+//! * **Inline ops**: `health` and `cluster_stats` are answered by the
+//!   router itself.
+//!
+//! All mutable router state (membership health, per-backend counters,
+//! pending hints) lives behind **one** `Mutex<ClusterState>`;
+//! `cluster_stats` snapshots everything under a single acquisition, so
+//! derived invariants (`forwarded == Σ backend.requests`) hold in every
+//! snapshot — the torn-read hazard the PR 7 connection gauges hit is
+//! structurally excluded here.
+
+use super::health;
+use super::peer::Peer;
+use super::ring::Ring;
+use crate::coordinator::protocol::{
+    ClusterBackend, HintRequest, NodeReport, PredictRequest, Request, Response,
+};
+use crate::predictor::Member;
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Cap on hints buffered for ejected shard owners. Oldest entries are
+/// dropped first — a hint is an optimization, never required state.
+const MAX_PENDING_HINTS: usize = 256;
+
+/// Configuration for [`serve_cluster`].
+#[derive(Debug, Clone)]
+pub struct RouteOptions {
+    /// Listen address of the router itself.
+    pub addr: String,
+    /// Backend `host:port` addresses (sorted + deduped into the ring).
+    pub backends: Vec<String>,
+    /// Health-probe cadence.
+    pub probe_interval: Duration,
+    /// Consecutive failed probes before a backend is ejected.
+    pub fail_threshold: u32,
+    /// Per-call connect/read/write timeout toward a backend.
+    pub call_timeout: Duration,
+}
+
+impl Default for RouteOptions {
+    fn default() -> Self {
+        RouteOptions {
+            addr: "127.0.0.1:7979".to_string(),
+            backends: Vec::new(),
+            probe_interval: Duration::from_millis(500),
+            fail_threshold: 2,
+            call_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Per-backend view under the cluster lock.
+pub(crate) struct BackendState {
+    pub addr: String,
+    pub healthy: bool,
+    pub consecutive_failures: u32,
+    /// Requests this backend answered through the router.
+    pub requests: u64,
+    /// Last `registry_epoch` seen from this backend (probe or publish);
+    /// `None` until the first successful probe.
+    pub epoch: Option<u64>,
+}
+
+/// All mutable router state — ONE lock, snapshotted in one acquisition.
+pub(crate) struct ClusterState {
+    pub backends: Vec<BackendState>,
+    pub requests: u64,
+    pub forwarded: u64,
+    pub retries: u64,
+    pub ejections: u64,
+    pub rejoins: u64,
+    pub no_backend: u64,
+    pub hints_replayed: u64,
+    /// Hints waiting for an ejected shard owner: `(backend idx, line)`.
+    pub pending_hints: VecDeque<(usize, String)>,
+}
+
+impl ClusterState {
+    fn new(backends: &[String]) -> ClusterState {
+        ClusterState {
+            backends: backends
+                .iter()
+                .map(|a| BackendState {
+                    addr: a.clone(),
+                    healthy: true,
+                    consecutive_failures: 0,
+                    requests: 0,
+                    epoch: None,
+                })
+                .collect(),
+            requests: 0,
+            forwarded: 0,
+            retries: 0,
+            ejections: 0,
+            rejoins: 0,
+            no_backend: 0,
+            hints_replayed: 0,
+            pending_hints: VecDeque::new(),
+        }
+    }
+}
+
+/// State shared between connection threads and the health prober.
+pub(crate) struct Shared {
+    pub ring: Ring,
+    pub state: Mutex<ClusterState>,
+    /// Request-path clients, index-aligned with `ring.backends()`.
+    pub peers: Vec<Mutex<Peer>>,
+    pub fail_threshold: u32,
+    pub call_timeout: Duration,
+    pub shutdown: AtomicBool,
+}
+
+/// Running route tier; `stop()` joins the accept and prober threads.
+pub struct RouteHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+}
+
+impl RouteHandle {
+    /// The bound listen address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, stop probing, join both threads. In-flight
+    /// connection threads finish their current client naturally.
+    pub fn stop(mut self) {
+        // ordering: shutdown latch polled by the accept/prober loops;
+        // exact publication timing only affects when they notice.
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        // unblock the accept loop with one throwaway connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Boot the route tier: bind, spawn the health prober and the accept
+/// loop (thread per connection — the router is I/O-bound fan-out, not a
+/// reactor workload).
+pub fn serve_cluster(opts: RouteOptions) -> std::io::Result<RouteHandle> {
+    let ring = Ring::new(opts.backends.clone());
+    if ring.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "repro route needs at least one backend (--backends a,b,c)",
+        ));
+    }
+    let listener = TcpListener::bind(&opts.addr)?;
+    let addr = listener.local_addr()?;
+    let peers = ring
+        .backends()
+        .iter()
+        .map(|a| Mutex::new(Peer::new(a, opts.call_timeout)))
+        .collect();
+    let state = Mutex::new(ClusterState::new(ring.backends()));
+    let shared = Arc::new(Shared {
+        ring,
+        state,
+        peers,
+        fail_threshold: opts.fail_threshold.max(1),
+        call_timeout: opts.call_timeout,
+        shutdown: AtomicBool::new(false),
+    });
+    let prober = {
+        let shared = shared.clone();
+        let interval = opts.probe_interval;
+        std::thread::spawn(move || health::prober_loop(&shared, interval))
+    };
+    let accept = {
+        let shared = shared.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                // ordering: shutdown latch — see RouteHandle::stop.
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let shared = shared.clone();
+                std::thread::spawn(move || handle_conn(&shared, stream));
+            }
+        })
+    };
+    Ok(RouteHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+        prober: Some(prober),
+    })
+}
+
+/// Serve one client connection: one request line in, one reply line out.
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = handle_line(shared, trimmed);
+        if out.write_all(reply.as_bytes()).is_err() || out.write_all(b"\n").is_err() {
+            return;
+        }
+    }
+}
+
+/// Encode a router-originated response as one line (no newline).
+fn encode(resp: &Response) -> String {
+    let mut out = Vec::new();
+    resp.encode(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Route one request line; returns the reply line (no newline).
+pub(crate) fn handle_line(shared: &Shared, line: &str) -> String {
+    let req = match Request::parse_dom(line) {
+        Ok(r) => r,
+        Err(e) => return encode(&Response::err_kind(e.kind(), format!("bad request: {e}"))),
+    };
+    shared.state.lock().unwrap().requests += 1;
+    match req {
+        Request::Health => encode(&Response::Health),
+        Request::ClusterStats => encode(&cluster_stats(shared)),
+        Request::Predict(p) => {
+            let key = Ring::shard_key(p.anchor.key(), p.target.key());
+            route_sharded(shared, line, key, Some(&p))
+        }
+        Request::Hint(h) => {
+            let key = Ring::shard_key(h.anchor.key(), h.target.key());
+            route_sharded(shared, line, key, None)
+        }
+        Request::PredictBatchSize { instance, .. } | Request::PredictPixelSize { instance, .. } => {
+            // interpolation is keyed by a single instance; both sides of
+            // the shard key collapse to it
+            let key = Ring::shard_key(instance.key(), instance.key());
+            route_sharded(shared, line, key, None)
+        }
+        Request::Stats | Request::Metrics | Request::Instances => route_any(shared, line),
+        Request::Recommend { .. } | Request::Plan { .. } => route_any(shared, line),
+        Request::Ingest(_) => broadcast_ingest(shared, line),
+        Request::Onboard { dry_run, .. } | Request::Reload { dry_run } => {
+            two_phase_publish(shared, line, dry_run)
+        }
+    }
+}
+
+/// Single-acquisition snapshot for `cluster_stats` — every derived
+/// invariant (healthy count, `forwarded == Σ requests`) holds because
+/// nothing can move between the reads.
+fn cluster_stats(shared: &Shared) -> Response {
+    let st = shared.state.lock().unwrap();
+    Response::ClusterStats {
+        requests: st.requests,
+        forwarded: st.forwarded,
+        retries: st.retries,
+        ejections: st.ejections,
+        rejoins: st.rejoins,
+        no_backend: st.no_backend,
+        hints_pending: st.pending_hints.len() as u64,
+        hints_replayed: st.hints_replayed,
+        healthy_backends: st.backends.iter().filter(|b| b.healthy).count(),
+        backends: st
+            .backends
+            .iter()
+            .map(|b| ClusterBackend {
+                addr: b.addr.clone(),
+                healthy: b.healthy,
+                requests: b.requests,
+            })
+            .collect(),
+    }
+}
+
+/// Health snapshot under one acquisition.
+fn healthy_mask(shared: &Shared) -> Vec<bool> {
+    let st = shared.state.lock().unwrap();
+    st.backends.iter().map(|b| b.healthy).collect()
+}
+
+/// One forwarded call; on success the forward counters move together
+/// under a single lock acquisition (the `cluster_stats` invariant).
+fn call_backend(shared: &Shared, i: usize, line: &str) -> std::io::Result<String> {
+    let reply = shared.peers[i].lock().unwrap().call(line);
+    if reply.is_ok() {
+        let mut st = shared.state.lock().unwrap();
+        st.forwarded += 1;
+        st.backends[i].requests += 1;
+    }
+    reply
+}
+
+/// Walk the ring's failover order, skipping ejected backends. A predict
+/// answered by a fallback owner leaves a buffered cache hint for the
+/// primary (replayed on rejoin by the health prober).
+fn route_sharded(
+    shared: &Shared,
+    line: &str,
+    key: u64,
+    predict: Option<&PredictRequest>,
+) -> String {
+    let order = shared.ring.owners(key);
+    let healthy = healthy_mask(shared);
+    let primary = order.first().copied();
+    for &i in &order {
+        if !healthy[i] {
+            continue;
+        }
+        match call_backend(shared, i, line) {
+            Ok(reply) => {
+                if let (Some(p), Some(pr)) = (predict, primary) {
+                    if pr != i {
+                        buffer_hint_for(shared, pr, p, &reply);
+                    }
+                }
+                return reply;
+            }
+            Err(_) => {
+                shared.state.lock().unwrap().retries += 1;
+            }
+        }
+    }
+    shared.state.lock().unwrap().no_backend += 1;
+    encode(&Response::err_kind(
+        "no_backend",
+        "no healthy backend for this shard — every ring owner is ejected or failed",
+    ))
+}
+
+/// Forward to the first healthy backend (replicated, unsharded state).
+fn route_any(shared: &Shared, line: &str) -> String {
+    let healthy = healthy_mask(shared);
+    for (i, ok) in healthy.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        match call_backend(shared, i, line) {
+            Ok(reply) => return reply,
+            Err(_) => {
+                shared.state.lock().unwrap().retries += 1;
+            }
+        }
+    }
+    shared.state.lock().unwrap().no_backend += 1;
+    encode(&Response::err_kind(
+        "no_backend",
+        "no healthy backend left to answer this request",
+    ))
+}
+
+/// A successful predict served by a *fallback* owner: rebuild it as a
+/// `hint` line for the primary so its cache is warm again on rejoin.
+fn buffer_hint_for(shared: &Shared, primary: usize, p: &PredictRequest, reply: &str) {
+    let Ok(j) = Json::parse(reply) else { return };
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        return;
+    }
+    let (Ok(latency_ms), Ok(member)) = (j.req_f64("latency_ms"), j.req_str("member")) else {
+        return;
+    };
+    let Some(member) = Member::from_name(member) else {
+        return;
+    };
+    // the hint must carry the epoch the primary will serve under; until
+    // its first probe we do not know it, so skip (hints are best-effort)
+    let epoch = {
+        let st = shared.state.lock().unwrap();
+        st.backends[primary].epoch
+    };
+    let Some(epoch) = epoch else { return };
+    let hint = Request::Hint(HintRequest {
+        epoch,
+        anchor: p.anchor,
+        target: p.target,
+        anchor_latency_ms: p.anchor_latency_ms,
+        latency_ms,
+        member,
+        profile: p.profile.clone(),
+    });
+    let line = hint.to_json().to_string();
+    let mut st = shared.state.lock().unwrap();
+    if st.pending_hints.len() >= MAX_PENDING_HINTS {
+        st.pending_hints.pop_front();
+    }
+    st.pending_hints.push_back((primary, line));
+}
+
+/// Fan an `ingest` line out to every healthy backend — staging areas
+/// are per-node, and each node's `onboard` validation gate needs the
+/// same corpus.
+fn broadcast_ingest(shared: &Shared, line: &str) -> String {
+    let healthy = healthy_mask(shared);
+    let mut nodes: Vec<NodeReport> = Vec::new();
+    let mut first_ok: Option<String> = None;
+    for (i, ok) in healthy.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        let addr = shared.ring.backends()[i].clone();
+        match call_backend(shared, i, line) {
+            Ok(reply) => {
+                let accepted = Json::parse(&reply)
+                    .ok()
+                    .and_then(|j| j.get("ok").and_then(Json::as_bool))
+                    == Some(true);
+                if accepted && first_ok.is_none() {
+                    first_ok = Some(reply.clone());
+                }
+                nodes.push(NodeReport {
+                    addr,
+                    epoch: None,
+                    ok: accepted,
+                    error: if accepted { String::new() } else { reply },
+                });
+            }
+            Err(e) => nodes.push(NodeReport {
+                addr,
+                epoch: None,
+                ok: false,
+                error: e.to_string(),
+            }),
+        }
+    }
+    if nodes.is_empty() {
+        shared.state.lock().unwrap().no_backend += 1;
+        return encode(&Response::err_kind(
+            "no_backend",
+            "no healthy backend left to stage this measurement",
+        ));
+    }
+    match (nodes.iter().all(|n| n.ok), first_ok) {
+        (true, Some(reply)) => reply,
+        _ => encode(&Response::cluster_err(
+            "internal_error",
+            "ingest fan-out failed on one or more nodes",
+            nodes,
+        )),
+    }
+}
+
+/// Two-phase fleet publish for `onboard`/`reload`:
+///
+/// 1. **Check** — the same line with `dry_run:true` runs every node's
+///    validation gate without swapping anything. Any rejection aborts
+///    with a `validation_failed` [`Response::ClusterErr`]; the whole
+///    fleet keeps serving the old epoch.
+/// 2. **Publish** — the real line goes to every node; all replies must
+///    be `ok` and agree on the new `registry_epoch`, else the divergence
+///    is reported per node as `epoch_divergence`.
+///
+/// A client line that itself carries `dry_run:true` stops after phase 1
+/// and reports the per-node check verdicts.
+fn two_phase_publish(shared: &Shared, line: &str, client_dry_run: bool) -> String {
+    let healthy = healthy_mask(shared);
+    let idx: Vec<usize> =
+        (0..healthy.len()).filter(|&i| healthy[i]).collect();
+    if idx.is_empty() {
+        shared.state.lock().unwrap().no_backend += 1;
+        return encode(&Response::err_kind(
+            "no_backend",
+            "no healthy backend left to publish to",
+        ));
+    }
+    // phase 1: every node runs the validation gate, nothing swaps
+    let dry_line = match Json::parse(line) {
+        Ok(mut j) => {
+            j.set("dry_run", Json::Bool(true));
+            j.to_string()
+        }
+        Err(e) => return encode(&Response::Err(format!("unparseable publish line: {e:#}"))),
+    };
+    let mut nodes: Vec<NodeReport> = Vec::new();
+    let mut first_ok: Option<String> = None;
+    for &i in &idx {
+        let addr = shared.ring.backends()[i].clone();
+        match call_backend(shared, i, &dry_line) {
+            Ok(reply) => {
+                let j = Json::parse(&reply).ok();
+                let accepted =
+                    j.as_ref().and_then(|j| j.get("ok").and_then(Json::as_bool)) == Some(true);
+                let epoch = j
+                    .as_ref()
+                    .and_then(|j| j.get("epoch").and_then(Json::as_f64))
+                    .map(|e| e as u64);
+                if accepted && first_ok.is_none() {
+                    first_ok = Some(reply.clone());
+                }
+                nodes.push(NodeReport {
+                    addr,
+                    epoch,
+                    ok: accepted,
+                    error: if accepted { String::new() } else { reply },
+                });
+            }
+            Err(e) => nodes.push(NodeReport {
+                addr,
+                epoch: None,
+                ok: false,
+                error: e.to_string(),
+            }),
+        }
+    }
+    if !nodes.iter().all(|n| n.ok) {
+        return encode(&Response::cluster_err(
+            "validation_failed",
+            "a node's validation gate rejected the candidate — the fleet keeps the old epoch",
+            nodes,
+        ));
+    }
+    if client_dry_run {
+        // the client only asked for the check; report the first verdict
+        return first_ok.unwrap_or_else(|| encode(&Response::Health));
+    }
+    // phase 2: the real publish, everywhere
+    let mut nodes: Vec<NodeReport> = Vec::new();
+    let mut first_ok: Option<String> = None;
+    for &i in &idx {
+        let addr = shared.ring.backends()[i].clone();
+        match call_backend(shared, i, line) {
+            Ok(reply) => {
+                let j = Json::parse(&reply).ok();
+                let accepted =
+                    j.as_ref().and_then(|j| j.get("ok").and_then(Json::as_bool)) == Some(true);
+                let epoch = j
+                    .as_ref()
+                    .and_then(|j| j.get("epoch").and_then(Json::as_f64))
+                    .map(|e| e as u64);
+                if accepted {
+                    if first_ok.is_none() {
+                        first_ok = Some(reply.clone());
+                    }
+                    if let Some(e) = epoch {
+                        shared.state.lock().unwrap().backends[i].epoch = Some(e);
+                    }
+                }
+                nodes.push(NodeReport {
+                    addr,
+                    epoch,
+                    ok: accepted,
+                    error: if accepted { String::new() } else { reply },
+                });
+            }
+            Err(e) => nodes.push(NodeReport {
+                addr,
+                epoch: None,
+                ok: false,
+                error: e.to_string(),
+            }),
+        }
+    }
+    let epochs: Vec<u64> = nodes.iter().filter_map(|n| n.epoch).collect();
+    let agreed = nodes.iter().all(|n| n.ok)
+        && epochs.len() == nodes.len()
+        && epochs.windows(2).all(|w| w[0] == w[1]);
+    match (agreed, first_ok) {
+        (true, Some(reply)) => reply,
+        _ => encode(&Response::cluster_err(
+            "epoch_divergence",
+            "fleet publish diverged — nodes disagree on the new registry epoch",
+            nodes,
+        )),
+    }
+}

@@ -231,15 +231,20 @@ pub enum Job {
         reply: Reply,
     },
     /// Train staged pairs and publish a new epoch (trainer lane).
+    /// `dry_run` validates without publishing (the route tier's phase-1
+    /// vote).
     Onboard {
         pair: Option<(Instance, Instance)>,
+        dry_run: bool,
         reply: Reply,
     },
     /// Re-load the model dir and publish a new epoch (trainer lane).
     /// `only_if_changed` is the mtime watcher's mode — a directory whose
-    /// fingerprint hasn't moved is skipped silently.
+    /// fingerprint hasn't moved is skipped silently. `dry_run` validates
+    /// the on-disk candidate without swapping it in.
     Reload {
         only_if_changed: bool,
+        dry_run: bool,
         reply: Reply,
     },
     Shutdown,
@@ -282,6 +287,9 @@ pub struct EngineStats {
     /// Phase-1 prediction-cache hit/miss counters (predict + advisor),
     /// shared across all replicas.
     pub cache: CacheStats,
+    /// Peer cache hints accepted and inserted by the `hint` op (counter;
+    /// an epoch-mismatched hint is acknowledged but not counted).
+    pub hints_applied: AtomicU64,
     /// Reactor connection-tier health (the `stats` op's
     /// `open_conns`/`active_conns`/`idle_conns`/`evictions` fields).
     pub conns: ConnStats,
@@ -884,6 +892,7 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(Job::Reload {
             only_if_changed: false,
+            dry_run: false,
             reply: Reply::channel(tx),
         })
         .unwrap();
@@ -894,6 +903,7 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(Job::Onboard {
             pair: Some((Instance::G4dn, Instance::G5)),
+            dry_run: false,
             reply: Reply::channel(tx),
         })
         .unwrap();

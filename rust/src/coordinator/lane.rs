@@ -273,31 +273,57 @@ pub fn trainer_lane(rt: &Runtime, rx: &Receiver<Job>, ctx: &LaneCtx) {
                 };
                 finish_with_execute(ctx, reply, resp, t0);
             }
-            Job::Onboard { pair, reply } => {
+            Job::Onboard {
+                pair,
+                dry_run,
+                reply,
+            } => {
                 stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter // ordering: stats-only counter
-                let resp = match ctx.registry.onboard(rt, pair, &ctx.onboard) {
-                    Ok(report) => Response::Onboarded {
-                        epoch: report.epoch,
-                        pairs: report.pairs.len(),
-                        staged: report.staged,
-                    },
-                    Err(e) => registry_error_response(e),
+                let resp = if dry_run {
+                    // route-tier phase 1: run the full train+validate
+                    // gate but never swap — the serving epoch is
+                    // untouched whatever the outcome
+                    match ctx.registry.check_onboard(rt, pair, &ctx.onboard) {
+                        Ok((pairs, staged)) => Response::OnboardCheck { pairs, staged },
+                        Err(e) => registry_error_response(e),
+                    }
+                } else {
+                    match ctx.registry.onboard(rt, pair, &ctx.onboard) {
+                        Ok(report) => Response::Onboarded {
+                            epoch: report.epoch,
+                            pairs: report.pairs.len(),
+                            staged: report.staged,
+                        },
+                        Err(e) => registry_error_response(e),
+                    }
                 };
                 finish_with_execute(ctx, reply, resp, t0);
             }
             Job::Reload {
                 only_if_changed,
+                dry_run,
                 reply,
             } => {
                 stats.requests.fetch_add(1, Ordering::Relaxed); // ordering: stats-only counter // ordering: stats-only counter
-                let resp = match ctx.registry.reload(rt, only_if_changed) {
-                    Ok(Some(epoch)) => Response::Reloaded { epoch },
-                    // watcher mode, nothing changed: report the epoch that
-                    // is (still) current
-                    Ok(None) => Response::Reloaded {
-                        epoch: ctx.registry.epoch(),
-                    },
-                    Err(e) => registry_error_response(e),
+                let resp = if dry_run {
+                    // route-tier phase 1: validate what is on disk
+                    // without swapping it in
+                    match ctx.registry.check_reload(rt) {
+                        Ok(()) => Response::ReloadCheck {
+                            epoch: ctx.registry.epoch(),
+                        },
+                        Err(e) => registry_error_response(e),
+                    }
+                } else {
+                    match ctx.registry.reload(rt, only_if_changed) {
+                        Ok(Some(epoch)) => Response::Reloaded { epoch },
+                        // watcher mode, nothing changed: report the epoch that
+                        // is (still) current
+                        Ok(None) => Response::Reloaded {
+                            epoch: ctx.registry.epoch(),
+                        },
+                        Err(e) => registry_error_response(e),
+                    }
                 };
                 finish_with_execute(ctx, reply, resp, t0);
             }
@@ -682,7 +708,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut reply = Reply::channel(tx);
         reply.meta_mut().deadline = Some(Instant::now() - Duration::from_millis(5));
-        let job = Job::Reload { only_if_changed: false, reply };
+        let job = Job::Reload { only_if_changed: false, dry_run: false, reply };
         assert!(admit(&ctx, job).is_none(), "expired job must be shed");
         match rx.try_recv().unwrap() {
             Response::ErrKind { kind, .. } => assert_eq!(kind, "deadline_exceeded"),
@@ -692,7 +718,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut reply = Reply::channel(tx);
         reply.meta_mut().deadline = Some(Instant::now() + Duration::from_secs(60));
-        let job = Job::Reload { only_if_changed: false, reply };
+        let job = Job::Reload { only_if_changed: false, dry_run: false, reply };
         assert!(admit(&ctx, job).is_some());
         assert!(rx.try_recv().is_err(), "no reply may be sent at admission");
     }

@@ -6,6 +6,11 @@
 //! narrative, with diagrams, lives in `docs/ARCHITECTURE.md`; the wire
 //! reference in `docs/PROTOCOL.md`):
 //!
+//! * [`cluster`] — the multi-node tier (`repro route`): a stateless
+//!   front process that rendezvous-hash-shards requests by
+//!   `(anchor, target)` across N backends over this same protocol, with
+//!   health-checked failover, two-phase epoch-agreed fleet publishes,
+//!   and peer cache-hint replay;
 //! * [`server`] — the admission loop: enforces the connection budget
 //!   (best-effort nonblocking `overloaded` rejection) and hands accepted
 //!   sockets to the reactor pool; `stop()` gracefully drains in-flight
@@ -45,6 +50,7 @@
 //! Python never appears anywhere on this path: requests go JSON → feature
 //! vector → HLO executable → JSON.
 
+pub mod cluster;
 pub mod dispatch;
 pub mod lane;
 pub mod protocol;
@@ -53,6 +59,7 @@ pub mod registry;
 pub mod router;
 pub mod server;
 
+pub use cluster::{serve_cluster, RouteHandle, RouteOptions};
 pub use dispatch::{ConnStats, EnginePool, EngineStats, Job, PoolOptions, Reply, SubmitError};
 pub use protocol::{
     parse_line, ParseError, ParsedLine, PredictRequest, PredictView, Request, Response,

@@ -7,7 +7,7 @@
 //! | op | request fields | reply fields |
 //! |----|----------------|--------------|
 //! | `health` | — | `status` |
-//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload`, `open_conns`, `active_conns`, `idle_conns`, `evictions`, `reactor_threads`, `uptime_s`, `version` |
+//! | `stats` | — | `requests`, `artifact_batches`, `avg_batch_fill`, `overloaded`, `predict_lanes`, `cache_hits`, `cache_misses`, `registry_epoch`, `last_reload`, `open_conns`, `active_conns`, `idle_conns`, `evictions`, `hints_applied`, `reactor_threads`, `uptime_s`, `version` |
 //! | `metrics` | — | `uptime_s`, `version`, `gauges{}`, `stages[]` (per-stage × op × warm/cold latency histograms with `p50_ms`/`p90_ms`/`p99_ms`/`max_ms` and raw `buckets`), `slow_traces[]` (see `docs/OBSERVABILITY.md`) |
 //! | `instances` | — | `instances[]` (key, gpu, price_hr) |
 //! | `predict` | `anchor`, `target`, `anchor_latency_ms`, `profile` | `latency_ms`, `member` |
@@ -16,8 +16,10 @@
 //! | `recommend` | `anchor`, `pixels`, `profile_bmin`/`anchor_lat_bmin`, `profile_bmax`/`anchor_lat_bmax`, optional `profile_pmin`/`anchor_lat_pmin`/`profile_pmax`/`anchor_lat_pmax`, optional `targets[]`, `batches[]`, `pixel_sizes[]`, `gpu_counts[]`, `include_spot`, `top_k` | `candidates[]` (each with `on_frontier`), `n_candidates`, `frontier_size` |
 //! | `plan` | `recommend` fields + `objective` (`cheapest`\|`fastest`\|`max_epochs`), `dataset_images`, `epochs`, `deadline_hours`\|`budget_usd` | `choice`, `hours`, `cost_usd`, `epochs`, `n_considered` |
 //! | `ingest` | `anchor`, `target`, `model`, `batch`, `pixels`, `profile`, `anchor_latency_ms`, `target_latency_ms` | `anchor`, `target`, `staged` |
-//! | `onboard` | optional `anchor` + `target` (both or neither; absent = every staged pair) | `epoch`, `pairs`, `staged` |
-//! | `reload` | — | `epoch` |
+//! | `onboard` | optional `anchor` + `target` (both or neither; absent = every staged pair), optional `dry_run` | `epoch`, `pairs`, `staged` (`dry_run`: validation verdict only, nothing published) |
+//! | `reload` | optional `dry_run` | `epoch` (`dry_run`: validation verdict only, nothing published) |
+//! | `hint` | `epoch`, `anchor`, `target`, `member`, `anchor_latency_ms`, `latency_ms`, `profile` | `applied` (peer cache-warmth transfer; see `docs/PROTOCOL.md` §hint) |
+//! | `cluster_stats` | — | route-tier membership/forwarding counters (backends answer `bad_request`) |
 //!
 //! Example request lines:
 //! ```json
@@ -47,7 +49,10 @@
 //! request was NOT executed and should be retried with backoff. The
 //! registry ops add `no_staged_data` (`onboard` with nothing ingested)
 //! and `validation_failed` (`onboard`/`reload` candidate rejected by the
-//! registry's probe gate — the previous epoch is still serving). The full
+//! registry's probe gate — the previous epoch is still serving). The
+//! route tier (`repro route`) adds `no_backend` (no healthy backend owns
+//! the shard) and `epoch_divergence` (a fleet-wide publish left nodes on
+//! different epochs; the reply carries a per-node report). The full
 //! kind table is in `docs/PROTOCOL.md`.
 //!
 //! # Wire path (DOM-free hot loop)
@@ -94,6 +99,24 @@ pub struct PredictRequest {
     pub profile: BTreeMap<String, f64>,
 }
 
+/// A peer cache-warmth hint (the `hint` op): one answered prediction,
+/// replayed into another backend's cache so a warm `(anchor, target)`
+/// on one node is answered warm from any entry point. Carries the
+/// registry epoch the prediction was computed under — a hint from a
+/// different epoch is acknowledged but not applied.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HintRequest {
+    pub epoch: u64,
+    pub anchor: Instance,
+    pub target: Instance,
+    pub anchor_latency_ms: f64,
+    /// The predicted latency being transplanted.
+    pub latency_ms: f64,
+    /// Ensemble member that produced the prediction.
+    pub member: Member,
+    pub profile: BTreeMap<String, f64>,
+}
+
 /// Parsed request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -131,10 +154,21 @@ pub enum Request {
     /// onboarding input path; see `coordinator::registry`).
     Ingest(IngestRequest),
     /// Train the staged pair(s) and publish a new registry epoch.
-    /// `pair == None` onboards every staged pair.
-    Onboard { pair: Option<(Instance, Instance)> },
+    /// `pair == None` onboards every staged pair. `dry_run` runs the
+    /// full train-and-validate pipeline but publishes nothing — the
+    /// route tier's phase-1 vote before a fleet-wide publish.
+    Onboard {
+        pair: Option<(Instance, Instance)>,
+        dry_run: bool,
+    },
     /// Re-load the model directory and publish it as a new epoch.
-    Reload,
+    /// `dry_run` validates the on-disk candidate without swapping it in.
+    Reload { dry_run: bool },
+    /// Peer cache-warmth transfer (route tier fan-out).
+    Hint(HintRequest),
+    /// Route-tier membership/forwarding counters. A plain backend does
+    /// not own this data and answers `bad_request`.
+    ClusterStats,
 }
 
 /// Why a request line was rejected. `UnknownOp` is split out so the
@@ -281,15 +315,34 @@ impl Request {
                 o.set("anchor_latency_ms", Json::Num(r.anchor_latency_ms));
                 o.set("target_latency_ms", Json::Num(r.target_latency_ms));
             }
-            Request::Onboard { pair } => {
+            Request::Onboard { pair, dry_run } => {
                 o.set("op", Json::Str("onboard".into()));
                 if let Some((a, t)) = pair {
                     o.set("anchor", Json::Str(a.key().into()));
                     o.set("target", Json::Str(t.key().into()));
                 }
+                if *dry_run {
+                    o.set("dry_run", Json::Bool(true));
+                }
             }
-            Request::Reload => {
+            Request::Reload { dry_run } => {
                 o.set("op", Json::Str("reload".into()));
+                if *dry_run {
+                    o.set("dry_run", Json::Bool(true));
+                }
+            }
+            Request::Hint(h) => {
+                o.set("op", Json::Str("hint".into()));
+                o.set("anchor", Json::Str(h.anchor.key().into()));
+                o.set("target", Json::Str(h.target.key().into()));
+                o.set("member", Json::Str(h.member.name().into()));
+                o.set("epoch", Json::Num(h.epoch as f64));
+                o.set("anchor_latency_ms", Json::Num(h.anchor_latency_ms));
+                o.set("latency_ms", Json::Num(h.latency_ms));
+                o.set("profile", profile_json(&h.profile));
+            }
+            Request::ClusterStats => {
+                o.set("op", Json::Str("cluster_stats".into()));
             }
         }
         o
@@ -380,6 +433,8 @@ pub fn parse_line<'s>(
         "ingest" => Op::Ingest,
         "onboard" => Op::Onboard,
         "reload" => Op::Reload,
+        "hint" => Op::Hint,
+        "cluster_stats" => Op::ClusterStats,
         other => return Err(ParseError::UnknownOp(other.to_string())), // lint: allow(hot-path-alloc): unknown-op error path, not reached by valid traffic
     };
     wire_request(op, line, ls).map_err(ParseError::Malformed)
@@ -399,6 +454,8 @@ enum Op {
     Ingest,
     Onboard,
     Reload,
+    Hint,
+    ClusterStats,
 }
 
 fn wire_request<'s>(
@@ -456,8 +513,49 @@ fn wire_request<'s>(
         Op::Ingest => sraw_ingest(ls, line)?,
         Op::Onboard => Request::Onboard {
             pair: sraw_onboard_pair(ls, line)?,
+            dry_run: sraw_dry_run(ls, line)?,
         },
-        Op::Reload => Request::Reload,
+        Op::Reload => Request::Reload {
+            dry_run: sraw_dry_run(ls, line)?,
+        },
+        Op::Hint => sraw_hint(ls, line)?,
+        Op::ClusterStats => Request::ClusterStats,
+    }))
+}
+
+/// Streaming mirror of [`parse_dry_run`]: optional boolean, default
+/// `false`.
+fn sraw_dry_run(ls: &LineScratch, line: &str) -> anyhow::Result<bool> {
+    match ls.field(line, "dry_run") {
+        None => Ok(false),
+        Some(RawVal::Bool(b)) => Ok(b),
+        Some(_) => Err(anyhow!("`dry_run` must be a boolean")),
+    }
+}
+
+/// Streaming mirror of [`parse_hint`] — same field order, same checks,
+/// same messages.
+fn sraw_hint(ls: &mut LineScratch, line: &str) -> anyhow::Result<Request> {
+    let anchor = sraw_req_instance(ls, line, "anchor")?;
+    let target = sraw_req_instance(ls, line, "target")?;
+    anyhow::ensure!(anchor != target, "`anchor` and `target` must differ");
+    let member = Member::from_name(sraw_req_str(ls, line, "member")?)
+        .ok_or_else(|| anyhow!("unknown member in `member`"))?;
+    let epoch = match ls.field(line, "epoch") {
+        None => anyhow::bail!("missing `epoch`"),
+        Some(v) => sraw_as_usize_strict(&v, "`epoch`")? as u64,
+    };
+    let anchor_latency_ms = sraw_req_positive(ls, line, "anchor_latency_ms")?;
+    let latency_ms = sraw_req_positive(ls, line, "latency_ms")?;
+    let profile = sraw_profile_map(ls, line, "profile")?;
+    Ok(Request::Hint(HintRequest {
+        epoch,
+        anchor,
+        target,
+        anchor_latency_ms,
+        latency_ms,
+        member,
+        profile,
     }))
 }
 
@@ -810,9 +908,24 @@ fn parse_fields(op: &str, j: &Json) -> anyhow::Result<Option<Request>> {
         "plan" => parse_plan(j)?,
         "ingest" => parse_ingest(j)?,
         "onboard" => parse_onboard(j)?,
-        "reload" => Request::Reload,
+        "reload" => Request::Reload {
+            dry_run: parse_dry_run(j)?,
+        },
+        "hint" => parse_hint(j)?,
+        "cluster_stats" => Request::ClusterStats,
         _ => return Ok(None),
     }))
+}
+
+/// Optional `dry_run` boolean, default `false` (rule mirrored by
+/// [`sraw_dry_run`]).
+fn parse_dry_run(j: &Json) -> anyhow::Result<bool> {
+    match j.get("dry_run") {
+        None => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow!("`dry_run` must be a boolean")),
+    }
 }
 
 /// DOM reference decoder for `ingest` (field order mirrored by
@@ -860,7 +973,10 @@ fn parse_onboard(j: &Json) -> anyhow::Result<Request> {
         (None, None) => None,
         _ => anyhow::bail!("`anchor` and `target` must be given together"),
     };
-    Ok(Request::Onboard { pair })
+    Ok(Request::Onboard {
+        pair,
+        dry_run: parse_dry_run(j)?,
+    })
 }
 
 fn req_field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
@@ -905,6 +1021,29 @@ fn parse_predict(j: &Json) -> anyhow::Result<Request> {
         target: req_instance(j, "target")?,
         anchor_latency_ms: req_positive(j, "anchor_latency_ms")?,
         profile: parse_profile(j, "profile")?,
+    }))
+}
+
+/// DOM reference decoder for `hint` (field order mirrored by
+/// [`sraw_hint`]).
+fn parse_hint(j: &Json) -> anyhow::Result<Request> {
+    let anchor = req_instance(j, "anchor")?;
+    let target = req_instance(j, "target")?;
+    anyhow::ensure!(anchor != target, "`anchor` and `target` must differ");
+    let member = Member::from_name(j.req_str("member")?)
+        .ok_or_else(|| anyhow!("unknown member in `member`"))?;
+    let epoch = as_usize_strict(req_field(j, "epoch")?, "`epoch`")? as u64;
+    let anchor_latency_ms = req_positive(j, "anchor_latency_ms")?;
+    let latency_ms = req_positive(j, "latency_ms")?;
+    let profile = parse_profile(j, "profile")?;
+    Ok(Request::Hint(HintRequest {
+        epoch,
+        anchor,
+        target,
+        anchor_latency_ms,
+        latency_ms,
+        member,
+        profile,
     }))
 }
 
@@ -1145,6 +1284,29 @@ fn query_json(q: &SweepRequest, o: &mut Json) {
     o.set("include_spot", Json::Bool(q.include_spot));
 }
 
+/// One backend row in the route tier's `cluster_stats` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterBackend {
+    pub addr: String,
+    pub healthy: bool,
+    /// Requests the router forwarded to (and got answered by) this
+    /// backend.
+    pub requests: u64,
+}
+
+/// One node's verdict in a route-tier fleet operation (`onboard`/
+/// `reload` fan-out) failure report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeReport {
+    pub addr: String,
+    /// The node's registry epoch after the operation; `None` when the
+    /// node could not be reached (the key is omitted on the wire).
+    pub epoch: Option<u64>,
+    pub ok: bool,
+    /// Empty when the node succeeded.
+    pub error: String,
+}
+
 /// Service response — typed variants, encoded straight to the output
 /// buffer (no DOM). Keys are emitted in sorted order, matching what the
 /// old `BTreeMap`-backed serializer produced byte for byte.
@@ -1177,6 +1339,9 @@ pub enum Response {
         lane_restarts: u64,
         /// Connections closed by the idle-timeout sweep (counter).
         evictions: u64,
+        /// Peer cache hints accepted and inserted into the prediction
+        /// cache (counter; stays 0 outside a routed cluster).
+        hints_applied: u64,
         /// Reactor threads serving this listener.
         reactor_threads: u64,
         /// Seconds since the engine pool spawned.
@@ -1226,6 +1391,45 @@ pub enum Response {
     /// `reload` success (also the watcher's no-op answer): the current
     /// epoch after the call.
     Reloaded { epoch: u64 },
+    /// `onboard` with `dry_run`: the candidate trained and passed the
+    /// validation gate — nothing was published.
+    OnboardCheck { pairs: usize, staged: usize },
+    /// `reload` with `dry_run`: the on-disk candidate validated;
+    /// `epoch` is the (unchanged) serving epoch.
+    ReloadCheck { epoch: u64 },
+    /// `hint` acknowledgement: whether the prediction entered this
+    /// backend's cache (`false` = registry-epoch mismatch, dropped).
+    HintApplied { applied: bool },
+    /// Route-tier `cluster_stats` reply (encoded only by `repro route`;
+    /// a plain backend answers `bad_request` instead).
+    ClusterStats {
+        /// Lines the router accepted from clients.
+        requests: u64,
+        /// Lines forwarded to (and answered by) a backend.
+        forwarded: u64,
+        /// Forwards that failed over to a lower-ranked ring owner.
+        retries: u64,
+        /// Health transitions healthy → ejected.
+        ejections: u64,
+        /// Health transitions ejected → healthy.
+        rejoins: u64,
+        /// Requests dropped because no healthy backend remained.
+        no_backend: u64,
+        /// Cache hints buffered for currently-ejected shard owners.
+        hints_pending: u64,
+        /// Cache hints replayed into rejoining shard owners.
+        hints_replayed: u64,
+        healthy_backends: usize,
+        backends: Vec<ClusterBackend>,
+    },
+    /// Structured route-tier failure with a per-node report (a fleet
+    /// publish where a node's validation gate rejected the candidate, or
+    /// where the published epochs diverged).
+    ClusterErr {
+        kind: &'static str,
+        msg: String,
+        nodes: Vec<NodeReport>,
+    },
     /// Generic error (engine/model failures).
     Err(String),
     /// Structured error with a stable machine-readable kind tag.
@@ -1237,6 +1441,19 @@ impl Response {
         Response::ErrKind {
             kind,
             msg: msg.into(),
+        }
+    }
+
+    /// Route-tier error with a per-node report (see [`NodeReport`]).
+    pub fn cluster_err(
+        kind: &'static str,
+        msg: impl Into<String>,
+        nodes: Vec<NodeReport>,
+    ) -> Response {
+        Response::ClusterErr {
+            kind,
+            msg: msg.into(),
+            nodes,
         }
     }
 
@@ -1275,6 +1492,7 @@ impl Response {
                 idle_conns,
                 lane_restarts,
                 evictions,
+                hints_applied,
                 reactor_threads,
                 uptime_s,
                 version,
@@ -1286,6 +1504,7 @@ impl Response {
                 w.key("cache_hits").num(*cache_hits as f64);
                 w.key("cache_misses").num(*cache_misses as f64);
                 w.key("evictions").num(*evictions as f64);
+                w.key("hints_applied").num(*hints_applied as f64);
                 w.key("idle_conns").num(*idle_conns as f64);
                 w.key("lane_restarts").num(*lane_restarts as f64);
                 w.key("last_reload").num(*last_reload as f64);
@@ -1447,6 +1666,80 @@ impl Response {
                 w.key("ok").bool_(true);
                 w.end_obj();
             }
+            Response::OnboardCheck { pairs, staged } => {
+                w.begin_obj();
+                w.key("dry_run").bool_(true);
+                w.key("ok").bool_(true);
+                w.key("pairs").num(*pairs as f64);
+                w.key("staged").num(*staged as f64);
+                w.end_obj();
+            }
+            Response::ReloadCheck { epoch } => {
+                w.begin_obj();
+                w.key("dry_run").bool_(true);
+                w.key("epoch").num(*epoch as f64);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::HintApplied { applied } => {
+                w.begin_obj();
+                w.key("applied").bool_(*applied);
+                w.key("ok").bool_(true);
+                w.end_obj();
+            }
+            Response::ClusterStats {
+                requests,
+                forwarded,
+                retries,
+                ejections,
+                rejoins,
+                no_backend,
+                hints_pending,
+                hints_replayed,
+                healthy_backends,
+                backends,
+            } => {
+                w.begin_obj();
+                w.key("backends").begin_arr();
+                for b in backends {
+                    w.begin_obj();
+                    w.key("addr").str_(&b.addr);
+                    w.key("healthy").bool_(b.healthy);
+                    w.key("requests").num(b.requests as f64);
+                    w.end_obj();
+                }
+                w.end_arr();
+                w.key("ejections").num(*ejections as f64);
+                w.key("forwarded").num(*forwarded as f64);
+                w.key("healthy_backends").num(*healthy_backends as f64);
+                w.key("hints_pending").num(*hints_pending as f64);
+                w.key("hints_replayed").num(*hints_replayed as f64);
+                w.key("no_backend").num(*no_backend as f64);
+                w.key("ok").bool_(true);
+                w.key("rejoins").num(*rejoins as f64);
+                w.key("requests").num(*requests as f64);
+                w.key("retries").num(*retries as f64);
+                w.end_obj();
+            }
+            Response::ClusterErr { kind, msg, nodes } => {
+                w.begin_obj();
+                w.key("error").str_(msg);
+                w.key("kind").str_(kind);
+                w.key("nodes").begin_arr();
+                for n in nodes {
+                    w.begin_obj();
+                    w.key("addr").str_(&n.addr);
+                    if let Some(e) = n.epoch {
+                        w.key("epoch").num(e as f64);
+                    }
+                    w.key("error").str_(&n.error);
+                    w.key("ok").bool_(n.ok);
+                    w.end_obj();
+                }
+                w.end_arr();
+                w.key("ok").bool_(false);
+                w.end_obj();
+            }
             Response::Err(msg) => {
                 w.begin_obj();
                 w.key("error").str_(msg);
@@ -1597,13 +1890,38 @@ mod tests {
                 objective,
             });
         }
-        // registry ops: ingest, onboard (targeted and catch-all), reload
+        // registry ops: ingest, onboard (targeted, catch-all, dry-run),
+        // reload (live and dry-run)
         roundtrip(&Request::Ingest(sample_ingest()));
         roundtrip(&Request::Onboard {
             pair: Some((Instance::G4dn, Instance::G5)),
+            dry_run: false,
         });
-        roundtrip(&Request::Onboard { pair: None });
-        roundtrip(&Request::Reload);
+        roundtrip(&Request::Onboard {
+            pair: None,
+            dry_run: false,
+        });
+        roundtrip(&Request::Onboard {
+            pair: Some((Instance::G4dn, Instance::G5)),
+            dry_run: true,
+        });
+        roundtrip(&Request::Reload { dry_run: false });
+        roundtrip(&Request::Reload { dry_run: true });
+        // cluster ops: peer cache hint, route-tier stats
+        roundtrip(&Request::Hint(sample_hint()));
+        roundtrip(&Request::ClusterStats);
+    }
+
+    fn sample_hint() -> HintRequest {
+        HintRequest {
+            epoch: 3,
+            anchor: Instance::G4dn,
+            target: Instance::P3,
+            anchor_latency_ms: 42.625,
+            latency_ms: 87.5,
+            member: Member::Forest,
+            profile: profile(&[("Conv2D", 286.0), ("Relu", 26.5)]),
+        }
     }
 
     fn sample_ingest() -> IngestRequest {
@@ -1682,10 +2000,21 @@ mod tests {
             r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":0,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10,"target_latency_ms":5}"#,
             r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1},"anchor_latency_ms":10}"#,
             r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":1e400},"anchor_latency_ms":10,"target_latency_ms":5}"#,
-            // onboard: lone anchor, identity pair, unknown instance
+            // onboard: lone anchor, identity pair, unknown instance,
+            // non-boolean dry_run (reload too)
             r#"{"op":"onboard","anchor":"g4dn"}"#,
             r#"{"op":"onboard","anchor":"g4dn","target":"g4dn"}"#,
             r#"{"op":"onboard","anchor":"g4dn","target":"warp9"}"#,
+            r#"{"op":"onboard","dry_run":"yes"}"#,
+            r#"{"op":"reload","dry_run":1}"#,
+            // hint: identity pair, unknown member, missing epoch,
+            // fractional epoch, non-positive latency, missing profile
+            r#"{"op":"hint","anchor":"g4dn","target":"g4dn","member":"Linear","epoch":1,"anchor_latency_ms":10,"latency_ms":5,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"Oracle","epoch":1,"anchor_latency_ms":10,"latency_ms":5,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"Linear","anchor_latency_ms":10,"latency_ms":5,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"Linear","epoch":1.5,"anchor_latency_ms":10,"latency_ms":5,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"Linear","epoch":1,"anchor_latency_ms":10,"latency_ms":-5,"profile":{"Conv2D":1}}"#,
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"Linear","epoch":1,"anchor_latency_ms":10,"latency_ms":5}"#,
         ] {
             let err = Request::parse(line).unwrap_err();
             assert!(
@@ -1799,6 +2128,7 @@ mod tests {
                     idle_conns: 16,
                     lane_restarts: 1,
                     evictions: 7,
+                    hints_applied: 6,
                     reactor_threads: 2,
                     uptime_s: 12.5,
                     version: env!("CARGO_PKG_VERSION"),
@@ -1820,6 +2150,7 @@ mod tests {
                     o.set("idle_conns", Json::Num(16.0));
                     o.set("lane_restarts", Json::Num(1.0));
                     o.set("evictions", Json::Num(7.0));
+                    o.set("hints_applied", Json::Num(6.0));
                     o.set("reactor_threads", Json::Num(2.0));
                     o.set("uptime_s", Json::Num(12.5));
                     o.set("version", Json::Str(env!("CARGO_PKG_VERSION").into()));
@@ -1954,6 +2285,138 @@ mod tests {
                 o.set("epoch", Json::Num(4.0));
                 o
             }),
+            (
+                Response::OnboardCheck {
+                    pairs: 2,
+                    staged: 48,
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("dry_run", Json::Bool(true));
+                    o.set("pairs", Json::Num(2.0));
+                    o.set("staged", Json::Num(48.0));
+                    o
+                },
+            ),
+            (Response::ReloadCheck { epoch: 4 }, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("dry_run", Json::Bool(true));
+                o.set("epoch", Json::Num(4.0));
+                o
+            }),
+            (Response::HintApplied { applied: false }, {
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("applied", Json::Bool(false));
+                o
+            }),
+            (
+                Response::ClusterStats {
+                    requests: 100,
+                    forwarded: 97,
+                    retries: 3,
+                    ejections: 1,
+                    rejoins: 1,
+                    no_backend: 2,
+                    hints_pending: 4,
+                    hints_replayed: 9,
+                    healthy_backends: 2,
+                    backends: vec![
+                        ClusterBackend {
+                            addr: "127.0.0.1:7070".into(),
+                            healthy: true,
+                            requests: 60,
+                        },
+                        ClusterBackend {
+                            addr: "127.0.0.1:7071".into(),
+                            healthy: false,
+                            requests: 37,
+                        },
+                    ],
+                },
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(true));
+                    o.set("requests", Json::Num(100.0));
+                    o.set("forwarded", Json::Num(97.0));
+                    o.set("retries", Json::Num(3.0));
+                    o.set("ejections", Json::Num(1.0));
+                    o.set("rejoins", Json::Num(1.0));
+                    o.set("no_backend", Json::Num(2.0));
+                    o.set("hints_pending", Json::Num(4.0));
+                    o.set("hints_replayed", Json::Num(9.0));
+                    o.set("healthy_backends", Json::Num(2.0));
+                    o.set(
+                        "backends",
+                        Json::Arr(vec![
+                            {
+                                let mut b = Json::obj();
+                                b.set("addr", Json::Str("127.0.0.1:7070".into()));
+                                b.set("healthy", Json::Bool(true));
+                                b.set("requests", Json::Num(60.0));
+                                b
+                            },
+                            {
+                                let mut b = Json::obj();
+                                b.set("addr", Json::Str("127.0.0.1:7071".into()));
+                                b.set("healthy", Json::Bool(false));
+                                b.set("requests", Json::Num(37.0));
+                                b
+                            },
+                        ]),
+                    );
+                    o
+                },
+            ),
+            (
+                Response::cluster_err(
+                    "epoch_divergence",
+                    "fleet publish diverged",
+                    vec![
+                        NodeReport {
+                            addr: "127.0.0.1:7070".into(),
+                            epoch: Some(3),
+                            ok: true,
+                            error: String::new(),
+                        },
+                        NodeReport {
+                            addr: "127.0.0.1:7071".into(),
+                            epoch: None,
+                            ok: false,
+                            error: "connection refused".into(),
+                        },
+                    ],
+                ),
+                {
+                    let mut o = Json::obj();
+                    o.set("ok", Json::Bool(false));
+                    o.set("kind", Json::Str("epoch_divergence".into()));
+                    o.set("error", Json::Str("fleet publish diverged".into()));
+                    o.set(
+                        "nodes",
+                        Json::Arr(vec![
+                            {
+                                let mut n = Json::obj();
+                                n.set("addr", Json::Str("127.0.0.1:7070".into()));
+                                n.set("epoch", Json::Num(3.0));
+                                n.set("error", Json::Str(String::new()));
+                                n.set("ok", Json::Bool(true));
+                                n
+                            },
+                            {
+                                let mut n = Json::obj();
+                                n.set("addr", Json::Str("127.0.0.1:7071".into()));
+                                n.set("error", Json::Str("connection refused".into()));
+                                n.set("ok", Json::Bool(false));
+                                n
+                            },
+                        ]),
+                    );
+                    o
+                },
+            ),
             (Response::Instances, {
                 let mut o = Json::obj();
                 o.set("ok", Json::Bool(true));
@@ -2075,8 +2538,12 @@ mod tests {
             r#"{"op":"predict_batch_size","instance":"p3","batch":64,"t_min":100.0,"t_max":900.5}"#.into(),
             r#"{"op":"predict_pixel_size","instance":"ac1","pixels":128,"t_min":10.25,"t_max":90.75}"#.into(),
             r#"{"op":"reload"}"#.into(),
+            r#"{"op":"reload","dry_run":true}"#.into(),
             r#"{"op":"onboard"}"#.into(),
             r#"{"op":"onboard","anchor":"g4dn","target":"g5"}"#.into(),
+            r#"{"op":"onboard","anchor":"g4dn","target":"g5","dry_run":true}"#.into(),
+            r#"{"op":"cluster_stats"}"#.into(),
+            r#"{"op":"hint","anchor":"g4dn","target":"p3","member":"RandomForest","epoch":2,"anchor_latency_ms":42.5,"latency_ms":87.25,"profile":{"Conv2D":286,"Relu":26}}"#.into(),
             r#"{"op":"ingest","anchor":"g4dn","target":"g5","model":"VGG16","batch":32,"pixels":64,"profile":{"Conv2D":80.5,"Relu":8.25},"anchor_latency_ms":120.5,"target_latency_ms":60.25}"#.into(),
         ];
         // roundtrip corpus: every variant's canonical serialization

@@ -696,6 +696,59 @@ impl ModelRegistry {
         pair: Option<(Instance, Instance)>,
         opts: &OnboardOptions,
     ) -> Result<OnboardReport, RegistryError> {
+        let (candidate, pairs, staged_n) = self.train_staged_candidate(rt, pair, opts)?;
+        candidate
+            .save(&self.model_dir)
+            .with_context(|| format!("persisting {}", self.model_dir.display()))
+            .map_err(RegistryError::Other)?;
+        let epoch = self.swap(candidate);
+        for &(a, t) in &pairs {
+            // post-publish cleanup: a failure here leaves harmless
+            // already-consumed files behind, never a half-published epoch
+            let _ = self.staging.clear(a, t);
+        }
+        Ok(OnboardReport {
+            epoch,
+            pairs,
+            staged: staged_n,
+        })
+    }
+
+    /// Dry-run `onboard` (the `dry_run` wire flag): the full
+    /// train-and-validate pipeline, but nothing persisted, published, or
+    /// cleared — staging stays intact for the real run. Returns
+    /// `(pairs, staged)` counts mirroring [`OnboardReport`]. The route
+    /// tier uses this as every node's phase-1 vote before a fleet-wide
+    /// publish.
+    pub fn check_onboard(
+        &self,
+        rt: &Runtime,
+        pair: Option<(Instance, Instance)>,
+        opts: &OnboardOptions,
+    ) -> Result<(usize, usize), RegistryError> {
+        let (_, pairs, staged_n) = self.train_staged_candidate(rt, pair, opts)?;
+        Ok((pairs.len(), staged_n))
+    }
+
+    /// Dry-run `reload`: load and validate the on-disk candidate without
+    /// swapping it in. The serving epoch is untouched either way.
+    pub fn check_reload(&self, rt: &Runtime) -> Result<(), RegistryError> {
+        let candidate = Profet::load(&self.model_dir)
+            .with_context(|| format!("reloading {}", self.model_dir.display()))
+            .map_err(RegistryError::Rejected)?;
+        ModelRegistry::validate(rt, &candidate).map_err(RegistryError::Rejected)?;
+        Ok(())
+    }
+
+    /// Shared `onboard`/`check_onboard` front half: resolve staged
+    /// pairs, gate their counts, train the merged candidate, and run the
+    /// validation probe — no side effects on disk or the serving epoch.
+    fn train_staged_candidate(
+        &self,
+        rt: &Runtime,
+        pair: Option<(Instance, Instance)>,
+        opts: &OnboardOptions,
+    ) -> Result<(Profet, Vec<(Instance, Instance)>, usize), RegistryError> {
         let pairs = self.staged_pairs_for(pair)?;
         for &(a, t) in &pairs {
             let n = self.staging.count(a, t);
@@ -729,21 +782,7 @@ impl ModelRegistry {
         // would also put the --model-dir-watch poller into a rejected-
         // reload loop)
         ModelRegistry::validate(rt, &candidate).map_err(RegistryError::Rejected)?;
-        candidate
-            .save(&self.model_dir)
-            .with_context(|| format!("persisting {}", self.model_dir.display()))
-            .map_err(RegistryError::Other)?;
-        let epoch = self.swap(candidate);
-        for &(a, t) in &pairs {
-            // post-publish cleanup: a failure here leaves harmless
-            // already-consumed files behind, never a half-published epoch
-            let _ = self.staging.clear(a, t);
-        }
-        Ok(OnboardReport {
-            epoch,
-            pairs,
-            staged: staged_n,
-        })
+        Ok((candidate, pairs, staged_n))
     }
 
     /// Resolve which staged pairs an `onboard` should train: everything

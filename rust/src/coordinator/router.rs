@@ -28,7 +28,7 @@
 //! however long the request waits in a lane queue, it is answered by the
 //! model epoch that admitted it.
 
-use crate::advisor::CacheKeyScratch;
+use crate::advisor::{CacheKey, CacheKeyScratch};
 use crate::coordinator::dispatch::{EnginePool, Job, Reply, SubmitError};
 use crate::coordinator::protocol::{parse_line, ParsedLine, Request, Response, WireScratch};
 use crate::coordinator::registry::ModelSnapshot;
@@ -248,7 +248,8 @@ fn op_class_of(req: &Request) -> OpClass {
         Request::Plan { .. } => OpClass::Plan,
         Request::Ingest(_) => OpClass::Ingest,
         Request::Onboard { .. } => OpClass::Onboard,
-        Request::Reload => OpClass::Reload,
+        Request::Reload { .. } => OpClass::Reload,
+        Request::Hint(_) | Request::ClusterStats => OpClass::Other,
     }
 }
 
@@ -296,6 +297,7 @@ fn route_request(
                 idle_conns: open_conns - active_conns,
                 lane_restarts: s.lane_restarts.load(Ordering::Relaxed), // ordering: stats-only gauge
                 evictions: s.conns.evicted.load(Ordering::Relaxed), // ordering: stats-only gauge
+                hints_applied: s.hints_applied.load(Ordering::Relaxed), // ordering: stats-only gauge
                 reactor_threads: s.conns.reactor_threads.load(Ordering::Relaxed), // ordering: stats-only gauge
                 uptime_s: pool.obs().uptime_s(),
                 version: env!("CARGO_PKG_VERSION"),
@@ -315,6 +317,7 @@ fn route_request(
                 ("cache_hits", s.cache.hits.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("cache_misses", s.cache.misses.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("evictions", s.conns.evicted.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
+                ("hints_applied", s.hints_applied.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("idle_conns", (open - active) as f64),
                 ("lane_restarts", s.lane_restarts.load(Ordering::Relaxed) as f64), // ordering: stats-only gauge
                 ("open_conns", open as f64),
@@ -396,15 +399,38 @@ fn route_request(
             req,
             reply: r,
         }),
-        Request::Onboard { pair } => {
+        Request::Onboard { pair, dry_run } => {
             submit(pool, OpClass::Onboard, parse_ns, reply, |r| Job::Onboard {
                 pair,
+                dry_run,
                 reply: r,
             })
         }
-        Request::Reload => submit(pool, OpClass::Reload, parse_ns, reply, |r| Job::Reload {
-            only_if_changed: false,
-            reply: r,
+        Request::Reload { dry_run } => submit(pool, OpClass::Reload, parse_ns, reply, |r| {
+            Job::Reload {
+                only_if_changed: false,
+                dry_run,
+                reply: r,
+            }
         }),
+        Request::Hint(h) => {
+            // peer cache hint from the route tier: only useful if it was
+            // computed under the epoch this node is serving — a stale
+            // epoch means the models (and thus the value) changed, so
+            // the hint is acknowledged but dropped
+            let applied = h.epoch == pool.registry().epoch();
+            if applied {
+                let key = CacheKey::of(h.epoch, h.anchor, h.target, h.anchor_latency_ms, &h.profile);
+                pool.cache().insert(key, (h.latency_ms, h.member));
+                // ordering: stats-only counter read by the stats/metrics
+                // snapshots; it orders nothing.
+                pool.stats.hints_applied.fetch_add(1, Ordering::Relaxed);
+            }
+            Handled::Inline(Response::HintApplied { applied })
+        }
+        Request::ClusterStats => Handled::Inline(Response::err_kind(
+            "bad_request",
+            "cluster_stats is answered by the route tier — ask a `repro route` process",
+        )),
     }
 }

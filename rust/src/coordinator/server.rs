@@ -315,6 +315,7 @@ fn model_dir_watch_loop(pool: &EnginePool, interval: Duration, stop: std::sync::
             if pool
                 .submit(Job::Reload {
                     only_if_changed: true,
+                    dry_run: false,
                     reply: Reply::channel(tx),
                 })
                 .is_err()
@@ -628,6 +629,7 @@ mod tests {
                     Job::Reload {
                         only_if_changed,
                         reply,
+                        ..
                     } => {
                         assert!(only_if_changed, "watcher reloads must be conditional");
                         r2.fetch_add(1, Ordering::SeqCst);

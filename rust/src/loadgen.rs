@@ -58,6 +58,23 @@
 //! answered (its connection died first) — the graceful-drain contract
 //! says this must be zero, and `--strict` turns any violation into a
 //! nonzero exit for CI.
+//!
+//! **Multi-endpoint mode** (`--targets a,b,c`): when driving a
+//! `repro route` tier, pass the backend addresses and the report gains
+//! a `cluster` section with each backend's `stats` request delta:
+//!
+//! ```json
+//! {
+//!   "cluster": {"backends": [{"addr": "a", "requests": 1700,
+//!                             "throughput_rps": 170.0, "share": 0.34}],
+//!              "shard_skew": 1.02}
+//! }
+//! ```
+//!
+//! `share` is the backend's fraction of the fleet's request delta and
+//! `shard_skew` is the hottest backend's share times the backend count
+//! (1.0 = perfectly even, N = everything on one backend). A backend
+//! that answers no `stats` probe contributes 0 — visible as share 0.
 
 use crate::obs::HistSnapshot;
 use crate::util::{quantile, Json};
@@ -107,6 +124,12 @@ pub struct LoadgenOptions {
     /// racing a server still binding its listener spreads its
     /// reconnects. `0` is treated as 1 (a single attempt, no retry).
     pub connect_retries: usize,
+    /// Multi-endpoint mode (`--targets a,b,c`): backend addresses probed
+    /// with `stats` before/after the run. Load still goes to `addr` (the
+    /// route tier); the per-backend request deltas become the report's
+    /// `cluster` section (per-backend throughput + shard skew). Empty =
+    /// single-endpoint mode, no `cluster` section.
+    pub targets: Vec<String>,
 }
 
 impl Default for LoadgenOptions {
@@ -120,6 +143,7 @@ impl Default for LoadgenOptions {
             anchor: "g4dn".into(),
             target: "p3".into(),
             connect_retries: 5,
+            targets: Vec::new(),
         }
     }
 }
@@ -171,6 +195,18 @@ pub struct LoadgenReport {
     /// Server-side delta over the run (`stats` + `metrics` snapshots
     /// before/after); `None` when the target could not answer them.
     pub server: Option<ServerSnapshot>,
+    /// Per-backend request deltas in `--targets` multi-endpoint mode
+    /// (empty outside it). A backend that answered no `stats` probe
+    /// contributes 0.
+    pub cluster: Vec<ClusterSample>,
+}
+
+/// One backend's contribution to a `--targets` run: its `stats`
+/// `requests` delta between the pre- and post-run probes.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSample {
+    pub addr: String,
+    pub requests: u64,
 }
 
 /// Server-side counters and stage histograms from one `stats` +
@@ -372,6 +408,8 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     // server-side baseline, captured before the first arrival so the
     // post-run delta isolates exactly this run's contribution
     let server_before = ServerSnapshot::fetch(&opts.addr);
+    let targets_before: Vec<Option<ServerSnapshot>> =
+        opts.targets.iter().map(|t| ServerSnapshot::fetch(t)).collect();
 
     // schedule origin slightly in the future so every fleet thread is
     // up before the first arrival is due
@@ -408,8 +446,21 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         (Some(before), Some(after)) => Some(after.delta_from(&before)),
         _ => None,
     };
+    let cluster: Vec<ClusterSample> = opts
+        .targets
+        .iter()
+        .zip(targets_before)
+        .map(|(t, before)| ClusterSample {
+            addr: t.clone(),
+            requests: match (before, ServerSnapshot::fetch(t)) {
+                (Some(b), Some(a)) => a.delta_from(&b).requests,
+                _ => 0,
+            },
+        })
+        .collect();
     let mut report = aggregate(opts, total as u64, samples, dropped, unsent);
     report.server = server;
+    report.cluster = cluster;
     Ok(report)
 }
 
@@ -625,6 +676,7 @@ fn aggregate(
         latency: summarize(&latencies),
         per_op,
         server: None,
+        cluster: Vec::new(),
     }
 }
 
@@ -703,6 +755,38 @@ impl LoadgenReport {
             s.set("execute_ms", hist(&sv.execute));
             root.set("server", s);
         }
+        if !self.cluster.is_empty() {
+            let total: u64 = self.cluster.iter().map(|b| b.requests).sum();
+            let n = self.cluster.len() as f64;
+            let mut backends = Vec::with_capacity(self.cluster.len());
+            let mut max_share = 0.0f64;
+            for b in &self.cluster {
+                let share = if total > 0 {
+                    b.requests as f64 / total as f64
+                } else {
+                    0.0
+                };
+                max_share = max_share.max(share);
+                let mut o = Json::obj();
+                o.set("addr", Json::Str(b.addr.clone()));
+                o.set("requests", Json::Num(b.requests as f64));
+                o.set(
+                    "throughput_rps",
+                    Json::Num(if self.elapsed_s > 0.0 {
+                        b.requests as f64 / self.elapsed_s
+                    } else {
+                        0.0
+                    }),
+                );
+                o.set("share", Json::Num(share));
+                backends.push(o);
+            }
+            let mut c = Json::obj();
+            c.set("backends", Json::Arr(backends));
+            // 1.0 = perfectly even; n = everything landed on one backend
+            c.set("shard_skew", Json::Num(max_share * n));
+            root.set("cluster", c);
+        }
         root
     }
 
@@ -728,6 +812,37 @@ mod tests {
     use crate::coordinator::dispatch::{EnginePool, Job};
     use crate::coordinator::server::serve_pool;
     use std::sync::mpsc::Receiver as JobReceiver;
+
+    #[test]
+    fn cluster_section_reports_share_and_skew() {
+        let opts = LoadgenOptions {
+            targets: vec!["a:1".into(), "b:2".into(), "c:3".into()],
+            ..LoadgenOptions::default()
+        };
+        let mut report = aggregate(&opts, 0, Vec::new(), 0, 0);
+        report.elapsed_s = 2.0;
+        report.cluster = vec![
+            ClusterSample { addr: "a:1".into(), requests: 60 },
+            ClusterSample { addr: "b:2".into(), requests: 30 },
+            ClusterSample { addr: "c:3".into(), requests: 10 },
+        ];
+        let j = report.to_json();
+        let c = j.get("cluster").expect("cluster section");
+        let backends = c.get("backends").and_then(Json::as_arr).unwrap();
+        assert_eq!(backends.len(), 3);
+        assert_eq!(backends[0].get("addr").and_then(Json::as_str), Some("a:1"));
+        assert!((backends[0].get("share").and_then(Json::as_f64).unwrap() - 0.6).abs() < 1e-9);
+        assert!(
+            (backends[0].get("throughput_rps").and_then(Json::as_f64).unwrap() - 30.0).abs()
+                < 1e-9
+        );
+        // hottest backend holds 60% of 3 backends' traffic: skew 1.8
+        assert!((c.get("shard_skew").and_then(Json::as_f64).unwrap() - 1.8).abs() < 1e-9);
+
+        // single-endpoint mode (no --targets): no cluster section at all
+        let solo = aggregate(&LoadgenOptions::default(), 0, Vec::new(), 0, 0);
+        assert!(solo.to_json().get("cluster").is_none());
+    }
 
     #[test]
     fn mix_is_deterministic_and_proportional() {

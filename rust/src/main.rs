@@ -7,6 +7,7 @@
 //!   simulate  run the GPU simulator for one workload
 //!   eval      regenerate the paper's tables/figures (DESIGN.md index)
 //!   serve     start the TCP/JSON prediction service
+//!   route     start the sharding route tier over N serve backends
 //!   loadgen   open-loop load generator against a live server (BENCH_serve.json)
 //!   lint      in-repo invariant linter (docs/ANALYSIS.md rule catalogue)
 
@@ -68,7 +69,7 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loadgen> [--flags]
+const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|route|loadgen> [--flags]
   repro dataset  [--out data/corpus.json] [--instances core|all]
   repro train    [--corpus data/corpus.json] [--out models] [--fast true]
   repro predict  --model VGG16 --batch 32 --pixels 128 \\
@@ -81,9 +82,13 @@ const USAGE: &str = "usage: repro <dataset|train|predict|simulate|eval|serve|loa
                  [--model-dir-watch SECS] [--trace-slow-ms MS]
                  [--trace-sample N] [--default-deadline-ms MS]
                  [--failpoints 'name=action;...']
-  repro loadgen  [--addr 127.0.0.1:7878] [--rate 200] [--duration 10]
-                 [--conns 16] [--predict-pct 90] [--anchor g4dn] [--target p3]
-                 [--connect-retries 5] [--out BENCH_serve.json] [--strict]
+  repro route    --backends a:7878,b:7878 [--addr 127.0.0.1:7979]
+                 [--probe-interval-ms 500] [--fail-threshold 2]
+                 [--call-timeout-ms 5000] [--failpoints 'name=action;...']
+  repro loadgen  [--addr 127.0.0.1:7878] [--targets a,b,c] [--rate 200]
+                 [--duration 10] [--conns 16] [--predict-pct 90]
+                 [--anchor g4dn] [--target p3] [--connect-retries 5]
+                 [--out BENCH_serve.json] [--strict]
   repro lint     [--root PATH] [--json] [--audit]";
 
 fn run() -> Result<()> {
@@ -100,6 +105,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "loadgen" => cmd_loadgen(&args),
         "lint" => cmd_lint(&args),
         other => {
@@ -356,6 +362,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_route(args: &Args) -> Result<()> {
+    // same chaos surface as `serve` — the route tier has its own
+    // failpoints (cluster.peer.send[.<addr>], docs/RESILIENCE.md)
+    repro::util::failpoint::init_from_env().map_err(|e| anyhow!("REPRO_FAILPOINTS: {e}"))?;
+    if let Some(spec) = args.get("failpoints") {
+        repro::util::failpoint::configure_from_str(spec)
+            .map_err(|e| anyhow!("--failpoints: {e}"))?;
+    }
+    let backends: Vec<String> = args
+        .get("backends")
+        .ok_or_else(|| anyhow!("repro route needs --backends a:port,b:port"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!backends.is_empty(), "--backends must list at least one address");
+    let probe_ms = args.usize_or("probe-interval-ms", 500)? as u64;
+    anyhow::ensure!(probe_ms >= 1, "--probe-interval-ms must be at least 1");
+    let call_timeout_ms = args.usize_or("call-timeout-ms", 5000)? as u64;
+    anyhow::ensure!(call_timeout_ms >= 1, "--call-timeout-ms must be at least 1");
+    let opts = repro::coordinator::RouteOptions {
+        addr: args.get_or("addr", "127.0.0.1:7979"),
+        backends,
+        probe_interval: std::time::Duration::from_millis(probe_ms),
+        fail_threshold: args.usize_or("fail-threshold", 2)? as u32,
+        call_timeout: std::time::Duration::from_millis(call_timeout_ms),
+    };
+    let n = opts.backends.len();
+    let handle = repro::coordinator::serve_cluster(opts)?;
+    println!(
+        "PROFET route tier listening on {} ({n} backends, rendezvous-sharded by (anchor, target))",
+        handle.addr()
+    );
+    println!(r#"protocol: same newline-delimited JSON as serve, plus {{"op":"cluster_stats"}}"#);
+    println!("(full op reference in docs/PROTOCOL.md)");
+    // park forever (the handle's accept/prober threads do the work)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_lint(args: &Args) -> Result<()> {
     // --root overrides; otherwise walk up from cwd to the directory
     // holding both rust/src and docs (works from the repo root or from
@@ -414,11 +461,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         anchor: args.get_or("anchor", "g4dn"),
         target: args.get_or("target", "p3"),
         connect_retries: args.usize_or("connect-retries", 5)?,
+        targets: args
+            .get("targets")
+            .map(|t| {
+                t.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default(),
     };
     eprintln!(
         "loadgen: open-loop {} rps for {:.1}s over {} conns ({}% predict) -> {}",
         opts.rate, duration_s, opts.conns, opts.predict_pct, opts.addr
     );
+    if !opts.targets.is_empty() {
+        eprintln!(
+            "loadgen: cluster mode — probing {} backend(s) for per-shard deltas",
+            opts.targets.len()
+        );
+    }
     let report = repro::loadgen::run(&opts)?;
     let out = args.get_or("out", "BENCH_serve.json");
     let mut text = report.to_json().to_string();

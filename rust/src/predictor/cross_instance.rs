@@ -27,6 +27,17 @@ impl Member {
             Member::Dnn => "DNN",
         }
     }
+
+    /// Inverse of [`Member::name`] (the wire `hint` op carries a member
+    /// by name).
+    pub fn from_name(name: &str) -> Option<Member> {
+        match name {
+            "Linear" => Some(Member::Linear),
+            "RandomForest" => Some(Member::Forest),
+            "DNN" => Some(Member::Dnn),
+            _ => None,
+        }
+    }
 }
 
 /// The per-(anchor, target) ensemble.

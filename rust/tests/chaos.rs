@@ -14,7 +14,10 @@
 //! every test name carries the `chaos_` prefix so the general
 //! `cargo test` sweep in `ci/check.sh` can `--skip chaos_`.
 
-use repro::coordinator::{self, PoolOptions, ServeOptions};
+mod cluster_util;
+
+use repro::coordinator::cluster::Ring;
+use repro::coordinator::{self, PoolOptions, RouteOptions, ServeOptions};
 use repro::data::Corpus;
 use repro::gpu::Instance;
 use repro::predictor::{sweep_orphaned_saves, Profet, TrainOptions};
@@ -455,6 +458,94 @@ fn chaos_watcher_tick_faults_keep_the_served_epoch() {
         std::thread::sleep(Duration::from_millis(20));
     }
     assert_ok(&send(addr, &line));
+    handle.stop();
+}
+
+/// Cluster tentpole: partition one backend (per-address
+/// `cluster.peer.send.<addr>` failpoint) under open-loop predict load.
+/// The route tier must (1) lose zero replies — every request is
+/// answered, failing over to the surviving ring owner, (2) surface the
+/// ejection in `cluster_stats`, and (3) rejoin the backend once the
+/// partition heals, restoring its shard. Runtime-free: the backends are
+/// the deterministic stub harness from `tests/cluster_util/`.
+#[test]
+fn chaos_cluster_partitioned_backend_sheds_no_replies_and_rejoins() {
+    let _fp = fp_guard();
+    let stubs: Vec<cluster_util::StubBackend> =
+        (0..2).map(|_| cluster_util::StubBackend::start()).collect();
+    let backends: Vec<String> = stubs.iter().map(|s| s.addr()).collect();
+    let handle = coordinator::cluster::serve_cluster(RouteOptions {
+        addr: "127.0.0.1:0".into(),
+        backends: backends.clone(),
+        probe_interval: Duration::from_millis(25),
+        fail_threshold: 2,
+        call_timeout: Duration::from_millis(500),
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    fn cluster_stats(addr: &str) -> Json {
+        cluster_util::send(addr, r#"{"op":"cluster_stats"}"#)
+    }
+    fn wait_for(what: &str, mut done: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !done() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    // two probe rounds: the router knows every backend's epoch
+    wait_for("two probe rounds", || stubs.iter().all(|s| s.requests() >= 2));
+
+    let oracle = Ring::new(backends.clone());
+    let victim_addr = oracle.backends()[0].clone();
+    let (va, vt) = cluster_util::shard_pairs()
+        .into_iter()
+        .find(|(a, t)| oracle.owner(Ring::shard_key(a, t)) == Some(0))
+        .unwrap();
+
+    // open-loop load: a fixed schedule of 200 predicts across every
+    // shard; the writer asserts every single reply arrives and is ok
+    let writer = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            for (i, (a, t)) in cluster_util::shard_pairs().iter().cycle().take(200).enumerate() {
+                let resp = cluster_util::send(&addr, &cluster_util::predict_line(a, t));
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "request {i} lost or failed under partition: {resp:?}"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    // partition the shard owner mid-load
+    std::thread::sleep(Duration::from_millis(30));
+    let fp = format!("cluster.peer.send.{victim_addr}");
+    failpoint::configure(&fp, Action::ReturnErr);
+
+    // the prober (same failpoint) ejects it; load keeps flowing
+    wait_for("the ejection to surface", || {
+        let st = cluster_stats(&addr);
+        st.req_f64("healthy_backends").unwrap() as usize == 1
+            && st.req_f64("ejections").unwrap() >= 1.0
+    });
+
+    // heal the partition: the backend rejoins and its shard comes home
+    failpoint::clear(&fp);
+    wait_for("the rejoin", || {
+        let st = cluster_stats(&addr);
+        st.req_f64("healthy_backends").unwrap() as usize == 2
+            && st.req_f64("rejoins").unwrap() >= 1.0
+    });
+    writer.join().expect("no reply may be lost under the partition");
+    let resp = cluster_util::send(&addr, &cluster_util::predict_line(va, vt));
+    assert_eq!(resp.req_str("served_by").unwrap(), victim_addr);
+
+    let st = cluster_stats(&addr);
+    assert!(st.req_f64("retries").unwrap() >= 1.0, "{st:?}");
+    assert_eq!(st.req_f64("no_backend").unwrap() as u64, 0, "{st:?}");
     handle.stop();
 }
 

@@ -1,0 +1,276 @@
+//! Deterministic cluster harness tests for the `repro route` tier
+//! (tentpole of the multi-node serving PR): an in-process router over
+//! real multi-backend TCP listeners on ephemeral ports, with scripted
+//! membership changes — no sleeps-as-synchronization beyond bounded
+//! polls, no runtime, no model artifacts.
+//!
+//! Covered invariants:
+//! * sharded ops land on exactly the backend the [`Ring`] oracle names,
+//! * killing a backend loses zero replies (failover), is surfaced as an
+//!   ejection in `cluster_stats`, and a rejoin restores the shard and
+//!   replays the cache hints buffered during the outage,
+//! * a fleet publish (`ingest` + `onboard`/`reload`) brings every node
+//!   to the same `registry_epoch`; a rejecting node aborts the publish
+//!   with a structured per-node report and the old epoch everywhere,
+//! * every `cluster_stats` snapshot is internally consistent under
+//!   concurrent load (the one-lock torn-read guarantee).
+//!
+//! Chaos-flavored coverage (failpoint-injected peer partitions) lives
+//! in `tests/chaos.rs` (`chaos_cluster_*`, single-threaded); this
+//! binary stays failpoint-free so the default parallel sweep can run it.
+
+mod cluster_util;
+
+use cluster_util::{ingest_line, predict_line, send, shard_pairs, StubBackend};
+use repro::coordinator::cluster::Ring;
+use repro::coordinator::{serve_cluster, RouteHandle, RouteOptions};
+use repro::util::Json;
+use std::time::{Duration, Instant};
+
+/// Boot `n` stub backends and a router over them.
+fn boot(n: usize, probe_ms: u64) -> (Vec<StubBackend>, RouteHandle, String) {
+    let stubs: Vec<StubBackend> = (0..n).map(|_| StubBackend::start()).collect();
+    let handle = serve_cluster(RouteOptions {
+        addr: "127.0.0.1:0".into(),
+        backends: stubs.iter().map(|s| s.addr()).collect(),
+        probe_interval: Duration::from_millis(probe_ms),
+        fail_threshold: 2,
+        call_timeout: Duration::from_millis(500),
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    (stubs, handle, addr)
+}
+
+/// Bounded poll — the only waiting primitive these tests use.
+fn wait_until(what: &str, mut done: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !done() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Wait for the prober's *second* round: the prober is sequential, so a
+/// second probe arriving at a stub proves the first round's bookkeeping
+/// (each backend's `registry_epoch`, which hint buffering needs) is
+/// already recorded under the router lock.
+fn wait_first_probe(stubs: &[StubBackend]) {
+    wait_until("two full probe rounds", || {
+        stubs.iter().all(|s| s.requests() >= 2)
+    });
+}
+
+fn cluster_stats(addr: &str) -> Json {
+    send(addr, r#"{"op":"cluster_stats"}"#)
+}
+
+#[test]
+fn cluster_shard_routing_matches_the_ring_oracle() {
+    let (stubs, handle, addr) = boot(3, 500);
+    let oracle = Ring::new(stubs.iter().map(|s| s.addr()).collect());
+
+    for (a, t) in shard_pairs() {
+        let resp = send(&addr, &predict_line(a, t));
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        let served = resp.req_str("served_by").unwrap();
+        let expect = oracle.backends()[oracle.owner(Ring::shard_key(a, t)).unwrap()].as_str();
+        assert_eq!(served, expect, "({a},{t}) must land on its ring owner");
+        // and routing is stable: the same key lands on the same node
+        let again = send(&addr, &predict_line(a, t));
+        assert_eq!(again.req_str("served_by").unwrap(), expect);
+    }
+
+    // shard diversity: a 30-pair sweep over a 3-node ring uses every node
+    assert!(
+        stubs.iter().all(|s| s.predicts() > 0),
+        "every backend must own some shard: {:?}",
+        stubs.iter().map(|s| s.predicts()).collect::<Vec<_>>()
+    );
+
+    let st = cluster_stats(&addr);
+    assert_eq!(st.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(st.req_f64("healthy_backends").unwrap() as usize, 3);
+    assert_eq!(st.req_f64("no_backend").unwrap() as u64, 0);
+    handle.stop();
+}
+
+#[test]
+fn cluster_backend_kill_fails_over_ejects_and_rejoins_with_hint_replay() {
+    let (stubs, handle, addr) = boot(3, 25);
+    wait_first_probe(&stubs);
+    let oracle = Ring::new(stubs.iter().map(|s| s.addr()).collect());
+
+    // pick a pair owned by backend 0 (ring order == sorted stub addrs)
+    let victim_addr = oracle.backends()[0].clone();
+    let victim = stubs.iter().find(|s| s.addr() == victim_addr).unwrap();
+    let (a, t) = shard_pairs()
+        .into_iter()
+        .find(|(a, t)| oracle.owner(Ring::shard_key(a, t)) == Some(0))
+        .expect("30 pairs must hit every node of a 3-node ring");
+
+    // baseline: the owner serves its shard
+    let resp = send(&addr, &predict_line(a, t));
+    assert_eq!(resp.req_str("served_by").unwrap(), victim_addr);
+
+    victim.kill();
+
+    // zero lost replies: the very next predict fails over to a fallback
+    // owner before any probe has noticed the death
+    let resp = send(&addr, &predict_line(a, t));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_ne!(resp.req_str("served_by").unwrap(), victim_addr);
+
+    // the fallback-served predict left a cache hint for the dead owner
+    let st = cluster_stats(&addr);
+    assert!(st.req_f64("retries").unwrap() >= 1.0, "{st:?}");
+    assert!(st.req_f64("hints_pending").unwrap() >= 1.0, "{st:?}");
+
+    // the prober ejects it after fail_threshold consecutive misses
+    wait_until("the ejection to surface in cluster_stats", || {
+        let st = cluster_stats(&addr);
+        st.req_f64("healthy_backends").unwrap() as usize == 2
+            && st.req_f64("ejections").unwrap() >= 1.0
+    });
+    // while ejected, its shard keeps answering from fallback owners
+    let resp = send(&addr, &predict_line(a, t));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_ne!(resp.req_str("served_by").unwrap(), victim_addr);
+
+    victim.revive();
+    wait_until("the rejoin + hint replay", || {
+        let st = cluster_stats(&addr);
+        st.req_f64("healthy_backends").unwrap() as usize == 3
+            && st.req_f64("rejoins").unwrap() >= 1.0
+            && st.req_f64("hints_replayed").unwrap() >= 1.0
+    });
+    assert!(victim.hints() >= 1, "the rejoined owner must receive its buffered hints");
+
+    // the shard is home again
+    let resp = send(&addr, &predict_line(a, t));
+    assert_eq!(resp.req_str("served_by").unwrap(), victim_addr);
+    handle.stop();
+}
+
+#[test]
+fn cluster_publish_reaches_epoch_agreement_or_reports_per_node() {
+    let (stubs, handle, addr) = boot(3, 500);
+
+    // ingest fans out to every node's staging area
+    let resp = send(&addr, &ingest_line("g4dn", "p2"));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert!(stubs.iter().all(|s| s.ingests() == 1), "ingest must broadcast");
+
+    // a clean onboard brings the whole fleet to the same new epoch
+    let ob = send(&addr, r#"{"op":"onboard","anchor":"g4dn","target":"p2"}"#);
+    assert_eq!(ob.get("ok").and_then(Json::as_bool), Some(true), "{ob:?}");
+    assert_eq!(ob.req_f64("epoch").unwrap() as u64, 2);
+    assert!(stubs.iter().all(|s| s.epoch() == 2), "torn epoch after onboard");
+
+    // a client-requested dry_run runs only the gate: no epoch moves
+    let dry = send(&addr, r#"{"op":"onboard","anchor":"g4dn","target":"p2","dry_run":true}"#);
+    assert_eq!(dry.get("ok").and_then(Json::as_bool), Some(true), "{dry:?}");
+    assert!(stubs.iter().all(|s| s.epoch() == 2), "dry_run must not publish");
+
+    // reload publishes fleet-wide through the same two-phase path
+    let rl = send(&addr, r#"{"op":"reload"}"#);
+    assert_eq!(rl.get("ok").and_then(Json::as_bool), Some(true), "{rl:?}");
+    assert!(stubs.iter().all(|s| s.epoch() == 3), "torn epoch after reload");
+
+    // one node's validation gate rejects: the publish aborts in phase 1,
+    // the report names the rejecting node, and NO node's epoch moves
+    stubs[1].set_reject_dry_run(true);
+    let rej = send(&addr, r#"{"op":"onboard","anchor":"g4dn","target":"p2"}"#);
+    assert_eq!(rej.get("ok").and_then(Json::as_bool), Some(false), "{rej:?}");
+    assert_eq!(rej.req_str("kind").unwrap(), "validation_failed");
+    let nodes = rej.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(nodes.len(), 3, "one report per node: {rej:?}");
+    let rejected: Vec<&str> = nodes
+        .iter()
+        .filter(|n| n.get("ok").and_then(Json::as_bool) == Some(false))
+        .map(|n| n.req_str("addr").unwrap())
+        .collect();
+    let reject_addr = stubs[1].addr();
+    assert_eq!(rejected, vec![reject_addr.as_str()]);
+    assert!(stubs.iter().all(|s| s.epoch() == 3), "a rejected publish must not move any epoch");
+    stubs[1].set_reject_dry_run(false);
+
+    // worst case: the gate passes but one node's real publish fails —
+    // the divergence is REPORTED per node, never silently absorbed
+    stubs[1].set_reject_publish(true);
+    let div = send(&addr, r#"{"op":"reload"}"#);
+    assert_eq!(div.get("ok").and_then(Json::as_bool), Some(false), "{div:?}");
+    assert_eq!(div.req_str("kind").unwrap(), "epoch_divergence");
+    let nodes = div.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(
+        nodes
+            .iter()
+            .filter(|n| n.get("ok").and_then(Json::as_bool) == Some(false))
+            .count(),
+        1,
+        "{div:?}"
+    );
+    handle.stop();
+}
+
+#[test]
+fn cluster_stats_snapshots_are_never_torn_under_load() {
+    let (stubs, handle, addr) = boot(2, 50);
+    let pairs = shard_pairs();
+
+    // four client threads hammer predicts across every shard…
+    let writers: Vec<_> = (0..4)
+        .map(|w| {
+            let addr = addr.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                for (i, (a, t)) in pairs.iter().cycle().take(60).enumerate() {
+                    let resp = send(&addr, &predict_line(a, t));
+                    assert_eq!(
+                        resp.get("ok").and_then(Json::as_bool),
+                        Some(true),
+                        "writer {w} request {i}: {resp:?}"
+                    );
+                }
+            })
+        })
+        .collect();
+
+    // …while every concurrent snapshot must satisfy the derived
+    // invariants: they are computed under ONE lock acquisition, so no
+    // interleaving may ever expose a torn view
+    for _ in 0..200 {
+        let st = cluster_stats(&addr);
+        let backends = st.get("backends").and_then(Json::as_arr).unwrap();
+        let sum: u64 = backends
+            .iter()
+            .map(|b| b.req_f64("requests").unwrap() as u64)
+            .sum();
+        let forwarded = st.req_f64("forwarded").unwrap() as u64;
+        assert_eq!(forwarded, sum, "torn snapshot: forwarded != Σ backend requests: {st:?}");
+        let healthy = backends
+            .iter()
+            .filter(|b| b.get("healthy").and_then(Json::as_bool) == Some(true))
+            .count();
+        assert_eq!(st.req_f64("healthy_backends").unwrap() as usize, healthy, "{st:?}");
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+
+    let st = cluster_stats(&addr);
+    assert!(st.req_f64("forwarded").unwrap() as u64 >= 240, "{st:?}");
+    assert_eq!(st.req_f64("no_backend").unwrap() as u64, 0, "{st:?}");
+    assert!(stubs.iter().all(|s| s.predicts() > 0));
+    handle.stop();
+}
+
+#[test]
+fn cluster_router_rejects_an_empty_backend_list() {
+    assert!(serve_cluster(RouteOptions {
+        addr: "127.0.0.1:0".into(),
+        backends: Vec::new(),
+        ..RouteOptions::default()
+    })
+    .is_err());
+}

@@ -1,0 +1,292 @@
+//! Deterministic cluster test harness: stub `repro serve` backends.
+//!
+//! A [`StubBackend`] is a real `TcpListener` on an ephemeral port
+//! speaking just enough of the line protocol (`docs/PROTOCOL.md`) for
+//! the route tier to treat it as a healthy `repro serve` node: `stats`
+//! answers with `ok` + `registry_epoch` (what the health prober
+//! requires), `predict` answers with `latency_ms`/`member` plus a
+//! `served_by` marker so tests can assert *which* backend the router
+//! picked, and `ingest`/`onboard`/`reload` implement the epoch
+//! machinery (including the `dry_run` validation gate) over plain
+//! atomics — no runtime, no model artifacts, no nondeterminism.
+//!
+//! `kill()` simulates a dead node without releasing the port (no
+//! TIME_WAIT rebind races): the listener keeps accepting but every
+//! connection — pooled ones included — is dropped without a reply,
+//! which is exactly what a router's peer client observes when a node
+//! dies behind a live address.
+
+#![allow(dead_code)]
+
+use repro::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared mutable state of one stub node.
+///
+/// All counters are independent test observables (never read together
+/// as an invariant), so plain relaxed atomics are fine here.
+struct Inner {
+    addr: String,
+    epoch: AtomicU64,
+    staged: AtomicU64,
+    requests: AtomicU64,
+    predicts: AtomicU64,
+    hints: AtomicU64,
+    ingests: AtomicU64,
+    /// Dead-node simulation: accept, then drop without answering.
+    down: AtomicBool,
+    /// Make the `dry_run` validation gate (phase 1 of a fleet publish)
+    /// reject with `validation_failed`.
+    reject_dry_run: AtomicBool,
+    /// Make the *real* publish (phase 2) fail after the gate passed —
+    /// the torn-epoch scenario the router must surface, never hide.
+    reject_publish: AtomicBool,
+    stop: AtomicBool,
+}
+
+/// One stub backend node; see the module docs.
+pub struct StubBackend {
+    inner: Arc<Inner>,
+}
+
+impl StubBackend {
+    /// Bind an ephemeral port and start serving (epoch starts at 1).
+    pub fn start() -> StubBackend {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let inner = Arc::new(Inner {
+            addr,
+            epoch: AtomicU64::new(1),
+            staged: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            predicts: AtomicU64::new(0),
+            hints: AtomicU64::new(0),
+            ingests: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+            reject_dry_run: AtomicBool::new(false),
+            reject_publish: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+        });
+        {
+            let inner = inner.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if inner.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if inner.down.load(Ordering::Relaxed) {
+                        drop(stream); // dead node: connect succeeds, then EOF
+                        continue;
+                    }
+                    let inner = inner.clone();
+                    std::thread::spawn(move || serve_conn(&inner, stream));
+                }
+            });
+        }
+        StubBackend { inner }
+    }
+
+    pub fn addr(&self) -> String {
+        self.inner.addr.clone()
+    }
+
+    /// Simulate the node dying: every connection (old or new) goes
+    /// dead-silent, but the address stays bound.
+    pub fn kill(&self) {
+        self.inner.down.store(true, Ordering::Relaxed);
+    }
+
+    /// Bring the killed node back on the same address.
+    pub fn revive(&self) {
+        self.inner.down.store(false, Ordering::Relaxed);
+    }
+
+    pub fn set_reject_dry_run(&self, reject: bool) {
+        self.inner.reject_dry_run.store(reject, Ordering::Relaxed);
+    }
+
+    pub fn set_reject_publish(&self, reject: bool) {
+        self.inner.reject_publish.store(reject, Ordering::Relaxed);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn predicts(&self) -> u64 {
+        self.inner.predicts.load(Ordering::Relaxed)
+    }
+
+    pub fn hints(&self) -> u64 {
+        self.inner.hints.load(Ordering::Relaxed)
+    }
+
+    pub fn ingests(&self) -> u64 {
+        self.inner.ingests.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting new connections (handlers drain naturally).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.inner.addr);
+    }
+}
+
+impl Drop for StubBackend {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_conn(inner: &Inner, stream: TcpStream) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        // mid-connection kill: pooled router connections go silent too
+        if inner.down.load(Ordering::Relaxed) {
+            return;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = handle(inner, trimmed);
+        if out.write_all(reply.as_bytes()).is_err() || out.write_all(b"\n").is_err() {
+            return;
+        }
+    }
+}
+
+fn err(kind: &str, msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("kind", Json::Str(kind.into()));
+    o.set("error", Json::Str(msg.into()));
+    o.to_string()
+}
+
+fn handle(inner: &Inner, line: &str) -> String {
+    inner.requests.fetch_add(1, Ordering::Relaxed);
+    let Ok(j) = Json::parse(line) else {
+        return err("bad_request", "stub could not parse the line");
+    };
+    let op = j.req_str("op").unwrap_or("");
+    let dry_run = j.get("dry_run").and_then(Json::as_bool) == Some(true);
+    match op {
+        "health" => r#"{"ok":true}"#.to_string(),
+        "stats" => {
+            // the minimum the health prober needs: ok + registry_epoch
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("registry_epoch", Json::Num(inner.epoch.load(Ordering::Relaxed) as f64));
+            o.set("requests", Json::Num(inner.requests.load(Ordering::Relaxed) as f64));
+            o.to_string()
+        }
+        "predict" | "predict_batch_size" | "predict_pixel_size" => {
+            inner.predicts.fetch_add(1, Ordering::Relaxed);
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("latency_ms", Json::Num(7.5));
+            o.set("member", Json::Str("Linear".into()));
+            // not a wire field — the harness marker tests shard-match on
+            o.set("served_by", Json::Str(inner.addr.clone()));
+            o.to_string()
+        }
+        "hint" => {
+            inner.hints.fetch_add(1, Ordering::Relaxed);
+            let applied = j.get("epoch").and_then(Json::as_f64).map(|e| e as u64)
+                == Some(inner.epoch.load(Ordering::Relaxed));
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("applied", Json::Bool(applied));
+            o.to_string()
+        }
+        "ingest" => {
+            inner.ingests.fetch_add(1, Ordering::Relaxed);
+            let staged = inner.staged.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("staged", Json::Num(staged as f64));
+            o.to_string()
+        }
+        "onboard" | "reload" => {
+            if dry_run {
+                if inner.reject_dry_run.load(Ordering::Relaxed) {
+                    return err("validation_failed", "stub validation gate rejected the candidate");
+                }
+                let mut o = Json::obj();
+                o.set("ok", Json::Bool(true));
+                o.set("epoch", Json::Num(inner.epoch.load(Ordering::Relaxed) as f64));
+                o.set("staged", Json::Num(inner.staged.load(Ordering::Relaxed) as f64));
+                return o.to_string();
+            }
+            if inner.reject_publish.load(Ordering::Relaxed) {
+                return err("internal_error", "stub publish failed after the gate passed");
+            }
+            let epoch = inner.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("epoch", Json::Num(epoch as f64));
+            o.set("staged", Json::Num(inner.staged.load(Ordering::Relaxed) as f64));
+            o.to_string()
+        }
+        other => err("unknown_op", &format!("stub does not serve `{other}`")),
+    }
+}
+
+/// One-line request/reply round trip against any line-protocol server.
+pub fn send(addr: &str, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap()
+}
+
+/// A valid wire `predict` line for the given shard pair.
+pub fn predict_line(anchor: &str, target: &str) -> String {
+    format!(
+        r#"{{"op":"predict","anchor":"{anchor}","target":"{target}","anchor_latency_ms":42.5,"profile":{{"Conv2D":286,"Relu":26}}}}"#
+    )
+}
+
+/// A valid wire `ingest` line for the given shard pair.
+pub fn ingest_line(anchor: &str, target: &str) -> String {
+    format!(
+        r#"{{"op":"ingest","anchor":"{anchor}","target":"{target}","model":"VGG16","batch":32,"pixels":64,"profile":{{"Conv2D":1}},"anchor_latency_ms":10,"target_latency_ms":5}}"#
+    )
+}
+
+/// Every ordered (anchor, target) pair of distinct core instances —
+/// enough shard-key diversity to hit all backends of a small ring.
+pub fn shard_pairs() -> Vec<(&'static str, &'static str)> {
+    let names = ["g3s", "g4dn", "p2", "p3", "g5", "ac1"];
+    let mut pairs = Vec::new();
+    for a in names {
+        for t in names {
+            if a != t {
+                pairs.push((a, t));
+            }
+        }
+    }
+    pairs
+}

@@ -193,6 +193,7 @@ fn fixture_inventory() -> CodeInventory {
     inv.ops.insert("health".into());
     inv.error_kinds.insert("bad_request".into());
     inv.stats_keys.insert("requests".into());
+    inv.cluster_stats_keys.insert("forwarded".into());
     inv.gauges.insert("depth".into());
     inv.stages.insert("parse".into());
     inv.metrics_keys.insert("gauges".into());
@@ -219,6 +220,15 @@ x
 ```
 ```json
 {\"requests\":1}
+```
+
+### cluster_stats
+
+```json
+{\"op\":\"cluster_stats\"}
+```
+```json
+{\"forwarded\":2}
 ```
 
 ### metrics
